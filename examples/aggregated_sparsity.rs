@@ -1,0 +1,294 @@
+//! Aggregated sparsity + weight reuse (paper §5.1, Fig 7a/b/c).
+//!
+//! Uses the pretrained base OPT/ReLU checkpoint (run examples/relufication
+//! first, or pass --train to build one here):
+//!
+//!   Fig 7a — aggregated sparsity per layer over the first N tokens of
+//!            validation prompts (+ the mean curve);
+//!   Fig 7b — observed aggregated sparsity vs the i.i.d. baseline s^t for
+//!            two layers (L/3 and 2L/3);
+//!   Fig 7c — teacher-forced perplexity under the γ-window weight-reuse
+//!            policy: no-reuse baseline vs aggregated reuse vs random mask
+//!            of matching density.
+//!
+//! The KV context is max_seq tokens; longer streams are processed in
+//! segments (fresh prefill per segment) with sparsity-tracker and reuse-
+//! policy state carried across segment boundaries — identical protocol for
+//! every strategy, so comparisons are apples-to-apples.
+//!
+//! Run: cargo run --release --example aggregated_sparsity -- [--tokens 150]
+
+use std::sync::Arc;
+
+use rsb::engine::sampler::log_softmax;
+use rsb::figures::{ensure_data, shared_checkpoint, Csv};
+use rsb::runtime::{artifacts_dir, cpu_client, Arg, Entry, Model, ParamStore, Tensor};
+use rsb::sparsity::{AggregatedTracker, ReusePolicy, ReuseStrategy};
+use rsb::train::{TrainConfig, Trainer};
+use rsb::util::cli::Args;
+use rsb::util::render_table;
+
+fn main() -> rsb::Result<()> {
+    let args = Args::from_env(&["train"]);
+    let model_id = args.str_or("model", "base_opt_relu_s0");
+    let n_tokens = args.usize_or("tokens", 150)?;
+    let client = cpu_client()?;
+    let artifacts = artifacts_dir(args.get("artifacts"));
+    let model = Arc::new(Model::open(client, &artifacts, &model_id)?);
+    let (ds, _bpe) = ensure_data(model.manifest.config.vocab, 2_000_000, 42)?;
+    let ds = Arc::new(ds);
+
+    let mut ckpt = shared_checkpoint(&model_id, &args.str_or("tag", "pretrained"));
+    if !ckpt.exists() {
+        // finetuned (relufied) variants are tagged "latest"
+        let alt = shared_checkpoint(&model_id, "latest");
+        if alt.exists() {
+            ckpt = alt;
+        }
+    }
+    let params = if ckpt.exists() {
+        model.load_params(&ckpt)?
+    } else if args.has("train") {
+        let trainer = Trainer::new(model.clone(), ds.clone())?;
+        let mut cfg = TrainConfig::quick(160, 1.5e-3);
+        cfg.checkpoint = Some(ckpt);
+        trainer.train(&cfg)?.params
+    } else {
+        return Err(rsb::Error::msg(
+            "no pretrained checkpoint; run examples/relufication first or pass --train",
+        ));
+    };
+    let mut params = params;
+    params.upload(model.client())?;
+
+    let cfgm = model.manifest.config.clone();
+    let (nl, dff) = (cfgm.n_layers, cfgm.d_ff);
+
+    // ---- Fig 7a/7b: aggregated sparsity while decoding val text ---------
+    let mut tracker = AggregatedTracker::new(nl, dff);
+    let mut stream = Stream::open(&model, &params, &ds, 0)?;
+    for _ in 0..n_tokens {
+        let step = stream.next_forced(&Tensor::ones_f32(vec![nl, dff]))?;
+        tracker.push_mask(&step.ffn_mask, 0)?;
+    }
+    let mut f7a = Csv::create("fig7a.csv", &["layer", "token", "aggregated_sparsity"])?;
+    for (l, curve) in tracker.layer_curves.iter().enumerate() {
+        for (t, v) in curve.iter().enumerate() {
+            f7a.row(&[l.to_string(), (t + 1).to_string(), format!("{v:.4}")])?;
+        }
+    }
+    for (t, v) in tracker.curve.iter().enumerate() {
+        f7a.row(&["mean".into(), (t + 1).to_string(), format!("{v:.4}")])?;
+    }
+    f7a.done();
+
+    let mut f7b = Csv::create(
+        "fig7b.csv",
+        &["layer", "token", "observed", "random_baseline"],
+    )?;
+    let baseline = tracker.random_baseline();
+    for l in [nl / 3, 2 * nl / 3] {
+        for (t, v) in tracker.layer_curves[l].iter().enumerate() {
+            f7b.row(&[
+                l.to_string(),
+                (t + 1).to_string(),
+                format!("{v:.5}"),
+                format!("{:.5}", baseline[t]),
+            ])?;
+        }
+    }
+    f7b.done();
+    println!(
+        "Fig 7a/b: after {n_tokens} tokens, mean aggregated sparsity = {:.1}% \
+         (i.i.d. baseline would be {:.3}%; per-token sparsity {:.1}%)",
+        tracker.aggregated_sparsity() * 100.0,
+        baseline.last().unwrap() * 100.0,
+        tracker.mean_token_sparsity() * 100.0,
+    );
+
+    // ---- Fig 7c: perplexity under γ-window weight reuse ------------------
+    let gammas = [4usize, 8, 16, 32];
+    let warmup = 32usize;
+    let eval_tokens = args.usize_or("reuse-tokens", 160)?;
+    let mut f7c = Csv::create("fig7c.csv", &["strategy", "gamma", "ppl"])?;
+    let mut rows = Vec::new();
+    let base_ppl = reuse_ppl(&model, &params, &ds, ReuseStrategy::None, 8, warmup, eval_tokens)?;
+    f7c.row(&["none".into(), "0".into(), format!("{base_ppl:.4}")])?;
+    for &gamma in &gammas {
+        let agg = reuse_ppl(
+            &model, &params, &ds, ReuseStrategy::Aggregated, gamma, warmup, eval_tokens,
+        )?;
+        let rnd = reuse_ppl(
+            &model, &params, &ds, ReuseStrategy::Random, gamma, warmup, eval_tokens,
+        )?;
+        f7c.row(&["aggregated".into(), gamma.to_string(), format!("{agg:.4}")])?;
+        f7c.row(&["random".into(), gamma.to_string(), format!("{rnd:.4}")])?;
+        rows.push(vec![
+            gamma.to_string(),
+            format!("{base_ppl:.3}"),
+            format!("{agg:.3}"),
+            format!("{rnd:.3}"),
+        ]);
+    }
+    f7c.done();
+    println!(
+        "\n== Fig 7c: perplexity with γ-window weight reuse ({model_id}) ==\n{}",
+        render_table(&["gamma", "no-reuse", "aggregated", "random"], &rows)
+    );
+    println!("Expected (paper): aggregated ≈ no-reuse; random blows up.");
+
+    // density diagnostic: how restrictive are the frozen masks actually?
+    // (ppl damage from a FIXED uniformly random mask at various densities —
+    // calibrates how much headroom the model's sparsity level leaves)
+    let mut rows = Vec::new();
+    let mut rng = rsb::util::rng::Rng::new(13);
+    for density in [1.0, 0.6, 0.3, 0.15] {
+        let mut data = vec![0.0f32; nl * dff];
+        for v in data.iter_mut() {
+            if rng.chance(density) {
+                *v = 1.0;
+            }
+        }
+        let mask = Tensor::f32(vec![nl, dff], data)?;
+        let mut stream = Stream::open(&model, &params, &ds, 900)?;
+        let mut nll = 0.0;
+        let n = 96;
+        for _ in 0..n {
+            nll += stream.next_forced(&mask)?.nll_of_target;
+        }
+        rows.push(vec![
+            format!("{density:.2}"),
+            format!("{:.3}", (nll / n as f64).exp()),
+        ]);
+    }
+    println!(
+        "\n== fixed-random-mask ppl (density calibration) ==\n{}",
+        render_table(&["density kept", "ppl"], &rows)
+    );
+    Ok(())
+}
+
+fn param_args(params: &ParamStore) -> rsb::Result<Vec<Arg<'_>>> {
+    Ok(params
+        .buffers()
+        .ok_or_else(|| rsb::Error::msg("params not uploaded"))?
+        .iter()
+        .map(Arg::Device)
+        .collect())
+}
+
+struct StepOut {
+    nll_of_target: f64,
+    ffn_mask: Tensor,
+}
+
+/// Teacher-forced decode over a long validation stream, re-prefilling a
+/// fresh segment whenever the KV context fills up.
+struct Stream<'m> {
+    model: &'m Arc<Model>,
+    params: &'m ParamStore,
+    ds: &'m Arc<rsb::data::Dataset>,
+    decode1: Arc<Entry>,
+    prefill: Arc<Entry>,
+    kv: Tensor,
+    doc_offset: usize,
+    /// absolute index into the val document of the NEXT token to feed
+    cursor: usize,
+    pos: usize,
+    tp: usize,
+    max_pos: usize,
+}
+
+impl<'m> Stream<'m> {
+    fn open(
+        model: &'m Arc<Model>,
+        params: &'m ParamStore,
+        ds: &'m Arc<rsb::data::Dataset>,
+        doc_offset: usize,
+    ) -> rsb::Result<Stream<'m>> {
+        let mut s = Stream {
+            decode1: model.entry("decode1")?,
+            prefill: model.entry("prefill")?,
+            kv: Tensor::zeros_f32(model.manifest.kv_shape(1)),
+            doc_offset,
+            cursor: 0,
+            pos: 0,
+            tp: model.manifest.buckets.prefill_t,
+            max_pos: model.manifest.config.max_seq - 1,
+            model,
+            params,
+            ds,
+        };
+        s.refill()?;
+        Ok(s)
+    }
+
+    fn refill(&mut self) -> rsb::Result<()> {
+        // prefill the tp tokens preceding the cursor (or the first tp)
+        let start = if self.cursor < self.tp { 0 } else { self.cursor - self.tp };
+        let doc = self.ds.val_document(self.doc_offset + start, self.tp);
+        let toks: Vec<i32> = doc.iter().map(|&t| t as i32).collect();
+        let tok_t = Tensor::i32(vec![1, self.tp], toks)?;
+        let mut args = param_args(self.params)?;
+        args.push(Arg::Host(&tok_t));
+        let outs = self.prefill.execute(&args)?;
+        self.kv = outs[1].clone();
+        self.pos = self.tp;
+        self.cursor = start + self.tp;
+        Ok(())
+    }
+
+    /// Feed the next document token through decode1 with `mask`; returns the
+    /// NLL of the following document token and the FFN activation mask.
+    fn next_forced(&mut self, mask: &Tensor) -> rsb::Result<StepOut> {
+        if self.pos >= self.max_pos {
+            self.refill()?;
+        }
+        let win = self.ds.val_document(self.doc_offset + self.cursor, 2);
+        let (tok, target) = (win[0], win[1]);
+        let pos_t = Tensor::i32(vec![1], vec![self.pos as i32])?;
+        let tk = Tensor::i32(vec![1, 1], vec![tok as i32])?;
+        let mut a = param_args(self.params)?;
+        a.push(Arg::Host(&self.kv));
+        a.push(Arg::Host(&pos_t));
+        a.push(Arg::Host(&tk));
+        a.push(Arg::Host(mask));
+        let outs = self.decode1.execute(&a)?;
+        self.kv = outs[1].clone();
+        self.pos += 1;
+        self.cursor += 1;
+        let lp = log_softmax(outs[0].as_f32()?);
+        Ok(StepOut {
+            nll_of_target: -lp[target as usize],
+            ffn_mask: outs[2].clone(),
+        })
+    }
+}
+
+/// Teacher-forced perplexity with the reuse policy's mask applied to every
+/// decode step (Fig 7c protocol).
+fn reuse_ppl(
+    model: &Arc<Model>,
+    params: &ParamStore,
+    ds: &Arc<rsb::data::Dataset>,
+    strategy: ReuseStrategy,
+    gamma: usize,
+    warmup: usize,
+    eval_tokens: usize,
+) -> rsb::Result<f64> {
+    let cfgm = &model.manifest.config;
+    let mut policy = ReusePolicy::new(strategy, gamma, warmup, cfgm.n_layers, cfgm.d_ff, 7);
+    let mut stream = Stream::open(model, params, ds, 500)?;
+    let mut nll_sum = 0.0;
+    let mut count = 0usize;
+    for i in 0..(warmup + eval_tokens) {
+        let mask = policy.current_mask();
+        let step = stream.next_forced(&mask)?;
+        policy.observe(&step.ffn_mask, 0)?;
+        if i >= warmup {
+            nll_sum += step.nll_of_target;
+            count += 1;
+        }
+    }
+    Ok((nll_sum / count.max(1) as f64).exp())
+}

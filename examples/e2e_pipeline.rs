@@ -1,0 +1,146 @@
+//! End-to-end driver (DESIGN.md: the required full-system validation).
+//!
+//! Default run (recorded in EXPERIMENTS.md): train the ~93M-parameter
+//! `e2e100m_opt_relu_s0` transformer (d=768, L=12, H=12, ffn=3072,
+//! vocab=8192) for a few hundred steps on synthlang through the AOT
+//! `train_k` HLO, logging the loss curve; then serve batched generation
+//! requests through the engine and report latency/throughput + measured
+//! activation sparsity. All three layers compose: Pallas FFN kernel (L1)
+//! inside the JAX-lowered HLO (L2) executed by the rust coordinator (L3).
+//!
+//! The model size and step count are configurable so CI can smoke-test it:
+//!   cargo run --release --example e2e_pipeline -- --model tiny_opt_relu_s0 --steps 16
+//! Recorded run:
+//!   cargo run --release --example e2e_pipeline -- --steps 220
+//!
+//! Emits runs/figures/e2e_loss.csv + a final report block.
+
+use std::sync::Arc;
+
+use rsb::engine::{Engine, EngineConfig, SamplingParams};
+use rsb::figures::{ensure_data, shared_checkpoint, Csv};
+use rsb::runtime::{artifacts_dir, cpu_client, Model};
+use rsb::train::{TrainConfig, Trainer};
+use rsb::util::cli::Args;
+
+fn main() -> rsb::Result<()> {
+    let args = Args::from_env(&["resume"]);
+    let model_id = args.str_or("model", "e2e100m_opt_relu_s0");
+    let steps = args.usize_or("steps", 220)?;
+    let client = cpu_client()?;
+    let artifacts = artifacts_dir(args.get("artifacts"));
+    let model = Arc::new(Model::open(client, &artifacts, &model_id)?);
+    let c = &model.manifest.config;
+    println!(
+        "== e2e pipeline: {model_id} — {:.1}M params (d={}, L={}, H={}, ffn={}, vocab={}) ==",
+        model.manifest.param_count as f64 / 1e6,
+        c.d_model,
+        c.n_layers,
+        c.n_heads,
+        c.d_ff,
+        c.vocab
+    );
+
+    // 1. data: synthetic corpus + BPE tokenizer at the model's vocab
+    let corpus_chars = args.usize_or("corpus-chars", 4_000_000)?;
+    let (ds, bpe) = ensure_data(c.vocab, corpus_chars, 42)?;
+    println!("corpus: {} train tokens, {} val tokens", ds.train.len(), ds.val.len());
+    let ds = Arc::new(ds);
+
+    // 2. train, logging the loss curve
+    let trainer = Trainer::new(model.clone(), ds.clone())?;
+    let ckpt = shared_checkpoint(&model_id, "latest");
+    let mut cfg = TrainConfig::quick(steps, args.f64_or("lr", 6e-4)?);
+    cfg.log_every = (steps / 24).max(1);
+    cfg.eval_every = (steps / 4).max(1);
+    cfg.checkpoint = Some(ckpt.clone());
+    let out = if args.has("resume") && ckpt.exists() {
+        println!("[resume] loading {}", ckpt.display());
+        let params = model.load_params(&ckpt)?;
+        trainer.train_from(params, &cfg)?
+    } else {
+        trainer.train(&cfg)?
+    };
+    let mut csv = Csv::create("e2e_loss.csv", &["step", "loss", "gnorm", "val_loss"])?;
+    for p in &out.curve {
+        csv.row(&[
+            p.step.to_string(),
+            format!("{:.4}", p.loss),
+            format!("{:.4}", p.gnorm),
+            p.val_loss.map(|v| format!("{v:.4}")).unwrap_or_default(),
+        ])?;
+    }
+    csv.done();
+    let first = out.curve.first().map(|p| p.loss).unwrap_or(f64::NAN);
+    println!(
+        "training: loss {first:.3} -> {:.3} over {steps} steps, {:.1} min wall, \
+         {:.1} tok/s training throughput",
+        out.final_train_loss,
+        out.wall_secs / 60.0,
+        out.tokens_seen as f64 / out.wall_secs
+    );
+
+    // 3. serve batched requests through the engine
+    let mut engine = Engine::new(model.clone(), out.params, EngineConfig::default())?;
+    let n_requests = args.usize_or("requests", 8)?;
+    let max_new = args.usize_or("max-tokens", 24)?;
+    let prompts = [
+        "ada lives in",
+        "the small fox",
+        "bo eats",
+        "echo : alpha beta gamma ; alpha beta",
+        "the foxes",
+        "ivy has a",
+        "kai lives in",
+        "the old owl sees the",
+    ];
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        let p = prompts[i % prompts.len()];
+        engine.submit_with(
+            bpe.encode(p),
+            max_new,
+            SamplingParams {
+                temperature: 0.7,
+                top_k: 32,
+                seed: i as u64,
+            },
+        );
+    }
+    let done = engine.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n== serving report ==");
+    for d in done.iter().take(4) {
+        println!(
+            "  [{}] \"{}\" ({} tokens, ttft≈{:.0}ms)",
+            d.id,
+            bpe.decode(&d.tokens),
+            d.tokens.len(),
+            d.prefill_ms
+        );
+    }
+    let total_tokens: usize = done.iter().map(|d| d.tokens.len()).sum();
+    println!("{}", engine.metrics.report());
+    println!(
+        "end-to-end: {} requests, {} tokens in {:.1}s -> {:.1} tok/s aggregate",
+        done.len(),
+        total_tokens,
+        wall,
+        total_tokens as f64 / wall
+    );
+    let sp = engine.stats.overall();
+    println!(
+        "measured decode sparsity: qkv {:.1}% | up {:.1}% | ffn {:.1}%",
+        sp.qkv * 100.0,
+        sp.up * 100.0,
+        sp.ffn * 100.0
+    );
+    let gf = rsb::model::flops_with_sparsity(c, 48, &engine.stats.layer_means()).total() / 1e9;
+    let gf_dense = rsb::model::flops_per_token(c, 48).total() / 1e9;
+    println!(
+        "FLOPS/token: dense {gf_dense:.2} GF -> sparsity-aware {gf:.2} GF ({:.0}%)",
+        gf / gf_dense * 100.0
+    );
+    println!("e2e pipeline OK");
+    Ok(())
+}

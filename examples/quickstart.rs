@@ -1,0 +1,85 @@
+//! Quickstart: the whole stack in one file.
+//!
+//! 1. load AOT artifacts for a small ReLU model (L1 Pallas kernel inside),
+//! 2. train it briefly on synthlang through the `train_k` HLO,
+//! 3. measure activation sparsity + zero-shot task accuracy,
+//! 4. serve a few generation requests through the batching engine.
+//!
+//! Run: `cargo run --release --example quickstart -- [--model small_opt_relu_s0]
+//!       [--steps 120]`
+
+use std::sync::Arc;
+
+use rsb::data::World;
+use rsb::engine::{Engine, EngineConfig};
+use rsb::evalx::EvalHarness;
+use rsb::figures::ensure_data;
+use rsb::runtime::{artifacts_dir, cpu_client, Model};
+use rsb::train::{TrainConfig, Trainer};
+use rsb::util::cli::Args;
+
+fn main() -> rsb::Result<()> {
+    let args = Args::from_env(&[]);
+    let model_id = args.str_or("model", "small_opt_relu_s0");
+    let steps = args.usize_or("steps", 120)?;
+
+    println!("== quickstart: {model_id} ==");
+    let model = Arc::new(Model::open(
+        cpu_client()?,
+        &artifacts_dir(args.get("artifacts")),
+        &model_id,
+    )?);
+    let cfgm = &model.manifest.config;
+    println!(
+        "arch={} act={} stage={} | {}M params | L1 kernel: fused masked FFN (pallas)",
+        cfgm.arch,
+        cfgm.act,
+        cfgm.stage,
+        model.manifest.param_count / 1_000_000
+    );
+
+    // data: synthetic corpus + BPE tokenizer sized to the model vocab
+    let (ds, bpe) = ensure_data(cfgm.vocab, 2_000_000, 42)?;
+    println!(
+        "corpus: {} train tokens, vocab {}",
+        ds.train.len(),
+        bpe.vocab_size()
+    );
+
+    // train briefly
+    let trainer = Trainer::new(model.clone(), Arc::new(ds))?;
+    let mut tcfg = TrainConfig::quick(steps, 1e-3);
+    tcfg.eval_every = steps / 2;
+    let out = trainer.train(&tcfg)?;
+    println!(
+        "trained {} steps in {:.1}s -> loss {:.3}",
+        steps, out.wall_secs, out.final_train_loss
+    );
+
+    // zero-shot eval + sparsity (the paper's Table 1 protocol)
+    let harness = EvalHarness::new(model.clone(), Arc::new(bpe.clone()));
+    let world = World::new(42);
+    for kind in rsb::data::ALL_TASKS {
+        let r = harness.run_task(&out.params, &world, kind, 24, 0, 7)?;
+        println!(
+            "  task {:<12} acc {:>5.1}%   ffn-sparsity {:>5.1}%",
+            r.kind,
+            r.accuracy() * 100.0,
+            r.ffn_sparsity * 100.0
+        );
+    }
+
+    // serve a few requests through the batching engine
+    let mut engine = Engine::new(model, out.params, EngineConfig::default())?;
+    let prompts = ["ada lives in", "the foxes", "echo : alpha beta ; alpha"];
+    for p in prompts {
+        engine.submit(bpe.encode(p), 8);
+    }
+    let done = engine.run_to_completion()?;
+    for (p, c) in prompts.iter().zip(&done) {
+        println!("  \"{p}\" -> \"{}\"", bpe.decode(&c.tokens));
+    }
+    println!("{}", engine.metrics.report());
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,442 @@
+//! Relufication pipeline (paper §3-§4): the main experiment driver.
+//!
+//! Stage A — pretrain the three base architectures with their native
+//!           activations on synthlang (OPT/ReLU, Llama/SiLU, Falcon/GELU).
+//! Stage B — relufication finetunes: stage-1 (act -> ReLU) and stage-2
+//!           (+ReLU after norms) for Llama and Falcon, stage-2 for OPT,
+//!           plus the Table-2 activation swaps (llama+GELU, falcon+SiLU)
+//!           and the shifted-ReLU variant (§5.3, consumed by Fig 8).
+//! Stage C — evaluate everything: per-layer sparsity, FLOPS, zero-shot and
+//!           few-shot accuracy.
+//!
+//! Emits (runs/figures/): table1.csv, table2.csv, fig1a.csv, fig1b.csv,
+//! fig1c.csv, fig4.csv, fig5_hist.csv, fig6_recovery.csv, fig12_scaling.csv
+//! and prints the paper-style tables.
+//!
+//! Checkpoints land in runs/checkpoints/<model_id>.{pretrained|latest}.ckpt
+//! and are reused by the other examples (aggregated_sparsity, spec_decode,
+//! shifted_relu, serve).
+//!
+//! Run: cargo run --release --example relufication -- \
+//!        [--pretrain-steps 240] [--finetune-steps 100] [--items 48] [--fast]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use rsb::data::{Dataset, World};
+use rsb::evalx::EvalHarness;
+use rsb::figures::{ensure_data, shared_checkpoint, Csv};
+use rsb::model::{flops_with_sparsity, LayerSparsity};
+use rsb::runtime::{artifacts_dir, cpu_client, Arg, Model, ParamStore, Tensor};
+use rsb::sparsity::{PreactHistograms, SparsityStats};
+use rsb::train::{TrainConfig, Trainer};
+use rsb::util::cli::Args;
+use rsb::util::render_table;
+
+struct Ctx {
+    client: Arc<xla::PjRtClient>,
+    artifacts: PathBuf,
+    ds: Arc<Dataset>,
+    bpe: Arc<rsb::tokenizer::Bpe>,
+    world: World,
+    items: usize,
+    pretrain_steps: usize,
+    finetune_steps: usize,
+}
+
+fn main() -> rsb::Result<()> {
+    let args = Args::from_env(&["fast", "force"]);
+    let fast = args.has("fast");
+    let (ds, bpe) = ensure_data(2048, 2_000_000, 42)?;
+    let ctx = Ctx {
+        client: cpu_client()?,
+        artifacts: artifacts_dir(args.get("artifacts")),
+        ds: Arc::new(ds),
+        bpe: Arc::new(bpe),
+        world: World::new(42),
+        items: args.usize_or("items", if fast { 12 } else { 48 })?,
+        pretrain_steps: args.usize_or("pretrain-steps", if fast { 24 } else { 240 })?,
+        finetune_steps: args.usize_or("finetune-steps", if fast { 16 } else { 100 })?,
+    };
+    let force = args.has("force");
+
+    // ---------------- Stage A: pretrain native-activation bases ----------
+    let pretrained = [
+        "base_opt_relu_s0",
+        "base_llama_silu_s0",
+        "base_falcon_gelu_s0",
+    ];
+    for id in pretrained {
+        ensure_trained(&ctx, id, "pretrained", None, ctx.pretrain_steps, 1.5e-3, force)?;
+    }
+    // smaller OPT sizes for the Fig 12 scaling curve
+    ensure_trained(&ctx, "small_opt_relu_s0", "pretrained", None, ctx.pretrain_steps / 2, 1.5e-3, force)?;
+    ensure_trained(&ctx, "draft_opt_relu_s0", "pretrained", None, ctx.pretrain_steps / 2, 1.5e-3, force)?;
+
+    // Fig 5 "before": preactivation histograms of the pretrained models
+    let mut fig5 = Csv::create(
+        "fig5_hist.csv",
+        &["model", "phase", "layer", "bin_center", "density"],
+    )?;
+    for id in ["base_llama_silu_s0", "base_falcon_gelu_s0"] {
+        probe_hist(&ctx, id, "pretrained", "before", &mut fig5)?;
+    }
+
+    // ---------------- Stage B: relufication finetunes --------------------
+    // (variant_id, source_id) — parameter shapes are stage/activation
+    // invariant within a family, so checkpoints transfer directly (Fig 3).
+    let finetunes = [
+        ("base_opt_relu_s2", "base_opt_relu_s0"),
+        ("base_llama_relu_s1", "base_llama_silu_s0"),
+        ("base_llama_relu_s2", "base_llama_silu_s0"),
+        ("base_llama_srelu_s1", "base_llama_silu_s0"),
+        ("base_llama_gelu_s0", "base_llama_silu_s0"),
+        ("base_falcon_relu_s1", "base_falcon_gelu_s0"),
+        ("base_falcon_relu_s2", "base_falcon_gelu_s0"),
+        ("base_falcon_silu_s0", "base_falcon_gelu_s0"),
+    ];
+    let mut fig6 = Csv::create(
+        "fig6_recovery.csv",
+        &["model", "step", "val_loss", "ffn_sparsity", "avg_acc"],
+    )?;
+    for (variant, source) in finetunes {
+        let src_ckpt = shared_checkpoint(source, "pretrained");
+        finetune_with_recovery(&ctx, variant, &src_ckpt, &mut fig6, force)?;
+    }
+    fig6.done();
+
+    // Fig 5 "after": histograms of the relufied models
+    for id in ["base_llama_relu_s1", "base_falcon_relu_s1"] {
+        probe_hist(&ctx, id, "latest", "after", &mut fig5)?;
+    }
+    fig5.done();
+
+    // ---------------- Stage C: evaluation --------------------------------
+    // Table 1 rows: original + relufied variants.
+    let table1_models = [
+        ("base_opt_relu_s0", "pretrained", "OPT (relu)"),
+        ("base_opt_relu_s2", "latest", "OPT (s2)"),
+        ("base_llama_silu_s0", "pretrained", "Llama (silu)"),
+        ("base_llama_relu_s1", "latest", "Llama (s1)"),
+        ("base_llama_relu_s2", "latest", "Llama (s2)"),
+        ("base_falcon_gelu_s0", "pretrained", "Falcon (gelu)"),
+        ("base_falcon_relu_s1", "latest", "Falcon (s1)"),
+        ("base_falcon_relu_s2", "latest", "Falcon (s2)"),
+    ];
+    let mut t1 = Csv::create(
+        "table1.csv",
+        &[
+            "model", "label", "sp_qkv", "sp_up", "sp_ffn", "gflops_tok",
+            "acc_cloze_city", "acc_cloze_food", "acc_agreement", "acc_copy", "acc_avg",
+        ],
+    )?;
+    let mut fig1a = Csv::create("fig1a.csv", &["model", "layer", "ffn_sparsity"])?;
+    let mut fig1b = Csv::create("fig1b.csv", &["model", "layer", "down_rows_skipped"])?;
+    let mut fig1c = Csv::create("fig1c.csv", &["model", "gflops_tok", "avg_acc"])?;
+    let mut fig4 = Csv::create("fig4.csv", &["model", "stage", "layer", "ffn_sparsity"])?;
+    let mut rows = Vec::new();
+    for (id, tag, label) in table1_models {
+        let ev = evaluate(&ctx, id, tag)?;
+        let g = ev.gflops;
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.0}/{:.0}/{:.0}%", ev.sp.qkv * 100.0, ev.sp.up * 100.0, ev.sp.ffn * 100.0),
+            format!("{g:.3}"),
+            format!("{:.1}", ev.accs[0] * 100.0),
+            format!("{:.1}", ev.accs[1] * 100.0),
+            format!("{:.1}", ev.accs[2] * 100.0),
+            format!("{:.1}", ev.accs[3] * 100.0),
+            format!("{:.1}", ev.avg_acc() * 100.0),
+        ]);
+        t1.row(&[
+            id.to_string(),
+            label.to_string(),
+            format!("{:.4}", ev.sp.qkv),
+            format!("{:.4}", ev.sp.up),
+            format!("{:.4}", ev.sp.ffn),
+            format!("{g:.4}"),
+            format!("{:.4}", ev.accs[0]),
+            format!("{:.4}", ev.accs[1]),
+            format!("{:.4}", ev.accs[2]),
+            format!("{:.4}", ev.accs[3]),
+            format!("{:.4}", ev.avg_acc()),
+        ])?;
+        for (l, s) in ev.per_layer.iter().enumerate() {
+            fig1a.row(&[id.into(), l.to_string(), format!("{:.4}", s.ffn)])?;
+            fig1b.row(&[id.into(), l.to_string(), format!("{:.4}", s.ffn)])?;
+            fig4.row(&[
+                id.into(),
+                id.split("_s").last().unwrap_or("0").into(),
+                l.to_string(),
+                format!("{:.4}", s.ffn),
+            ])?;
+        }
+        fig1c.row(&[id.into(), format!("{g:.4}"), format!("{:.4}", ev.avg_acc())])?;
+    }
+    println!(
+        "\n== Table 1 (sparsity qkv/up/ffn | GFLOPS/token | zero-shot acc) ==\n{}",
+        render_table(
+            &["model", "sparsity", "GF/tok", "city", "food", "agr", "copy", "avg"],
+            &rows
+        )
+    );
+    t1.done();
+    fig1a.done();
+    fig1b.done();
+    fig1c.done();
+    fig4.done();
+
+    // Table 2: few-shot (k=3) accuracy across activation swaps.
+    let table2_models = [
+        ("base_llama_silu_s0", "pretrained", "Llama SiLU"),
+        ("base_llama_gelu_s0", "latest", "Llama GELU"),
+        ("base_llama_relu_s1", "latest", "Llama ReLU"),
+        ("base_falcon_gelu_s0", "pretrained", "Falcon GELU"),
+        ("base_falcon_silu_s0", "latest", "Falcon SiLU"),
+        ("base_falcon_relu_s1", "latest", "Falcon ReLU"),
+    ];
+    let mut t2 = Csv::create(
+        "table2.csv",
+        &["model", "label", "flops_pct", "fewshot_avg_acc"],
+    )?;
+    let mut rows2 = Vec::new();
+    for (id, tag, label) in table2_models {
+        let model = Arc::new(Model::open(ctx.client.clone(), &ctx.artifacts, id)?);
+        let params = model.load_params(&shared_checkpoint(id, tag))?;
+        let harness = EvalHarness::new(model.clone(), ctx.bpe.clone());
+        let mut accs = Vec::new();
+        let mut stats_all = SparsityStats::new(model.manifest.config.n_layers);
+        for kind in rsb::data::ALL_TASKS {
+            let r = harness.run_task(&params, &ctx.world, kind, ctx.items.min(24), 3, 11)?;
+            accs.push(r.accuracy());
+            // reuse the sparsity the harness measured
+            stats_all = SparsityStats::new(model.manifest.config.n_layers);
+            let _ = (r.ffn_sparsity, &mut stats_all);
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        let ev = evaluate(&ctx, id, tag)?;
+        let dense = flops_with_sparsity(
+            &model.manifest.config,
+            32,
+            &vec![LayerSparsity::default(); model.manifest.config.n_layers],
+        )
+        .total();
+        let pct = ev.gflops * 1e9 / dense * 100.0;
+        rows2.push(vec![
+            label.to_string(),
+            format!("{pct:.0}%"),
+            format!("{:.1}%", avg * 100.0),
+        ]);
+        t2.row(&[
+            id.to_string(),
+            label.to_string(),
+            format!("{pct:.2}"),
+            format!("{:.4}", avg),
+        ])?;
+    }
+    println!(
+        "\n== Table 2 (few-shot, k=3) ==\n{}",
+        render_table(&["model", "FLOPS%", "avg acc"], &rows2)
+    );
+    t2.done();
+
+    // Fig 12: relufied-large vs dense-small scaling.
+    let mut f12 = Csv::create("fig12_scaling.csv", &["model", "kind", "gflops_tok", "avg_acc"])?;
+    for (id, tag, kind) in [
+        ("small_opt_relu_s0", "pretrained", "dense"),
+        ("draft_opt_relu_s0", "pretrained", "dense"),
+        ("base_opt_relu_s0", "pretrained", "dense"),
+        ("base_opt_relu_s2", "latest", "relufied"),
+    ] {
+        let ev = evaluate(&ctx, id, tag)?;
+        f12.row(&[
+            id.into(),
+            kind.into(),
+            format!("{:.4}", ev.gflops),
+            format!("{:.4}", ev.avg_acc()),
+        ])?;
+    }
+    f12.done();
+
+    println!("\nrelufication pipeline complete.");
+    Ok(())
+}
+
+/// Train a model id from scratch (or load its checkpoint if present).
+fn ensure_trained(
+    ctx: &Ctx,
+    id: &str,
+    tag: &str,
+    from: Option<&PathBuf>,
+    steps: usize,
+    lr: f64,
+    force: bool,
+) -> rsb::Result<()> {
+    let ckpt = shared_checkpoint(id, tag);
+    if ckpt.exists() && !force {
+        println!("[skip] {id}.{tag} (cached)");
+        return Ok(());
+    }
+    let model = Arc::new(Model::open(ctx.client.clone(), &ctx.artifacts, id)?);
+    let trainer = Trainer::new(model.clone(), ctx.ds.clone())?;
+    let mut cfg = TrainConfig::quick(steps, lr);
+    cfg.eval_every = (steps / 3).max(1);
+    cfg.checkpoint = Some(ckpt);
+    match from {
+        None => trainer.train(&cfg)?,
+        Some(src) => {
+            let params = model.load_params(src)?;
+            trainer.train_from(params, &cfg)?
+        }
+    };
+    Ok(())
+}
+
+/// Finetune a relufication variant while recording the recovery curve
+/// (Fig 6): eval loss + task accuracy at a few checkpoints.
+fn finetune_with_recovery(
+    ctx: &Ctx,
+    variant: &str,
+    src_ckpt: &PathBuf,
+    fig6: &mut Csv,
+    force: bool,
+) -> rsb::Result<()> {
+    let ckpt = shared_checkpoint(variant, "latest");
+    if ckpt.exists() && !force {
+        println!("[skip] finetune {variant} (cached)");
+        return Ok(());
+    }
+    let model = Arc::new(Model::open(ctx.client.clone(), &ctx.artifacts, variant)?);
+    let trainer = Trainer::new(model.clone(), ctx.ds.clone())?;
+    let harness = EvalHarness::new(model.clone(), ctx.bpe.clone());
+    let chunks = 4usize;
+    let steps_per = (ctx.finetune_steps / chunks).max(1);
+    let mut params = model.load_params(src_ckpt)?;
+    for chunk in 0..chunks {
+        let mut cfg = TrainConfig::quick(steps_per, 5e-4);
+        cfg.lr.warmup_steps = if chunk == 0 { 3 } else { 0 };
+        cfg.log_every = steps_per;
+        cfg.quiet = true;
+        let out = trainer.train_from(params, &cfg)?;
+        params = out.params;
+        let (val_loss, ffn_sp) = trainer.eval_loss(&params.tensors, 2, 5)?;
+        let mut accs = Vec::new();
+        for kind in rsb::data::ALL_TASKS {
+            let r = harness.run_task(&params, &ctx.world, kind, 12, 0, 9)?;
+            accs.push(r.accuracy());
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        println!(
+            "[finetune {variant}] step {:>4} val {val_loss:.4} ffn-sparsity {:.1}% acc {:.1}%",
+            (chunk + 1) * steps_per,
+            ffn_sp * 100.0,
+            avg * 100.0
+        );
+        fig6.row(&[
+            variant.to_string(),
+            ((chunk + 1) * steps_per).to_string(),
+            format!("{val_loss:.4}"),
+            format!("{ffn_sp:.4}"),
+            format!("{avg:.4}"),
+        ])?;
+    }
+    model.save_params(&ckpt, &params)?;
+    Ok(())
+}
+
+/// Probe preactivation histograms (Fig 5 / shifted-ReLU fitting).
+fn probe_hist(
+    ctx: &Ctx,
+    id: &str,
+    tag: &str,
+    phase: &str,
+    csv: &mut Csv,
+) -> rsb::Result<()> {
+    let model = Arc::new(Model::open(ctx.client.clone(), &ctx.artifacts, id)?);
+    let ckpt = shared_checkpoint(id, tag);
+    if !ckpt.exists() {
+        return Ok(());
+    }
+    let params = model.load_params(&ckpt)?;
+    let probe = model.entry("probe")?;
+    let t = model.manifest.buckets.probe_t;
+    let mut hists = PreactHistograms::new(model.manifest.config.n_layers, -4.0, 4.0, 80);
+    let mut rng = rsb::util::rng::Rng::new(3);
+    for _ in 0..4 {
+        let doc = ctx.ds.val_batch(&mut rng, 1, t - 1)?; // [1, t]
+        let toks = Tensor::i32(vec![1, t], doc.as_i32()?.to_vec())?;
+        let mut args: Vec<Arg> = params.tensors.iter().map(Arg::Host).collect();
+        args.push(Arg::Host(&toks));
+        let outs = probe.execute(&args)?;
+        hists.push(&outs[0])?;
+    }
+    for (l, h) in hists.per_layer.iter().enumerate() {
+        for (center, density) in h.densities() {
+            if density > 0.0 {
+                csv.row(&[
+                    id.to_string(),
+                    phase.to_string(),
+                    l.to_string(),
+                    format!("{center:.3}"),
+                    format!("{density:.5}"),
+                ])?;
+            }
+        }
+    }
+    // report the §5.3 shift fit for llama
+    if id.contains("llama") {
+        println!(
+            "[probe {id}] shifted-ReLU b for 90% sparsity ≈ {:.2} ({phase})",
+            hists.fit_shift(0.90)
+        );
+    }
+    Ok(())
+}
+
+struct EvalOut {
+    sp: LayerSparsity,
+    per_layer: Vec<LayerSparsity>,
+    gflops: f64,
+    accs: Vec<f64>,
+}
+
+impl EvalOut {
+    fn avg_acc(&self) -> f64 {
+        self.accs.iter().sum::<f64>() / self.accs.len().max(1) as f64
+    }
+}
+
+/// Sparsity + FLOPS + zero-shot accuracy for one checkpointed model.
+fn evaluate(ctx: &Ctx, id: &str, tag: &str) -> rsb::Result<EvalOut> {
+    let model = Arc::new(Model::open(ctx.client.clone(), &ctx.artifacts, id)?);
+    let params = model.load_params(&shared_checkpoint(id, tag))?;
+    let harness = EvalHarness::new(model.clone(), ctx.bpe.clone());
+    let mut accs = Vec::new();
+    let mut last_stats = SparsityStats::new(model.manifest.config.n_layers);
+    // run tasks; collect sparsity via the score entry (val batches)
+    for kind in rsb::data::ALL_TASKS {
+        let r = harness.run_task(&params, &ctx.world, kind, ctx.items, 0, 7)?;
+        accs.push(r.accuracy());
+    }
+    // sparsity measured on validation text (like WikiText in the paper)
+    let score = model.entry("score")?;
+    let b = &model.manifest.buckets;
+    let mut rng = rsb::util::rng::Rng::new(17);
+    for _ in 0..3 {
+        let tokens = ctx.ds.val_batch(&mut rng, b.score_b, b.train_t)?;
+        let mut args: Vec<Arg> = params.tensors.iter().map(Arg::Host).collect();
+        args.push(Arg::Host(&tokens));
+        let outs = score.execute(&args)?;
+        last_stats.push(&outs[1])?;
+    }
+    let per_layer = last_stats.layer_means();
+    let sp = last_stats.overall();
+    let gflops =
+        flops_with_sparsity(&model.manifest.config, 32, &per_layer).total() / 1e9;
+    Ok(EvalOut {
+        sp,
+        per_layer,
+        gflops,
+        accs,
+    })
+}

@@ -1,0 +1,94 @@
+//! Serving demo: spin up the TCP JSON-lines server in-process, drive it
+//! with concurrent clients, print latency stats. (The `rsb serve` CLI runs
+//! the same server standalone.)
+//!
+//! PJRT handles are not Send, so the engine is constructed *inside* the
+//! server thread; clients talk to it purely over TCP.
+//!
+//! Run: cargo run --release --example serve_demo -- [--model base_opt_relu_s0]
+//!        [--requests 12]
+
+use std::sync::{mpsc, Arc};
+
+use rsb::engine::{Engine, EngineConfig};
+use rsb::figures::{ensure_data, shared_checkpoint};
+use rsb::runtime::{artifacts_dir, cpu_client, Manifest, Model};
+use rsb::server::{serve, Client};
+use rsb::util::cli::Args;
+
+fn main() -> rsb::Result<()> {
+    let args = Args::from_env(&[]);
+    let model_id = args.str_or("model", "base_opt_relu_s0");
+    let n_requests = args.usize_or("requests", 12)?;
+    let artifacts = artifacts_dir(args.get("artifacts"));
+
+    // tokenizer needs only the manifest (pure JSON — safe on this thread)
+    let manifest = Manifest::load(&artifacts.join(&model_id))?;
+    let (_ds, bpe) = ensure_data(manifest.config.vocab, 2_000_000, 42)?;
+    let bpe = Arc::new(bpe);
+
+    // server thread owns the PJRT client + engine end to end
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let bpe_srv = bpe.clone();
+    let artifacts_srv = artifacts.clone();
+    let model_id_srv = model_id.clone();
+    let server = std::thread::spawn(move || -> rsb::Result<usize> {
+        let model = Arc::new(Model::open(cpu_client()?, &artifacts_srv, &model_id_srv)?);
+        let ckpt = shared_checkpoint(&model_id_srv, "pretrained");
+        let params = if ckpt.exists() {
+            model.load_params(&ckpt)?
+        } else {
+            println!("[warn] no checkpoint; serving an untrained model");
+            model.init_params(0)?
+        };
+        let engine = Engine::new(model, params, EngineConfig::default())?;
+        serve(engine, bpe_srv, "127.0.0.1:0", Some(n_requests), Some(ready_tx))
+    });
+    let addr = ready_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .map_err(|_| rsb::Error::msg("server did not start"))?;
+
+    // two concurrent client connections interleaving requests
+    let prompts = [
+        "ada lives in",
+        "the foxes",
+        "bo eats",
+        "echo : kappa sigma ; kappa",
+        "ivy has a",
+        "the quick cat sees the",
+    ];
+    let h1 = spawn_client(addr, prompts.to_vec(), 0, n_requests / 2);
+    let h2 = spawn_client(addr, prompts.to_vec(), 1000, n_requests - n_requests / 2);
+    let r1 = h1.join().expect("client 1")?;
+    let r2 = h2.join().expect("client 2")?;
+    let served = server.join().expect("server thread")?;
+    println!(
+        "served {served} requests over 2 connections; \
+         client p50 latency ≈ {r1:.0}ms / {r2:.0}ms"
+    );
+    Ok(())
+}
+
+fn spawn_client(
+    addr: std::net::SocketAddr,
+    prompts: Vec<&'static str>,
+    id_base: u64,
+    n: usize,
+) -> std::thread::JoinHandle<rsb::Result<f64>> {
+    std::thread::spawn(move || {
+        let mut c = Client::connect(addr)?;
+        let mut lat = rsb::util::stats::Samples::default();
+        for i in 0..n {
+            let t0 = std::time::Instant::now();
+            let resp = c.request(id_base + i as u64, prompts[i % prompts.len()], 12, 0.7)?;
+            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+            let text = resp.str_of("text")?;
+            println!(
+                "  client[{id_base}] #{i} \"{}\" -> \"{}\"",
+                prompts[i % prompts.len()],
+                text.chars().take(40).collect::<String>()
+            );
+        }
+        Ok(lat.percentile(50.0))
+    })
+}

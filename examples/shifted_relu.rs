@@ -1,0 +1,121 @@
+//! Shifted ReLU (paper §5.3, Fig 8).
+//!
+//! Finetunes the pretrained Llama/SiLU base with (a) plain ReLU (stage 1)
+//! and (b) shifted ReLU `ReLU(x − b)` where b is FIT FROM THE PREACTIVATION
+//! HISTOGRAM of the pretrained model (the paper's Fig 5d argument: the
+//! distribution barely moves during finetuning, so b can be chosen ahead
+//! of time). Records accuracy and sparsity through finetuning:
+//!   fig8a.csv — avg task accuracy vs finetune step (relu vs srelu);
+//!   fig8b.csv — FFN sparsity vs finetune step.
+//!
+//! Requires the relufication pipeline's pretrained llama checkpoint.
+//!
+//! Run: cargo run --release --example shifted_relu -- [--steps 100]
+
+use std::sync::Arc;
+
+use rsb::evalx::EvalHarness;
+use rsb::figures::{ensure_data, shared_checkpoint, Csv};
+use rsb::runtime::{artifacts_dir, cpu_client, Arg, Model, Tensor};
+use rsb::sparsity::PreactHistograms;
+use rsb::train::{TrainConfig, Trainer};
+use rsb::util::cli::Args;
+use rsb::util::render_table;
+
+fn main() -> rsb::Result<()> {
+    let args = Args::from_env(&["fast"]);
+    let steps = args.usize_or("steps", if args.has("fast") { 16 } else { 100 })?;
+    let client = cpu_client()?;
+    let artifacts = artifacts_dir(args.get("artifacts"));
+    let (ds, bpe) = ensure_data(2048, 2_000_000, 42)?;
+    let ds = Arc::new(ds);
+    let bpe = Arc::new(bpe);
+    let world = rsb::data::World::new(42);
+
+    let src = shared_checkpoint("base_llama_silu_s0", "pretrained");
+    if !src.exists() {
+        return Err(rsb::Error::msg(
+            "missing base_llama_silu_s0 pretrained checkpoint; run examples/relufication first",
+        ));
+    }
+
+    // --- fit b from the pretrained model's preactivation histogram -------
+    let silu_model = Arc::new(Model::open(client.clone(), &artifacts, "base_llama_silu_s0")?);
+    let params0 = silu_model.load_params(&src)?;
+    let probe = silu_model.entry("probe")?;
+    let t = silu_model.manifest.buckets.probe_t;
+    let mut hists = PreactHistograms::new(silu_model.manifest.config.n_layers, -4.0, 4.0, 120);
+    let mut rng = rsb::util::rng::Rng::new(5);
+    for _ in 0..4 {
+        let doc = ds.val_batch(&mut rng, 1, t - 1)?;
+        let toks = Tensor::i32(vec![1, t], doc.as_i32()?.to_vec())?;
+        let mut a: Vec<Arg> = params0.tensors.iter().map(Arg::Host).collect();
+        a.push(Arg::Host(&toks));
+        let outs = probe.execute(&a)?;
+        hists.push(&outs[0])?;
+    }
+    let b90 = hists.fit_shift(0.90);
+    println!(
+        "preactivation fit: ReLU(x − b) with b = {b90:.2} would give ~90% sparsity \
+         (artifact base_llama_srelu_s1 bakes b = 1.0; paper uses b = 1 for Llama)"
+    );
+
+    // --- finetune relu vs srelu with recovery tracking -------------------
+    let variants = [("base_llama_relu_s1", "relu"), ("base_llama_srelu_s1", "srelu")];
+    let mut f8a = Csv::create("fig8a.csv", &["act", "step", "avg_acc", "val_loss"])?;
+    let mut f8b = Csv::create("fig8b.csv", &["act", "step", "ffn_sparsity"])?;
+    let mut summary = Vec::new();
+    for (id, act) in variants {
+        let model = Arc::new(Model::open(client.clone(), &artifacts, id)?);
+        let trainer = Trainer::new(model.clone(), ds.clone())?;
+        let harness = EvalHarness::new(model.clone(), bpe.clone());
+        let mut params = model.load_params(&src)?;
+        let chunks = 4usize;
+        let per = (steps / chunks).max(1);
+        let mut last = (0.0, 0.0, 0.0);
+        for chunk in 0..chunks {
+            let mut cfg = TrainConfig::quick(per, 5e-4);
+            cfg.log_every = per;
+            cfg.quiet = true;
+            cfg.lr.warmup_steps = if chunk == 0 { 3 } else { 0 };
+            let out = trainer.train_from(params, &cfg)?;
+            params = out.params;
+            let (val, sp) = trainer.eval_loss(&params.tensors, 2, 5)?;
+            let mut accs = Vec::new();
+            for kind in rsb::data::ALL_TASKS {
+                let r = harness.run_task(&params, &world, kind, 12, 0, 9)?;
+                accs.push(r.accuracy());
+            }
+            let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+            let step_now = (chunk + 1) * per;
+            println!(
+                "[{act}] step {step_now:>4} val {val:.4} acc {:.1}% ffn-sparsity {:.1}%",
+                avg * 100.0,
+                sp * 100.0
+            );
+            f8a.row(&[
+                act.into(),
+                step_now.to_string(),
+                format!("{avg:.4}"),
+                format!("{val:.4}"),
+            ])?;
+            f8b.row(&[act.into(), step_now.to_string(), format!("{sp:.4}")])?;
+            last = (avg, sp, val);
+        }
+        model.save_params(&shared_checkpoint(id, "latest"), &params)?;
+        summary.push(vec![
+            act.to_string(),
+            format!("{:.1}%", last.0 * 100.0),
+            format!("{:.1}%", last.1 * 100.0),
+            format!("{:.4}", last.2),
+        ]);
+    }
+    f8a.done();
+    f8b.done();
+    println!(
+        "\n== Fig 8 summary ==\n{}",
+        render_table(&["activation", "avg acc", "ffn sparsity", "val loss"], &summary)
+    );
+    println!("Expected (paper): srelu ≈ relu accuracy, srelu sparsity >> relu sparsity.");
+    Ok(())
+}

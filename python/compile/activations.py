@@ -1,0 +1,59 @@
+"""Activation zoo (paper §3.2, Fig 2a).
+
+Every gate in the paper is an instance of f(x) = x * sigma(beta * x):
+beta=1 -> SiLU, beta~=1.7 -> GELU approximation, beta -> inf -> ReLU.
+`srelu` is the paper's shifted ReLU, ReLU(x - b) (§5.3), with `b` chosen
+from the preactivation histogram.
+
+These run at build time only (inside the JAX model that is AOT-lowered to
+HLO); the rust cost model mirrors their *sparsity* semantics, never their
+numerics.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Activations whose output is exactly zero on a set of positive measure,
+#: i.e. the ones that produce true activation sparsity.
+SPARSE_ACTS = ("relu", "srelu")
+
+#: All activation names understood by the model builder.
+ACT_NAMES = ("relu", "gelu", "silu", "bsilu8", "srelu")
+
+
+def beta_silu(x, beta):
+    """The paper's unified gate f(x) = x * sigmoid(beta * x)."""
+    return x * jnp.reciprocal(1.0 + jnp.exp(-beta * x))
+
+
+def apply_act(name: str, x, shift: float = 1.0):
+    """Apply activation `name` to preactivation `x`.
+
+    `shift` only affects `srelu` (ReLU(x - shift)).
+    """
+    if name == "relu":
+        return jnp.maximum(x, 0.0)
+    if name == "srelu":
+        return jnp.maximum(x - shift, 0.0)
+    if name == "gelu":
+        # tanh approximation, matches jax.nn.gelu(approximate=True)
+        c = 0.7978845608028654  # sqrt(2/pi)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+    if name == "silu":
+        return beta_silu(x, 1.0)
+    if name == "bsilu8":
+        return beta_silu(x, 8.0)
+    raise ValueError(f"unknown activation: {name}")
+
+
+def act_zero_mask(name: str, y):
+    """Mask of *post*-activation values that are exactly zero.
+
+    This is the quantity the paper calls activation sparsity: entries for
+    which the corresponding down-projection row can be skipped entirely.
+    For smooth gates (gelu/silu) the exact-zero set is negligible, which is
+    precisely the paper's point.
+    """
+    del name
+    return (y != 0.0).astype(jnp.float32)

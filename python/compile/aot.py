@@ -1,0 +1,309 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts + JSON manifest.
+
+This is the ONLY place python touches the pipeline; `make artifacts` runs it
+once and the rust binary is self-contained afterwards.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts land in artifacts/<model_id>/{entry}.hlo.txt plus manifest.json
+recording the exact positional input/output order of every entry point, the
+canonical parameter flatten order, and the bucket constants the rust engine
+must respect. artifacts/index.json lists all built model dirs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32, I32, U32 = "f32", "i32", "u32"
+_DTYPES = {F32: jnp.float32, I32: jnp.int32, U32: jnp.uint32}
+
+
+def spec(dtype: str, shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), _DTYPES[dtype])
+
+
+#: Per-size bucket constants (sequence/batch shapes baked into the HLO).
+BUCKETS = {
+    # train_k, train_b, train_t, score_b, prefill_t, decode_b, verify_g, probe_t
+    "tiny": dict(train_k=4, train_b=4, train_t=32, score_b=4, prefill_t=16,
+                 decode_b=4, verify_g=8, probe_t=32),
+    "small": dict(train_k=8, train_b=8, train_t=64, score_b=8, prefill_t=48,
+                  decode_b=4, verify_g=8, probe_t=64),
+    "draft": dict(train_k=8, train_b=8, train_t=64, score_b=8, prefill_t=48,
+                  decode_b=4, verify_g=8, probe_t=64),
+    "base": dict(train_k=8, train_b=8, train_t=64, score_b=8, prefill_t=48,
+                 decode_b=4, verify_g=8, probe_t=64),
+    "e2e100m": dict(train_k=2, train_b=4, train_t=64, score_b=4, prefill_t=48,
+                    decode_b=2, verify_g=8, probe_t=64),
+}
+
+
+def to_hlo_text(lowered, expect_params: int = None) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True: every entry
+    returns a tuple; the rust side unwraps with decompose_tuple).
+
+    `expect_params` guards against jax.jit pruning unused arguments from the
+    lowered signature — that would silently desynchronize the manifest's
+    positional input list from the compiled program.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    if expect_params is not None:
+        got = len(comp.program_shape().parameter_shapes())
+        if got != expect_params:
+            raise RuntimeError(
+                f"entry lowered with {got} parameters but manifest declares "
+                f"{expect_params}: some inputs are unused and were pruned — "
+                "make the entry depend on every input (see probe_tokens)")
+    return comp.as_hlo_text()
+
+
+def _param_io(cfg: M.ModelConfig, prefix: str) -> List[dict]:
+    return [{"name": f"{prefix}{n}", "dtype": F32, "shape": list(s)}
+            for n, s in M.param_specs(cfg)]
+
+
+def build_entries(cfg: M.ModelConfig) -> Dict[str, Tuple]:
+    """entry name -> (callable, input descriptors, output descriptors).
+
+    Input descriptors are positional: the rust runtime feeds literals in
+    exactly this order and receives the output tuple in exactly the output
+    order. Names are documentation + checkpoint keys.
+    """
+    b = BUCKETS[cfg.size]
+    L, Fd, V, d = cfg.n_layers, cfg.d_ff, cfg.vocab, cfg.d_model
+    n_params = len(M.param_specs(cfg))
+    pio = _param_io(cfg, "param:")
+    k, tb, tt = b["train_k"], b["train_b"], b["train_t"]
+    sb, pt = b["score_b"], b["prefill_t"]
+    db, vg, prt = b["decode_b"], b["verify_g"], b["probe_t"]
+    kvs = lambda bb: list(M.kv_shape(cfg, bb))
+
+    def io(name, dtype, shape):
+        return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+    entries = {}
+
+    entries["init"] = (
+        lambda seed: M.init_params(cfg, seed),
+        [io("seed", U32, ())],
+        pio,
+    )
+
+    def train_k(*args):
+        p = args[:n_params]
+        m = args[n_params:2 * n_params]
+        v = args[2 * n_params:3 * n_params]
+        step, lrs, toks = args[3 * n_params:]
+        return tuple(M.train_k_steps(cfg, p, m, v, step, lrs, toks))
+
+    entries["train_k"] = (
+        train_k,
+        pio + _param_io(cfg, "m:") + _param_io(cfg, "v:")
+        + [io("step", F32, ()), io("lrs", F32, (k,)),
+           io("tokens", I32, (k, tb, tt + 1))],
+        pio + _param_io(cfg, "m:") + _param_io(cfg, "v:")
+        + [io("losses", F32, (k,)), io("gnorms", F32, (k,))],
+    )
+
+    def score(*args):
+        return M.score_tokens(cfg, args[:n_params], args[n_params])
+
+    entries["score"] = (
+        score,
+        pio + [io("tokens", I32, (sb, tt + 1))],
+        [io("nll", F32, (sb, tt)), io("sparsity", F32, (L, 3))],
+    )
+
+    def prefill(*args):
+        p, toks = args[:n_params], args[n_params]
+        kv = jnp.zeros(M.kv_shape(cfg, 1), jnp.float32)
+        pos = jnp.zeros((1,), jnp.int32)
+        nm = jnp.ones((L, Fd), jnp.float32)
+        logits, kv2, fm, st = M.incremental_forward(cfg, p, toks, kv, pos, nm)
+        return logits, kv2, fm, st
+
+    entries["prefill"] = (
+        prefill,
+        pio + [io("tokens", I32, (1, pt))],
+        [io("logits", F32, (1, pt, V)), io("kv", F32, kvs(1)),
+         io("ffn_mask", F32, (L, 1, Fd)), io("sparsity", F32, (L, 3))],
+    )
+
+    def make_decode(bb, g):
+        def fn(*args):
+            p = args[:n_params]
+            kv, pos, toks, nm = args[n_params:]
+            return M.incremental_forward(cfg, p, toks, kv, pos, nm)
+
+        return (
+            fn,
+            pio + [io("kv", F32, kvs(bb)), io("pos", I32, (bb,)),
+                   io("tokens", I32, (bb, g)), io("neuron_mask", F32, (L, Fd))],
+            [io("logits", F32, (bb, g, V)), io("kv", F32, kvs(bb)),
+             io("ffn_mask", F32, (L, bb, Fd)), io("sparsity", F32, (L, 3))],
+        )
+
+    entries["decode"] = make_decode(db, 1)
+    entries["decode1"] = make_decode(1, 1)
+    entries["verify"] = make_decode(1, vg)
+
+    def probe(*args):
+        return M.probe_tokens(cfg, args[:n_params], args[n_params])
+
+    entries["probe"] = (
+        probe,
+        pio + [io("tokens", I32, (1, prt))],
+        [io("preact", F32, (L, prt, Fd)), io("sparsity", F32, (L, 3)),
+         io("logit_mean", F32, ())],
+    )
+
+    return entries
+
+
+def lower_entry(fn, inputs) -> str:
+    args = [spec(i["dtype"], i["shape"]) for i in inputs]
+    return to_hlo_text(jax.jit(fn).lower(*args), expect_params=len(inputs))
+
+
+def build_model(cfg: M.ModelConfig, out_dir: str, entry_names, verbose=True):
+    mdir = os.path.join(out_dir, cfg.model_id)
+    os.makedirs(mdir, exist_ok=True)
+    entries = build_entries(cfg)
+    manifest = {
+        "model_id": cfg.model_id,
+        "config": {
+            "size": cfg.size, "arch": cfg.arch, "act": cfg.act,
+            "stage": cfg.stage, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "vocab": cfg.vocab, "max_seq": cfg.max_seq,
+            "shift": cfg.shift, "use_pallas": cfg.use_pallas,
+            "ffn_act": cfg.ffn_act, "gated": cfg.gated,
+            "parallel_block": cfg.parallel_block, "has_bias": cfg.has_bias,
+        },
+        "param_count": int(M.param_count(cfg)),
+        "params": [{"name": n, "shape": list(s)} for n, s in M.param_specs(cfg)],
+        "buckets": BUCKETS[cfg.size],
+        "entries": {},
+    }
+    for name in entry_names:
+        fn, inputs, outputs = entries[name]
+        t0 = time.time()
+        text = lower_entry(fn, inputs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(mdir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": fname, "inputs": inputs, "outputs": outputs,
+        }
+        if verbose:
+            print(f"  {cfg.model_id}/{name}: {len(text)/1e6:.2f}MB "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return mdir
+
+
+ALL_ENTRIES = ("init", "train_k", "score", "prefill", "decode", "decode1",
+               "verify", "probe")
+TRAIN_ONLY = ("init", "train_k", "score", "probe")
+
+#: The default grid `make artifacts` builds: (size, arch, act, stage, shift,
+#: entries). See DESIGN.md §5 for which experiment consumes which id.
+GRID = [
+    # tests + quickstart
+    ("tiny", "opt", "relu", 0, 1.0, ALL_ENTRIES),
+    # draft model for speculative decoding + Fig 2 from-scratch sweep
+    ("small", "opt", "relu", 0, 1.0, ALL_ENTRIES),
+    ("small", "opt", "gelu", 0, 1.0, TRAIN_ONLY),
+    ("small", "opt", "silu", 0, 1.0, TRAIN_ONLY),
+    ("small", "opt", "bsilu8", 0, 1.0, TRAIN_ONLY),
+    # speculative-decoding draft model (base vocab)
+    ("draft", "opt", "relu", 0, 1.0, ALL_ENTRIES),
+    # main experiment grid (Table 1/2, Figs 1, 4-8)
+    ("base", "opt", "relu", 0, 1.0, ALL_ENTRIES),
+    ("base", "opt", "relu", 2, 1.0, ALL_ENTRIES),
+    ("base", "llama", "silu", 0, 1.0, ALL_ENTRIES),
+    ("base", "llama", "relu", 1, 1.0, ALL_ENTRIES),
+    ("base", "llama", "relu", 2, 1.0, ALL_ENTRIES),
+    ("base", "llama", "srelu", 1, 1.0, ALL_ENTRIES),
+    ("base", "llama", "gelu", 0, 1.0, TRAIN_ONLY),  # Table 2 activation swap
+    ("base", "falcon", "gelu", 0, 1.0, ALL_ENTRIES),
+    ("base", "falcon", "relu", 1, 1.0, ALL_ENTRIES),
+    ("base", "falcon", "relu", 2, 1.0, ALL_ENTRIES),
+    ("base", "falcon", "silu", 0, 1.0, TRAIN_ONLY),  # Table 2 activation swap
+    # end-to-end ~100M driver (examples/e2e_pipeline.rs)
+    ("e2e100m", "opt", "relu", 0, 1.0,
+     ("init", "train_k", "score", "prefill", "decode1")),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated model_id filter (substring match)")
+    ap.add_argument("--size", default=None)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--act", default=None)
+    ap.add_argument("--stage", type=int, default=None)
+    ap.add_argument("--shift", type=float, default=None)
+    ap.add_argument("--entries", default=None)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="use the jnp oracle FFN on the serve path too")
+    args = ap.parse_args()
+
+    if args.size:  # single ad-hoc model
+        grid = [(args.size, args.arch or "opt", args.act or "relu",
+                 args.stage or 0, args.shift or 1.0,
+                 tuple((args.entries or ",".join(ALL_ENTRIES)).split(",")))]
+    else:
+        grid = GRID
+        if args.only:
+            keys = args.only.split(",")
+            grid = [g for g in grid
+                    if any(k in f"{g[0]}_{g[1]}_{g[2]}_s{g[3]}" for k in keys)]
+        if args.entries:
+            ent = tuple(args.entries.split(","))
+            grid = [(s, a, c, st, sh, ent) for (s, a, c, st, sh, _) in grid]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    built = []
+    t0 = time.time()
+    for size, arch, act, stage, shift, entry_names in grid:
+        cfg = M.make_config(size, arch, act, stage, shift,
+                            use_pallas=not args.no_pallas)
+        print(f"[aot] {cfg.model_id} ({M.param_count(cfg)/1e6:.2f}M params)",
+              flush=True)
+        build_model(cfg, args.out_dir, entry_names)
+        built.append(cfg.model_id)
+    index_path = os.path.join(args.out_dir, "index.json")
+    existing = []
+    if os.path.exists(index_path):
+        with open(index_path) as f:
+            existing = json.load(f).get("models", [])
+    models = sorted(set(existing) | set(built))
+    with open(index_path, "w") as f:
+        json.dump({"models": models}, f, indent=1)
+    print(f"[aot] built {len(built)} model dirs in {time.time()-t0:.0f}s "
+          f"-> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""L1 Pallas kernels: fused, neuron-masked FFN.
+
+The paper's compute hot-spot is the FFN pair (up-projection -> activation ->
+down-projection); its efficiency claim is that a zero activation kills an
+entire *row* of the down-projection (weight transfer + MACs, Fig 1b / 9a).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): instead of the paper's
+GPU-threadblock row skipping we tile the hidden dimension F into BF-sized
+blocks. Each grid step stages one [d, BF] up-projection tile and one [BF, d]
+down-projection tile HBM->VMEM via BlockSpec (the unit of "row transfer"),
+applies the activation + neuron mask in VMEM, and accumulates the partial
+down-projection into a revisited [BT, d] output block. Matmul shapes
+([BT, d] x [d, BF] and [BT, BF] x [BF, d]) feed the MXU systolic array.
+
+Kernels are lowered with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); the lowered HLO is a fori-loop over the grid with dynamic
+slices, which the rust runtime executes on the serve path.
+
+Correctness oracle: kernels/ref.py, enforced by python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..activations import apply_act
+
+#: Preferred token-tile / hidden-tile sizes, largest first. 128 matches the
+#: MXU systolic edge; smaller fallbacks keep tiny test shapes legal.
+_BT_CANDIDATES = (128, 64, 32, 16, 8, 4, 2, 1)
+_BF_CANDIDATES = (256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def pick_tile(n: int, candidates) -> int:
+    """Largest candidate tile that divides `n` exactly."""
+    for c in candidates:
+        if n % c == 0:
+            return c
+    return 1
+
+
+def vmem_bytes(bt: int, bf: int, d: int) -> int:
+    """Estimated VMEM residency of one grid step (f32): x, w_up, b_up, w_down,
+    mask tiles + out and preact accumulators. Used by DESIGN/EXPERIMENTS to
+    check the double-buffered footprint against the ~16MB VMEM budget."""
+    tiles = bt * d + d * bf + bf + bf * d + bf  # inputs
+    accs = bt * d + bt * bf  # out + preact blocks
+    return 4 * 2 * (tiles + accs)  # x2 for double buffering
+
+
+def _ffn_kernel(x_ref, wu_ref, bu_ref, wd_ref, m_ref, o_ref, p_ref, *, act, shift, nf):
+    """Grid = (n_token_tiles, n_hidden_tiles); hidden index j is minor, so the
+    output block for a token tile is revisited across j and accumulated."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    preact = x_ref[...] @ wu_ref[...] + bu_ref[...]
+    p_ref[...] = preact
+    h = apply_act(act, preact, shift) * m_ref[...]
+    o_ref[...] += h @ wd_ref[...]
+
+
+def _gated_kernel(x_ref, wg_ref, wu_ref, wd_ref, m_ref, o_ref, p_ref, *, act, shift, nf):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    preact = x_ref[...] @ wg_ref[...]
+    p_ref[...] = preact
+    h = apply_act(act, preact, shift) * m_ref[...] * (x_ref[...] @ wu_ref[...])
+    o_ref[...] += h @ wd_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("act", "shift"))
+def ffn_pallas(x, w_up, b_up, w_down, neuron_mask, act: str, shift: float = 1.0):
+    """Fused masked FFN; semantics of ref.ffn_ref.
+
+    x [BT, d], w_up [d, F], b_up [F], w_down [F, d], neuron_mask [F]
+    -> (out [BT, d], preact [BT, F]).
+    """
+    bt_total, d = x.shape
+    f = w_up.shape[1]
+    bt = pick_tile(bt_total, _BT_CANDIDATES)
+    bf = pick_tile(f, _BF_CANDIDATES)
+    nt, nf = bt_total // bt, f // bf
+
+    out, preact = pl.pallas_call(
+        functools.partial(_ffn_kernel, act=act, shift=shift, nf=nf),
+        grid=(nt, nf),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),  # x: token tile
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),  # w_up column tile
+            pl.BlockSpec((bf,), lambda i, j: (j,)),  # b_up tile
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),  # w_down row tile
+            pl.BlockSpec((bf,), lambda i, j: (j,)),  # neuron mask tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),  # out (revisited in j)
+            pl.BlockSpec((bt, bf), lambda i, j: (i, j)),  # preact
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt_total, d), x.dtype),
+            jax.ShapeDtypeStruct((bt_total, f), x.dtype),
+        ],
+        interpret=True,
+    )(x, w_up, b_up, w_down, neuron_mask)
+    return out, preact
+
+
+@functools.partial(jax.jit, static_argnames=("act", "shift"))
+def gated_ffn_pallas(x, w_gate, w_up, w_down, neuron_mask, act: str, shift: float = 1.0):
+    """Fused masked gated FFN (SwiGLU family); semantics of ref.gated_ffn_ref."""
+    bt_total, d = x.shape
+    f = w_gate.shape[1]
+    bt = pick_tile(bt_total, _BT_CANDIDATES)
+    bf = pick_tile(f, _BF_CANDIDATES)
+    nt, nf = bt_total // bt, f // bf
+
+    out, preact = pl.pallas_call(
+        functools.partial(_gated_kernel, act=act, shift=shift, nf=nf),
+        grid=(nt, nf),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),  # w_gate
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),  # w_up
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),  # w_down
+            pl.BlockSpec((bf,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, bf), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt_total, d), x.dtype),
+            jax.ShapeDtypeStruct((bt_total, f), x.dtype),
+        ],
+        interpret=True,
+    )(x, w_gate, w_up, w_down, neuron_mask)
+    return out, preact

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: neuron-masked row matvec (paper Fig 9a at kernel level).
+
+y = (a * mask) @ W for a single token's FFN activation vector `a` and the
+down-projection W [F, d]. Tiles F into BF blocks; a block whose mask tile is
+all-zero contributes nothing — the structural analogue of the paper's
+"skip loading zeroed rows". On real TPU hardware the `@pl.when(live)` guard
+elides both the MXU issue and (with a scalar-prefetched mask) the HBM->VMEM
+copy of the W tile; under interpret=True it documents the schedule while the
+rust substrate (rust/src/sparse) provides the measured row-skip latency.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ffn import pick_tile, _BF_CANDIDATES
+
+
+def _kernel(a_ref, m_ref, w_ref, o_ref):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    am = a_ref[...] * m_ref[...]
+    live = jnp.any(am != 0.0)
+
+    @pl.when(live)
+    def _accum():
+        # [1, BF] x [BF, d] on the MXU; skipped entirely for dead tiles.
+        o_ref[...] += am[None, :] @ w_ref[...]
+
+
+@jax.jit
+def masked_matvec_pallas(w, a, mask):
+    """Semantics of ref.masked_matvec_ref: (a * mask) @ w.
+
+    w: [F, d], a: [F], mask: [F] -> y: [d].
+    """
+    f, d = w.shape
+    bf = pick_tile(f, _BF_CANDIDATES)
+    nf = f // bf
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nf,),
+        in_specs=[
+            pl.BlockSpec((bf,), lambda j: (j,)),  # a tile
+            pl.BlockSpec((bf,), lambda j: (j,)),  # mask tile
+            pl.BlockSpec((bf, d), lambda j: (j, 0)),  # W row tile
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda j: (0, 0)),  # revisited accumulator
+        out_shape=jax.ShapeDtypeStruct((1, d), w.dtype),
+        interpret=True,
+    )(a, mask, w)
+    return out[0]

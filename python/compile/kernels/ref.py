@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle to float32 tolerance across the shape/dtype sweep in
+python/tests/test_kernels.py (hypothesis). The L2 model also uses these
+directly on paths where autodiff must flow (train/score), so kernel==ref
+equality is what guarantees train-time and serve-time numerics agree.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..activations import apply_act
+
+
+def ffn_ref(x, w_up, b_up, w_down, neuron_mask, act: str, shift: float = 1.0):
+    """Non-gated FFN (OPT/Falcon style): down( mask * act(x @ w_up + b_up) ).
+
+    Args:
+      x:           [BT, d]  token activations.
+      w_up:        [d, F]
+      b_up:        [F]      (zeros when the architecture has no biases)
+      w_down:      [F, d]
+      neuron_mask: [F]      1.0 = neuron available, 0.0 = treat as unloaded
+                   (the paper's §5.1 weight-reuse experiment).
+      act:         activation name.
+
+    Returns:
+      (out [BT, d], preact [BT, F]).
+      The FFN activation mask (paper's "down-projection input sparsity") is
+      derived from `preact` by the caller: act(preact) * mask != 0.
+    """
+    preact = x @ w_up + b_up
+    h = apply_act(act, preact, shift) * neuron_mask
+    return h @ w_down, preact
+
+
+def gated_ffn_ref(x, w_gate, w_up, w_down, neuron_mask, act: str, shift: float = 1.0):
+    """Gated FFN (Llama SwiGLU style): down( mask * act(x@w_gate) * (x@w_up) ).
+
+    The paper's relufication targets the *gate* activation: sparsity is
+    determined by act(x @ w_gate) == 0, which zeroes the whole elementwise
+    product regardless of the up-projection value.
+
+    Returns (out [BT, d], preact [BT, F]) where preact = x @ w_gate.
+    """
+    preact = x @ w_gate
+    h = apply_act(act, preact, shift) * neuron_mask * (x @ w_up)
+    return h @ w_down, preact
+
+
+def masked_matvec_ref(w, a, mask):
+    """Row-structured sparse matvec (paper Fig 9a): y = (a * mask) @ w.
+
+    w: [F, d], a: [F], mask: [F]. Rows of `w` whose mask/activation entry is
+    zero contribute nothing — the rust substrate (rust/src/sparse) skips them
+    outright; this oracle defines the semantics.
+    """
+    return (a * mask) @ w

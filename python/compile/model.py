@@ -1,0 +1,507 @@
+"""L2: the JAX model zoo that gets AOT-lowered to HLO text.
+
+Three decoder-only architecture families, mirroring the paper's subjects
+(§3.1) at laptop scale (DESIGN.md §3 substitutions):
+
+  opt    — LayerNorm (+bias), learned absolute positions, FFN with biases,
+           native activation ReLU (the paper's "already sparse" family).
+  llama  — RMSNorm, RoPE, gated SwiGLU FFN, native activation SiLU.
+  falcon — LayerNorm, RoPE, parallel attention/FFN block sharing one norm,
+           native activation GELU.
+
+Relufication stages (paper §4, Fig 3):
+  stage 0 — native activation.
+  stage 1 — FFN activation (gate activation for llama) replaced with ReLU.
+  stage 2 — stage 1 + ReLU inserted after the norm(s) feeding QKV and the
+            FFN up/gate projections.
+
+Every entry point takes the parameters as leading positional arrays in the
+exact order of `param_specs(cfg)`; the AOT manifest records that order so the
+rust runtime can marshal checkpoints without re-deriving pytree structure.
+
+Paths:
+  full_forward        — no KV cache; train_k (autodiff => jnp FFN oracle),
+                        score, probe.
+  incremental_forward — KV cache + per-row positions; prefill (G=T),
+                        decode (G=1), verify (G=gamma). Uses the L1 Pallas
+                        FFN kernel on this serve path.
+The two paths share norms/attention math; python/tests/test_model.py checks
+decode/prefill agreement against full_forward token by token.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .activations import apply_act
+from .kernels import ref as kref
+from .kernels.ffn import ffn_pallas, gated_ffn_pallas
+
+ARCHS = ("opt", "llama", "falcon")
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    size: str
+    arch: str  # opt | llama | falcon
+    act: str  # relu | gelu | silu | bsilu8 | srelu
+    stage: int  # 0 | 1 | 2
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    max_seq: int
+    shift: float = 1.0  # srelu's b
+    use_pallas: bool = True  # L1 kernel on the serve path
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def ffn_act(self) -> str:
+        """Effective FFN activation after relufication surgery."""
+        return "relu" if (self.stage >= 1 and self.act not in ("srelu",)) else self.act
+
+    @property
+    def model_id(self) -> str:
+        return f"{self.size}_{self.arch}_{self.act}_s{self.stage}"
+
+    @property
+    def gated(self) -> bool:
+        return self.arch == "llama"
+
+    @property
+    def parallel_block(self) -> bool:
+        return self.arch == "falcon"
+
+    @property
+    def has_bias(self) -> bool:
+        return self.arch == "opt"
+
+
+#: size -> (d_model, n_layers, n_heads, d_ff, vocab, max_seq)
+SIZES: Dict[str, Tuple[int, int, int, int, int, int]] = {
+    "tiny": (64, 2, 2, 256, 256, 64),
+    "small": (128, 4, 4, 512, 512, 96),
+    # draft: small geometry, base vocabulary (speculative-decoding M_q must
+    # share the target's tokenizer)
+    "draft": (128, 4, 4, 512, 2048, 96),
+    "base": (256, 6, 8, 1024, 2048, 96),
+    "e2e100m": (768, 12, 12, 3072, 8192, 96),
+}
+
+
+def make_config(size: str, arch: str, act: str, stage: int, shift: float = 1.0,
+                use_pallas: bool = True) -> ModelConfig:
+    d, l, h, f, v, t = SIZES[size]
+    return ModelConfig(size=size, arch=arch, act=act, stage=stage, d_model=d,
+                       n_layers=l, n_heads=h, d_ff=f, vocab=v, max_seq=t,
+                       shift=shift, use_pallas=use_pallas)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) list; flatten order == entry-point arg order."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    specs: List[Tuple[str, Tuple[int, ...]]] = [("embed", (v, d))]
+    if cfg.arch == "opt":
+        specs.append(("pos_embed", (cfg.max_seq, d)))
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        specs.append((p + "ln1.scale", (d,)))
+        if cfg.arch != "llama":
+            specs.append((p + "ln1.bias", (d,)))
+        specs.append((p + "attn.wqkv", (d, 3 * d)))
+        specs.append((p + "attn.wo", (d, d)))
+        if not cfg.parallel_block:  # falcon shares ln1 across attn + ffn
+            specs.append((p + "ln2.scale", (d,)))
+            if cfg.arch != "llama":
+                specs.append((p + "ln2.bias", (d,)))
+        if cfg.gated:
+            specs.append((p + "ffn.w_gate", (d, f)))
+        specs.append((p + "ffn.w_up", (d, f)))
+        if cfg.has_bias:
+            specs.append((p + "ffn.b_up", (f,)))
+        specs.append((p + "ffn.w_down", (f, d)))
+        if cfg.has_bias:
+            specs.append((p + "ffn.b_down", (d,)))
+    specs.append(("lnf.scale", (d,)))
+    if cfg.arch != "llama":
+        specs.append(("lnf.bias", (d,)))
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, seed) -> Tuple[jnp.ndarray, ...]:
+    """GPT-2 style init: N(0, 0.02), residual projections scaled 1/sqrt(2L)."""
+    key = jax.random.PRNGKey(jnp.asarray(seed, dtype=jnp.uint32))
+    out = []
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+    for i, (name, shape) in enumerate(param_specs(cfg)):
+        k = jax.random.fold_in(key, i)
+        if name.endswith(".scale"):
+            arr = jnp.ones(shape, jnp.float32)
+        elif name.endswith(".bias") or name.startswith("l") and ".b_" in name:
+            arr = jnp.zeros(shape, jnp.float32)
+        elif name.endswith("attn.wo") or name.endswith("ffn.w_down"):
+            arr = 0.02 * resid_scale * jax.random.normal(k, shape, jnp.float32)
+        else:
+            arr = 0.02 * jax.random.normal(k, shape, jnp.float32)
+        out.append(arr)
+    return tuple(out)
+
+
+class Params:
+    """Name-indexed view over the flat parameter tuple."""
+
+    def __init__(self, cfg: ModelConfig, flat: Sequence[jnp.ndarray]):
+        self._names = [n for n, _ in param_specs(cfg)]
+        assert len(flat) == len(self._names), (len(flat), len(self._names))
+        self._by_name = dict(zip(self._names, flat))
+
+    def __getitem__(self, name: str) -> jnp.ndarray:
+        return self._by_name[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._by_name
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def _norm(cfg: ModelConfig, x, scale, bias):
+    if cfg.arch == "llama":  # RMSNorm
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(var + 1e-5) * scale
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _rope(x, pos_ids):
+    """x: [B, G, H, hd]; pos_ids: [B, G]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos_ids[..., None].astype(jnp.float32) * freqs  # [B, G, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _zero_frac(x) -> jnp.ndarray:
+    return jnp.mean((x == 0.0).astype(jnp.float32))
+
+
+def _ffn_apply(cfg: ModelConfig, params: Params, l: int, x2d, neuron_mask_l,
+               use_pallas: bool):
+    """Run layer `l`'s FFN on [BT, d] tokens.
+
+    Returns (out [BT, d], act_mask [BT, F], preact [BT, F]).
+    act_mask marks FFN activations that are exactly zero-free — the paper's
+    down-projection row liveness (Fig 1b).
+    """
+    p = f"l{l}.ffn."
+    act, shift = cfg.ffn_act, cfg.shift
+    if cfg.gated:
+        wg, wu, wd = params[p + "w_gate"], params[p + "w_up"], params[p + "w_down"]
+        if use_pallas:
+            out, preact = gated_ffn_pallas(x2d, wg, wu, wd, neuron_mask_l, act, shift)
+        else:
+            out, preact = kref.gated_ffn_ref(x2d, wg, wu, wd, neuron_mask_l, act, shift)
+        gate_val = apply_act(act, preact, shift) * neuron_mask_l
+        act_mask = (gate_val != 0.0).astype(jnp.float32)
+        return out, act_mask, preact
+    wu, wd = params[p + "w_up"], params[p + "w_down"]
+    bu = params[p + "b_up"] if cfg.has_bias else jnp.zeros((cfg.d_ff,), jnp.float32)
+    if use_pallas:
+        out, preact = ffn_pallas(x2d, wu, bu, wd, neuron_mask_l, act, shift)
+    else:
+        out, preact = kref.ffn_ref(x2d, wu, bu, wd, neuron_mask_l, act, shift)
+    if cfg.has_bias:
+        out = out + params[p + "b_down"]
+    act_val = apply_act(act, preact, shift) * neuron_mask_l
+    act_mask = (act_val != 0.0).astype(jnp.float32)
+    return out, act_mask, preact
+
+
+def _attention(cfg: ModelConfig, q, k, v, allowed):
+    """q: [B,H,G,hd]; k,v: [B,H,S,hd]; allowed: [B,1,G,S] bool."""
+    scale = 1.0 / jnp.sqrt(float(cfg.head_dim))
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q, k) * scale
+    scores = jnp.where(allowed, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs, v)
+    return out
+
+
+def _split_heads(cfg: ModelConfig, x):  # [B,G,d] -> [B,G,H,hd]
+    b, g, _ = x.shape
+    return x.reshape(b, g, cfg.n_heads, cfg.head_dim)
+
+
+def _merge_heads(cfg: ModelConfig, x):  # [B,H,G,hd] -> [B,G,d]
+    b, h, g, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, g, h * hd)
+
+
+# --------------------------------------------------------------------------
+# Full (cache-free) forward — train / score / probe
+# --------------------------------------------------------------------------
+
+def full_forward(cfg: ModelConfig, flat_params, tokens, use_pallas: bool = False):
+    """tokens: i32[B, T]. Returns (logits [B,T,V], sparsity [L,3],
+    preacts [L, B, T, F], ffn_masks [L, B, T, F])."""
+    params = Params(cfg, flat_params)
+    b, t = tokens.shape
+    x = params["embed"][tokens]  # [B,T,d]
+    pos_ids = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    if cfg.arch == "opt":
+        x = x + params["pos_embed"][:t][None, :, :]
+    allowed = (jnp.arange(t)[None, :] <= jnp.arange(t)[:, None])[None, None, :, :]
+    ones_mask = jnp.ones((cfg.d_ff,), jnp.float32)
+
+    stats, preacts, masks = [], [], []
+    for l in range(cfg.n_layers):
+        x, st, pa, am = _block(cfg, params, l, x, pos_ids, allowed, None, None,
+                               ones_mask, use_pallas)
+        stats.append(st)
+        preacts.append(pa)
+        masks.append(am)
+    bias = params["lnf.bias"] if "lnf.bias" in params else None
+    x = _norm(cfg, x, params["lnf.scale"], bias)
+    logits = x @ params["embed"].T
+    return (logits, jnp.stack(stats), jnp.stack(preacts), jnp.stack(masks))
+
+
+def _block(cfg: ModelConfig, params: Params, l: int, x, pos_ids, allowed,
+           kv, pos, neuron_mask_l, use_pallas):
+    """One transformer block; works for both cache-free (kv=None) and
+    incremental (kv = (kcache, vcache) for this layer) modes.
+
+    Returns (x, stats [3], preact [B,G,F], act_mask [B,G,F]) plus, in
+    incremental mode, the updated (kcache, vcache) via closure-free tuple —
+    see _block_incremental wrapper below.
+    """
+    out = _block_inner(cfg, params, l, x, pos_ids, allowed, kv, pos,
+                       neuron_mask_l, use_pallas)
+    if kv is None:
+        x, stats, preact, act_mask, _ = out
+        return x, stats, preact, act_mask
+    return out
+
+
+def _block_inner(cfg, params, l, x, pos_ids, allowed, kv, pos, neuron_mask_l,
+                 use_pallas):
+    p = f"l{l}."
+    b, g, d = x.shape
+    bias1 = params[p + "ln1.bias"] if (p + "ln1.bias") in params else None
+    h = _norm(cfg, x, params[p + "ln1.scale"], bias1)
+    if cfg.stage >= 2:
+        h = jnp.maximum(h, 0.0)  # ReLU after norm (paper Fig 3, stage 2)
+    qkv_sparsity = _zero_frac(h)
+
+    qkv = h @ params[p + "attn.wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q, k, v = (_split_heads(cfg, z) for z in (q, k, v))  # [B,G,H,hd]
+    if cfg.arch != "opt":
+        q = _rope(q, pos_ids)
+        k = _rope(k, pos_ids)
+    q = q.transpose(0, 2, 1, 3)  # [B,H,G,hd]
+    k_t = k.transpose(0, 2, 1, 3)
+    v_t = v.transpose(0, 2, 1, 3)
+
+    if kv is None:
+        k_ctx, v_ctx = k_t, v_t
+        new_kv = None
+    else:
+        kcache, vcache = kv  # [B,H,Tmax,hd]
+
+        def upd(cache_b, new_b, p_b):
+            return jax.lax.dynamic_update_slice(cache_b, new_b, (0, p_b, 0))
+
+        k_ctx = jax.vmap(upd)(kcache, k_t, pos)
+        v_ctx = jax.vmap(upd)(vcache, v_t, pos)
+        new_kv = (k_ctx, v_ctx)
+
+    attn = _attention(cfg, q, k_ctx, v_ctx, allowed)
+    attn_out = _merge_heads(cfg, attn) @ params[p + "attn.wo"]
+
+    if cfg.parallel_block:
+        ffn_in = h  # falcon: parallel attn/FFN sharing one norm
+    else:
+        x = x + attn_out
+        bias2 = params[p + "ln2.bias"] if (p + "ln2.bias") in params else None
+        ffn_in = _norm(cfg, x, params[p + "ln2.scale"], bias2)
+        if cfg.stage >= 2:
+            ffn_in = jnp.maximum(ffn_in, 0.0)
+    up_sparsity = _zero_frac(ffn_in)
+
+    ffn_out2d, act_mask2d, preact2d = _ffn_apply(
+        cfg, params, l, ffn_in.reshape(b * g, d), neuron_mask_l, use_pallas)
+    ffn_out = ffn_out2d.reshape(b, g, d)
+    act_mask = act_mask2d.reshape(b, g, cfg.d_ff)
+    preact = preact2d.reshape(b, g, cfg.d_ff)
+    ffn_sparsity = 1.0 - jnp.mean(act_mask)
+
+    if cfg.parallel_block:
+        x = x + attn_out + ffn_out
+    else:
+        x = x + ffn_out
+    stats = jnp.stack([qkv_sparsity, up_sparsity, ffn_sparsity])
+    return x, stats, preact, act_mask, new_kv
+
+
+# --------------------------------------------------------------------------
+# Incremental forward — prefill / decode / verify
+# --------------------------------------------------------------------------
+
+def incremental_forward(cfg: ModelConfig, flat_params, tokens, kv, pos,
+                        neuron_mask):
+    """tokens: i32[B, G]; kv: f32[L,2,B,H,Tmax,hd]; pos: i32[B];
+    neuron_mask: f32[L, F].
+
+    Returns (logits [B,G,V], kv', ffn_mask [L,B,F], sparsity [L,3]).
+    ffn_mask is the per-row union over the G processed tokens of live FFN
+    activations — the quantity aggregated sparsity (§5.1) tracks.
+
+    KV invariant: positions < pos[b] hold valid history for row b; this call
+    writes positions pos[b] .. pos[b]+G-1 *before* attending to them, so any
+    stale garbage beyond pos is never read (attention allows j <= pos+g).
+    """
+    params = Params(cfg, flat_params)
+    b, g = tokens.shape
+    tmax = kv.shape[4]
+    pos_ids = pos[:, None] + jnp.arange(g, dtype=jnp.int32)[None, :]  # [B,G]
+    x = params["embed"][tokens]
+    if cfg.arch == "opt":
+        x = x + params["pos_embed"][pos_ids]
+    key_pos = jnp.arange(tmax, dtype=jnp.int32)
+    allowed = key_pos[None, None, None, :] <= pos_ids[:, None, :, None]  # [B,1,G,Tmax]
+
+    new_layers_k, new_layers_v, stats, masks = [], [], [], []
+    for l in range(cfg.n_layers):
+        x, st, _pa, am, new_kv = _block_inner(
+            cfg, params, l, x, pos_ids, allowed, (kv[l, 0], kv[l, 1]), pos,
+            neuron_mask[l], cfg.use_pallas)
+        new_layers_k.append(new_kv[0])
+        new_layers_v.append(new_kv[1])
+        stats.append(st)
+        masks.append(jnp.max(am, axis=1))  # union over G -> [B,F]
+    bias = params["lnf.bias"] if "lnf.bias" in params else None
+    x = _norm(cfg, x, params["lnf.scale"], bias)
+    logits = x @ params["embed"].T  # [B,G,V]
+    kv_out = jnp.stack(
+        [jnp.stack([k, v]) for k, v in zip(new_layers_k, new_layers_v)])
+    return logits, kv_out, jnp.stack(masks), jnp.stack(stats)
+
+
+def kv_shape(cfg: ModelConfig, batch: int) -> Tuple[int, ...]:
+    return (cfg.n_layers, 2, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+
+
+# --------------------------------------------------------------------------
+# Loss / optimizer
+# --------------------------------------------------------------------------
+
+def _ce_loss(cfg: ModelConfig, flat_params, tokens):
+    """tokens: i32[B, T+1]; returns mean next-token cross entropy."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits, _, _, _ = full_forward(cfg, flat_params, inputs, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def _decayable(name: str) -> bool:
+    """AdamW weight decay applies to matrices only (not norms/biases)."""
+    return ("wqkv" in name or "wo" in name or "w_up" in name
+            or "w_gate" in name or "w_down" in name or "embed" in name)
+
+
+def adamw_step(cfg: ModelConfig, flat_params, m, v, step, lr, tokens,
+               b1=0.9, b2=0.95, eps=1e-8, wd=0.1, clip=1.0):
+    """One AdamW update with global-norm clipping. step is f32 (1-based)."""
+    names = [n for n, _ in param_specs(cfg)]
+    loss, grads = jax.value_and_grad(lambda fp: _ce_loss(cfg, fp, tokens))(
+        tuple(flat_params))
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+    scale = jnp.minimum(1.0, clip / gnorm)
+    grads = [g * scale for g in grads]
+    new_p, new_m, new_v = [], [], []
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    for name, p, g, mi, vi in zip(names, flat_params, grads, m, v):
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * (g * g)
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        if _decayable(name):
+            upd = upd + wd * p
+        new_p.append(p - lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, loss, gnorm
+
+
+def train_k_steps(cfg: ModelConfig, flat_params, m, v, step0, lrs, tokens_k):
+    """K optimizer steps via lax.scan (amortizes the host<->device tuple
+    roundtrip the rust runtime pays per execute).
+
+    lrs: f32[K]; tokens_k: i32[K, B, T+1].
+    Returns (params, m, v, losses [K], gnorms [K]).
+    """
+    n = len(flat_params)
+
+    def body(carry, inp):
+        ps, ms, vs, st = carry
+        lr, toks = inp
+        ps2, ms2, vs2, loss, gnorm = adamw_step(cfg, ps, ms, vs, st + 1.0, lr, toks)
+        return (tuple(ps2), tuple(ms2), tuple(vs2), st + 1.0), (loss, gnorm)
+
+    (ps, ms, vs, _), (losses, gnorms) = jax.lax.scan(
+        body, (tuple(flat_params), tuple(m), tuple(v), step0), (lrs, tokens_k))
+    return list(ps) + list(ms) + list(vs) + [losses, gnorms]
+
+
+def score_tokens(cfg: ModelConfig, flat_params, tokens):
+    """Teacher-forced per-token NLL. tokens: i32[B, T+1].
+
+    Returns (nll [B, T], sparsity [L, 3]).
+    """
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits, stats, _, _ = full_forward(cfg, flat_params, inputs,
+                                       use_pallas=cfg.use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll, stats
+
+
+def probe_tokens(cfg: ModelConfig, flat_params, tokens):
+    """Preactivation capture (Fig 5 / 11 histograms, shifted-ReLU b fitting).
+
+    tokens: i32[1, T] -> (preact [L, T, F], sparsity [L, 3], logit_mean []).
+
+    logit_mean keeps the LM head (final norm + unembedding) live: jax.jit
+    prunes unused parameters from the lowered HLO signature, which would
+    desynchronize the manifest's positional input list from the compiled
+    program (the rust runtime feeds ALL params positionally).
+    """
+    logits, stats, preacts, _ = full_forward(cfg, flat_params, tokens,
+                                             use_pallas=cfg.use_pallas)
+    return preacts[:, 0], stats, jnp.mean(logits)

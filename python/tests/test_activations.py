@@ -1,0 +1,67 @@
+"""Activation zoo semantics (paper Fig 2a/2b, §5.3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.activations import ACT_NAMES, apply_act, act_zero_mask, beta_silu
+
+GRID = jnp.linspace(-5.0, 5.0, 401)
+
+
+def test_silu_is_beta_one():
+    np.testing.assert_allclose(apply_act("silu", GRID), beta_silu(GRID, 1.0))
+
+
+def test_gelu_matches_jax():
+    np.testing.assert_allclose(apply_act("gelu", GRID),
+                               jax.nn.gelu(GRID, approximate=True),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_beta_inf_approaches_relu():
+    """Fig 2a: increasing beta sweeps SiLU -> ReLU."""
+    relu = apply_act("relu", GRID)
+    for beta, tol in [(1.0, 1.0), (8.0, 0.1), (64.0, 0.02), (512.0, 0.01)]:
+        err = float(jnp.max(jnp.abs(beta_silu(GRID, beta) - relu)))
+        assert err < tol, (beta, err)
+
+
+def test_sparsity_ordering_on_gaussian():
+    """Paper Fig 2c: sparsity(silu) < sparsity(bsilu8) <= sparsity(relu)
+    < sparsity(shifted relu) on N(0,1) preactivations."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (100_000,))
+    frac = {a: float(1.0 - act_zero_mask(a, apply_act(a, x)).mean())
+            for a in ACT_NAMES}
+    assert frac["silu"] < 1e-5  # smooth gates never hit exact zero
+    assert frac["gelu"] < 1e-5
+    assert abs(frac["relu"] - 0.5) < 0.01
+    assert frac["srelu"] > frac["relu"]  # ReLU(x-1) drops ~84% of N(0,1)
+    assert abs(frac["srelu"] - 0.841) < 0.01
+
+
+def test_shifted_relu_cutoff():
+    """ReLU(x - b) zeroes exactly x <= b."""
+    y = apply_act("srelu", GRID, shift=1.0)
+    np.testing.assert_array_equal(np.asarray(y[GRID <= 1.0]), 0.0)
+    assert np.all(np.asarray(y[GRID > 1.0]) > 0.0)
+
+
+@given(st.floats(-50, 50), st.sampled_from(ACT_NAMES))
+@settings(max_examples=60, deadline=None)
+def test_acts_finite_and_lower_bounded(x, act):
+    y = float(apply_act(act, jnp.float32(x)))
+    assert np.isfinite(y)
+    if act in ("relu", "srelu"):
+        assert y >= 0.0
+    else:
+        assert y >= -0.5  # silu/gelu minimum is > -0.3
+
+
+def test_fig2b_tail_ordering():
+    """Fig 2b: on moderately negative preactivations SiLU passes the most
+    mass, GELU less, beta=8 less still, ReLU none."""
+    x = jnp.float32(-2.0)
+    mags = {a: abs(float(apply_act(a, x))) for a in ("silu", "gelu", "bsilu8", "relu")}
+    assert mags["silu"] > mags["gelu"] > mags["bsilu8"] > mags["relu"] == 0.0

@@ -1,0 +1,137 @@
+"""Hypothesis sweep over the incremental (KV-cache) forward path: random
+batch sizes, chunk splits and positions must always agree with the
+cache-free forward — this is the invariant the whole serving engine rests
+on (decode ≡ prefill ≡ full, for every arch and relufication stage)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _cfg(arch, act, stage):
+    return M.make_config("tiny", arch, act, stage)
+
+
+def _ones(cfg):
+    return jnp.ones((cfg.n_layers, cfg.d_ff), jnp.float32)
+
+
+@st.composite
+def chunked_cases(draw):
+    arch, act = draw(st.sampled_from(
+        [("opt", "relu"), ("llama", "silu"), ("falcon", "gelu")]))
+    stage = draw(st.sampled_from([0, 1, 2]))
+    b = draw(st.integers(1, 3))
+    t = draw(st.integers(4, 14))
+    # random chunking of the t tokens into incremental calls
+    cuts = sorted(draw(st.sets(st.integers(1, t - 1), max_size=3)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return arch, act, stage, b, t, cuts, seed
+
+
+@given(chunked_cases())
+@settings(**SETTINGS)
+def test_chunked_incremental_matches_full(case):
+    """Processing a sequence in arbitrary multi-token chunks through the KV
+    cache reproduces the cache-free logits (covers prefill, decode AND
+    verify shapes in one property)."""
+    arch, act, stage, b, t, cuts, seed = case
+    cfg = _cfg(arch, act, stage)
+    ps = M.init_params(cfg, seed % 1000)
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (b, t), 0, cfg.vocab)
+    want, _, _, _ = M.full_forward(cfg, ps, toks)
+
+    kv = jnp.zeros(M.kv_shape(cfg, b), jnp.float32)
+    bounds = [0] + cuts + [t]
+    got = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        pos = jnp.full((b,), lo, jnp.int32)
+        lg, kv, _, _ = M.incremental_forward(
+            cfg, ps, toks[:, lo:hi], kv, pos, _ones(cfg))
+        got.append(lg)
+    got = jnp.concatenate(got, axis=1)
+    np.testing.assert_allclose(want, got, rtol=6e-4, atol=6e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3))
+@settings(**SETTINGS)
+def test_staggered_rows_match_aligned(seed, extra):
+    """Batch rows at different positions (continuous batching) produce the
+    same logits as each row run alone at its own position."""
+    cfg = _cfg("opt", "relu", 0)
+    ps = M.init_params(cfg, 3)
+    key = jax.random.PRNGKey(seed)
+    t0, t1 = 4, 4 + extra
+    s0 = jax.random.randint(jax.random.fold_in(key, 0), (1, t0), 0, cfg.vocab)
+    s1 = jax.random.randint(jax.random.fold_in(key, 1), (1, t1), 0, cfg.vocab)
+    nm = _ones(cfg)
+    kv0 = jnp.zeros(M.kv_shape(cfg, 1), jnp.float32)
+    kv1 = jnp.zeros(M.kv_shape(cfg, 1), jnp.float32)
+    _, kv0, _, _ = M.incremental_forward(cfg, ps, s0, kv0, jnp.zeros((1,), jnp.int32), nm)
+    _, kv1, _, _ = M.incremental_forward(cfg, ps, s1, kv1, jnp.zeros((1,), jnp.int32), nm)
+    kvb = jnp.concatenate([kv0, kv1], axis=2)
+    nxt = jax.random.randint(jax.random.fold_in(key, 2), (2, 1), 0, cfg.vocab)
+    lgb, _, _, _ = M.incremental_forward(
+        cfg, ps, nxt, kvb, jnp.array([t0, t1], jnp.int32), nm)
+    la, _, _, _ = M.incremental_forward(
+        cfg, ps, nxt[:1], kv0, jnp.array([t0], jnp.int32), nm)
+    lb, _, _, _ = M.incremental_forward(
+        cfg, ps, nxt[1:], kv1, jnp.array([t1], jnp.int32), nm)
+    np.testing.assert_allclose(lgb[0], la[0], rtol=6e-4, atol=6e-4)
+    np.testing.assert_allclose(lgb[1], lb[0], rtol=6e-4, atol=6e-4)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_stale_kv_beyond_pos_is_ignored(seed):
+    """The overwrite-before-attend invariant: garbage at positions >= pos
+    must not influence logits (this is what makes speculative rollback and
+    right-padded prefill sound)."""
+    cfg = _cfg("llama", "silu", 0)
+    ps = M.init_params(cfg, 5)
+    key = jax.random.PRNGKey(seed)
+    t = 6
+    toks = jax.random.randint(jax.random.fold_in(key, 0), (1, t), 0, cfg.vocab)
+    nm = _ones(cfg)
+    kv_clean = jnp.zeros(M.kv_shape(cfg, 1), jnp.float32)
+    _, kv_clean, _, _ = M.incremental_forward(
+        cfg, ps, toks, kv_clean, jnp.zeros((1,), jnp.int32), nm)
+    # poison everything at positions >= t
+    poison = jax.random.normal(jax.random.fold_in(key, 1), kv_clean.shape) * 100.0
+    mask = (jnp.arange(cfg.max_seq) >= t)[None, None, None, None, :, None]
+    kv_dirty = jnp.where(mask, poison, kv_clean)
+    nxt = jax.random.randint(jax.random.fold_in(key, 2), (1, 1), 0, cfg.vocab)
+    pos = jnp.array([t], jnp.int32)
+    a, _, _, _ = M.incremental_forward(cfg, ps, nxt, kv_clean, pos, nm)
+    bb, _, _, _ = M.incremental_forward(cfg, ps, nxt, kv_dirty, pos, nm)
+    np.testing.assert_allclose(a, bb, rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 0.9))
+@settings(**SETTINGS)
+def test_ffn_mask_union_semantics(seed, density):
+    """incremental_forward's ffn_mask output is the union over the chunk's
+    tokens and never exceeds the supplied neuron mask."""
+    cfg = _cfg("opt", "relu", 0)
+    ps = M.init_params(cfg, 7)
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(jax.random.fold_in(key, 0), (1, 5), 0, cfg.vocab)
+    nm = (jax.random.uniform(jax.random.fold_in(key, 1),
+                             (cfg.n_layers, cfg.d_ff)) < density).astype(jnp.float32)
+    kv = jnp.zeros(M.kv_shape(cfg, 1), jnp.float32)
+    _, _, fm_all, _ = M.incremental_forward(
+        cfg, ps, toks, kv, jnp.zeros((1,), jnp.int32), nm)
+    assert float(jnp.max(fm_all * (1.0 - nm[:, None, :]))) == 0.0
+    # union property: processing token-by-token and OR-ing equals the chunk mask
+    kv = jnp.zeros(M.kv_shape(cfg, 1), jnp.float32)
+    acc = jnp.zeros_like(fm_all)
+    for i in range(5):
+        _, kv, fm, _ = M.incremental_forward(
+            cfg, ps, toks[:, i:i + 1], kv, jnp.array([i], jnp.int32), nm)
+        acc = jnp.maximum(acc, fm)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(fm_all))

@@ -1,0 +1,119 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, activations and mask densities; assert_allclose
+against ref.py is the contract that lets the L2 model use the kernel on the
+serve path and the oracle on the autodiff path interchangeably.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.activations import ACT_NAMES
+from compile.kernels import ref
+from compile.kernels.ffn import ffn_pallas, gated_ffn_pallas, pick_tile, vmem_bytes
+from compile.kernels.matvec import masked_matvec_pallas
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(key, *shape, scale=0.25):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def _mask(key, f, density):
+    return (jax.random.uniform(key, (f,)) < density).astype(jnp.float32)
+
+
+@st.composite
+def ffn_shapes(draw):
+    bt = draw(st.sampled_from([1, 2, 3, 4, 8, 24, 64]))
+    d = draw(st.sampled_from([4, 8, 16, 32]))
+    f = draw(st.sampled_from([4, 16, 48, 64, 96, 256]))
+    act = draw(st.sampled_from(ACT_NAMES))
+    density = draw(st.sampled_from([0.0, 0.3, 1.0]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return bt, d, f, act, density, seed
+
+
+@given(ffn_shapes())
+@settings(**SETTINGS)
+def test_ffn_matches_ref(params):
+    bt, d, f, act, density, seed = params
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 5)
+    x = _rand(ks[0], bt, d, scale=1.0)
+    wu, bu, wd = _rand(ks[1], d, f), _rand(ks[2], f), _rand(ks[3], f, d)
+    m = _mask(ks[4], f, density)
+    out, pre = ffn_pallas(x, wu, bu, wd, m, act)
+    out_r, pre_r = ref.ffn_ref(x, wu, bu, wd, m, act)
+    np.testing.assert_allclose(out, out_r, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(pre, pre_r, rtol=3e-5, atol=3e-5)
+
+
+@given(ffn_shapes())
+@settings(**SETTINGS)
+def test_gated_ffn_matches_ref(params):
+    bt, d, f, act, density, seed = params
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 5)
+    x = _rand(ks[0], bt, d, scale=1.0)
+    wg, wu, wd = _rand(ks[1], d, f), _rand(ks[2], d, f), _rand(ks[3], f, d)
+    m = _mask(ks[4], f, density)
+    out, pre = gated_ffn_pallas(x, wg, wu, wd, m, act)
+    out_r, pre_r = ref.gated_ffn_ref(x, wg, wu, wd, m, act)
+    np.testing.assert_allclose(out, out_r, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(pre, pre_r, rtol=3e-5, atol=3e-5)
+
+
+@given(st.sampled_from([4, 16, 48, 256]), st.sampled_from([4, 16, 32]),
+       st.sampled_from([0.0, 0.1, 0.5, 1.0]), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_matvec_matches_ref(f, d, density, seed):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 3)
+    w, a = _rand(ks[0], f, d), _rand(ks[1], f, scale=1.0)
+    m = _mask(ks[2], f, density)
+    y = masked_matvec_pallas(w, a, m)
+    np.testing.assert_allclose(y, ref.masked_matvec_ref(w, a, m),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_zero_mask_kills_output():
+    """All-dead neuron mask => FFN output is exactly zero (the row-skip
+    guarantee the rust cost model relies on)."""
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 4)
+    x = _rand(ks[0], 8, 16, scale=1.0)
+    wu, bu, wd = _rand(ks[1], 16, 64), _rand(ks[2], 64), _rand(ks[3], 64, 16)
+    out, _ = ffn_pallas(x, wu, bu, wd, jnp.zeros((64,)), "gelu")
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_mask_is_row_structured():
+    """Masking neuron j is equivalent to zeroing row j of w_down."""
+    k = jax.random.PRNGKey(1)
+    ks = jax.random.split(k, 5)
+    x = _rand(ks[0], 4, 8, scale=1.0)
+    wu, bu, wd = _rand(ks[1], 8, 32), _rand(ks[2], 32), _rand(ks[3], 32, 8)
+    m = _mask(ks[4], 32, 0.5)
+    out_masked, _ = ffn_pallas(x, wu, bu, wd, m, "relu")
+    wd_zeroed = wd * m[:, None]
+    out_rows, _ = ffn_pallas(x, wu, bu, wd_zeroed, jnp.ones((32,)), "relu")
+    np.testing.assert_allclose(out_masked, out_rows, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,expected", [(128, 128), (96, 32), (7, 7), (1, 1),
+                                        (384, 128), (24, 8)])
+def test_pick_tile(n, expected):
+    assert pick_tile(n, (128, 64, 32, 16, 8, 7, 4, 2, 1)) == expected
+    assert n % pick_tile(n, (128, 64, 32, 16, 8, 7, 4, 2, 1)) == 0
+
+
+def test_vmem_budget():
+    """The production tile choices stay under a 16MB VMEM budget (double
+    buffered) — the §Perf L1 constraint from DESIGN.md."""
+    for bt, bf, d in [(128, 256, 768), (128, 256, 256), (64, 128, 4096)]:
+        assert vmem_bytes(bt, bf, d) < 16 * 2**20, (bt, bf, d)

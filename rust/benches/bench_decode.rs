@@ -1,0 +1,93 @@
+//! Table 1 latency column + serving-path microbenchmarks: per-entry PJRT
+//! execution times (prefill / decode / verify / score) for the base models,
+//! plus the engine's end-to-end decode step. Establishes the L3 overhead
+//! budget for EXPERIMENTS.md §Perf (engine step minus raw decode execute).
+
+use std::sync::Arc;
+
+use rsb::bench::Harness;
+use rsb::engine::{Engine, EngineConfig};
+use rsb::figures::ensure_data;
+use rsb::runtime::{artifacts_dir, cpu_client, Arg, Model, Tensor};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("bench_decode: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> rsb::Result<()> {
+    let client = cpu_client()?;
+    let artifacts = artifacts_dir(None);
+    let mut h = Harness::new("decode_path");
+    for id in ["base_opt_relu_s0", "base_opt_relu_s2", "base_llama_silu_s0"] {
+        let Ok(model) = Model::open(client.clone(), &artifacts, id) else {
+            println!("[skip] {id}: artifacts missing");
+            continue;
+        };
+        let model = Arc::new(model);
+        let mut params = model.init_params(0)?;
+        params.upload(model.client())?;
+        let c = model.manifest.config.clone();
+        let b = model.manifest.buckets.clone();
+        let args_of = |extra: Vec<Tensor>| -> (Vec<Tensor>, ()) { (extra, ()) };
+        let _ = args_of;
+
+        // raw decode entry (batched)
+        let decode = model.entry("decode")?;
+        let kv_shape = model.manifest.kv_shape(b.decode_b);
+        let kv = Tensor::zeros_f32(kv_shape);
+        let pos = Tensor::i32(vec![b.decode_b], vec![8; b.decode_b].iter().map(|&x| x as i32).collect())?;
+        let toks = Tensor::i32(vec![b.decode_b, 1], vec![5; b.decode_b])?;
+        let mask = Tensor::ones_f32(vec![c.n_layers, c.d_ff]);
+        h.bench_items(&format!("{id}/decode_b{}", b.decode_b), b.decode_b as f64, |_| {
+            let mut a: Vec<Arg> = params.buffers().unwrap().iter().map(Arg::Device).collect();
+            a.push(Arg::Host(&kv));
+            a.push(Arg::Host(&pos));
+            a.push(Arg::Host(&toks));
+            a.push(Arg::Host(&mask));
+            std::hint::black_box(decode.execute(&a).expect("decode"));
+        });
+
+        // prefill
+        let prefill = model.entry("prefill")?;
+        let ptoks = Tensor::i32(vec![1, b.prefill_t], vec![5; b.prefill_t])?;
+        h.bench_items(&format!("{id}/prefill_t{}", b.prefill_t), b.prefill_t as f64, |_| {
+            let mut a: Vec<Arg> = params.buffers().unwrap().iter().map(Arg::Device).collect();
+            a.push(Arg::Host(&ptoks));
+            std::hint::black_box(prefill.execute(&a).expect("prefill"));
+        });
+
+        // verify (multi-token target pass for speculative decoding)
+        if let Ok(verify) = model.entry("verify") {
+            let kv1 = Tensor::zeros_f32(model.manifest.kv_shape(1));
+            let vpos = Tensor::i32(vec![1], vec![8])?;
+            let vtoks = Tensor::i32(vec![1, b.verify_g], vec![5; b.verify_g])?;
+            h.bench_items(&format!("{id}/verify_g{}", b.verify_g), b.verify_g as f64, |_| {
+                let mut a: Vec<Arg> =
+                    params.buffers().unwrap().iter().map(Arg::Device).collect();
+                a.push(Arg::Host(&kv1));
+                a.push(Arg::Host(&vpos));
+                a.push(Arg::Host(&vtoks));
+                a.push(Arg::Host(&mask));
+                std::hint::black_box(verify.execute(&a).expect("verify"));
+            });
+        }
+
+        // engine end-to-end step at full occupancy
+        let params_fresh = model.init_params(0)?;
+        let mut engine = Engine::new(model.clone(), params_fresh, EngineConfig::default())?;
+        for i in 0..engine.decode_b {
+            engine.submit(vec![5 + i as u32; 8], usize::MAX / 2);
+        }
+        engine.step()?; // admit + first step
+        h.bench_items(&format!("{id}/engine_step_b{}", engine.decode_b), engine.decode_b as f64, |_| {
+            std::hint::black_box(engine.step().expect("step"));
+        });
+    }
+    h.report();
+    h.write_csv(&rsb::default_runs_dir().join("bench"))?;
+    let _ = ensure_data;
+    Ok(())
+}

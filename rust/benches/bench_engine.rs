@@ -1,0 +1,83 @@
+//! L3 coordinator microbenchmarks: the non-PJRT parts of the hot loop
+//! (KV pack/extract, slot churn, sampling, tracker updates, mask building).
+//! §Perf target: all of this together must be negligible next to the PJRT
+//! execute in the decode step.
+
+use rsb::bench::Harness;
+use rsb::engine::kv::{KvBatch, SlotManager};
+use rsb::engine::request::SamplingParams;
+use rsb::engine::sampler::sample;
+use rsb::runtime::Tensor;
+use rsb::sparsity::AggregatedTracker;
+use rsb::util::rng::Rng;
+
+fn main() {
+    let mut h = Harness::new("engine_micro");
+    // base-model shapes
+    let (l, b, heads, tmax, hd, dff, vocab) = (6usize, 4usize, 8usize, 96usize, 32usize, 1024usize, 2048usize);
+
+    let mut kv = KvBatch::new(&[l, 2, b, heads, tmax, hd]).expect("kv");
+    let row = Tensor::zeros_f32(vec![l, 2, 1, heads, tmax, hd]);
+    h.bench("kv_pack_row", || {
+        kv.pack_row(2, &row).expect("pack");
+    });
+    h.bench("kv_extract_row", || {
+        std::hint::black_box(kv.extract_row(1).expect("extract"));
+    });
+    h.bench("kv_to_tensor", || {
+        std::hint::black_box(kv.to_tensor());
+    });
+    let full = kv.to_tensor();
+    h.bench("kv_update_from", || {
+        kv.update_from(&full).expect("update");
+    });
+
+    h.bench("slot_churn_1k", || {
+        let mut s = SlotManager::new(8);
+        for i in 0..1000u64 {
+            if let Some(slot) = s.alloc(i) {
+                if i % 3 == 0 {
+                    s.release(slot).expect("release");
+                }
+            } else {
+                // free the lowest occupied
+                let (slot, _) = s.occupied().next().unwrap();
+                s.release(slot).expect("release");
+            }
+        }
+    });
+
+    let mut rng = Rng::new(1);
+    let logits: Vec<f32> = (0..vocab).map(|_| rng.normal() as f32).collect();
+    let greedy = SamplingParams::default();
+    let topk = SamplingParams {
+        temperature: 0.8,
+        top_k: 40,
+        seed: 0,
+    };
+    h.bench_items("sample_greedy", 1.0, |_| {
+        std::hint::black_box(sample(&logits, &greedy, &mut rng));
+    });
+    h.bench_items("sample_topk40", 1.0, |_| {
+        std::hint::black_box(sample(&logits, &topk, &mut rng));
+    });
+
+    let mut tracker = AggregatedTracker::new(l, dff);
+    let mut mdata = vec![0.0f32; l * b * dff];
+    for (i, v) in mdata.iter_mut().enumerate() {
+        if i % 7 == 0 {
+            *v = 1.0;
+        }
+    }
+    let mask = Tensor::f32(vec![l, b, dff], mdata).expect("mask");
+    h.bench("tracker_push_mask", || {
+        tracker.push_mask(&mask, 1).expect("push");
+    });
+
+    h.bench("mask_ones_build", || {
+        std::hint::black_box(Tensor::ones_f32(vec![l, dff]));
+    });
+
+    h.report();
+    h.write_csv(&rsb::default_runs_dir().join("bench")).expect("csv");
+}

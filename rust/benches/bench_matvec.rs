@@ -1,0 +1,77 @@
+//! Fig 9a/9b + Fig 1c substrate: measured latency of dense vs row-skipping
+//! GEMV across activation-sparsity levels, overlaid with the App. B
+//! roofline cost model. The paper's claim: latency tracks FLOPS (i.e. live
+//! rows) when the op is memory-bound.
+//!
+//! Emits runs/figures/fig9b.csv with (sparsity, flops, dense_ms,
+//! rowskip_ms, model_ms).
+
+use rsb::bench::Harness;
+use rsb::costmodel::DeviceProfile;
+use rsb::figures::Csv;
+use rsb::sparse::{dense_gemv, rowskip_flops, rowskip_gemv};
+use rsb::util::rng::Rng;
+
+fn main() {
+    // FFN down-projection shape of a 7B-class model scaled to CPU:
+    // [F=8192, d=2048] f32 = 64MB — decisively memory-bound on one core.
+    let (f, d) = (8192usize, 2048usize);
+    let mut rng = Rng::new(1);
+    let w: Vec<f32> = (0..f * d).map(|_| rng.normal() as f32 * 0.02).collect();
+    let mut y = vec![0.0f32; d];
+
+    let mut h = Harness::new("fig9b_matvec");
+    let mut csv = Csv::create(
+        "fig9b.csv",
+        &["sparsity", "gflops", "dense_ms", "rowskip_ms", "model_ms"],
+    )
+    .expect("csv");
+
+    // fit the device profile from the dense run
+    let mut dense_ms = 0.0;
+    {
+        let a: Vec<f32> = (0..f).map(|_| rng.normal() as f32).collect();
+        let r = h.bench_items("dense", (2 * f * d) as f64, |_| {
+            dense_gemv(&w, f, d, &a, &mut y);
+            std::hint::black_box(&y);
+        });
+        dense_ms = r.mean_s() * 1e3;
+    }
+    let measured_bw = (f * d * 4) as f64 / (dense_ms / 1e3); // bytes/s
+    let profile = DeviceProfile {
+        mem_bw: measured_bw,
+        flops: 2.0 * measured_bw / 4.0, // 2 FLOPs per 4 weight bytes at roofline
+        overhead: 2e-6,
+    };
+
+    for sparsity in [0.0, 0.5, 0.8, 0.9, 0.95, 0.99] {
+        let a: Vec<f32> = (0..f)
+            .map(|_| {
+                if rng.chance(1.0 - sparsity) {
+                    rng.normal() as f32
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let flops = rowskip_flops(&a, d) as f64;
+        let name = format!("rowskip_s{:.0}", sparsity * 100.0);
+        let r = h.bench_items(&name, flops.max(1.0), |_| {
+            rowskip_gemv(&w, f, d, &a, &mut y);
+            std::hint::black_box(&y);
+        });
+        let rowskip_ms = r.mean_s() * 1e3;
+        let model_ms = profile.latency(flops / 2.0 * 4.0, flops) * 1e3;
+        csv.rowf(&[sparsity, flops / 1e9, dense_ms, rowskip_ms, model_ms])
+            .expect("row");
+    }
+    h.report();
+    csv.done();
+    println!(
+        "\nfitted CPU profile: mem bw {:.2} GB/s (dense GEMV {:.2} ms)",
+        measured_bw / 1e9,
+        dense_ms
+    );
+    println!("Expected (paper Fig 9b): rowskip_ms ≈ model_ms ∝ (1 − sparsity).");
+    h.write_csv(&rsb::default_runs_dir().join("bench")).expect("csv");
+}

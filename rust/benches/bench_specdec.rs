@@ -1,0 +1,80 @@
+//! Fig 7d / Fig 10 bench: wall-clock of autoregressive vs speculative vs
+//! sparse-speculative decoding on the real draft/target pair, plus the
+//! analytic speedups from measured (α, c, s̄_agg).
+
+use std::sync::Arc;
+
+use rsb::bench::Harness;
+use rsb::costmodel::specdec::{thm1_speedup_vs_standard, thm2_speedup_vs_autoregressive};
+use rsb::engine::{AcceptMode, SpecDecoder, VerifyMask};
+use rsb::figures::{ensure_data, shared_checkpoint};
+use rsb::runtime::{artifacts_dir, cpu_client, Model};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("bench_specdec: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> rsb::Result<()> {
+    let client = cpu_client()?;
+    let artifacts = artifacts_dir(None);
+    let target = Arc::new(Model::open(client.clone(), &artifacts, "base_opt_relu_s0")?);
+    let draft = Arc::new(Model::open(client, &artifacts, "draft_opt_relu_s0")?);
+    let (ds, _bpe) = ensure_data(target.manifest.config.vocab, 2_000_000, 42)?;
+    let load = |m: &Arc<Model>, id: &str| -> rsb::Result<rsb::runtime::ParamStore> {
+        let ckpt = shared_checkpoint(id, "pretrained");
+        if ckpt.exists() {
+            m.load_params(&ckpt)
+        } else {
+            m.init_params(0)
+        }
+    };
+    let prompt = ds.val_document(0, 32);
+    let n_tokens = std::env::var("RSB_BENCH_SPECDEC_TOKENS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(48);
+
+    let mut h = Harness::new("specdec");
+    for gamma in [2usize, 4, 7] {
+        for (name, mask) in [
+            ("dense", VerifyMask::Dense),
+            ("sparse", VerifyMask::Aggregated { window: 32 }),
+        ] {
+            let mut alpha = 0.0;
+            let mut c = 0.0;
+            let mut s_agg = 0.0;
+            h.bench_items(&format!("specdec_g{gamma}_{name}"), n_tokens as f64, |i| {
+                let mut dec = SpecDecoder::new(
+                    target.clone(),
+                    load(&target, "base_opt_relu_s0").expect("params"),
+                    draft.clone(),
+                    load(&draft, "draft_opt_relu_s0").expect("params"),
+                    gamma,
+                    AcceptMode::Greedy,
+                    mask,
+                    i as u64,
+                )
+                .expect("decoder");
+                let (toks, stats) = dec.generate(&prompt, n_tokens).expect("generate");
+                std::hint::black_box(toks);
+                alpha = stats.acceptance_rate();
+                c = stats.c_measured;
+                s_agg = stats.s_agg_gamma;
+            });
+            if name == "sparse" {
+                println!(
+                    "gamma={gamma}: measured alpha={alpha:.2} c={c:.3} s_agg={s_agg:.2} | \
+                     Thm1 sparse-vs-standard {:.3}x | Thm2 vs autoregressive {:.2}x",
+                    thm1_speedup_vs_standard(c, gamma, s_agg),
+                    thm2_speedup_vs_autoregressive(c, gamma, s_agg, alpha),
+                );
+            }
+        }
+    }
+    h.report();
+    h.write_csv(&rsb::default_runs_dir().join("bench"))?;
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Tokenizer + data-pipeline bench: BPE train/encode/decode throughput and
+//! corpus generation rate. These sit on the serving request path (encode)
+//! and the training data path (generation + batching).
+
+use rsb::bench::Harness;
+use rsb::data::{Dataset, Generator};
+use rsb::tokenizer::Bpe;
+use rsb::util::rng::Rng;
+
+fn main() {
+    let mut h = Harness::new("tokenizer_data");
+    let mut gen = Generator::new(42);
+    let text = gen.corpus(200_000);
+
+    h.bench_items("corpus_gen_100k_chars", 100_000.0, |_| {
+        let mut g = Generator::new(7);
+        std::hint::black_box(g.corpus(100_000));
+    });
+
+    let train_slice = &text[..100_000];
+    h.bench_items("bpe_train_v512_100k", 100_000.0, |_| {
+        std::hint::black_box(Bpe::train(train_slice, 512).expect("train"));
+    });
+
+    let bpe = Bpe::train(train_slice, 512).expect("train");
+    h.bench_items("bpe_encode_100k_chars", 100_000.0, |_| {
+        std::hint::black_box(bpe.encode(train_slice));
+    });
+
+    let ids = bpe.encode(train_slice);
+    h.bench_items("bpe_decode", ids.len() as f64, |_| {
+        std::hint::black_box(bpe.decode(&ids));
+    });
+
+    let ds = Dataset::from_tokens(ids.clone(), bpe.vocab_size());
+    let mut rng = Rng::new(0);
+    h.bench_items("batch_sample_8x8x65", (8 * 8 * 65) as f64, |_| {
+        std::hint::black_box(ds.train_batch(&mut rng, 8, 8, 64).expect("batch"));
+    });
+
+    h.report();
+    h.write_csv(&rsb::default_runs_dir().join("bench")).expect("csv");
+}

@@ -1,0 +1,84 @@
+//! Training-path bench: train_k / score / init entry wall times per model
+//! size — the Fig 2 / relufication pipelines' cost model, and the L2 §Perf
+//! evidence that the K-step scan amortizes the host<->device roundtrip.
+
+use std::sync::Arc;
+
+use rsb::bench::Harness;
+use rsb::figures::ensure_data;
+use rsb::runtime::{artifacts_dir, cpu_client, Arg, Model, Tensor};
+use rsb::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("bench_train: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> rsb::Result<()> {
+    let client = cpu_client()?;
+    let artifacts = artifacts_dir(None);
+    let mut h = Harness::new("train_path");
+    for id in ["tiny_opt_relu_s0", "small_opt_relu_s0", "base_opt_relu_s0"] {
+        let Ok(model) = Model::open(client.clone(), &artifacts, id) else {
+            println!("[skip] {id}");
+            continue;
+        };
+        let model = Arc::new(model);
+        let b = model.manifest.buckets.clone();
+        let n = model.manifest.params.len();
+
+        h.bench(&format!("{id}/init"), || {
+            std::hint::black_box(model.init_params(0).expect("init"));
+        });
+
+        let params = model.init_params(0)?;
+        let (ds, _bpe) = ensure_data(model.manifest.config.vocab, 600_000, 42)?;
+        let mut rng = Rng::new(0);
+        let train_k = model.entry("train_k")?;
+        let zeros: Vec<Tensor> = params
+            .tensors
+            .iter()
+            .map(|t| Tensor::zeros_f32(t.shape.clone()))
+            .collect();
+        let state: Vec<Tensor> = params
+            .tensors
+            .iter()
+            .cloned()
+            .chain(zeros.iter().cloned())
+            .chain(zeros.iter().cloned())
+            .collect();
+        let step = Tensor::scalar_f32(0.0);
+        let lrs = Tensor::f32(vec![b.train_k], vec![1e-4; b.train_k])?;
+        let tokens = ds.train_batch(&mut rng, b.train_k, b.train_b, b.train_t)?;
+        let tokens_per_call = (b.train_k * b.train_b * b.train_t) as f64;
+        h.bench_items(&format!("{id}/train_k{}", b.train_k), tokens_per_call, |_| {
+            let mut a: Vec<Arg> = state.iter().map(Arg::Host).collect();
+            a.push(Arg::Host(&step));
+            a.push(Arg::Host(&lrs));
+            a.push(Arg::Host(&tokens));
+            let outs = train_k.execute(&a).expect("train_k");
+            std::hint::black_box(&outs[3 * n]);
+        });
+
+        let score = model.entry("score")?;
+        let stoks = ds.train_batch(&mut rng, 1, b.score_b, b.train_t)?;
+        let stoks = Tensor::i32(
+            vec![b.score_b, b.train_t + 1],
+            stoks.as_i32()?.to_vec(),
+        )?;
+        h.bench_items(
+            &format!("{id}/score_b{}", b.score_b),
+            (b.score_b * b.train_t) as f64,
+            |_| {
+                let mut a: Vec<Arg> = params.tensors.iter().map(Arg::Host).collect();
+                a.push(Arg::Host(&stoks));
+                std::hint::black_box(score.execute(&a).expect("score"));
+            },
+        );
+    }
+    h.report();
+    h.write_csv(&rsb::default_runs_dir().join("bench"))?;
+    Ok(())
+}

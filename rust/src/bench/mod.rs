@@ -1,0 +1,159 @@
+//! Hand-rolled benchmark harness (criterion is not in the offline crate
+//! set). Provides warmup + timed iterations, percentile reporting, aligned
+//! console tables and CSV export; `benches/*.rs` use `harness = false`.
+
+use std::io::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::stats::Samples;
+use crate::util::{eng, render_table};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub samples: Samples,
+    /// optional throughput denominator (items per iteration)
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.samples.mean()
+    }
+
+    pub fn row(&self) -> Vec<String> {
+        let mean = self.samples.mean();
+        vec![
+            self.name.clone(),
+            format!("{}", self.iters),
+            format!("{:.3}ms", mean * 1e3),
+            format!("{:.3}ms", self.samples.percentile(50.0)* 1e3),
+            format!("{:.3}ms", self.samples.percentile(95.0) * 1e3),
+            format!("{:.3}ms", self.samples.min() * 1e3),
+            if self.items_per_iter > 0.0 {
+                format!("{}/s", eng(self.items_per_iter / mean))
+            } else {
+                "-".into()
+            },
+        ]
+    }
+}
+
+pub struct Harness {
+    pub suite: String,
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Harness {
+    /// Defaults can be overridden with env RSB_BENCH_ITERS / RSB_BENCH_WARMUP
+    /// (the Makefile bench target uses smaller values on CI).
+    pub fn new(suite: &str) -> Harness {
+        let iters = std::env::var("RSB_BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(20);
+        let warmup = std::env::var("RSB_BENCH_WARMUP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(3);
+        Harness {
+            suite: suite.to_string(),
+            warmup,
+            iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (one call = one iteration).
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_items(name, 0.0, move |_| f())
+    }
+
+    /// Time `f` with a throughput denominator (e.g. tokens per iteration).
+    pub fn bench_items(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        mut f: impl FnMut(usize),
+    ) -> &BenchResult {
+        for i in 0..self.warmup {
+            f(i);
+        }
+        let mut samples = Samples::default();
+        for i in 0..self.iters {
+            let t0 = Instant::now();
+            f(i);
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            samples,
+            items_per_iter,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print the suite table to stdout.
+    pub fn report(&self) {
+        println!("\n== bench suite: {} ==", self.suite);
+        let rows: Vec<Vec<String>> = self.results.iter().map(|r| r.row()).collect();
+        print!(
+            "{}",
+            render_table(
+                &["name", "iters", "mean", "p50", "p95", "min", "throughput"],
+                &rows
+            )
+        );
+    }
+
+    /// Write CSV (one row per bench) under `dir/<suite>.csv`.
+    pub fn write_csv(&self, dir: &Path) -> crate::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{}.csv", self.suite)))?;
+        writeln!(f, "name,iters,mean_s,p50_s,p95_s,min_s,items_per_iter")?;
+        for r in &self.results {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{}",
+                r.name,
+                r.iters,
+                r.samples.mean(),
+                r.samples.percentile(50.0),
+                r.samples.percentile(95.0),
+                r.samples.min(),
+                r.items_per_iter
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_iterations() {
+        std::env::remove_var("RSB_BENCH_ITERS");
+        let mut h = Harness::new("t");
+        let mut count = 0;
+        h.bench("noop", || count += 1);
+        assert_eq!(h.results.len(), 1);
+        assert_eq!(count, h.warmup + h.iters);
+        assert!(h.results[0].samples.len() == h.iters);
+    }
+
+    #[test]
+    fn throughput_row() {
+        let mut h = Harness::new("t2");
+        h.bench_items("sleepless", 100.0, |_| {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        let row = h.results[0].row();
+        assert!(row[6].ends_with("/s"));
+    }
+}

@@ -1,0 +1,77 @@
+//! Analytic cost models from the paper's Appendices B and C.
+//!
+//! - `DeviceProfile` + `latency`: the roofline latency model that justifies
+//!   FLOPS as an efficiency proxy under structured sparsity (App. B,
+//!   Fig 9b).
+//! - `specdec`: Theorems 1 & 2 (sparse speculative decoding speedups) and
+//!   optimal-γ selection (Fig 7d, Fig 10a/b).
+
+pub mod specdec;
+
+/// A target device for the latency model. Defaults mirror the paper's A100
+/// testbed; `cpu_measured` is fit from this machine's measured GEMV
+/// bandwidth so Fig 9b can overlay model vs measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceProfile {
+    /// memory bandwidth, bytes/s
+    pub mem_bw: f64,
+    /// compute throughput, FLOP/s
+    pub flops: f64,
+    /// fixed per-kernel launch overhead, seconds
+    pub overhead: f64,
+}
+
+impl DeviceProfile {
+    pub const A100: DeviceProfile = DeviceProfile {
+        mem_bw: 2.0e12,
+        flops: 19.5e12, // fp32
+        overhead: 5e-6,
+    };
+
+    /// Rough single-core CPU profile; refined by measurement in benches.
+    pub const CPU1: DeviceProfile = DeviceProfile {
+        mem_bw: 12e9,
+        flops: 8e9,
+        overhead: 1e-7,
+    };
+
+    /// Roofline latency of an op moving `bytes` and computing `flops`.
+    /// Memory-bound inference ⇒ usually max() = bytes/mem_bw, which is what
+    /// makes row-skipping pay (App. B).
+    pub fn latency(&self, bytes: f64, flops: f64) -> f64 {
+        self.overhead + (bytes / self.mem_bw).max(flops / self.flops)
+    }
+
+    /// Latency of a decode step given per-token weight bytes + FLOPs.
+    pub fn token_latency(&self, bytes_per_token: f64, flops_per_token: f64) -> f64 {
+        self.latency(bytes_per_token, flops_per_token)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_bound_at_batch_one() {
+        let d = DeviceProfile::A100;
+        // 7B params f32: 28GB of weights per token, 14 GFLOPs
+        let lat = d.token_latency(28e9, 14e9);
+        assert!((lat - 28e9 / 2.0e12).abs() / lat < 0.01, "IO dominates");
+    }
+
+    #[test]
+    fn sparsity_scales_latency_linearly_when_memory_bound() {
+        let d = DeviceProfile::A100;
+        let dense = d.token_latency(28e9, 14e9);
+        let sparse = d.token_latency(28e9 * 0.3, 14e9 * 0.3);
+        let ratio = sparse / dense;
+        assert!((ratio - 0.3).abs() < 0.01, "{ratio}");
+    }
+
+    #[test]
+    fn overhead_floors_tiny_ops() {
+        let d = DeviceProfile::A100;
+        assert!(d.latency(1.0, 1.0) >= d.overhead);
+    }
+}

@@ -1,0 +1,134 @@
+//! Speculative-decoding analytics (paper App. C).
+//!
+//! Setup: draft model M_q runs `c` times faster than target M_p; M_q
+//! proposes γ tokens, M_p verifies them in one pass. With aggregated
+//! sparsity s̄_agg(γ) only the non-sparse slice of M_p runs during
+//! verification.
+
+/// Theorem 1: expected latency improvement of *sparse* speculative decoding
+/// over standard speculative decoding: (cγ + 1) / (cγ + (1 − s̄_agg(γ))).
+pub fn thm1_speedup_vs_standard(c: f64, gamma: usize, s_agg: f64) -> f64 {
+    let g = gamma as f64;
+    (c * g + 1.0) / (c * g + (1.0 - s_agg))
+}
+
+/// Expected accepted tokens per verification round (Leviathan et al.):
+/// (1 − α^{γ+1}) / (1 − α).
+pub fn expected_tokens(alpha: f64, gamma: usize) -> f64 {
+    if (alpha - 1.0).abs() < 1e-12 {
+        return gamma as f64 + 1.0;
+    }
+    (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha)
+}
+
+/// Theorem 2: improvement of sparse speculative decoding over plain
+/// autoregressive decoding with M_p:
+/// (1 − α^{γ+1}) / ((cγ + (1 − s̄_agg(γ))) (1 − α)).
+pub fn thm2_speedup_vs_autoregressive(c: f64, gamma: usize, s_agg: f64, alpha: f64) -> f64 {
+    let g = gamma as f64;
+    expected_tokens(alpha, gamma) / (c * g + (1.0 - s_agg))
+}
+
+/// Standard (dense) speculative decoding speedup over autoregressive:
+/// Theorem 2 with s_agg = 0.
+pub fn standard_speedup_vs_autoregressive(c: f64, gamma: usize, alpha: f64) -> f64 {
+    thm2_speedup_vs_autoregressive(c, gamma, 0.0, alpha)
+}
+
+/// Aggregated sparsity of a γ-token window if token activations were i.i.d.
+/// with per-token sparsity `s` (the paper's "random sparsity" baseline):
+/// s^γ.
+pub fn random_aggregated_sparsity(s: f64, gamma: usize) -> f64 {
+    s.powi(gamma as i32)
+}
+
+/// Optimal γ maximizing Theorem 2 for a (possibly measured) aggregated-
+/// sparsity curve; `s_agg(γ)` is supplied as a closure so both analytic and
+/// measured curves plug in (Fig 10a).
+pub fn optimal_gamma(
+    c: f64,
+    alpha: f64,
+    max_gamma: usize,
+    s_agg: impl Fn(usize) -> f64,
+) -> (usize, f64) {
+    let mut best = (1, f64::MIN);
+    for g in 1..=max_gamma {
+        let sp = thm2_speedup_vs_autoregressive(c, g, s_agg(g).clamp(0.0, 1.0), alpha);
+        if sp > best.1 {
+            best = (g, sp);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thm1_matches_paper_case_study() {
+        // §5.2: γ=16, sparse vs standard ≈ 1.27x for OPT 6.7B. With the
+        // paper's c=0.02 this implies s̄_agg(16) ≈ 0.39 solves the equation;
+        // check the functional form instead of the hidden s value:
+        // s_agg=0 => no speedup; s_agg=1 => (cγ+1)/(cγ).
+        assert!((thm1_speedup_vs_standard(0.02, 16, 0.0) - 1.0).abs() < 1e-12);
+        let max = thm1_speedup_vs_standard(0.02, 16, 1.0);
+        assert!((max - (0.32 + 1.0) / 0.32).abs() < 1e-9);
+        // monotone in s_agg
+        assert!(
+            thm1_speedup_vs_standard(0.02, 16, 0.5) < thm1_speedup_vs_standard(0.02, 16, 0.6)
+        );
+    }
+
+    #[test]
+    fn expected_tokens_limits() {
+        assert!((expected_tokens(0.0, 8) - 1.0).abs() < 1e-12);
+        assert!((expected_tokens(1.0, 8) - 9.0).abs() < 1e-12);
+        // α=0.8, γ=12: (1-0.8^13)/0.2 ≈ 4.725
+        assert!((expected_tokens(0.8, 12) - 4.7253).abs() < 1e-3);
+    }
+
+    #[test]
+    fn thm2_reduces_to_standard_at_zero_sparsity() {
+        let a = thm2_speedup_vs_autoregressive(0.02, 10, 0.0, 0.8);
+        let b = standard_speedup_vs_autoregressive(0.02, 10, 0.8);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_fig10_optimal_gammas() {
+        // Fig 10b: α=0.8, c=0.02 — dense optimum near γ=12, sparse optimum
+        // near γ=10 with a decaying aggregated-sparsity curve.
+        let (g_dense, _) = optimal_gamma(0.02, 0.8, 30, |_| 0.0);
+        assert!((10..=14).contains(&g_dense), "{g_dense}");
+        // decaying curve like a relufied OPT (starts ~0.6, decays slowly)
+        let curve = |g: usize| 0.6 * (0.985f64).powi(g as i32 - 1);
+        let (g_sparse, sp) = optimal_gamma(0.02, 0.8, 30, curve);
+        // paper: the sparse optimum sits below the dense one (Fig 10a), by
+        // an amount that depends on how fast s_agg decays
+        assert!(g_sparse < g_dense, "{g_sparse} !< {g_dense}");
+        assert!(g_sparse >= 3);
+        assert!(sp > standard_speedup_vs_autoregressive(0.02, g_dense, 0.8));
+    }
+
+    #[test]
+    fn random_sparsity_diminishes() {
+        // paper §5.2: random sparsity shrinks exponentially with γ
+        let s = 0.97;
+        assert!(random_aggregated_sparsity(s, 1) > 0.9);
+        assert!(random_aggregated_sparsity(s, 64) < 0.15);
+        for g in 1..32 {
+            assert!(
+                random_aggregated_sparsity(s, g + 1) < random_aggregated_sparsity(s, g)
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_beats_standard_for_all_gamma() {
+        for g in 1..=32 {
+            let sp = thm1_speedup_vs_standard(0.05, g, 0.4);
+            assert!(sp > 1.0);
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Token dataset: corpus text -> BPE tokens -> train/val windows + batches.
+
+use std::path::Path;
+
+use crate::data::grammar::Generator;
+use crate::error::Result;
+use crate::runtime::tensor::Tensor;
+use crate::tokenizer::Bpe;
+use crate::util::rng::Rng;
+
+pub struct Dataset {
+    pub train: Vec<u32>,
+    pub val: Vec<u32>,
+    pub vocab_size: usize,
+}
+
+impl Dataset {
+    /// Build the synthlang dataset: generate text, train (or load) the BPE
+    /// tokenizer, encode, split 95/5.
+    pub fn synthetic(seed: u64, target_chars: usize, vocab_size: usize) -> Result<(Dataset, Bpe)> {
+        let mut gen = Generator::new(seed);
+        let text = gen.corpus(target_chars);
+        let bpe = Bpe::train(&text[..text.len().min(200_000)], vocab_size)?;
+        let tokens = bpe.encode(&text);
+        Ok((Self::from_tokens(tokens, bpe.vocab_size()), bpe))
+    }
+
+    /// Same corpus with a pre-trained tokenizer (so model vocab stays fixed
+    /// across experiments).
+    pub fn synthetic_with(bpe: &Bpe, seed: u64, target_chars: usize) -> Dataset {
+        let mut gen = Generator::new(seed);
+        let text = gen.corpus(target_chars);
+        Self::from_tokens(bpe.encode(&text), bpe.vocab_size())
+    }
+
+    pub fn from_tokens(tokens: Vec<u32>, vocab_size: usize) -> Dataset {
+        let split = tokens.len() * 95 / 100;
+        let (train, val) = tokens.split_at(split);
+        Dataset {
+            train: train.to_vec(),
+            val: val.to_vec(),
+            vocab_size,
+        }
+    }
+
+    /// Sample a [K, B, T+1] i32 batch tensor of random training windows.
+    pub fn train_batch(&self, rng: &mut Rng, k: usize, b: usize, t: usize) -> Result<Tensor> {
+        self.windows(&self.train, rng, k * b, t + 1)
+            .map(|flat| Tensor::i32(vec![k, b, t + 1], flat).expect("shape"))
+    }
+
+    /// Sample a [B, T+1] i32 batch from the validation split.
+    pub fn val_batch(&self, rng: &mut Rng, b: usize, t: usize) -> Result<Tensor> {
+        self.windows(&self.val, rng, b, t + 1)
+            .map(|flat| Tensor::i32(vec![b, t + 1], flat).expect("shape"))
+    }
+
+    /// A deterministic contiguous stretch of validation tokens (perplexity
+    /// and reuse experiments want a fixed document).
+    pub fn val_document(&self, offset: usize, len: usize) -> Vec<u32> {
+        let src = &self.val;
+        (0..len).map(|i| src[(offset + i) % src.len()]).collect()
+    }
+
+    fn windows(&self, src: &[u32], rng: &mut Rng, n: usize, width: usize) -> Result<Vec<i32>> {
+        if src.len() < width + 1 {
+            return Err(crate::error::Error::msg(format!(
+                "dataset too small: {} tokens < window {width}",
+                src.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(n * width);
+        for _ in 0..n {
+            let start = rng.below(src.len() - width);
+            out.extend(src[start..start + width].iter().map(|&t| t as i32));
+        }
+        Ok(out)
+    }
+
+    pub fn save_tokens(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut bytes = Vec::with_capacity((self.train.len() + self.val.len()) * 4 + 12);
+        bytes.extend_from_slice(&(self.vocab_size as u32).to_le_bytes());
+        bytes.extend_from_slice(&(self.train.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&(self.val.len() as u32).to_le_bytes());
+        for t in self.train.iter().chain(self.val.iter()) {
+            bytes.extend_from_slice(&t.to_le_bytes());
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn load_tokens(path: &Path) -> Result<Dataset> {
+        let bytes = std::fs::read(path)?;
+        let rd = |i: usize| u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+        let vocab_size = rd(0) as usize;
+        let nt = rd(1) as usize;
+        let nv = rd(2) as usize;
+        let mut train = Vec::with_capacity(nt);
+        let mut val = Vec::with_capacity(nv);
+        for i in 0..nt {
+            train.push(rd(3 + i));
+        }
+        for i in 0..nv {
+            val.push(rd(3 + nt + i));
+        }
+        Ok(Dataset {
+            train,
+            val,
+            vocab_size,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_builds_and_batches() {
+        let (ds, bpe) = Dataset::synthetic(1, 30_000, 256).unwrap();
+        assert!(ds.train.len() > 1000);
+        assert!(ds.val.len() > 50);
+        assert_eq!(ds.vocab_size, bpe.vocab_size());
+        let mut rng = Rng::new(0);
+        let b = ds.train_batch(&mut rng, 2, 3, 16).unwrap();
+        assert_eq!(b.shape, vec![2, 3, 17]);
+        let toks = b.as_i32().unwrap();
+        assert!(toks.iter().all(|&t| t >= 0 && (t as usize) < ds.vocab_size));
+    }
+
+    #[test]
+    fn val_document_wraps() {
+        let ds = Dataset::from_tokens((0..100u32).collect(), 128);
+        let doc = ds.val_document(ds.val.len() - 2, 5);
+        assert_eq!(doc.len(), 5);
+        assert_eq!(doc[2], ds.val[0]);
+    }
+
+    #[test]
+    fn token_file_roundtrip() {
+        let ds = Dataset::from_tokens((0..1000u32).map(|x| x % 97).collect(), 97);
+        let dir = std::env::temp_dir().join(format!("rsb_ds_{}", std::process::id()));
+        let p = dir.join("tokens.bin");
+        ds.save_tokens(&p).unwrap();
+        let ds2 = Dataset::load_tokens(&p).unwrap();
+        assert_eq!(ds.train, ds2.train);
+        assert_eq!(ds.val, ds2.val);
+        assert_eq!(ds.vocab_size, ds2.vocab_size);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batches_are_seed_deterministic() {
+        let (ds, _) = Dataset::synthetic(2, 20_000, 256).unwrap();
+        let a = ds.train_batch(&mut Rng::new(9), 1, 2, 8).unwrap();
+        let b = ds.train_batch(&mut Rng::new(9), 1, 2, 8).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,217 @@
+//! "synthlang": a synthetic PCFG corpus with long-range structure.
+//!
+//! Stands in for RefinedWeb (DESIGN.md §3): rich enough that (a) language-
+//! model loss separates good from bad models, (b) zero-shot tasks (facts,
+//! agreement, copy patterns) are learnable, and (c) FFN neurons specialize,
+//! making aggregated sparsity (§5.1) non-trivial.
+//!
+//! Structure:
+//!   - entity facts fixed per corpus seed: name -> city / food / animal /
+//!     color (support cloze tasks, exercised repeatedly in the corpus);
+//!   - SVO sentences with number agreement (singular/plural verb forms) and
+//!     animacy class selection (multichoice grammaticality tasks);
+//!   - copy/induction segments ("echo : a b c ; a b c .") probing in-context
+//!     reuse (the induction behaviour speculative drafting exploits).
+
+use crate::util::rng::Rng;
+
+pub const NAMES: &[&str] = &[
+    "ada", "bo", "cyr", "dee", "eli", "fay", "gus", "hal", "ivy", "jo",
+    "kai", "lou", "max", "nia", "oz", "pam",
+];
+pub const CITIES: &[&str] = &[
+    "paris", "lima", "oslo", "cairo", "quito", "hanoi", "kyoto", "dakar",
+];
+pub const FOODS: &[&str] = &[
+    "mango", "rice", "soup", "bread", "plum", "corn", "figs", "kale",
+];
+pub const ANIMALS_SG: &[&str] = &["fox", "bird", "cat", "dog", "hen", "owl"];
+pub const ANIMALS_PL: &[&str] = &["foxes", "birds", "cats", "dogs", "hens", "owls"];
+pub const COLORS: &[&str] = &["red", "blue", "green", "gray", "gold", "pink"];
+pub const VERBS_SG: &[&str] = &["chases", "sees", "likes", "follows", "greets"];
+pub const VERBS_PL: &[&str] = &["chase", "see", "like", "follow", "greet"];
+pub const ADJS: &[&str] = &["small", "big", "old", "young", "quick", "calm"];
+pub const COPY_WORDS: &[&str] = &[
+    "alpha", "beta", "gamma", "delta", "kappa", "sigma", "omega", "zeta",
+];
+
+/// The fixed world facts of a corpus instance.
+#[derive(Debug, Clone)]
+pub struct World {
+    pub seed: u64,
+    pub city_of: Vec<usize>,
+    pub food_of: Vec<usize>,
+    pub animal_of: Vec<usize>,
+    pub color_of: Vec<usize>,
+}
+
+impl World {
+    pub fn new(seed: u64) -> World {
+        let mut r = Rng::new(seed ^ 0xFAC7);
+        let assign = |r: &mut Rng, n: usize| -> Vec<usize> {
+            (0..NAMES.len()).map(|_| r.below(n)).collect()
+        };
+        World {
+            seed,
+            city_of: assign(&mut r, CITIES.len()),
+            food_of: assign(&mut r, FOODS.len()),
+            animal_of: assign(&mut r, ANIMALS_SG.len()),
+            color_of: assign(&mut r, COLORS.len()),
+        }
+    }
+}
+
+/// Sentence kinds with their sampling weights.
+const KIND_WEIGHTS: [f64; 6] = [3.0, 2.0, 2.0, 4.0, 2.0, 1.5];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    FactCity,
+    FactFood,
+    FactPet,
+    Svo,
+    SvoPlural,
+    Copy,
+}
+
+pub struct Generator {
+    pub world: World,
+    rng: Rng,
+}
+
+impl Generator {
+    pub fn new(seed: u64) -> Generator {
+        Generator {
+            world: World::new(seed),
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn sentence(&mut self) -> String {
+        let k = self.rng.categorical(&KIND_WEIGHTS);
+        let kind = [
+            Kind::FactCity,
+            Kind::FactFood,
+            Kind::FactPet,
+            Kind::Svo,
+            Kind::SvoPlural,
+            Kind::Copy,
+        ][k];
+        self.sentence_of(kind)
+    }
+
+    pub fn sentence_of(&mut self, kind: Kind) -> String {
+        let w = &self.world;
+        let r = &mut self.rng;
+        match kind {
+            Kind::FactCity => {
+                let n = r.below(NAMES.len());
+                format!("{} lives in {} .", NAMES[n], CITIES[w.city_of[n]])
+            }
+            Kind::FactFood => {
+                let n = r.below(NAMES.len());
+                format!("{} eats {} every day .", NAMES[n], FOODS[w.food_of[n]])
+            }
+            Kind::FactPet => {
+                let n = r.below(NAMES.len());
+                format!(
+                    "{} has a {} {} .",
+                    NAMES[n],
+                    COLORS[w.color_of[n]],
+                    ANIMALS_SG[w.animal_of[n]]
+                )
+            }
+            Kind::Svo => {
+                let a = r.below(ANIMALS_SG.len());
+                let b = r.below(ANIMALS_SG.len());
+                let v = r.below(VERBS_SG.len());
+                let adj = *r.choose(ADJS);
+                format!(
+                    "the {} {} {} the {} .",
+                    adj, ANIMALS_SG[a], VERBS_SG[v], ANIMALS_SG[b]
+                )
+            }
+            Kind::SvoPlural => {
+                let a = r.below(ANIMALS_PL.len());
+                let b = r.below(ANIMALS_SG.len());
+                let v = r.below(VERBS_PL.len());
+                format!("the {} {} the {} .", ANIMALS_PL[a], VERBS_PL[v], ANIMALS_SG[b])
+            }
+            Kind::Copy => {
+                let len = r.range(2, 5);
+                let words: Vec<&str> = (0..len).map(|_| *r.choose(COPY_WORDS)).collect();
+                format!("echo : {} ; {} .", words.join(" "), words.join(" "))
+            }
+        }
+    }
+
+    /// Generate ~`target_chars` of corpus text.
+    pub fn corpus(&mut self, target_chars: usize) -> String {
+        let mut out = String::with_capacity(target_chars + 64);
+        while out.len() < target_chars {
+            out.push_str(&self.sentence());
+            out.push(' ');
+        }
+        out.pop();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_is_deterministic() {
+        let a = World::new(5);
+        let b = World::new(5);
+        assert_eq!(a.city_of, b.city_of);
+        assert_ne!(World::new(6).city_of, a.city_of);
+    }
+
+    #[test]
+    fn facts_are_consistent_across_corpus() {
+        let mut g = Generator::new(3);
+        let city = CITIES[g.world.city_of[0]];
+        for _ in 0..200 {
+            let s = g.sentence_of(Kind::FactCity);
+            if s.starts_with("ada lives in") {
+                assert!(s.contains(city), "{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn copy_sentences_repeat() {
+        let mut g = Generator::new(4);
+        let s = g.sentence_of(Kind::Copy);
+        let parts: Vec<&str> = s
+            .trim_start_matches("echo : ")
+            .trim_end_matches(" .")
+            .split(" ; ")
+            .collect();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0], parts[1]);
+    }
+
+    #[test]
+    fn corpus_reaches_target() {
+        let mut g = Generator::new(7);
+        let c = g.corpus(5000);
+        assert!(c.len() >= 5000);
+        assert!(c.contains(" . "));
+    }
+
+    #[test]
+    fn plural_agreement_forms() {
+        let mut g = Generator::new(8);
+        for _ in 0..50 {
+            let s = g.sentence_of(Kind::SvoPlural);
+            // plural subject must take plural verb form (no trailing -s forms)
+            assert!(
+                VERBS_PL.iter().any(|v| s.contains(&format!(" {v} "))),
+                "{s}"
+            );
+        }
+    }
+}

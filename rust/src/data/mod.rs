@@ -1,0 +1,10 @@
+//! Data substrates: the synthetic corpus (grammar), token dataset/batching,
+//! and the zero/few-shot evaluation task generators.
+
+pub mod dataset;
+pub mod grammar;
+pub mod tasks;
+
+pub use dataset::Dataset;
+pub use grammar::{Generator, World};
+pub use tasks::{Item, TaskKind, ALL_TASKS};

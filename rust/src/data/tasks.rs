@@ -1,0 +1,220 @@
+//! Zero/few-shot evaluation tasks over synthlang (DESIGN.md §3: same
+//! logprob-scoring protocol as the paper's LM-Eval-Harness tasks).
+//!
+//! Task kinds:
+//!   - `ClozeCity` / `ClozeFood`: "ada lives in ___" — candidates = all
+//!     cities/foods, answer from the corpus world (Table 1's knowledge-probe
+//!     analogue, e.g. TriviaQA/LAMBADA).
+//!   - `Agreement`: pick the grammatical continuation among corrupted verb
+//!     forms (HellaSwag/PIQA analogue).
+//!   - `Copy`: induction pattern completion (reading-comprehension analogue).
+//!
+//! Few-shot (Table 2 / MMLU analogue): k solved examples are prepended to
+//! the prompt.
+
+use crate::data::grammar::{
+    World, ANIMALS_PL, ANIMALS_SG, CITIES, FOODS, NAMES, VERBS_PL, VERBS_SG,
+};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    ClozeCity,
+    ClozeFood,
+    Agreement,
+    Copy,
+}
+
+pub const ALL_TASKS: [TaskKind; 4] = [
+    TaskKind::ClozeCity,
+    TaskKind::ClozeFood,
+    TaskKind::Agreement,
+    TaskKind::Copy,
+];
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::ClozeCity => "cloze-city",
+            TaskKind::ClozeFood => "cloze-food",
+            TaskKind::Agreement => "agreement",
+            TaskKind::Copy => "copy",
+        }
+    }
+}
+
+/// One multiple-choice item: shared prompt, candidate continuations, index
+/// of the correct candidate.
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub kind: TaskKind,
+    pub prompt: String,
+    pub candidates: Vec<String>,
+    pub answer: usize,
+}
+
+/// Generate `n` items of the given kind (deterministic in `seed`, disjoint
+/// from training randomness by construction: the *facts* are shared — that
+/// is the point — but the sampled combinations differ).
+pub fn generate(world: &World, kind: TaskKind, n: usize, k_shot: usize, seed: u64) -> Vec<Item> {
+    let mut r = Rng::new(seed ^ 0x7A5C5);
+    (0..n).map(|_| item(world, kind, k_shot, &mut r)).collect()
+}
+
+fn shot_prefix(world: &World, kind: TaskKind, k: usize, r: &mut Rng) -> String {
+    let mut out = String::new();
+    for _ in 0..k {
+        let it = item(world, kind, 0, r);
+        out.push_str(&it.prompt);
+        out.push_str(&it.candidates[it.answer]);
+        out.push(' ');
+    }
+    out
+}
+
+fn item(world: &World, kind: TaskKind, k_shot: usize, r: &mut Rng) -> Item {
+    let prefix = if k_shot > 0 {
+        shot_prefix(world, kind, k_shot, r)
+    } else {
+        String::new()
+    };
+    match kind {
+        TaskKind::ClozeCity => {
+            let n = r.below(NAMES.len());
+            Item {
+                kind,
+                prompt: format!("{prefix}{} lives in", NAMES[n]),
+                candidates: CITIES.iter().map(|c| format!(" {c} .")).collect(),
+                answer: world.city_of[n],
+            }
+        }
+        TaskKind::ClozeFood => {
+            let n = r.below(NAMES.len());
+            Item {
+                kind,
+                prompt: format!("{prefix}{} eats", NAMES[n]),
+                candidates: FOODS.iter().map(|f| format!(" {f} every day .")).collect(),
+                answer: world.food_of[n],
+            }
+        }
+        TaskKind::Agreement => {
+            // plural subject: exactly one plural verb among singular lures
+            let subj = *r.choose(ANIMALS_PL);
+            let obj = *r.choose(ANIMALS_SG);
+            let vi = r.below(VERBS_PL.len());
+            let mut candidates = vec![format!(" {} the {obj} .", VERBS_PL[vi])];
+            let mut lures: Vec<usize> = (0..VERBS_SG.len()).collect();
+            r.shuffle(&mut lures);
+            for &li in lures.iter().take(3) {
+                candidates.push(format!(" {} the {obj} .", VERBS_SG[li]));
+            }
+            // shuffle candidate order, track the answer
+            let mut order: Vec<usize> = (0..candidates.len()).collect();
+            r.shuffle(&mut order);
+            let answer = order.iter().position(|&i| i == 0).unwrap();
+            let shuffled: Vec<String> = order.iter().map(|&i| candidates[i].clone()).collect();
+            Item {
+                kind,
+                prompt: format!("{prefix}the {subj}"),
+                candidates: shuffled,
+                answer,
+            }
+        }
+        TaskKind::Copy => {
+            use crate::data::grammar::COPY_WORDS;
+            let len = r.range(2, 4);
+            let words: Vec<&str> = (0..len).map(|_| *r.choose(COPY_WORDS)).collect();
+            let head = words[..len - 1].join(" ");
+            let target = words[len - 1];
+            let mut candidates = vec![format!(" {target} .")];
+            let mut lures: Vec<&&str> = COPY_WORDS.iter().filter(|w| **w != target).collect();
+            r.shuffle(&mut lures);
+            for w in lures.iter().take(3) {
+                candidates.push(format!(" {} .", **w));
+            }
+            let mut order: Vec<usize> = (0..candidates.len()).collect();
+            r.shuffle(&mut order);
+            let answer = order.iter().position(|&i| i == 0).unwrap();
+            let shuffled: Vec<String> = order.iter().map(|&i| candidates[i].clone()).collect();
+            Item {
+                kind,
+                prompt: format!("{prefix}echo : {} ; {head}", words.join(" ")),
+                candidates: shuffled,
+                answer,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn items_have_valid_answers() {
+        let w = World::new(1);
+        for kind in ALL_TASKS {
+            let items = generate(&w, kind, 20, 0, 3);
+            assert_eq!(items.len(), 20);
+            for it in &items {
+                assert!(it.answer < it.candidates.len(), "{kind:?}");
+                assert!(!it.prompt.is_empty());
+                assert!(it.candidates.iter().all(|c| c.starts_with(' ')));
+            }
+        }
+    }
+
+    #[test]
+    fn cloze_answer_matches_world() {
+        let w = World::new(2);
+        for it in generate(&w, TaskKind::ClozeCity, 30, 0, 4) {
+            let name = it.prompt.split(' ').next().unwrap();
+            let ni = NAMES.iter().position(|n| *n == name).unwrap();
+            assert!(it.candidates[it.answer].contains(CITIES[w.city_of[ni]]));
+        }
+    }
+
+    #[test]
+    fn agreement_answer_is_plural_form() {
+        let w = World::new(3);
+        for it in generate(&w, TaskKind::Agreement, 30, 0, 5) {
+            let ans = &it.candidates[it.answer];
+            assert!(
+                VERBS_PL.iter().any(|v| ans.starts_with(&format!(" {v} "))),
+                "{ans}"
+            );
+        }
+    }
+
+    #[test]
+    fn copy_answer_matches_pattern() {
+        let w = World::new(4);
+        for it in generate(&w, TaskKind::Copy, 30, 0, 6) {
+            // "echo : a b ; a" -> answer must be " b ."
+            let body = it.prompt.split(" : ").nth(1).unwrap();
+            let full: Vec<&str> = body.split(" ; ").next().unwrap().split(' ').collect();
+            let want = format!(" {} .", full.last().unwrap());
+            assert_eq!(it.candidates[it.answer], want);
+        }
+    }
+
+    #[test]
+    fn few_shot_prefix_grows_prompt() {
+        let w = World::new(5);
+        let zero = generate(&w, TaskKind::ClozeCity, 5, 0, 7);
+        let five = generate(&w, TaskKind::ClozeCity, 5, 5, 7);
+        assert!(five[0].prompt.len() > zero[0].prompt.len() * 3);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let w = World::new(6);
+        let a = generate(&w, TaskKind::Copy, 10, 0, 8);
+        let b = generate(&w, TaskKind::Copy, 10, 0, 8);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+}

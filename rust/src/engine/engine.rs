@@ -1,0 +1,328 @@
+//! The serving coordinator: continuous batching over KV slots.
+//!
+//! vLLM-style loop scaled to this testbed: requests enter a FIFO queue;
+//! each `step()` admits queued requests into free KV slots (prefill at B=1,
+//! pack the returned KV row into the batch cache) and then runs ONE batched
+//! decode step for every active slot. Model weights live on the device
+//! (`ParamStore::upload`), so the per-step host traffic is just the KV
+//! cache + small tensors.
+//!
+//! Sparsity integration (the paper's contribution as a first-class serving
+//! feature): every decode step returns the per-slot FFN activation mask;
+//! the engine feeds per-request `AggregatedTracker`s and can apply a
+//! neuron-mask policy (weight reuse, §5.1) to the FFN.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::engine::kv::{KvBatch, SlotManager};
+use crate::engine::metrics::EngineMetrics;
+use crate::engine::request::{
+    ActiveRequest, Completion, FinishReason, Request, SamplingParams,
+};
+use crate::engine::sampler;
+use crate::error::{Error, Result};
+use crate::runtime::{Arg, Entry, Model, ParamStore, Tensor};
+use crate::sparsity::AggregatedTracker;
+use crate::sparsity::SparsityStats;
+use crate::util::rng::Rng;
+
+pub struct EngineConfig {
+    pub default_max_new_tokens: usize,
+    pub eos_token: Option<u32>,
+    /// Track per-request aggregated sparsity (small overhead).
+    pub track_sparsity: bool,
+    /// Fixed FFN neuron mask applied to every decode step (experiments);
+    /// None = all-ones.
+    pub neuron_mask: Option<Tensor>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            default_max_new_tokens: 32,
+            eos_token: None,
+            track_sparsity: true,
+            neuron_mask: None,
+        }
+    }
+}
+
+pub struct Engine {
+    pub model: Arc<Model>,
+    params: ParamStore,
+    prefill: Arc<Entry>,
+    decode: Arc<Entry>,
+    pub decode_b: usize,
+    pub prefill_t: usize,
+    kv: KvBatch,
+    slots: SlotManager,
+    queue: VecDeque<Request>,
+    active: Vec<Option<ActiveRequest>>,
+    trackers: Vec<Option<AggregatedTracker>>,
+    cfg: EngineConfig,
+    pub metrics: EngineMetrics,
+    pub stats: SparsityStats,
+    next_id: u64,
+}
+
+impl Engine {
+    pub fn new(model: Arc<Model>, mut params: ParamStore, cfg: EngineConfig) -> Result<Engine> {
+        params.upload(model.client())?;
+        let prefill = model.entry("prefill")?;
+        // prefer the batched decode entry; fall back to B=1
+        let decode = model.entry("decode").or_else(|_| model.entry("decode1"))?;
+        let kv_spec = decode
+            .spec
+            .inputs
+            .iter()
+            .find(|i| i.name == "kv")
+            .ok_or_else(|| Error::Engine("decode entry lacks kv input".into()))?;
+        let decode_b = kv_spec.shape[2];
+        let prefill_t = prefill
+            .spec
+            .inputs
+            .last()
+            .map(|i| i.shape[1])
+            .ok_or_else(|| Error::Engine("prefill entry lacks tokens input".into()))?;
+        let kv = KvBatch::new(&kv_spec.shape)?;
+        let n_layers = model.manifest.config.n_layers;
+        Ok(Engine {
+            params,
+            prefill,
+            decode,
+            decode_b,
+            prefill_t,
+            kv,
+            slots: SlotManager::new(decode_b),
+            queue: VecDeque::new(),
+            active: (0..decode_b).map(|_| None).collect(),
+            trackers: (0..decode_b).map(|_| None).collect(),
+            stats: SparsityStats::new(n_layers),
+            cfg,
+            metrics: EngineMetrics::default(),
+            next_id: 1,
+            model,
+        })
+    }
+
+    pub fn submit(&mut self, prompt: Vec<u32>, max_new_tokens: usize) -> u64 {
+        self.submit_with(prompt, max_new_tokens, SamplingParams::default())
+    }
+
+    pub fn submit_with(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new_tokens: usize,
+        sampling: SamplingParams,
+    ) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue
+            .push_back(Request::new(id, prompt, max_new_tokens).with_sampling(sampling));
+        self.metrics.requests_enqueued += 1;
+        id
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.slots.free_count() < self.slots.capacity()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.slots.capacity() - self.slots.free_count()
+    }
+
+    /// Take the aggregated-sparsity tracker of a finished slot's request
+    /// (drivers read the curve; cleared on next admission).
+    pub fn tracker_for_slot(&self, slot: usize) -> Option<&AggregatedTracker> {
+        self.trackers.get(slot).and_then(|t| t.as_ref())
+    }
+
+    fn param_args(&self) -> Result<Vec<Arg<'_>>> {
+        let bufs = self
+            .params
+            .buffers()
+            .ok_or_else(|| Error::Engine("params not uploaded".into()))?;
+        Ok(bufs.iter().map(Arg::Device).collect())
+    }
+
+    /// Admit + one batched decode step. Returns completions finished this
+    /// step.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        self.admit()?;
+        let mut done = Vec::new();
+        if self.active_count() == 0 {
+            return Ok(done);
+        }
+        let t0 = std::time::Instant::now();
+
+        // assemble decode inputs
+        let mut pos = vec![0i32; self.decode_b];
+        let mut toks = vec![0i32; self.decode_b];
+        for (slot, a) in self.active.iter().enumerate() {
+            if let Some(a) = a {
+                pos[slot] = a.pos as i32;
+                toks[slot] = a.next_token as i32;
+            }
+        }
+        let kv_t = self.kv.to_tensor();
+        let pos_t = Tensor::i32(vec![self.decode_b], pos)?;
+        let tok_t = Tensor::i32(vec![self.decode_b, 1], toks)?;
+        let mask_t = match &self.cfg.neuron_mask {
+            Some(m) => m.clone(),
+            None => Tensor::ones_f32(vec![
+                self.model.manifest.config.n_layers,
+                self.model.manifest.config.d_ff,
+            ]),
+        };
+        let mut args = self.param_args()?;
+        args.push(Arg::Host(&kv_t));
+        args.push(Arg::Host(&pos_t));
+        args.push(Arg::Host(&tok_t));
+        args.push(Arg::Host(&mask_t));
+        let outs = self.decode.execute(&args)?;
+        let (logits, kv_out, ffn_mask, sparsity) = (&outs[0], &outs[1], &outs[2], &outs[3]);
+        self.kv.update_from(kv_out)?;
+        // batch-level sparsity stats are only meaningful at full occupancy
+        if self.active_count() == self.decode_b {
+            self.stats.push(sparsity)?;
+        }
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.metrics.decode_step_ms.push(step_ms);
+        self.metrics.steps += 1;
+        self.metrics
+            .batch_occupancy
+            .push(self.active_count() as f64 / self.decode_b as f64);
+
+        // sample next tokens per live slot + retire finished requests
+        let vocab = self.model.manifest.config.vocab;
+        let ldata = logits.as_f32()?;
+        for slot in 0..self.decode_b {
+            let Some(a) = &mut self.active[slot] else {
+                continue;
+            };
+            if a.first_token_at.is_none() {
+                a.first_token_at = Some(std::time::Instant::now());
+            }
+            if self.cfg.track_sparsity {
+                if let Some(tr) = &mut self.trackers[slot] {
+                    tr.push_mask(ffn_mask, slot)?;
+                }
+            }
+            // the token just fed is now committed into kv
+            a.pos += 1;
+            let row = &ldata[slot * vocab..(slot + 1) * vocab];
+            let next = sampler::sample(row, &a.request.sampling, &mut a.rng);
+            a.generated.push(a.next_token);
+            // note: generated records fed tokens AFTER first sample; the
+            // first generated token was produced by prefill.
+            a.next_token = next;
+            self.metrics.tokens_generated += 1;
+
+            let finish = if a.generated.len() >= a.request.max_new_tokens {
+                Some(FinishReason::MaxTokens)
+            } else if Some(next) == self.cfg.eos_token {
+                Some(FinishReason::Eos)
+            } else if a.pos + 1 >= self.model.manifest.config.max_seq {
+                Some(FinishReason::ContextFull)
+            } else {
+                None
+            };
+            if let Some(reason) = finish {
+                let a = self.active[slot].take().unwrap();
+                self.slots.release(slot)?;
+                self.kv.clear_row(slot);
+                let total_ms = a.enq_elapsed_ms();
+                self.metrics.requests_completed += 1;
+                if let Some(t) = a.first_token_at {
+                    self.metrics.time_to_first_token_ms.push(
+                        (t - a.request.enqueued_at).as_secs_f64() * 1e3,
+                    );
+                }
+                done.push(Completion {
+                    id: a.request.id,
+                    prompt_len: a.request.prompt.len(),
+                    tokens: a.generated,
+                    finish: reason,
+                    prefill_ms: a.prefill_ms,
+                    total_ms,
+                    queue_ms: 0.0,
+                });
+            }
+        }
+        Ok(done)
+    }
+
+    /// Drive until every queued/active request completes.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut all = Vec::new();
+        while self.has_work() {
+            all.extend(self.step()?);
+        }
+        Ok(all)
+    }
+
+    fn admit(&mut self) -> Result<()> {
+        while self.slots.free_count() > 0 && !self.queue.is_empty() {
+            let req = self.queue.pop_front().unwrap();
+            let slot = self.slots.alloc(req.id).expect("free slot");
+            let t0 = std::time::Instant::now();
+            // clamp the prompt to the prefill bucket, keeping its tail
+            let mut prompt: Vec<u32> = req.prompt.clone();
+            if prompt.is_empty() {
+                prompt.push(crate::tokenizer::BOS);
+            }
+            if prompt.len() > self.prefill_t {
+                prompt.drain(0..prompt.len() - self.prefill_t);
+            }
+            let len = prompt.len();
+            let mut padded = vec![0i32; self.prefill_t];
+            for (i, t) in prompt.iter().enumerate() {
+                padded[i] = *t as i32;
+            }
+            let tok_t = Tensor::i32(vec![1, self.prefill_t], padded)?;
+            let mut args = self.param_args()?;
+            args.push(Arg::Host(&tok_t));
+            let outs = self.prefill.execute(&args)?;
+            let (logits, kv1) = (&outs[0], &outs[1]);
+            self.kv.pack_row(slot, kv1)?;
+            let vocab = self.model.manifest.config.vocab;
+            let ld = logits.as_f32()?;
+            let row = &ld[(len - 1) * vocab..len * vocab];
+            let mut rng = Rng::new(req.sampling.seed).fold_in(req.id);
+            let first = sampler::sample(row, &req.sampling, &mut rng);
+            let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.metrics.prefill_ms.push(prefill_ms);
+            self.metrics
+                .queue_wait_ms
+                .push((t0 - req.enqueued_at).as_secs_f64() * 1e3);
+            if self.cfg.track_sparsity {
+                let c = &self.model.manifest.config;
+                let mut tr = AggregatedTracker::new(c.n_layers, c.d_ff);
+                tr.reset();
+                self.trackers[slot] = Some(tr);
+            }
+            self.active[slot] = Some(ActiveRequest {
+                slot,
+                pos: len,
+                next_token: first,
+                generated: Vec::new(),
+                rng,
+                prefill_ms,
+                first_token_at: None,
+                request: req,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl ActiveRequest {
+    fn enq_elapsed_ms(&self) -> f64 {
+        self.request.enqueued_at.elapsed().as_secs_f64() * 1e3
+    }
+}

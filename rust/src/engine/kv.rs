@@ -1,0 +1,247 @@
+//! KV-cache slot management for the batched decode loop.
+//!
+//! The decode entry's KV cache is a dense tensor [L, 2, B, H, Tmax, hd];
+//! each batch row is a *slot* owned by at most one active request.
+//! `KvBatch` keeps the authoritative host copy (rows are packed in from
+//! B=1 prefill outputs, cleared on free, replaced wholesale after every
+//! decode step), and `SlotManager` tracks ownership with a free list.
+
+use crate::error::{Error, Result};
+use crate::runtime::tensor::Tensor;
+
+/// Host-side KV cache for the decode batch.
+pub struct KvBatch {
+    pub n_layers: usize,
+    pub batch: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    data: Vec<f32>,
+}
+
+impl KvBatch {
+    pub fn new(shape: &[usize]) -> Result<KvBatch> {
+        if shape.len() != 6 || shape[1] != 2 {
+            return Err(Error::Shape {
+                what: "kv batch".into(),
+                expected: vec![0, 2, 0, 0, 0, 0],
+                got: shape.to_vec(),
+            });
+        }
+        let numel: usize = shape.iter().product();
+        Ok(KvBatch {
+            n_layers: shape[0],
+            batch: shape[2],
+            n_heads: shape[3],
+            max_seq: shape[4],
+            head_dim: shape[5],
+            data: vec![0.0; numel],
+        })
+    }
+
+    pub fn shape(&self) -> Vec<usize> {
+        vec![
+            self.n_layers,
+            2,
+            self.batch,
+            self.n_heads,
+            self.max_seq,
+            self.head_dim,
+        ]
+    }
+
+    /// Stride of one batch row inside a (layer, k/v) plane.
+    fn row_elems(&self) -> usize {
+        self.n_heads * self.max_seq * self.head_dim
+    }
+
+    /// Copy a single-sequence KV ([L, 2, 1, H, Tmax, hd], e.g. a prefill
+    /// output) into slot `slot`.
+    pub fn pack_row(&mut self, slot: usize, kv1: &Tensor) -> Result<()> {
+        let want = vec![self.n_layers, 2, 1, self.n_heads, self.max_seq, self.head_dim];
+        if kv1.shape != want {
+            return Err(Error::Shape {
+                what: "pack_row kv".into(),
+                expected: want,
+                got: kv1.shape.clone(),
+            });
+        }
+        if slot >= self.batch {
+            return Err(Error::Engine(format!("slot {slot} out of range")));
+        }
+        let src = kv1.as_f32()?;
+        let row = self.row_elems();
+        for plane in 0..self.n_layers * 2 {
+            let src_base = plane * row;
+            let dst_base = (plane * self.batch + slot) * row;
+            self.data[dst_base..dst_base + row].copy_from_slice(&src[src_base..src_base + row]);
+        }
+        Ok(())
+    }
+
+    /// Extract one slot as a [L, 2, 1, H, Tmax, hd] tensor (speculative
+    /// decoding moves sequences between batch sizes this way).
+    pub fn extract_row(&self, slot: usize) -> Result<Tensor> {
+        if slot >= self.batch {
+            return Err(Error::Engine(format!("slot {slot} out of range")));
+        }
+        let row = self.row_elems();
+        let mut out = Vec::with_capacity(self.n_layers * 2 * row);
+        for plane in 0..self.n_layers * 2 {
+            let base = (plane * self.batch + slot) * row;
+            out.extend_from_slice(&self.data[base..base + row]);
+        }
+        Tensor::f32(
+            vec![self.n_layers, 2, 1, self.n_heads, self.max_seq, self.head_dim],
+            out,
+        )
+    }
+
+    /// Zero a slot (hygiene on free; correctness does not depend on it
+    /// thanks to the overwrite-before-attend invariant, but it makes bugs
+    /// loud).
+    pub fn clear_row(&mut self, slot: usize) {
+        let row = self.row_elems();
+        for plane in 0..self.n_layers * 2 {
+            let base = (plane * self.batch + slot) * row;
+            self.data[base..base + row].fill(0.0);
+        }
+    }
+
+    /// Whole-batch tensor for the decode entry input.
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::f32(self.shape(), self.data.clone()).expect("kv shape")
+    }
+
+    /// Replace the host copy with the decode entry's KV output.
+    pub fn update_from(&mut self, t: &Tensor) -> Result<()> {
+        if t.shape != self.shape() {
+            return Err(Error::Shape {
+                what: "kv update".into(),
+                expected: self.shape(),
+                got: t.shape.clone(),
+            });
+        }
+        self.data.copy_from_slice(t.as_f32()?);
+        Ok(())
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Slot ownership with a free list.
+#[derive(Debug)]
+pub struct SlotManager {
+    owner: Vec<Option<u64>>, // request id
+    free: Vec<usize>,
+}
+
+impl SlotManager {
+    pub fn new(n: usize) -> SlotManager {
+        SlotManager {
+            owner: vec![None; n],
+            free: (0..n).rev().collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn occupied(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.owner
+            .iter()
+            .enumerate()
+            .filter_map(|(i, o)| o.map(|id| (i, id)))
+    }
+
+    pub fn alloc(&mut self, request_id: u64) -> Option<usize> {
+        let slot = self.free.pop()?;
+        debug_assert!(self.owner[slot].is_none());
+        self.owner[slot] = Some(request_id);
+        Some(slot)
+    }
+
+    pub fn release(&mut self, slot: usize) -> Result<u64> {
+        let id = self.owner[slot]
+            .take()
+            .ok_or_else(|| Error::Engine(format!("double free of slot {slot}")))?;
+        self.free.push(slot);
+        Ok(id)
+    }
+
+    pub fn owner_of(&self, slot: usize) -> Option<u64> {
+        self.owner.get(slot).copied().flatten()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv1(shape: &[usize], fill: f32) -> Tensor {
+        let mut t = Tensor::zeros_f32(shape.to_vec());
+        t.as_f32_mut().unwrap().fill(fill);
+        t
+    }
+
+    #[test]
+    fn pack_extract_roundtrip() {
+        let mut kv = KvBatch::new(&[2, 2, 3, 2, 4, 2]).unwrap();
+        let row = kv1(&[2, 2, 1, 2, 4, 2], 7.0);
+        kv.pack_row(1, &row).unwrap();
+        let got = kv.extract_row(1).unwrap();
+        assert_eq!(got, row);
+        // other slots untouched
+        let other = kv.extract_row(0).unwrap();
+        assert!(other.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn clear_row_zeroes_only_that_slot() {
+        let mut kv = KvBatch::new(&[1, 2, 2, 1, 2, 2]).unwrap();
+        kv.pack_row(0, &kv1(&[1, 2, 1, 1, 2, 2], 1.0)).unwrap();
+        kv.pack_row(1, &kv1(&[1, 2, 1, 1, 2, 2], 2.0)).unwrap();
+        kv.clear_row(0);
+        assert!(kv.extract_row(0).unwrap().as_f32().unwrap().iter().all(|&x| x == 0.0));
+        assert!(kv.extract_row(1).unwrap().as_f32().unwrap().iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn update_roundtrip() {
+        let mut kv = KvBatch::new(&[1, 2, 1, 1, 2, 2]).unwrap();
+        let t = kv1(&[1, 2, 1, 1, 2, 2], 3.0);
+        kv.update_from(&t).unwrap();
+        assert_eq!(kv.to_tensor(), t);
+    }
+
+    #[test]
+    fn slot_alloc_free_invariants() {
+        let mut s = SlotManager::new(3);
+        let a = s.alloc(10).unwrap();
+        let b = s.alloc(11).unwrap();
+        let c = s.alloc(12).unwrap();
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert!(s.alloc(13).is_none());
+        assert_eq!(s.release(b).unwrap(), 11);
+        assert!(s.release(b).is_err(), "double free must fail");
+        let d = s.alloc(14).unwrap();
+        assert_eq!(d, b);
+        assert_eq!(s.occupied().count(), 3);
+    }
+
+    #[test]
+    fn kv_rejects_wrong_shapes() {
+        let mut kv = KvBatch::new(&[1, 2, 2, 1, 2, 2]).unwrap();
+        assert!(kv.pack_row(0, &Tensor::zeros_f32(vec![1, 2, 2, 1, 2, 2])).is_err());
+        assert!(kv.update_from(&Tensor::zeros_f32(vec![1, 2, 1, 1, 2, 2])).is_err());
+        assert!(KvBatch::new(&[1, 3, 2, 1, 2, 2]).is_err());
+    }
+}

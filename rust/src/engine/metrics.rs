@@ -1,0 +1,69 @@
+//! Engine observability: latency/throughput/occupancy counters the serving
+//! benches report (Table-1-style latency rows + the serve example output).
+
+use crate::util::stats::Samples;
+
+#[derive(Default)]
+pub struct EngineMetrics {
+    pub requests_enqueued: u64,
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub prefill_ms: Samples,
+    pub decode_step_ms: Samples,
+    pub queue_wait_ms: Samples,
+    pub time_to_first_token_ms: Samples,
+    pub batch_occupancy: Samples,
+    pub steps: u64,
+}
+
+impl EngineMetrics {
+    pub fn tokens_per_sec(&self) -> f64 {
+        let total_s: f64 = self.decode_step_ms.mean() * self.steps as f64 / 1e3;
+        if total_s <= 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / total_s
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {} done / {} enqueued | tokens: {} | prefill p50 {:.1}ms | \
+             decode step p50 {:.2}ms p95 {:.2}ms | ttft p50 {:.1}ms | occupancy {:.2} | \
+             throughput ~{:.1} tok/s",
+            self.requests_completed,
+            self.requests_enqueued,
+            self.tokens_generated,
+            self.prefill_ms.percentile(50.0),
+            self.decode_step_ms.percentile(50.0),
+            self.decode_step_ms.percentile(95.0),
+            self.time_to_first_token_ms.percentile(50.0),
+            self.batch_occupancy.mean(),
+            self.tokens_per_sec(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders() {
+        let mut m = EngineMetrics::default();
+        m.requests_enqueued = 3;
+        m.requests_completed = 2;
+        m.tokens_generated = 40;
+        m.decode_step_ms.push(5.0);
+        m.steps = 20;
+        let r = m.report();
+        assert!(r.contains("2 done / 3"));
+        assert!(r.contains("tokens: 40"));
+    }
+
+    #[test]
+    fn throughput_zero_without_steps() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.tokens_per_sec(), 0.0);
+    }
+}

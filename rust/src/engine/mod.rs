@@ -1,0 +1,22 @@
+//! L3 coordinator: the sparsity-aware serving engine.
+//!
+//! - `engine`: continuous batching loop (admission, KV slots, batched
+//!   decode, sampling, retirement).
+//! - `kv`: KV-cache slot management.
+//! - `sampler`: greedy / temperature / top-k sampling.
+//! - `specdec`: speculative decoding (standard + aggregated-sparsity
+//!   verification).
+//! - `request` / `metrics`: request lifecycle + observability.
+
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod request;
+pub mod sampler;
+pub mod specdec;
+
+pub use engine::{Engine, EngineConfig};
+pub use kv::{KvBatch, SlotManager};
+pub use metrics::EngineMetrics;
+pub use request::{Completion, FinishReason, Request, SamplingParams};
+pub use specdec::{AcceptMode, SpecDecoder, SpecStats, VerifyMask};

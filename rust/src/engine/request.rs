@@ -1,0 +1,92 @@
+//! Request types for the serving engine.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SamplingParams {
+    /// 0.0 = greedy (argmax)
+    pub temperature: f64,
+    /// 0 = no top-k truncation
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    Eos,
+    ContextFull,
+}
+
+/// An inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    pub enqueued_at: std::time::Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            sampling: SamplingParams::default(),
+            enqueued_at: std::time::Instant::now(),
+        }
+    }
+
+    pub fn with_sampling(mut self, s: SamplingParams) -> Request {
+        self.sampling = s;
+        self
+    }
+}
+
+/// A request while it occupies a decode slot.
+#[derive(Debug)]
+pub struct ActiveRequest {
+    pub request: Request,
+    pub slot: usize,
+    /// absolute position of the *next* KV write (== tokens committed so far)
+    pub pos: usize,
+    /// token to feed at the next decode step (last sampled)
+    pub next_token: u32,
+    pub generated: Vec<u32>,
+    pub rng: Rng,
+    pub prefill_ms: f64,
+    pub first_token_at: Option<std::time::Instant>,
+}
+
+/// A finished request with its stats.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    pub prefill_ms: f64,
+    pub total_ms: f64,
+    pub queue_ms: f64,
+}
+
+impl Completion {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.total_ms <= 0.0 {
+            return 0.0;
+        }
+        self.tokens.len() as f64 / (self.total_ms / 1e3)
+    }
+}

@@ -1,0 +1,126 @@
+//! Token sampling over logits rows: greedy, temperature, top-k.
+
+use crate::engine::request::SamplingParams;
+use crate::util::rng::Rng;
+
+/// Argmax with deterministic tie-break (lowest index).
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best
+}
+
+/// Numerically stable softmax probabilities.
+pub fn softmax(logits: &[f32]) -> Vec<f64> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = logits.iter().map(|&x| ((x as f64) - max).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    exps.iter().map(|e| e / sum).collect()
+}
+
+/// Log-softmax (for scoring).
+pub fn log_softmax(logits: &[f32]) -> Vec<f64> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = logits
+        .iter()
+        .map(|&x| ((x as f64) - max).exp())
+        .sum::<f64>()
+        .ln()
+        + max;
+    logits.iter().map(|&x| x as f64 - lse).collect()
+}
+
+/// Sample a token id according to the sampling params.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
+    if params.temperature <= 0.0 {
+        return argmax(logits) as u32;
+    }
+    let inv_t = 1.0 / params.temperature;
+    let mut scaled: Vec<(usize, f64)> = logits
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (i, x as f64 * inv_t))
+        .collect();
+    if params.top_k > 0 && params.top_k < scaled.len() {
+        scaled.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scaled.truncate(params.top_k);
+    }
+    let max = scaled.iter().map(|(_, v)| *v).fold(f64::NEG_INFINITY, f64::max);
+    let weights: Vec<f64> = scaled.iter().map(|(_, v)| (v - max).exp()).collect();
+    let pick = rng.categorical(&weights);
+    scaled[pick].0 as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_tiebreak() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 0.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn log_softmax_consistent() {
+        let l = log_softmax(&[0.5, -1.0, 2.0]);
+        let p = softmax(&[0.5, -1.0, 2.0]);
+        for (a, b) in l.iter().zip(&p) {
+            assert!((a.exp() - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn greedy_at_zero_temperature() {
+        let mut rng = Rng::new(0);
+        let params = SamplingParams::default();
+        for _ in 0..10 {
+            assert_eq!(sample(&[0.0, 5.0, 1.0], &params, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_respects_distribution() {
+        let mut rng = Rng::new(1);
+        let params = SamplingParams {
+            temperature: 1.0,
+            top_k: 0,
+            seed: 0,
+        };
+        let logits = [0.0f32, 3.0, 0.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..2000 {
+            counts[sample(&logits, &params, &mut rng) as usize] += 1;
+        }
+        assert!(counts[1] > counts[0] * 5);
+        assert!(counts[1] > counts[2] * 5);
+    }
+
+    #[test]
+    fn top_k_excludes_tail() {
+        let mut rng = Rng::new(2);
+        let params = SamplingParams {
+            temperature: 1.0,
+            top_k: 2,
+            seed: 0,
+        };
+        let logits = [5.0f32, 4.0, -10.0, -10.0];
+        for _ in 0..200 {
+            let t = sample(&logits, &params, &mut rng);
+            assert!(t < 2, "{t}");
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json parse error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    #[error("artifact not found: {0} (run `make artifacts`)")]
+    ArtifactMissing(String),
+
+    #[error("shape mismatch for {what}: expected {expected:?}, got {got:?}")]
+    Shape {
+        what: String,
+        expected: Vec<usize>,
+        got: Vec<usize>,
+    },
+
+    #[error("entry `{entry}`: expected {expected} {kind}, got {got}")]
+    Arity {
+        entry: String,
+        kind: &'static str,
+        expected: usize,
+        got: usize,
+    },
+
+    #[error("checkpoint: {0}")]
+    Checkpoint(String),
+
+    #[error("tokenizer: {0}")]
+    Tokenizer(String),
+
+    #[error("engine: {0}")]
+    Engine(String),
+
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+}

@@ -1,0 +1,210 @@
+//! Zero/few-shot evaluation harness: the LM-Eval-Harness protocol over
+//! synthlang tasks (DESIGN.md §3). Candidates are scored by teacher-forced
+//! log-probability through the `score` entry; accuracy = argmax over
+//! candidates (length-normalized, like the harness's acc_norm).
+
+use std::sync::Arc;
+
+use crate::data::tasks::{Item, TaskKind};
+use crate::data::World;
+use crate::error::{Error, Result};
+use crate::runtime::{Arg, Model, ParamStore, Tensor};
+use crate::sparsity::SparsityStats;
+use crate::tokenizer::{Bpe, BOS};
+
+/// A scored sequence: tokens padded/aligned into the fixed score bucket.
+struct ScoredSeq {
+    tokens: Vec<i32>,
+    /// NLL indices belonging to the continuation (predicting those tokens)
+    span: (usize, usize),
+}
+
+pub struct EvalHarness {
+    pub model: Arc<Model>,
+    pub bpe: Arc<Bpe>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub kind: &'static str,
+    pub n: usize,
+    pub correct: usize,
+    pub ffn_sparsity: f64,
+    pub qkv_sparsity: f64,
+    pub up_sparsity: f64,
+}
+
+impl TaskResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.n as f64
+        }
+    }
+}
+
+impl EvalHarness {
+    pub fn new(model: Arc<Model>, bpe: Arc<Bpe>) -> EvalHarness {
+        EvalHarness { model, bpe }
+    }
+
+    /// Build the fixed-width [T+1] sequence for prompt+candidate:
+    /// left-pad with BOS, right-align so the continuation tail is always
+    /// in-bucket; returns None if the continuation alone overflows.
+    fn pack(&self, prompt: &[u32], cont: &[u32], width: usize) -> Option<ScoredSeq> {
+        if cont.is_empty() || cont.len() + 1 > width {
+            return None;
+        }
+        let keep_prompt = (width - cont.len()).min(prompt.len());
+        let prompt_tail = &prompt[prompt.len() - keep_prompt..];
+        let pad = width - keep_prompt - cont.len();
+        let mut tokens = vec![BOS as i32; width];
+        for (i, t) in prompt_tail.iter().enumerate() {
+            tokens[pad + i] = *t as i32;
+        }
+        for (i, t) in cont.iter().enumerate() {
+            tokens[pad + keep_prompt + i] = *t as i32;
+        }
+        let start = pad + keep_prompt; // first continuation token position
+        Some(ScoredSeq {
+            tokens,
+            // NLL[t] is the loss of predicting tokens[t+1]
+            span: (start - 1, start - 1 + cont.len()),
+        })
+    }
+
+    /// Mean continuation NLL for a batch of packed sequences.
+    fn score_batch(
+        &self,
+        params: &ParamStore,
+        seqs: &[ScoredSeq],
+        stats: &mut SparsityStats,
+    ) -> Result<Vec<f64>> {
+        let score = self.model.entry("score")?;
+        let b = self.model.manifest.buckets.score_b;
+        let width = self.model.manifest.buckets.train_t + 1;
+        let mut out = Vec::with_capacity(seqs.len());
+        for chunk in seqs.chunks(b) {
+            let mut flat = Vec::with_capacity(b * width);
+            for s in chunk {
+                flat.extend_from_slice(&s.tokens);
+            }
+            // pad the batch with copies of the last row
+            for _ in chunk.len()..b {
+                flat.extend_from_slice(&chunk.last().unwrap().tokens);
+            }
+            let tokens = Tensor::i32(vec![b, width], flat)?;
+            let mut args: Vec<Arg> = params.tensors.iter().map(Arg::Host).collect();
+            args.push(Arg::Host(&tokens));
+            let outs = score.execute(&args)?;
+            stats.push(&outs[1])?;
+            let nll = outs[0].as_f32()?;
+            let t = width - 1;
+            for (i, s) in chunk.iter().enumerate() {
+                let row = &nll[i * t..(i + 1) * t];
+                let (a, bb) = s.span;
+                let sum: f64 = row[a..bb].iter().map(|&x| x as f64).sum();
+                out.push(sum / (bb - a) as f64); // length-normalized
+            }
+        }
+        Ok(out)
+    }
+
+    /// Evaluate one task: accuracy by candidate argmin NLL.
+    pub fn run_task(
+        &self,
+        params: &ParamStore,
+        world: &World,
+        kind: TaskKind,
+        n_items: usize,
+        k_shot: usize,
+        seed: u64,
+    ) -> Result<TaskResult> {
+        let items = crate::data::tasks::generate(world, kind, n_items, k_shot, seed);
+        self.run_items(params, &items)
+    }
+
+    pub fn run_items(&self, params: &ParamStore, items: &[Item]) -> Result<TaskResult> {
+        let width = self.model.manifest.buckets.train_t + 1;
+        let mut stats = SparsityStats::new(self.model.manifest.config.n_layers);
+        let mut correct = 0usize;
+        let mut counted = 0usize;
+        // flatten all candidates of all items into one scoring stream
+        let mut seqs = Vec::new();
+        let mut owners = Vec::new();
+        for (ii, item) in items.iter().enumerate() {
+            let prompt = self.bpe.encode(&item.prompt);
+            for (ci, cand) in item.candidates.iter().enumerate() {
+                let cont = self.bpe.encode(cand);
+                let seq = self
+                    .pack(&prompt, &cont, width)
+                    .ok_or_else(|| Error::msg("candidate overflows score bucket"))?;
+                seqs.push(seq);
+                owners.push((ii, ci));
+            }
+        }
+        let nlls = self.score_batch(params, &seqs, &mut stats)?;
+        // pick argmin per item
+        let mut best: Vec<(f64, usize)> = vec![(f64::INFINITY, usize::MAX); items.len()];
+        for ((ii, ci), nll) in owners.iter().zip(&nlls) {
+            if *nll < best[*ii].0 {
+                best[*ii] = (*nll, *ci);
+            }
+        }
+        for (item, (_, pick)) in items.iter().zip(&best) {
+            counted += 1;
+            if *pick == item.answer {
+                correct += 1;
+            }
+        }
+        let overall = stats.overall();
+        Ok(TaskResult {
+            kind: items.first().map(|i| i.kind.name()).unwrap_or("?"),
+            n: counted,
+            correct,
+            ffn_sparsity: overall.ffn,
+            qkv_sparsity: overall.qkv,
+            up_sparsity: overall.up,
+        })
+    }
+
+    /// Perplexity of a fixed token document via teacher-forced scoring.
+    pub fn perplexity(&self, params: &ParamStore, doc: &[u32]) -> Result<f64> {
+        let width = self.model.manifest.buckets.train_t + 1;
+        let b = self.model.manifest.buckets.score_b;
+        let score = self.model.entry("score")?;
+        let mut total = 0.0;
+        let mut count = 0usize;
+        let mut rows: Vec<Vec<i32>> = Vec::new();
+        let mut i = 0;
+        while i + width <= doc.len() {
+            rows.push(doc[i..i + width].iter().map(|&t| t as i32).collect());
+            i += width - 1; // windows overlap by 1 so every token is scored once
+        }
+        for chunk in rows.chunks(b) {
+            let real = chunk.len();
+            let mut flat = Vec::with_capacity(b * width);
+            for r in chunk {
+                flat.extend_from_slice(r);
+            }
+            for _ in real..b {
+                flat.extend_from_slice(&chunk[real - 1]);
+            }
+            let tokens = Tensor::i32(vec![b, width], flat)?;
+            let mut args: Vec<Arg> = params.tensors.iter().map(Arg::Host).collect();
+            args.push(Arg::Host(&tokens));
+            let outs = score.execute(&args)?;
+            let nll = outs[0].as_f32()?;
+            let t = width - 1;
+            for r in 0..real {
+                total += nll[r * t..(r + 1) * t]
+                    .iter()
+                    .map(|&x| x as f64)
+                    .sum::<f64>();
+                count += t;
+            }
+        }
+        Ok((total / count.max(1) as f64).exp())
+    }
+}

@@ -1,0 +1,103 @@
+//! Figure/table output plumbing: CSV writers + shared experiment helpers
+//! used by examples/ and benches/ to regenerate the paper's plots.
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use crate::error::Result;
+
+/// Where figure CSVs land: `<runs>/figures/`.
+pub fn figures_dir() -> PathBuf {
+    crate::default_runs_dir().join("figures")
+}
+
+/// Simple CSV writer with a fixed header.
+pub struct Csv {
+    file: std::fs::File,
+    pub path: PathBuf,
+    pub cols: usize,
+}
+
+impl Csv {
+    pub fn create(name: &str, headers: &[&str]) -> Result<Csv> {
+        let dir = figures_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(name);
+        let mut file = std::fs::File::create(&path)?;
+        writeln!(file, "{}", headers.join(","))?;
+        Ok(Csv {
+            file,
+            path,
+            cols: headers.len(),
+        })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        debug_assert_eq!(cells.len(), self.cols);
+        writeln!(self.file, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, cells: &[f64]) -> Result<()> {
+        self.row(&cells.iter().map(|c| format!("{c}")).collect::<Vec<_>>())
+    }
+
+    pub fn done(self) -> PathBuf {
+        println!("  wrote {}", self.path.display());
+        self.path
+    }
+}
+
+/// Shared run-artifact locations so examples can hand results to each other
+/// (e.g. relufication checkpoints feeding the spec-decode example).
+pub fn shared_checkpoint(model_id: &str, tag: &str) -> PathBuf {
+    crate::train::checkpoint_path(&crate::default_runs_dir(), model_id, tag)
+}
+
+pub fn shared_tokenizer(vocab: usize) -> PathBuf {
+    crate::default_runs_dir().join(format!("tokenizer.v{vocab}.txt"))
+}
+
+pub fn shared_dataset(vocab: usize) -> PathBuf {
+    crate::default_runs_dir().join(format!("dataset.v{vocab}.bin"))
+}
+
+/// Ensure (tokenizer, dataset) exist for a vocab size, building them from
+/// synthlang if missing; all experiments share these so checkpoints stay
+/// compatible.
+pub fn ensure_data(
+    vocab: usize,
+    target_chars: usize,
+    seed: u64,
+) -> Result<(crate::data::Dataset, crate::tokenizer::Bpe)> {
+    let tok_path = shared_tokenizer(vocab);
+    let ds_path = shared_dataset(vocab);
+    if tok_path.exists() && ds_path.exists() {
+        let bpe = crate::tokenizer::Bpe::load(&tok_path)?;
+        let ds = crate::data::Dataset::load_tokens(&ds_path)?;
+        if ds.train.len() * 3 >= target_chars {
+            // cached dataset is big enough (tokens ≈ chars / ~3)
+            return Ok((ds, bpe));
+        }
+    }
+    let (ds, bpe) = crate::data::Dataset::synthetic(seed, target_chars, vocab)?;
+    bpe.save(&tok_path)?;
+    ds.save_tokens(&ds_path)?;
+    Ok((ds, bpe))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_rows() {
+        std::env::set_var("RSB_RUNS", std::env::temp_dir().join("rsb_fig_test"));
+        let mut c = Csv::create("test.csv", &["a", "b"]).unwrap();
+        c.rowf(&[1.0, 2.5]).unwrap();
+        let p = c.done();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n");
+        std::env::remove_var("RSB_RUNS");
+    }
+}

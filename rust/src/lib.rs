@@ -1,0 +1,57 @@
+//! # relu-strikes-back (`rsb`)
+//!
+//! Reproduction of *"ReLU Strikes Back: Exploiting Activation Sparsity in
+//! Large Language Models"* (ICLR 2024) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! - **L1** (Pallas, build time): fused neuron-masked FFN kernels —
+//!   `python/compile/kernels/`.
+//! - **L2** (JAX, build time): OPT/Llama/Falcon-style model zoo with
+//!   relufication stages, AOT-lowered to HLO text — `python/compile/`.
+//! - **L3** (this crate, runtime): PJRT execution, training driver, the
+//!   sparsity-aware serving engine (continuous batching, KV slots,
+//!   speculative decoding with aggregated-sparsity trimming), cost models,
+//!   and the benchmark/figure harness that regenerates every table and
+//!   figure of the paper.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the model
+//! once, then everything here is self-contained.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod costmodel;
+pub mod data;
+pub mod engine;
+pub mod error;
+pub mod evalx;
+pub mod figures;
+pub mod jsonx;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod sparse;
+pub mod sparsity;
+pub mod tokenizer;
+pub mod train;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Default artifacts directory (`make artifacts` output), relative to the
+/// repository root; override with `--artifacts` or `RSB_ARTIFACTS`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("RSB_ARTIFACTS") {
+        return p.into();
+    }
+    std::path::PathBuf::from("artifacts")
+}
+
+/// Default directory for checkpoints / run logs / figure CSVs.
+pub fn default_runs_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("RSB_RUNS") {
+        return p.into();
+    }
+    std::path::PathBuf::from("runs")
+}

@@ -1,0 +1,267 @@
+//! `rsb` — CLI launcher for the relu-strikes-back stack.
+//!
+//! Subcommands:
+//!   info                         list artifact models + parameter counts
+//!   train     --model <id>       train from scratch on synthlang
+//!   finetune  --model <id> --from <ckpt>   relufication finetune
+//!   eval      --model <id> [--ckpt <path>] zero-shot task suite + ppl
+//!   generate  --model <id> --prompt "..."  sample text
+//!   serve     --model <id> --addr 127.0.0.1:7077   JSON-lines TCP server
+//!   specdec   --target <id> --draft <id>   speculative decoding demo
+//!
+//! Common options: --artifacts <dir> (default ./artifacts), --steps, --lr,
+//! --seed, --ckpt. Examples under examples/ drive the full paper
+//! reproduction; this binary is the day-to-day launcher.
+
+use std::sync::Arc;
+
+use rsb::data::Dataset;
+use rsb::engine::{AcceptMode, Engine, EngineConfig, SamplingParams, SpecDecoder, VerifyMask};
+use rsb::error::Result;
+use rsb::evalx::EvalHarness;
+use rsb::figures::ensure_data;
+use rsb::runtime::{artifacts_dir, cpu_client, Model};
+use rsb::train::{TrainConfig, Trainer};
+use rsb::util::cli::Args;
+
+const FLAGS: &[&str] = &["quiet", "sparse", "help"];
+
+fn main() {
+    let args = Args::from_env(FLAGS);
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "info" => info(args),
+        "train" => train(args, None),
+        "finetune" => {
+            let from = args.require("from")?;
+            train(args, Some(from))
+        }
+        "eval" => eval(args),
+        "generate" => generate(args),
+        "serve" => serve(args),
+        "specdec" => specdec(args),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "rsb — ReLU Strikes Back reproduction (see README.md)
+usage: rsb <info|train|finetune|eval|generate|serve|specdec> [--options]";
+
+fn open_model(args: &Args, key: &str) -> Result<Arc<Model>> {
+    let artifacts = artifacts_dir(args.get("artifacts"));
+    let id = args.str_or(key, "base_opt_relu_s0");
+    Ok(Arc::new(Model::open(cpu_client()?, &artifacts, &id)?))
+}
+
+fn data_for(model: &Model) -> Result<(Dataset, rsb::tokenizer::Bpe)> {
+    let vocab = model.manifest.config.vocab;
+    ensure_data(vocab, 2_000_000, 42)
+}
+
+fn info(args: &Args) -> Result<()> {
+    let artifacts = artifacts_dir(args.get("artifacts"));
+    let models = rsb::runtime::artifact::list_models(&artifacts)?;
+    println!("artifacts dir: {}", artifacts.display());
+    for id in models {
+        match rsb::runtime::Manifest::load(&artifacts.join(&id)) {
+            Ok(m) => println!(
+                "  {id:<28} {:>8} params  entries: {}",
+                rsb::util::eng(m.param_count as f64),
+                m.entries.keys().cloned().collect::<Vec<_>>().join(",")
+            ),
+            Err(e) => println!("  {id:<28} <error: {e}>"),
+        }
+    }
+    Ok(())
+}
+
+fn train(args: &Args, from: Option<String>) -> Result<()> {
+    let model = open_model(args, "model")?;
+    let (ds, _bpe) = data_for(&model)?;
+    let trainer = Trainer::new(model.clone(), Arc::new(ds))?;
+    let steps = args.usize_or("steps", 200)?;
+    let mut cfg = TrainConfig::quick(steps, args.f64_or("lr", 1e-3)?);
+    cfg.seed = args.usize_or("seed", 0)? as u64;
+    cfg.eval_every = args.usize_or("eval-every", steps.max(1) / 4)?;
+    cfg.quiet = args.has("quiet");
+    let ckpt = args.str_or(
+        "ckpt",
+        rsb::figures::shared_checkpoint(&model.manifest.model_id, "latest")
+            .to_str()
+            .unwrap(),
+    );
+    cfg.checkpoint = Some(ckpt.into());
+    let outcome = match from {
+        None => trainer.train(&cfg)?,
+        Some(path) => {
+            let params = model.load_params(std::path::Path::new(&path))?;
+            trainer.train_from(params, &cfg)?
+        }
+    };
+    println!(
+        "done: final loss {:.4} after {} steps ({:.1}s, {} tokens)",
+        outcome.final_train_loss,
+        steps,
+        outcome.wall_secs,
+        rsb::util::eng(outcome.tokens_seen as f64)
+    );
+    Ok(())
+}
+
+fn load_params_arg(model: &Arc<Model>, args: &Args) -> Result<rsb::runtime::ParamStore> {
+    match args.get("ckpt") {
+        Some(p) => model.load_params(std::path::Path::new(p)),
+        None => {
+            let shared =
+                rsb::figures::shared_checkpoint(&model.manifest.model_id, "latest");
+            if shared.exists() {
+                model.load_params(&shared)
+            } else {
+                println!("[warn] no checkpoint found; using random init");
+                model.init_params(args.usize_or("seed", 0)? as u32)
+            }
+        }
+    }
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let model = open_model(args, "model")?;
+    let (ds, bpe) = data_for(&model)?;
+    let params = load_params_arg(&model, args)?;
+    let harness = EvalHarness::new(model.clone(), Arc::new(bpe));
+    let world = rsb::data::World::new(42);
+    let n = args.usize_or("items", 40)?;
+    let k_shot = args.usize_or("shots", 0)?;
+    let mut rows = Vec::new();
+    for kind in rsb::data::ALL_TASKS {
+        let r = harness.run_task(&params, &world, kind, n, k_shot, 7)?;
+        rows.push(vec![
+            r.kind.to_string(),
+            format!("{:.1}%", r.accuracy() * 100.0),
+            format!("{:.1}%", r.ffn_sparsity * 100.0),
+            format!("{:.1}%", r.qkv_sparsity * 100.0),
+        ]);
+    }
+    let doc = ds.val_document(0, 2000);
+    let ppl = harness.perplexity(&params, &doc)?;
+    println!(
+        "{}",
+        rsb::util::render_table(&["task", "acc", "ffn-sparsity", "qkv-sparsity"], &rows)
+    );
+    println!("val perplexity: {ppl:.3}");
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let model = open_model(args, "model")?;
+    let (_ds, bpe) = data_for(&model)?;
+    let params = load_params_arg(&model, args)?;
+    let mut engine = Engine::new(model, params, EngineConfig::default())?;
+    let prompt = args.str_or("prompt", "ada lives in");
+    let max_tokens = args.usize_or("max-tokens", 16)?;
+    let sampling = SamplingParams {
+        temperature: args.f64_or("temperature", 0.0)?,
+        top_k: args.usize_or("top-k", 0)?,
+        seed: args.usize_or("seed", 0)? as u64,
+    };
+    engine.submit_with(bpe.encode(&prompt), max_tokens, sampling);
+    let done = engine.run_to_completion()?;
+    for c in done {
+        println!("prompt: {prompt}");
+        println!("output: {}", bpe.decode(&c.tokens));
+        println!(
+            "  {} tokens, prefill {:.1}ms, total {:.1}ms ({:.1} tok/s)",
+            c.tokens.len(),
+            c.prefill_ms,
+            c.total_ms,
+            c.tokens_per_sec()
+        );
+    }
+    println!("{}", engine.metrics.report());
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let model = open_model(args, "model")?;
+    let (_ds, bpe) = data_for(&model)?;
+    let params = load_params_arg(&model, args)?;
+    let engine = Engine::new(model, params, EngineConfig::default())?;
+    let addr = args.str_or("addr", "127.0.0.1:7077");
+    let max = args.get("max-requests").map(|v| v.parse().unwrap_or(0));
+    rsb::server::serve(engine, Arc::new(bpe), &addr, max, None)?;
+    Ok(())
+}
+
+fn specdec(args: &Args) -> Result<()> {
+    let artifacts = artifacts_dir(args.get("artifacts"));
+    let client = cpu_client()?;
+    let target = Arc::new(Model::open(
+        client.clone(),
+        &artifacts,
+        &args.str_or("target", "base_opt_relu_s0"),
+    )?);
+    let draft = Arc::new(Model::open(
+        client,
+        &artifacts,
+        &args.str_or("draft", "draft_opt_relu_s0"),
+    )?);
+    let (_ds, bpe) = data_for(&target)?;
+    let tp = load_params_named(&target, args, "target-ckpt")?;
+    let dp = load_params_named(&draft, args, "draft-ckpt")?;
+    let gamma = args.usize_or("gamma", 4)?;
+    let mask = if args.has("sparse") {
+        VerifyMask::Aggregated { window: 32 }
+    } else {
+        VerifyMask::Dense
+    };
+    let mut dec = SpecDecoder::new(target, tp, draft, dp, gamma, AcceptMode::Greedy, mask, 0)?;
+    let prompt = bpe.encode(&args.str_or("prompt", "ada lives in"));
+    let n = args.usize_or("max-tokens", 24)?;
+    let (tokens, stats) = dec.generate(&prompt, n)?;
+    println!("output: {}", bpe.decode(&tokens));
+    println!(
+        "rounds {} | drafted {} accepted {} (alpha≈{:.2}) | tokens/round {:.2} | \
+         c measured {:.3} | s_agg(gamma) {:.2}",
+        stats.rounds,
+        stats.drafted,
+        stats.accepted,
+        stats.acceptance_rate(),
+        stats.tokens_per_round(),
+        stats.c_measured,
+        stats.s_agg_gamma,
+    );
+    Ok(())
+}
+
+fn load_params_named(
+    model: &Arc<Model>,
+    args: &Args,
+    key: &str,
+) -> Result<rsb::runtime::ParamStore> {
+    match args.get(key) {
+        Some(p) => model.load_params(std::path::Path::new(p)),
+        None => {
+            let shared =
+                rsb::figures::shared_checkpoint(&model.manifest.model_id, "latest");
+            if shared.exists() {
+                model.load_params(&shared)
+            } else {
+                model.init_params(0)
+            }
+        }
+    }
+}

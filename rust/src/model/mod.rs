@@ -1,0 +1,241 @@
+//! Architecture spec mirror: parameter counts and the paper's per-token
+//! FLOPS accounting, dense and sparsity-aware (Table 1's FLOPS column,
+//! Fig 1c, Fig 12's x-axis).
+//!
+//! Convention (matching the paper and App. B): for a matvec y = x W with
+//! x ∈ R^din sparse, rows of W corresponding to zero entries of x are
+//! skipped, so cost = 2 · nnz(x) · dout FLOPs and nnz(x) · dout · 4 bytes of
+//! weight traffic. Activation sparsity therefore discounts the *input* side
+//! of every projection that follows a sparse vector.
+
+use crate::runtime::artifact::ModelCfg;
+
+/// Per-layer input sparsities, as the L2 model reports them:
+/// `[qkv_in, up_in, ffn_act]` (paper Table 1's three sparsity columns).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerSparsity {
+    pub qkv: f64,
+    pub up: f64,
+    pub ffn: f64,
+}
+
+/// Per-token FLOPS breakdown across projection groups.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Flops {
+    pub qkv: f64,
+    pub attn_out: f64,
+    pub ffn_up: f64,
+    pub ffn_down: f64,
+    pub lm_head: f64,
+    /// score/context matmuls (not weight-bearing; excluded from IO savings)
+    pub attention: f64,
+}
+
+impl Flops {
+    pub fn total(&self) -> f64 {
+        self.qkv + self.attn_out + self.ffn_up + self.ffn_down + self.lm_head + self.attention
+    }
+
+    /// Weight-bearing FLOPs only (the part activation sparsity can skip).
+    pub fn projections(&self) -> f64 {
+        self.qkv + self.attn_out + self.ffn_up + self.ffn_down + self.lm_head
+    }
+}
+
+/// Dense per-token FLOPs for one decode step at context length `ctx`.
+pub fn flops_per_token(cfg: &ModelCfg, ctx: usize) -> Flops {
+    flops_with_sparsity(cfg, ctx, &vec![LayerSparsity::default(); cfg.n_layers])
+}
+
+/// Sparsity-aware per-token FLOPs (paper §4.2 accounting).
+pub fn flops_with_sparsity(cfg: &ModelCfg, ctx: usize, sp: &[LayerSparsity]) -> Flops {
+    assert_eq!(sp.len(), cfg.n_layers);
+    let d = cfg.d_model as f64;
+    let f = cfg.d_ff as f64;
+    let v = cfg.vocab as f64;
+    let c = ctx as f64;
+    let mut out = Flops::default();
+    for s in sp {
+        // QKV: input sparsity (stage 2's ReLU-after-norm) discounts rows.
+        out.qkv += 2.0 * d * (1.0 - s.qkv) * 3.0 * d;
+        // attention output projection: input is the dense attention mix.
+        out.attn_out += 2.0 * d * d;
+        // up (+gate) projection: discounted by post-norm input sparsity.
+        let n_up = if cfg.gated { 2.0 } else { 1.0 };
+        out.ffn_up += 2.0 * d * (1.0 - s.up) * f * n_up;
+        // down projection: discounted by FFN activation sparsity — the
+        // paper's headline row-skipping (Fig 1b).
+        out.ffn_down += 2.0 * f * (1.0 - s.ffn) * d;
+        // attention score + context matmuls at this context length.
+        out.attention += 2.0 * 2.0 * c * d;
+    }
+    out.lm_head = 2.0 * d * v;
+    out
+}
+
+/// Weight-transfer bytes per token (App. B IO accounting, f32 weights).
+pub fn io_bytes_per_token(cfg: &ModelCfg, sp: &[LayerSparsity]) -> f64 {
+    let d = cfg.d_model as f64;
+    let f = cfg.d_ff as f64;
+    let v = cfg.vocab as f64;
+    let mut bytes = 0.0;
+    for s in sp {
+        bytes += 4.0 * d * (1.0 - s.qkv) * 3.0 * d; // qkv rows
+        bytes += 4.0 * d * d; // attn out
+        let n_up = if cfg.gated { 2.0 } else { 1.0 };
+        bytes += 4.0 * d * (1.0 - s.up) * f * n_up; // up/gate rows
+        bytes += 4.0 * f * (1.0 - s.ffn) * d; // down rows (Fig 1b)
+    }
+    bytes + 4.0 * d * v // lm head
+}
+
+/// Mirror of python `param_count` (sanity checks against the manifest).
+pub fn param_count(cfg: &ModelCfg) -> usize {
+    let d = cfg.d_model;
+    let f = cfg.d_ff;
+    let mut n = cfg.vocab * d; // embed (tied lm head)
+    if cfg.arch == "opt" {
+        n += cfg.max_seq * d;
+    }
+    for _ in 0..cfg.n_layers {
+        n += d; // ln1 scale
+        if cfg.arch != "llama" {
+            n += d; // ln1 bias
+        }
+        n += d * 3 * d + d * d; // wqkv + wo
+        if !cfg.parallel_block {
+            n += d; // ln2 scale
+            if cfg.arch != "llama" {
+                n += d;
+            }
+        }
+        if cfg.gated {
+            n += d * f;
+        }
+        n += d * f + f * d;
+        if cfg.has_bias {
+            n += f + d;
+        }
+    }
+    n += d; // final norm scale
+    if cfg.arch != "llama" {
+        n += d;
+    }
+    n
+}
+
+/// Activation-function shapes for Fig 2a/2b (pure math mirror of
+/// python/compile/activations.py — numerics live in L2; this is plotting
+/// support only).
+pub fn act_value(name: &str, x: f64, shift: f64) -> f64 {
+    match name {
+        "relu" => x.max(0.0),
+        "srelu" => (x - shift).max(0.0),
+        "silu" => x / (1.0 + (-x).exp()),
+        "bsilu8" => x / (1.0 + (-8.0 * x).exp()),
+        "gelu" => {
+            let c = 0.7978845608028654;
+            0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+        }
+        _ => f64::NAN,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(arch: &str) -> ModelCfg {
+        ModelCfg {
+            size: "base".into(),
+            arch: arch.into(),
+            act: "relu".into(),
+            stage: 0,
+            d_model: 256,
+            n_layers: 6,
+            n_heads: 8,
+            d_ff: 1024,
+            vocab: 2048,
+            max_seq: 96,
+            shift: 1.0,
+            ffn_act: "relu".into(),
+            gated: arch == "llama",
+            parallel_block: arch == "falcon",
+            has_bias: arch == "opt",
+        }
+    }
+
+    #[test]
+    fn dense_flops_positive_and_ordered() {
+        let c = cfg("opt");
+        let f = flops_per_token(&c, 64);
+        assert!(f.total() > 0.0);
+        assert!(f.projections() < f.total());
+        // FFN dominates projections at these shapes
+        assert!(f.ffn_up + f.ffn_down > f.qkv);
+    }
+
+    #[test]
+    fn sparsity_discounts_monotonically() {
+        let c = cfg("llama");
+        let dense = flops_per_token(&c, 64).total();
+        let sp = vec![
+            LayerSparsity {
+                qkv: 0.5,
+                up: 0.6,
+                ffn: 0.9
+            };
+            6
+        ];
+        let sparse = flops_with_sparsity(&c, 64, &sp).total();
+        assert!(sparse < dense * 0.7, "{sparse} vs {dense}");
+        let sparser = vec![
+            LayerSparsity {
+                qkv: 0.6,
+                up: 0.7,
+                ffn: 0.95
+            };
+            6
+        ];
+        assert!(flops_with_sparsity(&c, 64, &sparser).total() < sparse);
+    }
+
+    #[test]
+    fn io_tracks_ffn_sparsity() {
+        let c = cfg("opt");
+        let dense = io_bytes_per_token(&c, &vec![LayerSparsity::default(); 6]);
+        let sp = vec![
+            LayerSparsity {
+                qkv: 0.0,
+                up: 0.0,
+                ffn: 0.96
+            };
+            6
+        ];
+        let sparse = io_bytes_per_token(&c, &sp);
+        // zeroing 96% of down rows must save ~ d*f*0.96*4 per layer
+        let expected_saving = 6.0 * 4.0 * 1024.0 * 0.96 * 256.0;
+        assert!((dense - sparse - expected_saving).abs() / expected_saving < 1e-9);
+    }
+
+    #[test]
+    fn act_value_shapes() {
+        assert_eq!(act_value("relu", -1.0, 1.0), 0.0);
+        assert_eq!(act_value("relu", 2.0, 1.0), 2.0);
+        assert_eq!(act_value("srelu", 0.5, 1.0), 0.0);
+        assert!((act_value("silu", 0.0, 1.0)).abs() < 1e-12);
+        // Fig 2b ordering at x = -2
+        let x = -2.0;
+        assert!(
+            act_value("silu", x, 1.0).abs() > act_value("gelu", x, 1.0).abs()
+                && act_value("gelu", x, 1.0).abs() > act_value("bsilu8", x, 1.0).abs()
+        );
+    }
+
+    #[test]
+    fn gated_costs_more_up_flops() {
+        let fl = flops_per_token(&cfg("llama"), 1);
+        let fo = flops_per_token(&cfg("opt"), 1);
+        assert!(fl.ffn_up > fo.ffn_up * 1.9);
+    }
+}

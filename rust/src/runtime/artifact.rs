@@ -1,0 +1,232 @@
+//! Manifest parsing: the JSON contract `python/compile/aot.py` writes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::jsonx::{self, Value};
+use crate::runtime::tensor::Dtype;
+
+/// One positional input/output of an entry point.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Mirror of python's ModelConfig (plus derived facts the engine needs).
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub size: String,
+    pub arch: String,
+    pub act: String,
+    pub stage: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub shift: f64,
+    pub ffn_act: String,
+    pub gated: bool,
+    pub parallel_block: bool,
+    pub has_bias: bool,
+}
+
+impl ModelCfg {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Bucket constants baked into the HLO shapes.
+#[derive(Debug, Clone)]
+pub struct Buckets {
+    pub train_k: usize,
+    pub train_b: usize,
+    pub train_t: usize,
+    pub score_b: usize,
+    pub prefill_t: usize,
+    pub decode_b: usize,
+    pub verify_g: usize,
+    pub probe_t: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model_id: String,
+    pub dir: PathBuf,
+    pub config: ModelCfg,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+    pub buckets: Buckets,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+fn io_specs(v: &Value) -> Result<Vec<IoSpec>> {
+    v.as_arr()
+        .ok_or_else(|| Error::Manifest("io list is not an array".into()))?
+        .iter()
+        .map(|item| {
+            Ok(IoSpec {
+                name: item.str_of("name")?,
+                dtype: Dtype::from_manifest(&item.str_of("dtype")?)?,
+                shape: item
+                    .req("shape")?
+                    .as_usize_vec()
+                    .ok_or_else(|| Error::Manifest("bad shape".into()))?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(model_dir: &Path) -> Result<Manifest> {
+        let path = model_dir.join("manifest.json");
+        if !path.exists() {
+            return Err(Error::ArtifactMissing(path.display().to_string()));
+        }
+        let v = jsonx::parse_file(&path)?;
+        let c = v.req("config")?;
+        let config = ModelCfg {
+            size: c.str_of("size")?,
+            arch: c.str_of("arch")?,
+            act: c.str_of("act")?,
+            stage: c.usize_of("stage")?,
+            d_model: c.usize_of("d_model")?,
+            n_layers: c.usize_of("n_layers")?,
+            n_heads: c.usize_of("n_heads")?,
+            d_ff: c.usize_of("d_ff")?,
+            vocab: c.usize_of("vocab")?,
+            max_seq: c.usize_of("max_seq")?,
+            shift: c.f64_of("shift")?,
+            ffn_act: c.str_of("ffn_act")?,
+            gated: c.bool_of("gated")?,
+            parallel_block: c.bool_of("parallel_block")?,
+            has_bias: c.bool_of("has_bias")?,
+        };
+        let b = v.req("buckets")?;
+        let buckets = Buckets {
+            train_k: b.usize_of("train_k")?,
+            train_b: b.usize_of("train_b")?,
+            train_t: b.usize_of("train_t")?,
+            score_b: b.usize_of("score_b")?,
+            prefill_t: b.usize_of("prefill_t")?,
+            decode_b: b.usize_of("decode_b")?,
+            verify_g: b.usize_of("verify_g")?,
+            probe_t: b.usize_of("probe_t")?,
+        };
+        let params = v
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("params not array".into()))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.str_of("name")?,
+                    shape: p
+                        .req("shape")?
+                        .as_usize_vec()
+                        .ok_or_else(|| Error::Manifest("bad param shape".into()))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut entries = BTreeMap::new();
+        if let Value::Obj(pairs) = v.req("entries")? {
+            for (name, ev) in pairs {
+                entries.insert(
+                    name.clone(),
+                    EntrySpec {
+                        name: name.clone(),
+                        file: ev.str_of("file")?,
+                        inputs: io_specs(ev.req("inputs")?)?,
+                        outputs: io_specs(ev.req("outputs")?)?,
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            model_id: v.str_of("model_id")?,
+            dir: model_dir.to_path_buf(),
+            config,
+            param_count: v.usize_of("param_count")?,
+            params,
+            buckets,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries.get(name).ok_or_else(|| {
+            Error::Manifest(format!(
+                "model `{}` has no entry `{name}` (have: {:?})",
+                self.model_id,
+                self.entries.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    pub fn hlo_path(&self, entry: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(entry)?.file))
+    }
+
+    /// KV cache shape for a given batch size: [L, 2, B, H, Tmax, hd].
+    pub fn kv_shape(&self, batch: usize) -> Vec<usize> {
+        let c = &self.config;
+        vec![
+            c.n_layers,
+            2,
+            batch,
+            c.n_heads,
+            c.max_seq,
+            c.head_dim(),
+        ]
+    }
+}
+
+/// List model ids present in an artifacts dir (via index.json or scan).
+pub fn list_models(artifacts: &Path) -> Result<Vec<String>> {
+    let index = artifacts.join("index.json");
+    if index.exists() {
+        let v = jsonx::parse_file(&index)?;
+        if let Some(models) = v.get("models").and_then(|m| m.as_arr()) {
+            return Ok(models
+                .iter()
+                .filter_map(|m| m.as_str().map(|s| s.to_string()))
+                .collect());
+        }
+    }
+    let mut out = Vec::new();
+    if artifacts.exists() {
+        for e in std::fs::read_dir(artifacts)? {
+            let e = e?;
+            if e.path().join("manifest.json").exists() {
+                out.push(e.file_name().to_string_lossy().to_string());
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}

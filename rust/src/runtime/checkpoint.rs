@@ -1,0 +1,158 @@
+//! Checkpoint format: a simple self-describing binary container
+//! (`RSBCKPT1`) holding named f32/i32/u32 tensors. Used for model params,
+//! optimizer state, and tokenizer-adjacent metadata.
+//!
+//! Layout (little endian):
+//!   magic[8] = "RSBCKPT1"
+//!   u32 n_tensors
+//!   repeated: u32 name_len, name bytes, u8 dtype(0=f32,1=i32,2=u32),
+//!             u32 ndim, u64 dims[ndim], payload (numel * 4 bytes)
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::tensor::{Data, Tensor};
+
+const MAGIC: &[u8; 8] = b"RSBCKPT1";
+
+pub fn save(path: &Path, named: &[(String, &Tensor)]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(named.len() as u32).to_le_bytes())?;
+        for (name, t) in named {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            let (code, bytes): (u8, Vec<u8>) = match &t.data {
+                Data::F32(v) => (0, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+                Data::I32(v) => (1, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+                Data::U32(v) => (2, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+            };
+            w.write_all(&[code])?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for d in &t.shape {
+                w.write_all(&(*d as u64).to_le_bytes())?;
+            }
+            w.write_all(&bytes)?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let mut r = BufReader::new(
+        std::fs::File::open(path)
+            .map_err(|e| Error::Checkpoint(format!("{}: {e}", path.display())))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Checkpoint(format!(
+            "{}: bad magic (not an RSBCKPT1 file)",
+            path.display()
+        )));
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 1 << 20 {
+            return Err(Error::Checkpoint("absurd name length".into()));
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)
+            .map_err(|_| Error::Checkpoint("non-utf8 tensor name".into()))?;
+        let mut code = [0u8; 1];
+        r.read_exact(&mut code)?;
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 16 {
+            return Err(Error::Checkpoint("absurd rank".into()));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut payload = vec![0u8; numel * 4];
+        r.read_exact(&mut payload)?;
+        let tensor = match code[0] {
+            0 => Tensor::f32(
+                shape,
+                payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )?,
+            1 => Tensor::i32(
+                shape,
+                payload
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )?,
+            2 => Tensor::u32(
+                shape,
+                payload
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )?,
+            c => return Err(Error::Checkpoint(format!("unknown dtype code {c}"))),
+        };
+        out.push((name, tensor));
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("rsb_ckpt_{}", std::process::id()));
+        let path = dir.join("test.ckpt");
+        let a = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let b = Tensor::i32(vec![4], vec![-1, 0, 1, 2]).unwrap();
+        let c = Tensor::scalar_u32(7);
+        save(
+            &path,
+            &[("a".into(), &a), ("b".into(), &b), ("c".into(), &c)],
+        )
+        .unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded[0].0, "a");
+        assert_eq!(loaded[0].1, a);
+        assert_eq!(loaded[1].1, b);
+        assert_eq!(loaded[2].1, c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("rsb_ckpt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTRIGHT____").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,151 @@
+//! Compiled entry point: HLO text -> PJRT executable + typed execution.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::{EntrySpec, IoSpec};
+use crate::runtime::tensor::Tensor;
+
+/// Argument to an entry execution: host tensor or device-resident buffer.
+pub enum Arg<'a> {
+    Host(&'a Tensor),
+    Device(&'a xla::PjRtBuffer),
+}
+
+/// A compiled entry point with its IO contract.
+pub struct Entry {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: Arc<xla::PjRtClient>,
+    /// Cumulative execute wall time (profiling; see EXPERIMENTS.md §Perf).
+    pub exec_secs: std::cell::Cell<f64>,
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl Entry {
+    pub fn compile(
+        client: Arc<xla::PjRtClient>,
+        spec: EntrySpec,
+        hlo_path: &std::path::Path,
+    ) -> Result<Entry> {
+        if !hlo_path.exists() {
+            return Err(Error::ArtifactMissing(hlo_path.display().to_string()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| Error::msg("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Entry {
+            spec,
+            exe,
+            client,
+            exec_secs: std::cell::Cell::new(0.0),
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+
+    fn check_args(&self, n: usize) -> Result<()> {
+        if n != self.spec.inputs.len() {
+            return Err(Error::Arity {
+                entry: self.spec.name.clone(),
+                kind: "inputs",
+                expected: self.spec.inputs.len(),
+                got: n,
+            });
+        }
+        Ok(())
+    }
+
+    fn check_shape(&self, spec: &IoSpec, t: &Tensor) -> Result<()> {
+        if spec.shape != t.shape {
+            return Err(Error::Shape {
+                what: format!("{}::{}", self.spec.name, spec.name),
+                expected: spec.shape.clone(),
+                got: t.shape.clone(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Execute with mixed host/device args; outputs come back as host
+    /// tensors (the computation root is a tuple; PJRT returns one tuple
+    /// buffer which we decompose).
+    pub fn execute(&self, args: &[Arg]) -> Result<Vec<Tensor>> {
+        self.check_args(args.len())?;
+        // Upload host tensors; keep uploaded buffers alive for the call.
+        let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<usize> = Vec::with_capacity(args.len()); // index into uploaded or marker
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Host(t) => {
+                    self.check_shape(&self.spec.inputs[i], t)?;
+                    uploaded.push(t.to_buffer(&self.client)?);
+                    order.push(uploaded.len()); // 1-based marker for uploaded
+                }
+                Arg::Device(_) => order.push(0),
+            }
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Host(_) => refs.push(&uploaded[order[i] - 1]),
+                Arg::Device(b) => refs.push(b),
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let out = self.exe.execute_b(&refs)?;
+        let root = out
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::msg("no output buffer"))?;
+        let lit = root.to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.exec_secs.set(self.exec_secs.get() + dt);
+        self.exec_count.set(self.exec_count.get() + 1);
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(Error::Arity {
+                entry: self.spec.name.clone(),
+                kind: "outputs",
+                expected: self.spec.outputs.len(),
+                got: parts.len(),
+            });
+        }
+        let mut tensors = Vec::with_capacity(parts.len());
+        for (spec, part) in self.spec.outputs.iter().zip(parts.iter()) {
+            let t = Tensor::from_literal(part)?;
+            if t.shape != spec.shape {
+                return Err(Error::Shape {
+                    what: format!("{}::{} (output)", self.spec.name, spec.name),
+                    expected: spec.shape.clone(),
+                    got: t.shape,
+                });
+            }
+            tensors.push(t);
+        }
+        Ok(tensors)
+    }
+
+    /// Execute with host tensors only.
+    pub fn execute_host(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let wrapped: Vec<Arg> = args.iter().map(|t| Arg::Host(t)).collect();
+        self.execute(&wrapped)
+    }
+
+    /// Upload a tensor once for repeated device-resident use (params).
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        t.to_buffer(&self.client)
+    }
+
+    pub fn mean_exec_ms(&self) -> f64 {
+        let n = self.exec_count.get();
+        if n == 0 {
+            0.0
+        } else {
+            self.exec_secs.get() * 1e3 / n as f64
+        }
+    }
+}

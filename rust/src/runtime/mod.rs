@@ -1,0 +1,119 @@
+//! L3 runtime: load AOT HLO-text artifacts and execute them on the PJRT CPU
+//! client. This is the only module that touches the `xla` crate directly.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//!   manifest.json -> `Manifest`
+//!   <entry>.hlo.txt -> `HloModuleProto::from_text_file` -> compile -> `Entry`
+//!   `Entry::execute(&[Arg])` -> output tuple -> host `Tensor`s
+
+pub mod artifact;
+pub mod checkpoint;
+pub mod entry;
+pub mod params;
+pub mod tensor;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+pub use artifact::{Buckets, EntrySpec, IoSpec, Manifest, ModelCfg, ParamSpec};
+pub use entry::{Arg, Entry};
+pub use params::ParamStore;
+pub use tensor::{Data, Dtype, Tensor};
+
+use crate::error::{Error, Result};
+
+/// A loaded model: manifest + lazily compiled entries on a shared client.
+pub struct Model {
+    pub manifest: Manifest,
+    client: Arc<xla::PjRtClient>,
+    entries: std::cell::RefCell<BTreeMap<String, Arc<Entry>>>,
+}
+
+impl Model {
+    pub fn load(client: Arc<xla::PjRtClient>, model_dir: &Path) -> Result<Model> {
+        let manifest = Manifest::load(model_dir)?;
+        Ok(Model {
+            manifest,
+            client,
+            entries: std::cell::RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Open `<artifacts>/<model_id>`.
+    pub fn open(client: Arc<xla::PjRtClient>, artifacts: &Path, model_id: &str) -> Result<Model> {
+        let dir = artifacts.join(model_id);
+        if !dir.exists() {
+            return Err(Error::ArtifactMissing(format!(
+                "{} (known models: {:?})",
+                dir.display(),
+                artifact::list_models(artifacts).unwrap_or_default()
+            )));
+        }
+        Model::load(client, &dir)
+    }
+
+    pub fn client(&self) -> &Arc<xla::PjRtClient> {
+        &self.client
+    }
+
+    /// Compile (or fetch the cached) entry point.
+    pub fn entry(&self, name: &str) -> Result<Arc<Entry>> {
+        if let Some(e) = self.entries.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.entry(name)?.clone();
+        let hlo = self.manifest.hlo_path(name)?;
+        let e = Arc::new(Entry::compile(self.client.clone(), spec, &hlo)?);
+        self.entries
+            .borrow_mut()
+            .insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Initialize fresh parameters via the `init` entry (XLA-side RNG).
+    pub fn init_params(&self, seed: u32) -> Result<ParamStore> {
+        let init = self.entry("init")?;
+        let seed_t = Tensor::scalar_u32(seed);
+        let outs = init.execute_host(&[&seed_t])?;
+        ParamStore::new(&self.manifest, outs)
+    }
+
+    /// Load parameters from a checkpoint file.
+    pub fn load_params(&self, path: &Path) -> Result<ParamStore> {
+        let named = checkpoint::load(path)?;
+        let by_name: BTreeMap<String, Tensor> = named.into_iter().collect();
+        let mut tensors = Vec::with_capacity(self.manifest.params.len());
+        for spec in &self.manifest.params {
+            let t = by_name.get(&spec.name).ok_or_else(|| {
+                Error::Checkpoint(format!("missing param `{}` in {}", spec.name, path.display()))
+            })?;
+            tensors.push(t.clone());
+        }
+        ParamStore::new(&self.manifest, tensors)
+    }
+
+    /// Save parameters to a checkpoint file.
+    pub fn save_params(&self, path: &Path, params: &ParamStore) -> Result<()> {
+        let named: Vec<(String, &Tensor)> = params
+            .names
+            .iter()
+            .cloned()
+            .zip(params.tensors.iter())
+            .collect();
+        checkpoint::save(path, &named)
+    }
+}
+
+/// Shared PJRT CPU client (one per process).
+pub fn cpu_client() -> Result<Arc<xla::PjRtClient>> {
+    Ok(Arc::new(xla::PjRtClient::cpu()?))
+}
+
+/// Resolve the artifacts directory, preferring CLI override.
+pub fn artifacts_dir(cli: Option<&str>) -> PathBuf {
+    match cli {
+        Some(p) => PathBuf::from(p),
+        None => crate::default_artifacts_dir(),
+    }
+}

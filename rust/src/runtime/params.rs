@@ -1,0 +1,97 @@
+//! Parameter store: the model weights as host tensors with optional
+//! device-resident mirrors (uploaded once, reused across every decode step —
+//! the single biggest L3 hot-path win, see EXPERIMENTS.md §Perf).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::Manifest;
+use crate::runtime::tensor::Tensor;
+
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+    index: BTreeMap<String, usize>,
+    buffers: Option<Vec<xla::PjRtBuffer>>,
+}
+
+impl ParamStore {
+    pub fn new(manifest: &Manifest, tensors: Vec<Tensor>) -> Result<ParamStore> {
+        if tensors.len() != manifest.params.len() {
+            return Err(Error::Arity {
+                entry: "params".into(),
+                kind: "tensors",
+                expected: manifest.params.len(),
+                got: tensors.len(),
+            });
+        }
+        for (spec, t) in manifest.params.iter().zip(&tensors) {
+            if spec.shape != t.shape {
+                return Err(Error::Shape {
+                    what: format!("param {}", spec.name),
+                    expected: spec.shape.clone(),
+                    got: t.shape.clone(),
+                });
+            }
+        }
+        let names: Vec<String> = manifest.params.iter().map(|p| p.name.clone()).collect();
+        let index = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect();
+        Ok(ParamStore {
+            names,
+            tensors,
+            index,
+            buffers: None,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    /// Upload all parameters to the device once; afterwards `buffers()`
+    /// serves them with zero per-step host->device copies.
+    pub fn upload(&mut self, client: &xla::PjRtClient) -> Result<()> {
+        let mut bufs = Vec::with_capacity(self.tensors.len());
+        for t in &self.tensors {
+            bufs.push(t.to_buffer(client)?);
+        }
+        self.buffers = Some(bufs);
+        Ok(())
+    }
+
+    pub fn buffers(&self) -> Option<&[xla::PjRtBuffer]> {
+        self.buffers.as_deref()
+    }
+
+    /// Replace weights in place (after a train/finetune step); invalidates
+    /// device mirrors.
+    pub fn replace(&mut self, tensors: Vec<Tensor>) -> Result<()> {
+        if tensors.len() != self.tensors.len() {
+            return Err(Error::Arity {
+                entry: "params.replace".into(),
+                kind: "tensors",
+                expected: self.tensors.len(),
+                got: tensors.len(),
+            });
+        }
+        self.tensors = tensors;
+        self.buffers = None;
+        Ok(())
+    }
+}

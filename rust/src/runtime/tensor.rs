@@ -1,0 +1,226 @@
+//! Host-side tensor: the marshalling type between engine code and PJRT
+//! literals/buffers.
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn from_manifest(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            "u32" => Ok(Dtype::U32),
+            other => Err(Error::Manifest(format!("unknown dtype `{other}`"))),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+/// Dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        Self::check(&shape, data.len())?;
+        Ok(Tensor {
+            shape,
+            data: Data::F32(data),
+        })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Tensor> {
+        Self::check(&shape, data.len())?;
+        Ok(Tensor {
+            shape,
+            data: Data::I32(data),
+        })
+    }
+
+    pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> Result<Tensor> {
+        Self::check(&shape, data.len())?;
+        Ok(Tensor {
+            shape,
+            data: Data::U32(data),
+        })
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape,
+            data: Data::F32(vec![0.0; n]),
+        }
+    }
+
+    pub fn ones_f32(shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape,
+            data: Data::F32(vec![1.0; n]),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: Data::F32(vec![v]),
+        }
+    }
+
+    pub fn scalar_u32(v: u32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: Data::U32(vec![v]),
+        }
+    }
+
+    fn check(shape: &[usize], len: usize) -> Result<()> {
+        let want: usize = shape.iter().product();
+        if want != len {
+            return Err(Error::Shape {
+                what: "tensor data".into(),
+                expected: shape.to_vec(),
+                got: vec![len],
+            });
+        }
+        Ok(())
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            Data::F32(_) => Dtype::F32,
+            Data::I32(_) => Dtype::I32,
+            Data::U32(_) => Dtype::U32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(Error::msg("tensor is not f32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(Error::msg("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => Err(Error::msg("tensor is not i32")),
+        }
+    }
+
+    /// Upload to a PJRT device buffer.
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let buf = match &self.data {
+            Data::F32(v) => client.buffer_from_host_buffer(v, &self.shape, None)?,
+            Data::I32(v) => client.buffer_from_host_buffer(v, &self.shape, None)?,
+            Data::U32(v) => client.buffer_from_host_buffer(v, &self.shape, None)?,
+        };
+        Ok(buf)
+    }
+
+    /// Convert to an xla literal (host-side).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            Data::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            Data::U32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Download from an xla literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => Data::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => Data::I32(lit.to_vec::<i32>()?),
+            xla::ElementType::U32 => Data::U32(lit.to_vec::<u32>()?),
+            other => return Err(Error::msg(format!("unsupported literal type {other:?}"))),
+        };
+        Ok(Tensor { shape: dims, data })
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut st = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            st[i] = st[i + 1] * self.shape[i + 1];
+        }
+        st
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, index: &[usize]) -> usize {
+        self.strides()
+            .iter()
+            .zip(index)
+            .map(|(s, i)| s * i)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_check() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn strides_and_offset() {
+        let t = Tensor::zeros_f32(vec![2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.offset(&[1, 2, 3]), 12 + 8 + 3);
+    }
+
+    #[test]
+    fn scalar_shapes() {
+        let t = Tensor::scalar_f32(5.0);
+        assert_eq!(t.len(), 1);
+        assert!(t.shape.is_empty());
+    }
+}

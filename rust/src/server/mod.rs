@@ -1,0 +1,213 @@
+//! TCP JSON-lines inference server + client (std::net; no tokio in the
+//! offline crate set, so the accept loop runs on a thread and the engine is
+//! driven by a dedicated scheduler thread — Python is never involved).
+//!
+//! Protocol: one JSON object per line.
+//!   request:  {"id": 1, "prompt": "ada lives in", "max_tokens": 8,
+//!              "temperature": 0.0}
+//!   response: {"id": 1, "text": " paris .", "tokens": 3,
+//!              "prefill_ms": 12.1, "total_ms": 80.5, "finish": "max_tokens"}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::engine::{Engine, SamplingParams};
+use crate::error::{Error, Result};
+use crate::jsonx::{self, obj, Value};
+use crate::tokenizer::Bpe;
+
+struct Job {
+    conn_id: u64,
+    client_req_id: f64,
+    prompt_text: String,
+    max_tokens: usize,
+    sampling: SamplingParams,
+}
+
+struct Reply {
+    conn_id: u64,
+    line: String,
+}
+
+/// Serve until `max_requests` completions (None = forever). Returns the
+/// number served. Bind to port 0 to let the OS pick (the bound address is
+/// printed and also sent to `ready_tx`).
+pub fn serve(
+    mut engine: Engine,
+    bpe: Arc<Bpe>,
+    addr: &str,
+    max_requests: Option<usize>,
+    ready_tx: Option<mpsc::Sender<std::net::SocketAddr>>,
+) -> Result<usize> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    println!("[server] listening on {local}");
+    if let Some(tx) = ready_tx {
+        let _ = tx.send(local);
+    }
+
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let (writer_tx, writer_rx) = mpsc::channel::<(u64, TcpStream)>();
+
+    // connection acceptor -> per-connection reader threads
+    std::thread::spawn(move || {
+        let mut conn_id = 0u64;
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            conn_id += 1;
+            let id = conn_id;
+            let _ = writer_tx.send((id, stream.try_clone().expect("clone stream")));
+            let tx = job_tx.clone();
+            std::thread::spawn(move || {
+                let reader = BufReader::new(stream);
+                for line in reader.lines() {
+                    let Ok(line) = line else { break };
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    match parse_request(id, &line) {
+                        Ok(job) => {
+                            if tx.send(job).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            // malformed request: it is reported on the reply
+                            // channel path via a synthetic job is overkill;
+                            // just log.
+                            eprintln!("[server] bad request: {e}");
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    // writer thread: fan replies back to their connections
+    std::thread::spawn(move || {
+        let mut conns: std::collections::HashMap<u64, TcpStream> =
+            std::collections::HashMap::new();
+        loop {
+            while let Ok((id, s)) = writer_rx.try_recv() {
+                conns.insert(id, s);
+            }
+            match reply_rx.recv_timeout(std::time::Duration::from_millis(50)) {
+                Ok(reply) => {
+                    while let Ok((id, s)) = writer_rx.try_recv() {
+                        conns.insert(id, s);
+                    }
+                    if let Some(s) = conns.get_mut(&reply.conn_id) {
+                        let _ = writeln!(s, "{}", reply.line);
+                        let _ = s.flush();
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+    });
+
+    // engine scheduler loop (this thread)
+    let mut pending: std::collections::HashMap<u64, (u64, f64)> =
+        std::collections::HashMap::new();
+    let mut served = 0usize;
+    loop {
+        // drain new jobs
+        loop {
+            match job_rx.try_recv() {
+                Ok(job) => {
+                    let tokens = bpe.encode(&job.prompt_text);
+                    let eid = engine.submit_with(tokens, job.max_tokens, job.sampling);
+                    pending.insert(eid, (job.conn_id, job.client_req_id));
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => return Ok(served),
+            }
+        }
+        if !engine.has_work() {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            continue;
+        }
+        for done in engine.step()? {
+            if let Some((conn_id, req_id)) = pending.remove(&done.id) {
+                let text = bpe.decode(&done.tokens);
+                let line = obj(vec![
+                    ("id", Value::Num(req_id)),
+                    ("text", Value::Str(text)),
+                    ("tokens", Value::Num(done.tokens.len() as f64)),
+                    ("prefill_ms", Value::Num(done.prefill_ms)),
+                    ("total_ms", Value::Num(done.total_ms)),
+                    (
+                        "finish",
+                        Value::Str(format!("{:?}", done.finish).to_lowercase()),
+                    ),
+                ])
+                .to_json();
+                let _ = reply_tx.send(Reply { conn_id, line });
+                served += 1;
+                if let Some(max) = max_requests {
+                    if served >= max {
+                        println!("[server] served {served} requests; {}", engine.metrics.report());
+                        return Ok(served);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn parse_request(conn_id: u64, line: &str) -> Result<Job> {
+    let v = jsonx::parse(line)?;
+    Ok(Job {
+        conn_id,
+        client_req_id: v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0),
+        prompt_text: v.str_of("prompt")?,
+        max_tokens: v.get("max_tokens").and_then(|x| x.as_usize()).unwrap_or(16),
+        sampling: SamplingParams {
+            temperature: v.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            top_k: v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(0),
+            seed: v.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+        },
+    })
+}
+
+/// Simple blocking client for examples/tests.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    pub fn request(
+        &mut self,
+        id: u64,
+        prompt: &str,
+        max_tokens: usize,
+        temperature: f64,
+    ) -> Result<Value> {
+        let line = obj(vec![
+            ("id", Value::Num(id as f64)),
+            ("prompt", Value::Str(prompt.to_string())),
+            ("max_tokens", Value::Num(max_tokens as f64)),
+            ("temperature", Value::Num(temperature)),
+        ])
+        .to_json();
+        writeln!(self.stream, "{line}")?;
+        self.stream.flush()?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        if resp.is_empty() {
+            return Err(Error::msg("server closed connection"));
+        }
+        jsonx::parse(resp.trim())
+    }
+}

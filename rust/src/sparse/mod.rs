@@ -1,0 +1,133 @@
+//! Row-skipping sparse-vector × dense-matrix substrate (paper Fig 9a).
+//!
+//! This is the *measured* realization of the paper's App. B argument: with
+//! weights stored row-major, a zero activation lets us skip loading (and
+//! multiplying) the entire corresponding row of the down-projection. On a
+//! memory-bound GEMV the latency should track the number of live rows —
+//! `benches/bench_matvec.rs` regenerates Fig 9b from these kernels.
+
+/// Dense GEMV: y[j] = Σ_i a[i] · w[i, j], w row-major [f × d].
+pub fn dense_gemv(w: &[f32], f: usize, d: usize, a: &[f32], y: &mut [f32]) {
+    assert_eq!(w.len(), f * d);
+    assert_eq!(a.len(), f);
+    assert_eq!(y.len(), d);
+    y.fill(0.0);
+    for i in 0..f {
+        let ai = a[i];
+        let row = &w[i * d..(i + 1) * d];
+        for j in 0..d {
+            y[j] += ai * row[j];
+        }
+    }
+}
+
+/// Row-skipping GEMV: rows with a[i] == 0 are neither loaded nor multiplied.
+/// This is exactly the paper's Fig 9a semantics.
+pub fn rowskip_gemv(w: &[f32], f: usize, d: usize, a: &[f32], y: &mut [f32]) {
+    assert_eq!(w.len(), f * d);
+    assert_eq!(a.len(), f);
+    assert_eq!(y.len(), d);
+    y.fill(0.0);
+    for i in 0..f {
+        let ai = a[i];
+        if ai == 0.0 {
+            continue; // skip the whole row: no load, no MACs
+        }
+        let row = &w[i * d..(i + 1) * d];
+        for j in 0..d {
+            y[j] += ai * row[j];
+        }
+    }
+}
+
+/// Row-skipping GEMV over a precomputed live-row index list (the engine
+/// keeps the aggregated-sparsity mask as indices; avoids re-scanning).
+pub fn indexed_gemv(w: &[f32], d: usize, live: &[u32], a: &[f32], y: &mut [f32]) {
+    y.fill(0.0);
+    for &i in live {
+        let i = i as usize;
+        let ai = a[i];
+        let row = &w[i * d..(i + 1) * d];
+        for j in 0..d {
+            y[j] += ai * row[j];
+        }
+    }
+}
+
+/// Count of FLOPs actually executed by `rowskip_gemv` for activation `a`.
+pub fn rowskip_flops(a: &[f32], d: usize) -> usize {
+    2 * a.iter().filter(|&&x| x != 0.0).count() * d
+}
+
+/// Bytes of weight memory touched by `rowskip_gemv`.
+pub fn rowskip_bytes(a: &[f32], d: usize) -> usize {
+    4 * a.iter().filter(|&&x| x != 0.0).count() * d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(f: usize, d: usize, density: f64, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut r = Rng::new(seed);
+        let w: Vec<f32> = (0..f * d).map(|_| r.normal() as f32 * 0.1).collect();
+        let a: Vec<f32> = (0..f)
+            .map(|_| {
+                if r.chance(density) {
+                    r.normal() as f32
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        (w, a)
+    }
+
+    #[test]
+    fn rowskip_matches_dense() {
+        for density in [0.0, 0.05, 0.5, 1.0] {
+            let (w, a) = setup(128, 32, density, 1);
+            let mut y1 = vec![0.0; 32];
+            let mut y2 = vec![0.0; 32];
+            dense_gemv(&w, 128, 32, &a, &mut y1);
+            rowskip_gemv(&w, 128, 32, &a, &mut y2);
+            for (x, y) in y1.iter().zip(&y2) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn indexed_matches_rowskip() {
+        let (w, a) = setup(96, 16, 0.3, 2);
+        let live: Vec<u32> = a
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x != 0.0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        let mut y1 = vec![0.0; 16];
+        let mut y2 = vec![0.0; 16];
+        rowskip_gemv(&w, 96, 16, &a, &mut y1);
+        indexed_gemv(&w, 16, &live, &a, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn flop_and_byte_accounting() {
+        let a = [0.0, 1.0, 0.0, 2.0f32];
+        assert_eq!(rowskip_flops(&a, 8), 2 * 2 * 8);
+        assert_eq!(rowskip_bytes(&a, 8), 4 * 2 * 8);
+    }
+
+    #[test]
+    fn empty_activation_is_free() {
+        let (w, _) = setup(64, 16, 1.0, 3);
+        let a = vec![0.0f32; 64];
+        let mut y = vec![1.0f32; 16];
+        rowskip_gemv(&w, 64, 16, &a, &mut y);
+        assert!(y.iter().all(|&v| v == 0.0));
+        assert_eq!(rowskip_flops(&a, 16), 0);
+    }
+}

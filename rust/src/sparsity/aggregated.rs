@@ -1,0 +1,204 @@
+//! Aggregated sparsity (paper §5.1): the fraction of FFN neurons *never*
+//! activated over the first t processed tokens. Non-increasing in t by
+//! construction; the gap above the i.i.d. baseline s^t is the neuron-reuse
+//! phenomenon sparse speculative decoding exploits.
+
+use crate::error::{Error, Result};
+use crate::runtime::tensor::Tensor;
+
+/// Tracks, per layer, which neurons have been used so far, plus the
+/// aggregated-sparsity curve over token steps.
+#[derive(Debug, Clone)]
+pub struct AggregatedTracker {
+    pub n_layers: usize,
+    pub d_ff: usize,
+    /// used[l][f] — neuron f of layer l has fired at least once
+    used: Vec<Vec<bool>>,
+    /// per-step per-token sparsity (for the random baseline s^t)
+    token_sparsities: Vec<f64>,
+    /// curve[t] = mean over layers of unused fraction after t+1 tokens
+    pub curve: Vec<f64>,
+    /// per-layer curves (Fig 7a plots individual layers)
+    pub layer_curves: Vec<Vec<f64>>,
+}
+
+impl AggregatedTracker {
+    pub fn new(n_layers: usize, d_ff: usize) -> Self {
+        AggregatedTracker {
+            n_layers,
+            d_ff,
+            used: vec![vec![false; d_ff]; n_layers],
+            token_sparsities: Vec::new(),
+            curve: Vec::new(),
+            layer_curves: vec![Vec::new(); n_layers],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for l in &mut self.used {
+            l.fill(false);
+        }
+        self.token_sparsities.clear();
+        self.curve.clear();
+        for c in &mut self.layer_curves {
+            c.clear();
+        }
+    }
+
+    /// Feed one decode step's `ffn_mask` output ([L, B, F]); `row` selects
+    /// the batch row belonging to the tracked sequence.
+    pub fn push_mask(&mut self, mask: &Tensor, row: usize) -> Result<()> {
+        let d = mask.as_f32()?;
+        if mask.shape.len() != 3 || mask.shape[0] != self.n_layers || mask.shape[2] != self.d_ff {
+            return Err(Error::Shape {
+                what: "ffn_mask".into(),
+                expected: vec![self.n_layers, 0, self.d_ff],
+                got: mask.shape.clone(),
+            });
+        }
+        let b = mask.shape[1];
+        if row >= b {
+            return Err(Error::msg(format!("row {row} out of batch {b}")));
+        }
+        let mut live_frac_sum = 0.0;
+        for l in 0..self.n_layers {
+            let base = (l * b + row) * self.d_ff;
+            let slice = &d[base..base + self.d_ff];
+            let mut live = 0usize;
+            for (f, &v) in slice.iter().enumerate() {
+                if v != 0.0 {
+                    self.used[l][f] = true;
+                    live += 1;
+                }
+            }
+            live_frac_sum += live as f64 / self.d_ff as f64;
+        }
+        self.token_sparsities
+            .push(1.0 - live_frac_sum / self.n_layers as f64);
+        // record the aggregated curve point
+        let mut mean_unused = 0.0;
+        for l in 0..self.n_layers {
+            let unused =
+                self.used[l].iter().filter(|&&u| !u).count() as f64 / self.d_ff as f64;
+            self.layer_curves[l].push(unused);
+            mean_unused += unused;
+        }
+        self.curve.push(mean_unused / self.n_layers as f64);
+        Ok(())
+    }
+
+    /// Tokens processed so far.
+    pub fn steps(&self) -> usize {
+        self.curve.len()
+    }
+
+    /// Aggregated sparsity after all processed tokens (mean over layers).
+    pub fn aggregated_sparsity(&self) -> f64 {
+        self.curve.last().copied().unwrap_or(1.0)
+    }
+
+    /// Mean per-token sparsity observed so far.
+    pub fn mean_token_sparsity(&self) -> f64 {
+        if self.token_sparsities.is_empty() {
+            return 0.0;
+        }
+        self.token_sparsities.iter().sum::<f64>() / self.token_sparsities.len() as f64
+    }
+
+    /// The i.i.d. baseline curve: s̄^t for t = 1.. (paper Fig 7b dashed).
+    pub fn random_baseline(&self) -> Vec<f64> {
+        let s = self.mean_token_sparsity();
+        (1..=self.steps())
+            .map(|t| s.powi(t as i32))
+            .collect()
+    }
+
+    /// Union mask of used neurons (the "already loaded rows" set for the
+    /// reuse policy): 1.0 = used/loaded.
+    pub fn used_mask(&self) -> Tensor {
+        let mut data = Vec::with_capacity(self.n_layers * self.d_ff);
+        for l in 0..self.n_layers {
+            data.extend(self.used[l].iter().map(|&u| if u { 1.0 } else { 0.0 }));
+        }
+        Tensor::f32(vec![self.n_layers, self.d_ff], data).expect("shape")
+    }
+
+    /// Fraction of used neurons per layer.
+    pub fn used_fraction(&self, layer: usize) -> f64 {
+        self.used[layer].iter().filter(|&&u| u).count() as f64 / self.d_ff as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask(l: usize, b: usize, f: usize, live: &[(usize, usize, usize)]) -> Tensor {
+        let mut data = vec![0.0f32; l * b * f];
+        for &(li, bi, fi) in live {
+            data[(li * b + bi) * f + fi] = 1.0;
+        }
+        Tensor::f32(vec![l, b, f], data).unwrap()
+    }
+
+    #[test]
+    fn curve_is_non_increasing() {
+        let mut t = AggregatedTracker::new(2, 8);
+        let mut r = crate::util::rng::Rng::new(1);
+        for _ in 0..20 {
+            let mut live = Vec::new();
+            for l in 0..2 {
+                for f in 0..8 {
+                    if r.chance(0.2) {
+                        live.push((l, 0usize, f));
+                    }
+                }
+            }
+            t.push_mask(&mask(2, 1, 8, &live), 0).unwrap();
+        }
+        for w in t.curve.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn reuse_beats_random_baseline() {
+        // tokens that always reuse the same neuron set decay much slower
+        // than the i.i.d. baseline predicts
+        let mut t = AggregatedTracker::new(1, 100);
+        let live: Vec<(usize, usize, usize)> = (0..30).map(|f| (0, 0, f)).collect();
+        for _ in 0..10 {
+            t.push_mask(&mask(1, 1, 100, &live), 0).unwrap();
+        }
+        assert!((t.aggregated_sparsity() - 0.7).abs() < 1e-9);
+        let baseline = t.random_baseline();
+        // s = 0.7 per token; random baseline after 10 tokens = 0.7^10 ≈ 0.028
+        assert!(baseline[9] < 0.05);
+        assert!(t.aggregated_sparsity() > baseline[9] * 10.0);
+    }
+
+    #[test]
+    fn used_mask_matches_pushes() {
+        let mut t = AggregatedTracker::new(1, 4);
+        t.push_mask(&mask(1, 2, 4, &[(0, 1, 2)]), 1).unwrap();
+        let m = t.used_mask();
+        assert_eq!(m.as_f32().unwrap(), &[0.0, 0.0, 1.0, 0.0]);
+        assert_eq!(t.used_fraction(0), 0.25);
+    }
+
+    #[test]
+    fn row_selection_ignores_other_rows() {
+        let mut t = AggregatedTracker::new(1, 4);
+        t.push_mask(&mask(1, 2, 4, &[(0, 0, 1)]), 1).unwrap();
+        assert_eq!(t.used_fraction(0), 0.0);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut t = AggregatedTracker::new(1, 4);
+        t.push_mask(&mask(1, 1, 4, &[(0, 0, 0)]), 0).unwrap();
+        t.reset();
+        assert_eq!(t.steps(), 0);
+        assert_eq!(t.used_fraction(0), 0.0);
+    }
+}

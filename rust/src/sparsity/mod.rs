@@ -1,0 +1,170 @@
+//! Activation-sparsity instrumentation: per-layer statistics, aggregated
+//! sparsity tracking (paper §5.1), preactivation histograms (Fig 5/11) and
+//! the γ-window weight-reuse policy (Fig 7c).
+
+pub mod aggregated;
+pub mod reuse;
+
+pub use aggregated::AggregatedTracker;
+pub use reuse::{ReusePolicy, ReuseStrategy};
+
+use crate::model::LayerSparsity;
+use crate::runtime::tensor::Tensor;
+
+/// Accumulates the `sparsity [L, 3]` stats the L2 entries emit
+/// (columns: qkv input, up input, ffn activation).
+#[derive(Debug, Clone)]
+pub struct SparsityStats {
+    pub n_layers: usize,
+    sums: Vec<[f64; 3]>,
+    count: u64,
+}
+
+impl SparsityStats {
+    pub fn new(n_layers: usize) -> Self {
+        SparsityStats {
+            n_layers,
+            sums: vec![[0.0; 3]; n_layers],
+            count: 0,
+        }
+    }
+
+    /// Feed one `sparsity` output tensor of shape [L, 3].
+    pub fn push(&mut self, t: &Tensor) -> crate::Result<()> {
+        let data = t.as_f32()?;
+        if t.shape != vec![self.n_layers, 3] {
+            return Err(crate::Error::Shape {
+                what: "sparsity stats".into(),
+                expected: vec![self.n_layers, 3],
+                got: t.shape.clone(),
+            });
+        }
+        for l in 0..self.n_layers {
+            for c in 0..3 {
+                self.sums[l][c] += data[l * 3 + c] as f64;
+            }
+        }
+        self.count += 1;
+        Ok(())
+    }
+
+    pub fn layer_means(&self) -> Vec<LayerSparsity> {
+        let n = self.count.max(1) as f64;
+        self.sums
+            .iter()
+            .map(|s| LayerSparsity {
+                qkv: s[0] / n,
+                up: s[1] / n,
+                ffn: s[2] / n,
+            })
+            .collect()
+    }
+
+    /// Mean over layers of each column — the paper's headline "sparsity %"
+    /// numbers (Table 1 columns).
+    pub fn overall(&self) -> LayerSparsity {
+        let per = self.layer_means();
+        let n = per.len().max(1) as f64;
+        LayerSparsity {
+            qkv: per.iter().map(|s| s.qkv).sum::<f64>() / n,
+            up: per.iter().map(|s| s.up).sum::<f64>() / n,
+            ffn: per.iter().map(|s| s.ffn).sum::<f64>() / n,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Per-layer preactivation histograms from `probe` outputs (Fig 5 / 11),
+/// plus the shifted-ReLU threshold fit (§5.3: choose b so that
+/// cdf(b) ≈ target sparsity).
+pub struct PreactHistograms {
+    pub per_layer: Vec<crate::util::stats::Histogram>,
+}
+
+impl PreactHistograms {
+    pub fn new(n_layers: usize, lo: f64, hi: f64, bins: usize) -> Self {
+        PreactHistograms {
+            per_layer: (0..n_layers)
+                .map(|_| crate::util::stats::Histogram::new(lo, hi, bins))
+                .collect(),
+        }
+    }
+
+    /// Feed a probe `preact` tensor of shape [L, T, F].
+    pub fn push(&mut self, t: &Tensor) -> crate::Result<()> {
+        let data = t.as_f32()?;
+        let l = self.per_layer.len();
+        if t.shape.len() != 3 || t.shape[0] != l {
+            return Err(crate::Error::Shape {
+                what: "probe preact".into(),
+                expected: vec![l, 0, 0],
+                got: t.shape.clone(),
+            });
+        }
+        let per = t.shape[1] * t.shape[2];
+        for (li, hist) in self.per_layer.iter_mut().enumerate() {
+            hist.push_all(&data[li * per..(li + 1) * per]);
+        }
+        Ok(())
+    }
+
+    /// Paper §5.3: pick the ReLU shift b that would reach `target` sparsity
+    /// (pooled over layers).
+    pub fn fit_shift(&self, target: f64) -> f64 {
+        let mut pooled = crate::util::stats::Histogram::new(
+            self.per_layer[0].lo,
+            self.per_layer[0].hi,
+            self.per_layer[0].counts.len(),
+        );
+        for h in &self.per_layer {
+            pooled.underflow += h.underflow;
+            pooled.overflow += h.overflow;
+            pooled.total += h.total;
+            for (a, b) in pooled.counts.iter_mut().zip(&h.counts) {
+                *a += b;
+            }
+        }
+        pooled.quantile(target)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate_and_average() {
+        let mut st = SparsityStats::new(2);
+        let a = Tensor::f32(vec![2, 3], vec![0.0, 0.2, 0.9, 0.1, 0.3, 0.8]).unwrap();
+        let b = Tensor::f32(vec![2, 3], vec![0.2, 0.4, 0.7, 0.3, 0.5, 1.0]).unwrap();
+        st.push(&a).unwrap();
+        st.push(&b).unwrap();
+        let m = st.layer_means();
+        assert!((m[0].qkv - 0.1).abs() < 1e-6);
+        assert!((m[1].ffn - 0.9).abs() < 1e-6);
+        let o = st.overall();
+        assert!((o.ffn - 0.85).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stats_reject_bad_shape() {
+        let mut st = SparsityStats::new(2);
+        let bad = Tensor::f32(vec![3, 3], vec![0.0; 9]).unwrap();
+        assert!(st.push(&bad).is_err());
+    }
+
+    #[test]
+    fn histogram_fit_shift() {
+        let mut h = PreactHistograms::new(1, -4.0, 4.0, 160);
+        let mut r = crate::util::rng::Rng::new(1);
+        let vals: Vec<f32> = (0..40_000).map(|_| r.normal() as f32).collect();
+        let t = Tensor::f32(vec![1, 40_000 / 8, 8], vals).unwrap();
+        h.push(&t).unwrap();
+        // want 84% sparsity -> b ≈ 1.0 for N(0,1)
+        let b = h.fit_shift(0.841);
+        assert!((b - 1.0).abs() < 0.1, "{b}");
+    }
+}

@@ -1,0 +1,215 @@
+//! γ-window weight-reuse policy (paper §5.1, Fig 7c).
+//!
+//! Protocol from the paper: read 128 tokens normally; then alternate — for
+//! every window of γ tokens, even windows load weights normally (mask =
+//! all-ones, while recording which neurons fire), odd windows *freeze* the
+//! loaded set: the FFN may only use neurons that fired during the preceding
+//! collection window (mask = that union). The `Random` strategy freezes a
+//! uniformly random neuron set of the same size instead — the paper shows
+//! this destroys perplexity while true reuse barely moves it.
+
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReuseStrategy {
+    /// No reuse: every token loads fresh weights (baseline dashed line).
+    None,
+    /// Freeze the actually-used neuron union (solid blue line).
+    Aggregated,
+    /// Freeze a random set of the same per-layer size (orange line).
+    Random,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Warmup,
+    Collect,
+    Reuse,
+}
+
+pub struct ReusePolicy {
+    pub strategy: ReuseStrategy,
+    pub gamma: usize,
+    pub warmup: usize,
+    n_layers: usize,
+    d_ff: usize,
+    phase: Phase,
+    step_in_phase: usize,
+    /// neurons that fired during the current collection window
+    collected: Vec<Vec<bool>>,
+    /// frozen mask used during the reuse window
+    frozen: Option<Tensor>,
+    rng: Rng,
+}
+
+impl ReusePolicy {
+    pub fn new(
+        strategy: ReuseStrategy,
+        gamma: usize,
+        warmup: usize,
+        n_layers: usize,
+        d_ff: usize,
+        seed: u64,
+    ) -> Self {
+        ReusePolicy {
+            strategy,
+            gamma: gamma.max(1),
+            warmup,
+            n_layers,
+            d_ff,
+            phase: Phase::Warmup,
+            step_in_phase: 0,
+            collected: vec![vec![false; d_ff]; n_layers],
+            frozen: None,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Mask to apply for the *next* token ([L, F] all-ones or the frozen
+    /// reuse mask).
+    pub fn current_mask(&self) -> Tensor {
+        match (&self.phase, &self.frozen) {
+            (Phase::Reuse, Some(m)) if self.strategy != ReuseStrategy::None => m.clone(),
+            _ => Tensor::ones_f32(vec![self.n_layers, self.d_ff]),
+        }
+    }
+
+    /// True if the next token's weights come from the frozen set (no new
+    /// weight IO).
+    pub fn is_reusing(&self) -> bool {
+        self.phase == Phase::Reuse && self.strategy != ReuseStrategy::None
+    }
+
+    /// Observe the ffn_mask ([L, B, F], row `row`) produced for the token
+    /// just decoded, then advance the phase machine.
+    pub fn observe(&mut self, ffn_mask: &Tensor, row: usize) -> crate::Result<()> {
+        let d = ffn_mask.as_f32()?;
+        let b = ffn_mask.shape[1];
+        if matches!(self.phase, Phase::Warmup | Phase::Collect) {
+            for l in 0..self.n_layers {
+                let base = (l * b + row) * self.d_ff;
+                for f in 0..self.d_ff {
+                    if d[base + f] != 0.0 {
+                        self.collected[l][f] = true;
+                    }
+                }
+            }
+        }
+        self.step_in_phase += 1;
+        match self.phase {
+            Phase::Warmup if self.step_in_phase >= self.warmup => {
+                self.freeze();
+                self.phase = Phase::Reuse;
+                self.step_in_phase = 0;
+            }
+            Phase::Collect if self.step_in_phase >= self.gamma => {
+                self.freeze();
+                self.phase = Phase::Reuse;
+                self.step_in_phase = 0;
+            }
+            Phase::Reuse if self.step_in_phase >= self.gamma => {
+                for l in &mut self.collected {
+                    l.fill(false);
+                }
+                self.phase = Phase::Collect;
+                self.step_in_phase = 0;
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    fn freeze(&mut self) {
+        let mut data = Vec::with_capacity(self.n_layers * self.d_ff);
+        match self.strategy {
+            ReuseStrategy::None => {
+                data = vec![1.0; self.n_layers * self.d_ff];
+            }
+            ReuseStrategy::Aggregated => {
+                for l in 0..self.n_layers {
+                    data.extend(
+                        self.collected[l]
+                            .iter()
+                            .map(|&u| if u { 1.0f32 } else { 0.0 }),
+                    );
+                }
+            }
+            ReuseStrategy::Random => {
+                // same per-layer live count, uniformly random membership
+                for l in 0..self.n_layers {
+                    let k = self.collected[l].iter().filter(|&&u| u).count();
+                    let mut layer = vec![0.0f32; self.d_ff];
+                    for idx in self.rng.sample_indices(self.d_ff, k) {
+                        layer[idx] = 1.0;
+                    }
+                    data.extend(layer);
+                }
+            }
+        }
+        self.frozen = Some(Tensor::f32(vec![self.n_layers, self.d_ff], data).expect("shape"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask_with(l: usize, f: usize, live: &[usize]) -> Tensor {
+        let mut data = vec![0.0f32; l * f];
+        for li in 0..l {
+            for &fi in live {
+                data[li * f + fi] = 1.0;
+            }
+        }
+        Tensor::f32(vec![l, 1, f], data).unwrap()
+    }
+
+    #[test]
+    fn warmup_then_alternating_windows() {
+        let mut p = ReusePolicy::new(ReuseStrategy::Aggregated, 2, 3, 1, 8, 0);
+        let m = mask_with(1, 8, &[0, 3]);
+        // warmup: 3 tokens, no reuse
+        for _ in 0..3 {
+            assert!(!p.is_reusing());
+            p.observe(&m, 0).unwrap();
+        }
+        // reuse window of gamma=2
+        assert!(p.is_reusing());
+        let frozen = p.current_mask();
+        assert_eq!(
+            frozen.as_f32().unwrap(),
+            &[1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0]
+        );
+        p.observe(&m, 0).unwrap();
+        assert!(p.is_reusing());
+        p.observe(&m, 0).unwrap();
+        // back to collect
+        assert!(!p.is_reusing());
+        assert_eq!(p.current_mask().as_f32().unwrap(), &[1.0f32; 8][..]);
+    }
+
+    #[test]
+    fn none_strategy_never_reuses() {
+        let mut p = ReusePolicy::new(ReuseStrategy::None, 2, 1, 1, 4, 0);
+        let m = mask_with(1, 4, &[1]);
+        for _ in 0..10 {
+            assert!(!p.is_reusing());
+            assert_eq!(p.current_mask().as_f32().unwrap(), &[1.0f32; 4][..]);
+            p.observe(&m, 0).unwrap();
+        }
+    }
+
+    #[test]
+    fn random_strategy_preserves_density() {
+        let mut p = ReusePolicy::new(ReuseStrategy::Random, 4, 2, 1, 32, 7);
+        let m = mask_with(1, 32, &[0, 5, 9, 13, 21]);
+        for _ in 0..2 {
+            p.observe(&m, 0).unwrap();
+        }
+        assert!(p.is_reusing());
+        let frozen = p.current_mask();
+        let live = frozen.as_f32().unwrap().iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(live, 5);
+    }
+}

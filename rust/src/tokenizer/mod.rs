@@ -1,0 +1,330 @@
+//! Byte-pair-encoding tokenizer substrate: trainer, encoder/decoder, vocab
+//! serialization. Built from scratch (the paper's pipeline assumes a
+//! pretrained tokenizer; we train ours on the synthetic corpus).
+//!
+//! Special tokens: 0 = BOS/PAD ("<s>"), 1 = EOS ("</s>"), 2 = UNK.
+//! Base alphabet: every byte value seen in the training text; merges are
+//! learned greedily by pair frequency up to `vocab_size`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+pub const BOS: u32 = 0;
+pub const EOS: u32 = 1;
+pub const UNK: u32 = 2;
+pub const N_SPECIAL: u32 = 3;
+
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// token id -> byte string
+    pub pieces: Vec<Vec<u8>>,
+    /// learned merges in priority order: (left id, right id) -> merged id
+    pub merges: Vec<(u32, u32, u32)>,
+    merge_rank: BTreeMap<(u32, u32), (usize, u32)>,
+    byte_to_id: BTreeMap<u8, u32>,
+}
+
+impl Bpe {
+    /// Train a BPE vocabulary of `vocab_size` tokens on `text`.
+    pub fn train(text: &str, vocab_size: usize) -> Result<Bpe> {
+        if vocab_size < (N_SPECIAL as usize) + 8 {
+            return Err(Error::Tokenizer("vocab too small".into()));
+        }
+        let mut pieces: Vec<Vec<u8>> =
+            vec![b"<s>".to_vec(), b"</s>".to_vec(), b"<unk>".to_vec()];
+        let mut byte_to_id = BTreeMap::new();
+        // base alphabet: bytes in appearance order, deterministically sorted
+        let mut seen: Vec<u8> = text.bytes().collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        seen.sort();
+        for b in seen {
+            byte_to_id.insert(b, pieces.len() as u32);
+            pieces.push(vec![b]);
+        }
+        // initial token stream over "words" (split on spaces, space kept as
+        // prefix marker byte like GPT-2's leading-space convention)
+        let words = split_words(text);
+        let word_tokens: Vec<Vec<u32>> = words
+            .iter()
+            .map(|w| w.bytes().map(|b| byte_to_id[&b]).collect())
+            .collect();
+        let mut word_counts: BTreeMap<Vec<u32>, usize> = BTreeMap::new();
+        for wt in &word_tokens {
+            *word_counts.entry(wt.clone()).or_insert(0) += 1;
+        }
+        drop(word_tokens);
+
+        let mut merges = Vec::new();
+        while pieces.len() < vocab_size {
+            // count adjacent pairs over unique words weighted by frequency
+            let mut pair_counts: BTreeMap<(u32, u32), usize> = BTreeMap::new();
+            for (wt, c) in &word_counts {
+                for win in wt.windows(2) {
+                    *pair_counts.entry((win[0], win[1])).or_insert(0) += c;
+                }
+            }
+            let Some((&pair, &count)) = pair_counts.iter().max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if count < 2 {
+                break; // nothing useful left to merge
+            }
+            let new_id = pieces.len() as u32;
+            let mut merged_piece = pieces[pair.0 as usize].clone();
+            merged_piece.extend_from_slice(&pieces[pair.1 as usize]);
+            pieces.push(merged_piece);
+            merges.push((pair.0, pair.1, new_id));
+            // apply the merge to every word
+            let mut next_counts: BTreeMap<Vec<u32>, usize> = BTreeMap::new();
+            for (wt, c) in word_counts {
+                let merged = apply_merge(&wt, pair, new_id);
+                *next_counts.entry(merged).or_insert(0) += c;
+            }
+            word_counts = next_counts;
+        }
+        let merge_rank = merges
+            .iter()
+            .enumerate()
+            .map(|(rank, &(a, b, id))| ((a, b), (rank, id)))
+            .collect();
+        Ok(Bpe {
+            pieces,
+            merges,
+            merge_rank,
+            byte_to_id,
+        })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// Encode text to token ids (no BOS/EOS added).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::new();
+        for word in split_words(text) {
+            let mut toks: Vec<u32> = word
+                .bytes()
+                .map(|b| self.byte_to_id.get(&b).copied().unwrap_or(UNK))
+                .collect();
+            // repeatedly apply the highest-priority applicable merge
+            loop {
+                let mut best: Option<(usize, usize, u32)> = None; // (rank, pos, id)
+                for (i, win) in toks.windows(2).enumerate() {
+                    if let Some(&(rank, id)) = self.merge_rank.get(&(win[0], win[1])) {
+                        if best.map_or(true, |(br, _, _)| rank < br) {
+                            best = Some((rank, i, id));
+                        }
+                    }
+                }
+                match best {
+                    Some((_, pos, id)) => {
+                        toks[pos] = id;
+                        toks.remove(pos + 1);
+                    }
+                    None => break,
+                }
+            }
+            out.extend(toks);
+        }
+        out
+    }
+
+    /// Decode token ids back to text.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id < N_SPECIAL {
+                continue;
+            }
+            if let Some(p) = self.pieces.get(id as usize) {
+                bytes.extend_from_slice(p);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Serialize to a text file (one piece per line, hex-encoded, then merges).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = String::new();
+        out.push_str(&format!("bpe {}\n", self.pieces.len()));
+        for p in &self.pieces {
+            for b in p {
+                out.push_str(&format!("{b:02x}"));
+            }
+            out.push('\n');
+        }
+        out.push_str(&format!("merges {}\n", self.merges.len()));
+        for &(a, b, id) in &self.merges {
+            out.push_str(&format!("{a} {b} {id}\n"));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Bpe> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        let head = lines
+            .next()
+            .ok_or_else(|| Error::Tokenizer("empty vocab file".into()))?;
+        let n: usize = head
+            .strip_prefix("bpe ")
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Tokenizer("bad header".into()))?;
+        let mut pieces = Vec::with_capacity(n);
+        for _ in 0..n {
+            let line = lines
+                .next()
+                .ok_or_else(|| Error::Tokenizer("truncated pieces".into()))?;
+            let mut bytes = Vec::with_capacity(line.len() / 2);
+            let lb = line.as_bytes();
+            for c in lb.chunks(2) {
+                let s = std::str::from_utf8(c).map_err(|_| Error::Tokenizer("bad hex".into()))?;
+                bytes.push(
+                    u8::from_str_radix(s, 16).map_err(|_| Error::Tokenizer("bad hex".into()))?,
+                );
+            }
+            pieces.push(bytes);
+        }
+        let mhead = lines
+            .next()
+            .ok_or_else(|| Error::Tokenizer("missing merges".into()))?;
+        let m: usize = mhead
+            .strip_prefix("merges ")
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Tokenizer("bad merges header".into()))?;
+        let mut merges = Vec::with_capacity(m);
+        for _ in 0..m {
+            let line = lines
+                .next()
+                .ok_or_else(|| Error::Tokenizer("truncated merges".into()))?;
+            let mut it = line.split(' ');
+            let a = it.next().and_then(|s| s.parse().ok());
+            let b = it.next().and_then(|s| s.parse().ok());
+            let id = it.next().and_then(|s| s.parse().ok());
+            match (a, b, id) {
+                (Some(a), Some(b), Some(id)) => merges.push((a, b, id)),
+                _ => return Err(Error::Tokenizer("bad merge line".into())),
+            }
+        }
+        let merge_rank = merges
+            .iter()
+            .enumerate()
+            .map(|(rank, &(a, b, id))| ((a, b), (rank, id)))
+            .collect();
+        let mut byte_to_id = BTreeMap::new();
+        for (i, p) in pieces.iter().enumerate() {
+            if p.len() == 1 && i >= N_SPECIAL as usize {
+                byte_to_id.entry(p[0]).or_insert(i as u32);
+            }
+        }
+        Ok(Bpe {
+            pieces,
+            merges,
+            merge_rank,
+            byte_to_id,
+        })
+    }
+}
+
+fn apply_merge(toks: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut i = 0;
+    while i < toks.len() {
+        if i + 1 < toks.len() && toks[i] == pair.0 && toks[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(toks[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Split text into "words" keeping each word's leading space (GPT-2 style):
+/// "a bc d" -> ["a", " bc", " d"].
+fn split_words(text: &str) -> Vec<String> {
+    let mut words = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        if ch == ' ' {
+            if !cur.is_empty() && !cur.ends_with(' ') {
+                words.push(std::mem::take(&mut cur));
+            }
+            cur.push(' ');
+        } else {
+            cur.push(ch);
+        }
+    }
+    if !cur.is_empty() {
+        words.push(cur);
+    }
+    words
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "the cat sat on the mat . the cat ran . a dog sat on a log . \
+                          the dog and the cat sat together . the mat was flat .";
+
+    #[test]
+    fn roundtrip_exact() {
+        let bpe = Bpe::train(SAMPLE, 80).unwrap();
+        let ids = bpe.encode(SAMPLE);
+        assert_eq!(bpe.decode(&ids), SAMPLE);
+    }
+
+    #[test]
+    fn merges_compress() {
+        let bpe_small = Bpe::train(SAMPLE, 28).unwrap();
+        let bpe_big = Bpe::train(SAMPLE, 120).unwrap();
+        let n_small = bpe_small.encode(SAMPLE).len();
+        let n_big = bpe_big.encode(SAMPLE).len();
+        assert!(n_big < n_small, "{n_big} !< {n_small}");
+    }
+
+    #[test]
+    fn unknown_bytes_map_to_unk() {
+        let bpe = Bpe::train("abc abc", 20).unwrap();
+        let ids = bpe.encode("xyz");
+        assert!(ids.iter().all(|&t| t == UNK));
+    }
+
+    #[test]
+    fn save_load_identical() {
+        let bpe = Bpe::train(SAMPLE, 64).unwrap();
+        let dir = std::env::temp_dir().join(format!("rsb_bpe_{}", std::process::id()));
+        let path = dir.join("vocab.txt");
+        bpe.save(&path).unwrap();
+        let loaded = Bpe::load(&path).unwrap();
+        assert_eq!(bpe.pieces, loaded.pieces);
+        assert_eq!(bpe.encode(SAMPLE), loaded.encode(SAMPLE));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn vocab_ids_in_range() {
+        let bpe = Bpe::train(SAMPLE, 64).unwrap();
+        let ids = bpe.encode(SAMPLE);
+        assert!(ids.iter().all(|&t| (t as usize) < bpe.vocab_size()));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = Bpe::train(SAMPLE, 60).unwrap();
+        let b = Bpe::train(SAMPLE, 60).unwrap();
+        assert_eq!(a.pieces, b.pieces);
+        assert_eq!(a.merges, b.merges);
+    }
+}

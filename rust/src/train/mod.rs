@@ -1,0 +1,284 @@
+//! Training driver: executes the AOT `train_k` entry (K fused AdamW steps
+//! per call), with LR schedules, loss/grad-norm telemetry, periodic eval and
+//! checkpointing. Also hosts the relufication pipeline (paper §4): load a
+//! pretrained checkpoint into a *different* stage/activation artifact of the
+//! same architecture (parameter shapes are stage-invariant) and finetune.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::runtime::{Arg, Model, ParamStore, Tensor};
+use crate::sparsity::SparsityStats;
+use crate::util::rng::Rng;
+
+/// Learning-rate schedule: linear warmup then cosine decay to 10%.
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub peak: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f64 {
+        if self.total_steps == 0 {
+            return self.peak;
+        }
+        if step < self.warmup_steps {
+            return self.peak * (step + 1) as f64 / self.warmup_steps.max(1) as f64;
+        }
+        let t = (step - self.warmup_steps) as f64
+            / (self.total_steps - self.warmup_steps).max(1) as f64;
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t.min(1.0)).cos());
+        self.peak * (0.1 + 0.9 * cos)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: LrSchedule,
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub checkpoint: Option<PathBuf>,
+    pub quiet: bool,
+}
+
+impl TrainConfig {
+    pub fn quick(steps: usize, peak_lr: f64) -> TrainConfig {
+        TrainConfig {
+            steps,
+            lr: LrSchedule {
+                peak: peak_lr,
+                warmup_steps: (steps / 20).max(2),
+                total_steps: steps,
+            },
+            seed: 0,
+            log_every: 20,
+            eval_every: 0,
+            eval_batches: 4,
+            checkpoint: None,
+            quiet: false,
+        }
+    }
+}
+
+/// One logged point of the training curve.
+#[derive(Debug, Clone)]
+pub struct LogPoint {
+    pub step: usize,
+    pub loss: f64,
+    pub gnorm: f64,
+    pub lr: f64,
+    pub val_loss: Option<f64>,
+    pub ffn_sparsity: Option<f64>,
+}
+
+pub struct TrainOutcome {
+    pub params: ParamStore,
+    pub curve: Vec<LogPoint>,
+    pub final_train_loss: f64,
+    pub tokens_seen: usize,
+    pub wall_secs: f64,
+}
+
+/// The optimizer + model state that round-trips through `train_k`.
+struct OptState {
+    /// params ++ m ++ v, in manifest order (3 * n_params tensors)
+    tensors: Vec<Tensor>,
+    step: f32,
+}
+
+pub struct Trainer {
+    pub model: Arc<Model>,
+    pub dataset: Arc<Dataset>,
+}
+
+impl Trainer {
+    pub fn new(model: Arc<Model>, dataset: Arc<Dataset>) -> Result<Trainer> {
+        let vocab = model.manifest.config.vocab;
+        if dataset.vocab_size > vocab {
+            return Err(Error::Config(format!(
+                "dataset vocab {} exceeds model vocab {vocab}",
+                dataset.vocab_size
+            )));
+        }
+        Ok(Trainer { model, dataset })
+    }
+
+    /// Train from fresh init.
+    pub fn train(&self, cfg: &TrainConfig) -> Result<TrainOutcome> {
+        let params = self.model.init_params(cfg.seed as u32)?;
+        self.train_from(params, cfg)
+    }
+
+    /// Train/finetune from existing parameters (relufication stage 2 of the
+    /// paper = same weights, new architecture surgery baked in the HLO).
+    pub fn train_from(&self, params: ParamStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
+        let t_start = std::time::Instant::now();
+        let train_k = self.model.entry("train_k")?;
+        let b = &self.model.manifest.buckets;
+        let (k, bt, tt) = (b.train_k, b.train_b, b.train_t);
+        let n = self.model.manifest.params.len();
+
+        let zeros: Vec<Tensor> = params
+            .tensors
+            .iter()
+            .map(|t| Tensor::zeros_f32(t.shape.clone()))
+            .collect();
+        let mut state = OptState {
+            tensors: params
+                .tensors
+                .iter()
+                .cloned()
+                .chain(zeros.iter().cloned())
+                .chain(zeros.iter().cloned())
+                .collect(),
+            step: 0.0,
+        };
+        let mut rng = Rng::new(cfg.seed ^ 0x7214);
+        let mut curve = Vec::new();
+        let mut last_loss = f64::NAN;
+        let mut calls = 0usize;
+        let total_calls = cfg.steps.div_ceil(k);
+        while calls < total_calls {
+            let step0 = calls * k;
+            let lrs: Vec<f32> = (0..k).map(|i| cfg.lr.at(step0 + i) as f32).collect();
+            let lrs_t = Tensor::f32(vec![k], lrs)?;
+            let step_t = Tensor::scalar_f32(state.step);
+            let tokens = self.dataset.train_batch(&mut rng, k, bt, tt)?;
+            let mut args: Vec<Arg> = state.tensors.iter().map(Arg::Host).collect();
+            args.push(Arg::Host(&step_t));
+            args.push(Arg::Host(&lrs_t));
+            args.push(Arg::Host(&tokens));
+            let outs = train_k.execute(&args)?;
+            // outputs: params ++ m ++ v ++ losses ++ gnorms
+            let losses = outs[3 * n].as_f32()?.to_vec();
+            let gnorms = outs[3 * n + 1].as_f32()?.to_vec();
+            state.tensors = outs.into_iter().take(3 * n).collect();
+            state.step += k as f32;
+            calls += 1;
+            last_loss = *losses.last().unwrap() as f64;
+            if !last_loss.is_finite() {
+                return Err(Error::msg(format!(
+                    "training diverged at step {} (loss = {last_loss})",
+                    step0 + k
+                )));
+            }
+            let step_now = step0 + k;
+            let should_log = cfg.log_every > 0
+                && (calls == 1 || step_now % cfg.log_every < k || calls == total_calls);
+            if should_log {
+                let (val_loss, ffn_sp) = if cfg.eval_every > 0
+                    && (step_now % cfg.eval_every < k || calls == total_calls)
+                {
+                    let (vl, sp) = self.eval_loss(&state.tensors[..n], cfg.eval_batches, 1)?;
+                    (Some(vl), Some(sp))
+                } else {
+                    (None, None)
+                };
+                let point = LogPoint {
+                    step: step_now,
+                    loss: losses.iter().map(|&x| x as f64).sum::<f64>() / k as f64,
+                    gnorm: gnorms.iter().map(|&x| x as f64).sum::<f64>() / k as f64,
+                    lr: cfg.lr.at(step_now),
+                    val_loss,
+                    ffn_sparsity: ffn_sp,
+                };
+                if !cfg.quiet {
+                    println!(
+                        "[train {}] step {:>5} loss {:.4} gnorm {:.3} lr {:.2e}{}{}",
+                        self.model.manifest.model_id,
+                        point.step,
+                        point.loss,
+                        point.gnorm,
+                        point.lr,
+                        point
+                            .val_loss
+                            .map(|v| format!(" val {v:.4}"))
+                            .unwrap_or_default(),
+                        point
+                            .ffn_sparsity
+                            .map(|s| format!(" ffn-sparsity {:.1}%", s * 100.0))
+                            .unwrap_or_default(),
+                    );
+                }
+                curve.push(point);
+            }
+        }
+        let final_params = ParamStore::new(
+            &self.model.manifest,
+            state.tensors[..n].to_vec(),
+        )?;
+        if let Some(path) = &cfg.checkpoint {
+            self.model.save_params(path, &final_params)?;
+            if !cfg.quiet {
+                println!("[train] checkpoint -> {}", path.display());
+            }
+        }
+        Ok(TrainOutcome {
+            params: final_params,
+            curve,
+            final_train_loss: last_loss,
+            tokens_seen: cfg.steps * bt * tt,
+            wall_secs: t_start.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Mean validation NLL + mean FFN sparsity over `n_batches` score calls.
+    pub fn eval_loss(
+        &self,
+        param_tensors: &[Tensor],
+        n_batches: usize,
+        seed: u64,
+    ) -> Result<(f64, f64)> {
+        let score = self.model.entry("score")?;
+        let b = &self.model.manifest.buckets;
+        let mut rng = Rng::new(seed ^ 0xE7A1);
+        let mut total = 0.0;
+        let mut count = 0usize;
+        let mut stats = SparsityStats::new(self.model.manifest.config.n_layers);
+        for _ in 0..n_batches {
+            let tokens = self.dataset.val_batch(&mut rng, b.score_b, b.train_t)?;
+            let mut args: Vec<Arg> = param_tensors.iter().map(Arg::Host).collect();
+            args.push(Arg::Host(&tokens));
+            let outs = score.execute(&args)?;
+            let nll = outs[0].as_f32()?;
+            total += nll.iter().map(|&x| x as f64).sum::<f64>();
+            count += nll.len();
+            stats.push(&outs[1])?;
+        }
+        Ok((total / count.max(1) as f64, stats.overall().ffn))
+    }
+}
+
+/// Convenience: checkpoint path for a model id under the runs dir.
+pub fn checkpoint_path(runs: &Path, model_id: &str, tag: &str) -> PathBuf {
+    runs.join("checkpoints").join(format!("{model_id}.{tag}.ckpt"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let s = LrSchedule {
+            peak: 1e-3,
+            warmup_steps: 10,
+            total_steps: 100,
+        };
+        assert!(s.at(0) < s.at(9));
+        assert!((s.at(10) - 1e-3).abs() < 1e-4);
+        assert!(s.at(50) < s.at(10));
+        assert!(s.at(99) >= 1e-4 * 0.99);
+        // monotone decay after warmup
+        for i in 10..99 {
+            assert!(s.at(i + 1) <= s.at(i) + 1e-12);
+        }
+    }
+}

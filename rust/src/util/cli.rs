@@ -1,0 +1,131 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without the program name).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(stripped.to_string());
+                    } else {
+                        out.options.insert(stripped.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got `{v}`"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects a number, got `{v}`"))),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| Error::Config(format!("missing required option --{key}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(
+            &["cmd", "--steps", "100", "--fast", "--lr=0.5", "pos2"],
+            &["fast"],
+        );
+        assert_eq!(a.positional, vec!["cmd", "pos2"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.has("fast"));
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--verbose"], &[]);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        // unknown "--flagish" followed by another option is treated as flag
+        let a = parse(&["--flagish", "--steps", "5"], &[]);
+        assert!(a.has("flagish"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["--steps", "abc"], &[]);
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.str_or("model", "base"), "base");
+        assert!(a.require("model").is_err());
+    }
+}

@@ -1,0 +1,93 @@
+//! Small substrates: deterministic RNG, CLI parsing, online statistics,
+//! timing. All hand-rolled (no `rand`/`clap` in the offline crate set).
+
+pub mod cli;
+pub mod rng;
+pub mod stats;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch returning seconds.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Format a float with engineering suffixes (1.2k, 3.4M, 5.6G).
+pub fn eng(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+/// Render an aligned console table (the benches/figures print format).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str(&format!("{:<w$}  ", c, w = widths[i.min(widths.len() - 1)]));
+        }
+        out.push('\n');
+    };
+    line(
+        &mut out,
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+    );
+    line(
+        &mut out,
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+    );
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eng_suffixes() {
+        assert_eq!(eng(1234.0), "1.23k");
+        assert_eq!(eng(2.5e6), "2.50M");
+        assert_eq!(eng(7e9), "7.00G");
+        assert_eq!(eng(12.0), "12.00");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["a", "bbbb"],
+            &[vec!["xx".into(), "y".into()], vec!["1".into(), "22".into()]],
+        );
+        assert!(t.contains("a   bbbb"));
+        assert_eq!(t.lines().count(), 4);
+    }
+}

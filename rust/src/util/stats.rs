@@ -1,0 +1,249 @@
+//! Online statistics + percentile summaries for benches and engine metrics.
+
+/// Welford online mean/variance plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Online {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Collected samples with percentile queries (used by the bench harness).
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            0.0
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+
+    /// Percentile by linear interpolation, q in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.xs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q / 100.0 * (v.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            v[lo]
+        } else {
+            v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Histogram with fixed linear bins (preactivation distributions, Fig 5/11).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+            total: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let bin =
+                ((x - self.lo) / (self.hi - self.lo) * self.counts.len() as f64) as usize;
+            let last = self.counts.len() - 1;
+            self.counts[bin.min(last)] += 1;
+        }
+    }
+
+    pub fn push_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.push(x as f64);
+        }
+    }
+
+    /// Fraction of mass strictly below `x`.
+    pub fn cdf(&self, x: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let mut acc = self.underflow;
+        let width = (self.hi - self.lo) / self.counts.len() as f64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let edge = self.lo + (i as f64 + 1.0) * width;
+            if edge <= x {
+                acc += c;
+            } else {
+                break;
+            }
+        }
+        acc as f64 / self.total as f64
+    }
+
+    /// Smallest bin edge b such that cdf(b) >= q — used to pick the shifted
+    /// ReLU threshold from a preactivation distribution (paper §5.3).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let width = (self.hi - self.lo) / self.counts.len() as f64;
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = self.underflow;
+        if acc >= target {
+            return self.lo;
+        }
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.lo + (i as f64 + 1.0) * width;
+            }
+        }
+        self.hi
+    }
+
+    /// Normalized bin densities for CSV export.
+    pub fn densities(&self) -> Vec<(f64, f64)> {
+        let width = (self.hi - self.lo) / self.counts.len() as f64;
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                (
+                    self.lo + (i as f64 + 0.5) * width,
+                    *c as f64 / (self.total.max(1) as f64 * width),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_mean_var() {
+        let mut o = Online::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            o.push(x);
+        }
+        assert!((o.mean() - 2.5).abs() < 1e-12);
+        assert!((o.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(o.min, 1.0);
+        assert_eq!(o.max, 4.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::default();
+        for i in 0..=100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 50.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.percentile(95.0) - 95.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_cdf_quantile() {
+        let mut h = Histogram::new(-2.0, 2.0, 40);
+        let mut r = crate::util::rng::Rng::new(1);
+        for _ in 0..50_000 {
+            h.push(r.normal());
+        }
+        assert!((h.cdf(0.0) - 0.5).abs() < 0.02);
+        assert!((h.quantile(0.5)).abs() < 0.15);
+        // ~84% of N(0,1) below 1.0
+        assert!((h.cdf(1.0) - 0.841).abs() < 0.02);
+    }
+
+    #[test]
+    fn histogram_over_underflow() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(-5.0);
+        h.push(5.0);
+        h.push(0.5);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total, 3);
+    }
+}

@@ -1,0 +1,333 @@
+//! Integration tests over the real AOT artifacts (tiny model): runtime
+//! loading, cross-entry numerical consistency, engine/specdec/server
+//! behaviour. Requires `make artifacts` to have produced
+//! `artifacts/tiny_opt_relu_s0`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use rsb::engine::sampler::log_softmax;
+use rsb::engine::{
+    AcceptMode, Engine, EngineConfig, SamplingParams, SpecDecoder, VerifyMask,
+};
+use rsb::runtime::{cpu_client, Arg, Model, Tensor};
+
+const TINY: &str = "tiny_opt_relu_s0";
+
+fn artifacts() -> PathBuf {
+    // tests run from the package root
+    let p = PathBuf::from("artifacts");
+    assert!(
+        p.join(TINY).join("manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+    p
+}
+
+fn tiny() -> Arc<Model> {
+    Arc::new(Model::open(cpu_client().unwrap(), &artifacts(), TINY).unwrap())
+}
+
+#[test]
+fn manifest_and_init_consistency() {
+    let model = tiny();
+    let m = &model.manifest;
+    assert_eq!(m.model_id, TINY);
+    assert_eq!(m.config.arch, "opt");
+    // rust param-count mirror agrees with python
+    assert_eq!(rsb::model::param_count(&m.config), m.param_count);
+    let params = model.init_params(7).unwrap();
+    assert_eq!(params.len(), m.params.len());
+    for (spec, t) in m.params.iter().zip(&params.tensors) {
+        assert_eq!(spec.shape, t.shape, "{}", spec.name);
+    }
+    // deterministic
+    let again = model.init_params(7).unwrap();
+    for (a, b) in params.tensors.iter().zip(&again.tensors) {
+        assert_eq!(a, b);
+    }
+    let diff = model.init_params(8).unwrap();
+    assert!(params.tensors.iter().zip(&diff.tensors).any(|(a, b)| a != b));
+}
+
+#[test]
+fn checkpoint_roundtrip_through_model() {
+    let model = tiny();
+    let params = model.init_params(3).unwrap();
+    let dir = std::env::temp_dir().join(format!("rsb_it_ckpt_{}", std::process::id()));
+    let path = dir.join("tiny.ckpt");
+    model.save_params(&path, &params).unwrap();
+    let loaded = model.load_params(&path).unwrap();
+    for (a, b) in params.tensors.iter().zip(&loaded.tensors) {
+        assert_eq!(a, b);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Teacher-forced NLL via sequential decode1 must match the score entry —
+/// the rust-side analogue of python's decode≡full test, across two entirely
+/// different HLO programs.
+#[test]
+fn decode_chain_matches_score_entry() {
+    let model = tiny();
+    let mut params = model.init_params(1).unwrap();
+    params.upload(model.client()).unwrap();
+    let b = model.manifest.buckets.clone();
+    let c = model.manifest.config.clone();
+    let width = b.train_t + 1;
+    // a fixed token window
+    let doc: Vec<u32> = (0..width as u32).map(|i| (i * 7 + 3) % c.vocab as u32).collect();
+
+    // score path (batch row 0; rows padded with the same window)
+    let score = model.entry("score").unwrap();
+    let mut flat = Vec::new();
+    for _ in 0..b.score_b {
+        flat.extend(doc.iter().map(|&t| t as i32));
+    }
+    let toks = Tensor::i32(vec![b.score_b, width], flat).unwrap();
+    let mut args: Vec<Arg> = params.buffers().unwrap().iter().map(Arg::Device).collect();
+    args.push(Arg::Host(&toks));
+    let outs = score.execute(&args).unwrap();
+    let nll_score: Vec<f32> = outs[0].as_f32().unwrap()[..width - 1].to_vec();
+
+    // decode path: prefill bucket + sequential decode
+    let prefill = model.entry("prefill").unwrap();
+    let decode1 = model.entry("decode1").unwrap();
+    let tp = b.prefill_t;
+    let ptoks = Tensor::i32(vec![1, tp], doc[..tp].iter().map(|&t| t as i32).collect()).unwrap();
+    let mut args: Vec<Arg> = params.buffers().unwrap().iter().map(Arg::Device).collect();
+    args.push(Arg::Host(&ptoks));
+    let pouts = prefill.execute(&args).unwrap();
+    // prefill logits at position i predict token i+1
+    let plog = pouts[0].as_f32().unwrap();
+    for i in 0..tp - 1 {
+        let lp = log_softmax(&plog[i * c.vocab..(i + 1) * c.vocab]);
+        let want = nll_score[i] as f64;
+        let got = -lp[doc[i + 1] as usize];
+        assert!(
+            (want - got).abs() < 3e-3,
+            "prefill NLL mismatch at {i}: {want} vs {got}"
+        );
+    }
+    let mut kv = pouts[1].clone();
+    let ones = Tensor::ones_f32(vec![c.n_layers, c.d_ff]);
+    for (step, i) in (tp - 1..width - 1).enumerate() {
+        // feed token i at position i (prefill already wrote 0..tp-1; the
+        // token at tp-1 is re-fed as the first decode input — consistent
+        // with the overwrite-before-attend invariant)
+        let pos = Tensor::i32(vec![1], vec![i as i32]).unwrap();
+        let tk = Tensor::i32(vec![1, 1], vec![doc[i] as i32]).unwrap();
+        let mut a: Vec<Arg> = params.buffers().unwrap().iter().map(Arg::Device).collect();
+        a.push(Arg::Host(&kv));
+        a.push(Arg::Host(&pos));
+        a.push(Arg::Host(&tk));
+        a.push(Arg::Host(&ones));
+        let outs = decode1.execute(&a).unwrap();
+        kv = outs[1].clone();
+        let lp = log_softmax(outs[0].as_f32().unwrap());
+        let want = nll_score[i] as f64;
+        let got = -lp[doc[i + 1] as usize];
+        assert!(
+            (want - got).abs() < 3e-3,
+            "decode NLL mismatch at {i} (step {step}): {want} vs {got}"
+        );
+    }
+}
+
+#[test]
+fn engine_greedy_is_deterministic_and_batch_invariant() {
+    let model = tiny();
+    let params = model.init_params(2).unwrap();
+    let mut engine = Engine::new(model.clone(), params, EngineConfig::default()).unwrap();
+    let prompt: Vec<u32> = vec![5, 9, 13, 21];
+    // submit the same greedy prompt four times (fills the whole batch)
+    for _ in 0..4 {
+        engine.submit(prompt.clone(), 10);
+    }
+    let mut done = engine.run_to_completion().unwrap();
+    done.sort_by_key(|d| d.id);
+    assert_eq!(done.len(), 4);
+    for d in &done[1..] {
+        assert_eq!(d.tokens, done[0].tokens, "batch rows interfered");
+    }
+    // and a second engine run reproduces it
+    let params = model.init_params(2).unwrap();
+    let mut engine2 = Engine::new(model, params, EngineConfig::default()).unwrap();
+    engine2.submit(prompt, 10);
+    let done2 = engine2.run_to_completion().unwrap();
+    assert_eq!(done2[0].tokens, done[0].tokens);
+}
+
+#[test]
+fn engine_tracks_sparsity_and_respects_max_tokens() {
+    let model = tiny();
+    let params = model.init_params(4).unwrap();
+    let mut engine = Engine::new(model, params, EngineConfig::default()).unwrap();
+    let id = engine.submit(vec![1, 2, 3], 6);
+    let mut done = Vec::new();
+    let mut tracker_sparsity = None;
+    while engine.has_work() {
+        // peek at the tracker before the slot is retired
+        for slot in 0..engine.decode_b {
+            if let Some(tr) = engine.tracker_for_slot(slot) {
+                if tr.steps() > 0 {
+                    tracker_sparsity = Some(tr.aggregated_sparsity());
+                    for w in tr.curve.windows(2) {
+                        assert!(w[1] <= w[0] + 1e-12);
+                    }
+                }
+            }
+        }
+        done.extend(engine.step().unwrap());
+    }
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].id, id);
+    assert_eq!(done[0].tokens.len(), 6);
+    let s = tracker_sparsity.expect("tracker never populated");
+    assert!((0.0..=1.0).contains(&s));
+}
+
+/// KEY serving invariant: speculative decoding with draft == target and
+/// greedy acceptance must reproduce plain greedy decoding exactly, with a
+/// 100% acceptance rate.
+#[test]
+fn specdec_self_draft_matches_greedy() {
+    let model = tiny();
+    let n = 14usize;
+    let prompt: Vec<u32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+
+    // plain greedy via the engine
+    let params = model.init_params(5).unwrap();
+    let mut engine = Engine::new(model.clone(), params, EngineConfig::default()).unwrap();
+    engine.submit(prompt.clone(), n);
+    let greedy = engine.run_to_completion().unwrap().remove(0).tokens;
+
+    // speculative with the same model as its own draft
+    let tp = model.init_params(5).unwrap();
+    let dp = model.init_params(5).unwrap();
+    let mut dec = SpecDecoder::new(
+        model.clone(),
+        tp,
+        model.clone(),
+        dp,
+        4,
+        AcceptMode::Greedy,
+        VerifyMask::Dense,
+        0,
+    )
+    .unwrap();
+    let (tokens, stats) = dec.generate(&prompt, n).unwrap();
+    assert_eq!(tokens, greedy, "speculative output diverged from greedy");
+    assert!(
+        stats.acceptance_rate() > 0.999,
+        "self-draft must always be accepted, got {}",
+        stats.acceptance_rate()
+    );
+}
+
+#[test]
+fn specdec_sparse_mask_preserves_selfdraft_structure() {
+    // With aggregated masking the verification is approximated; acceptance
+    // can drop below 1.0 but the decoder must still emit n tokens and the
+    // measured window sparsity must be sane.
+    let model = tiny();
+    let tp = model.init_params(5).unwrap();
+    let dp = model.init_params(5).unwrap();
+    let mut dec = SpecDecoder::new(
+        model.clone(),
+        tp,
+        model,
+        dp,
+        4,
+        AcceptMode::Greedy,
+        VerifyMask::Aggregated { window: 16 },
+        0,
+    )
+    .unwrap();
+    let (tokens, stats) = dec.generate(&[2, 7, 1, 8], 12).unwrap();
+    assert_eq!(tokens.len(), 12);
+    assert!((0.0..=1.0).contains(&stats.s_agg_gamma));
+    assert!(stats.c_measured > 0.0);
+}
+
+#[test]
+fn neuron_mask_all_ones_equals_default_and_zero_mask_changes_output() {
+    let model = tiny();
+    let mut params = model.init_params(6).unwrap();
+    params.upload(model.client()).unwrap();
+    let c = model.manifest.config.clone();
+    let decode1 = model.entry("decode1").unwrap();
+    let kv = Tensor::zeros_f32(model.manifest.kv_shape(1));
+    let pos = Tensor::i32(vec![1], vec![0]).unwrap();
+    let tk = Tensor::i32(vec![1, 1], vec![7]).unwrap();
+    let run = |mask: &Tensor| -> Vec<f32> {
+        let mut a: Vec<Arg> = params.buffers().unwrap().iter().map(Arg::Device).collect();
+        a.push(Arg::Host(&kv));
+        a.push(Arg::Host(&pos));
+        a.push(Arg::Host(&tk));
+        a.push(Arg::Host(mask));
+        decode1.execute(&a).unwrap()[0].as_f32().unwrap().to_vec()
+    };
+    let ones = run(&Tensor::ones_f32(vec![c.n_layers, c.d_ff]));
+    let ones2 = run(&Tensor::ones_f32(vec![c.n_layers, c.d_ff]));
+    assert_eq!(ones, ones2, "decode must be deterministic");
+    let zeros = run(&Tensor::zeros_f32(vec![c.n_layers, c.d_ff]));
+    assert_ne!(ones, zeros, "zero neuron mask must change the logits");
+}
+
+#[test]
+fn server_roundtrip_over_tcp() {
+    use std::sync::mpsc;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let bpe = Arc::new(rsb::tokenizer::Bpe::train("ab ab ab ba baab abba", 24).unwrap());
+    let bpe_srv = bpe.clone();
+    let server = std::thread::spawn(move || {
+        let model = tiny();
+        let params = model.init_params(0).unwrap();
+        let engine = Engine::new(model, params, EngineConfig::default()).unwrap();
+        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(2), Some(ready_tx))
+    });
+    let addr = ready_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("server start");
+    let mut client = rsb::server::Client::connect(addr).unwrap();
+    for i in 0..2 {
+        let resp = client.request(i, "ab ba", 4, 0.0).unwrap();
+        assert_eq!(resp.get("id").and_then(|v| v.as_i64()), Some(i as i64));
+        assert_eq!(resp.get("tokens").and_then(|v| v.as_usize()), Some(4));
+        assert!(resp.get("text").is_some());
+    }
+    assert_eq!(server.join().unwrap().unwrap(), 2);
+}
+
+#[test]
+fn sampling_params_affect_engine_output() {
+    let model = tiny();
+    let params = model.init_params(9).unwrap();
+    let mut engine = Engine::new(model, params, EngineConfig::default()).unwrap();
+    let prompt = vec![4, 2, 4, 2];
+    engine.submit_with(
+        prompt.clone(),
+        12,
+        SamplingParams {
+            temperature: 1.5,
+            top_k: 0,
+            seed: 1,
+        },
+    );
+    engine.submit_with(
+        prompt,
+        12,
+        SamplingParams {
+            temperature: 1.5,
+            top_k: 0,
+            seed: 2,
+        },
+    );
+    let mut done = engine.run_to_completion().unwrap();
+    done.sort_by_key(|d| d.id);
+    assert_ne!(
+        done[0].tokens, done[1].tokens,
+        "different seeds at T=1.5 should diverge"
+    );
+}

@@ -1,0 +1,367 @@
+//! Property-based tests over the coordinator substrates (no `proptest`
+//! offline — `mod prop_rt` is a small seeded-case runner with failure
+//! reporting; cases are deterministic so failures reproduce exactly).
+
+use rsb::engine::kv::{KvBatch, SlotManager};
+use rsb::engine::request::SamplingParams;
+use rsb::engine::sampler::{argmax, log_softmax, sample, softmax};
+use rsb::jsonx::{self, Value};
+use rsb::runtime::checkpoint;
+use rsb::runtime::tensor::Tensor;
+use rsb::sparsity::{AggregatedTracker, ReusePolicy, ReuseStrategy};
+use rsb::tokenizer::Bpe;
+use rsb::util::rng::Rng;
+
+mod prop_rt {
+    use super::Rng;
+
+    /// Run `f` over `n` seeded cases; panic with the failing seed.
+    pub fn check(name: &str, n: u64, f: impl Fn(&mut Rng)) {
+        for seed in 0..n {
+            let mut rng = Rng::new(0xBEEF ^ seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f(&mut rng)
+            }));
+            if let Err(e) = result {
+                eprintln!("property `{name}` failed at seed {seed}");
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+use prop_rt::check;
+
+#[test]
+fn prop_slot_manager_never_double_owns() {
+    check("slot_manager", 50, |rng| {
+        let cap = rng.range(1, 8);
+        let mut sm = SlotManager::new(cap);
+        let mut owned: std::collections::HashMap<usize, u64> = Default::default();
+        for step in 0..200u64 {
+            if rng.chance(0.55) {
+                if let Some(slot) = sm.alloc(step) {
+                    assert!(!owned.contains_key(&slot), "slot {slot} double-allocated");
+                    owned.insert(slot, step);
+                }
+            } else if let Some((&slot, _)) = owned.iter().next() {
+                let id = owned.remove(&slot).unwrap();
+                assert_eq!(sm.release(slot).unwrap(), id);
+                assert!(sm.release(slot).is_err(), "double free accepted");
+            }
+            assert_eq!(sm.capacity() - sm.free_count(), owned.len());
+            for (&slot, &id) in &owned {
+                assert_eq!(sm.owner_of(slot), Some(id));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_kv_pack_extract_roundtrip_random() {
+    check("kv_roundtrip", 25, |rng| {
+        let (l, b, h, t, hd) = (
+            rng.range(1, 3),
+            rng.range(1, 5),
+            rng.range(1, 3),
+            rng.range(1, 6),
+            rng.range(1, 4),
+        );
+        let mut kv = KvBatch::new(&[l, 2, b, h, t, hd]).unwrap();
+        // pack random rows into random slots; extraction must return them
+        let mut expected: Vec<Option<Tensor>> = vec![None; b];
+        for _ in 0..b * 2 {
+            let slot = rng.below(b);
+            let n = l * 2 * h * t * hd;
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let row = Tensor::f32(vec![l, 2, 1, h, t, hd], data).unwrap();
+            kv.pack_row(slot, &row).unwrap();
+            expected[slot] = Some(row);
+        }
+        for (slot, want) in expected.iter().enumerate() {
+            if let Some(w) = want {
+                assert_eq!(&kv.extract_row(slot).unwrap(), w);
+            }
+        }
+        // whole-tensor roundtrip
+        let t_all = kv.to_tensor();
+        kv.update_from(&t_all).unwrap();
+        assert_eq!(kv.to_tensor(), t_all);
+    });
+}
+
+#[test]
+fn prop_aggregated_tracker_monotone_and_consistent() {
+    check("tracker_monotone", 25, |rng| {
+        let (l, b, f) = (rng.range(1, 4), rng.range(1, 3), rng.range(4, 40));
+        let mut tr = AggregatedTracker::new(l, f);
+        let row = rng.below(b);
+        for _ in 0..30 {
+            let data: Vec<f32> = (0..l * b * f)
+                .map(|_| if rng.chance(0.15) { 1.0 } else { 0.0 })
+                .collect();
+            let mask = Tensor::f32(vec![l, b, f], data).unwrap();
+            tr.push_mask(&mask, row).unwrap();
+        }
+        for w in tr.curve.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "curve increased");
+        }
+        for lc in &tr.layer_curves {
+            for w in lc.windows(2) {
+                assert!(w[1] <= w[0] + 1e-12);
+            }
+        }
+        // used_mask density == 1 - final aggregated sparsity (per layer mean)
+        let m = tr.used_mask();
+        let used_frac = m.as_f32().unwrap().iter().filter(|&&x| x != 0.0).count() as f64
+            / (l * f) as f64;
+        assert!((used_frac - (1.0 - tr.aggregated_sparsity())).abs() < 1e-9);
+        // observed aggregated sparsity >= what random baseline predicts is
+        // NOT guaranteed pointwise for random masks, but the curve must
+        // stay within [0, 1]
+        assert!(tr.aggregated_sparsity() >= 0.0 && tr.aggregated_sparsity() <= 1.0);
+    });
+}
+
+#[test]
+fn prop_reuse_policy_masks_structurally_sound() {
+    check("reuse_policy", 30, |rng| {
+        let (l, f) = (rng.range(1, 3), rng.range(8, 40));
+        let gamma = rng.range(1, 6);
+        let warmup = rng.range(1, 5);
+        let strategy = *rng.choose(&[
+            ReuseStrategy::None,
+            ReuseStrategy::Aggregated,
+            ReuseStrategy::Random,
+        ]);
+        let mut p = ReusePolicy::new(strategy, gamma, warmup, l, f, 3);
+        let mut live_sets: Vec<Vec<usize>> = Vec::new();
+        for step in 0..40 {
+            let mask = p.current_mask();
+            let md = mask.as_f32().unwrap();
+            assert_eq!(mask.shape, vec![l, f]);
+            assert!(md.iter().all(|&x| x == 0.0 || x == 1.0));
+            if !p.is_reusing() {
+                assert!(md.iter().all(|&x| x == 1.0), "collect phase must be dense");
+            }
+            // feed a random ffn_mask observation
+            let live: Vec<usize> = (0..f).filter(|_| rng.chance(0.3)).collect();
+            let mut data = vec![0.0f32; l * f];
+            for li in 0..l {
+                for &fi in &live {
+                    data[li * f + fi] = 1.0;
+                }
+            }
+            live_sets.push(live);
+            let obs = Tensor::f32(vec![l, 1, f], data).unwrap();
+            p.observe(&obs, 0).unwrap();
+            let _ = step;
+        }
+    });
+}
+
+#[test]
+fn prop_sampler_topk_and_greedy() {
+    check("sampler", 40, |rng| {
+        let v = rng.range(4, 64);
+        let logits: Vec<f32> = (0..v).map(|_| rng.normal() as f32 * 3.0).collect();
+        // greedy == argmax
+        let greedy = sample(&logits, &SamplingParams::default(), rng);
+        assert_eq!(greedy as usize, argmax(&logits));
+        // top-k sampling stays within the top-k set
+        let k = rng.range(1, v);
+        let params = SamplingParams {
+            temperature: rng.f64() * 2.0 + 0.1,
+            top_k: k,
+            seed: 0,
+        };
+        let mut sorted: Vec<usize> = (0..v).collect();
+        sorted.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        let allowed: std::collections::HashSet<usize> = sorted[..k].iter().cloned().collect();
+        for _ in 0..20 {
+            let t = sample(&logits, &params, rng) as usize;
+            assert!(allowed.contains(&t), "sampled {t} outside top-{k}");
+        }
+        // softmax/log_softmax consistency
+        let p = softmax(&logits);
+        let lp = log_softmax(&logits);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        for (a, b) in p.iter().zip(&lp) {
+            assert!((a.ln() - b).abs() < 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_jsonx_roundtrip_random_values() {
+    fn random_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.chance(0.5)),
+            2 => Value::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => {
+                let n = rng.below(12);
+                Value::Str(
+                    (0..n)
+                        .map(|_| *rng.choose(&['a', 'é', '"', '\\', '\n', '😀', 'z', '\t']))
+                        .collect(),
+                )
+            }
+            4 => Value::Arr((0..rng.below(4)).map(|_| random_value(rng, depth + 1)).collect()),
+            _ => Value::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("jsonx_roundtrip", 200, |rng| {
+        let v = random_value(rng, 0);
+        let text = v.to_json();
+        let back = jsonx::parse(&text).expect("parse own output");
+        assert_eq!(v, back, "roundtrip mismatch for {text}");
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_tensors() {
+    check("checkpoint_roundtrip", 15, |rng| {
+        let dir = std::env::temp_dir().join(format!(
+            "rsb_prop_ckpt_{}_{}",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        let path = dir.join("t.ckpt");
+        let n = rng.range(1, 6);
+        let tensors: Vec<(String, Tensor)> = (0..n)
+            .map(|i| {
+                let rank = rng.below(4);
+                let shape: Vec<usize> = (0..rank).map(|_| rng.range(1, 5)).collect();
+                let numel: usize = shape.iter().product();
+                let t = match rng.below(3) {
+                    0 => Tensor::f32(
+                        shape,
+                        (0..numel).map(|_| rng.normal() as f32).collect(),
+                    )
+                    .unwrap(),
+                    1 => Tensor::i32(
+                        shape,
+                        (0..numel).map(|_| rng.next_u64() as i32).collect(),
+                    )
+                    .unwrap(),
+                    _ => Tensor::u32(
+                        shape,
+                        (0..numel).map(|_| rng.next_u64() as u32).collect(),
+                    )
+                    .unwrap(),
+                };
+                (format!("t{i}"), t)
+            })
+            .collect();
+        let refs: Vec<(String, &Tensor)> =
+            tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        checkpoint::save(&path, &refs).unwrap();
+        let loaded = checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.len(), tensors.len());
+        for ((n1, t1), (n2, t2)) in tensors.iter().zip(&loaded) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn prop_bpe_roundtrip_synthlang() {
+    check("bpe_roundtrip", 8, |rng| {
+        let mut gen = rsb::data::Generator::new(rng.next_u64());
+        let text = gen.corpus(3000);
+        let vocab = rng.range(40, 300);
+        let bpe = Bpe::train(&text, vocab).unwrap();
+        assert!(bpe.vocab_size() <= vocab);
+        let ids = bpe.encode(&text);
+        assert_eq!(bpe.decode(&ids), text);
+        // token ids in range
+        assert!(ids.iter().all(|&t| (t as usize) < bpe.vocab_size()));
+    });
+}
+
+#[test]
+fn prop_costmodel_monotonicity() {
+    use rsb::costmodel::specdec::*;
+    check("costmodel", 100, |rng| {
+        let c = rng.f64() * 0.3 + 0.005;
+        let gamma = rng.range(1, 30);
+        let s1 = rng.f64();
+        let s2 = (s1 + rng.f64() * (1.0 - s1)).min(1.0);
+        // Thm 1 monotone increasing in sparsity, >= 1
+        let a = thm1_speedup_vs_standard(c, gamma, s1);
+        let b = thm1_speedup_vs_standard(c, gamma, s2);
+        assert!(a >= 1.0 - 1e-12);
+        assert!(b >= a - 1e-12);
+        // Thm 2 monotone in alpha
+        let alpha1 = rng.f64() * 0.98;
+        let alpha2 = (alpha1 + 0.01).min(0.99);
+        let t1 = thm2_speedup_vs_autoregressive(c, gamma, s1, alpha1);
+        let t2 = thm2_speedup_vs_autoregressive(c, gamma, s1, alpha2);
+        assert!(t2 >= t1 - 1e-12);
+        // expected tokens within [1, gamma+1]
+        let e = expected_tokens(alpha1, gamma);
+        assert!((1.0..=(gamma as f64 + 1.0)).contains(&e));
+    });
+}
+
+#[test]
+fn prop_flops_model_bounds() {
+    use rsb::model::{flops_with_sparsity, LayerSparsity};
+    use rsb::runtime::artifact::ModelCfg;
+    check("flops_bounds", 40, |rng| {
+        let cfg = ModelCfg {
+            size: "p".into(),
+            arch: (*rng.choose(&["opt", "llama", "falcon"])).into(),
+            act: "relu".into(),
+            stage: 0,
+            d_model: rng.range(8, 64) * 8,
+            n_layers: rng.range(1, 8),
+            n_heads: 8,
+            d_ff: rng.range(8, 64) * 16,
+            vocab: rng.range(16, 256) * 8,
+            max_seq: 96,
+            shift: 1.0,
+            ffn_act: "relu".into(),
+            gated: false,
+            parallel_block: false,
+            has_bias: false,
+        };
+        let sp: Vec<LayerSparsity> = (0..cfg.n_layers)
+            .map(|_| LayerSparsity {
+                qkv: rng.f64(),
+                up: rng.f64(),
+                ffn: rng.f64(),
+            })
+            .collect();
+        let dense = flops_with_sparsity(&cfg, 32, &vec![LayerSparsity::default(); cfg.n_layers]);
+        let sparse = flops_with_sparsity(&cfg, 32, &sp);
+        assert!(sparse.total() <= dense.total() + 1e-6);
+        assert!(sparse.total() > 0.0);
+        // attention + lm head are sparsity-invariant
+        assert!((sparse.attention - dense.attention).abs() < 1e-9);
+        assert!((sparse.lm_head - dense.lm_head).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_rng_streams_independent() {
+    check("rng_fold_in", 50, |rng| {
+        let base = Rng::new(rng.next_u64());
+        let mut a = base.fold_in(1);
+        let mut b = base.fold_in(2);
+        let mut same = 0;
+        for _ in 0..64 {
+            if a.next_u64() == b.next_u64() {
+                same += 1;
+            }
+        }
+        assert!(same < 2, "folded streams collide");
+    });
+}

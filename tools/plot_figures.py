@@ -1,0 +1,181 @@
+#!/usr/bin/env python
+"""Render the paper's figures from runs/figures/*.csv (build-time utility;
+matplotlib only — never on the request path).
+
+Usage: python tools/plot_figures.py [--runs runs] [--out runs/plots]
+Produces one PNG per available figure CSV, matching the paper's panels.
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+from collections import defaultdict
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+
+def read(path):
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def group(rows, key):
+    out = defaultdict(list)
+    for r in rows:
+        out[r[key]].append(r)
+    return out
+
+
+def save(fig, out_dir, name):
+    path = os.path.join(out_dir, name)
+    fig.tight_layout()
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    print(f"  {path}")
+
+
+def plot_fig2a(rows, out):
+    fig, ax = plt.subplots(figsize=(5, 3.5))
+    for act, rs in group(rows, "act").items():
+        ax.plot([float(r["x"]) for r in rs], [float(r["y"]) for r in rs], label=act)
+    ax.set(xlabel="x", ylabel="f(x)", title="Fig 2a: gating shapes x·σ(βx)")
+    ax.legend()
+    ax.grid(alpha=0.3)
+    save(fig, out, "fig2a_shapes.png")
+
+
+def plot_series(rows, xk, yk, gk, title, xlabel, ylabel, out, name, logy=False):
+    fig, ax = plt.subplots(figsize=(5, 3.5))
+    for g, rs in sorted(group(rows, gk).items()):
+        xs = [float(r[xk]) for r in rs]
+        ys = [float(r[yk]) for r in rs if r[yk]]
+        if len(ys) == len(xs) and xs:
+            ax.plot(xs, ys, marker="o", ms=3, label=str(g))
+    if logy:
+        ax.set_yscale("log")
+    ax.set(xlabel=xlabel, ylabel=ylabel, title=title)
+    ax.legend(fontsize=7)
+    ax.grid(alpha=0.3)
+    save(fig, out, name)
+
+
+def plot_fig9b(rows, out):
+    fig, ax = plt.subplots(figsize=(5, 3.5))
+    xs = [float(r["sparsity"]) for r in rows]
+    ax.plot(xs, [float(r["rowskip_ms"]) for r in rows], "o-", label="measured row-skip")
+    ax.plot(xs, [float(r["model_ms"]) for r in rows], "s--", label="roofline model")
+    ax.axhline(float(rows[0]["dense_ms"]), color="gray", ls=":", label="dense")
+    ax.set(xlabel="activation sparsity", ylabel="GEMV latency (ms)",
+           title="Fig 9b: FLOPS ≈ latency under row sparsity")
+    ax.legend()
+    ax.grid(alpha=0.3)
+    save(fig, out, "fig9b.png")
+
+
+def plot_fig1c(rows, out):
+    fig, ax = plt.subplots(figsize=(5, 3.5))
+    for r in rows:
+        x, y = float(r["gflops_tok"]), float(r["avg_acc"]) * 100
+        ax.scatter(x, y)
+        ax.annotate(r["model"].replace("base_", ""), (x, y), fontsize=6)
+    ax.set(xlabel="GFLOPS/token", ylabel="avg zero-shot acc (%)",
+           title="Fig 1c: efficiency vs accuracy")
+    ax.grid(alpha=0.3)
+    save(fig, out, "fig1c.png")
+
+
+def plot_fig12(rows, out):
+    fig, ax = plt.subplots(figsize=(5, 3.5))
+    for kind, rs in group(rows, "kind").items():
+        xs = [float(r["gflops_tok"]) for r in rs]
+        ys = [float(r["avg_acc"]) * 100 for r in rs]
+        style = "o--" if kind == "dense" else "r*"
+        ax.plot(xs, ys, style, label=kind, ms=10 if kind != "dense" else 5)
+    ax.set(xlabel="GFLOPS/token", ylabel="avg acc (%)",
+           title="Fig 12: relufied large vs dense small")
+    ax.legend()
+    ax.grid(alpha=0.3)
+    save(fig, out, "fig12.png")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", default="runs")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    fig_dir = os.path.join(args.runs, "figures")
+    out = args.out or os.path.join(args.runs, "plots")
+    os.makedirs(out, exist_ok=True)
+
+    plans = [
+        ("fig2a_shapes.csv", plot_fig2a),
+        ("fig2c_sparsity.csv", lambda r, o: plot_series(
+            r, "step", "ffn_sparsity", "act", "Fig 2c: sparsity vs training",
+            "step", "FFN sparsity", o, "fig2c.png")),
+        ("fig2_loss.csv", lambda r, o: plot_series(
+            r, "step", "val_loss", "act", "Fig 2: loss parity across activations",
+            "step", "val loss", o, "fig2_loss.png")),
+        ("fig1a.csv", lambda r, o: plot_series(
+            r, "layer", "ffn_sparsity", "model", "Fig 1a: per-layer FFN sparsity",
+            "layer", "sparsity", o, "fig1a.png")),
+        ("fig4.csv", lambda r, o: plot_series(
+            r, "layer", "ffn_sparsity", "model", "Fig 4: sparsity after relufication",
+            "layer", "sparsity", o, "fig4.png")),
+        ("fig5_hist.csv", lambda r, o: plot_series(
+            [x for x in r if x["layer"] == "2"], "bin_center", "density", "phase",
+            "Fig 5: preactivation distribution (layer 2)", "preactivation",
+            "density", o, "fig5.png")),
+        ("fig6_recovery.csv", lambda r, o: plot_series(
+            r, "step", "val_loss", "model", "Fig 6: recovery during finetuning",
+            "step", "val loss", o, "fig6.png")),
+        ("fig7a.csv", lambda r, o: plot_series(
+            r, "token", "aggregated_sparsity", "layer", "Fig 7a: aggregated sparsity",
+            "tokens processed", "unused fraction", o, "fig7a.png")),
+        ("fig7b.csv", lambda r, o: plot_series(
+            r, "token", "observed", "layer", "Fig 7b: observed vs random",
+            "tokens processed", "unused fraction", o, "fig7b.png", logy=True)),
+        ("fig7c.csv", lambda r, o: plot_series(
+            r, "gamma", "ppl", "strategy", "Fig 7c: reuse perplexity",
+            "gamma", "perplexity", o, "fig7c.png")),
+        ("fig7d.csv", lambda r, o: plot_series(
+            r, "gamma", "thm1_speedup_vs_standard", "mode",
+            "Fig 7d: sparse speculative decoding speedup", "gamma",
+            "speedup vs standard", o, "fig7d.png")),
+        ("fig8a.csv", lambda r, o: plot_series(
+            r, "step", "avg_acc", "act", "Fig 8a: shifted ReLU accuracy",
+            "finetune step", "avg acc", o, "fig8a.png")),
+        ("fig8b.csv", lambda r, o: plot_series(
+            r, "step", "ffn_sparsity", "act", "Fig 8b: shifted ReLU sparsity",
+            "finetune step", "FFN sparsity", o, "fig8b.png")),
+        ("fig9b.csv", plot_fig9b),
+        ("fig10.csv", lambda r, o: plot_series(
+            [x for x in r if x["alpha"] == "0.8"], "gamma", "sparse_speedup",
+            "alpha", "Fig 10b: speedup over autoregressive (α=0.8)", "gamma",
+            "speedup", o, "fig10b.png")),
+        ("fig11_hist.csv", lambda r, o: plot_series(
+            [x for x in r if x["act"] == "relu"], "bin_center", "density",
+            "tokens_seen", "Fig 11: preactivation evolution (relu)",
+            "preactivation", "density", o, "fig11.png")),
+        ("fig1c.csv", plot_fig1c),
+        ("fig12_scaling.csv", plot_fig12),
+        ("e2e_loss.csv", lambda r, o: plot_series(
+            [dict(x, m="e2e") for x in r], "step", "loss", "m",
+            "End-to-end 91M training loss", "step", "loss", o, "e2e_loss.png")),
+    ]
+    for name, fn in plans:
+        path = os.path.join(fig_dir, name)
+        if os.path.exists(path):
+            rows = read(path)
+            if rows:
+                fn(rows, out)
+        else:
+            print(f"  (skip {name}: not generated yet)")
+
+
+if __name__ == "__main__":
+    main()
