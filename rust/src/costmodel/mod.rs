@@ -5,7 +5,10 @@
 //!   Fig 9b).
 //! - `specdec`: Theorems 1 & 2 (sparse speculative decoding speedups) and
 //!   optimal-γ selection (Fig 7d, Fig 10a/b).
+//! - `predictor`: hot-neuron-mask-aware FLOPs/bytes per decode step and the
+//!   projected speedup `bench_predictor` overlays on measurement.
 
+pub mod predictor;
 pub mod specdec;
 
 /// A target device for the latency model. Defaults mirror the paper's A100

@@ -1,0 +1,151 @@
+//! Predictor-aware decode-step cost model: what a hot-neuron mask of a given
+//! density buys on a roofline device (the projection `bench_predictor`
+//! overlays against measurement).
+//!
+//! Under the neuron-major layout (`sparse::FfnWeights`) a predicted-dead
+//! neuron skips one up row *and* one down row, so FFN FLOPs and weight IO
+//! both scale with the live fraction; everything else in the step (attention,
+//! qkv/out projections, lm head) is unchanged. That asymmetry is why the
+//! whole-step speedup saturates well below the raw FFN FLOP reduction —
+//! both numbers are reported so the gap is visible.
+
+use crate::costmodel::DeviceProfile;
+use crate::model::{flops_per_token, Flops};
+use crate::runtime::artifact::ModelCfg;
+
+/// FLOPs + weight-IO bytes of one component of a decode step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepCost {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// Dense per-token FFN cost over all layers (up/gate + down projections).
+pub fn ffn_dense_cost(cfg: &ModelCfg) -> StepCost {
+    let d = cfg.d_model as f64;
+    let f = cfg.d_ff as f64;
+    let l = cfg.n_layers as f64;
+    let n_up = if cfg.gated { 2.0 } else { 1.0 };
+    // per layer: up/gate rows (n_up · d·f) + down rows (f·d)
+    let weights = l * (n_up * d * f + f * d);
+    StepCost {
+        flops: 2.0 * weights,
+        bytes: 4.0 * weights,
+    }
+}
+
+/// Predicted-sparse per-token FFN cost at `live_frac` (the fraction of
+/// neurons the mask keeps; both projections scale with it).
+pub fn ffn_sparse_cost(cfg: &ModelCfg, live_frac: f64) -> StepCost {
+    let dense = ffn_dense_cost(cfg);
+    let live = live_frac.clamp(0.0, 1.0);
+    StepCost {
+        flops: dense.flops * live,
+        bytes: dense.bytes * live,
+    }
+}
+
+/// FFN FLOP reduction factor (the `bench_predictor` acceptance number):
+/// dense FFN FLOPs / predicted FFN FLOPs.
+pub fn ffn_flop_reduction(live_frac: f64) -> f64 {
+    let live = live_frac.clamp(0.0, 1.0);
+    if live <= 0.0 {
+        f64::INFINITY
+    } else {
+        1.0 / live
+    }
+}
+
+/// Whole decode-step cost at context `ctx` with a mask of `live_frac`
+/// (live_frac = 1.0 is the dense step).
+pub fn step_cost(cfg: &ModelCfg, ctx: usize, live_frac: f64) -> StepCost {
+    let fl: Flops = flops_per_token(cfg, ctx);
+    let dense_ffn = ffn_dense_cost(cfg);
+    let sparse_ffn = ffn_sparse_cost(cfg, live_frac);
+    // weight IO of the non-FFN projections (qkv, attn out, lm head), f32
+    let d = cfg.d_model as f64;
+    let v = cfg.vocab as f64;
+    let other_bytes = cfg.n_layers as f64 * (4.0 * d * 3.0 * d + 4.0 * d * d) + 4.0 * d * v;
+    StepCost {
+        flops: fl.total() - dense_ffn.flops + sparse_ffn.flops,
+        bytes: other_bytes + sparse_ffn.bytes,
+    }
+}
+
+/// Roofline latency of a decode step with a `live_frac` mask.
+pub fn step_latency(cfg: &ModelCfg, ctx: usize, live_frac: f64, dev: &DeviceProfile) -> f64 {
+    let c = step_cost(cfg, ctx, live_frac);
+    dev.latency(c.bytes, c.flops)
+}
+
+/// Projected whole-step speedup of a `live_frac` mask over dense.
+pub fn projected_speedup(cfg: &ModelCfg, ctx: usize, live_frac: f64, dev: &DeviceProfile) -> f64 {
+    step_latency(cfg, ctx, 1.0, dev) / step_latency(cfg, ctx, live_frac, dev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            size: "base".into(),
+            arch: "opt".into(),
+            act: "relu".into(),
+            stage: 0,
+            d_model: 256,
+            n_layers: 6,
+            n_heads: 8,
+            d_ff: 1024,
+            vocab: 2048,
+            max_seq: 96,
+            shift: 1.0,
+            ffn_act: "relu".into(),
+            gated: false,
+            parallel_block: false,
+            has_bias: true,
+        }
+    }
+
+    #[test]
+    fn dense_ffn_cost_matches_flops_model() {
+        let c = cfg();
+        let fl = flops_per_token(&c, 32);
+        let ffn = ffn_dense_cost(&c);
+        assert!((ffn.flops - (fl.ffn_up + fl.ffn_down)).abs() < 1e-6);
+        assert_eq!(ffn.bytes, 2.0 * ffn.flops);
+    }
+
+    #[test]
+    fn flop_reduction_is_reciprocal_of_live_frac() {
+        assert!((ffn_flop_reduction(0.5) - 2.0).abs() < 1e-12);
+        assert!((ffn_flop_reduction(0.25) - 4.0).abs() < 1e-12);
+        assert!((ffn_flop_reduction(1.0) - 1.0).abs() < 1e-12);
+        assert!(ffn_flop_reduction(0.0).is_infinite());
+    }
+
+    #[test]
+    fn speedup_monotone_in_mask_density_and_bounded() {
+        let c = cfg();
+        let dev = DeviceProfile::CPU1;
+        let s_half = projected_speedup(&c, 32, 0.5, &dev);
+        let s_tenth = projected_speedup(&c, 32, 0.1, &dev);
+        assert!(s_half > 1.0);
+        assert!(s_tenth > s_half);
+        assert!((projected_speedup(&c, 32, 1.0, &dev) - 1.0).abs() < 1e-12);
+        // whole-step speedup can never beat the raw FFN reduction
+        assert!(s_tenth < ffn_flop_reduction(0.1));
+    }
+
+    #[test]
+    fn sparse_step_cost_never_exceeds_dense() {
+        let c = cfg();
+        for live in [0.0, 0.2, 0.7, 1.0] {
+            let s = step_cost(&c, 16, live);
+            let d = step_cost(&c, 16, 1.0);
+            assert!(s.flops <= d.flops + 1e-6);
+            assert!(s.bytes <= d.bytes + 1e-6);
+            assert!(s.flops > 0.0);
+        }
+    }
+}

@@ -9,8 +9,14 @@
 //!
 //! Sparsity integration (the paper's contribution as a first-class serving
 //! feature): every decode step returns the per-slot FFN activation mask;
-//! the engine feeds per-request `AggregatedTracker`s and can apply a
-//! neuron-mask policy (weight reuse, §5.1) to the FFN.
+//! the engine feeds per-request `AggregatedTracker`s *and* per-slot
+//! `SlotPredictor`s (`crate::predictor`). Each step the predictors propose
+//! hot-neuron sets, the engine unions them into the batch-shared `[L, F]`
+//! mask the decode entry consumes (weight rows are shared across the batch,
+//! so the union is the set that must stay loaded), and the observed masks
+//! flow back to refresh the predictors. Periodic dense probe steps
+//! (`probe_every`) keep the shadow recall estimate honest — the entries
+//! report `ffn_mask` post-gating, so misses are only visible on dense steps.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -22,6 +28,7 @@ use crate::engine::request::{
 };
 use crate::engine::sampler;
 use crate::error::{Error, Result};
+use crate::predictor::{NeuronPolicy, SlotPredictor};
 use crate::runtime::{Arg, Entry, Model, ParamStore, Tensor};
 use crate::sparsity::AggregatedTracker;
 use crate::sparsity::SparsityStats;
@@ -32,9 +39,17 @@ pub struct EngineConfig {
     pub eos_token: Option<u32>,
     /// Track per-request aggregated sparsity (small overhead).
     pub track_sparsity: bool,
-    /// Fixed FFN neuron mask applied to every decode step (experiments);
-    /// None = all-ones.
-    pub neuron_mask: Option<Tensor>,
+    /// Default FFN neuron-mask policy (per-request overrides via
+    /// `Request::with_policy`). `Dense` reproduces the old `None` behaviour;
+    /// `Static(mask)` the old fixed-mask experiments.
+    pub policy: NeuronPolicy,
+    /// Minimum shadow-estimated recall a predictive policy needs before its
+    /// mask is enforced; `>= 1.0` = shadow mode (measure, never enforce —
+    /// outputs bit-identical to `Dense`).
+    pub recall_floor: f64,
+    /// Run a dense probe step every N steps while enforcing, to refresh the
+    /// recall estimate (0 disables probing).
+    pub probe_every: usize,
 }
 
 impl Default for EngineConfig {
@@ -43,7 +58,9 @@ impl Default for EngineConfig {
             default_max_new_tokens: 32,
             eos_token: None,
             track_sparsity: true,
-            neuron_mask: None,
+            policy: NeuronPolicy::Dense,
+            recall_floor: 0.95,
+            probe_every: 16,
         }
     }
 }
@@ -60,6 +77,7 @@ pub struct Engine {
     queue: VecDeque<Request>,
     active: Vec<Option<ActiveRequest>>,
     trackers: Vec<Option<AggregatedTracker>>,
+    predictors: Vec<Option<SlotPredictor>>,
     cfg: EngineConfig,
     pub metrics: EngineMetrics,
     pub stats: SparsityStats,
@@ -98,6 +116,7 @@ impl Engine {
             queue: VecDeque::new(),
             active: (0..decode_b).map(|_| None).collect(),
             trackers: (0..decode_b).map(|_| None).collect(),
+            predictors: (0..decode_b).map(|_| None).collect(),
             stats: SparsityStats::new(n_layers),
             cfg,
             metrics: EngineMetrics::default(),
@@ -116,10 +135,25 @@ impl Engine {
         max_new_tokens: usize,
         sampling: SamplingParams,
     ) -> u64 {
+        self.submit_with_policy(prompt, max_new_tokens, sampling, None)
+    }
+
+    /// Submit with a per-request neuron-mask policy override (None = engine
+    /// default policy).
+    pub fn submit_with_policy(
+        &mut self,
+        prompt: Vec<u32>,
+        max_new_tokens: usize,
+        sampling: SamplingParams,
+        policy: Option<NeuronPolicy>,
+    ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.queue
-            .push_back(Request::new(id, prompt, max_new_tokens).with_sampling(sampling));
+        self.queue.push_back(
+            Request::new(id, prompt, max_new_tokens)
+                .with_sampling(sampling)
+                .with_policy(policy),
+        );
         self.metrics.requests_enqueued += 1;
         id
     }
@@ -142,12 +176,66 @@ impl Engine {
         self.trackers.get(slot).and_then(|t| t.as_ref())
     }
 
+    /// The hot-neuron predictor currently attached to a slot (None for
+    /// dense slots or empty slots).
+    pub fn predictor_for_slot(&self, slot: usize) -> Option<&SlotPredictor> {
+        self.predictors.get(slot).and_then(|p| p.as_ref())
+    }
+
     fn param_args(&self) -> Result<Vec<Arg<'_>>> {
         let bufs = self
             .params
             .buffers()
             .ok_or_else(|| Error::Engine("params not uploaded".into()))?;
         Ok(bufs.iter().map(Arg::Device).collect())
+    }
+
+    /// Decide this step's batch neuron mask. Returns `(mask, enforced,
+    /// probe)`: `enforced` is true when a predicted sparse mask is applied,
+    /// `probe` when a scheduled dense probe overrode enforcement.
+    ///
+    /// The decode entry consumes one `[L, F]` mask for the whole batch
+    /// (weight rows are shared), so a sparse step happens only when *every*
+    /// occupied slot proposes a set — any warming-up, dense-policy or
+    /// fallen-back slot keeps the step dense (per-request `Dense` overrides
+    /// therefore win over an engine-wide `Static`, by design). Proposals
+    /// are still computed (and cached) for every predictive slot so dense
+    /// steps double as shadow recall measurements. Probe steps are
+    /// scheduled only while a *predictive* (Reuse/TopP) slot is live —
+    /// `Static` masks are an explicit experiment knob and are never
+    /// probed away.
+    fn plan_mask(&mut self) -> Result<(Tensor, bool, bool)> {
+        let c = &self.model.manifest.config;
+        let (n_layers, d_ff) = (c.n_layers, c.d_ff);
+        let scheduled_probe = self.cfg.probe_every > 0
+            && self.metrics.steps % self.cfg.probe_every as u64 == 0;
+        let mut union = vec![false; n_layers * d_ff];
+        let mut all_propose = true;
+        let mut any_predictive = false;
+        for slot in 0..self.decode_b {
+            if self.active[slot].is_none() {
+                continue;
+            }
+            match &mut self.predictors[slot] {
+                Some(p) => {
+                    any_predictive |= p.policy().is_predictive();
+                    match p.propose() {
+                        Some(bits) => {
+                            for (u, &b) in union.iter_mut().zip(bits) {
+                                *u |= b;
+                            }
+                        }
+                        None => all_propose = false,
+                    }
+                }
+                None => all_propose = false,
+            }
+        }
+        let probe = scheduled_probe && any_predictive;
+        if probe || !all_propose {
+            return Ok((Tensor::ones_f32(vec![n_layers, d_ff]), false, probe));
+        }
+        Ok((Tensor::mask_from_bits(vec![n_layers, d_ff], &union)?, true, false))
     }
 
     /// Admit + one batched decode step. Returns completions finished this
@@ -172,13 +260,7 @@ impl Engine {
         let kv_t = self.kv.to_tensor();
         let pos_t = Tensor::i32(vec![self.decode_b], pos)?;
         let tok_t = Tensor::i32(vec![self.decode_b, 1], toks)?;
-        let mask_t = match &self.cfg.neuron_mask {
-            Some(m) => m.clone(),
-            None => Tensor::ones_f32(vec![
-                self.model.manifest.config.n_layers,
-                self.model.manifest.config.d_ff,
-            ]),
-        };
+        let (mask_t, enforced, probe) = self.plan_mask()?;
         let mut args = self.param_args()?;
         args.push(Arg::Host(&kv_t));
         args.push(Arg::Host(&pos_t));
@@ -197,6 +279,13 @@ impl Engine {
         self.metrics
             .batch_occupancy
             .push(self.active_count() as f64 / self.decode_b as f64);
+        if enforced {
+            self.metrics.enforced_steps += 1;
+            self.metrics.mask_density.push(mask_t.density()?);
+        }
+        if probe {
+            self.metrics.probe_steps += 1;
+        }
 
         // sample next tokens per live slot + retire finished requests
         let vocab = self.model.manifest.config.vocab;
@@ -211,6 +300,12 @@ impl Engine {
             if self.cfg.track_sparsity {
                 if let Some(tr) = &mut self.trackers[slot] {
                     tr.push_mask(ffn_mask, slot)?;
+                }
+            }
+            if let Some(p) = &mut self.predictors[slot] {
+                if let Some(acc) = p.observe(ffn_mask, slot, !enforced)? {
+                    self.metrics.predictor_recall.push(acc.recall());
+                    self.metrics.predictor_precision.push(acc.precision());
                 }
             }
             // the token just fed is now committed into kv
@@ -236,6 +331,9 @@ impl Engine {
                 let a = self.active[slot].take().unwrap();
                 self.slots.release(slot)?;
                 self.kv.clear_row(slot);
+                if let Some(p) = self.predictors[slot].take() {
+                    self.metrics.fallback_events += p.stats.fallbacks;
+                }
                 let total_ms = a.enq_elapsed_ms();
                 self.metrics.requests_completed += 1;
                 if let Some(t) = a.first_token_at {
@@ -250,7 +348,7 @@ impl Engine {
                     finish: reason,
                     prefill_ms: a.prefill_ms,
                     total_ms,
-                    queue_ms: 0.0,
+                    queue_ms: a.queue_ms,
                 });
             }
         }
@@ -296,16 +394,28 @@ impl Engine {
             let mut rng = Rng::new(req.sampling.seed).fold_in(req.id);
             let first = sampler::sample(row, &req.sampling, &mut rng);
             let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let queue_ms = (t0 - req.enqueued_at).as_secs_f64() * 1e3;
             self.metrics.prefill_ms.push(prefill_ms);
-            self.metrics
-                .queue_wait_ms
-                .push((t0 - req.enqueued_at).as_secs_f64() * 1e3);
+            self.metrics.queue_wait_ms.push(queue_ms);
+            let c = &self.model.manifest.config;
             if self.cfg.track_sparsity {
-                let c = &self.model.manifest.config;
                 let mut tr = AggregatedTracker::new(c.n_layers, c.d_ff);
                 tr.reset();
                 self.trackers[slot] = Some(tr);
             }
+            let policy = req
+                .policy
+                .clone()
+                .unwrap_or_else(|| self.cfg.policy.clone());
+            self.predictors[slot] = match policy {
+                NeuronPolicy::Dense => None,
+                p => Some(SlotPredictor::new(
+                    p,
+                    self.cfg.recall_floor,
+                    c.n_layers,
+                    c.d_ff,
+                )?),
+            };
             self.active[slot] = Some(ActiveRequest {
                 slot,
                 pos: len,
@@ -313,6 +423,7 @@ impl Engine {
                 generated: Vec::new(),
                 rng,
                 prefill_ms,
+                queue_ms,
                 first_token_at: None,
                 request: req,
             });

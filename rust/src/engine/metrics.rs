@@ -14,6 +14,19 @@ pub struct EngineMetrics {
     pub time_to_first_token_ms: Samples,
     pub batch_occupancy: Samples,
     pub steps: u64,
+    // hot-neuron predictor observability (crate::predictor)
+    /// shadow-measured per-slot recall of the predicted neuron set
+    pub predictor_recall: Samples,
+    /// shadow-measured per-slot precision of the predicted neuron set
+    pub predictor_precision: Samples,
+    /// live fraction of the batch mask on enforced (sparse) steps
+    pub mask_density: Samples,
+    /// decode steps executed with a predicted sparse mask
+    pub enforced_steps: u64,
+    /// dense probe steps taken while a predictive policy was active
+    pub probe_steps: u64,
+    /// enforcement denials caused by the recall floor (summed at retire)
+    pub fallback_events: u64,
 }
 
 impl EngineMetrics {
@@ -26,8 +39,38 @@ impl EngineMetrics {
         }
     }
 
-    pub fn report(&self) -> String {
+    /// Mean FFN FLOP reduction implied by the enforced masks (1.0 when no
+    /// step was enforced).
+    pub fn ffn_flop_reduction(&self) -> f64 {
+        let live = self.mask_density.mean();
+        if self.enforced_steps == 0 || live <= 0.0 {
+            1.0
+        } else {
+            1.0 / live
+        }
+    }
+
+    /// One-line predictor summary; empty when no predictive policy ran.
+    pub fn predictor_report(&self) -> String {
+        if self.predictor_recall.is_empty() && self.enforced_steps == 0 {
+            return String::new();
+        }
         format!(
+            "predictor: recall p50 {:.3} | precision p50 {:.3} | sparse steps {}/{} \
+             (probes {}, fallbacks {}) | mask density {:.3} -> ffn flop reduction {:.2}x",
+            self.predictor_recall.percentile(50.0),
+            self.predictor_precision.percentile(50.0),
+            self.enforced_steps,
+            self.steps,
+            self.probe_steps,
+            self.fallback_events,
+            self.mask_density.mean(),
+            self.ffn_flop_reduction(),
+        )
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = format!(
             "requests: {} done / {} enqueued | tokens: {} | prefill p50 {:.1}ms | \
              decode step p50 {:.2}ms p95 {:.2}ms | ttft p50 {:.1}ms | occupancy {:.2} | \
              throughput ~{:.1} tok/s",
@@ -40,7 +83,13 @@ impl EngineMetrics {
             self.time_to_first_token_ms.percentile(50.0),
             self.batch_occupancy.mean(),
             self.tokens_per_sec(),
-        )
+        );
+        let pred = self.predictor_report();
+        if !pred.is_empty() {
+            out.push('\n');
+            out.push_str(&pred);
+        }
+        out
     }
 }
 
@@ -65,5 +114,21 @@ mod tests {
     fn throughput_zero_without_steps() {
         let m = EngineMetrics::default();
         assert_eq!(m.tokens_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn predictor_report_appears_only_with_predictor_activity() {
+        let mut m = EngineMetrics::default();
+        assert!(m.predictor_report().is_empty());
+        assert!(!m.report().contains("predictor:"));
+        assert_eq!(m.ffn_flop_reduction(), 1.0);
+        m.predictor_recall.push(0.97);
+        m.predictor_precision.push(0.6);
+        m.mask_density.push(0.25);
+        m.enforced_steps = 3;
+        m.steps = 4;
+        let r = m.report();
+        assert!(r.contains("predictor:"));
+        assert!((m.ffn_flop_reduction() - 4.0).abs() < 1e-9);
     }
 }

@@ -20,3 +20,5 @@ pub use kv::{KvBatch, SlotManager};
 pub use metrics::EngineMetrics;
 pub use request::{Completion, FinishReason, Request, SamplingParams};
 pub use specdec::{AcceptMode, SpecDecoder, SpecStats, VerifyMask};
+
+pub use crate::predictor::NeuronPolicy;

@@ -1,5 +1,6 @@
 //! Request types for the serving engine.
 
+use crate::predictor::NeuronPolicy;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -35,6 +36,8 @@ pub struct Request {
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
     pub sampling: SamplingParams,
+    /// Per-request neuron-mask policy override (None = engine default).
+    pub policy: Option<NeuronPolicy>,
     pub enqueued_at: std::time::Instant,
 }
 
@@ -45,12 +48,18 @@ impl Request {
             prompt,
             max_new_tokens,
             sampling: SamplingParams::default(),
+            policy: None,
             enqueued_at: std::time::Instant::now(),
         }
     }
 
     pub fn with_sampling(mut self, s: SamplingParams) -> Request {
         self.sampling = s;
+        self
+    }
+
+    pub fn with_policy(mut self, p: Option<NeuronPolicy>) -> Request {
+        self.policy = p;
         self
     }
 }
@@ -67,6 +76,8 @@ pub struct ActiveRequest {
     pub generated: Vec<u32>,
     pub rng: Rng,
     pub prefill_ms: f64,
+    /// measured wait between enqueue and admission (carried to Completion)
+    pub queue_ms: f64,
     pub first_token_at: Option<std::time::Instant>,
 }
 

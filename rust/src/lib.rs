@@ -17,6 +17,24 @@
 //! Python never runs on the request path: `make artifacts` lowers the model
 //! once, then everything here is self-contained.
 //!
+//! ## Hot-neuron prediction (`predictor`)
+//!
+//! The paper *measures* that consecutive decode tokens reuse FFN neurons
+//! (§5.1); the [`predictor`] subsystem *exploits* it on the serving path.
+//! Per KV slot, a training-free [`predictor::HotSet`] tracks the last W
+//! observed masks; a [`predictor::NeuronPolicy`] (`Dense` / `Static` /
+//! `Reuse{window, union_k}` / `TopP{window, budget}`, selectable per
+//! request) turns that state into a predicted hot-neuron set; the engine
+//! unions the per-slot sets into the batch-shared `[L, F]` decode mask, and
+//! falls back to dense whenever the shadow-estimated recall drops below
+//! `EngineConfig::recall_floor` (1.0 = shadow mode: measure, never
+//! enforce). [`sparse::sparse_ffn_matvec`] is the host-side fast path that
+//! computes only predicted rows (bit-verified against dense),
+//! [`costmodel::predictor`] projects the step-level speedup, and
+//! `benches/bench_predictor.rs` compares projection to measurement.
+//! Predictor recall/precision, mask density and fallback counts surface in
+//! [`engine::EngineMetrics`].
+//!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
@@ -29,6 +47,7 @@ pub mod evalx;
 pub mod figures;
 pub mod jsonx;
 pub mod model;
+pub mod predictor;
 pub mod runtime;
 pub mod server;
 pub mod sparse;

@@ -10,13 +10,18 @@
 //!   specdec   --target <id> --draft <id>   speculative decoding demo
 //!
 //! Common options: --artifacts <dir> (default ./artifacts), --steps, --lr,
-//! --seed, --ckpt. Examples under examples/ drive the full paper
-//! reproduction; this binary is the day-to-day launcher.
+//! --seed, --ckpt. `generate` and `serve` take the hot-neuron predictor
+//! knobs --policy <dense|reuse[:W[:K]]|topp:B[:W]>, --recall-floor <f>
+//! (1.0 = shadow mode) and --probe-every <n>. Examples under examples/
+//! drive the full paper reproduction; this binary is the day-to-day
+//! launcher.
 
 use std::sync::Arc;
 
 use rsb::data::Dataset;
-use rsb::engine::{AcceptMode, Engine, EngineConfig, SamplingParams, SpecDecoder, VerifyMask};
+use rsb::engine::{
+    AcceptMode, Engine, EngineConfig, NeuronPolicy, SamplingParams, SpecDecoder, VerifyMask,
+};
 use rsb::error::Result;
 use rsb::evalx::EvalHarness;
 use rsb::figures::ensure_data;
@@ -60,6 +65,17 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 
 const HELP: &str = "rsb — ReLU Strikes Back reproduction (see README.md)
 usage: rsb <info|train|finetune|eval|generate|serve|specdec> [--options]";
+
+/// Engine config from the predictor CLI knobs (defaults = dense serving).
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let mut cfg = EngineConfig::default();
+    if let Some(spec) = args.get("policy") {
+        cfg.policy = NeuronPolicy::parse(spec)?;
+    }
+    cfg.recall_floor = args.f64_or("recall-floor", cfg.recall_floor)?;
+    cfg.probe_every = args.usize_or("probe-every", cfg.probe_every)?;
+    Ok(cfg)
+}
 
 fn open_model(args: &Args, key: &str) -> Result<Arc<Model>> {
     let artifacts = artifacts_dir(args.get("artifacts"));
@@ -170,7 +186,7 @@ fn generate(args: &Args) -> Result<()> {
     let model = open_model(args, "model")?;
     let (_ds, bpe) = data_for(&model)?;
     let params = load_params_arg(&model, args)?;
-    let mut engine = Engine::new(model, params, EngineConfig::default())?;
+    let mut engine = Engine::new(model, params, engine_config(args)?)?;
     let prompt = args.str_or("prompt", "ada lives in");
     let max_tokens = args.usize_or("max-tokens", 16)?;
     let sampling = SamplingParams {
@@ -199,7 +215,7 @@ fn serve(args: &Args) -> Result<()> {
     let model = open_model(args, "model")?;
     let (_ds, bpe) = data_for(&model)?;
     let params = load_params_arg(&model, args)?;
-    let engine = Engine::new(model, params, EngineConfig::default())?;
+    let engine = Engine::new(model, params, engine_config(args)?)?;
     let addr = args.str_or("addr", "127.0.0.1:7077");
     let max = args.get("max-requests").map(|v| v.parse().unwrap_or(0));
     rsb::server::serve(engine, Arc::new(bpe), &addr, max, None)?;

@@ -1,0 +1,240 @@
+//! Per-slot hot-neuron ring: the training-free substrate every predictive
+//! policy is built on.
+//!
+//! The paper's §5.1 observation (and SparseInfer's serving-time variant) is
+//! that consecutive decode tokens fire heavily overlapping FFN neuron sets.
+//! `HotSet` keeps the last `window` observed masks per sequence as flat
+//! boolean rows plus an incremental per-neuron occurrence count, so both
+//! predictions the engine uses are O(L·F):
+//!
+//! - `union_of_last(k)`: the union of the `k` most recent masks (the
+//!   `NeuronPolicy::Reuse` prediction);
+//! - `top_p(budget)`: per layer, the smallest most-frequent neuron prefix
+//!   covering `budget` of the observed firing mass (`NeuronPolicy::TopP`).
+
+use std::collections::VecDeque;
+
+use crate::error::{Error, Result};
+use crate::runtime::tensor::Tensor;
+
+/// Ring of the last `window` observed FFN masks for one sequence, with
+/// incremental per-neuron occurrence counts.
+#[derive(Debug, Clone)]
+pub struct HotSet {
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub window: usize,
+    /// most-recent-last ring of flat [L*F] masks
+    ring: VecDeque<Vec<bool>>,
+    /// counts[l*F + f] = occurrences of neuron (l, f) within the ring
+    counts: Vec<u32>,
+    /// total masks ever observed (not capped by the window)
+    steps: u64,
+}
+
+impl HotSet {
+    pub fn new(n_layers: usize, d_ff: usize, window: usize) -> Self {
+        let window = window.max(1);
+        HotSet {
+            n_layers,
+            d_ff,
+            window,
+            ring: VecDeque::with_capacity(window + 1),
+            counts: vec![0; n_layers * d_ff],
+            steps: 0,
+        }
+    }
+
+    /// Total masks observed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// True once the ring holds a full window of observations.
+    pub fn filled(&self) -> bool {
+        self.ring.len() >= self.window
+    }
+
+    /// Occurrence count of neuron (layer, f) within the current window.
+    pub fn count(&self, layer: usize, f: usize) -> u32 {
+        self.counts[layer * self.d_ff + f]
+    }
+
+    /// Feed one observed flat [L*F] mask (most recent).
+    pub fn push_bits(&mut self, bits: Vec<bool>) -> Result<()> {
+        if bits.len() != self.n_layers * self.d_ff {
+            return Err(Error::Shape {
+                what: "hotset mask".into(),
+                expected: vec![self.n_layers, self.d_ff],
+                got: vec![bits.len()],
+            });
+        }
+        for (c, &b) in self.counts.iter_mut().zip(&bits) {
+            if b {
+                *c += 1;
+            }
+        }
+        self.ring.push_back(bits);
+        if self.ring.len() > self.window {
+            let old = self.ring.pop_front().unwrap();
+            for (c, &b) in self.counts.iter_mut().zip(&old) {
+                if b {
+                    *c -= 1;
+                }
+            }
+        }
+        self.steps += 1;
+        Ok(())
+    }
+
+    /// Feed one decode step's `ffn_mask` output ([L, B, F]), selecting batch
+    /// row `row` (same contract as `AggregatedTracker::push_mask`).
+    pub fn push_mask(&mut self, mask: &Tensor, row: usize) -> Result<()> {
+        let bits = bits_from_mask_row(mask, row, self.n_layers, self.d_ff)?;
+        self.push_bits(bits)
+    }
+
+    /// Union of the `k` most recent masks (k clamped to the ring length);
+    /// empty mask before any observation.
+    pub fn union_of_last(&self, k: usize) -> Vec<bool> {
+        let mut out = vec![false; self.n_layers * self.d_ff];
+        let k = k.max(1).min(self.ring.len());
+        for m in self.ring.iter().rev().take(k) {
+            for (o, &b) in out.iter_mut().zip(m) {
+                *o |= b;
+            }
+        }
+        out
+    }
+
+    /// Per layer, the smallest set of most-frequently-firing neurons whose
+    /// in-window occurrence mass reaches `budget` (0 < budget <= 1) of the
+    /// layer's total. Ties broken by neuron index for determinism.
+    pub fn top_p(&self, budget: f64) -> Vec<bool> {
+        let budget = budget.clamp(0.0, 1.0);
+        let mut out = vec![false; self.n_layers * self.d_ff];
+        for l in 0..self.n_layers {
+            let base = l * self.d_ff;
+            let layer = &self.counts[base..base + self.d_ff];
+            let total: u64 = layer.iter().map(|&c| c as u64).sum();
+            if total == 0 {
+                continue;
+            }
+            let mut order: Vec<usize> = (0..self.d_ff).filter(|&f| layer[f] > 0).collect();
+            order.sort_by(|&a, &b| layer[b].cmp(&layer[a]).then(a.cmp(&b)));
+            let target = budget * total as f64;
+            let mut mass = 0u64;
+            for f in order {
+                if mass as f64 >= target {
+                    break;
+                }
+                out[base + f] = true;
+                mass += layer[f] as u64;
+            }
+        }
+        out
+    }
+}
+
+/// Extract batch row `row` of an `ffn_mask` tensor ([L, B, F]) as a flat
+/// [L*F] boolean mask.
+pub fn bits_from_mask_row(
+    mask: &Tensor,
+    row: usize,
+    n_layers: usize,
+    d_ff: usize,
+) -> Result<Vec<bool>> {
+    let d = mask.as_f32()?;
+    if mask.shape.len() != 3 || mask.shape[0] != n_layers || mask.shape[2] != d_ff {
+        return Err(Error::Shape {
+            what: "ffn_mask".into(),
+            expected: vec![n_layers, 0, d_ff],
+            got: mask.shape.clone(),
+        });
+    }
+    let b = mask.shape[1];
+    if row >= b {
+        return Err(Error::msg(format!("row {row} out of batch {b}")));
+    }
+    let mut bits = Vec::with_capacity(n_layers * d_ff);
+    for l in 0..n_layers {
+        let base = (l * b + row) * d_ff;
+        bits.extend(d[base..base + d_ff].iter().map(|&v| v != 0.0));
+    }
+    Ok(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(f: usize, live: &[usize]) -> Vec<bool> {
+        let mut b = vec![false; f];
+        for &i in live {
+            b[i] = true;
+        }
+        b
+    }
+
+    #[test]
+    fn ring_evicts_and_counts_stay_consistent() {
+        let mut h = HotSet::new(1, 8, 3);
+        h.push_bits(bits(8, &[0, 1])).unwrap();
+        h.push_bits(bits(8, &[1, 2])).unwrap();
+        h.push_bits(bits(8, &[2, 3])).unwrap();
+        assert!(h.filled());
+        assert_eq!(h.count(0, 1), 2);
+        // 4th push evicts the first mask: neuron 0 drops out of the window
+        h.push_bits(bits(8, &[4])).unwrap();
+        assert_eq!(h.count(0, 0), 0);
+        assert_eq!(h.count(0, 1), 1);
+        assert_eq!(h.steps(), 4);
+        let u = h.union_of_last(3);
+        assert_eq!(u, bits(8, &[1, 2, 3, 4]));
+        let u1 = h.union_of_last(1);
+        assert_eq!(u1, bits(8, &[4]));
+    }
+
+    #[test]
+    fn union_before_fill_is_partial_and_never_panics() {
+        let mut h = HotSet::new(2, 4, 4);
+        assert_eq!(h.union_of_last(4), vec![false; 8]);
+        h.push_bits(bits(8, &[0, 5])).unwrap();
+        assert!(!h.filled());
+        assert_eq!(h.union_of_last(10), bits(8, &[0, 5]));
+    }
+
+    #[test]
+    fn top_p_selects_most_frequent_prefix() {
+        let mut h = HotSet::new(1, 6, 4);
+        // neuron 0 fires 4x, neuron 1 2x, neuron 2 1x, rest never
+        for step in 0..4 {
+            let mut live = vec![0];
+            if step % 2 == 0 {
+                live.push(1);
+            }
+            if step == 0 {
+                live.push(2);
+            }
+            h.push_bits(bits(6, &live)).unwrap();
+        }
+        // total mass 7; budget 0.5 -> neuron 0 alone (4/7 ≈ 0.57)
+        assert_eq!(h.top_p(0.5), bits(6, &[0]));
+        // budget 0.8 -> neurons 0+1 (6/7 ≈ 0.86)
+        assert_eq!(h.top_p(0.8), bits(6, &[0, 1]));
+        // budget 1.0 -> every neuron that fired in-window
+        assert_eq!(h.top_p(1.0), bits(6, &[0, 1, 2]));
+    }
+
+    #[test]
+    fn push_mask_selects_row() {
+        let mut h = HotSet::new(1, 4, 2);
+        let t = Tensor::f32(vec![1, 2, 4], vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0])
+            .unwrap();
+        h.push_mask(&t, 1).unwrap();
+        assert_eq!(h.union_of_last(1), bits(4, &[2]));
+        assert!(h.push_mask(&t, 2).is_err());
+        let bad = Tensor::f32(vec![2, 1, 4], vec![0.0; 8]).unwrap();
+        assert!(h.push_mask(&bad, 0).is_err());
+    }
+}

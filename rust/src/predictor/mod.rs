@@ -1,0 +1,36 @@
+//! Hot-neuron prediction: training-free activation-sparsity prediction for
+//! the serving engine (the subsystem that turns §5.1's *measured* neuron
+//! reuse into skipped FFN work).
+//!
+//! The seed engine could only measure sparsity (`AggregatedTracker`,
+//! `SparsityStats`) or apply a manually supplied static mask. This module
+//! closes the loop:
+//!
+//! - [`HotSet`] (`hotset.rs`): per-slot ring of the last W observed decode
+//!   masks with incremental per-neuron counts — the training-free predictor
+//!   state (same family as SparseInfer's sign-based predictor, realised here
+//!   over observed masks).
+//! - [`NeuronPolicy`] (`policy.rs`): `Dense` / `Static` / `Reuse{window,
+//!   union_k}` / `TopP{window, budget}` — replaces the bare
+//!   `Option<Tensor>` in `EngineConfig` and is selectable per request over
+//!   the TCP protocol (`"policy": "reuse:8:4"`).
+//! - [`SlotPredictor`] (`slot.rs`): the propose/observe cycle with shadow
+//!   recall estimation and the fallback-to-dense escape hatch
+//!   (`EngineConfig::recall_floor`; `>= 1.0` = shadow mode, bit-identical
+//!   outputs to `Dense`).
+//!
+//! Execution: the engine unions the per-slot predictions into the batch-
+//! shared `[L, F]` mask the compiled decode entry consumes, so the FLOP/IO
+//! saving on the compiled path is whatever the backend makes of the mask;
+//! the host-side realisation of the saving is `sparse::sparse_ffn_matvec`
+//! (gather/scatter over predicted rows, bit-verified against dense), and
+//! `costmodel::predictor` projects the step-level speedup that
+//! `benches/bench_predictor.rs` compares against measurement.
+
+pub mod hotset;
+pub mod policy;
+pub mod slot;
+
+pub use hotset::{bits_from_mask_row, HotSet};
+pub use policy::NeuronPolicy;
+pub use slot::{SlotPredictor, SlotPredictorStats};

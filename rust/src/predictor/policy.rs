@@ -1,0 +1,151 @@
+//! Neuron-mask policies: how the engine decides, each decode step, which
+//! FFN rows are worth loading.
+//!
+//! `NeuronPolicy` replaces the bare `Option<Tensor>` that `EngineConfig`
+//! used to carry: `Dense` and `Static` reproduce the old behaviours exactly,
+//! while `Reuse` and `TopP` are *predictive* — they are realised per slot by
+//! a `SlotPredictor` over a `HotSet` ring and come with a recall-floor
+//! escape hatch (see `EngineConfig::recall_floor`).
+
+use crate::error::{Error, Result};
+use crate::runtime::tensor::Tensor;
+
+/// Per-request / per-engine FFN neuron-mask policy.
+#[derive(Debug, Clone)]
+pub enum NeuronPolicy {
+    /// All neurons every step (the baseline; exactly the old `None`).
+    Dense,
+    /// Fixed [L, F] mask applied to every decode step (experiments; exactly
+    /// the old `EngineConfig::neuron_mask = Some(..)`).
+    Static(Tensor),
+    /// Predict the union of the `union_k` most recent observed masks out of
+    /// a ring of `window` (paper §5.1 reuse, serving-time form).
+    Reuse { window: usize, union_k: usize },
+    /// Predict, per layer, the most-frequent neurons covering `budget` of
+    /// the firing mass observed over the last `window` steps.
+    TopP { window: usize, budget: f64 },
+}
+
+impl Default for NeuronPolicy {
+    fn default() -> Self {
+        NeuronPolicy::Dense
+    }
+}
+
+impl NeuronPolicy {
+    /// True for policies that predict from observed masks (and therefore
+    /// need a per-slot `SlotPredictor`).
+    pub fn is_predictive(&self) -> bool {
+        matches!(self, NeuronPolicy::Reuse { .. } | NeuronPolicy::TopP { .. })
+    }
+
+    /// Ring window a `HotSet` needs for this policy (1 for non-predictive).
+    pub fn window(&self) -> usize {
+        match self {
+            NeuronPolicy::Reuse { window, .. } | NeuronPolicy::TopP { window, .. } => {
+                (*window).max(1)
+            }
+            _ => 1,
+        }
+    }
+
+    /// Parse a CLI / wire spec:
+    ///   "dense" | "reuse" | "reuse:W" | "reuse:W:K" | "topp:B" | "topp:B:W"
+    /// (`Static` has no wire form — it needs a tensor.)
+    pub fn parse(spec: &str) -> Result<NeuronPolicy> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let bad = || Error::Config(format!("unknown neuron policy `{spec}`"));
+        match parts[0] {
+            "dense" if parts.len() == 1 => Ok(NeuronPolicy::Dense),
+            "reuse" if parts.len() <= 3 => {
+                let window: usize = parts
+                    .get(1)
+                    .map_or(Ok(8), |v| v.parse().map_err(|_| bad()))?;
+                let union_k: usize = parts
+                    .get(2)
+                    .map_or(Ok(window.min(4)), |v| v.parse().map_err(|_| bad()))?;
+                if window == 0 || union_k == 0 || union_k > window {
+                    return Err(Error::Config(format!(
+                        "reuse policy needs 0 < union_k <= window, got `{spec}`"
+                    )));
+                }
+                Ok(NeuronPolicy::Reuse { window, union_k })
+            }
+            "topp" if (2..=3).contains(&parts.len()) => {
+                let budget: f64 = parts[1].parse().map_err(|_| bad())?;
+                let window: usize = parts
+                    .get(2)
+                    .map_or(Ok(8), |v| v.parse().map_err(|_| bad()))?;
+                if !(0.0..=1.0).contains(&budget) || budget == 0.0 || window == 0 {
+                    return Err(Error::Config(format!(
+                        "topp policy needs budget in (0, 1] and window > 0, got `{spec}`"
+                    )));
+                }
+                Ok(NeuronPolicy::TopP { window, budget })
+            }
+            _ => Err(bad()),
+        }
+    }
+
+    /// Short display form for logs / metrics reports.
+    pub fn describe(&self) -> String {
+        match self {
+            NeuronPolicy::Dense => "dense".into(),
+            NeuronPolicy::Static(m) => format!("static[{:?}]", m.shape),
+            NeuronPolicy::Reuse { window, union_k } => format!("reuse:{window}:{union_k}"),
+            NeuronPolicy::TopP { window, budget } => format!("topp:{budget}:{window}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_forms() {
+        assert!(matches!(
+            NeuronPolicy::parse("dense").unwrap(),
+            NeuronPolicy::Dense
+        ));
+        match NeuronPolicy::parse("reuse").unwrap() {
+            NeuronPolicy::Reuse { window: 8, union_k: 4 } => {}
+            other => panic!("unexpected default reuse: {other:?}"),
+        }
+        match NeuronPolicy::parse("reuse:16:2").unwrap() {
+            NeuronPolicy::Reuse { window: 16, union_k: 2 } => {}
+            other => panic!("{other:?}"),
+        }
+        match NeuronPolicy::parse("topp:0.9").unwrap() {
+            NeuronPolicy::TopP { window: 8, budget } => assert!((budget - 0.9).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "", "sparse", "reuse:0", "reuse:4:8", "reuse:4:0", "topp", "topp:0",
+            "topp:1.5", "topp:abc", "dense:1",
+        ] {
+            assert!(NeuronPolicy::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn roundtrip_describe_parse() {
+        for spec in ["dense", "reuse:8:4", "topp:0.9:8"] {
+            let p = NeuronPolicy::parse(spec).unwrap();
+            let q = NeuronPolicy::parse(&p.describe()).unwrap();
+            assert_eq!(p.describe(), q.describe());
+        }
+    }
+
+    #[test]
+    fn predictive_flag_and_window() {
+        assert!(!NeuronPolicy::Dense.is_predictive());
+        assert!(NeuronPolicy::parse("reuse").unwrap().is_predictive());
+        assert_eq!(NeuronPolicy::parse("reuse:16").unwrap().window(), 16);
+        assert_eq!(NeuronPolicy::Dense.window(), 1);
+    }
+}

@@ -1,0 +1,281 @@
+//! Per-slot predictor: turns a `NeuronPolicy` + `HotSet` into a concrete
+//! propose/observe cycle the engine drives once per decode step.
+//!
+//! ## Recall is only measurable on dense steps
+//!
+//! The L2 entries report `ffn_mask` *post*-gating (`act · mask != 0`), so
+//! under an enforced sparse mask the observed set is a subset of the applied
+//! one and misses are invisible. The predictor therefore estimates recall in
+//! "shadow": on every densely-executed step (warmup, fallback, or one of the
+//! engine's periodic dense probes) it scores the prediction it *would have*
+//! applied against the full-fidelity observation. An EWMA of those shadow
+//! recalls gates enforcement against `recall_floor`.
+//!
+//! `recall_floor >= 1.0` is shadow mode: no training-free predictor can
+//! guarantee perfect recall ahead of time, so the predictor measures but
+//! never enforces — outputs are bit-identical to `Dense` (the integration
+//! suite pins this).
+
+use crate::error::Result;
+use crate::predictor::hotset::{bits_from_mask_row, HotSet};
+use crate::predictor::policy::NeuronPolicy;
+use crate::runtime::tensor::Tensor;
+use crate::sparsity::{mask_accuracy, MaskAccuracy};
+
+/// EWMA weight of the newest shadow recall measurement.
+const RECALL_EWMA_ALPHA: f64 = 0.3;
+
+/// Lifetime counters of one slot's predictor (folded into `EngineMetrics`
+/// when the slot retires).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlotPredictorStats {
+    /// steps where a prediction existed and enforcement was allowed
+    pub proposals: u64,
+    /// shadow recall/precision measurements taken
+    pub shadow_evals: u64,
+    /// enforcement denials caused by the recall floor (after warmup)
+    pub fallbacks: u64,
+}
+
+/// Propose/observe predictor for one KV slot.
+#[derive(Debug, Clone)]
+pub struct SlotPredictor {
+    policy: NeuronPolicy,
+    recall_floor: f64,
+    hotset: HotSet,
+    /// Static policy mask, pre-lowered to bits.
+    static_bits: Option<Vec<bool>>,
+    /// Shadow-estimated recall (EWMA over dense-step measurements).
+    recall_ewma: Option<f64>,
+    /// Prediction computed at the last `propose()` (kept regardless of
+    /// whether it was enforced, for shadow scoring in `observe()`).
+    last_prediction: Option<Vec<bool>>,
+    pub stats: SlotPredictorStats,
+}
+
+impl SlotPredictor {
+    pub fn new(
+        policy: NeuronPolicy,
+        recall_floor: f64,
+        n_layers: usize,
+        d_ff: usize,
+    ) -> Result<SlotPredictor> {
+        let window = policy.window();
+        let static_bits: Option<Vec<bool>> = match &policy {
+            NeuronPolicy::Static(m) => {
+                let bits: Vec<bool> = m.as_f32()?.iter().map(|&v| v != 0.0).collect();
+                if bits.len() != n_layers * d_ff {
+                    return Err(crate::error::Error::Shape {
+                        what: "static neuron mask".into(),
+                        expected: vec![n_layers, d_ff],
+                        got: m.shape.clone(),
+                    });
+                }
+                Some(bits)
+            }
+            _ => None,
+        };
+        Ok(SlotPredictor {
+            policy,
+            recall_floor,
+            hotset: HotSet::new(n_layers, d_ff, window),
+            static_bits,
+            recall_ewma: None,
+            last_prediction: None,
+            stats: SlotPredictorStats::default(),
+        })
+    }
+
+    pub fn policy(&self) -> &NeuronPolicy {
+        &self.policy
+    }
+
+    /// Shadow-estimated recall so far (None before the first measurement).
+    pub fn recall_estimate(&self) -> Option<f64> {
+        self.recall_ewma
+    }
+
+    /// Compute the prediction for the upcoming decode step and decide
+    /// whether to enforce it. Returns `Some(bits)` if this slot asks for a
+    /// sparse step, `None` to request dense. The candidate prediction is
+    /// cached either way so `observe()` can score it in shadow.
+    pub fn propose(&mut self) -> Option<&[bool]> {
+        let candidate: Option<Vec<bool>> = match &self.policy {
+            NeuronPolicy::Dense => None,
+            NeuronPolicy::Static(_) => self.static_bits.clone(),
+            NeuronPolicy::Reuse { union_k, .. } => self
+                .hotset
+                .filled()
+                .then(|| self.hotset.union_of_last(*union_k)),
+            NeuronPolicy::TopP { budget, .. } => {
+                self.hotset.filled().then(|| self.hotset.top_p(*budget))
+            }
+        };
+        self.last_prediction = candidate;
+        if self.last_prediction.is_none() {
+            return None;
+        }
+        // Static masks are an explicit experiment knob: always enforced.
+        if matches!(self.policy, NeuronPolicy::Static(_)) {
+            self.stats.proposals += 1;
+            return self.last_prediction.as_deref();
+        }
+        // Predictive policies: enforce only below a sub-1.0 floor, with a
+        // measured recall estimate that clears it.
+        let allowed = self.recall_floor < 1.0
+            && self
+                .recall_ewma
+                .map_or(false, |r| r >= self.recall_floor);
+        if allowed {
+            self.stats.proposals += 1;
+            self.last_prediction.as_deref()
+        } else {
+            if self.recall_ewma.is_some() && self.recall_floor < 1.0 {
+                self.stats.fallbacks += 1;
+            }
+            None
+        }
+    }
+
+    /// Feed the observed `ffn_mask` ([L, B, F], batch row `row`) for the
+    /// step the last `propose()` planned. `step_was_dense` must be true iff
+    /// the engine executed the step with an all-ones mask; only then is the
+    /// observation full-fidelity and scored against the cached prediction.
+    pub fn observe(
+        &mut self,
+        ffn_mask: &Tensor,
+        row: usize,
+        step_was_dense: bool,
+    ) -> Result<Option<MaskAccuracy>> {
+        if matches!(self.policy, NeuronPolicy::Dense) {
+            self.last_prediction = None;
+            return Ok(None);
+        }
+        let bits = bits_from_mask_row(ffn_mask, row, self.hotset.n_layers, self.hotset.d_ff)?;
+        let acc = if step_was_dense {
+            self.last_prediction.take().map(|p| mask_accuracy(&p, &bits))
+        } else {
+            self.last_prediction = None;
+            None
+        };
+        if let Some(a) = &acc {
+            let r = a.recall();
+            self.recall_ewma = Some(match self.recall_ewma {
+                None => r,
+                Some(e) => (1.0 - RECALL_EWMA_ALPHA) * e + RECALL_EWMA_ALPHA * r,
+            });
+            self.stats.shadow_evals += 1;
+        }
+        self.hotset.push_bits(bits)?;
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask(l: usize, f: usize, live: &[usize]) -> Tensor {
+        let mut data = vec![0.0f32; l * f];
+        for li in 0..l {
+            for &fi in live {
+                data[li * f + fi] = 1.0;
+            }
+        }
+        Tensor::f32(vec![l, 1, f], data).unwrap()
+    }
+
+    fn reuse(window: usize, union_k: usize, floor: f64) -> SlotPredictor {
+        SlotPredictor::new(
+            NeuronPolicy::Reuse { window, union_k },
+            floor,
+            1,
+            8,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn warmup_is_dense_then_stable_stream_enforces() {
+        let mut p = reuse(2, 2, 0.9);
+        let m = mask(1, 8, &[1, 3]);
+        // warmup: ring not filled -> dense
+        assert!(p.propose().is_none());
+        p.observe(&m, 0, true).unwrap();
+        assert!(p.propose().is_none());
+        p.observe(&m, 0, true).unwrap();
+        // filled, but no recall measurement yet -> still dense (shadow eval
+        // happens on this dense step)
+        assert!(p.propose().is_none());
+        p.observe(&m, 0, true).unwrap();
+        assert_eq!(p.recall_estimate(), Some(1.0));
+        // perfectly repeating stream -> enforce the union {1, 3}
+        let pred = p.propose().expect("should enforce").to_vec();
+        let mut want = vec![false; 8];
+        want[1] = true;
+        want[3] = true;
+        assert_eq!(pred, want);
+        assert_eq!(p.stats.proposals, 1);
+    }
+
+    #[test]
+    fn recall_floor_one_never_enforces_but_still_measures() {
+        let mut p = reuse(2, 2, 1.0);
+        let m = mask(1, 8, &[2]);
+        for _ in 0..6 {
+            assert!(p.propose().is_none(), "floor 1.0 must stay dense");
+            p.observe(&m, 0, true).unwrap();
+        }
+        assert_eq!(p.recall_estimate(), Some(1.0));
+        assert!(p.stats.shadow_evals >= 1);
+        assert_eq!(p.stats.proposals, 0);
+        assert_eq!(p.stats.fallbacks, 0);
+    }
+
+    #[test]
+    fn low_recall_falls_back_to_dense() {
+        let mut p = reuse(2, 2, 0.9);
+        // drifting stream: every step fires a disjoint neuron
+        for i in 0..6 {
+            let _ = p.propose();
+            p.observe(&mask(1, 8, &[i % 8]), 0, true).unwrap();
+        }
+        // prediction = union of last 2 = {i-1, i-2}; observation = {i} ->
+        // recall 0 on every shadow eval
+        assert!(p.recall_estimate().unwrap() < 0.5);
+        assert!(p.propose().is_none());
+        assert!(p.stats.fallbacks >= 1);
+    }
+
+    #[test]
+    fn enforced_steps_are_not_scored() {
+        let mut p = reuse(1, 1, 0.5);
+        let m = mask(1, 8, &[0]);
+        p.observe(&m, 0, true).unwrap(); // fill ring
+        let _ = p.propose();
+        p.observe(&m, 0, true).unwrap(); // shadow eval -> recall 1.0
+        let evals = p.stats.shadow_evals;
+        assert!(p.propose().is_some());
+        // engine enforced: observation is post-gate, must not be scored
+        p.observe(&m, 0, false).unwrap();
+        assert_eq!(p.stats.shadow_evals, evals);
+    }
+
+    #[test]
+    fn static_policy_rejects_wrong_size_mask() {
+        let t = Tensor::ones_f32(vec![1, 4]); // engine is 1 x 8
+        assert!(SlotPredictor::new(NeuronPolicy::Static(t), 0.95, 1, 8).is_err());
+    }
+
+    #[test]
+    fn static_policy_always_enforces_its_mask() {
+        let mut bits = vec![0.0f32; 8];
+        bits[5] = 1.0;
+        let t = Tensor::f32(vec![1, 8], bits).unwrap();
+        let mut p =
+            SlotPredictor::new(NeuronPolicy::Static(t), 0.95, 1, 8).unwrap();
+        let got = p.propose().expect("static always proposes").to_vec();
+        assert_eq!(got.iter().filter(|&&b| b).count(), 1);
+        assert!(got[5]);
+    }
+}

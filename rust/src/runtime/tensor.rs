@@ -181,6 +181,29 @@ impl Tensor {
         Ok(Tensor { shape: dims, data })
     }
 
+    /// Build an f32 0/1 mask tensor from flat bits (predictor → decode-entry
+    /// plumbing; `shape` must multiply out to `bits.len()`).
+    pub fn mask_from_bits(shape: Vec<usize>, bits: &[bool]) -> Result<Tensor> {
+        Tensor::f32(
+            shape,
+            bits.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect(),
+        )
+    }
+
+    /// Number of nonzero entries (f32 tensors; masks, activations).
+    pub fn count_nonzero(&self) -> Result<usize> {
+        Ok(self.as_f32()?.iter().filter(|&&v| v != 0.0).count())
+    }
+
+    /// Fraction of nonzero entries; 0.0 for an empty tensor.
+    pub fn density(&self) -> Result<f64> {
+        let n = self.len();
+        if n == 0 {
+            return Ok(0.0);
+        }
+        Ok(self.count_nonzero()? as f64 / n as f64)
+    }
+
     /// Row-major strides.
     pub fn strides(&self) -> Vec<usize> {
         let mut st = vec![1usize; self.shape.len()];
@@ -215,6 +238,16 @@ mod tests {
         let t = Tensor::zeros_f32(vec![2, 3, 4]);
         assert_eq!(t.strides(), vec![12, 4, 1]);
         assert_eq!(t.offset(&[1, 2, 3]), 12 + 8 + 3);
+    }
+
+    #[test]
+    fn mask_bits_roundtrip_and_density() {
+        let t = Tensor::mask_from_bits(vec![2, 3], &[true, false, false, true, true, false])
+            .unwrap();
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.count_nonzero().unwrap(), 3);
+        assert!((t.density().unwrap() - 0.5).abs() < 1e-12);
+        assert!(Tensor::mask_from_bits(vec![2, 2], &[true]).is_err());
     }
 
     #[test]

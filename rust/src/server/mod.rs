@@ -4,16 +4,24 @@
 //!
 //! Protocol: one JSON object per line.
 //!   request:  {"id": 1, "prompt": "ada lives in", "max_tokens": 8,
-//!              "temperature": 0.0}
+//!              "temperature": 0.0, "policy": "reuse:8:4"}
 //!   response: {"id": 1, "text": " paris .", "tokens": 3,
-//!              "prefill_ms": 12.1, "total_ms": 80.5, "finish": "max_tokens"}
+//!              "prefill_ms": 12.1, "queue_ms": 0.4, "total_ms": 80.5,
+//!              "finish": "max_tokens"}
+//!   error:    {"id": 1, "error": "missing key `prompt`"}  (malformed
+//!             requests get a JSON error line back, echoing the request id
+//!             when one could be parsed)
+//!
+//! `policy` selects the per-request FFN neuron-mask policy
+//! (`NeuronPolicy::parse` forms: "dense", "reuse[:W[:K]]", "topp:B[:W]");
+//! omitted = the engine's default.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use crate::engine::{Engine, SamplingParams};
+use crate::engine::{Engine, NeuronPolicy, SamplingParams};
 use crate::error::{Error, Result};
 use crate::jsonx::{self, obj, Value};
 use crate::tokenizer::Bpe;
@@ -24,6 +32,16 @@ struct Job {
     prompt_text: String,
     max_tokens: usize,
     sampling: SamplingParams,
+    policy: Option<NeuronPolicy>,
+}
+
+/// Reader-thread -> scheduler messages. Malformed requests travel here too
+/// (not straight to the writer): the scheduler owns the only reply sender,
+/// so dropping it on `serve()` return still shuts the writer thread down.
+enum Inbound {
+    Job(Job),
+    /// pre-rendered JSON error line for a request that failed to parse
+    Malformed { conn_id: u64, line: String },
 }
 
 struct Reply {
@@ -48,7 +66,7 @@ pub fn serve(
         let _ = tx.send(local);
     }
 
-    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let (job_tx, job_rx) = mpsc::channel::<Inbound>();
     let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
     let (writer_tx, writer_rx) = mpsc::channel::<(u64, TcpStream)>();
 
@@ -68,18 +86,28 @@ pub fn serve(
                     if line.trim().is_empty() {
                         continue;
                     }
-                    match parse_request(id, &line) {
-                        Ok(job) => {
-                            if tx.send(job).is_err() {
-                                break;
+                    let msg = match parse_request(id, &line) {
+                        Ok(job) => Inbound::Job(job),
+                        Err(e) => {
+                            // malformed request: reply with a JSON error
+                            // line, echoing the id when one parses
+                            eprintln!("[server] bad request: {e}");
+                            let req_id = jsonx::parse(line.trim())
+                                .ok()
+                                .and_then(|v| v.get("id").cloned())
+                                .unwrap_or(Value::Null);
+                            Inbound::Malformed {
+                                conn_id: id,
+                                line: obj(vec![
+                                    ("id", req_id),
+                                    ("error", Value::Str(e.to_string())),
+                                ])
+                                .to_json(),
                             }
                         }
-                        Err(e) => {
-                            // malformed request: it is reported on the reply
-                            // channel path via a synthetic job is overkill;
-                            // just log.
-                            eprintln!("[server] bad request: {e}");
-                        }
+                    };
+                    if tx.send(msg).is_err() {
+                        break;
                     }
                 }
             });
@@ -115,13 +143,21 @@ pub fn serve(
         std::collections::HashMap::new();
     let mut served = 0usize;
     loop {
-        // drain new jobs
+        // drain new jobs + malformed-request error replies
         loop {
             match job_rx.try_recv() {
-                Ok(job) => {
+                Ok(Inbound::Job(job)) => {
                     let tokens = bpe.encode(&job.prompt_text);
-                    let eid = engine.submit_with(tokens, job.max_tokens, job.sampling);
+                    let eid = engine.submit_with_policy(
+                        tokens,
+                        job.max_tokens,
+                        job.sampling,
+                        job.policy,
+                    );
                     pending.insert(eid, (job.conn_id, job.client_req_id));
+                }
+                Ok(Inbound::Malformed { conn_id, line }) => {
+                    let _ = reply_tx.send(Reply { conn_id, line });
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => return Ok(served),
@@ -139,6 +175,7 @@ pub fn serve(
                     ("text", Value::Str(text)),
                     ("tokens", Value::Num(done.tokens.len() as f64)),
                     ("prefill_ms", Value::Num(done.prefill_ms)),
+                    ("queue_ms", Value::Num(done.queue_ms)),
                     ("total_ms", Value::Num(done.total_ms)),
                     (
                         "finish",
@@ -161,6 +198,15 @@ pub fn serve(
 
 fn parse_request(conn_id: u64, line: &str) -> Result<Job> {
     let v = jsonx::parse(line)?;
+    let policy = match v.get("policy") {
+        None | Some(Value::Null) => None,
+        Some(p) => {
+            let spec = p
+                .as_str()
+                .ok_or_else(|| Error::Config("`policy` is not a string".into()))?;
+            Some(NeuronPolicy::parse(spec)?)
+        }
+    };
     Ok(Job {
         conn_id,
         client_req_id: v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0),
@@ -171,6 +217,7 @@ fn parse_request(conn_id: u64, line: &str) -> Result<Job> {
             top_k: v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(0),
             seed: v.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
         },
+        policy,
     })
 }
 
@@ -201,8 +248,20 @@ impl Client {
             ("temperature", Value::Num(temperature)),
         ])
         .to_json();
+        self.send_line(&line)?;
+        self.recv()
+    }
+
+    /// Send one raw protocol line (tests use this to exercise the
+    /// malformed-request path).
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
         writeln!(self.stream, "{line}")?;
         self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Read the next JSON reply line.
+    pub fn recv(&mut self) -> Result<Value> {
         let mut resp = String::new();
         self.reader.read_line(&mut resp)?;
         if resp.is_empty() {

@@ -5,6 +5,13 @@
 //! multiplying) the entire corresponding row of the down-projection. On a
 //! memory-bound GEMV the latency should track the number of live rows —
 //! `benches/bench_matvec.rs` regenerates Fig 9b from these kernels.
+//!
+//! On top of the single-projection GEMVs, `FfnWeights` + `sparse_ffn_matvec`
+//! realise the predictor fast path (`crate::predictor`): the whole
+//! up→ReLU→down FFN computed only over a predicted live-neuron list, with
+//! both projections stored neuron-major so one skipped neuron saves two
+//! weight rows. `benches/bench_predictor.rs` measures it against the dense
+//! reference.
 
 /// Dense GEMV: y[j] = Σ_i a[i] · w[i, j], w row-major [f × d].
 pub fn dense_gemv(w: &[f32], f: usize, d: usize, a: &[f32], y: &mut [f32]) {
@@ -52,6 +59,117 @@ pub fn indexed_gemv(w: &[f32], d: usize, live: &[u32], a: &[f32], y: &mut [f32])
             y[j] += ai * row[j];
         }
     }
+}
+
+/// Neuron-major FFN weights for the predictor fast path: *both* the up
+/// projection (stored transposed, [F × d]) and the down projection ([F × d])
+/// keep one contiguous row per neuron, so skipping a predicted-dead neuron
+/// skips its up dot-product, its activation, and its down accumulation —
+/// 4·d FLOPs and 8·d bytes per neuron (CSR-style gather on the live list,
+/// scatter-accumulate into the output).
+pub struct FfnWeights {
+    pub f: usize,
+    pub d: usize,
+    /// up projection, transposed to neuron-major: w_up_t[j*d + i] = W_up[i, j]
+    pub w_up_t: Vec<f32>,
+    pub b_up: Vec<f32>,
+    /// down projection, neuron-major: w_down[j*d + k] = W_down[j, k]
+    pub w_down: Vec<f32>,
+}
+
+impl FfnWeights {
+    pub fn new(f: usize, d: usize, w_up_t: Vec<f32>, b_up: Vec<f32>, w_down: Vec<f32>) -> Self {
+        assert_eq!(w_up_t.len(), f * d);
+        assert_eq!(b_up.len(), f);
+        assert_eq!(w_down.len(), f * d);
+        FfnWeights { f, d, w_up_t, b_up, w_down }
+    }
+
+    /// Random weights for benches/tests (deterministic in `seed`).
+    pub fn random(f: usize, d: usize, seed: u64) -> Self {
+        let mut r = crate::util::rng::Rng::new(seed);
+        let scale = 1.0 / (d as f32).sqrt();
+        FfnWeights::new(
+            f,
+            d,
+            (0..f * d).map(|_| r.normal() as f32 * scale).collect(),
+            (0..f).map(|_| r.normal() as f32 * 0.01).collect(),
+            (0..f * d).map(|_| r.normal() as f32 * scale).collect(),
+        )
+    }
+
+    /// One neuron's contribution: act = relu(w_up_t[j]·x + b), scatter
+    /// act·w_down[j] into y. Shared by the dense and sparse paths so that
+    /// `sparse_ffn_matvec` over a superset of the active neurons is
+    /// bit-identical to `dense_ffn_matvec` (inactive neurons contribute
+    /// nothing in either path — no ±0.0 accumulation drift).
+    #[inline]
+    fn accumulate_neuron(&self, j: usize, x: &[f32], y: &mut [f32]) {
+        let row = &self.w_up_t[j * self.d..(j + 1) * self.d];
+        let mut pre = self.b_up[j];
+        for (wi, xi) in row.iter().zip(x) {
+            pre += wi * xi;
+        }
+        if pre <= 0.0 {
+            return; // ReLU kills the neuron: nothing to scatter
+        }
+        let down = &self.w_down[j * self.d..(j + 1) * self.d];
+        for (yk, wk) in y.iter_mut().zip(down) {
+            *yk += pre * wk;
+        }
+    }
+
+    /// Live set under the exact ReLU: neurons whose activation is nonzero
+    /// for input `x` (the oracle the predictor is scored against).
+    pub fn live_set(&self, x: &[f32]) -> Vec<u32> {
+        (0..self.f)
+            .filter(|&j| {
+                let row = &self.w_up_t[j * self.d..(j + 1) * self.d];
+                let mut pre = self.b_up[j];
+                for (wi, xi) in row.iter().zip(x) {
+                    pre += wi * xi;
+                }
+                pre > 0.0
+            })
+            .map(|j| j as u32)
+            .collect()
+    }
+}
+
+/// Dense reference FFN matvec: y = W_down^T · relu(W_up^T x + b).
+pub fn dense_ffn_matvec(w: &FfnWeights, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), w.d);
+    assert_eq!(y.len(), w.d);
+    y.fill(0.0);
+    for j in 0..w.f {
+        w.accumulate_neuron(j, x, y);
+    }
+}
+
+/// Predictor fast path: compute only the neurons in `live` (strictly
+/// increasing indices from the predictor's mask). If `live` covers every
+/// neuron the ReLU keeps, the result is bit-identical to
+/// `dense_ffn_matvec`; a missed live neuron is the approximation the recall
+/// floor bounds.
+pub fn sparse_ffn_matvec(w: &FfnWeights, x: &[f32], live: &[u32], y: &mut [f32]) {
+    assert_eq!(x.len(), w.d);
+    assert_eq!(y.len(), w.d);
+    y.fill(0.0);
+    for &j in live {
+        w.accumulate_neuron(j as usize, x, y);
+    }
+}
+
+/// FLOPs executed by `sparse_ffn_matvec` for `n_live` computed neurons
+/// (2·d up dot + 2·d down scatter each).
+pub fn sparse_ffn_flops(n_live: usize, d: usize) -> usize {
+    4 * n_live * d
+}
+
+/// Weight bytes touched by `sparse_ffn_matvec` (one up row + one down row
+/// of f32 per computed neuron).
+pub fn sparse_ffn_bytes(n_live: usize, d: usize) -> usize {
+    8 * n_live * d
 }
 
 /// Count of FLOPs actually executed by `rowskip_gemv` for activation `a`.
@@ -119,6 +237,46 @@ mod tests {
         let a = [0.0, 1.0, 0.0, 2.0f32];
         assert_eq!(rowskip_flops(&a, 8), 2 * 2 * 8);
         assert_eq!(rowskip_bytes(&a, 8), 4 * 2 * 8);
+    }
+
+    #[test]
+    fn sparse_ffn_on_exact_live_set_is_bit_identical() {
+        let w = FfnWeights::random(64, 16, 11);
+        let mut r = Rng::new(12);
+        for _ in 0..8 {
+            let x: Vec<f32> = (0..16).map(|_| r.normal() as f32).collect();
+            let live = w.live_set(&x);
+            let mut dense = vec![0.0f32; 16];
+            let mut sparse = vec![0.0f32; 16];
+            dense_ffn_matvec(&w, &x, &mut dense);
+            sparse_ffn_matvec(&w, &x, &live, &mut sparse);
+            assert_eq!(dense, sparse, "exact live set must be bit-identical");
+            // a superset (extra predicted-but-dead neurons) changes nothing
+            let all: Vec<u32> = (0..64).collect();
+            sparse_ffn_matvec(&w, &x, &all, &mut sparse);
+            assert_eq!(dense, sparse, "superset must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn sparse_ffn_missing_live_neuron_changes_output() {
+        let w = FfnWeights::random(32, 8, 21);
+        let mut r = Rng::new(22);
+        let x: Vec<f32> = (0..8).map(|_| r.normal() as f32).collect();
+        let live = w.live_set(&x);
+        assert!(!live.is_empty(), "degenerate test input");
+        let mut full = vec![0.0f32; 8];
+        let mut missing = vec![0.0f32; 8];
+        sparse_ffn_matvec(&w, &x, &live, &mut full);
+        sparse_ffn_matvec(&w, &x, &live[1..], &mut missing);
+        assert_ne!(full, missing, "dropping a live neuron must show up");
+    }
+
+    #[test]
+    fn sparse_ffn_cost_accounting() {
+        assert_eq!(sparse_ffn_flops(10, 32), 4 * 10 * 32);
+        assert_eq!(sparse_ffn_bytes(10, 32), 8 * 10 * 32);
+        assert_eq!(sparse_ffn_flops(0, 32), 0);
     }
 
     #[test]

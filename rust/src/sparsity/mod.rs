@@ -1,12 +1,70 @@
 //! Activation-sparsity instrumentation: per-layer statistics, aggregated
-//! sparsity tracking (paper §5.1), preactivation histograms (Fig 5/11) and
-//! the γ-window weight-reuse policy (Fig 7c).
+//! sparsity tracking (paper §5.1), preactivation histograms (Fig 5/11), the
+//! γ-window weight-reuse policy (Fig 7c), and the bit-level mask algebra the
+//! hot-neuron predictor (`crate::predictor`) scores itself with.
 
 pub mod aggregated;
 pub mod reuse;
 
 pub use aggregated::AggregatedTracker;
 pub use reuse::{ReusePolicy, ReuseStrategy};
+
+/// Fraction of live entries in a flat boolean mask.
+pub fn mask_density(bits: &[bool]) -> f64 {
+    if bits.is_empty() {
+        return 0.0;
+    }
+    bits.iter().filter(|&&b| b).count() as f64 / bits.len() as f64
+}
+
+/// Confusion counts of a predicted neuron set against an observed one.
+///
+/// `hits` = predicted ∧ observed, `misses` = ¬predicted ∧ observed (the
+/// neurons a sparse FFN step would have wrongly skipped), `false_alarms` =
+/// predicted ∧ ¬observed (rows loaded for nothing).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MaskAccuracy {
+    pub hits: usize,
+    pub misses: usize,
+    pub false_alarms: usize,
+}
+
+impl MaskAccuracy {
+    /// |pred ∩ obs| / |obs|; 1.0 when nothing was observed (nothing to miss).
+    pub fn recall(&self) -> f64 {
+        let obs = self.hits + self.misses;
+        if obs == 0 {
+            1.0
+        } else {
+            self.hits as f64 / obs as f64
+        }
+    }
+
+    /// |pred ∩ obs| / |pred|; 1.0 when nothing was predicted.
+    pub fn precision(&self) -> f64 {
+        let pred = self.hits + self.false_alarms;
+        if pred == 0 {
+            1.0
+        } else {
+            self.hits as f64 / pred as f64
+        }
+    }
+}
+
+/// Score `predicted` against `observed` (equal-length flat masks).
+pub fn mask_accuracy(predicted: &[bool], observed: &[bool]) -> MaskAccuracy {
+    debug_assert_eq!(predicted.len(), observed.len());
+    let mut acc = MaskAccuracy::default();
+    for (&p, &o) in predicted.iter().zip(observed) {
+        match (p, o) {
+            (true, true) => acc.hits += 1,
+            (false, true) => acc.misses += 1,
+            (true, false) => acc.false_alarms += 1,
+            (false, false) => {}
+        }
+    }
+    acc
+}
 
 use crate::model::LayerSparsity;
 use crate::runtime::tensor::Tensor;
@@ -154,6 +212,29 @@ mod tests {
         let mut st = SparsityStats::new(2);
         let bad = Tensor::f32(vec![3, 3], vec![0.0; 9]).unwrap();
         assert!(st.push(&bad).is_err());
+    }
+
+    #[test]
+    fn mask_accuracy_counts_and_edge_cases() {
+        let pred = [true, true, false, false];
+        let obs = [true, false, true, false];
+        let a = mask_accuracy(&pred, &obs);
+        assert_eq!(
+            a,
+            MaskAccuracy {
+                hits: 1,
+                misses: 1,
+                false_alarms: 1
+            }
+        );
+        assert!((a.recall() - 0.5).abs() < 1e-12);
+        assert!((a.precision() - 0.5).abs() < 1e-12);
+        // empty observation -> perfect recall; empty prediction -> perfect precision
+        let none = mask_accuracy(&[false, false], &[false, false]);
+        assert_eq!(none.recall(), 1.0);
+        assert_eq!(none.precision(), 1.0);
+        assert!((mask_density(&pred) - 0.5).abs() < 1e-12);
+        assert_eq!(mask_density(&[]), 0.0);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use rsb::engine::sampler::log_softmax;
 use rsb::engine::{
-    AcceptMode, Engine, EngineConfig, SamplingParams, SpecDecoder, VerifyMask,
+    AcceptMode, Engine, EngineConfig, NeuronPolicy, SamplingParams, SpecDecoder, VerifyMask,
 };
 use rsb::runtime::{cpu_client, Arg, Model, Tensor};
 
@@ -275,6 +275,85 @@ fn neuron_mask_all_ones_equals_default_and_zero_mask_changes_output() {
     assert_ne!(ones, zeros, "zero neuron mask must change the logits");
 }
 
+/// ISSUE 1 satellite: at recall floor 1.0 (shadow mode) the Reuse policy
+/// must never change a single output token vs Dense — the predictor
+/// measures recall/precision but the escape hatch keeps every step dense.
+#[test]
+fn reuse_policy_at_recall_floor_one_matches_dense_exactly() {
+    let model = tiny();
+    let prompt: Vec<u32> = vec![5, 9, 13, 21, 2, 7];
+    let n = 12usize;
+
+    let params = model.init_params(2).unwrap();
+    let mut dense = Engine::new(model.clone(), params, EngineConfig::default()).unwrap();
+    dense.submit(prompt.clone(), n);
+    let dense_done = dense.run_to_completion().unwrap();
+
+    let params = model.init_params(2).unwrap();
+    let cfg = EngineConfig {
+        policy: NeuronPolicy::Reuse { window: 3, union_k: 3 },
+        recall_floor: 1.0,
+        ..EngineConfig::default()
+    };
+    let mut reuse = Engine::new(model, params, cfg).unwrap();
+    reuse.submit(prompt, n);
+    let reuse_done = reuse.run_to_completion().unwrap();
+
+    assert_eq!(
+        reuse_done[0].tokens, dense_done[0].tokens,
+        "shadow-mode reuse degraded output tokens"
+    );
+    // shadow mode: recall was measured, nothing was enforced
+    assert_eq!(reuse.metrics.enforced_steps, 0);
+    assert!(
+        !reuse.metrics.predictor_recall.is_empty(),
+        "shadow recall was never measured"
+    );
+    for i in 0..reuse.metrics.predictor_recall.len() {
+        // recall values are probabilities
+        let r = reuse.metrics.predictor_recall.percentile(100.0 * i as f64 / 12.0);
+        assert!((0.0..=1.0).contains(&r));
+    }
+    assert!(reuse.metrics.report().contains("predictor:"));
+}
+
+/// Completion::queue_ms satellite: the measured admission wait reaches the
+/// completion record (and is sane).
+#[test]
+fn queue_wait_is_carried_into_completions() {
+    let model = tiny();
+    let params = model.init_params(3).unwrap();
+    let mut engine = Engine::new(model, params, EngineConfig::default()).unwrap();
+    // 2x the batch size so half the requests queue behind a full batch
+    let n_req = engine.decode_b * 2;
+    for i in 0..n_req {
+        engine.submit(vec![1 + i as u32, 4, 2], 6);
+    }
+    let mut done = engine.run_to_completion().unwrap();
+    assert_eq!(done.len(), n_req);
+    done.sort_by_key(|d| d.id);
+    for d in &done {
+        assert!(d.queue_ms >= 0.0);
+        assert!(
+            d.queue_ms <= d.total_ms,
+            "queue wait cannot exceed total latency"
+        );
+    }
+    // the second wave waited for at least the first decode steps
+    let first_wave_max = done[..engine.decode_b]
+        .iter()
+        .map(|d| d.queue_ms)
+        .fold(0.0f64, f64::max);
+    let second_wave_min = done[engine.decode_b..]
+        .iter()
+        .map(|d| d.queue_ms)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        second_wave_min >= first_wave_max,
+        "queued wave should wait longer ({second_wave_min} vs {first_wave_max})"
+    );
+}
+
 #[test]
 fn server_roundtrip_over_tcp() {
     use std::sync::mpsc;
@@ -296,8 +375,64 @@ fn server_roundtrip_over_tcp() {
         assert_eq!(resp.get("id").and_then(|v| v.as_i64()), Some(i as i64));
         assert_eq!(resp.get("tokens").and_then(|v| v.as_usize()), Some(4));
         assert!(resp.get("text").is_some());
+        assert!(
+            resp.get("queue_ms").and_then(|v| v.as_f64()).unwrap_or(-1.0) >= 0.0,
+            "response must carry the measured queue wait"
+        );
     }
     assert_eq!(server.join().unwrap().unwrap(), 2);
+}
+
+/// ISSUE 1 satellite: malformed requests get a JSON error line back (with
+/// the request id echoed when one could be parsed) instead of silence.
+#[test]
+fn server_replies_json_error_to_malformed_requests() {
+    use std::sync::mpsc;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let bpe = Arc::new(rsb::tokenizer::Bpe::train("ab ab ab ba baab abba", 24).unwrap());
+    let server = std::thread::spawn(move || {
+        let model = tiny();
+        let params = model.init_params(0).unwrap();
+        let engine = Engine::new(model, params, EngineConfig::default()).unwrap();
+        rsb::server::serve(engine, bpe, "127.0.0.1:0", Some(1), Some(ready_tx))
+    });
+    let addr = ready_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("server start");
+    let mut client = rsb::server::Client::connect(addr).unwrap();
+
+    // not JSON at all -> error with null id
+    client.send_line("this is not json").unwrap();
+    let resp = client.recv().unwrap();
+    assert!(resp.get("error").and_then(|v| v.as_str()).is_some());
+    assert_eq!(resp.get("id"), Some(&rsb::jsonx::Value::Null));
+
+    // valid JSON missing `prompt` -> error echoing the id
+    client.send_line("{\"id\": 7, \"max_tokens\": 4}").unwrap();
+    let resp = client.recv().unwrap();
+    assert!(resp
+        .get("error")
+        .and_then(|v| v.as_str())
+        .unwrap()
+        .contains("prompt"));
+    assert_eq!(resp.get("id").and_then(|v| v.as_i64()), Some(7));
+
+    // bad policy spec -> error, not a crash
+    client
+        .send_line("{\"id\": 8, \"prompt\": \"ab\", \"policy\": \"warp\"}")
+        .unwrap();
+    let resp = client.recv().unwrap();
+    assert!(resp
+        .get("error")
+        .and_then(|v| v.as_str())
+        .unwrap()
+        .contains("policy"));
+
+    // the connection is still healthy: a valid request completes normally
+    let resp = client.request(9, "ab ba", 3, 0.0).unwrap();
+    assert!(resp.get("error").is_none());
+    assert_eq!(resp.get("tokens").and_then(|v| v.as_usize()), Some(3));
+    assert_eq!(server.join().unwrap().unwrap(), 1);
 }
 
 #[test]

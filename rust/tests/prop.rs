@@ -6,9 +6,11 @@ use rsb::engine::kv::{KvBatch, SlotManager};
 use rsb::engine::request::SamplingParams;
 use rsb::engine::sampler::{argmax, log_softmax, sample, softmax};
 use rsb::jsonx::{self, Value};
+use rsb::predictor::{HotSet, NeuronPolicy, SlotPredictor};
 use rsb::runtime::checkpoint;
 use rsb::runtime::tensor::Tensor;
-use rsb::sparsity::{AggregatedTracker, ReusePolicy, ReuseStrategy};
+use rsb::sparse::{dense_ffn_matvec, sparse_ffn_matvec, FfnWeights};
+use rsb::sparsity::{mask_accuracy, AggregatedTracker, ReusePolicy, ReuseStrategy};
 use rsb::tokenizer::Bpe;
 use rsb::util::rng::Rng;
 
@@ -156,6 +158,132 @@ fn prop_reuse_policy_masks_structurally_sound() {
             let obs = Tensor::f32(vec![l, 1, f], data).unwrap();
             p.observe(&obs, 0).unwrap();
             let _ = step;
+        }
+    });
+}
+
+/// ISSUE 1 satellite: the sparse FFN fast path computed over ANY superset
+/// of the ReLU-active neuron set is bit-identical to the dense FFN, for
+/// random weights, inputs and random extra predicted neurons.
+#[test]
+fn prop_sparse_ffn_matvec_equals_dense_on_active_set() {
+    check("sparse_ffn_matvec", 30, |rng| {
+        let f = rng.range(8, 96);
+        let d = rng.range(4, 32);
+        let w = FfnWeights::random(f, d, rng.next_u64());
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let active = w.live_set(&x);
+        let mut dense = vec![0.0f32; d];
+        dense_ffn_matvec(&w, &x, &mut dense);
+
+        // exact active set
+        let mut y = vec![0.0f32; d];
+        sparse_ffn_matvec(&w, &x, &active, &mut y);
+        assert_eq!(dense, y, "exact active set diverged");
+
+        // random superset (a predictor mask with false alarms)
+        let active_set: std::collections::HashSet<u32> = active.iter().cloned().collect();
+        let superset: Vec<u32> = (0..f as u32)
+            .filter(|j| active_set.contains(j) || rng.chance(0.4))
+            .collect();
+        sparse_ffn_matvec(&w, &x, &superset, &mut y);
+        assert_eq!(dense, y, "superset (false alarms) diverged");
+
+        // full mask == dense
+        let all: Vec<u32> = (0..f as u32).collect();
+        sparse_ffn_matvec(&w, &x, &all, &mut y);
+        assert_eq!(dense, y, "full live list diverged");
+    });
+}
+
+/// HotSet invariants: the union of the last k masks contains every mask it
+/// was built from, counts match the ring contents, and top_p(1.0) is
+/// exactly the window union.
+#[test]
+fn prop_hotset_union_and_counts_consistent() {
+    check("hotset", 30, |rng| {
+        let l = rng.range(1, 3);
+        let f = rng.range(8, 64);
+        let window = rng.range(1, 6);
+        let mut hs = HotSet::new(l, f, window);
+        let mut history: Vec<Vec<bool>> = Vec::new();
+        for _ in 0..20 {
+            let bits: Vec<bool> = (0..l * f).map(|_| rng.chance(0.2)).collect();
+            hs.push_bits(bits.clone()).unwrap();
+            history.push(bits);
+            let k = rng.range(1, window + 1);
+            let union = hs.union_of_last(k);
+            let in_ring = history.len().min(window);
+            for recent in history.iter().rev().take(k.min(in_ring)) {
+                for (i, &b) in recent.iter().enumerate() {
+                    if b {
+                        assert!(union[i], "union lost a recent live neuron");
+                    }
+                }
+            }
+            // counts == occurrences over the in-window masks
+            for li in 0..l {
+                for fi in 0..f {
+                    let want = history
+                        .iter()
+                        .rev()
+                        .take(window)
+                        .filter(|m| m[li * f + fi])
+                        .count() as u32;
+                    assert_eq!(hs.count(li, fi), want);
+                }
+            }
+            // budget 1.0 covers everything that fired in-window
+            assert_eq!(hs.top_p(1.0), hs.union_of_last(window));
+            // predictions are supersets as the budget grows
+            let lo = hs.top_p(0.3);
+            let hi = hs.top_p(0.9);
+            for (a, b) in lo.iter().zip(&hi) {
+                assert!(!a || *b, "smaller budget predicted outside larger");
+            }
+        }
+    });
+}
+
+/// Slot predictor safety: at recall floor 1.0 (shadow mode) it never asks
+/// for a sparse step, whatever the stream does; below 1.0 it only enforces
+/// once its shadow recall estimate clears the floor.
+#[test]
+fn prop_slot_predictor_floor_gates_enforcement() {
+    check("slot_predictor", 25, |rng| {
+        let f = rng.range(8, 32);
+        let window = rng.range(1, 5);
+        let union_k = rng.range(1, window + 1);
+        let policy = NeuronPolicy::Reuse { window, union_k };
+        let floor = *rng.choose(&[0.0, 0.5, 0.9, 1.0]);
+        let mut p = SlotPredictor::new(policy, floor, 1, f).unwrap();
+        // the engine mirrors the hotset: shadow scores must match a hand
+        // computation of union-of-last-k vs the observation
+        let mut mirror = HotSet::new(1, f, window);
+        for _ in 0..40 {
+            let proposal = p.propose().map(|b| b.to_vec());
+            if floor >= 1.0 {
+                assert!(proposal.is_none(), "shadow mode proposed a sparse step");
+            }
+            if proposal.is_some() {
+                assert!(
+                    p.recall_estimate().map_or(false, |est| est >= floor),
+                    "enforced below the recall floor"
+                );
+                // the enforced mask is exactly the mirrored hotset union
+                assert_eq!(proposal.as_deref().unwrap(), mirror.union_of_last(union_k));
+            }
+            let bits: Vec<bool> = (0..f).map(|_| rng.chance(0.3)).collect();
+            let obs = Tensor::mask_from_bits(vec![1, 1, f], &bits).unwrap();
+            let enforced = proposal.is_some();
+            let acc = p.observe(&obs, 0, !enforced).unwrap();
+            if enforced {
+                assert!(acc.is_none(), "post-gate observation must not be scored");
+            } else if let Some(a) = &acc {
+                let pred = mirror.union_of_last(union_k);
+                assert_eq!(*a, mask_accuracy(&pred, &bits));
+            }
+            mirror.push_bits(bits).unwrap();
         }
     });
 }
