@@ -81,7 +81,7 @@ fn main() -> rsb::Result<()> {
     );
 
     // 3. serve batched requests through the engine
-    let mut engine = Engine::new(model.clone(), out.params, EngineConfig::default())?;
+    let mut engine = Engine::with_model(model.clone(), out.params, EngineConfig::default())?;
     let n_requests = args.usize_or("requests", 8)?;
     let max_new = args.usize_or("max-tokens", 24)?;
     let prompts = [

@@ -70,7 +70,7 @@ fn main() -> rsb::Result<()> {
     }
 
     // serve a few requests through the batching engine
-    let mut engine = Engine::new(model, out.params, EngineConfig::default())?;
+    let mut engine = Engine::with_model(model, out.params, EngineConfig::default())?;
     let prompts = ["ada lives in", "the foxes", "echo : alpha beta ; alpha"];
     for p in prompts {
         engine.submit(bpe.encode(p), 8);

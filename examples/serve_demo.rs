@@ -41,7 +41,7 @@ fn main() -> rsb::Result<()> {
             println!("[warn] no checkpoint; serving an untrained model");
             model.init_params(0)?
         };
-        let engine = Engine::new(model, params, EngineConfig::default())?;
+        let engine = Engine::with_model(model, params, EngineConfig::default())?;
         serve(engine, bpe_srv, "127.0.0.1:0", Some(n_requests), Some(ready_tx))
     });
     let addr = ready_rx

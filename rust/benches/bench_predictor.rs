@@ -14,6 +14,7 @@
 //! 3. **Engine end-to-end** (needs `make artifacts`; skipped otherwise):
 //!    the tiny model served with `NeuronPolicy::Reuse` in shadow mode.
 
+#[cfg(feature = "xla")]
 use std::sync::Arc;
 
 use rsb::bench::Harness;
@@ -21,7 +22,9 @@ use rsb::costmodel::{predictor as costpred, DeviceProfile};
 use rsb::engine::{Engine, EngineConfig, EngineMetrics, NeuronPolicy};
 use rsb::predictor::SlotPredictor;
 use rsb::runtime::artifact::ModelCfg;
-use rsb::runtime::{artifacts_dir, cpu_client, Model, Tensor};
+use rsb::runtime::Tensor;
+#[cfg(feature = "xla")]
+use rsb::runtime::{artifacts_dir, cpu_client, Model};
 use rsb::sparse::{dense_ffn_matvec, sparse_ffn_flops, sparse_ffn_matvec, FfnWeights};
 use rsb::sparsity::mask_density;
 use rsb::util::rng::Rng;
@@ -170,26 +173,67 @@ fn run() -> rsb::Result<()> {
         std::process::exit(1);
     }
 
-    // part 3: engine end-to-end with the reuse policy (artifacts optional)
-    let artifacts = artifacts_dir(None);
-    match Model::open(cpu_client()?, &artifacts, "tiny_opt_relu_s0") {
-        Err(_) => println!("[skip] engine part: artifacts missing"),
-        Ok(model) => {
-            let model = Arc::new(model);
-            let params = model.init_params(0)?;
-            let cfg = EngineConfig {
-                policy: NeuronPolicy::Reuse { window: 4, union_k: 4 },
-                recall_floor: 0.90,
-                ..EngineConfig::default()
-            };
-            let mut engine = Engine::new(model, params, cfg)?;
-            for i in 0..engine.decode_b {
-                engine.submit(vec![3 + i as u32, 7, 1], 48);
+    // part 3: engine end-to-end with the reuse policy (xla + artifacts
+    // when available, else the host backend — same engine either way)
+    #[cfg(feature = "xla")]
+    {
+        let artifacts = artifacts_dir(None);
+        match Model::open(cpu_client()?, &artifacts, "tiny_opt_relu_s0") {
+            Err(_) => println!("[skip] xla engine part: artifacts missing"),
+            Ok(model) => {
+                let model = Arc::new(model);
+                let params = model.init_params(0)?;
+                let mut engine = Engine::with_model(model, params, reuse_cfg())?;
+                drive_engine(&mut engine)?;
+                println!("== engine end-to-end (tiny model, xla) ==");
+                println!("{}", engine.metrics.report());
             }
-            engine.run_to_completion()?;
-            println!("== engine end-to-end (tiny model) ==");
-            println!("{}", engine.metrics.report());
         }
     }
+    {
+        let hb = rsb::hostexec::HostBackend::random(host_cfg(), 0, 4, 8)?;
+        let mut engine = Engine::new(Box::new(hb), reuse_cfg())?;
+        drive_engine(&mut engine)?;
+        println!("== engine end-to-end (host backend) ==");
+        println!("{}", engine.metrics.report());
+    }
+    Ok(())
+}
+
+fn reuse_cfg() -> EngineConfig {
+    EngineConfig {
+        policy: NeuronPolicy::Reuse { window: 4, union_k: 4 },
+        recall_floor: 0.90,
+        ..EngineConfig::default()
+    }
+}
+
+/// Tiny-model geometry for the host end-to-end part (mirrors the AOT
+/// `tiny_opt_relu_s0` artifact).
+fn host_cfg() -> ModelCfg {
+    ModelCfg {
+        size: "tiny".into(),
+        arch: "opt".into(),
+        act: "relu".into(),
+        stage: 0,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 256,
+        vocab: 256,
+        max_seq: 64,
+        shift: 1.0,
+        ffn_act: "relu".into(),
+        gated: false,
+        parallel_block: false,
+        has_bias: true,
+    }
+}
+
+fn drive_engine(engine: &mut Engine) -> rsb::Result<()> {
+    for i in 0..engine.decode_b {
+        engine.submit(vec![3 + i as u32, 7, 1], 48);
+    }
+    engine.run_to_completion()?;
     Ok(())
 }

@@ -3,23 +3,24 @@
 //! vLLM-style loop scaled to this testbed: requests enter a FIFO queue;
 //! each `step()` admits queued requests into free KV slots (prefill at B=1,
 //! pack the returned KV row into the batch cache) and then runs ONE batched
-//! decode step for every active slot. Model weights live on the device
-//! (`ParamStore::upload`), so the per-step host traffic is just the KV
-//! cache + small tensors.
+//! decode step for every active slot. The actual math is behind
+//! [`ExecBackend`]: the compiled XLA path keeps weights device-resident;
+//! the host path (`crate::hostexec`) runs the same contracts in pure Rust,
+//! realising the predicted mask as skipped weight rows.
 //!
 //! Sparsity integration (the paper's contribution as a first-class serving
 //! feature): every decode step returns the per-slot FFN activation mask;
 //! the engine feeds per-request `AggregatedTracker`s *and* per-slot
 //! `SlotPredictor`s (`crate::predictor`). Each step the predictors propose
 //! hot-neuron sets, the engine unions them into the batch-shared `[L, F]`
-//! mask the decode entry consumes (weight rows are shared across the batch,
-//! so the union is the set that must stay loaded), and the observed masks
-//! flow back to refresh the predictors. Periodic dense probe steps
-//! (`probe_every`) keep the shadow recall estimate honest — the entries
-//! report `ffn_mask` post-gating, so misses are only visible on dense steps.
+//! mask the decode backend consumes (weight rows are shared across the
+//! batch, so the union is the set that must stay loaded), and the observed
+//! masks flow back to refresh the predictors. Periodic dense probe steps
+//! (`probe_every`) keep the shadow recall estimate honest — the backends
+//! report `ffn_mask` post-gating, so misses are only visible on dense
+//! steps.
 
 use std::collections::VecDeque;
-use std::sync::Arc;
 
 use crate::engine::kv::{KvBatch, SlotManager};
 use crate::engine::metrics::EngineMetrics;
@@ -27,9 +28,10 @@ use crate::engine::request::{
     ActiveRequest, Completion, FinishReason, Request, SamplingParams,
 };
 use crate::engine::sampler;
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::predictor::{NeuronPolicy, SlotPredictor};
-use crate::runtime::{Arg, Entry, Model, ParamStore, Tensor};
+use crate::runtime::backend::ExecBackend;
+use crate::runtime::Tensor;
 use crate::sparsity::AggregatedTracker;
 use crate::sparsity::SparsityStats;
 use crate::util::rng::Rng;
@@ -66,10 +68,7 @@ impl Default for EngineConfig {
 }
 
 pub struct Engine {
-    pub model: Arc<Model>,
-    params: ParamStore,
-    prefill: Arc<Entry>,
-    decode: Arc<Entry>,
+    backend: Box<dyn ExecBackend>,
     pub decode_b: usize,
     pub prefill_t: usize,
     kv: KvBatch,
@@ -85,30 +84,14 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(model: Arc<Model>, mut params: ParamStore, cfg: EngineConfig) -> Result<Engine> {
-        params.upload(model.client())?;
-        let prefill = model.entry("prefill")?;
-        // prefer the batched decode entry; fall back to B=1
-        let decode = model.entry("decode").or_else(|_| model.entry("decode1"))?;
-        let kv_spec = decode
-            .spec
-            .inputs
-            .iter()
-            .find(|i| i.name == "kv")
-            .ok_or_else(|| Error::Engine("decode entry lacks kv input".into()))?;
-        let decode_b = kv_spec.shape[2];
-        let prefill_t = prefill
-            .spec
-            .inputs
-            .last()
-            .map(|i| i.shape[1])
-            .ok_or_else(|| Error::Engine("prefill entry lacks tokens input".into()))?;
-        let kv = KvBatch::new(&kv_spec.shape)?;
-        let n_layers = model.manifest.config.n_layers;
+    /// Build the engine over any execution backend (host or XLA).
+    pub fn new(backend: Box<dyn ExecBackend>, cfg: EngineConfig) -> Result<Engine> {
+        let decode_b = backend.decode_b();
+        let prefill_t = backend.prefill_t();
+        let kv = KvBatch::new(&backend.kv_shape())?;
+        let n_layers = backend.config().n_layers;
         Ok(Engine {
-            params,
-            prefill,
-            decode,
+            backend,
             decode_b,
             prefill_t,
             kv,
@@ -121,8 +104,24 @@ impl Engine {
             cfg,
             metrics: EngineMetrics::default(),
             next_id: 1,
-            model,
         })
+    }
+
+    /// Convenience: the compiled-path engine over a loaded AOT model
+    /// (uploads the weights and compiles the prefill/decode entries).
+    #[cfg(feature = "xla")]
+    pub fn with_model(
+        model: std::sync::Arc<crate::runtime::Model>,
+        params: crate::runtime::ParamStore,
+        cfg: EngineConfig,
+    ) -> Result<Engine> {
+        let backend = crate::runtime::XlaBackend::new(model, params)?;
+        Engine::new(Box::new(backend), cfg)
+    }
+
+    /// The execution backend this engine drives.
+    pub fn backend(&self) -> &dyn ExecBackend {
+        self.backend.as_ref()
     }
 
     pub fn submit(&mut self, prompt: Vec<u32>, max_new_tokens: usize) -> u64 {
@@ -182,19 +181,11 @@ impl Engine {
         self.predictors.get(slot).and_then(|p| p.as_ref())
     }
 
-    fn param_args(&self) -> Result<Vec<Arg<'_>>> {
-        let bufs = self
-            .params
-            .buffers()
-            .ok_or_else(|| Error::Engine("params not uploaded".into()))?;
-        Ok(bufs.iter().map(Arg::Device).collect())
-    }
-
     /// Decide this step's batch neuron mask. Returns `(mask, enforced,
     /// probe)`: `enforced` is true when a predicted sparse mask is applied,
     /// `probe` when a scheduled dense probe overrode enforcement.
     ///
-    /// The decode entry consumes one `[L, F]` mask for the whole batch
+    /// The decode backend consumes one `[L, F]` mask for the whole batch
     /// (weight rows are shared), so a sparse step happens only when *every*
     /// occupied slot proposes a set — any warming-up, dense-policy or
     /// fallen-back slot keeps the step dense (per-request `Dense` overrides
@@ -205,7 +196,7 @@ impl Engine {
     /// `Static` masks are an explicit experiment knob and are never
     /// probed away.
     fn plan_mask(&mut self) -> Result<(Tensor, bool, bool)> {
-        let c = &self.model.manifest.config;
+        let c = self.backend.config();
         let (n_layers, d_ff) = (c.n_layers, c.d_ff);
         let scheduled_probe = self.cfg.probe_every > 0
             && self.metrics.steps % self.cfg.probe_every as u64 == 0;
@@ -261,14 +252,9 @@ impl Engine {
         let pos_t = Tensor::i32(vec![self.decode_b], pos)?;
         let tok_t = Tensor::i32(vec![self.decode_b, 1], toks)?;
         let (mask_t, enforced, probe) = self.plan_mask()?;
-        let mut args = self.param_args()?;
-        args.push(Arg::Host(&kv_t));
-        args.push(Arg::Host(&pos_t));
-        args.push(Arg::Host(&tok_t));
-        args.push(Arg::Host(&mask_t));
-        let outs = self.decode.execute(&args)?;
-        let (logits, kv_out, ffn_mask, sparsity) = (&outs[0], &outs[1], &outs[2], &outs[3]);
-        self.kv.update_from(kv_out)?;
+        let out = self.backend.decode(&kv_t, &pos_t, &tok_t, &mask_t)?;
+        let (logits, ffn_mask, sparsity) = (&out.logits, &out.ffn_mask, &out.sparsity);
+        self.kv.update_from(&out.kv)?;
         // batch-level sparsity stats are only meaningful at full occupancy
         if self.active_count() == self.decode_b {
             self.stats.push(sparsity)?;
@@ -288,7 +274,8 @@ impl Engine {
         }
 
         // sample next tokens per live slot + retire finished requests
-        let vocab = self.model.manifest.config.vocab;
+        let vocab = self.backend.config().vocab;
+        let max_seq = self.backend.config().max_seq;
         let ldata = logits.as_f32()?;
         for slot in 0..self.decode_b {
             let Some(a) = &mut self.active[slot] else {
@@ -322,7 +309,7 @@ impl Engine {
                 Some(FinishReason::MaxTokens)
             } else if Some(next) == self.cfg.eos_token {
                 Some(FinishReason::Eos)
-            } else if a.pos + 1 >= self.model.manifest.config.max_seq {
+            } else if a.pos + 1 >= max_seq {
                 Some(FinishReason::ContextFull)
             } else {
                 None
@@ -383,13 +370,12 @@ impl Engine {
                 padded[i] = *t as i32;
             }
             let tok_t = Tensor::i32(vec![1, self.prefill_t], padded)?;
-            let mut args = self.param_args()?;
-            args.push(Arg::Host(&tok_t));
-            let outs = self.prefill.execute(&args)?;
-            let (logits, kv1) = (&outs[0], &outs[1]);
-            self.kv.pack_row(slot, kv1)?;
-            let vocab = self.model.manifest.config.vocab;
-            let ld = logits.as_f32()?;
+            let pre = self.backend.prefill(&tok_t)?;
+            self.kv.pack_row(slot, &pre.kv)?;
+            let c = self.backend.config();
+            let vocab = c.vocab;
+            let (n_layers, d_ff) = (c.n_layers, c.d_ff);
+            let ld = pre.logits.as_f32()?;
             let row = &ld[(len - 1) * vocab..len * vocab];
             let mut rng = Rng::new(req.sampling.seed).fold_in(req.id);
             let first = sampler::sample(row, &req.sampling, &mut rng);
@@ -397,9 +383,8 @@ impl Engine {
             let queue_ms = (t0 - req.enqueued_at).as_secs_f64() * 1e3;
             self.metrics.prefill_ms.push(prefill_ms);
             self.metrics.queue_wait_ms.push(queue_ms);
-            let c = &self.model.manifest.config;
             if self.cfg.track_sparsity {
-                let mut tr = AggregatedTracker::new(c.n_layers, c.d_ff);
+                let mut tr = AggregatedTracker::new(n_layers, d_ff);
                 tr.reset();
                 self.trackers[slot] = Some(tr);
             }
@@ -412,8 +397,8 @@ impl Engine {
                 p => Some(SlotPredictor::new(
                     p,
                     self.cfg.recall_floor,
-                    c.n_layers,
-                    c.d_ff,
+                    n_layers,
+                    d_ff,
                 )?),
             };
             self.active[slot] = Some(ActiveRequest {

@@ -1,11 +1,12 @@
 //! L3 coordinator: the sparsity-aware serving engine.
 //!
 //! - `engine`: continuous batching loop (admission, KV slots, batched
-//!   decode, sampling, retirement).
+//!   decode, sampling, retirement) over any `runtime::ExecBackend`
+//!   (`--backend host|xla`).
 //! - `kv`: KV-cache slot management.
 //! - `sampler`: greedy / temperature / top-k sampling.
 //! - `specdec`: speculative decoding (standard + aggregated-sparsity
-//!   verification).
+//!   verification; compiled path only, feature `xla`).
 //! - `request` / `metrics`: request lifecycle + observability.
 
 pub mod engine;
@@ -13,12 +14,15 @@ pub mod kv;
 pub mod metrics;
 pub mod request;
 pub mod sampler;
+#[cfg(feature = "xla")]
 pub mod specdec;
 
 pub use engine::{Engine, EngineConfig};
 pub use kv::{KvBatch, SlotManager};
 pub use metrics::EngineMetrics;
 pub use request::{Completion, FinishReason, Request, SamplingParams};
+#[cfg(feature = "xla")]
 pub use specdec::{AcceptMode, SpecDecoder, SpecStats, VerifyMask};
 
 pub use crate::predictor::NeuronPolicy;
+pub use crate::runtime::backend::{DecodeOut, ExecBackend, PrefillOut};

@@ -6,6 +6,7 @@ pub type Result<T> = std::result::Result<T, Error>;
 
 #[derive(Error, Debug)]
 pub enum Error {
+    #[cfg(feature = "xla")]
     #[error("xla: {0}")]
     Xla(#[from] xla::Error),
 

@@ -51,7 +51,14 @@ impl Csv {
 /// Shared run-artifact locations so examples can hand results to each other
 /// (e.g. relufication checkpoints feeding the spec-decode example).
 pub fn shared_checkpoint(model_id: &str, tag: &str) -> PathBuf {
-    crate::train::checkpoint_path(&crate::default_runs_dir(), model_id, tag)
+    checkpoint_path(&crate::default_runs_dir(), model_id, tag)
+}
+
+/// Checkpoint path for a model id under a runs dir (host-safe: also used by
+/// the `--backend host` serving path, so it cannot live in the `xla`-gated
+/// train module).
+pub fn checkpoint_path(runs: &std::path::Path, model_id: &str, tag: &str) -> PathBuf {
+    runs.join("checkpoints").join(format!("{model_id}.{tag}.ckpt"))
 }
 
 pub fn shared_tokenizer(vocab: usize) -> PathBuf {

@@ -1,0 +1,626 @@
+//! [`HostBackend`]: the pure-Rust [`ExecBackend`] — attention + KV against
+//! the engine's slot state and the FFN over neuron-major
+//! [`crate::sparse::FfnWeights`], computed only for the neurons the
+//! predictor's per-step `[L, F]` mask keeps live. This is where
+//! `--policy reuse:W:K` buys measured wall-clock instead of projected
+//! FLOPs: a masked-off neuron's up/gate/down weight rows are never touched
+//! (`benches/bench_decode.rs` measures dense vs sparse decode here).
+//!
+//! Tensor contracts match the AOT entries exactly (see
+//! `crate::runtime::backend`), so the engine cannot tell the backends
+//! apart. Numerics are sequential per-token f32: a batched prefill and the
+//! equivalent decode chain produce bit-identical values, which the
+//! host test suite pins (`tests/hostexec.rs`).
+
+use crate::error::{Error, Result};
+use crate::hostexec::math::{attend_one, layer_norm, relu_inplace, rms_norm, rope_inplace};
+use crate::hostexec::weights::HostParams;
+use crate::runtime::artifact::ModelCfg;
+use crate::runtime::backend::{DecodeOut, ExecBackend, PrefillOut};
+use crate::runtime::tensor::Tensor;
+use crate::sparse::{live_indices, rowskip_gemv};
+
+pub struct HostBackend {
+    cfg: ModelCfg,
+    params: HostParams,
+    decode_b: usize,
+    prefill_t: usize,
+    model_id: String,
+    /// All-neurons live list (dense steps / prefill).
+    all_live: Vec<u32>,
+}
+
+impl HostBackend {
+    pub fn new(
+        cfg: ModelCfg,
+        params: HostParams,
+        decode_b: usize,
+        prefill_t: usize,
+    ) -> Result<HostBackend> {
+        if !matches!(cfg.arch.as_str(), "opt" | "llama" | "falcon") {
+            return Err(Error::Config(format!("unknown arch `{}`", cfg.arch)));
+        }
+        if cfg.n_heads == 0 || cfg.d_model % cfg.n_heads != 0 {
+            return Err(Error::Config(format!(
+                "d_model {} not divisible by n_heads {}",
+                cfg.d_model, cfg.n_heads
+            )));
+        }
+        if cfg.arch != "opt" && cfg.head_dim() % 2 != 0 {
+            return Err(Error::Config(
+                "rotary embedding needs an even head_dim".into(),
+            ));
+        }
+        if decode_b == 0 || prefill_t == 0 || prefill_t > cfg.max_seq {
+            return Err(Error::Config(format!(
+                "bad host buckets: decode_b {decode_b}, prefill_t {prefill_t} (max_seq {})",
+                cfg.max_seq
+            )));
+        }
+        if params.layers.len() != cfg.n_layers {
+            return Err(Error::Config(format!(
+                "params have {} layers, config says {}",
+                params.layers.len(),
+                cfg.n_layers
+            )));
+        }
+        let model_id = format!("{}_{}_{}_s{}", cfg.size, cfg.arch, cfg.act, cfg.stage);
+        let all_live: Vec<u32> = (0..cfg.d_ff as u32).collect();
+        Ok(HostBackend {
+            cfg,
+            params,
+            decode_b,
+            prefill_t,
+            model_id,
+            all_live,
+        })
+    }
+
+    /// Load a checkpoint (RSBCKPT1, the same file `save_params` writes) for
+    /// the given architecture config.
+    pub fn from_checkpoint(
+        cfg: ModelCfg,
+        path: &std::path::Path,
+        decode_b: usize,
+        prefill_t: usize,
+    ) -> Result<HostBackend> {
+        let named = crate::runtime::checkpoint::load(path)?;
+        let params = HostParams::from_named(&cfg, &named)?;
+        HostBackend::new(cfg, params, decode_b, prefill_t)
+    }
+
+    /// Deterministic random weights (tests, benches, demo serving without a
+    /// trained checkpoint).
+    pub fn random(
+        cfg: ModelCfg,
+        seed: u64,
+        decode_b: usize,
+        prefill_t: usize,
+    ) -> Result<HostBackend> {
+        let params = HostParams::random(&cfg, seed)?;
+        HostBackend::new(cfg, params, decode_b, prefill_t)
+    }
+
+    pub fn params(&self) -> &HostParams {
+        &self.params
+    }
+
+    /// Start offset of one `[Tmax × hd]` cache lane inside the flat KV
+    /// buffer `[L, 2, B, H, Tmax, hd]`.
+    #[inline]
+    fn lane(&self, batch: usize, l: usize, which: usize, row: usize, head: usize) -> usize {
+        let c = &self.cfg;
+        ((((l * 2 + which) * batch + row) * c.n_heads) + head) * c.max_seq * c.head_dim()
+    }
+
+    /// Run `tokens` (absolute positions `pos0..`) through every layer for
+    /// one sequence (`row` of a `batch`-wide KV buffer), writing logits
+    /// (`[G × V]`), KV updates, per-layer `[qkv_zeros, up_zeros, live_acts]`
+    /// counts and (when given) the `[L, B, F]` post-gate FFN liveness union.
+    #[allow(clippy::too_many_arguments)]
+    fn run_seq(
+        &self,
+        kv: &mut [f32],
+        batch: usize,
+        row: usize,
+        tokens: &[i32],
+        pos0: usize,
+        live: &[&[u32]],
+        logits_out: &mut [f32],
+        mut ffn_union: Option<&mut [f32]>,
+        counts: &mut [[u64; 3]],
+    ) -> Result<()> {
+        let c = &self.cfg;
+        let (d, f, v) = (c.d_model, c.d_ff, c.vocab);
+        let (nh, hd, tmax) = (c.n_heads, c.head_dim(), c.max_seq);
+        let g_n = tokens.len();
+        if pos0 + g_n > tmax {
+            return Err(Error::Engine(format!(
+                "position {} past max_seq {tmax}",
+                pos0 + g_n - 1
+            )));
+        }
+        // embed (+ learned positions for opt)
+        let mut x = vec![0.0f32; g_n * d];
+        for g in 0..g_n {
+            let t = tokens[g];
+            if t < 0 || t as usize >= v {
+                return Err(Error::Engine(format!("token {t} out of vocab {v}")));
+            }
+            x[g * d..(g + 1) * d]
+                .copy_from_slice(&self.params.embed[t as usize * d..(t as usize + 1) * d]);
+            if let Some(pe) = &self.params.pos_embed {
+                let p = pos0 + g;
+                for (xi, pi) in x[g * d..(g + 1) * d].iter_mut().zip(&pe[p * d..(p + 1) * d]) {
+                    *xi += pi;
+                }
+            }
+        }
+        let mut h = vec![0.0f32; g_n * d]; // norm output (falcon keeps it as ffn input)
+        let mut q = vec![0.0f32; g_n * d];
+        let mut attn = vec![0.0f32; g_n * d];
+        let mut qkv = vec![0.0f32; 3 * d];
+        let mut kvec = vec![0.0f32; d];
+        let mut vvec = vec![0.0f32; d];
+        let mut merged = vec![0.0f32; d];
+        let mut scores = vec![0.0f32; tmax];
+        let mut ffn_out = vec![0.0f32; d];
+        let mut act_row = vec![false; f];
+
+        for l in 0..c.n_layers {
+            let lw = &self.params.layers[l];
+            // norm -> qkv -> rope -> cache write, token by token
+            for g in 0..g_n {
+                let p = pos0 + g;
+                let hg = &mut h[g * d..(g + 1) * d];
+                if c.arch == "llama" {
+                    rms_norm(&x[g * d..(g + 1) * d], &lw.ln1_scale, hg);
+                } else {
+                    layer_norm(
+                        &x[g * d..(g + 1) * d],
+                        &lw.ln1_scale,
+                        lw.ln1_bias.as_ref().expect("ln1 bias"),
+                        hg,
+                    );
+                }
+                if c.stage >= 2 {
+                    relu_inplace(hg);
+                }
+                counts[l][0] += hg.iter().filter(|&&z| z == 0.0).count() as u64;
+                rowskip_gemv(&lw.wqkv, d, 3 * d, hg, &mut qkv);
+                q[g * d..(g + 1) * d].copy_from_slice(&qkv[0..d]);
+                kvec.copy_from_slice(&qkv[d..2 * d]);
+                vvec.copy_from_slice(&qkv[2 * d..3 * d]);
+                if c.arch != "opt" {
+                    rope_inplace(&mut q[g * d..(g + 1) * d], nh, hd, p);
+                    rope_inplace(&mut kvec, nh, hd, p);
+                }
+                for head in 0..nh {
+                    let kl = self.lane(batch, l, 0, row, head) + p * hd;
+                    kv[kl..kl + hd].copy_from_slice(&kvec[head * hd..(head + 1) * hd]);
+                    let vl = self.lane(batch, l, 1, row, head) + p * hd;
+                    kv[vl..vl + hd].copy_from_slice(&vvec[head * hd..(head + 1) * hd]);
+                }
+            }
+            // causal attention over the (just-updated) cache + output proj
+            for g in 0..g_n {
+                let p = pos0 + g;
+                let qg = &q[g * d..(g + 1) * d];
+                for head in 0..nh {
+                    let kl = self.lane(batch, l, 0, row, head);
+                    let vl = self.lane(batch, l, 1, row, head);
+                    attend_one(
+                        &qg[head * hd..(head + 1) * hd],
+                        &kv[kl..kl + tmax * hd],
+                        &kv[vl..vl + tmax * hd],
+                        hd,
+                        p,
+                        &mut scores,
+                        &mut merged[head * hd..(head + 1) * hd],
+                    );
+                }
+                rowskip_gemv(&lw.wo, d, d, &merged, &mut attn[g * d..(g + 1) * d]);
+            }
+            // residual + (masked) FFN
+            for g in 0..g_n {
+                let xs = g * d..(g + 1) * d;
+                if !c.parallel_block {
+                    for (xi, ai) in x[xs.clone()].iter_mut().zip(&attn[xs.clone()]) {
+                        *xi += ai;
+                    }
+                    let hg = &mut h[xs.clone()];
+                    if c.arch == "llama" {
+                        rms_norm(&x[xs.clone()], lw.ln2_scale.as_ref().expect("ln2"), hg);
+                    } else {
+                        layer_norm(
+                            &x[xs.clone()],
+                            lw.ln2_scale.as_ref().expect("ln2"),
+                            lw.ln2_bias.as_ref().expect("ln2 bias"),
+                            hg,
+                        );
+                    }
+                    if c.stage >= 2 {
+                        relu_inplace(hg);
+                    }
+                }
+                // falcon's parallel block feeds the shared ln1 output to the
+                // FFN; `h` still holds it.
+                let ffn_in = &h[xs.clone()];
+                counts[l][1] += ffn_in.iter().filter(|&&z| z == 0.0).count() as u64;
+                act_row.fill(false);
+                lw.ffn.forward_token(ffn_in, live[l], &mut ffn_out, &mut act_row);
+                counts[l][2] += act_row.iter().filter(|&&b| b).count() as u64;
+                if let Some(un) = ffn_union.as_deref_mut() {
+                    let base = (l * batch + row) * f;
+                    for (j, &bit) in act_row.iter().enumerate() {
+                        if bit {
+                            un[base + j] = 1.0;
+                        }
+                    }
+                }
+                if c.parallel_block {
+                    for i in xs.clone() {
+                        x[i] += attn[i] + ffn_out[i - g * d];
+                    }
+                } else {
+                    for (xi, oi) in x[xs].iter_mut().zip(&ffn_out) {
+                        *xi += oi;
+                    }
+                }
+            }
+        }
+        // final norm + tied LM head
+        for g in 0..g_n {
+            let hg = &mut h[g * d..(g + 1) * d];
+            if c.arch == "llama" {
+                rms_norm(&x[g * d..(g + 1) * d], &self.params.lnf_scale, hg);
+            } else {
+                layer_norm(
+                    &x[g * d..(g + 1) * d],
+                    &self.params.lnf_scale,
+                    self.params.lnf_bias.as_ref().expect("lnf bias"),
+                    hg,
+                );
+            }
+            for t in 0..v {
+                let e = &self.params.embed[t * d..(t + 1) * d];
+                let mut dot = 0.0f32;
+                for (hi, ei) in hg.iter().zip(e) {
+                    dot += hi * ei;
+                }
+                logits_out[g * v + t] = dot;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ExecBackend for HostBackend {
+    fn kind(&self) -> &'static str {
+        "host"
+    }
+
+    fn model_id(&self) -> &str {
+        &self.model_id
+    }
+
+    fn config(&self) -> &ModelCfg {
+        &self.cfg
+    }
+
+    fn decode_b(&self) -> usize {
+        self.decode_b
+    }
+
+    fn prefill_t(&self) -> usize {
+        self.prefill_t
+    }
+
+    fn prefill(&self, tokens: &Tensor) -> Result<PrefillOut> {
+        let c = &self.cfg;
+        let t = self.prefill_t;
+        if tokens.shape != vec![1, t] {
+            return Err(Error::Shape {
+                what: "host prefill tokens".into(),
+                expected: vec![1, t],
+                got: tokens.shape.clone(),
+            });
+        }
+        let toks = tokens.as_i32()?;
+        let kv_shape = vec![c.n_layers, 2, 1, c.n_heads, c.max_seq, c.head_dim()];
+        let mut kv = vec![0.0f32; kv_shape.iter().product()];
+        let mut logits = vec![0.0f32; t * c.vocab];
+        let live: Vec<&[u32]> = vec![&self.all_live; c.n_layers];
+        let mut counts = vec![[0u64; 3]; c.n_layers];
+        self.run_seq(&mut kv, 1, 0, toks, 0, &live, &mut logits, None, &mut counts)?;
+        Ok(PrefillOut {
+            logits: Tensor::f32(vec![1, t, c.vocab], logits)?,
+            kv: Tensor::f32(kv_shape, kv)?,
+        })
+    }
+
+    fn decode(
+        &self,
+        kv: &Tensor,
+        pos: &Tensor,
+        tokens: &Tensor,
+        neuron_mask: &Tensor,
+    ) -> Result<DecodeOut> {
+        let c = &self.cfg;
+        let b = self.decode_b;
+        let (f, v) = (c.d_ff, c.vocab);
+        let kv_shape = self.kv_shape();
+        if kv.shape != kv_shape {
+            return Err(Error::Shape {
+                what: "host decode kv".into(),
+                expected: kv_shape,
+                got: kv.shape.clone(),
+            });
+        }
+        if tokens.shape != vec![b, 1] {
+            return Err(Error::Shape {
+                what: "host decode tokens".into(),
+                expected: vec![b, 1],
+                got: tokens.shape.clone(),
+            });
+        }
+        if pos.shape != vec![b] {
+            return Err(Error::Shape {
+                what: "host decode pos".into(),
+                expected: vec![b],
+                got: pos.shape.clone(),
+            });
+        }
+        if neuron_mask.shape != vec![c.n_layers, f] {
+            return Err(Error::Shape {
+                what: "host decode neuron mask".into(),
+                expected: vec![c.n_layers, f],
+                got: neuron_mask.shape.clone(),
+            });
+        }
+        let mask = neuron_mask.as_f32()?;
+        let live_lists: Vec<Vec<u32>> = (0..c.n_layers)
+            .map(|l| live_indices(&mask[l * f..(l + 1) * f]))
+            .collect();
+        let live: Vec<&[u32]> = live_lists.iter().map(|l| l.as_slice()).collect();
+        let mut kv_out = kv.as_f32()?.to_vec();
+        let toks = tokens.as_i32()?;
+        let positions = pos.as_i32()?;
+        let mut logits = vec![0.0f32; b * v];
+        let mut ffn_mask = vec![0.0f32; c.n_layers * b * f];
+        let mut counts = vec![[0u64; 3]; c.n_layers];
+        for row in 0..b {
+            let p = positions[row];
+            if p < 0 {
+                return Err(Error::Engine(format!("negative position {p}")));
+            }
+            self.run_seq(
+                &mut kv_out,
+                b,
+                row,
+                &toks[row..row + 1],
+                p as usize,
+                &live,
+                &mut logits[row * v..(row + 1) * v],
+                Some(ffn_mask.as_mut_slice()),
+                &mut counts,
+            )?;
+        }
+        // [L, 3] zero/liveness fractions over the whole batch (same
+        // averaging the L2 entries report)
+        let denom_d = (b * c.d_model) as f32;
+        let denom_f = (b * f) as f32;
+        let mut sparsity = vec![0.0f32; c.n_layers * 3];
+        for l in 0..c.n_layers {
+            sparsity[l * 3] = counts[l][0] as f32 / denom_d;
+            sparsity[l * 3 + 1] = counts[l][1] as f32 / denom_d;
+            sparsity[l * 3 + 2] = 1.0 - counts[l][2] as f32 / denom_f;
+        }
+        Ok(DecodeOut {
+            logits: Tensor::f32(vec![b, 1, v], logits)?,
+            kv: Tensor::f32(kv.shape.clone(), kv_out)?,
+            ffn_mask: Tensor::f32(vec![c.n_layers, b, f], ffn_mask)?,
+            sparsity: Tensor::f32(vec![c.n_layers, 3], sparsity)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_cfg(arch: &str) -> ModelCfg {
+        ModelCfg {
+            size: "t".into(),
+            arch: arch.into(),
+            act: if arch == "llama" { "silu".into() } else { "relu".into() },
+            stage: 0,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            vocab: 40,
+            max_seq: 20,
+            shift: 1.0,
+            ffn_act: if arch == "llama" { "silu".into() } else { "relu".into() },
+            gated: arch == "llama",
+            parallel_block: arch == "falcon",
+            has_bias: arch == "opt",
+        }
+    }
+
+    fn backend(arch: &str) -> HostBackend {
+        HostBackend::random(tiny_cfg(arch), 11, 2, 6).unwrap()
+    }
+
+    #[test]
+    fn output_shapes_match_the_entry_contract() {
+        for arch in ["opt", "llama", "falcon"] {
+            let be = backend(arch);
+            let c = be.config().clone();
+            let toks = Tensor::i32(vec![1, 6], vec![1, 2, 3, 4, 5, 6]).unwrap();
+            let pre = be.prefill(&toks).unwrap();
+            assert_eq!(pre.logits.shape, vec![1, 6, c.vocab], "{arch}");
+            assert_eq!(
+                pre.kv.shape,
+                vec![c.n_layers, 2, 1, c.n_heads, c.max_seq, c.head_dim()]
+            );
+            let kv = Tensor::zeros_f32(be.kv_shape());
+            let pos = Tensor::i32(vec![2], vec![3, 0]).unwrap();
+            let dt = Tensor::i32(vec![2, 1], vec![7, 8]).unwrap();
+            let mask = Tensor::ones_f32(vec![c.n_layers, c.d_ff]);
+            let out = be.decode(&kv, &pos, &dt, &mask).unwrap();
+            assert_eq!(out.logits.shape, vec![2, 1, c.vocab]);
+            assert_eq!(out.kv.shape, be.kv_shape());
+            assert_eq!(out.ffn_mask.shape, vec![c.n_layers, 2, c.d_ff]);
+            assert_eq!(out.sparsity.shape, vec![c.n_layers, 3]);
+            for &s in out.sparsity.as_f32().unwrap() {
+                assert!((0.0..=1.0).contains(&s), "{arch}: sparsity {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rows_are_independent() {
+        // Same token+position in both slots of one step must produce
+        // identical logits rows regardless of what the other row holds.
+        let be = backend("opt");
+        let c = be.config().clone();
+        let mut kv = Tensor::zeros_f32(be.kv_shape());
+        // random garbage in row 1's cache must not leak into row 0
+        {
+            let data = kv.as_f32_mut().unwrap();
+            let mut r = crate::util::rng::Rng::new(3);
+            let lane = c.n_heads * c.max_seq * c.head_dim();
+            for l in 0..c.n_layers * 2 {
+                let base = (l * 2 + 1) * lane; // row 1 of each plane
+                for x in &mut data[base..base + lane] {
+                    *x = r.normal() as f32;
+                }
+            }
+        }
+        let pos = Tensor::i32(vec![2], vec![0, 0]).unwrap();
+        let dt = Tensor::i32(vec![2, 1], vec![9, 9]).unwrap();
+        let mask = Tensor::ones_f32(vec![c.n_layers, c.d_ff]);
+        let out = be.decode(&kv, &pos, &dt, &mask).unwrap();
+        let clean = be
+            .decode(&Tensor::zeros_f32(be.kv_shape()), &pos, &dt, &mask)
+            .unwrap();
+        let v = c.vocab;
+        assert_eq!(
+            &out.logits.as_f32().unwrap()[..v],
+            &clean.logits.as_f32().unwrap()[..v],
+            "row 0 must not see row 1's cache"
+        );
+    }
+
+    #[test]
+    fn zero_mask_changes_logits_and_empties_ffn_mask() {
+        let be = backend("opt");
+        let c = be.config().clone();
+        let kv = Tensor::zeros_f32(be.kv_shape());
+        let pos = Tensor::i32(vec![2], vec![0, 0]).unwrap();
+        let dt = Tensor::i32(vec![2, 1], vec![5, 5]).unwrap();
+        let ones = be
+            .decode(&kv, &pos, &dt, &Tensor::ones_f32(vec![c.n_layers, c.d_ff]))
+            .unwrap();
+        let zeros = be
+            .decode(&kv, &pos, &dt, &Tensor::zeros_f32(vec![c.n_layers, c.d_ff]))
+            .unwrap();
+        assert_ne!(
+            ones.logits.as_f32().unwrap(),
+            zeros.logits.as_f32().unwrap(),
+            "zero neuron mask must change the logits"
+        );
+        assert_eq!(zeros.ffn_mask.count_nonzero().unwrap(), 0);
+        // masked-out FFN reads as fully sparse
+        let sp = zeros.sparsity.as_f32().unwrap();
+        for l in 0..c.n_layers {
+            assert_eq!(sp[l * 3 + 2], 1.0);
+        }
+    }
+
+    #[test]
+    fn superset_mask_is_bit_identical_to_dense() {
+        for arch in ["opt", "llama", "falcon"] {
+            let be = backend(arch);
+            let c = be.config().clone();
+            let kv = Tensor::zeros_f32(be.kv_shape());
+            let pos = Tensor::i32(vec![2], vec![0, 0]).unwrap();
+            let dt = Tensor::i32(vec![2, 1], vec![4, 11]).unwrap();
+            let dense = be
+                .decode(&kv, &pos, &dt, &Tensor::ones_f32(vec![c.n_layers, c.d_ff]))
+                .unwrap();
+            // the observed live set is a superset-safe mask: re-running with
+            // exactly the union of live neurons (per layer, over the batch)
+            // must reproduce dense logits bit-for-bit
+            let fm = dense.ffn_mask.as_f32().unwrap();
+            let mut mask = vec![0.0f32; c.n_layers * c.d_ff];
+            for l in 0..c.n_layers {
+                for b in 0..2 {
+                    for j in 0..c.d_ff {
+                        if fm[(l * 2 + b) * c.d_ff + j] != 0.0 {
+                            mask[l * c.d_ff + j] = 1.0;
+                        }
+                    }
+                }
+            }
+            let sparse = be
+                .decode(
+                    &kv,
+                    &pos,
+                    &dt,
+                    &Tensor::f32(vec![c.n_layers, c.d_ff], mask).unwrap(),
+                )
+                .unwrap();
+            assert_eq!(
+                dense.logits.as_f32().unwrap(),
+                sparse.logits.as_f32().unwrap(),
+                "{arch}: live-superset mask must be bit-identical"
+            );
+            assert_eq!(
+                dense.kv.as_f32().unwrap(),
+                sparse.kv.as_f32().unwrap(),
+                "{arch}: kv must agree too"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let be = backend("opt");
+        let c = be.config().clone();
+        let kv = Tensor::zeros_f32(be.kv_shape());
+        let mask = Tensor::ones_f32(vec![c.n_layers, c.d_ff]);
+        // wrong token shape
+        assert!(be
+            .decode(
+                &kv,
+                &Tensor::i32(vec![2], vec![0, 0]).unwrap(),
+                &Tensor::i32(vec![1, 1], vec![1]).unwrap(),
+                &mask
+            )
+            .is_err());
+        // out-of-vocab token
+        assert!(be
+            .decode(
+                &kv,
+                &Tensor::i32(vec![2], vec![0, 0]).unwrap(),
+                &Tensor::i32(vec![2, 1], vec![10_000, 0]).unwrap(),
+                &mask
+            )
+            .is_err());
+        // position past the cache
+        assert!(be
+            .decode(
+                &kv,
+                &Tensor::i32(vec![2], vec![c.max_seq as i32, 0]).unwrap(),
+                &Tensor::i32(vec![2, 1], vec![1, 1]).unwrap(),
+                &mask
+            )
+            .is_err());
+        // buckets must fit the cache
+        assert!(HostBackend::random(tiny_cfg("opt"), 0, 0, 6).is_err());
+        assert!(HostBackend::random(tiny_cfg("opt"), 0, 2, 64).is_err());
+    }
+}

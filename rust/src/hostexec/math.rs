@@ -1,0 +1,190 @@
+//! Scalar f32 forward-pass primitives for the host backend — faithful
+//! mirrors of the L2 model's blocks (`python/compile/model.py`): LayerNorm /
+//! RMSNorm with eps 1e-5, the 10000-base rotary embedding, and causal
+//! single-query attention over a KV row. Numerics are plain sequential f32
+//! so a prefill and the equivalent decode chain are *bit-identical* (each
+//! token's computation graph is the same either way; pinned by the
+//! integration tests).
+
+/// LayerNorm: `(x - mean) / sqrt(var + 1e-5) * scale + bias`.
+pub fn layer_norm(x: &[f32], scale: &[f32], bias: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    let mut mean = 0.0f32;
+    for &v in x {
+        mean += v;
+    }
+    mean /= d as f32;
+    let mut var = 0.0f32;
+    for &v in x {
+        let c = v - mean;
+        var += c * c;
+    }
+    var /= d as f32;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for i in 0..d {
+        out[i] = (x[i] - mean) * inv * scale[i] + bias[i];
+    }
+}
+
+/// RMSNorm: `x / sqrt(mean(x^2) + 1e-5) * scale` (llama).
+pub fn rms_norm(x: &[f32], scale: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    let mut ms = 0.0f32;
+    for &v in x {
+        ms += v * v;
+    }
+    ms /= d as f32;
+    let inv = 1.0 / (ms + 1e-5).sqrt();
+    for i in 0..d {
+        out[i] = x[i] * inv * scale[i];
+    }
+}
+
+/// In-place ReLU (the stage-2 post-norm relufication).
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// Rotary embedding over one token's heads in place. `x` is `[H × hd]`
+/// (head-major); rotates each head's `(x[k], x[k + hd/2])` pair by
+/// `pos / 10000^(k / (hd/2))`.
+pub fn rope_inplace(x: &mut [f32], n_heads: usize, head_dim: usize, pos: usize) {
+    let half = head_dim / 2;
+    for h in 0..n_heads {
+        let base = h * head_dim;
+        for k in 0..half {
+            let freq = 1.0f32 / 10000.0f32.powf(k as f32 / half as f32);
+            let ang = pos as f32 * freq;
+            let (sin, cos) = ang.sin_cos();
+            let x1 = x[base + k];
+            let x2 = x[base + half + k];
+            x[base + k] = x1 * cos - x2 * sin;
+            x[base + half + k] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+/// Causal attention for one query token at absolute position `pos`:
+/// softmax(q·K^T / sqrt(hd)) · V over keys `0..=pos` of one head's cache
+/// lane (`keys`/`values` are `[Tmax × hd]` slices). Writes the context
+/// vector into `out` (`[hd]`); `scores` is scratch of length >= pos+1.
+pub fn attend_one(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    head_dim: usize,
+    pos: usize,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let n = pos + 1;
+    let mut max = f32::NEG_INFINITY;
+    for s in 0..n {
+        let k = &keys[s * head_dim..(s + 1) * head_dim];
+        let mut dot = 0.0f32;
+        for (qi, ki) in q.iter().zip(k) {
+            dot += qi * ki;
+        }
+        let sc = dot * scale;
+        scores[s] = sc;
+        if sc > max {
+            max = sc;
+        }
+    }
+    let mut sum = 0.0f32;
+    for sc in scores[..n].iter_mut() {
+        *sc = (*sc - max).exp();
+        sum += *sc;
+    }
+    let inv = 1.0 / sum;
+    out.fill(0.0);
+    for s in 0..n {
+        let p = scores[s] * inv;
+        let v = &values[s * head_dim..(s + 1) * head_dim];
+        for (o, vi) in out.iter_mut().zip(v) {
+            *o += p * vi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn layer_norm_centers_and_scales() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let scale = [1.0f32; 4];
+        let bias = [0.0f32; 4];
+        let mut out = [0.0f32; 4];
+        layer_norm(&x, &scale, &bias, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        let var: f32 = out.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-3, "unit variance, got {var}");
+        // bias shifts, scale multiplies
+        let mut out2 = [0.0f32; 4];
+        layer_norm(&x, &[2.0; 4], &[1.0; 4], &mut out2);
+        for (a, b) in out.iter().zip(&out2) {
+            assert!((b - (2.0 * a + 1.0)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rms_norm_scales_to_unit_rms() {
+        let x = [3.0f32, -4.0, 12.0, -5.0];
+        let mut out = [0.0f32; 4];
+        rms_norm(&x, &[1.0; 4], &mut out);
+        let ms: f32 = out.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((ms - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rope_preserves_pair_norms_and_is_identity_at_zero() {
+        let mut r = Rng::new(3);
+        let (h, hd) = (2, 8);
+        let orig: Vec<f32> = (0..h * hd).map(|_| r.normal() as f32).collect();
+        let mut x = orig.clone();
+        rope_inplace(&mut x, h, hd, 0);
+        // k = 0 rotates by angle pos*1; at pos 0 everything is identity
+        assert_eq!(x, orig);
+        rope_inplace(&mut x, h, hd, 7);
+        assert_ne!(x, orig);
+        let half = hd / 2;
+        for head in 0..h {
+            for k in 0..half {
+                let b = head * hd;
+                let n0 = orig[b + k].hypot(orig[b + half + k]);
+                let n1 = x[b + k].hypot(x[b + half + k]);
+                assert!((n0 - n1).abs() < 1e-5, "rotation must preserve norms");
+            }
+        }
+    }
+
+    #[test]
+    fn attention_is_convex_combination_of_values() {
+        let mut r = Rng::new(9);
+        let hd = 4;
+        let tmax = 6;
+        let q: Vec<f32> = (0..hd).map(|_| r.normal() as f32).collect();
+        let keys: Vec<f32> = (0..tmax * hd).map(|_| r.normal() as f32).collect();
+        // constant value rows -> output must equal that constant
+        let values: Vec<f32> = (0..tmax * hd).map(|i| (i / hd) as f32).collect();
+        let mut scores = vec![0.0f32; tmax];
+        let mut out = vec![0.0f32; hd];
+        attend_one(&q, &keys, &values, hd, 3, &mut scores, &mut out);
+        // rows 0..=3 have per-row-constant values 0,1,2,3: output in [0, 3]
+        for &o in &out {
+            assert!((0.0..=3.0).contains(&o), "{o}");
+        }
+        // pos 0 attends only to row 0
+        attend_one(&q, &keys, &values, hd, 0, &mut scores, &mut out);
+        for &o in &out {
+            assert!((o - 0.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! Host execution backend: the full decode loop with no XLA.
+//!
+//! `hostexec` is the pure-Rust realisation of the serving path — the same
+//! `prefill`/`decode` tensor contracts as the AOT entries, implemented with
+//! sequential f32 kernels over host-resident weights:
+//!
+//! - [`weights`]: checkpoint -> host layout. Projections that consume a
+//!   (possibly relufied, hence sparse) input stay input-major for
+//!   `sparse::rowskip_gemv`; both FFN projections are stored neuron-major
+//!   in [`crate::sparse::FfnWeights`] so the predictor's mask skips whole
+//!   weight rows (paper App. B).
+//! - [`math`]: LayerNorm/RMSNorm, rotary embeddings, causal single-query
+//!   attention — mirrors of `python/compile/model.py`'s blocks.
+//! - [`backend`]: [`HostBackend`], the [`crate::runtime::ExecBackend`] the
+//!   engine drives. Decode executes the FFN only over the mask's live
+//!   neurons (the `sparse_ffn_matvec` gather/scatter, bit-verified against
+//!   it), so `--policy reuse:W:K` turns predicted sparsity into measured
+//!   wall-clock — `benches/bench_decode.rs` reports dense vs sparse host
+//!   decode.
+//!
+//! Because none of this needs a PJRT client or AOT artifacts, the entire
+//! engine/predictor/server stack is end-to-end testable under
+//! `cargo test --no-default-features` (the CI host gate), with
+//! checkpoint-pinned golden decodes in `tests/fixtures/`.
+
+pub mod backend;
+pub mod math;
+pub mod weights;
+
+pub use backend::HostBackend;
+pub use weights::{param_specs, Act, HostFfn, HostParams, LayerWeights};

@@ -1,0 +1,466 @@
+//! Host-resident model weights, stored in the layouts the host kernels
+//! want: projections feeding a (possibly sparse) input stay input-major so
+//! `sparse::rowskip_gemv` can skip zero rows, while both FFN projections
+//! live neuron-major inside [`crate::sparse::FfnWeights`] so one skipped
+//! neuron saves two weight rows (the paper's App. B accounting).
+//!
+//! The canonical parameter list ([`param_specs`]) mirrors
+//! `python/compile/model.py::param_specs` name-for-name, which is what lets
+//! [`HostParams::from_named`] consume the same RSBCKPT1 checkpoints the XLA
+//! path trains and saves.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::ModelCfg;
+use crate::runtime::tensor::Tensor;
+use crate::sparse::FfnWeights;
+
+/// FFN activation on the host path (mirror of python `apply_act`; the
+/// relufication stages decide which one a checkpoint effectively uses).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Act {
+    Relu,
+    /// Shifted ReLU: `max(x - shift, 0)` (paper §5.3).
+    SRelu(f32),
+    Gelu,
+    Silu,
+    BSilu8,
+}
+
+impl Act {
+    pub fn parse(name: &str, shift: f64) -> Result<Act> {
+        match name {
+            "relu" => Ok(Act::Relu),
+            "srelu" => Ok(Act::SRelu(shift as f32)),
+            "gelu" => Ok(Act::Gelu),
+            "silu" => Ok(Act::Silu),
+            "bsilu8" => Ok(Act::BSilu8),
+            other => Err(Error::Config(format!("unknown ffn activation `{other}`"))),
+        }
+    }
+
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        match *self {
+            Act::Relu => x.max(0.0),
+            Act::SRelu(b) => (x - b).max(0.0),
+            Act::Gelu => {
+                let c = 0.797_884_56_f32; // sqrt(2/pi)
+                0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+            }
+            Act::Silu => x / (1.0 + (-x).exp()),
+            Act::BSilu8 => x / (1.0 + (-8.0 * x).exp()),
+        }
+    }
+}
+
+/// One layer's FFN on the host path. The non-gated projections live in a
+/// neuron-major [`FfnWeights`] (the `sparse_ffn_matvec` substrate); llama's
+/// gate projection rides along in the same neuron-major layout so a skipped
+/// neuron skips all three of its weight rows.
+pub struct HostFfn {
+    pub w: FfnWeights,
+    /// Gate projection, neuron-major `[F × d]` (llama SwiGLU only).
+    pub gate_t: Option<Vec<f32>>,
+    /// Down-projection bias, added outside the mask (opt only).
+    pub b_down: Option<Vec<f32>>,
+    pub act: Act,
+}
+
+impl HostFfn {
+    /// Masked FFN for one token: compute only the neurons in `live`
+    /// (strictly increasing indices), writing the output into `y` ([d]) and
+    /// recording post-gate activation liveness into `act_row` ([F], caller
+    /// zeroed). Iteration order over `live` matches
+    /// [`crate::sparse::sparse_ffn_matvec`] exactly, so on the ReLU
+    /// non-gated path the two are bit-identical (pinned by a unit test) and
+    /// a live superset reproduces the dense output bit-for-bit.
+    pub fn forward_token(&self, x: &[f32], live: &[u32], y: &mut [f32], act_row: &mut [bool]) {
+        let d = self.w.d;
+        debug_assert_eq!(x.len(), d);
+        debug_assert_eq!(y.len(), d);
+        debug_assert_eq!(act_row.len(), self.w.f);
+        y.fill(0.0);
+        match &self.gate_t {
+            None => {
+                for &j in live {
+                    let j = j as usize;
+                    let row = &self.w.w_up_t[j * d..(j + 1) * d];
+                    let mut pre = self.w.b_up[j];
+                    for (wi, xi) in row.iter().zip(x) {
+                        pre += wi * xi;
+                    }
+                    let a = self.act.apply(pre);
+                    if a == 0.0 {
+                        continue; // dead neuron: nothing to scatter
+                    }
+                    act_row[j] = true;
+                    let down = &self.w.w_down[j * d..(j + 1) * d];
+                    for (yk, wk) in y.iter_mut().zip(down) {
+                        *yk += a * wk;
+                    }
+                }
+            }
+            Some(gate_t) => {
+                // SwiGLU: sparsity is decided by the *gate* activation —
+                // act(x·w_gate) == 0 zeroes the product whatever the up
+                // value is (mirror of python gated_ffn_ref).
+                for &j in live {
+                    let j = j as usize;
+                    let grow = &gate_t[j * d..(j + 1) * d];
+                    let mut pre = 0.0f32;
+                    for (wi, xi) in grow.iter().zip(x) {
+                        pre += wi * xi;
+                    }
+                    let g = self.act.apply(pre);
+                    if g == 0.0 {
+                        continue;
+                    }
+                    act_row[j] = true;
+                    let urow = &self.w.w_up_t[j * d..(j + 1) * d];
+                    let mut up = 0.0f32;
+                    for (wi, xi) in urow.iter().zip(x) {
+                        up += wi * xi;
+                    }
+                    let a = g * up;
+                    let down = &self.w.w_down[j * d..(j + 1) * d];
+                    for (yk, wk) in y.iter_mut().zip(down) {
+                        *yk += a * wk;
+                    }
+                }
+            }
+        }
+        if let Some(b) = &self.b_down {
+            for (yk, bk) in y.iter_mut().zip(b) {
+                *yk += bk;
+            }
+        }
+    }
+}
+
+/// One transformer block's host weights.
+pub struct LayerWeights {
+    pub ln1_scale: Vec<f32>,
+    pub ln1_bias: Option<Vec<f32>>,
+    /// `[d × 3d]` input-major: `qkv = h @ wqkv`.
+    pub wqkv: Vec<f32>,
+    /// `[d × d]` input-major attention output projection.
+    pub wo: Vec<f32>,
+    /// Absent for falcon's parallel block (shares ln1).
+    pub ln2_scale: Option<Vec<f32>>,
+    pub ln2_bias: Option<Vec<f32>>,
+    pub ffn: HostFfn,
+}
+
+/// The full host-resident parameter set.
+pub struct HostParams {
+    /// `[V × d]` embedding rows (tied LM head).
+    pub embed: Vec<f32>,
+    /// `[max_seq × d]` learned positions (opt only).
+    pub pos_embed: Option<Vec<f32>>,
+    pub layers: Vec<LayerWeights>,
+    pub lnf_scale: Vec<f32>,
+    pub lnf_bias: Option<Vec<f32>>,
+}
+
+/// Canonical `(name, shape)` parameter list — the exact mirror of python
+/// `param_specs(cfg)` (flatten order == checkpoint order == AOT arg order).
+pub fn param_specs(cfg: &ModelCfg) -> Vec<(String, Vec<usize>)> {
+    let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+    let mut specs: Vec<(String, Vec<usize>)> = vec![("embed".into(), vec![v, d])];
+    if cfg.arch == "opt" {
+        specs.push(("pos_embed".into(), vec![cfg.max_seq, d]));
+    }
+    for l in 0..cfg.n_layers {
+        let p = format!("l{l}.");
+        specs.push((format!("{p}ln1.scale"), vec![d]));
+        if cfg.arch != "llama" {
+            specs.push((format!("{p}ln1.bias"), vec![d]));
+        }
+        specs.push((format!("{p}attn.wqkv"), vec![d, 3 * d]));
+        specs.push((format!("{p}attn.wo"), vec![d, d]));
+        if !cfg.parallel_block {
+            specs.push((format!("{p}ln2.scale"), vec![d]));
+            if cfg.arch != "llama" {
+                specs.push((format!("{p}ln2.bias"), vec![d]));
+            }
+        }
+        if cfg.gated {
+            specs.push((format!("{p}ffn.w_gate"), vec![d, f]));
+        }
+        specs.push((format!("{p}ffn.w_up"), vec![d, f]));
+        if cfg.has_bias {
+            specs.push((format!("{p}ffn.b_up"), vec![f]));
+        }
+        specs.push((format!("{p}ffn.w_down"), vec![f, d]));
+        if cfg.has_bias {
+            specs.push((format!("{p}ffn.b_down"), vec![d]));
+        }
+    }
+    specs.push(("lnf.scale".into(), vec![d]));
+    if cfg.arch != "llama" {
+        specs.push(("lnf.bias".into(), vec![d]));
+    }
+    specs
+}
+
+impl HostParams {
+    /// Build from named tensors (a loaded RSBCKPT1 checkpoint). Every
+    /// parameter `param_specs` lists must be present with the exact shape;
+    /// extras are ignored.
+    pub fn from_named(cfg: &ModelCfg, named: &[(String, Tensor)]) -> Result<HostParams> {
+        let by_name: BTreeMap<&str, &Tensor> =
+            named.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        let fetch = |name: &str, shape: &[usize]| -> Result<Vec<f32>> {
+            let t = by_name
+                .get(name)
+                .ok_or_else(|| Error::Checkpoint(format!("missing param `{name}`")))?;
+            if t.shape != shape {
+                return Err(Error::Shape {
+                    what: format!("param {name}"),
+                    expected: shape.to_vec(),
+                    got: t.shape.clone(),
+                });
+            }
+            Ok(t.as_f32()?.to_vec())
+        };
+        // validate the complete spec list up front (clear error messages)
+        for (name, shape) in param_specs(cfg) {
+            fetch(&name, &shape)?;
+        }
+        let (d, f) = (cfg.d_model, cfg.d_ff);
+        let act = Act::parse(&cfg.ffn_act, cfg.shift)?;
+        let embed = fetch("embed", &[cfg.vocab, d])?;
+        let pos_embed = if cfg.arch == "opt" {
+            Some(fetch("pos_embed", &[cfg.max_seq, d])?)
+        } else {
+            None
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let p = format!("l{l}.");
+            let opt_norm = |name: String, shape: &[usize]| -> Result<Option<Vec<f32>>> {
+                if cfg.arch != "llama" {
+                    Ok(Some(fetch(&name, shape)?))
+                } else {
+                    Ok(None)
+                }
+            };
+            let (ln2_scale, ln2_bias) = if cfg.parallel_block {
+                (None, None)
+            } else {
+                (
+                    Some(fetch(&format!("{p}ln2.scale"), &[d])?),
+                    opt_norm(format!("{p}ln2.bias"), &[d])?,
+                )
+            };
+            let w_up = fetch(&format!("{p}ffn.w_up"), &[d, f])?;
+            let b_up = if cfg.has_bias {
+                fetch(&format!("{p}ffn.b_up"), &[f])?
+            } else {
+                vec![0.0; f]
+            };
+            let w_down = fetch(&format!("{p}ffn.w_down"), &[f, d])?;
+            let gate_t = if cfg.gated {
+                let g = fetch(&format!("{p}ffn.w_gate"), &[d, f])?;
+                Some(transpose(&g, d, f))
+            } else {
+                None
+            };
+            layers.push(LayerWeights {
+                ln1_scale: fetch(&format!("{p}ln1.scale"), &[d])?,
+                ln1_bias: opt_norm(format!("{p}ln1.bias"), &[d])?,
+                wqkv: fetch(&format!("{p}attn.wqkv"), &[d, 3 * d])?,
+                wo: fetch(&format!("{p}attn.wo"), &[d, d])?,
+                ln2_scale,
+                ln2_bias,
+                ffn: HostFfn {
+                    w: FfnWeights::from_row_major(f, d, &w_up, b_up, w_down),
+                    gate_t,
+                    b_down: if cfg.has_bias {
+                        Some(fetch(&format!("{p}ffn.b_down"), &[d])?)
+                    } else {
+                        None
+                    },
+                    act,
+                },
+            });
+        }
+        Ok(HostParams {
+            embed,
+            pos_embed,
+            layers,
+            lnf_scale: fetch("lnf.scale", &[d])?,
+            lnf_bias: if cfg.arch != "llama" {
+                Some(fetch("lnf.bias", &[d])?)
+            } else {
+                None
+            },
+        })
+    }
+
+    /// Deterministic random weights (GPT-2-style init shape: unit norm
+    /// scales, zero biases, 0.02 normals with 1/sqrt(2L) residual scaling) —
+    /// for tests and benches that need a model without a checkpoint.
+    pub fn random(cfg: &ModelCfg, seed: u64) -> Result<HostParams> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let resid = 1.0 / (2.0 * cfg.n_layers as f64).sqrt();
+        let named: Vec<(String, Tensor)> = param_specs(cfg)
+            .into_iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let data: Vec<f32> = if name.ends_with(".scale") {
+                    vec![1.0; n]
+                } else if name.ends_with(".bias") || name.contains(".b_") {
+                    vec![0.0; n]
+                } else if name.ends_with("attn.wo") || name.ends_with("ffn.w_down") {
+                    (0..n)
+                        .map(|_| (0.02 * resid * rng.normal()) as f32)
+                        .collect()
+                } else {
+                    (0..n).map(|_| (0.02 * rng.normal()) as f32).collect()
+                };
+                Ok((name, Tensor::f32(shape, data)?))
+            })
+            .collect::<Result<_>>()?;
+        HostParams::from_named(cfg, &named)
+    }
+}
+
+/// `[rows × cols]` row-major -> `[cols × rows]` row-major.
+fn transpose(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = m[r * cols + c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{live_indices, sparse_ffn_matvec};
+    use crate::util::rng::Rng;
+
+    fn cfg(arch: &str) -> ModelCfg {
+        ModelCfg {
+            size: "t".into(),
+            arch: arch.into(),
+            act: "relu".into(),
+            stage: 0,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 16,
+            vocab: 24,
+            max_seq: 12,
+            shift: 1.0,
+            ffn_act: "relu".into(),
+            gated: arch == "llama",
+            parallel_block: arch == "falcon",
+            has_bias: arch == "opt",
+        }
+    }
+
+    #[test]
+    fn param_specs_numel_matches_flops_mirror() {
+        for arch in ["opt", "llama", "falcon"] {
+            let c = cfg(arch);
+            let total: usize = param_specs(&c)
+                .iter()
+                .map(|(_, s)| s.iter().product::<usize>())
+                .sum();
+            assert_eq!(total, crate::model::param_count(&c), "{arch}");
+        }
+    }
+
+    #[test]
+    fn random_is_deterministic_and_loads() {
+        for arch in ["opt", "llama", "falcon"] {
+            let c = cfg(arch);
+            let a = HostParams::random(&c, 7).unwrap();
+            let b = HostParams::random(&c, 7).unwrap();
+            assert_eq!(a.embed, b.embed, "{arch}");
+            assert_eq!(a.layers[0].wqkv, b.layers[0].wqkv);
+            let diff = HostParams::random(&c, 8).unwrap();
+            assert_ne!(a.embed, diff.embed);
+            assert_eq!(a.layers.len(), c.n_layers);
+            assert_eq!(a.pos_embed.is_some(), arch == "opt");
+            assert_eq!(a.layers[0].ffn.gate_t.is_some(), arch == "llama");
+            assert_eq!(a.layers[0].ln2_scale.is_some(), arch != "falcon");
+        }
+    }
+
+    #[test]
+    fn from_named_rejects_missing_and_misshaped() {
+        let c = cfg("opt");
+        let mut named: Vec<(String, Tensor)> = param_specs(&c)
+            .into_iter()
+            .map(|(n, s)| {
+                let len = s.iter().product();
+                (n, Tensor::f32(s, vec![0.0; len]).unwrap())
+            })
+            .collect();
+        assert!(HostParams::from_named(&c, &named).is_ok());
+        let bad_shape = Tensor::f32(vec![1], vec![0.0]).unwrap();
+        named[0].1 = bad_shape;
+        assert!(HostParams::from_named(&c, &named).is_err());
+        named.remove(0);
+        assert!(HostParams::from_named(&c, &named).is_err());
+    }
+
+    #[test]
+    fn relu_ffn_token_matches_sparse_ffn_matvec_bitwise() {
+        let w = FfnWeights::random(32, 8, 5);
+        let ffn = HostFfn {
+            w,
+            gate_t: None,
+            b_down: None,
+            act: Act::Relu,
+        };
+        let mut r = Rng::new(6);
+        for _ in 0..8 {
+            let x: Vec<f32> = (0..8).map(|_| r.normal() as f32).collect();
+            let mask: Vec<f32> = (0..32)
+                .map(|_| if r.chance(0.5) { 1.0 } else { 0.0 })
+                .collect();
+            let live = live_indices(&mask);
+            let mut y_host = vec![0.0f32; 8];
+            let mut y_ref = vec![0.0f32; 8];
+            let mut bits = vec![false; 32];
+            ffn.forward_token(&x, &live, &mut y_host, &mut bits);
+            sparse_ffn_matvec(&ffn.w, &x, &live, &mut y_ref);
+            assert_eq!(y_host, y_ref, "host relu path must match the kernel");
+            // act bits are exactly the computed-and-surviving neurons
+            for (j, &b) in bits.iter().enumerate() {
+                if b {
+                    assert!(live.contains(&(j as u32)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn act_shapes_match_costmodel_mirror() {
+        for (name, act) in [
+            ("relu", Act::Relu),
+            ("srelu", Act::SRelu(1.0)),
+            ("silu", Act::Silu),
+            ("gelu", Act::Gelu),
+            ("bsilu8", Act::BSilu8),
+        ] {
+            for x in [-2.0f32, -0.5, 0.0, 0.7, 3.1] {
+                let want = crate::model::act_value(name, x as f64, 1.0);
+                let got = act.apply(x) as f64;
+                assert!(
+                    (want - got).abs() < 1e-5,
+                    "{name}({x}): {want} vs {got}"
+                );
+            }
+        }
+        assert!(Act::parse("warp", 1.0).is_err());
+    }
+}

@@ -8,7 +8,8 @@
 //!   `python/compile/kernels/`.
 //! - **L2** (JAX, build time): OPT/Llama/Falcon-style model zoo with
 //!   relufication stages, AOT-lowered to HLO text — `python/compile/`.
-//! - **L3** (this crate, runtime): PJRT execution, training driver, the
+//! - **L3** (this crate, runtime): model execution backends (PJRT under the
+//!   `xla` feature, pure-Rust [`hostexec`] always), training driver, the
 //!   sparsity-aware serving engine (continuous batching, KV slots,
 //!   speculative decoding with aggregated-sparsity trimming), cost models,
 //!   and the benchmark/figure harness that regenerates every table and
@@ -35,6 +36,19 @@
 //! Predictor recall/precision, mask density and fallback counts surface in
 //! [`engine::EngineMetrics`].
 //!
+//! ## Execution backends (`runtime::ExecBackend`)
+//!
+//! The engine drives per-step execution through the
+//! [`runtime::ExecBackend`] trait: `--backend xla` runs the AOT-compiled
+//! artifacts on PJRT (feature `xla`, the default), `--backend host` runs
+//! [`hostexec::HostBackend`] — attention + KV against the same engine state
+//! and the FFN computed only over the predictor's per-step mask with the
+//! same neuron-major gather/scatter as [`sparse::sparse_ffn_matvec`]
+//! (bit-verified against it), so predicted sparsity buys measured
+//! wall-clock. The host
+//! backend needs no PJRT client and no artifacts, which is what lets
+//! `cargo test --no-default-features` exercise the full decode loop in CI.
+//!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
@@ -43,8 +57,10 @@ pub mod costmodel;
 pub mod data;
 pub mod engine;
 pub mod error;
+#[cfg(feature = "xla")]
 pub mod evalx;
 pub mod figures;
+pub mod hostexec;
 pub mod jsonx;
 pub mod model;
 pub mod predictor;
@@ -53,6 +69,7 @@ pub mod server;
 pub mod sparse;
 pub mod sparsity;
 pub mod tokenizer;
+#[cfg(feature = "xla")]
 pub mod train;
 pub mod util;
 

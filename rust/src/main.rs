@@ -2,12 +2,20 @@
 //!
 //! Subcommands:
 //!   info                         list artifact models + parameter counts
-//!   train     --model <id>       train from scratch on synthlang
-//!   finetune  --model <id> --from <ckpt>   relufication finetune
-//!   eval      --model <id> [--ckpt <path>] zero-shot task suite + ppl
+//!   train     --model <id>       train from scratch on synthlang [xla]
+//!   finetune  --model <id> --from <ckpt>   relufication finetune [xla]
+//!   eval      --model <id> [--ckpt <path>] zero-shot task suite + ppl [xla]
 //!   generate  --model <id> --prompt "..."  sample text
 //!   serve     --model <id> --addr 127.0.0.1:7077   JSON-lines TCP server
-//!   specdec   --target <id> --draft <id>   speculative decoding demo
+//!   specdec   --target <id> --draft <id>   speculative decoding demo [xla]
+//!
+//! `generate` and `serve` take `--backend host|xla`: `xla` (default when
+//! compiled with the `xla` feature) executes the AOT artifacts on PJRT;
+//! `host` runs the pure-Rust `hostexec` backend — same engine, no PJRT, and
+//! the predictor's neuron mask skips FFN weight rows for real. The host
+//! backend reads the model geometry from the artifact manifest and the
+//! weights from `--ckpt` (or the shared checkpoint; `--random-init` serves
+//! deterministic random weights for demos).
 //!
 //! Common options: --artifacts <dir> (default ./artifacts), --steps, --lr,
 //! --seed, --ckpt. `generate` and `serve` take the hot-neuron predictor
@@ -18,18 +26,14 @@
 
 use std::sync::Arc;
 
-use rsb::data::Dataset;
-use rsb::engine::{
-    AcceptMode, Engine, EngineConfig, NeuronPolicy, SamplingParams, SpecDecoder, VerifyMask,
-};
-use rsb::error::Result;
-use rsb::evalx::EvalHarness;
+use rsb::engine::{Engine, EngineConfig, NeuronPolicy, SamplingParams};
+use rsb::error::{Error, Result};
 use rsb::figures::ensure_data;
-use rsb::runtime::{artifacts_dir, cpu_client, Model};
-use rsb::train::{TrainConfig, Trainer};
+use rsb::hostexec::HostBackend;
+use rsb::runtime::{artifacts_dir, ExecBackend, Manifest};
 use rsb::util::cli::Args;
 
-const FLAGS: &[&str] = &["quiet", "sparse", "help"];
+const FLAGS: &[&str] = &["quiet", "sparse", "help", "random-init"];
 
 fn main() {
     let args = Args::from_env(FLAGS);
@@ -47,15 +51,15 @@ fn main() {
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "info" => info(args),
-        "train" => train(args, None),
+        "train" => compiled::train(args, None),
         "finetune" => {
             let from = args.require("from")?;
-            train(args, Some(from))
+            compiled::train(args, Some(from))
         }
-        "eval" => eval(args),
+        "eval" => compiled::eval(args),
         "generate" => generate(args),
         "serve" => serve(args),
-        "specdec" => specdec(args),
+        "specdec" => compiled::specdec(args),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -64,7 +68,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "rsb — ReLU Strikes Back reproduction (see README.md)
-usage: rsb <info|train|finetune|eval|generate|serve|specdec> [--options]";
+usage: rsb <info|train|finetune|eval|generate|serve|specdec> [--options]
+       generate/serve take --backend host|xla (host = no PJRT needed)";
 
 /// Engine config from the predictor CLI knobs (defaults = dense serving).
 fn engine_config(args: &Args) -> Result<EngineConfig> {
@@ -77,15 +82,62 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     Ok(cfg)
 }
 
-fn open_model(args: &Args, key: &str) -> Result<Arc<Model>> {
-    let artifacts = artifacts_dir(args.get("artifacts"));
-    let id = args.str_or(key, "base_opt_relu_s0");
-    Ok(Arc::new(Model::open(cpu_client()?, &artifacts, &id)?))
+fn default_backend() -> &'static str {
+    if cfg!(feature = "xla") {
+        "xla"
+    } else {
+        "host"
+    }
 }
 
-fn data_for(model: &Model) -> Result<(Dataset, rsb::tokenizer::Bpe)> {
-    let vocab = model.manifest.config.vocab;
-    ensure_data(vocab, 2_000_000, 42)
+/// Build the serving engine for the selected `--backend`.
+fn build_engine(args: &Args) -> Result<Engine> {
+    match args.str_or("backend", default_backend()).as_str() {
+        "host" => host_engine(args),
+        "xla" => compiled::engine(args),
+        other => Err(Error::Config(format!(
+            "unknown backend `{other}` (expected `host` or `xla`)"
+        ))),
+    }
+}
+
+/// Host path: geometry from the artifact manifest, weights from a
+/// checkpoint (no PJRT client, no compiled entries).
+fn host_engine(args: &Args) -> Result<Engine> {
+    let artifacts = artifacts_dir(args.get("artifacts"));
+    let id = args.str_or("model", "base_opt_relu_s0");
+    let manifest = Manifest::load(&artifacts.join(&id))?;
+    let (decode_b, prefill_t) = (manifest.buckets.decode_b, manifest.buckets.prefill_t);
+    let cfg = manifest.config.clone();
+    let backend = if args.has("random-init") {
+        println!("[host] serving deterministic random weights (--random-init)");
+        HostBackend::random(cfg, args.usize_or("seed", 0)? as u64, decode_b, prefill_t)?
+    } else {
+        let shared = rsb::figures::shared_checkpoint(&id, "latest");
+        let path = match args.get("ckpt") {
+            Some(p) => std::path::PathBuf::from(p),
+            None if shared.exists() => shared,
+            None => {
+                return Err(Error::Config(format!(
+                    "host backend needs weights: pass --ckpt <path> (or \
+                     --random-init); no shared checkpoint at {}",
+                    shared.display()
+                )))
+            }
+        };
+        HostBackend::from_checkpoint(cfg, &path, decode_b, prefill_t)?
+    };
+    println!(
+        "[host] {} | L{} d{} f{} v{} | decode_b {} prefill_t {}",
+        backend.model_id(),
+        manifest.config.n_layers,
+        manifest.config.d_model,
+        manifest.config.d_ff,
+        manifest.config.vocab,
+        decode_b,
+        prefill_t
+    );
+    Engine::new(Box::new(backend), engine_config(args)?)
 }
 
 fn info(args: &Args) -> Result<()> {
@@ -93,7 +145,7 @@ fn info(args: &Args) -> Result<()> {
     let models = rsb::runtime::artifact::list_models(&artifacts)?;
     println!("artifacts dir: {}", artifacts.display());
     for id in models {
-        match rsb::runtime::Manifest::load(&artifacts.join(&id)) {
+        match Manifest::load(&artifacts.join(&id)) {
             Ok(m) => println!(
                 "  {id:<28} {:>8} params  entries: {}",
                 rsb::util::eng(m.param_count as f64),
@@ -105,88 +157,10 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn train(args: &Args, from: Option<String>) -> Result<()> {
-    let model = open_model(args, "model")?;
-    let (ds, _bpe) = data_for(&model)?;
-    let trainer = Trainer::new(model.clone(), Arc::new(ds))?;
-    let steps = args.usize_or("steps", 200)?;
-    let mut cfg = TrainConfig::quick(steps, args.f64_or("lr", 1e-3)?);
-    cfg.seed = args.usize_or("seed", 0)? as u64;
-    cfg.eval_every = args.usize_or("eval-every", steps.max(1) / 4)?;
-    cfg.quiet = args.has("quiet");
-    let ckpt = args.str_or(
-        "ckpt",
-        rsb::figures::shared_checkpoint(&model.manifest.model_id, "latest")
-            .to_str()
-            .unwrap(),
-    );
-    cfg.checkpoint = Some(ckpt.into());
-    let outcome = match from {
-        None => trainer.train(&cfg)?,
-        Some(path) => {
-            let params = model.load_params(std::path::Path::new(&path))?;
-            trainer.train_from(params, &cfg)?
-        }
-    };
-    println!(
-        "done: final loss {:.4} after {} steps ({:.1}s, {} tokens)",
-        outcome.final_train_loss,
-        steps,
-        outcome.wall_secs,
-        rsb::util::eng(outcome.tokens_seen as f64)
-    );
-    Ok(())
-}
-
-fn load_params_arg(model: &Arc<Model>, args: &Args) -> Result<rsb::runtime::ParamStore> {
-    match args.get("ckpt") {
-        Some(p) => model.load_params(std::path::Path::new(p)),
-        None => {
-            let shared =
-                rsb::figures::shared_checkpoint(&model.manifest.model_id, "latest");
-            if shared.exists() {
-                model.load_params(&shared)
-            } else {
-                println!("[warn] no checkpoint found; using random init");
-                model.init_params(args.usize_or("seed", 0)? as u32)
-            }
-        }
-    }
-}
-
-fn eval(args: &Args) -> Result<()> {
-    let model = open_model(args, "model")?;
-    let (ds, bpe) = data_for(&model)?;
-    let params = load_params_arg(&model, args)?;
-    let harness = EvalHarness::new(model.clone(), Arc::new(bpe));
-    let world = rsb::data::World::new(42);
-    let n = args.usize_or("items", 40)?;
-    let k_shot = args.usize_or("shots", 0)?;
-    let mut rows = Vec::new();
-    for kind in rsb::data::ALL_TASKS {
-        let r = harness.run_task(&params, &world, kind, n, k_shot, 7)?;
-        rows.push(vec![
-            r.kind.to_string(),
-            format!("{:.1}%", r.accuracy() * 100.0),
-            format!("{:.1}%", r.ffn_sparsity * 100.0),
-            format!("{:.1}%", r.qkv_sparsity * 100.0),
-        ]);
-    }
-    let doc = ds.val_document(0, 2000);
-    let ppl = harness.perplexity(&params, &doc)?;
-    println!(
-        "{}",
-        rsb::util::render_table(&["task", "acc", "ffn-sparsity", "qkv-sparsity"], &rows)
-    );
-    println!("val perplexity: {ppl:.3}");
-    Ok(())
-}
-
 fn generate(args: &Args) -> Result<()> {
-    let model = open_model(args, "model")?;
-    let (_ds, bpe) = data_for(&model)?;
-    let params = load_params_arg(&model, args)?;
-    let mut engine = Engine::new(model, params, engine_config(args)?)?;
+    let mut engine = build_engine(args)?;
+    let vocab = engine.backend().config().vocab;
+    let (_ds, bpe) = ensure_data(vocab, 2_000_000, 42)?;
     let prompt = args.str_or("prompt", "ada lives in");
     let max_tokens = args.usize_or("max-tokens", 16)?;
     let sampling = SamplingParams {
@@ -212,72 +186,209 @@ fn generate(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let model = open_model(args, "model")?;
-    let (_ds, bpe) = data_for(&model)?;
-    let params = load_params_arg(&model, args)?;
-    let engine = Engine::new(model, params, engine_config(args)?)?;
+    let engine = build_engine(args)?;
+    let vocab = engine.backend().config().vocab;
+    let (_ds, bpe) = ensure_data(vocab, 2_000_000, 42)?;
     let addr = args.str_or("addr", "127.0.0.1:7077");
     let max = args.get("max-requests").map(|v| v.parse().unwrap_or(0));
     rsb::server::serve(engine, Arc::new(bpe), &addr, max, None)?;
     Ok(())
 }
 
-fn specdec(args: &Args) -> Result<()> {
-    let artifacts = artifacts_dir(args.get("artifacts"));
-    let client = cpu_client()?;
-    let target = Arc::new(Model::open(
-        client.clone(),
-        &artifacts,
-        &args.str_or("target", "base_opt_relu_s0"),
-    )?);
-    let draft = Arc::new(Model::open(
-        client,
-        &artifacts,
-        &args.str_or("draft", "draft_opt_relu_s0"),
-    )?);
-    let (_ds, bpe) = data_for(&target)?;
-    let tp = load_params_named(&target, args, "target-ckpt")?;
-    let dp = load_params_named(&draft, args, "draft-ckpt")?;
-    let gamma = args.usize_or("gamma", 4)?;
-    let mask = if args.has("sparse") {
-        VerifyMask::Aggregated { window: 32 }
-    } else {
-        VerifyMask::Dense
-    };
-    let mut dec = SpecDecoder::new(target, tp, draft, dp, gamma, AcceptMode::Greedy, mask, 0)?;
-    let prompt = bpe.encode(&args.str_or("prompt", "ada lives in"));
-    let n = args.usize_or("max-tokens", 24)?;
-    let (tokens, stats) = dec.generate(&prompt, n)?;
-    println!("output: {}", bpe.decode(&tokens));
-    println!(
-        "rounds {} | drafted {} accepted {} (alpha≈{:.2}) | tokens/round {:.2} | \
-         c measured {:.3} | s_agg(gamma) {:.2}",
-        stats.rounds,
-        stats.drafted,
-        stats.accepted,
-        stats.acceptance_rate(),
-        stats.tokens_per_round(),
-        stats.c_measured,
-        stats.s_agg_gamma,
-    );
-    Ok(())
-}
+/// Compiled-path subcommands (PJRT). Stubs that explain themselves when the
+/// binary was built `--no-default-features`.
+#[cfg(feature = "xla")]
+mod compiled {
+    use super::*;
+    use rsb::data::Dataset;
+    use rsb::engine::{AcceptMode, SpecDecoder, VerifyMask};
+    use rsb::evalx::EvalHarness;
+    use rsb::runtime::{cpu_client, Model};
+    use rsb::train::{TrainConfig, Trainer};
 
-fn load_params_named(
-    model: &Arc<Model>,
-    args: &Args,
-    key: &str,
-) -> Result<rsb::runtime::ParamStore> {
-    match args.get(key) {
-        Some(p) => model.load_params(std::path::Path::new(p)),
-        None => {
-            let shared =
-                rsb::figures::shared_checkpoint(&model.manifest.model_id, "latest");
-            if shared.exists() {
-                model.load_params(&shared)
-            } else {
-                model.init_params(0)
+    pub fn engine(args: &Args) -> Result<Engine> {
+        let model = open_model(args, "model")?;
+        let params = load_params_arg(&model, args)?;
+        Engine::with_model(model, params, engine_config(args)?)
+    }
+
+    fn open_model(args: &Args, key: &str) -> Result<Arc<Model>> {
+        let artifacts = artifacts_dir(args.get("artifacts"));
+        let id = args.str_or(key, "base_opt_relu_s0");
+        Ok(Arc::new(Model::open(cpu_client()?, &artifacts, &id)?))
+    }
+
+    fn data_for(model: &Model) -> Result<(Dataset, rsb::tokenizer::Bpe)> {
+        let vocab = model.manifest.config.vocab;
+        ensure_data(vocab, 2_000_000, 42)
+    }
+
+    fn load_params_arg(model: &Arc<Model>, args: &Args) -> Result<rsb::runtime::ParamStore> {
+        match args.get("ckpt") {
+            Some(p) => model.load_params(std::path::Path::new(p)),
+            None => {
+                let shared =
+                    rsb::figures::shared_checkpoint(&model.manifest.model_id, "latest");
+                if shared.exists() {
+                    model.load_params(&shared)
+                } else {
+                    println!("[warn] no checkpoint found; using random init");
+                    model.init_params(args.usize_or("seed", 0)? as u32)
+                }
             }
         }
+    }
+
+    pub fn train(args: &Args, from: Option<String>) -> Result<()> {
+        let model = open_model(args, "model")?;
+        let (ds, _bpe) = data_for(&model)?;
+        let trainer = Trainer::new(model.clone(), Arc::new(ds))?;
+        let steps = args.usize_or("steps", 200)?;
+        let mut cfg = TrainConfig::quick(steps, args.f64_or("lr", 1e-3)?);
+        cfg.seed = args.usize_or("seed", 0)? as u64;
+        cfg.eval_every = args.usize_or("eval-every", steps.max(1) / 4)?;
+        cfg.quiet = args.has("quiet");
+        let ckpt = args.str_or(
+            "ckpt",
+            rsb::figures::shared_checkpoint(&model.manifest.model_id, "latest")
+                .to_str()
+                .unwrap(),
+        );
+        cfg.checkpoint = Some(ckpt.into());
+        let outcome = match from {
+            None => trainer.train(&cfg)?,
+            Some(path) => {
+                let params = model.load_params(std::path::Path::new(&path))?;
+                trainer.train_from(params, &cfg)?
+            }
+        };
+        println!(
+            "done: final loss {:.4} after {} steps ({:.1}s, {} tokens)",
+            outcome.final_train_loss,
+            steps,
+            outcome.wall_secs,
+            rsb::util::eng(outcome.tokens_seen as f64)
+        );
+        Ok(())
+    }
+
+    pub fn eval(args: &Args) -> Result<()> {
+        let model = open_model(args, "model")?;
+        let (ds, bpe) = data_for(&model)?;
+        let params = load_params_arg(&model, args)?;
+        let harness = EvalHarness::new(model.clone(), Arc::new(bpe));
+        let world = rsb::data::World::new(42);
+        let n = args.usize_or("items", 40)?;
+        let k_shot = args.usize_or("shots", 0)?;
+        let mut rows = Vec::new();
+        for kind in rsb::data::ALL_TASKS {
+            let r = harness.run_task(&params, &world, kind, n, k_shot, 7)?;
+            rows.push(vec![
+                r.kind.to_string(),
+                format!("{:.1}%", r.accuracy() * 100.0),
+                format!("{:.1}%", r.ffn_sparsity * 100.0),
+                format!("{:.1}%", r.qkv_sparsity * 100.0),
+            ]);
+        }
+        let doc = ds.val_document(0, 2000);
+        let ppl = harness.perplexity(&params, &doc)?;
+        println!(
+            "{}",
+            rsb::util::render_table(&["task", "acc", "ffn-sparsity", "qkv-sparsity"], &rows)
+        );
+        println!("val perplexity: {ppl:.3}");
+        Ok(())
+    }
+
+    pub fn specdec(args: &Args) -> Result<()> {
+        let artifacts = artifacts_dir(args.get("artifacts"));
+        let client = cpu_client()?;
+        let target = Arc::new(Model::open(
+            client.clone(),
+            &artifacts,
+            &args.str_or("target", "base_opt_relu_s0"),
+        )?);
+        let draft = Arc::new(Model::open(
+            client,
+            &artifacts,
+            &args.str_or("draft", "draft_opt_relu_s0"),
+        )?);
+        let (_ds, bpe) = data_for(&target)?;
+        let tp = load_params_named(&target, args, "target-ckpt")?;
+        let dp = load_params_named(&draft, args, "draft-ckpt")?;
+        let gamma = args.usize_or("gamma", 4)?;
+        let mask = if args.has("sparse") {
+            VerifyMask::Aggregated { window: 32 }
+        } else {
+            VerifyMask::Dense
+        };
+        let mut dec =
+            SpecDecoder::new(target, tp, draft, dp, gamma, AcceptMode::Greedy, mask, 0)?;
+        let prompt = bpe.encode(&args.str_or("prompt", "ada lives in"));
+        let n = args.usize_or("max-tokens", 24)?;
+        let (tokens, stats) = dec.generate(&prompt, n)?;
+        println!("output: {}", bpe.decode(&tokens));
+        println!(
+            "rounds {} | drafted {} accepted {} (alpha≈{:.2}) | tokens/round {:.2} | \
+             c measured {:.3} | s_agg(gamma) {:.2}",
+            stats.rounds,
+            stats.drafted,
+            stats.accepted,
+            stats.acceptance_rate(),
+            stats.tokens_per_round(),
+            stats.c_measured,
+            stats.s_agg_gamma,
+        );
+        Ok(())
+    }
+
+    fn load_params_named(
+        model: &Arc<Model>,
+        args: &Args,
+        key: &str,
+    ) -> Result<rsb::runtime::ParamStore> {
+        match args.get(key) {
+            Some(p) => model.load_params(std::path::Path::new(p)),
+            None => {
+                let shared =
+                    rsb::figures::shared_checkpoint(&model.manifest.model_id, "latest");
+                if shared.exists() {
+                    model.load_params(&shared)
+                } else {
+                    model.init_params(0)
+                }
+            }
+        }
+    }
+}
+
+/// Host-only build: the compiled-path subcommands explain what's missing
+/// instead of failing to link.
+#[cfg(not(feature = "xla"))]
+mod compiled {
+    use super::*;
+
+    fn unavailable(what: &str) -> Error {
+        Error::Config(format!(
+            "`{what}` needs the compiled XLA path; this binary was built \
+             --no-default-features. Rebuild with the `xla` feature, or use \
+             --backend host for generate/serve."
+        ))
+    }
+
+    pub fn engine(_args: &Args) -> Result<Engine> {
+        Err(unavailable("--backend xla"))
+    }
+
+    pub fn train(_args: &Args, _from: Option<String>) -> Result<()> {
+        Err(unavailable("train/finetune"))
+    }
+
+    pub fn eval(_args: &Args) -> Result<()> {
+        Err(unavailable("eval"))
+    }
+
+    pub fn specdec(_args: &Args) -> Result<()> {
+        Err(unavailable("specdec"))
     }
 }

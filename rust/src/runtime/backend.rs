@@ -1,0 +1,216 @@
+//! Execution backends: the engine's abstraction over "run one model step".
+//!
+//! The serving engine (`crate::engine`) is backend-agnostic: it schedules
+//! requests, manages KV slots and plans the per-step neuron mask, then hands
+//! the actual math to an [`ExecBackend`]. Two implementations exist:
+//!
+//! - [`XlaBackend`] (feature `xla`): the compiled path — AOT HLO artifacts
+//!   executed on the PJRT CPU client, weights resident on the device.
+//! - [`crate::hostexec::HostBackend`]: pure-Rust attention + FFN over
+//!   neuron-major [`crate::sparse::FfnWeights`], computing only the
+//!   neurons the predictor's mask keeps live (the
+//!   [`crate::sparse::sparse_ffn_matvec`] gather/scatter, bit-verified
+//!   against it), so a sparse step skips the skipped neurons' weight rows
+//!   for real (measured wall-clock, not projected FLOPs), and the whole
+//!   decode loop runs under plain `cargo test` with no PJRT client and no
+//!   artifacts.
+//!
+//! Both backends speak the same tensor contract as the AOT entries:
+//!
+//!   prefill(tokens i32[1, T])
+//!     -> logits f32[1, T, V], kv f32[L, 2, 1, H, Tmax, hd]
+//!   decode(kv f32[L, 2, B, H, Tmax, hd], pos i32[B], tokens i32[B, 1],
+//!          neuron_mask f32[L, F])
+//!     -> logits f32[B, 1, V], kv', ffn_mask f32[L, B, F], sparsity f32[L, 3]
+
+use crate::error::Result;
+use crate::runtime::artifact::ModelCfg;
+use crate::runtime::tensor::Tensor;
+
+/// Prefill result: logits for every prompt position + the sequence's KV row.
+pub struct PrefillOut {
+    /// f32 [1, T, V]
+    pub logits: Tensor,
+    /// f32 [L, 2, 1, H, Tmax, hd]
+    pub kv: Tensor,
+}
+
+/// One batched decode step's outputs (mirrors the AOT `decode` entry tuple).
+pub struct DecodeOut {
+    /// f32 [B, 1, V]
+    pub logits: Tensor,
+    /// f32 [L, 2, B, H, Tmax, hd] — replaces the engine's host KV copy
+    pub kv: Tensor,
+    /// f32 [L, B, F] — observed FFN activation liveness (post-gating)
+    pub ffn_mask: Tensor,
+    /// f32 [L, 3] — [qkv_in, up_in, ffn_act] zero fractions
+    pub sparsity: Tensor,
+}
+
+/// Per-step model execution behind the serving engine.
+pub trait ExecBackend {
+    /// Short backend name for logs/metrics ("host" / "xla").
+    fn kind(&self) -> &'static str;
+
+    /// Model identifier (artifact id or checkpoint-derived name).
+    fn model_id(&self) -> &str;
+
+    /// Architecture/geometry the engine sizes its state from.
+    fn config(&self) -> &ModelCfg;
+
+    /// Decode batch width (KV slots).
+    fn decode_b(&self) -> usize;
+
+    /// Prefill bucket length (prompts are tail-clamped to this).
+    fn prefill_t(&self) -> usize;
+
+    /// Run prefill over one padded prompt: tokens i32 [1, prefill_t].
+    fn prefill(&self, tokens: &Tensor) -> Result<PrefillOut>;
+
+    /// Run one batched decode step under the given `[L, F]` neuron mask.
+    fn decode(
+        &self,
+        kv: &Tensor,
+        pos: &Tensor,
+        tokens: &Tensor,
+        neuron_mask: &Tensor,
+    ) -> Result<DecodeOut>;
+
+    /// KV cache shape for the decode batch: [L, 2, B, H, Tmax, hd].
+    fn kv_shape(&self) -> Vec<usize> {
+        let c = self.config();
+        vec![
+            c.n_layers,
+            2,
+            self.decode_b(),
+            c.n_heads,
+            c.max_seq,
+            c.head_dim(),
+        ]
+    }
+}
+
+/// The compiled path: AOT HLO entries executed on the PJRT client, weights
+/// uploaded once and served device-resident to every step.
+#[cfg(feature = "xla")]
+pub struct XlaBackend {
+    model: std::sync::Arc<crate::runtime::Model>,
+    params: crate::runtime::ParamStore,
+    prefill: std::sync::Arc<crate::runtime::Entry>,
+    decode: std::sync::Arc<crate::runtime::Entry>,
+    decode_b: usize,
+    prefill_t: usize,
+}
+
+#[cfg(feature = "xla")]
+impl XlaBackend {
+    pub fn new(
+        model: std::sync::Arc<crate::runtime::Model>,
+        mut params: crate::runtime::ParamStore,
+    ) -> Result<XlaBackend> {
+        use crate::error::Error;
+        params.upload(model.client())?;
+        let prefill = model.entry("prefill")?;
+        // prefer the batched decode entry; fall back to B=1
+        let decode = model.entry("decode").or_else(|_| model.entry("decode1"))?;
+        let kv_spec = decode
+            .spec
+            .inputs
+            .iter()
+            .find(|i| i.name == "kv")
+            .ok_or_else(|| Error::Engine("decode entry lacks kv input".into()))?;
+        let decode_b = kv_spec.shape[2];
+        let prefill_t = prefill
+            .spec
+            .inputs
+            .last()
+            .map(|i| i.shape[1])
+            .ok_or_else(|| Error::Engine("prefill entry lacks tokens input".into()))?;
+        Ok(XlaBackend {
+            model,
+            params,
+            prefill,
+            decode,
+            decode_b,
+            prefill_t,
+        })
+    }
+
+    pub fn model(&self) -> &std::sync::Arc<crate::runtime::Model> {
+        &self.model
+    }
+
+    fn param_args(&self) -> Result<Vec<crate::runtime::Arg<'_>>> {
+        use crate::error::Error;
+        let bufs = self
+            .params
+            .buffers()
+            .ok_or_else(|| Error::Engine("params not uploaded".into()))?;
+        Ok(bufs.iter().map(crate::runtime::Arg::Device).collect())
+    }
+}
+
+#[cfg(feature = "xla")]
+impl ExecBackend for XlaBackend {
+    fn kind(&self) -> &'static str {
+        "xla"
+    }
+
+    fn model_id(&self) -> &str {
+        &self.model.manifest.model_id
+    }
+
+    fn config(&self) -> &ModelCfg {
+        &self.model.manifest.config
+    }
+
+    fn decode_b(&self) -> usize {
+        self.decode_b
+    }
+
+    fn prefill_t(&self) -> usize {
+        self.prefill_t
+    }
+
+    fn prefill(&self, tokens: &Tensor) -> Result<PrefillOut> {
+        use crate::runtime::Arg;
+        let mut args = self.param_args()?;
+        args.push(Arg::Host(tokens));
+        let mut outs = self.prefill.execute(&args)?;
+        let kv = outs.remove(1);
+        let logits = outs.remove(0);
+        Ok(PrefillOut { logits, kv })
+    }
+
+    fn decode(
+        &self,
+        kv: &Tensor,
+        pos: &Tensor,
+        tokens: &Tensor,
+        neuron_mask: &Tensor,
+    ) -> Result<DecodeOut> {
+        use crate::runtime::Arg;
+        let mut args = self.param_args()?;
+        args.push(Arg::Host(kv));
+        args.push(Arg::Host(pos));
+        args.push(Arg::Host(tokens));
+        args.push(Arg::Host(neuron_mask));
+        let mut outs = self.decode.execute(&args)?;
+        if outs.len() < 4 {
+            return Err(crate::error::Error::Engine(format!(
+                "decode entry returned {} outputs, expected 4",
+                outs.len()
+            )));
+        }
+        let sparsity = outs.remove(3);
+        let ffn_mask = outs.remove(2);
+        let kv = outs.remove(1);
+        let logits = outs.remove(0);
+        Ok(DecodeOut {
+            logits,
+            kv,
+            ffn_mask,
+            sparsity,
+        })
+    }
+}

@@ -1,42 +1,60 @@
-//! L3 runtime: load AOT HLO-text artifacts and execute them on the PJRT CPU
-//! client. This is the only module that touches the `xla` crate directly.
+//! L3 runtime: model execution backends and their shared substrates.
 //!
-//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//! Host-safe pieces (always compiled): `artifact` (manifest parsing),
+//! `tensor` (host tensors), `checkpoint` (RSBCKPT1 container), `params`
+//! (named weight store) and `backend` (the [`ExecBackend`] trait the engine
+//! drives). The PJRT pieces — `entry`, [`Model`], [`cpu_client`] and the
+//! [`backend::XlaBackend`] — are the only code that touches the `xla` crate
+//! and are gated behind the `xla` feature; `--no-default-features` builds
+//! run entirely on `crate::hostexec`.
+//!
+//! XLA flow (see /opt/xla-example/load_hlo for the reference wiring):
 //!   manifest.json -> `Manifest`
 //!   <entry>.hlo.txt -> `HloModuleProto::from_text_file` -> compile -> `Entry`
 //!   `Entry::execute(&[Arg])` -> output tuple -> host `Tensor`s
 
 pub mod artifact;
+pub mod backend;
 pub mod checkpoint;
+#[cfg(feature = "xla")]
 pub mod entry;
 pub mod params;
 pub mod tensor;
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+#[cfg(feature = "xla")]
+use std::path::Path;
+#[cfg(feature = "xla")]
 use std::sync::Arc;
 
 pub use artifact::{Buckets, EntrySpec, IoSpec, Manifest, ModelCfg, ParamSpec};
+pub use backend::{DecodeOut, ExecBackend, PrefillOut};
+#[cfg(feature = "xla")]
+pub use backend::XlaBackend;
+#[cfg(feature = "xla")]
 pub use entry::{Arg, Entry};
 pub use params::ParamStore;
 pub use tensor::{Data, Dtype, Tensor};
 
+#[cfg(feature = "xla")]
 use crate::error::{Error, Result};
 
 /// A loaded model: manifest + lazily compiled entries on a shared client.
+#[cfg(feature = "xla")]
 pub struct Model {
     pub manifest: Manifest,
     client: Arc<xla::PjRtClient>,
-    entries: std::cell::RefCell<BTreeMap<String, Arc<Entry>>>,
+    entries: std::cell::RefCell<std::collections::BTreeMap<String, Arc<Entry>>>,
 }
 
+#[cfg(feature = "xla")]
 impl Model {
     pub fn load(client: Arc<xla::PjRtClient>, model_dir: &Path) -> Result<Model> {
         let manifest = Manifest::load(model_dir)?;
         Ok(Model {
             manifest,
             client,
-            entries: std::cell::RefCell::new(BTreeMap::new()),
+            entries: std::cell::RefCell::new(std::collections::BTreeMap::new()),
         })
     }
 
@@ -82,7 +100,8 @@ impl Model {
     /// Load parameters from a checkpoint file.
     pub fn load_params(&self, path: &Path) -> Result<ParamStore> {
         let named = checkpoint::load(path)?;
-        let by_name: BTreeMap<String, Tensor> = named.into_iter().collect();
+        let by_name: std::collections::BTreeMap<String, Tensor> =
+            named.into_iter().collect();
         let mut tensors = Vec::with_capacity(self.manifest.params.len());
         for spec in &self.manifest.params {
             let t = by_name.get(&spec.name).ok_or_else(|| {
@@ -106,6 +125,7 @@ impl Model {
 }
 
 /// Shared PJRT CPU client (one per process).
+#[cfg(feature = "xla")]
 pub fn cpu_client() -> Result<Arc<xla::PjRtClient>> {
     Ok(Arc::new(xla::PjRtClient::cpu()?))
 }

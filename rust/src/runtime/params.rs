@@ -12,6 +12,7 @@ pub struct ParamStore {
     pub names: Vec<String>,
     pub tensors: Vec<Tensor>,
     index: BTreeMap<String, usize>,
+    #[cfg(feature = "xla")]
     buffers: Option<Vec<xla::PjRtBuffer>>,
 }
 
@@ -44,6 +45,7 @@ impl ParamStore {
             names,
             tensors,
             index,
+            #[cfg(feature = "xla")]
             buffers: None,
         })
     }
@@ -66,6 +68,7 @@ impl ParamStore {
 
     /// Upload all parameters to the device once; afterwards `buffers()`
     /// serves them with zero per-step host->device copies.
+    #[cfg(feature = "xla")]
     pub fn upload(&mut self, client: &xla::PjRtClient) -> Result<()> {
         let mut bufs = Vec::with_capacity(self.tensors.len());
         for t in &self.tensors {
@@ -75,6 +78,7 @@ impl ParamStore {
         Ok(())
     }
 
+    #[cfg(feature = "xla")]
     pub fn buffers(&self) -> Option<&[xla::PjRtBuffer]> {
         self.buffers.as_deref()
     }
@@ -91,7 +95,10 @@ impl ParamStore {
             });
         }
         self.tensors = tensors;
-        self.buffers = None;
+        #[cfg(feature = "xla")]
+        {
+            self.buffers = None;
+        }
         Ok(())
     }
 }

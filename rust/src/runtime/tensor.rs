@@ -148,6 +148,7 @@ impl Tensor {
     }
 
     /// Upload to a PJRT device buffer.
+    #[cfg(feature = "xla")]
     pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
         let buf = match &self.data {
             Data::F32(v) => client.buffer_from_host_buffer(v, &self.shape, None)?,
@@ -158,6 +159,7 @@ impl Tensor {
     }
 
     /// Convert to an xla literal (host-side).
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -169,6 +171,7 @@ impl Tensor {
     }
 
     /// Download from an xla literal.
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

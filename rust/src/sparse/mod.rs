@@ -85,6 +85,42 @@ impl FfnWeights {
         FfnWeights { f, d, w_up_t, b_up, w_down }
     }
 
+    /// Build from the checkpoint's row-major projections:
+    /// `w_up` is `[d × F]` (input-major, as `l{l}.ffn.w_up` is stored) and
+    /// `w_down` is `[F × d]` (already one contiguous row per neuron). The
+    /// up projection is transposed to neuron-major so that skipping a
+    /// neuron skips both of its weight rows.
+    pub fn from_row_major(
+        f: usize,
+        d: usize,
+        w_up: &[f32],
+        b_up: Vec<f32>,
+        w_down: Vec<f32>,
+    ) -> Self {
+        assert_eq!(w_up.len(), f * d);
+        let mut w_up_t = vec![0.0f32; f * d];
+        for i in 0..d {
+            for j in 0..f {
+                w_up_t[j * d + i] = w_up[i * f + j];
+            }
+        }
+        FfnWeights::new(f, d, w_up_t, b_up, w_down)
+    }
+
+    /// Inverse of [`FfnWeights::from_row_major`]'s transpose: the up
+    /// projection back in `[d × F]` input-major layout (round-trip tests,
+    /// checkpoint export).
+    pub fn up_row_major(&self) -> Vec<f32> {
+        let (f, d) = (self.f, self.d);
+        let mut w_up = vec![0.0f32; f * d];
+        for j in 0..f {
+            for i in 0..d {
+                w_up[i * f + j] = self.w_up_t[j * d + i];
+            }
+        }
+        w_up
+    }
+
     /// Random weights for benches/tests (deterministic in `seed`).
     pub fn random(f: usize, d: usize, seed: u64) -> Self {
         let mut r = crate::util::rng::Rng::new(seed);
@@ -158,6 +194,37 @@ pub fn sparse_ffn_matvec(w: &FfnWeights, x: &[f32], live: &[u32], y: &mut [f32])
     for &j in live {
         w.accumulate_neuron(j as usize, x, y);
     }
+}
+
+/// Batched dense FFN: `xs`/`ys` are `[B × d]` row-major token blocks (the
+/// host backend's full-occupancy decode step).
+pub fn dense_ffn_batch(w: &FfnWeights, xs: &[f32], ys: &mut [f32]) {
+    assert_eq!(xs.len(), ys.len());
+    assert_eq!(xs.len() % w.d, 0);
+    for (x, y) in xs.chunks_exact(w.d).zip(ys.chunks_exact_mut(w.d)) {
+        dense_ffn_matvec(w, x, y);
+    }
+}
+
+/// Batched predictor fast path: every row of `xs` computed over the same
+/// `live` list (the engine's batch-shared mask — weight rows are shared
+/// across the batch, so one list covers every slot).
+pub fn sparse_ffn_batch(w: &FfnWeights, xs: &[f32], live: &[u32], ys: &mut [f32]) {
+    assert_eq!(xs.len(), ys.len());
+    assert_eq!(xs.len() % w.d, 0);
+    for (x, y) in xs.chunks_exact(w.d).zip(ys.chunks_exact_mut(w.d)) {
+        sparse_ffn_matvec(w, x, live, y);
+    }
+}
+
+/// Strictly increasing live-row indices of a 0/1 mask row (the
+/// mask-tensor -> kernel handoff used by the host backend).
+pub fn live_indices(mask: &[f32]) -> Vec<u32> {
+    mask.iter()
+        .enumerate()
+        .filter(|(_, &m)| m != 0.0)
+        .map(|(i, _)| i as u32)
+        .collect()
 }
 
 /// FLOPs executed by `sparse_ffn_matvec` for `n_live` computed neurons
@@ -277,6 +344,50 @@ mod tests {
         assert_eq!(sparse_ffn_flops(10, 32), 4 * 10 * 32);
         assert_eq!(sparse_ffn_bytes(10, 32), 8 * 10 * 32);
         assert_eq!(sparse_ffn_flops(0, 32), 0);
+    }
+
+    #[test]
+    fn from_row_major_transposes_up_and_round_trips() {
+        let (f, d) = (12, 5);
+        let mut r = Rng::new(31);
+        let w_up: Vec<f32> = (0..d * f).map(|_| r.normal() as f32).collect();
+        let b_up: Vec<f32> = (0..f).map(|_| r.normal() as f32).collect();
+        let w_down: Vec<f32> = (0..f * d).map(|_| r.normal() as f32).collect();
+        let w = FfnWeights::from_row_major(f, d, &w_up, b_up, w_down.clone());
+        for i in 0..d {
+            for j in 0..f {
+                assert_eq!(w.w_up_t[j * d + i], w_up[i * f + j]);
+            }
+        }
+        assert_eq!(w.up_row_major(), w_up, "round-trip must be exact");
+        assert_eq!(w.w_down, w_down, "down is already neuron-major");
+    }
+
+    #[test]
+    fn batched_matches_per_token() {
+        let w = FfnWeights::random(32, 8, 41);
+        let mut r = Rng::new(42);
+        let xs: Vec<f32> = (0..3 * 8).map(|_| r.normal() as f32).collect();
+        let live: Vec<u32> = vec![1, 4, 9, 16, 25];
+        let mut batch = vec![0.0f32; 3 * 8];
+        sparse_ffn_batch(&w, &xs, &live, &mut batch);
+        for b in 0..3 {
+            let mut single = vec![0.0f32; 8];
+            sparse_ffn_matvec(&w, &xs[b * 8..(b + 1) * 8], &live, &mut single);
+            assert_eq!(&batch[b * 8..(b + 1) * 8], &single[..]);
+        }
+        let mut dense_b = vec![0.0f32; 3 * 8];
+        let all: Vec<u32> = (0..32).collect();
+        dense_ffn_batch(&w, &xs, &mut dense_b);
+        sparse_ffn_batch(&w, &xs, &all, &mut batch);
+        assert_eq!(dense_b, batch, "full live list must equal dense batch");
+    }
+
+    #[test]
+    fn live_indices_matches_mask() {
+        assert_eq!(live_indices(&[0.0, 1.0, 0.0, 0.5]), vec![1, 3]);
+        assert!(live_indices(&[0.0; 4]).is_empty());
+        assert_eq!(live_indices(&[]), Vec::<u32>::new());
     }
 
     #[test]

@@ -257,8 +257,9 @@ impl Trainer {
 }
 
 /// Convenience: checkpoint path for a model id under the runs dir.
+/// (Delegates to the host-safe `figures::checkpoint_path`.)
 pub fn checkpoint_path(runs: &Path, model_id: &str, tag: &str) -> PathBuf {
-    runs.join("checkpoints").join(format!("{model_id}.{tag}.ckpt"))
+    crate::figures::checkpoint_path(runs, model_id, tag)
 }
 
 #[cfg(test)]

@@ -1,7 +1,9 @@
 //! Integration tests over the real AOT artifacts (tiny model): runtime
 //! loading, cross-entry numerical consistency, engine/specdec/server
-//! behaviour. Requires `make artifacts` to have produced
-//! `artifacts/tiny_opt_relu_s0`.
+//! behaviour. Requires the `xla` feature and `make artifacts` to have
+//! produced `artifacts/tiny_opt_relu_s0`. (The host-backend counterpart,
+//! `tests/hostexec.rs`, needs neither.)
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -138,7 +140,7 @@ fn decode_chain_matches_score_entry() {
 fn engine_greedy_is_deterministic_and_batch_invariant() {
     let model = tiny();
     let params = model.init_params(2).unwrap();
-    let mut engine = Engine::new(model.clone(), params, EngineConfig::default()).unwrap();
+    let mut engine = Engine::with_model(model.clone(), params, EngineConfig::default()).unwrap();
     let prompt: Vec<u32> = vec![5, 9, 13, 21];
     // submit the same greedy prompt four times (fills the whole batch)
     for _ in 0..4 {
@@ -152,7 +154,7 @@ fn engine_greedy_is_deterministic_and_batch_invariant() {
     }
     // and a second engine run reproduces it
     let params = model.init_params(2).unwrap();
-    let mut engine2 = Engine::new(model, params, EngineConfig::default()).unwrap();
+    let mut engine2 = Engine::with_model(model, params, EngineConfig::default()).unwrap();
     engine2.submit(prompt, 10);
     let done2 = engine2.run_to_completion().unwrap();
     assert_eq!(done2[0].tokens, done[0].tokens);
@@ -162,7 +164,7 @@ fn engine_greedy_is_deterministic_and_batch_invariant() {
 fn engine_tracks_sparsity_and_respects_max_tokens() {
     let model = tiny();
     let params = model.init_params(4).unwrap();
-    let mut engine = Engine::new(model, params, EngineConfig::default()).unwrap();
+    let mut engine = Engine::with_model(model, params, EngineConfig::default()).unwrap();
     let id = engine.submit(vec![1, 2, 3], 6);
     let mut done = Vec::new();
     let mut tracker_sparsity = None;
@@ -198,7 +200,7 @@ fn specdec_self_draft_matches_greedy() {
 
     // plain greedy via the engine
     let params = model.init_params(5).unwrap();
-    let mut engine = Engine::new(model.clone(), params, EngineConfig::default()).unwrap();
+    let mut engine = Engine::with_model(model.clone(), params, EngineConfig::default()).unwrap();
     engine.submit(prompt.clone(), n);
     let greedy = engine.run_to_completion().unwrap().remove(0).tokens;
 
@@ -285,7 +287,7 @@ fn reuse_policy_at_recall_floor_one_matches_dense_exactly() {
     let n = 12usize;
 
     let params = model.init_params(2).unwrap();
-    let mut dense = Engine::new(model.clone(), params, EngineConfig::default()).unwrap();
+    let mut dense = Engine::with_model(model.clone(), params, EngineConfig::default()).unwrap();
     dense.submit(prompt.clone(), n);
     let dense_done = dense.run_to_completion().unwrap();
 
@@ -295,7 +297,7 @@ fn reuse_policy_at_recall_floor_one_matches_dense_exactly() {
         recall_floor: 1.0,
         ..EngineConfig::default()
     };
-    let mut reuse = Engine::new(model, params, cfg).unwrap();
+    let mut reuse = Engine::with_model(model, params, cfg).unwrap();
     reuse.submit(prompt, n);
     let reuse_done = reuse.run_to_completion().unwrap();
 
@@ -323,7 +325,7 @@ fn reuse_policy_at_recall_floor_one_matches_dense_exactly() {
 fn queue_wait_is_carried_into_completions() {
     let model = tiny();
     let params = model.init_params(3).unwrap();
-    let mut engine = Engine::new(model, params, EngineConfig::default()).unwrap();
+    let mut engine = Engine::with_model(model, params, EngineConfig::default()).unwrap();
     // 2x the batch size so half the requests queue behind a full batch
     let n_req = engine.decode_b * 2;
     for i in 0..n_req {
@@ -363,7 +365,7 @@ fn server_roundtrip_over_tcp() {
     let server = std::thread::spawn(move || {
         let model = tiny();
         let params = model.init_params(0).unwrap();
-        let engine = Engine::new(model, params, EngineConfig::default()).unwrap();
+        let engine = Engine::with_model(model, params, EngineConfig::default()).unwrap();
         rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(2), Some(ready_tx))
     });
     let addr = ready_rx
@@ -393,7 +395,7 @@ fn server_replies_json_error_to_malformed_requests() {
     let server = std::thread::spawn(move || {
         let model = tiny();
         let params = model.init_params(0).unwrap();
-        let engine = Engine::new(model, params, EngineConfig::default()).unwrap();
+        let engine = Engine::with_model(model, params, EngineConfig::default()).unwrap();
         rsb::server::serve(engine, bpe, "127.0.0.1:0", Some(1), Some(ready_tx))
     });
     let addr = ready_rx
@@ -439,7 +441,7 @@ fn server_replies_json_error_to_malformed_requests() {
 fn sampling_params_affect_engine_output() {
     let model = tiny();
     let params = model.init_params(9).unwrap();
-    let mut engine = Engine::new(model, params, EngineConfig::default()).unwrap();
+    let mut engine = Engine::with_model(model, params, EngineConfig::default()).unwrap();
     let prompt = vec![4, 2, 4, 2];
     engine.submit_with(
         prompt.clone(),

@@ -493,3 +493,82 @@ fn prop_rng_streams_independent() {
         assert!(same < 2, "folded streams collide");
     });
 }
+
+/// ISSUE 2 satellite: `indexed_gemv` over a sorted live list must agree —
+/// bit for bit — with `rowskip_gemv` over the activation masked to that
+/// list (both iterate rows in ascending order, so the accumulation order is
+/// identical), and with `dense_gemv` within float tolerance.
+#[test]
+fn prop_indexed_gemv_matches_masked_dense() {
+    use rsb::sparse::{dense_gemv, indexed_gemv, rowskip_gemv};
+    check("indexed_gemv", 60, |rng| {
+        let f = rng.range(1, 96);
+        let d = rng.range(1, 24);
+        let w: Vec<f32> = (0..f * d).map(|_| rng.normal() as f32).collect();
+        let a: Vec<f32> = (0..f)
+            .map(|_| if rng.chance(0.8) { rng.normal() as f32 } else { 0.0 })
+            .collect();
+        // arbitrary sorted live subset (independent of a's zero pattern)
+        let live: Vec<u32> = (0..f as u32).filter(|_| rng.chance(0.4)).collect();
+        let masked: Vec<f32> = (0..f)
+            .map(|i| if live.contains(&(i as u32)) { a[i] } else { 0.0 })
+            .collect();
+        let mut y_idx = vec![1.0f32; d]; // nonzero garbage: must be cleared
+        let mut y_skip = vec![0.0f32; d];
+        let mut y_dense = vec![0.0f32; d];
+        indexed_gemv(&w, d, &live, &a, &mut y_idx);
+        rowskip_gemv(&w, f, d, &masked, &mut y_skip);
+        dense_gemv(&w, f, d, &masked, &mut y_dense);
+        // indexed visits exactly the live rows; rowskip additionally skips
+        // live rows whose activation is 0.0 — contributing nothing either
+        // way, in the same ascending order: bitwise equal.
+        assert_eq!(y_idx, y_skip, "indexed vs rowskip (f={f}, d={d})");
+        for (x, y) in y_idx.iter().zip(&y_dense) {
+            assert!((x - y).abs() < 1e-4, "indexed vs dense: {x} vs {y}");
+        }
+    });
+}
+
+/// ISSUE 2 satellite: `FfnWeights::from_row_major` round-trip — the
+/// up-projection transpose is exact and self-inverse, and the constructed
+/// weights compute the same FFN as a direct row-major reference.
+#[test]
+fn prop_ffn_from_row_major_round_trip() {
+    check("ffn_from_row_major", 40, |rng| {
+        let f = rng.range(1, 48);
+        let d = rng.range(1, 16);
+        let w_up: Vec<f32> = (0..d * f).map(|_| rng.normal() as f32).collect();
+        let b_up: Vec<f32> = (0..f).map(|_| rng.normal() as f32 * 0.1).collect();
+        let w_down: Vec<f32> = (0..f * d).map(|_| rng.normal() as f32).collect();
+        let w = FfnWeights::from_row_major(f, d, &w_up, b_up.clone(), w_down.clone());
+        assert_eq!(w.up_row_major(), w_up, "transpose must round-trip exactly");
+        // rebuild from the round-tripped layout: identical weights
+        let w2 = FfnWeights::from_row_major(f, d, &w.up_row_major(), b_up.clone(), w_down.clone());
+        assert_eq!(w.w_up_t, w2.w_up_t);
+        // forward agreement with a direct row-major reference:
+        // y = relu(x @ w_up + b) @ w_down
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut pre = b_up.clone();
+        for (i, &xi) in x.iter().enumerate() {
+            for j in 0..f {
+                pre[j] += xi * w_up[i * f + j];
+            }
+        }
+        let mut want = vec![0.0f64; d];
+        for (j, &p) in pre.iter().enumerate() {
+            if p > 0.0 {
+                for k in 0..d {
+                    want[k] += p as f64 * w_down[j * d + k] as f64;
+                }
+            }
+        }
+        let mut got = vec![0.0f32; d];
+        dense_ffn_matvec(&w, &x, &mut got);
+        for (g, w_) in got.iter().zip(&want) {
+            assert!(
+                (*g as f64 - w_).abs() < 1e-3 * (1.0 + w_.abs()),
+                "ffn mismatch: {g} vs {w_}"
+            );
+        }
+    });
+}

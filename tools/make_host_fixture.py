@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Generate the host-backend golden decode fixture.
+
+Builds a tiny deterministic OPT-style checkpoint with the L2 model's own
+init, writes it as RSBCKPT1 to rust/tests/fixtures/host_tiny.ckpt, and
+replays the serving engine's greedy decode loop (prefill on the padded
+prompt, then single-token decode steps) through the L2 reference
+`incremental_forward` (use_pallas=False). The resulting token IDs are the
+golden sequence pinned by rust/tests/hostexec.rs.
+
+The rust host backend recomputes the same f32 math with a different
+accumulation order, so exact logits differ in the last ulps; the script
+therefore verifies that every greedy argmax is decided by a margin far above
+that noise (and fails loudly if not, so a regenerated fixture can pick a
+different seed).
+
+Run from the repository root:  python3 tools/make_host_fixture.py
+"""
+
+import os
+import struct
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "python"))
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from compile import model as M  # noqa: E402
+
+# Mirrors ModelCfg in rust/tests/hostexec.rs::golden — keep in sync.
+CFG = M.ModelConfig(
+    size="fixture",
+    arch="opt",
+    act="relu",
+    stage=0,
+    d_model=16,
+    n_layers=2,
+    n_heads=2,
+    d_ff=64,
+    vocab=48,
+    max_seq=24,
+    shift=1.0,
+    use_pallas=False,
+)
+SEED = 1
+# An untrained 0.02-init collapses greedy decode to a fixed point after a
+# couple of tokens; scaling the matrices up gives the fixture richer greedy
+# dynamics (5 distinct token IDs) while keeping comfortable argmax margins.
+WEIGHT_SCALE = 6.0
+PREFILL_T = 8
+PROMPT = [3, 1, 4, 1, 5]
+MAX_NEW = 10
+MIN_MARGIN = 2e-3  # far above f32 accumulation-order noise (~1e-5)
+
+
+def write_ckpt(path, named):
+    with open(path, "wb") as fh:
+        fh.write(b"RSBCKPT1")
+        fh.write(struct.pack("<I", len(named)))
+        for name, arr in named:
+            arr = np.asarray(arr, dtype=np.float32)
+            nb = name.encode()
+            fh.write(struct.pack("<I", len(nb)))
+            fh.write(nb)
+            fh.write(struct.pack("<B", 0))  # f32
+            fh.write(struct.pack("<I", arr.ndim))
+            for dim in arr.shape:
+                fh.write(struct.pack("<Q", dim))
+            fh.write(arr.astype("<f4").tobytes())
+
+
+def argmax_with_margin(logits_row):
+    order = np.argsort(-logits_row, kind="stable")
+    top, runner = order[0], order[1]
+    return int(top), float(logits_row[top] - logits_row[runner])
+
+
+def scaled_params():
+    names = [n for n, _ in M.param_specs(CFG)]
+    out = []
+    for name, p in zip(names, M.init_params(CFG, SEED)):
+        if name.endswith(".scale") or name.endswith(".bias") or ".b_" in name:
+            out.append(p)
+        else:
+            out.append(p * WEIGHT_SCALE)
+    return out
+
+
+def main():
+    params = scaled_params()
+    ones = jnp.ones((CFG.n_layers, CFG.d_ff), jnp.float32)
+
+    # engine admission: pad the prompt to the prefill bucket
+    padded = PROMPT + [0] * (PREFILL_T - len(PROMPT))
+    kv = jnp.zeros(M.kv_shape(CFG, 1), jnp.float32)
+    logits, kv, _, _ = M.incremental_forward(
+        CFG, params, jnp.asarray([padded], jnp.int32), kv,
+        jnp.asarray([0], jnp.int32), ones)
+    logits = np.asarray(logits)
+
+    margins = []
+    cur, margin = argmax_with_margin(logits[0, len(PROMPT) - 1])
+    margins.append(margin)
+
+    # engine decode loop: feed the last sampled token at position p
+    tokens, pos = [], len(PROMPT)
+    for _ in range(MAX_NEW):
+        logits, kv, _, _ = M.incremental_forward(
+            CFG, params, jnp.asarray([[cur]], jnp.int32), kv,
+            jnp.asarray([pos], jnp.int32), ones)
+        tokens.append(cur)
+        cur, margin = argmax_with_margin(np.asarray(logits)[0, 0])
+        margins.append(margin)
+        pos += 1
+
+    min_margin = min(margins)
+    if min_margin < MIN_MARGIN:
+        raise SystemExit(
+            f"greedy margin {min_margin:.2e} too small to pin across "
+            f"backends; choose a different SEED")
+
+    out = os.path.join(os.path.dirname(__file__), "..", "rust", "tests",
+                       "fixtures", "host_tiny.ckpt")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    names = [n for n, _ in M.param_specs(CFG)]
+    write_ckpt(out, list(zip(names, params)))
+    size = os.path.getsize(out)
+
+    print(f"wrote {out} ({size} bytes, {len(names)} tensors)")
+    print(f"prompt: {PROMPT}")
+    print(f"golden tokens: {tokens}")
+    print(f"min greedy margin: {min_margin:.4f}")
+
+
+if __name__ == "__main__":
+    main()
