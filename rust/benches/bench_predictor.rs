@@ -111,8 +111,10 @@ fn run() -> rsb::Result<()> {
         }
         if enforced {
             metrics.enforced_steps += 1;
+            metrics.enforced_rows += 1; // batch size 1: one row per step
             let p = proposal.unwrap();
             metrics.mask_density.push(mask_density(&p));
+            metrics.union_mask_density.push(mask_density(&p));
             last_union = p;
         }
         if probe {

@@ -56,19 +56,24 @@ pub fn ffn_flop_reduction(live_frac: f64) -> f64 {
     }
 }
 
+/// Weight IO of the non-FFN projections in one decode step (qkv, attn
+/// out, lm head), f32 — shared by the absolute and per-slot-vs-union
+/// projections so the IO model cannot drift between them.
+fn non_ffn_weight_bytes(cfg: &ModelCfg) -> f64 {
+    let d = cfg.d_model as f64;
+    let v = cfg.vocab as f64;
+    cfg.n_layers as f64 * (4.0 * d * 3.0 * d + 4.0 * d * d) + 4.0 * d * v
+}
+
 /// Whole decode-step cost at context `ctx` with a mask of `live_frac`
 /// (live_frac = 1.0 is the dense step).
 pub fn step_cost(cfg: &ModelCfg, ctx: usize, live_frac: f64) -> StepCost {
     let fl: Flops = flops_per_token(cfg, ctx);
     let dense_ffn = ffn_dense_cost(cfg);
     let sparse_ffn = ffn_sparse_cost(cfg, live_frac);
-    // weight IO of the non-FFN projections (qkv, attn out, lm head), f32
-    let d = cfg.d_model as f64;
-    let v = cfg.vocab as f64;
-    let other_bytes = cfg.n_layers as f64 * (4.0 * d * 3.0 * d + 4.0 * d * d) + 4.0 * d * v;
     StepCost {
         flops: fl.total() - dense_ffn.flops + sparse_ffn.flops,
-        bytes: other_bytes + sparse_ffn.bytes,
+        bytes: non_ffn_weight_bytes(cfg) + sparse_ffn.bytes,
     }
 }
 
@@ -81,6 +86,71 @@ pub fn step_latency(cfg: &ModelCfg, ctx: usize, live_frac: f64, dev: &DeviceProf
 /// Projected whole-step speedup of a `live_frac` mask over dense.
 pub fn projected_speedup(cfg: &ModelCfg, ctx: usize, live_frac: f64, dev: &DeviceProfile) -> f64 {
     step_latency(cfg, ctx, 1.0, dev) / step_latency(cfg, ctx, live_frac, dev)
+}
+
+/// Live fraction of the union of per-row masks, given each row's own live
+/// fraction and the overlap the engine measured. With no overlap data the
+/// union is bounded by `min(1, Σ live)`; callers that know the measured
+/// union density (e.g. `EngineMetrics::union_mask_density`) should pass it
+/// directly to the batch costs instead.
+pub fn union_upper_bound(live_fracs: &[f64]) -> f64 {
+    live_fracs.iter().map(|f| f.clamp(0.0, 1.0)).sum::<f64>().min(1.0)
+}
+
+/// Whole-batch FFN cost of one decode step under *per-slot* masks: each
+/// row's FLOPs scale with its own live fraction, while weight IO scales
+/// with the union (a weight row is read once per step however many rows
+/// gather it, the cache amortising repeats).
+pub fn ffn_batch_cost_per_slot(
+    cfg: &ModelCfg,
+    live_fracs: &[f64],
+    union_frac: f64,
+) -> StepCost {
+    let dense = ffn_dense_cost(cfg);
+    let flops: f64 = live_fracs
+        .iter()
+        .map(|f| dense.flops * f.clamp(0.0, 1.0))
+        .sum();
+    StepCost {
+        flops,
+        bytes: dense.bytes * union_frac.clamp(0.0, 1.0),
+    }
+}
+
+/// Whole-batch FFN cost under the batch-shared union mask the old engine
+/// (and the compiled entry) executes: every row pays the union's FLOPs.
+pub fn ffn_batch_cost_union(cfg: &ModelCfg, batch: usize, union_frac: f64) -> StepCost {
+    let dense = ffn_dense_cost(cfg);
+    let u = union_frac.clamp(0.0, 1.0);
+    StepCost {
+        flops: dense.flops * u * batch as f64,
+        bytes: dense.bytes * u,
+    }
+}
+
+/// Projected batched-step advantage of per-slot masks over the
+/// batch-shared union: roofline latency of the union-masked step divided
+/// by the per-slot-masked step, with the non-FFN work (attention, qkv/out
+/// projections, lm head) identical on both sides. >= 1 whenever each
+/// row's live fraction is at or below the union's, which per-row masking
+/// guarantees (every row is a subset of the union).
+pub fn per_slot_vs_union_speedup(
+    cfg: &ModelCfg,
+    ctx: usize,
+    live_fracs: &[f64],
+    union_frac: f64,
+    dev: &DeviceProfile,
+) -> f64 {
+    let batch = live_fracs.len().max(1);
+    let fl: Flops = flops_per_token(cfg, ctx);
+    let dense_ffn = ffn_dense_cost(cfg);
+    let other_flops = (fl.total() - dense_ffn.flops) * batch as f64;
+    let other_bytes = non_ffn_weight_bytes(cfg);
+    let latency = |ffn: StepCost| {
+        dev.latency(other_bytes + ffn.bytes, other_flops + ffn.flops)
+    };
+    latency(ffn_batch_cost_union(cfg, batch, union_frac))
+        / latency(ffn_batch_cost_per_slot(cfg, live_fracs, union_frac))
 }
 
 #[cfg(test)]
@@ -135,6 +205,32 @@ mod tests {
         assert!((projected_speedup(&c, 32, 1.0, &dev) - 1.0).abs() < 1e-12);
         // whole-step speedup can never beat the raw FFN reduction
         assert!(s_tenth < ffn_flop_reduction(0.1));
+    }
+
+    #[test]
+    fn per_slot_batch_never_costs_more_than_the_union() {
+        let c = cfg();
+        let dev = DeviceProfile::CPU1;
+        // one cold (dense) slot + three warm slots: the union collapses to
+        // 1.0, per-slot keeps the warm rows cheap
+        let rows = [1.0, 0.12, 0.15, 0.1];
+        let union = 1.0;
+        let ps = ffn_batch_cost_per_slot(&c, &rows, union);
+        let un = ffn_batch_cost_union(&c, rows.len(), union);
+        assert!(ps.flops < un.flops);
+        assert!(ps.bytes <= un.bytes + 1e-6);
+        let s = per_slot_vs_union_speedup(&c, 32, &rows, union, &dev);
+        assert!(s > 1.0, "mixed workload must project a per-slot win, got {s}");
+        // identical rows == the union: no advantage left
+        let same = [0.2; 4];
+        let s_eq = per_slot_vs_union_speedup(&c, 32, &same, 0.2, &dev);
+        assert!((s_eq - 1.0).abs() < 1e-9);
+        // per-slot advantage grows with batch at fixed row densities
+        let rows8 = [1.0, 0.12, 0.15, 0.1, 0.12, 0.15, 0.1, 0.12];
+        let s8 = per_slot_vs_union_speedup(&c, 32, &rows8, 1.0, &dev);
+        assert!(s8 > s, "advantage should grow with batch: {s8} vs {s}");
+        assert!(union_upper_bound(&[0.4, 0.3]) <= 0.7 + 1e-12);
+        assert_eq!(union_upper_bound(&[0.9, 0.9]), 1.0);
     }
 
     #[test]

@@ -12,13 +12,18 @@
 //! feature): every decode step returns the per-slot FFN activation mask;
 //! the engine feeds per-request `AggregatedTracker`s *and* per-slot
 //! `SlotPredictor`s (`crate::predictor`). Each step the predictors propose
-//! hot-neuron sets, the engine unions them into the batch-shared `[L, F]`
-//! mask the decode backend consumes (weight rows are shared across the
-//! batch, so the union is the set that must stay loaded), and the observed
-//! masks flow back to refresh the predictors. Periodic dense probe steps
-//! (`probe_every`) keep the shadow recall estimate honest — the backends
-//! report `ffn_mask` post-gating, so misses are only visible on dense
-//! steps.
+//! hot-neuron sets and the engine threads them through a per-slot
+//! [`BatchMask`] — §5.1's reuse is per-sequence, so each row keeps *its
+//! own* prediction instead of being unioned with every other slot's. The
+//! host backend honors the rows individually (a cold slot no longer
+//! inflates the warm slots' live sets); a union-only backend
+//! (`supports_row_masks() == false`, the compiled entry) gets the rows
+//! collapsed back to the old batch-shared semantics. Prefill seeds each
+//! slot's hot-neuron ring from the prompt's per-position masks, so
+//! enforcement can start at decode step 0. Periodic dense probe steps
+//! (`probe_every`) keep the shadow recall estimates honest — the backends
+//! report `ffn_mask` post-gating, so misses are only visible on a slot's
+//! dense rows.
 
 use std::collections::VecDeque;
 
@@ -30,7 +35,7 @@ use crate::engine::request::{
 use crate::engine::sampler;
 use crate::error::Result;
 use crate::predictor::{NeuronPolicy, SlotPredictor};
-use crate::runtime::backend::ExecBackend;
+use crate::runtime::backend::{BatchMask, ExecBackend};
 use crate::runtime::Tensor;
 use crate::sparsity::AggregatedTracker;
 use crate::sparsity::SparsityStats;
@@ -102,7 +107,7 @@ impl Engine {
             predictors: (0..decode_b).map(|_| None).collect(),
             stats: SparsityStats::new(n_layers),
             cfg,
-            metrics: EngineMetrics::default(),
+            metrics: EngineMetrics::with_slots(decode_b),
             next_id: 1,
         })
     }
@@ -181,26 +186,34 @@ impl Engine {
         self.predictors.get(slot).and_then(|p| p.as_ref())
     }
 
-    /// Decide this step's batch neuron mask. Returns `(mask, enforced,
-    /// probe)`: `enforced` is true when a predicted sparse mask is applied,
-    /// `probe` when a scheduled dense probe overrode enforcement.
+    /// Decide this step's per-slot neuron masks. Returns `(mask,
+    /// enforced_rows, probe)`: `enforced_rows[slot]` is true when that
+    /// slot's row runs under its own predicted sparse mask (its observation
+    /// is then post-gate and must not be shadow-scored), `probe` when a
+    /// scheduled dense probe overrode all enforcement.
     ///
-    /// The decode backend consumes one `[L, F]` mask for the whole batch
-    /// (weight rows are shared), so a sparse step happens only when *every*
-    /// occupied slot proposes a set — any warming-up, dense-policy or
-    /// fallen-back slot keeps the step dense (per-request `Dense` overrides
-    /// therefore win over an engine-wide `Static`, by design). Proposals
-    /// are still computed (and cached) for every predictive slot so dense
-    /// steps double as shadow recall measurements. Probe steps are
-    /// scheduled only while a *predictive* (Reuse/TopP) slot is live —
-    /// `Static` masks are an explicit experiment knob and are never
-    /// probed away.
-    fn plan_mask(&mut self) -> Result<(Tensor, bool, bool)> {
+    /// On a backend that honors row masks (the host path) every slot is
+    /// independent: proposing slots enforce their own set, warming-up /
+    /// dense-policy / fallen-back slots stay dense, and idle slots get an
+    /// all-false row so their FFN work is skipped outright. On a union-only
+    /// backend (the compiled entry collapses the rows to one `[L, F]`
+    /// mask), a sparse step happens only when *every* occupied slot
+    /// proposes — any dense slot would blow the union up to all-ones, so
+    /// per-request `Dense` overrides win over an engine-wide `Static`
+    /// there, exactly the old batch-shared behavior. Proposals are still
+    /// computed (and cached) for every predictive slot so dense rows double
+    /// as shadow recall measurements. Probe steps are scheduled only while
+    /// a *predictive* (Reuse/TopP) slot is live — `Static` masks are an
+    /// explicit experiment knob and are never probed away — and never at
+    /// step 0, where prefill-seeded slots can already enforce.
+    fn plan_mask(&mut self) -> Result<(BatchMask, Vec<bool>, bool)> {
         let c = self.backend.config();
         let (n_layers, d_ff) = (c.n_layers, c.d_ff);
+        let per_row = self.backend.supports_row_masks();
         let scheduled_probe = self.cfg.probe_every > 0
+            && self.metrics.steps > 0
             && self.metrics.steps % self.cfg.probe_every as u64 == 0;
-        let mut union = vec![false; n_layers * d_ff];
+        let mut proposals: Vec<Option<Vec<bool>>> = vec![None; self.decode_b];
         let mut all_propose = true;
         let mut any_predictive = false;
         for slot in 0..self.decode_b {
@@ -211,22 +224,32 @@ impl Engine {
                 Some(p) => {
                     any_predictive |= p.policy().is_predictive();
                     match p.propose() {
-                        Some(bits) => {
-                            for (u, &b) in union.iter_mut().zip(bits) {
-                                *u |= b;
-                            }
-                        }
+                        Some(bits) => proposals[slot] = Some(bits.to_vec()),
                         None => all_propose = false,
                     }
                 }
                 None => all_propose = false,
             }
         }
+        let mut mask = BatchMask::dense(self.decode_b, n_layers, d_ff);
+        let mut enforced = vec![false; self.decode_b];
         let probe = scheduled_probe && any_predictive;
-        if probe || !all_propose {
-            return Ok((Tensor::ones_f32(vec![n_layers, d_ff]), false, probe));
+        if probe {
+            return Ok((mask, enforced, true));
         }
-        Ok((Tensor::mask_from_bits(vec![n_layers, d_ff], &union)?, true, false))
+        if per_row || all_propose {
+            for slot in 0..self.decode_b {
+                if self.active[slot].is_none() {
+                    // idle row: nothing reads its outputs, skip its FFN
+                    // (also keeps it out of a union backend's collapse)
+                    mask.set_sparse(slot, vec![false; n_layers * d_ff])?;
+                } else if let Some(bits) = proposals[slot].take() {
+                    mask.set_sparse(slot, bits)?;
+                    enforced[slot] = true;
+                }
+            }
+        }
+        Ok((mask, enforced, false))
     }
 
     /// Admit + one batched decode step. Returns completions finished this
@@ -251,8 +274,8 @@ impl Engine {
         let kv_t = self.kv.to_tensor();
         let pos_t = Tensor::i32(vec![self.decode_b], pos)?;
         let tok_t = Tensor::i32(vec![self.decode_b, 1], toks)?;
-        let (mask_t, enforced, probe) = self.plan_mask()?;
-        let out = self.backend.decode(&kv_t, &pos_t, &tok_t, &mask_t)?;
+        let (mask, enforced_rows, probe) = self.plan_mask()?;
+        let out = self.backend.decode(&kv_t, &pos_t, &tok_t, &mask)?;
         let (logits, ffn_mask, sparsity) = (&out.logits, &out.ffn_mask, &out.sparsity);
         self.kv.update_from(&out.kv)?;
         // batch-level sparsity stats are only meaningful at full occupancy
@@ -265,9 +288,16 @@ impl Engine {
         self.metrics
             .batch_occupancy
             .push(self.active_count() as f64 / self.decode_b as f64);
-        if enforced {
+        let per_row_backend = self.backend.supports_row_masks();
+        let mut step_union_density = 1.0;
+        if enforced_rows.iter().any(|&e| e) {
             self.metrics.enforced_steps += 1;
-            self.metrics.mask_density.push(mask_t.density()?);
+            // what a batch-shared union would have executed this step
+            let occupied: Vec<usize> = (0..self.decode_b)
+                .filter(|&s| self.active[s].is_some())
+                .collect();
+            step_union_density = mask.union_density(&occupied);
+            self.metrics.union_mask_density.push(step_union_density);
         }
         if probe {
             self.metrics.probe_steps += 1;
@@ -289,10 +319,33 @@ impl Engine {
                     tr.push_mask(ffn_mask, slot)?;
                 }
             }
+            if enforced_rows[slot] {
+                // what this row actually executed: its own mask on a
+                // per-row backend, the collapsed union on a union-only one
+                // (reporting the row's proposal there would overstate the
+                // FLOP reduction the compiled entry really got)
+                let d = if per_row_backend {
+                    mask.row_density(slot)
+                } else {
+                    step_union_density
+                };
+                self.metrics.mask_density.push(d);
+                self.metrics.enforced_rows += 1;
+                let series = self.metrics.slot(slot);
+                series.mask_density.push(d);
+                series.enforced_rows += 1;
+                a.mask_density_sum += d;
+                a.enforced_rows += 1;
+            }
             if let Some(p) = &mut self.predictors[slot] {
-                if let Some(acc) = p.observe(ffn_mask, slot, !enforced)? {
+                // a row is full-fidelity only when IT ran dense, whatever
+                // the other slots did
+                if let Some(acc) = p.observe(ffn_mask, slot, !enforced_rows[slot])? {
                     self.metrics.predictor_recall.push(acc.recall());
                     self.metrics.predictor_precision.push(acc.precision());
+                    let series = self.metrics.slot(slot);
+                    series.recall.push(acc.recall());
+                    series.precision.push(acc.precision());
                 }
             }
             // the token just fed is now committed into kv
@@ -318,8 +371,11 @@ impl Engine {
                 let a = self.active[slot].take().unwrap();
                 self.slots.release(slot)?;
                 self.kv.clear_row(slot);
+                let mut fallbacks = 0;
                 if let Some(p) = self.predictors[slot].take() {
-                    self.metrics.fallback_events += p.stats.fallbacks;
+                    fallbacks = p.stats.fallbacks;
+                    self.metrics.fallback_events += fallbacks;
+                    self.metrics.slot(slot).fallbacks += fallbacks;
                 }
                 let total_ms = a.enq_elapsed_ms();
                 self.metrics.requests_completed += 1;
@@ -336,6 +392,10 @@ impl Engine {
                     prefill_ms: a.prefill_ms,
                     total_ms,
                     queue_ms: a.queue_ms,
+                    mask_density: (a.enforced_rows > 0)
+                        .then(|| a.mask_density_sum / a.enforced_rows as f64),
+                    enforced_rows: a.enforced_rows,
+                    fallbacks,
                 });
             }
         }
@@ -370,7 +430,13 @@ impl Engine {
                 padded[i] = *t as i32;
             }
             let tok_t = Tensor::i32(vec![1, self.prefill_t], padded)?;
-            let pre = self.backend.prefill(&tok_t)?;
+            let policy = req
+                .policy
+                .clone()
+                .unwrap_or_else(|| self.cfg.policy.clone());
+            // only predictive policies seed from the prompt's masks — spare
+            // dense admissions the [L, T, F] liveness record
+            let pre = self.backend.prefill(&tok_t, policy.is_predictive())?;
             self.kv.pack_row(slot, &pre.kv)?;
             let c = self.backend.config();
             let vocab = c.vocab;
@@ -388,10 +454,6 @@ impl Engine {
                 tr.reset();
                 self.trackers[slot] = Some(tr);
             }
-            let policy = req
-                .policy
-                .clone()
-                .unwrap_or_else(|| self.cfg.policy.clone());
             self.predictors[slot] = match policy {
                 NeuronPolicy::Dense => None,
                 p => Some(SlotPredictor::new(
@@ -401,6 +463,19 @@ impl Engine {
                     d_ff,
                 )?),
             };
+            // seed the hot-neuron ring from the prompt's per-position masks
+            // (host backends report them): the prompt replaces the W dense
+            // warmup steps, and the in-prompt shadow scores give the recall
+            // estimate enforcement needs — step 0 can already run sparse
+            if let (Some(p), Some(fm)) = (&mut self.predictors[slot], &pre.ffn_mask) {
+                for acc in p.seed_from_prefill(fm, len)? {
+                    self.metrics.predictor_recall.push(acc.recall());
+                    self.metrics.predictor_precision.push(acc.precision());
+                    let series = self.metrics.slot(slot);
+                    series.recall.push(acc.recall());
+                    series.precision.push(acc.precision());
+                }
+            }
             self.active[slot] = Some(ActiveRequest {
                 slot,
                 pos: len,
@@ -410,6 +485,8 @@ impl Engine {
                 prefill_ms,
                 queue_ms,
                 first_token_at: None,
+                mask_density_sum: 0.0,
+                enforced_rows: 0,
                 request: req,
             });
         }

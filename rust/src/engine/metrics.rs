@@ -1,7 +1,25 @@
 //! Engine observability: latency/throughput/occupancy counters the serving
-//! benches report (Table-1-style latency rows + the serve example output).
+//! benches report (Table-1-style latency rows + the serve example output),
+//! with the predictor series split per KV slot — per-slot masks mean one
+//! cold slot no longer drags the whole batch, and the split is what makes
+//! that visible.
 
 use crate::util::stats::Samples;
+
+/// Per-slot split of the predictor observability (indexed by KV slot).
+#[derive(Default, Debug)]
+pub struct SlotSeries {
+    /// shadow-measured recall of this slot's predictions
+    pub recall: Samples,
+    /// shadow-measured precision of this slot's predictions
+    pub precision: Samples,
+    /// live fraction of this slot's mask on rows it enforced
+    pub mask_density: Samples,
+    /// decode rows this slot executed under its own sparse mask
+    pub enforced_rows: u64,
+    /// recall-floor enforcement denials charged to this slot
+    pub fallbacks: u64,
+}
 
 #[derive(Default)]
 pub struct EngineMetrics {
@@ -15,21 +33,48 @@ pub struct EngineMetrics {
     pub batch_occupancy: Samples,
     pub steps: u64,
     // hot-neuron predictor observability (crate::predictor)
-    /// shadow-measured per-slot recall of the predicted neuron set
+    /// shadow-measured recall of the predicted neuron sets (all slots)
     pub predictor_recall: Samples,
-    /// shadow-measured per-slot precision of the predicted neuron set
+    /// shadow-measured precision of the predicted neuron sets (all slots)
     pub predictor_precision: Samples,
-    /// live fraction of the batch mask on enforced (sparse) steps
+    /// live fraction each enforced row *actually executed* — its own mask
+    /// on a per-row backend, the collapsed union on a union-only backend;
+    /// one sample per enforced slot-step, not per batch step
     pub mask_density: Samples,
-    /// decode steps executed with a predicted sparse mask
+    /// live fraction of the union of the step's occupied-row masks — what a
+    /// batch-shared mask would have executed; sampled on steps with >= 1
+    /// enforced row, so `mask_density.mean() <= union_mask_density.mean()`
+    /// is exactly the per-slot win
+    pub union_mask_density: Samples,
+    /// decode steps where at least one row ran under a sparse mask
     pub enforced_steps: u64,
+    /// decode rows (slot-steps) executed under their own sparse mask
+    pub enforced_rows: u64,
     /// dense probe steps taken while a predictive policy was active
     pub probe_steps: u64,
     /// enforcement denials caused by the recall floor (summed at retire)
     pub fallback_events: u64,
+    /// per-slot split of the predictor series
+    pub per_slot: Vec<SlotSeries>,
 }
 
 impl EngineMetrics {
+    /// Metrics sized for a `decode_b`-slot engine (the per-slot series are
+    /// pre-allocated; `Default` starts empty and grows on demand).
+    pub fn with_slots(decode_b: usize) -> EngineMetrics {
+        let mut m = EngineMetrics::default();
+        m.per_slot.resize_with(decode_b, SlotSeries::default);
+        m
+    }
+
+    /// The per-slot series of `slot`, growing the split if needed.
+    pub fn slot(&mut self, slot: usize) -> &mut SlotSeries {
+        if self.per_slot.len() <= slot {
+            self.per_slot.resize_with(slot + 1, SlotSeries::default);
+        }
+        &mut self.per_slot[slot]
+    }
+
     pub fn tokens_per_sec(&self) -> f64 {
         let total_s: f64 = self.decode_step_ms.mean() * self.steps as f64 / 1e3;
         if total_s <= 0.0 {
@@ -39,11 +84,11 @@ impl EngineMetrics {
         }
     }
 
-    /// Mean FFN FLOP reduction implied by the enforced masks (1.0 when no
-    /// step was enforced).
+    /// Mean FFN FLOP reduction implied by the enforced per-row masks (1.0
+    /// when no row was enforced).
     pub fn ffn_flop_reduction(&self) -> f64 {
         let live = self.mask_density.mean();
-        if self.enforced_steps == 0 || live <= 0.0 {
+        if self.enforced_rows == 0 || live <= 0.0 {
             1.0
         } else {
             1.0 / live
@@ -57,16 +102,46 @@ impl EngineMetrics {
         }
         format!(
             "predictor: recall p50 {:.3} | precision p50 {:.3} | sparse steps {}/{} \
-             (probes {}, fallbacks {}) | mask density {:.3} -> ffn flop reduction {:.2}x",
+             ({} rows; probes {}, fallbacks {}) | mask density {:.3} per-slot vs \
+             {:.3} union -> ffn flop reduction {:.2}x",
             self.predictor_recall.percentile(50.0),
             self.predictor_precision.percentile(50.0),
             self.enforced_steps,
             self.steps,
+            self.enforced_rows,
             self.probe_steps,
             self.fallback_events,
             self.mask_density.mean(),
+            self.union_mask_density.mean(),
             self.ffn_flop_reduction(),
         )
+    }
+
+    /// Per-slot split (one fragment per slot with any predictor activity);
+    /// empty when no slot enforced or measured anything.
+    pub fn per_slot_report(&self) -> String {
+        let parts: Vec<String> = self
+            .per_slot
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.enforced_rows > 0 || !s.recall.is_empty() || s.fallbacks > 0
+            })
+            .map(|(i, s)| {
+                format!(
+                    "slot {i}: density {:.3} over {} rows, recall p50 {:.3}, fallbacks {}",
+                    s.mask_density.mean(),
+                    s.enforced_rows,
+                    s.recall.percentile(50.0),
+                    s.fallbacks,
+                )
+            })
+            .collect();
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("per-slot: {}", parts.join(" | "))
+        }
     }
 
     pub fn report(&self) -> String {
@@ -84,10 +159,11 @@ impl EngineMetrics {
             self.batch_occupancy.mean(),
             self.tokens_per_sec(),
         );
-        let pred = self.predictor_report();
-        if !pred.is_empty() {
-            out.push('\n');
-            out.push_str(&pred);
+        for extra in [self.predictor_report(), self.per_slot_report()] {
+            if !extra.is_empty() {
+                out.push('\n');
+                out.push_str(&extra);
+            }
         }
         out
     }
@@ -125,10 +201,29 @@ mod tests {
         m.predictor_recall.push(0.97);
         m.predictor_precision.push(0.6);
         m.mask_density.push(0.25);
+        m.union_mask_density.push(0.4);
         m.enforced_steps = 3;
+        m.enforced_rows = 3;
         m.steps = 4;
         let r = m.report();
         assert!(r.contains("predictor:"));
         assert!((m.ffn_flop_reduction() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_slot_series_grow_on_demand_and_render() {
+        let mut m = EngineMetrics::with_slots(2);
+        assert_eq!(m.per_slot.len(), 2);
+        assert!(m.per_slot_report().is_empty(), "idle slots stay silent");
+        m.slot(0).mask_density.push(0.2);
+        m.slot(0).enforced_rows = 5;
+        m.slot(0).recall.push(0.9);
+        // indexing past the preallocated width grows the split
+        m.slot(3).fallbacks = 2;
+        assert_eq!(m.per_slot.len(), 4);
+        let r = m.per_slot_report();
+        assert!(r.contains("slot 0"), "{r}");
+        assert!(r.contains("slot 3"), "{r}");
+        assert!(!r.contains("slot 1"), "idle slot leaked into report: {r}");
     }
 }

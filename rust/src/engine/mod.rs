@@ -19,10 +19,10 @@ pub mod specdec;
 
 pub use engine::{Engine, EngineConfig};
 pub use kv::{KvBatch, SlotManager};
-pub use metrics::EngineMetrics;
+pub use metrics::{EngineMetrics, SlotSeries};
 pub use request::{Completion, FinishReason, Request, SamplingParams};
 #[cfg(feature = "xla")]
 pub use specdec::{AcceptMode, SpecDecoder, SpecStats, VerifyMask};
 
 pub use crate::predictor::NeuronPolicy;
-pub use crate::runtime::backend::{DecodeOut, ExecBackend, PrefillOut};
+pub use crate::runtime::backend::{BatchMask, DecodeOut, ExecBackend, MaskRow, PrefillOut};

@@ -79,6 +79,11 @@ pub struct ActiveRequest {
     /// measured wait between enqueue and admission (carried to Completion)
     pub queue_ms: f64,
     pub first_token_at: Option<std::time::Instant>,
+    /// running sum of this slot's enforced-row mask densities (per-slot
+    /// masking: this request's own masks, not the batch union)
+    pub mask_density_sum: f64,
+    /// decode rows this request executed under its own sparse mask
+    pub enforced_rows: u64,
 }
 
 /// A finished request with its stats.
@@ -91,6 +96,14 @@ pub struct Completion {
     pub prefill_ms: f64,
     pub total_ms: f64,
     pub queue_ms: f64,
+    /// mean live fraction of the masks *this request's* rows were enforced
+    /// under (None when no row of this request ran sparse) — per-slot
+    /// masking makes this a per-request number clients can observe.
+    pub mask_density: Option<f64>,
+    /// decode rows this request executed under its own sparse mask
+    pub enforced_rows: u64,
+    /// recall-floor enforcement denials over this request's lifetime
+    pub fallbacks: u64,
 }
 
 impl Completion {

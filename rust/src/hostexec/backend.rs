@@ -1,24 +1,33 @@
 //! [`HostBackend`]: the pure-Rust [`ExecBackend`] — attention + KV against
 //! the engine's slot state and the FFN over neuron-major
-//! [`crate::sparse::FfnWeights`], computed only for the neurons the
-//! predictor's per-step `[L, F]` mask keeps live. This is where
-//! `--policy reuse:W:K` buys measured wall-clock instead of projected
-//! FLOPs: a masked-off neuron's up/gate/down weight rows are never touched
-//! (`benches/bench_decode.rs` measures dense vs sparse decode here).
+//! [`crate::sparse::FfnWeights`], computed only for the neurons each row's
+//! mask keeps live. Unlike the compiled entry, the host path honors the
+//! [`BatchMask`] *per batch row*: every sequence gathers only its own
+//! predicted-hot weight rows, so one cold slot no longer inflates the whole
+//! batch's live set. This is where `--policy reuse:W:K` buys measured
+//! wall-clock instead of projected FLOPs (`benches/bench_decode.rs`
+//! measures dense vs union vs per-slot decode).
+//!
+//! The decode step is parallel over batch rows with `std::thread::scope`
+//! (rayon-free): rows are independent — disjoint KV lanes, logits rows and
+//! mask rows — so the split is a pure view partition and the math is
+//! bit-identical at any thread count ([`HostBackend::with_threads`]).
 //!
 //! Tensor contracts match the AOT entries exactly (see
 //! `crate::runtime::backend`), so the engine cannot tell the backends
 //! apart. Numerics are sequential per-token f32: a batched prefill and the
 //! equivalent decode chain produce bit-identical values, which the
-//! host test suite pins (`tests/hostexec.rs`).
+//! host test suite pins (`tests/hostexec.rs`). Prefill additionally reports
+//! the per-position FFN liveness (`PrefillOut::ffn_mask`, `[L, T, F]`) so
+//! the engine can seed each slot's hot-neuron ring from the prompt.
 
 use crate::error::{Error, Result};
 use crate::hostexec::math::{attend_one, layer_norm, relu_inplace, rms_norm, rope_inplace};
 use crate::hostexec::weights::HostParams;
 use crate::runtime::artifact::ModelCfg;
-use crate::runtime::backend::{DecodeOut, ExecBackend, PrefillOut};
+use crate::runtime::backend::{BatchMask, DecodeOut, ExecBackend, PrefillOut};
 use crate::runtime::tensor::Tensor;
-use crate::sparse::{live_indices, rowskip_gemv};
+use crate::sparse::rowskip_gemv;
 
 pub struct HostBackend {
     cfg: ModelCfg,
@@ -26,8 +35,33 @@ pub struct HostBackend {
     decode_b: usize,
     prefill_t: usize,
     model_id: String,
-    /// All-neurons live list (dense steps / prefill).
+    /// Worker threads for the decode step (resolved, >= 1).
+    threads: usize,
+    /// All-neurons live list (dense rows / prefill).
     all_live: Vec<u32>,
+}
+
+/// Mutable view of one sequence's slice of the step's output buffers: its
+/// KV lanes, its logits row(s) and (optionally) its FFN-liveness rows.
+/// Rows of a batch own disjoint views, which is what makes the decode step
+/// safely parallel over rows.
+struct RowBufs<'a> {
+    /// `[L * 2]` cache lanes (index `l * 2 + which`), each `[H * Tmax * hd]`.
+    kv: Vec<&'a mut [f32]>,
+    /// `[g_n * V]` logits of this sequence's tokens.
+    logits: &'a mut [f32],
+    /// Per-layer `[g_n * F]` post-gate liveness rows (token `g` writes row
+    /// `g`), when the caller wants them recorded.
+    ffn: Option<Vec<&'a mut [f32]>>,
+}
+
+/// One batch row's decode work item (view + inputs).
+struct RowWork<'a> {
+    bufs: RowBufs<'a>,
+    token: i32,
+    pos: i32,
+    /// Per-layer live-index lists this row computes its FFN over.
+    live: Vec<&'a [u32]>,
 }
 
 impl HostBackend {
@@ -72,6 +106,7 @@ impl HostBackend {
             decode_b,
             prefill_t,
             model_id,
+            threads: resolve_threads(0),
             all_live,
         })
     }
@@ -101,33 +136,32 @@ impl HostBackend {
         HostBackend::new(cfg, params, decode_b, prefill_t)
     }
 
+    /// Cap the decode step's worker threads (0 = one per available core).
+    /// Results are bit-identical at any setting; only wall-clock changes.
+    pub fn with_threads(mut self, threads: usize) -> HostBackend {
+        self.threads = resolve_threads(threads);
+        self
+    }
+
+    /// Resolved decode worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
     pub fn params(&self) -> &HostParams {
         &self.params
     }
 
-    /// Start offset of one `[Tmax × hd]` cache lane inside the flat KV
-    /// buffer `[L, 2, B, H, Tmax, hd]`.
-    #[inline]
-    fn lane(&self, batch: usize, l: usize, which: usize, row: usize, head: usize) -> usize {
-        let c = &self.cfg;
-        ((((l * 2 + which) * batch + row) * c.n_heads) + head) * c.max_seq * c.head_dim()
-    }
-
     /// Run `tokens` (absolute positions `pos0..`) through every layer for
-    /// one sequence (`row` of a `batch`-wide KV buffer), writing logits
-    /// (`[G × V]`), KV updates, per-layer `[qkv_zeros, up_zeros, live_acts]`
-    /// counts and (when given) the `[L, B, F]` post-gate FFN liveness union.
-    #[allow(clippy::too_many_arguments)]
+    /// one sequence over its buffer views, computing each token's FFN only
+    /// over the per-layer `live` index lists, and accumulating per-layer
+    /// `[qkv_zeros, up_zeros, live_acts]` counts.
     fn run_seq(
         &self,
-        kv: &mut [f32],
-        batch: usize,
-        row: usize,
+        bufs: &mut RowBufs<'_>,
         tokens: &[i32],
         pos0: usize,
         live: &[&[u32]],
-        logits_out: &mut [f32],
-        mut ffn_union: Option<&mut [f32]>,
         counts: &mut [[u64; 3]],
     ) -> Result<()> {
         let c = &self.cfg;
@@ -196,10 +230,11 @@ impl HostBackend {
                     rope_inplace(&mut kvec, nh, hd, p);
                 }
                 for head in 0..nh {
-                    let kl = self.lane(batch, l, 0, row, head) + p * hd;
-                    kv[kl..kl + hd].copy_from_slice(&kvec[head * hd..(head + 1) * hd]);
-                    let vl = self.lane(batch, l, 1, row, head) + p * hd;
-                    kv[vl..vl + hd].copy_from_slice(&vvec[head * hd..(head + 1) * hd]);
+                    let at = head * tmax * hd + p * hd;
+                    bufs.kv[l * 2][at..at + hd]
+                        .copy_from_slice(&kvec[head * hd..(head + 1) * hd]);
+                    bufs.kv[l * 2 + 1][at..at + hd]
+                        .copy_from_slice(&vvec[head * hd..(head + 1) * hd]);
                 }
             }
             // causal attention over the (just-updated) cache + output proj
@@ -207,12 +242,11 @@ impl HostBackend {
                 let p = pos0 + g;
                 let qg = &q[g * d..(g + 1) * d];
                 for head in 0..nh {
-                    let kl = self.lane(batch, l, 0, row, head);
-                    let vl = self.lane(batch, l, 1, row, head);
+                    let lane = head * tmax * hd..(head + 1) * tmax * hd;
                     attend_one(
                         &qg[head * hd..(head + 1) * hd],
-                        &kv[kl..kl + tmax * hd],
-                        &kv[vl..vl + tmax * hd],
+                        &bufs.kv[l * 2][lane.clone()],
+                        &bufs.kv[l * 2 + 1][lane],
                         hd,
                         p,
                         &mut scores,
@@ -250,11 +284,11 @@ impl HostBackend {
                 act_row.fill(false);
                 lw.ffn.forward_token(ffn_in, live[l], &mut ffn_out, &mut act_row);
                 counts[l][2] += act_row.iter().filter(|&&b| b).count() as u64;
-                if let Some(un) = ffn_union.as_deref_mut() {
-                    let base = (l * batch + row) * f;
-                    for (j, &bit) in act_row.iter().enumerate() {
+                if let Some(rows) = bufs.ffn.as_mut() {
+                    let lrow = &mut rows[l][g * f..(g + 1) * f];
+                    for (o, &bit) in lrow.iter_mut().zip(&act_row) {
                         if bit {
-                            un[base + j] = 1.0;
+                            *o = 1.0;
                         }
                     }
                 }
@@ -288,10 +322,30 @@ impl HostBackend {
                 for (hi, ei) in hg.iter().zip(e) {
                     dot += hi * ei;
                 }
-                logits_out[g * v + t] = dot;
+                bufs.logits[g * v + t] = dot;
             }
         }
         Ok(())
+    }
+
+    /// Run one decode work item (a single token for one batch row).
+    fn run_row(&self, w: &mut RowWork<'_>, counts: &mut [[u64; 3]]) -> Result<()> {
+        if w.pos < 0 {
+            return Err(Error::Engine(format!("negative position {}", w.pos)));
+        }
+        let tok = [w.token];
+        self.run_seq(&mut w.bufs, &tok, w.pos as usize, &w.live, counts)
+    }
+}
+
+/// 0 = one worker per available core; otherwise the requested count.
+fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
     }
 }
 
@@ -316,7 +370,11 @@ impl ExecBackend for HostBackend {
         self.prefill_t
     }
 
-    fn prefill(&self, tokens: &Tensor) -> Result<PrefillOut> {
+    fn supports_row_masks(&self) -> bool {
+        true
+    }
+
+    fn prefill(&self, tokens: &Tensor, report_ffn_mask: bool) -> Result<PrefillOut> {
         let c = &self.cfg;
         let t = self.prefill_t;
         if tokens.shape != vec![1, t] {
@@ -327,15 +385,35 @@ impl ExecBackend for HostBackend {
             });
         }
         let toks = tokens.as_i32()?;
+        let lane = c.n_heads * c.max_seq * c.head_dim();
         let kv_shape = vec![c.n_layers, 2, 1, c.n_heads, c.max_seq, c.head_dim()];
         let mut kv = vec![0.0f32; kv_shape.iter().product()];
         let mut logits = vec![0.0f32; t * c.vocab];
+        // the [L, T, F] liveness record is only built when asked for (it is
+        // the biggest prefill output; dense-policy admissions skip it)
+        let mut ffn = if report_ffn_mask {
+            vec![0.0f32; c.n_layers * t * c.d_ff]
+        } else {
+            Vec::new()
+        };
         let live: Vec<&[u32]> = vec![&self.all_live; c.n_layers];
         let mut counts = vec![[0u64; 3]; c.n_layers];
-        self.run_seq(&mut kv, 1, 0, toks, 0, &live, &mut logits, None, &mut counts)?;
+        {
+            let mut bufs = RowBufs {
+                kv: kv.chunks_mut(lane).collect(),
+                logits: &mut logits,
+                ffn: report_ffn_mask.then(|| ffn.chunks_mut(t * c.d_ff).collect()),
+            };
+            self.run_seq(&mut bufs, toks, 0, &live, &mut counts)?;
+        }
         Ok(PrefillOut {
             logits: Tensor::f32(vec![1, t, c.vocab], logits)?,
             kv: Tensor::f32(kv_shape, kv)?,
+            ffn_mask: if report_ffn_mask {
+                Some(Tensor::f32(vec![c.n_layers, t, c.d_ff], ffn)?)
+            } else {
+                None
+            },
         })
     }
 
@@ -344,7 +422,7 @@ impl ExecBackend for HostBackend {
         kv: &Tensor,
         pos: &Tensor,
         tokens: &Tensor,
-        neuron_mask: &Tensor,
+        mask: &BatchMask,
     ) -> Result<DecodeOut> {
         let c = &self.cfg;
         let b = self.decode_b;
@@ -371,41 +449,86 @@ impl ExecBackend for HostBackend {
                 got: pos.shape.clone(),
             });
         }
-        if neuron_mask.shape != vec![c.n_layers, f] {
-            return Err(Error::Shape {
-                what: "host decode neuron mask".into(),
-                expected: vec![c.n_layers, f],
-                got: neuron_mask.shape.clone(),
-            });
-        }
-        let mask = neuron_mask.as_f32()?;
-        let live_lists: Vec<Vec<u32>> = (0..c.n_layers)
-            .map(|l| live_indices(&mask[l * f..(l + 1) * f]))
-            .collect();
-        let live: Vec<&[u32]> = live_lists.iter().map(|l| l.as_slice()).collect();
+        mask.check(b, c.n_layers, f)?;
+        // per-row live lists (None = dense row -> the all-neurons list)
+        let live_owned: Vec<_> = (0..b).map(|r| mask.row_live(r)).collect();
         let mut kv_out = kv.as_f32()?.to_vec();
         let toks = tokens.as_i32()?;
         let positions = pos.as_i32()?;
         let mut logits = vec![0.0f32; b * v];
         let mut ffn_mask = vec![0.0f32; c.n_layers * b * f];
-        let mut counts = vec![[0u64; 3]; c.n_layers];
-        for row in 0..b {
-            let p = positions[row];
-            if p < 0 {
-                return Err(Error::Engine(format!("negative position {p}")));
-            }
-            self.run_seq(
-                &mut kv_out,
-                b,
-                row,
-                &toks[row..row + 1],
-                p as usize,
-                &live,
-                &mut logits[row * v..(row + 1) * v],
-                Some(ffn_mask.as_mut_slice()),
-                &mut counts,
-            )?;
+
+        // partition the shared output buffers into disjoint per-row views:
+        // chunk index c of the KV buffer [L, 2, B, H, Tmax, hd] (chunks of
+        // one [H, Tmax, hd] lane group) belongs to row c % B, and likewise
+        // for the [L, B, F] mask rows and [B, V] logits rows.
+        let lane = c.n_heads * c.max_seq * c.head_dim();
+        let mut kv_views: Vec<Vec<&mut [f32]>> =
+            (0..b).map(|_| Vec::with_capacity(c.n_layers * 2)).collect();
+        for (i, chunk) in kv_out.chunks_mut(lane).enumerate() {
+            kv_views[i % b].push(chunk);
         }
+        let mut ffn_views: Vec<Vec<&mut [f32]>> =
+            (0..b).map(|_| Vec::with_capacity(c.n_layers)).collect();
+        for (i, chunk) in ffn_mask.chunks_mut(f).enumerate() {
+            ffn_views[i % b].push(chunk);
+        }
+        let mut items: Vec<RowWork<'_>> = kv_views
+            .into_iter()
+            .zip(ffn_views)
+            .zip(logits.chunks_mut(v))
+            .enumerate()
+            .map(|(row, ((kv_row, ffn_row), logits_row))| RowWork {
+                bufs: RowBufs {
+                    kv: kv_row,
+                    logits: logits_row,
+                    ffn: Some(ffn_row),
+                },
+                token: toks[row],
+                pos: positions[row],
+                live: match &live_owned[row] {
+                    Some(lists) => lists.iter().map(|l| l.as_slice()).collect(),
+                    None => vec![self.all_live.as_slice(); c.n_layers],
+                },
+            })
+            .collect();
+
+        let mut counts = vec![[0u64; 3]; c.n_layers];
+        let n_threads = self.threads.min(b).max(1);
+        if n_threads <= 1 {
+            for w in items.iter_mut() {
+                self.run_row(w, &mut counts)?;
+            }
+        } else {
+            let per_worker = b.div_ceil(n_threads);
+            let results: Vec<Result<Vec<[u64; 3]>>> = std::thread::scope(|s| {
+                let handles: Vec<_> = items
+                    .chunks_mut(per_worker)
+                    .map(|group| {
+                        s.spawn(move || -> Result<Vec<[u64; 3]>> {
+                            let mut local = vec![[0u64; 3]; self.cfg.n_layers];
+                            for w in group.iter_mut() {
+                                self.run_row(w, &mut local)?;
+                            }
+                            Ok(local)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("host decode worker panicked"))
+                    .collect()
+            });
+            for r in results {
+                for (dst, src) in counts.iter_mut().zip(r?) {
+                    dst[0] += src[0];
+                    dst[1] += src[1];
+                    dst[2] += src[2];
+                }
+            }
+        }
+        drop(items);
+
         // [L, 3] zero/liveness fractions over the whole batch (same
         // averaging the L2 entries report)
         let denom_d = (b * c.d_model) as f32;
@@ -453,23 +576,38 @@ mod tests {
         HostBackend::random(tiny_cfg(arch), 11, 2, 6).unwrap()
     }
 
+    fn dense_mask(be: &HostBackend) -> BatchMask {
+        let c = be.config();
+        BatchMask::dense(be.decode_b(), c.n_layers, c.d_ff)
+    }
+
     #[test]
     fn output_shapes_match_the_entry_contract() {
         for arch in ["opt", "llama", "falcon"] {
             let be = backend(arch);
             let c = be.config().clone();
             let toks = Tensor::i32(vec![1, 6], vec![1, 2, 3, 4, 5, 6]).unwrap();
-            let pre = be.prefill(&toks).unwrap();
+            let pre = be.prefill(&toks, true).unwrap();
             assert_eq!(pre.logits.shape, vec![1, 6, c.vocab], "{arch}");
             assert_eq!(
                 pre.kv.shape,
                 vec![c.n_layers, 2, 1, c.n_heads, c.max_seq, c.head_dim()]
             );
+            let pm = pre.ffn_mask.expect("host prefill reports the mask on request");
+            assert_eq!(pm.shape, vec![c.n_layers, 6, c.d_ff], "{arch}");
+            // opting out skips the record but must not change the math
+            let quiet = be.prefill(&toks, false).unwrap();
+            assert!(quiet.ffn_mask.is_none(), "{arch}");
+            assert_eq!(
+                quiet.logits.as_f32().unwrap(),
+                pre.logits.as_f32().unwrap(),
+                "{arch}: mask reporting changed prefill logits"
+            );
+            assert_eq!(quiet.kv.as_f32().unwrap(), pre.kv.as_f32().unwrap());
             let kv = Tensor::zeros_f32(be.kv_shape());
             let pos = Tensor::i32(vec![2], vec![3, 0]).unwrap();
             let dt = Tensor::i32(vec![2, 1], vec![7, 8]).unwrap();
-            let mask = Tensor::ones_f32(vec![c.n_layers, c.d_ff]);
-            let out = be.decode(&kv, &pos, &dt, &mask).unwrap();
+            let out = be.decode(&kv, &pos, &dt, &dense_mask(&be)).unwrap();
             assert_eq!(out.logits.shape, vec![2, 1, c.vocab]);
             assert_eq!(out.kv.shape, be.kv_shape());
             assert_eq!(out.ffn_mask.shape, vec![c.n_layers, 2, c.d_ff]);
@@ -501,10 +639,9 @@ mod tests {
         }
         let pos = Tensor::i32(vec![2], vec![0, 0]).unwrap();
         let dt = Tensor::i32(vec![2, 1], vec![9, 9]).unwrap();
-        let mask = Tensor::ones_f32(vec![c.n_layers, c.d_ff]);
-        let out = be.decode(&kv, &pos, &dt, &mask).unwrap();
+        let out = be.decode(&kv, &pos, &dt, &dense_mask(&be)).unwrap();
         let clean = be
-            .decode(&Tensor::zeros_f32(be.kv_shape()), &pos, &dt, &mask)
+            .decode(&Tensor::zeros_f32(be.kv_shape()), &pos, &dt, &dense_mask(&be))
             .unwrap();
         let v = c.vocab;
         assert_eq!(
@@ -521,12 +658,11 @@ mod tests {
         let kv = Tensor::zeros_f32(be.kv_shape());
         let pos = Tensor::i32(vec![2], vec![0, 0]).unwrap();
         let dt = Tensor::i32(vec![2, 1], vec![5, 5]).unwrap();
-        let ones = be
-            .decode(&kv, &pos, &dt, &Tensor::ones_f32(vec![c.n_layers, c.d_ff]))
-            .unwrap();
-        let zeros = be
-            .decode(&kv, &pos, &dt, &Tensor::zeros_f32(vec![c.n_layers, c.d_ff]))
-            .unwrap();
+        let ones = be.decode(&kv, &pos, &dt, &dense_mask(&be)).unwrap();
+        let empty =
+            BatchMask::broadcast(2, c.n_layers, c.d_ff, &vec![false; c.n_layers * c.d_ff])
+                .unwrap();
+        let zeros = be.decode(&kv, &pos, &dt, &empty).unwrap();
         assert_ne!(
             ones.logits.as_f32().unwrap(),
             zeros.logits.as_f32().unwrap(),
@@ -540,50 +676,110 @@ mod tests {
         }
     }
 
+    /// Per-row masking is superset-safe *per row*: re-running with each
+    /// row's own observed live set reproduces dense logits bit-for-bit, and
+    /// tightening one row's mask never perturbs the other row.
     #[test]
-    fn superset_mask_is_bit_identical_to_dense() {
+    fn per_row_live_supersets_are_bit_identical_to_dense() {
         for arch in ["opt", "llama", "falcon"] {
             let be = backend(arch);
             let c = be.config().clone();
             let kv = Tensor::zeros_f32(be.kv_shape());
             let pos = Tensor::i32(vec![2], vec![0, 0]).unwrap();
             let dt = Tensor::i32(vec![2, 1], vec![4, 11]).unwrap();
-            let dense = be
-                .decode(&kv, &pos, &dt, &Tensor::ones_f32(vec![c.n_layers, c.d_ff]))
-                .unwrap();
-            // the observed live set is a superset-safe mask: re-running with
-            // exactly the union of live neurons (per layer, over the batch)
-            // must reproduce dense logits bit-for-bit
+            let dense = be.decode(&kv, &pos, &dt, &dense_mask(&be)).unwrap();
+            // each row gets exactly its own live set (not the union)
             let fm = dense.ffn_mask.as_f32().unwrap();
-            let mut mask = vec![0.0f32; c.n_layers * c.d_ff];
-            for l in 0..c.n_layers {
-                for b in 0..2 {
+            let mut mask = BatchMask::dense(2, c.n_layers, c.d_ff);
+            for row in 0..2 {
+                let mut bits = vec![false; c.n_layers * c.d_ff];
+                for l in 0..c.n_layers {
                     for j in 0..c.d_ff {
-                        if fm[(l * 2 + b) * c.d_ff + j] != 0.0 {
-                            mask[l * c.d_ff + j] = 1.0;
+                        if fm[(l * 2 + row) * c.d_ff + j] != 0.0 {
+                            bits[l * c.d_ff + j] = true;
                         }
                     }
                 }
+                mask.set_sparse(row, bits).unwrap();
             }
-            let sparse = be
-                .decode(
-                    &kv,
-                    &pos,
-                    &dt,
-                    &Tensor::f32(vec![c.n_layers, c.d_ff], mask).unwrap(),
-                )
-                .unwrap();
+            let sparse = be.decode(&kv, &pos, &dt, &mask).unwrap();
             assert_eq!(
                 dense.logits.as_f32().unwrap(),
                 sparse.logits.as_f32().unwrap(),
-                "{arch}: live-superset mask must be bit-identical"
+                "{arch}: per-row live supersets must be bit-identical"
             );
             assert_eq!(
                 dense.kv.as_f32().unwrap(),
                 sparse.kv.as_f32().unwrap(),
                 "{arch}: kv must agree too"
             );
+            // rows must not leak: emptying row 1's mask leaves row 0 intact
+            let mut leak = mask.clone();
+            leak.set_sparse(1, vec![false; c.n_layers * c.d_ff]).unwrap();
+            let out = be.decode(&kv, &pos, &dt, &leak).unwrap();
+            let v = c.vocab;
+            assert_eq!(
+                &out.logits.as_f32().unwrap()[..v],
+                &dense.logits.as_f32().unwrap()[..v],
+                "{arch}: row 1's mask leaked into row 0"
+            );
+            assert_ne!(
+                &out.logits.as_f32().unwrap()[v..],
+                &dense.logits.as_f32().unwrap()[v..],
+                "{arch}: row 1's empty mask must change row 1"
+            );
         }
+    }
+
+    /// The scoped-thread decode is a pure view partition: any thread count
+    /// produces bit-identical outputs.
+    #[test]
+    fn threaded_decode_is_bit_identical_to_single_threaded() {
+        for arch in ["opt", "llama", "falcon"] {
+            let mk = |threads| {
+                HostBackend::random(tiny_cfg(arch), 11, 3, 6)
+                    .unwrap()
+                    .with_threads(threads)
+            };
+            let one = mk(1);
+            let many = mk(3);
+            assert_eq!(one.threads(), 1);
+            assert_eq!(many.threads(), 3);
+            let c = one.config().clone();
+            let kv = Tensor::zeros_f32(one.kv_shape());
+            let pos = Tensor::i32(vec![3], vec![0, 2, 1]).unwrap();
+            let dt = Tensor::i32(vec![3, 1], vec![4, 9, 2]).unwrap();
+            let mut mask = BatchMask::dense(3, c.n_layers, c.d_ff);
+            let bits: Vec<bool> = (0..c.n_layers * c.d_ff).map(|i| i % 3 != 0).collect();
+            mask.set_sparse(1, bits).unwrap();
+            let a = one.decode(&kv, &pos, &dt, &mask).unwrap();
+            let b = many.decode(&kv, &pos, &dt, &mask).unwrap();
+            assert_eq!(a.logits.as_f32().unwrap(), b.logits.as_f32().unwrap(), "{arch}");
+            assert_eq!(a.kv.as_f32().unwrap(), b.kv.as_f32().unwrap(), "{arch}");
+            assert_eq!(
+                a.ffn_mask.as_f32().unwrap(),
+                b.ffn_mask.as_f32().unwrap(),
+                "{arch}"
+            );
+            assert_eq!(
+                a.sparsity.as_f32().unwrap(),
+                b.sparsity.as_f32().unwrap(),
+                "{arch}"
+            );
+        }
+    }
+
+    /// Worker errors (bad token in one row) surface through the threaded
+    /// path instead of poisoning the step.
+    #[test]
+    fn threaded_decode_propagates_row_errors() {
+        let be = HostBackend::random(tiny_cfg("opt"), 11, 3, 6)
+            .unwrap()
+            .with_threads(3);
+        let kv = Tensor::zeros_f32(be.kv_shape());
+        let pos = Tensor::i32(vec![3], vec![0, 0, 0]).unwrap();
+        let dt = Tensor::i32(vec![3, 1], vec![4, 10_000, 2]).unwrap();
+        assert!(be.decode(&kv, &pos, &dt, &dense_mask(&be)).is_err());
     }
 
     #[test]
@@ -591,7 +787,7 @@ mod tests {
         let be = backend("opt");
         let c = be.config().clone();
         let kv = Tensor::zeros_f32(be.kv_shape());
-        let mask = Tensor::ones_f32(vec![c.n_layers, c.d_ff]);
+        let mask = dense_mask(&be);
         // wrong token shape
         assert!(be
             .decode(
@@ -617,6 +813,23 @@ mod tests {
                 &Tensor::i32(vec![2], vec![c.max_seq as i32, 0]).unwrap(),
                 &Tensor::i32(vec![2, 1], vec![1, 1]).unwrap(),
                 &mask
+            )
+            .is_err());
+        // mask geometry must match the backend
+        assert!(be
+            .decode(
+                &kv,
+                &Tensor::i32(vec![2], vec![0, 0]).unwrap(),
+                &Tensor::i32(vec![2, 1], vec![1, 1]).unwrap(),
+                &BatchMask::dense(3, c.n_layers, c.d_ff)
+            )
+            .is_err());
+        assert!(be
+            .decode(
+                &kv,
+                &Tensor::i32(vec![2], vec![0, 0]).unwrap(),
+                &Tensor::i32(vec![2, 1], vec![1, 1]).unwrap(),
+                &BatchMask::dense(2, c.n_layers + 1, c.d_ff)
             )
             .is_err());
         // buckets must fit the cache

@@ -12,11 +12,14 @@
 //! - [`math`]: LayerNorm/RMSNorm, rotary embeddings, causal single-query
 //!   attention — mirrors of `python/compile/model.py`'s blocks.
 //! - [`backend`]: [`HostBackend`], the [`crate::runtime::ExecBackend`] the
-//!   engine drives. Decode executes the FFN only over the mask's live
-//!   neurons (the `sparse_ffn_matvec` gather/scatter, bit-verified against
-//!   it), so `--policy reuse:W:K` turns predicted sparsity into measured
-//!   wall-clock — `benches/bench_decode.rs` reports dense vs sparse host
-//!   decode.
+//!   engine drives. Decode honors the `runtime::BatchMask` *per batch row*
+//!   — each sequence's FFN gathers only its own live neurons (the
+//!   `sparse_ffn_matvec` gather/scatter, bit-verified against dense), and
+//!   the step is parallel over rows with `std::thread::scope` — so
+//!   `--policy reuse:W:K` turns per-sequence predicted sparsity into
+//!   measured wall-clock that survives batching:
+//!   `benches/bench_decode.rs` reports dense vs union vs per-slot host
+//!   decode, single- and multi-threaded.
 //!
 //! Because none of this needs a PJRT client or AOT artifacts, the entire
 //! engine/predictor/server stack is end-to-end testable under

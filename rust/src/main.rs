@@ -20,9 +20,10 @@
 //! Common options: --artifacts <dir> (default ./artifacts), --steps, --lr,
 //! --seed, --ckpt. `generate` and `serve` take the hot-neuron predictor
 //! knobs --policy <dense|reuse[:W[:K]]|topp:B[:W]>, --recall-floor <f>
-//! (1.0 = shadow mode) and --probe-every <n>. Examples under examples/
-//! drive the full paper reproduction; this binary is the day-to-day
-//! launcher.
+//! (1.0 = shadow mode) and --probe-every <n>; the host backend also takes
+//! --threads <n> (decode worker threads over batch rows, 0 = one per
+//! core). Examples under examples/ drive the full paper reproduction; this
+//! binary is the day-to-day launcher.
 
 use std::sync::Arc;
 
@@ -127,15 +128,18 @@ fn host_engine(args: &Args) -> Result<Engine> {
         };
         HostBackend::from_checkpoint(cfg, &path, decode_b, prefill_t)?
     };
+    // decode worker threads over batch rows (0 = one per available core)
+    let backend = backend.with_threads(args.usize_or("threads", 0)?);
     println!(
-        "[host] {} | L{} d{} f{} v{} | decode_b {} prefill_t {}",
+        "[host] {} | L{} d{} f{} v{} | decode_b {} prefill_t {} | threads {}",
         backend.model_id(),
         manifest.config.n_layers,
         manifest.config.d_model,
         manifest.config.d_ff,
         manifest.config.vocab,
         decode_b,
-        prefill_t
+        prefill_t,
+        backend.threads()
     );
     Engine::new(Box::new(backend), engine_config(args)?)
 }

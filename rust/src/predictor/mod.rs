@@ -15,17 +15,23 @@
 //!   `Option<Tensor>` in `EngineConfig` and is selectable per request over
 //!   the TCP protocol (`"policy": "reuse:8:4"`).
 //! - [`SlotPredictor`] (`slot.rs`): the propose/observe cycle with shadow
-//!   recall estimation and the fallback-to-dense escape hatch
+//!   recall estimation, the fallback-to-dense escape hatch
 //!   (`EngineConfig::recall_floor`; `>= 1.0` = shadow mode, bit-identical
-//!   outputs to `Dense`).
+//!   outputs to `Dense`), and prefill seeding
+//!   ([`SlotPredictor::seed_from_prefill`]): the prompt's per-position
+//!   masks warm the ring and the recall estimate, so enforcement can start
+//!   at decode step 0 instead of after W dense warmup steps.
 //!
-//! Execution: the engine unions the per-slot predictions into the batch-
-//! shared `[L, F]` mask the compiled decode entry consumes, so the FLOP/IO
-//! saving on the compiled path is whatever the backend makes of the mask;
-//! the host-side realisation of the saving is `sparse::sparse_ffn_matvec`
-//! (gather/scatter over predicted rows, bit-verified against dense), and
-//! `costmodel::predictor` projects the step-level speedup that
-//! `benches/bench_predictor.rs` compares against measurement.
+//! Execution: each slot's prediction stays *its own* — the engine threads
+//! them through a per-slot `runtime::BatchMask`. The host backend honors
+//! every row individually (each sequence's FFN gathers only its own live
+//! neurons via the `sparse::sparse_ffn_matvec` family, bit-verified against
+//! dense), so measured sparsity no longer degrades as cold slots join the
+//! batch; the compiled decode entry consumes one `[L, F]` mask, so the
+//! `XlaBackend` collapses the rows to their union (the old batch-shared
+//! semantics). `costmodel::predictor` projects both the step-level speedup
+//! and the per-slot-vs-union advantage that `benches/bench_decode.rs`
+//! measures.
 
 pub mod hotset;
 pub mod policy;

@@ -95,12 +95,10 @@ impl SlotPredictor {
         self.recall_ewma
     }
 
-    /// Compute the prediction for the upcoming decode step and decide
-    /// whether to enforce it. Returns `Some(bits)` if this slot asks for a
-    /// sparse step, `None` to request dense. The candidate prediction is
-    /// cached either way so `observe()` can score it in shadow.
-    pub fn propose(&mut self) -> Option<&[bool]> {
-        let candidate: Option<Vec<bool>> = match &self.policy {
+    /// The prediction this slot's state implies right now (no enforcement
+    /// decision, no stat updates).
+    fn candidate(&self) -> Option<Vec<bool>> {
+        match &self.policy {
             NeuronPolicy::Dense => None,
             NeuronPolicy::Static(_) => self.static_bits.clone(),
             NeuronPolicy::Reuse { union_k, .. } => self
@@ -110,8 +108,51 @@ impl SlotPredictor {
             NeuronPolicy::TopP { budget, .. } => {
                 self.hotset.filled().then(|| self.hotset.top_p(*budget))
             }
-        };
-        self.last_prediction = candidate;
+        }
+    }
+
+    fn push_recall(&mut self, r: f64) {
+        self.recall_ewma = Some(match self.recall_ewma {
+            None => r,
+            Some(e) => (1.0 - RECALL_EWMA_ALPHA) * e + RECALL_EWMA_ALPHA * r,
+        });
+        self.stats.shadow_evals += 1;
+    }
+
+    /// Seed the ring from the prefill's per-position FFN masks
+    /// (`[L, T, F]`, real positions `0..len`): the prompt's tail stands in
+    /// for the W dense warmup steps, and every position past the window is
+    /// scored in shadow — so a recall estimate (and hence enforcement) can
+    /// exist at decode step 0 instead of after W dense steps. Returns the
+    /// shadow measurements taken, oldest first.
+    pub fn seed_from_prefill(
+        &mut self,
+        ffn_mask: &Tensor,
+        len: usize,
+    ) -> Result<Vec<MaskAccuracy>> {
+        if !self.policy.is_predictive() {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::new();
+        for p in 0..len {
+            let bits =
+                bits_from_mask_row(ffn_mask, p, self.hotset.n_layers, self.hotset.d_ff)?;
+            if let Some(pred) = self.candidate() {
+                let acc = mask_accuracy(&pred, &bits);
+                self.push_recall(acc.recall());
+                out.push(acc);
+            }
+            self.hotset.push_bits(bits)?;
+        }
+        Ok(out)
+    }
+
+    /// Compute the prediction for the upcoming decode step and decide
+    /// whether to enforce it. Returns `Some(bits)` if this slot asks for a
+    /// sparse step, `None` to request dense. The candidate prediction is
+    /// cached either way so `observe()` can score it in shadow.
+    pub fn propose(&mut self) -> Option<&[bool]> {
+        self.last_prediction = self.candidate();
         if self.last_prediction.is_none() {
             return None;
         }
@@ -139,8 +180,9 @@ impl SlotPredictor {
 
     /// Feed the observed `ffn_mask` ([L, B, F], batch row `row`) for the
     /// step the last `propose()` planned. `step_was_dense` must be true iff
-    /// the engine executed the step with an all-ones mask; only then is the
-    /// observation full-fidelity and scored against the cached prediction.
+    /// *this slot's row* executed with an all-ones mask (per-slot masks:
+    /// other rows don't matter); only then is the observation full-fidelity
+    /// and scored against the cached prediction.
     pub fn observe(
         &mut self,
         ffn_mask: &Tensor,
@@ -158,13 +200,8 @@ impl SlotPredictor {
             self.last_prediction = None;
             None
         };
-        if let Some(a) = &acc {
-            let r = a.recall();
-            self.recall_ewma = Some(match self.recall_ewma {
-                None => r,
-                Some(e) => (1.0 - RECALL_EWMA_ALPHA) * e + RECALL_EWMA_ALPHA * r,
-            });
-            self.stats.shadow_evals += 1;
+        if let Some(a) = acc {
+            self.push_recall(a.recall());
         }
         self.hotset.push_bits(bits)?;
         Ok(acc)
@@ -259,6 +296,62 @@ mod tests {
         // engine enforced: observation is post-gate, must not be scored
         p.observe(&m, 0, false).unwrap();
         assert_eq!(p.stats.shadow_evals, evals);
+    }
+
+    /// [L=1, T, F=8] per-position prefill mask where every position fires
+    /// exactly `live`.
+    fn prefill_mask(t: usize, live: &[usize]) -> Tensor {
+        let mut data = vec![0.0f32; t * 8];
+        for p in 0..t {
+            for &fi in live {
+                data[p * 8 + fi] = 1.0;
+            }
+        }
+        Tensor::f32(vec![1, t, 8], data).unwrap()
+    }
+
+    #[test]
+    fn seed_from_prefill_fills_ring_and_scores_recall() {
+        let mut p = reuse(2, 2, 0.5);
+        let m = prefill_mask(4, &[1, 3]);
+        let accs = p.seed_from_prefill(&m, 4).unwrap();
+        // window 2: positions 2 and 3 are scored against the seeded ring
+        assert_eq!(accs.len(), 2);
+        assert_eq!(p.recall_estimate(), Some(1.0));
+        assert_eq!(p.stats.shadow_evals, 2);
+        // ISSUE 3 satellite: step 0 after prefill can enforce a sparse mask
+        // (no dense warmup steps at all)
+        let pred = p.propose().expect("seeded predictor enforces at step 0");
+        let mut want = vec![false; 8];
+        want[1] = true;
+        want[3] = true;
+        assert_eq!(pred, &want[..]);
+    }
+
+    #[test]
+    fn seed_shorter_than_the_window_stays_in_warmup() {
+        let mut p = reuse(3, 3, 0.5);
+        let m = prefill_mask(2, &[2]);
+        // only 2 of the 3-window positions are real: no scoring possible
+        let accs = p.seed_from_prefill(&m, 2).unwrap();
+        assert!(accs.is_empty());
+        assert_eq!(p.recall_estimate(), None);
+        assert!(p.propose().is_none(), "unfilled ring must stay dense");
+        // one more observed step fills the ring; the shadow eval happens on
+        // the next dense step as usual
+        p.observe(&mask(1, 8, &[2]), 0, true).unwrap();
+        let _ = p.propose();
+        p.observe(&mask(1, 8, &[2]), 0, true).unwrap();
+        assert_eq!(p.recall_estimate(), Some(1.0));
+    }
+
+    #[test]
+    fn seed_is_a_noop_for_static_policies() {
+        let t = Tensor::ones_f32(vec![1, 8]);
+        let mut p = SlotPredictor::new(NeuronPolicy::Static(t), 0.95, 1, 8).unwrap();
+        let accs = p.seed_from_prefill(&prefill_mask(4, &[1]), 4).unwrap();
+        assert!(accs.is_empty());
+        assert_eq!(p.stats.shadow_evals, 0);
     }
 
     #[test]

@@ -1,31 +1,210 @@
 //! Execution backends: the engine's abstraction over "run one model step".
 //!
 //! The serving engine (`crate::engine`) is backend-agnostic: it schedules
-//! requests, manages KV slots and plans the per-step neuron mask, then hands
+//! requests, manages KV slots and plans the per-step neuron masks, then hands
 //! the actual math to an [`ExecBackend`]. Two implementations exist:
 //!
 //! - [`XlaBackend`] (feature `xla`): the compiled path — AOT HLO artifacts
 //!   executed on the PJRT CPU client, weights resident on the device.
 //! - [`crate::hostexec::HostBackend`]: pure-Rust attention + FFN over
 //!   neuron-major [`crate::sparse::FfnWeights`], computing only the
-//!   neurons the predictor's mask keeps live (the
-//!   [`crate::sparse::sparse_ffn_matvec`] gather/scatter, bit-verified
-//!   against it), so a sparse step skips the skipped neurons' weight rows
-//!   for real (measured wall-clock, not projected FLOPs), and the whole
-//!   decode loop runs under plain `cargo test` with no PJRT client and no
-//!   artifacts.
+//!   neurons the predictor's mask keeps live, so a sparse step skips the
+//!   skipped neurons' weight rows for real (measured wall-clock, not
+//!   projected FLOPs), and the whole decode loop runs under plain
+//!   `cargo test` with no PJRT client and no artifacts.
+//!
+//! ## Masks are per slot
+//!
+//! The decode mask contract is a [`BatchMask`]: one row per KV slot, each
+//! either dense or its own `[L * F]` liveness bitset. Backends advertise
+//! what they can honor through [`ExecBackend::supports_row_masks`]:
+//!
+//! - the host backend honors every row individually (each sequence's FFN
+//!   gathers only its own live neurons — the paper's §5.1 reuse is
+//!   per-sequence, so this is where batched sparsity stops degrading with
+//!   batch size);
+//! - the compiled decode entry consumes a single `[L, F]` mask, so
+//!   [`XlaBackend`] collapses the rows to their union
+//!   ([`BatchMask::union_tensor`]) — exactly the batch-shared semantics the
+//!   engine used to implement itself.
 //!
 //! Both backends speak the same tensor contract as the AOT entries:
 //!
 //!   prefill(tokens i32[1, T])
 //!     -> logits f32[1, T, V], kv f32[L, 2, 1, H, Tmax, hd]
+//!        (+ ffn_mask f32[L, T, F] on backends that can report it)
 //!   decode(kv f32[L, 2, B, H, Tmax, hd], pos i32[B], tokens i32[B, 1],
-//!          neuron_mask f32[L, F])
+//!          mask BatchMask over [B] rows of [L, F])
 //!     -> logits f32[B, 1, V], kv', ffn_mask f32[L, B, F], sparsity f32[L, 3]
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::runtime::artifact::ModelCfg;
 use crate::runtime::tensor::Tensor;
+
+/// One slot's decode-step mask inside a [`BatchMask`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum MaskRow {
+    /// Every neuron live (dense-policy, warming-up or fallen-back slots).
+    Dense,
+    /// Flat `[L * F]` liveness bits. All-false is a valid row: an idle slot
+    /// whose FFN work can be skipped entirely.
+    Sparse(Vec<bool>),
+}
+
+/// Per-slot neuron masks for one batched decode step: `[B]` rows, each
+/// dense or its own `[L * F]` bitset, plus per-row live-index extraction
+/// ([`BatchMask::row_live`]) for kernels that gather.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchMask {
+    n_layers: usize,
+    d_ff: usize,
+    rows: Vec<MaskRow>,
+}
+
+impl BatchMask {
+    /// All rows dense (the baseline step; also the probe step).
+    pub fn dense(rows: usize, n_layers: usize, d_ff: usize) -> BatchMask {
+        BatchMask {
+            n_layers,
+            d_ff,
+            rows: vec![MaskRow::Dense; rows],
+        }
+    }
+
+    /// Every row carries the same `[L * F]` bits — the batch-shared mask as
+    /// a `BatchMask` (union baselines in benches/tests).
+    pub fn broadcast(rows: usize, n_layers: usize, d_ff: usize, bits: &[bool]) -> Result<BatchMask> {
+        let mut m = BatchMask::dense(rows, n_layers, d_ff);
+        for r in 0..rows {
+            m.set_sparse(r, bits.to_vec())?;
+        }
+        Ok(m)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn d_ff(&self) -> usize {
+        self.d_ff
+    }
+
+    pub fn row(&self, row: usize) -> &MaskRow {
+        &self.rows[row]
+    }
+
+    pub fn is_row_dense(&self, row: usize) -> bool {
+        matches!(self.rows[row], MaskRow::Dense)
+    }
+
+    /// Give `row` its own liveness bits (length must be `L * F`).
+    pub fn set_sparse(&mut self, row: usize, bits: Vec<bool>) -> Result<()> {
+        if bits.len() != self.n_layers * self.d_ff {
+            return Err(Error::Shape {
+                what: format!("batch mask row {row}"),
+                expected: vec![self.n_layers, self.d_ff],
+                got: vec![bits.len()],
+            });
+        }
+        let slot = self.rows.get_mut(row).ok_or_else(|| {
+            Error::msg(format!("mask row {row} out of batch {}", self.rows.len()))
+        })?;
+        *slot = MaskRow::Sparse(bits);
+        Ok(())
+    }
+
+    pub fn set_dense(&mut self, row: usize) {
+        self.rows[row] = MaskRow::Dense;
+    }
+
+    pub fn any_sparse(&self) -> bool {
+        self.rows.iter().any(|r| matches!(r, MaskRow::Sparse(_)))
+    }
+
+    /// Live fraction of one row (1.0 for a dense row).
+    pub fn row_density(&self, row: usize) -> f64 {
+        match &self.rows[row] {
+            MaskRow::Dense => 1.0,
+            MaskRow::Sparse(bits) => {
+                bits.iter().filter(|&&b| b).count() as f64 / bits.len().max(1) as f64
+            }
+        }
+    }
+
+    /// Per-layer live-index lists of one row (`None` for a dense row — the
+    /// caller substitutes its all-neurons list without allocating).
+    pub fn row_live(&self, row: usize) -> Option<Vec<Vec<u32>>> {
+        match &self.rows[row] {
+            MaskRow::Dense => None,
+            MaskRow::Sparse(bits) => {
+                let f = self.d_ff;
+                Some(
+                    (0..self.n_layers)
+                        .map(|l| {
+                            bits[l * f..(l + 1) * f]
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, &b)| b)
+                                .map(|(j, _)| j as u32)
+                                .collect()
+                        })
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    /// Union of the given rows' bits, a dense row collapsing the union to
+    /// all-ones. This is exactly what a batch-shared-mask engine would have
+    /// executed for those rows.
+    pub fn union_bits(&self, rows: &[usize]) -> Vec<bool> {
+        let n = self.n_layers * self.d_ff;
+        let mut out = vec![false; n];
+        for &r in rows {
+            match &self.rows[r] {
+                MaskRow::Dense => {
+                    out.fill(true);
+                    return out;
+                }
+                MaskRow::Sparse(bits) => {
+                    for (o, &b) in out.iter_mut().zip(bits) {
+                        *o |= b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Live fraction of [`BatchMask::union_bits`] over the given rows.
+    pub fn union_density(&self, rows: &[usize]) -> f64 {
+        let u = self.union_bits(rows);
+        u.iter().filter(|&&b| b).count() as f64 / u.len().max(1) as f64
+    }
+
+    /// Collapse to the `[L, F]` mask tensor a union-only backend consumes:
+    /// the OR of every row, all-ones as soon as any row is dense.
+    pub fn union_tensor(&self) -> Result<Tensor> {
+        let all: Vec<usize> = (0..self.rows.len()).collect();
+        Tensor::mask_from_bits(vec![self.n_layers, self.d_ff], &self.union_bits(&all))
+    }
+
+    /// Validate against a backend's geometry.
+    pub fn check(&self, rows: usize, n_layers: usize, d_ff: usize) -> Result<()> {
+        if self.rows.len() != rows || self.n_layers != n_layers || self.d_ff != d_ff {
+            return Err(Error::Shape {
+                what: "batch mask".into(),
+                expected: vec![rows, n_layers, d_ff],
+                got: vec![self.rows.len(), self.n_layers, self.d_ff],
+            });
+        }
+        Ok(())
+    }
+}
 
 /// Prefill result: logits for every prompt position + the sequence's KV row.
 pub struct PrefillOut {
@@ -33,6 +212,11 @@ pub struct PrefillOut {
     pub logits: Tensor,
     /// f32 [L, 2, 1, H, Tmax, hd]
     pub kv: Tensor,
+    /// f32 [L, T, F] — per-position post-gate FFN liveness, on backends that
+    /// can report it (the engine seeds each slot's hot-neuron ring from the
+    /// prompt's masks). `None` on the compiled path: the AOT prefill entry
+    /// has no mask output.
+    pub ffn_mask: Option<Tensor>,
 }
 
 /// One batched decode step's outputs (mirrors the AOT `decode` entry tuple).
@@ -64,16 +248,29 @@ pub trait ExecBackend {
     /// Prefill bucket length (prompts are tail-clamped to this).
     fn prefill_t(&self) -> usize;
 
-    /// Run prefill over one padded prompt: tokens i32 [1, prefill_t].
-    fn prefill(&self, tokens: &Tensor) -> Result<PrefillOut>;
+    /// True when `decode` honors each row's own mask (the host backend);
+    /// false when the backend collapses the batch to one shared union mask
+    /// (the compiled entry). The engine plans enforcement accordingly: a
+    /// union-only backend goes sparse only when every occupied slot
+    /// proposes, and none of its rows count as densely observed.
+    fn supports_row_masks(&self) -> bool {
+        false
+    }
 
-    /// Run one batched decode step under the given `[L, F]` neuron mask.
+    /// Run prefill over one padded prompt: tokens i32 [1, prefill_t].
+    /// `report_ffn_mask` asks for `PrefillOut::ffn_mask` ([L, T, F] — the
+    /// engine only wants it when a predictive policy will seed from it;
+    /// it is sizeable, so backends skip building it otherwise). Backends
+    /// that cannot report it return `None` regardless.
+    fn prefill(&self, tokens: &Tensor, report_ffn_mask: bool) -> Result<PrefillOut>;
+
+    /// Run one batched decode step under the given per-slot masks.
     fn decode(
         &self,
         kv: &Tensor,
         pos: &Tensor,
         tokens: &Tensor,
-        neuron_mask: &Tensor,
+        mask: &BatchMask,
     ) -> Result<DecodeOut>;
 
     /// KV cache shape for the decode batch: [L, 2, B, H, Tmax, hd].
@@ -108,7 +305,6 @@ impl XlaBackend {
         model: std::sync::Arc<crate::runtime::Model>,
         mut params: crate::runtime::ParamStore,
     ) -> Result<XlaBackend> {
-        use crate::error::Error;
         params.upload(model.client())?;
         let prefill = model.entry("prefill")?;
         // prefer the batched decode entry; fall back to B=1
@@ -141,7 +337,6 @@ impl XlaBackend {
     }
 
     fn param_args(&self) -> Result<Vec<crate::runtime::Arg<'_>>> {
-        use crate::error::Error;
         let bufs = self
             .params
             .buffers()
@@ -172,14 +367,19 @@ impl ExecBackend for XlaBackend {
         self.prefill_t
     }
 
-    fn prefill(&self, tokens: &Tensor) -> Result<PrefillOut> {
+    fn prefill(&self, tokens: &Tensor, _report_ffn_mask: bool) -> Result<PrefillOut> {
         use crate::runtime::Arg;
         let mut args = self.param_args()?;
         args.push(Arg::Host(tokens));
         let mut outs = self.prefill.execute(&args)?;
         let kv = outs.remove(1);
         let logits = outs.remove(0);
-        Ok(PrefillOut { logits, kv })
+        // the AOT prefill entry has no mask output, whatever the caller asks
+        Ok(PrefillOut {
+            logits,
+            kv,
+            ffn_mask: None,
+        })
     }
 
     fn decode(
@@ -187,14 +387,19 @@ impl ExecBackend for XlaBackend {
         kv: &Tensor,
         pos: &Tensor,
         tokens: &Tensor,
-        neuron_mask: &Tensor,
+        mask: &BatchMask,
     ) -> Result<DecodeOut> {
         use crate::runtime::Arg;
+        // the compiled entry consumes one [L, F] mask: collapse the rows to
+        // their union (all-ones as soon as any row is dense)
+        let c = self.config();
+        mask.check(self.decode_b, c.n_layers, c.d_ff)?;
+        let mask_t = mask.union_tensor()?;
         let mut args = self.param_args()?;
         args.push(Arg::Host(kv));
         args.push(Arg::Host(pos));
         args.push(Arg::Host(tokens));
-        args.push(Arg::Host(neuron_mask));
+        args.push(Arg::Host(&mask_t));
         let mut outs = self.decode.execute(&args)?;
         if outs.len() < 4 {
             return Err(crate::error::Error::Engine(format!(
@@ -212,5 +417,93 @@ impl ExecBackend for XlaBackend {
             ffn_mask,
             sparsity,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(n: usize, live: &[usize]) -> Vec<bool> {
+        let mut b = vec![false; n];
+        for &i in live {
+            b[i] = true;
+        }
+        b
+    }
+
+    #[test]
+    fn dense_rows_and_densities() {
+        let mut m = BatchMask::dense(3, 2, 4);
+        assert_eq!(m.rows(), 3);
+        assert!(!m.any_sparse());
+        assert_eq!(m.row_density(1), 1.0);
+        assert!(m.row_live(1).is_none());
+        m.set_sparse(1, bits(8, &[0, 5])).unwrap();
+        assert!(m.any_sparse());
+        assert!((m.row_density(1) - 0.25).abs() < 1e-12);
+        assert!(m.is_row_dense(0) && !m.is_row_dense(1));
+        // per-layer live lists split the flat bits at F boundaries
+        let live = m.row_live(1).unwrap();
+        assert_eq!(live, vec![vec![0u32], vec![1u32]]);
+    }
+
+    #[test]
+    fn set_sparse_validates_shape_and_row() {
+        let mut m = BatchMask::dense(2, 2, 4);
+        assert!(m.set_sparse(0, vec![true; 7]).is_err());
+        assert!(m.set_sparse(5, vec![true; 8]).is_err());
+        assert!(m.set_sparse(0, vec![true; 8]).is_ok());
+        m.set_dense(0);
+        assert!(m.is_row_dense(0));
+        assert!(m.check(2, 2, 4).is_ok());
+        assert!(m.check(3, 2, 4).is_err());
+        assert!(m.check(2, 1, 4).is_err());
+    }
+
+    #[test]
+    fn union_collapses_like_the_batch_shared_engine() {
+        let mut m = BatchMask::dense(3, 1, 6);
+        m.set_sparse(0, bits(6, &[0, 1])).unwrap();
+        m.set_sparse(1, bits(6, &[1, 4])).unwrap();
+        m.set_sparse(2, bits(6, &[])).unwrap();
+        // all-sparse rows: union is the OR
+        assert_eq!(m.union_bits(&[0, 1, 2]), bits(6, &[0, 1, 4]));
+        assert!((m.union_density(&[0, 1]) - 0.5).abs() < 1e-12);
+        let t = m.union_tensor().unwrap();
+        assert_eq!(t.shape, vec![1, 6]);
+        assert_eq!(t.count_nonzero().unwrap(), 3);
+        // one dense row collapses everything to all-ones
+        m.set_dense(1);
+        assert_eq!(m.union_bits(&[0, 1]), vec![true; 6]);
+        assert_eq!(m.union_tensor().unwrap().count_nonzero().unwrap(), 6);
+        // ...but a union excluding the dense row is unaffected
+        assert_eq!(m.union_bits(&[0, 2]), bits(6, &[0, 1]));
+    }
+
+    #[test]
+    fn broadcast_gives_every_row_the_same_bits() {
+        let b = bits(4, &[2]);
+        let m = BatchMask::broadcast(3, 1, 4, &b).unwrap();
+        for r in 0..3 {
+            assert_eq!(*m.row(r), MaskRow::Sparse(b.clone()));
+            assert!((m.row_density(r) - 0.25).abs() < 1e-12);
+        }
+        assert!(BatchMask::broadcast(2, 2, 4, &b).is_err());
+    }
+
+    #[test]
+    fn per_row_density_never_exceeds_union_density() {
+        // every row is a subset of the union, so the per-slot average can
+        // only be at or below the union (the bench_decode gate's invariant)
+        let mut m = BatchMask::dense(4, 1, 8);
+        m.set_sparse(0, bits(8, &[0])).unwrap();
+        m.set_sparse(1, bits(8, &[1, 2, 3])).unwrap();
+        m.set_sparse(2, bits(8, &[0, 7])).unwrap();
+        let rows: Vec<usize> = (0..4).collect();
+        let union = m.union_density(&rows);
+        let avg: f64 = rows.iter().map(|&r| m.row_density(r)).sum::<f64>() / 4.0;
+        assert!(avg <= union + 1e-12, "avg {avg} vs union {union}");
+        assert_eq!(union, 1.0, "dense row 3 must force the union dense");
     }
 }

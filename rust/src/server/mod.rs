@@ -7,7 +7,11 @@
 //!              "temperature": 0.0, "policy": "reuse:8:4"}
 //!   response: {"id": 1, "text": " paris .", "tokens": 3,
 //!              "prefill_ms": 12.1, "queue_ms": 0.4, "total_ms": 80.5,
+//!              "mask_density": 0.14, "enforced_rows": 6, "fallbacks": 0,
 //!              "finish": "max_tokens"}
+//!             (`mask_density`/`enforced_rows`/`fallbacks` are *this
+//!             request's* sparsity — per-slot masks make them per-request;
+//!             `mask_density` is null when no row ever ran sparse)
 //!   error:    {"id": 1, "error": "missing key `prompt`"}  (malformed
 //!             requests get a JSON error line back, echoing the request id
 //!             when one could be parsed)
@@ -177,6 +181,15 @@ pub fn serve(
                     ("prefill_ms", Value::Num(done.prefill_ms)),
                     ("queue_ms", Value::Num(done.queue_ms)),
                     ("total_ms", Value::Num(done.total_ms)),
+                    // per-request sparsity observability: with per-slot
+                    // masks these are THIS request's numbers, not the
+                    // batch's (null density = no row ever ran sparse)
+                    (
+                        "mask_density",
+                        done.mask_density.map(Value::Num).unwrap_or(Value::Null),
+                    ),
+                    ("enforced_rows", Value::Num(done.enforced_rows as f64)),
+                    ("fallbacks", Value::Num(done.fallbacks as f64)),
                     (
                         "finish",
                         Value::Str(format!("{:?}", done.finish).to_lowercase()),

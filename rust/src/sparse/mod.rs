@@ -206,14 +206,30 @@ pub fn dense_ffn_batch(w: &FfnWeights, xs: &[f32], ys: &mut [f32]) {
     }
 }
 
-/// Batched predictor fast path: every row of `xs` computed over the same
-/// `live` list (the engine's batch-shared mask — weight rows are shared
-/// across the batch, so one list covers every slot).
+/// Batched predictor fast path over one shared `live` list — the
+/// batch-shared union baseline (every row pays the union's rows). Per-slot
+/// serving uses [`sparse_ffn_batch_rows`] instead.
 pub fn sparse_ffn_batch(w: &FfnWeights, xs: &[f32], live: &[u32], ys: &mut [f32]) {
     assert_eq!(xs.len(), ys.len());
     assert_eq!(xs.len() % w.d, 0);
     for (x, y) in xs.chunks_exact(w.d).zip(ys.chunks_exact_mut(w.d)) {
         sparse_ffn_matvec(w, x, live, y);
+    }
+}
+
+/// Batched per-row fast path: row `r` of `xs` computed over its own
+/// `live[r]` list (the engine's per-slot masks — each sequence gathers
+/// only its own predicted-hot neurons, so one cold row's wide list no
+/// longer taxes the warm rows).
+pub fn sparse_ffn_batch_rows(w: &FfnWeights, xs: &[f32], live: &[&[u32]], ys: &mut [f32]) {
+    assert_eq!(xs.len(), ys.len());
+    assert_eq!(xs.len(), live.len() * w.d);
+    for ((x, y), l) in xs
+        .chunks_exact(w.d)
+        .zip(ys.chunks_exact_mut(w.d))
+        .zip(live)
+    {
+        sparse_ffn_matvec(w, x, l, y);
     }
 }
 
@@ -381,6 +397,41 @@ mod tests {
         dense_ffn_batch(&w, &xs, &mut dense_b);
         sparse_ffn_batch(&w, &xs, &all, &mut batch);
         assert_eq!(dense_b, batch, "full live list must equal dense batch");
+    }
+
+    /// Per-row batched FFN: each row honors exactly its own list — equal to
+    /// the per-token kernel row by row, equal to the shared-list batch when
+    /// every row carries the same list, and tightening one row's list never
+    /// perturbs its neighbours.
+    #[test]
+    fn batched_rows_honor_each_rows_own_list() {
+        let w = FfnWeights::random(32, 8, 51);
+        let mut r = Rng::new(52);
+        let xs: Vec<f32> = (0..3 * 8).map(|_| r.normal() as f32).collect();
+        let lists: Vec<Vec<u32>> = vec![vec![0, 3, 9], (0..32).collect(), vec![]];
+        let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        let mut ys = vec![0.0f32; 3 * 8];
+        sparse_ffn_batch_rows(&w, &xs, &refs, &mut ys);
+        for b in 0..3 {
+            let mut single = vec![0.0f32; 8];
+            sparse_ffn_matvec(&w, &xs[b * 8..(b + 1) * 8], refs[b], &mut single);
+            assert_eq!(&ys[b * 8..(b + 1) * 8], &single[..], "row {b}");
+        }
+        assert!(ys[2 * 8..].iter().all(|&y| y == 0.0), "empty list row");
+        // same list everywhere == the shared-list batch
+        let shared: Vec<u32> = vec![1, 4, 9];
+        let same: Vec<&[u32]> = vec![&shared; 3];
+        let mut ys_rows = vec![0.0f32; 3 * 8];
+        let mut ys_shared = vec![0.0f32; 3 * 8];
+        sparse_ffn_batch_rows(&w, &xs, &same, &mut ys_rows);
+        sparse_ffn_batch(&w, &xs, &shared, &mut ys_shared);
+        assert_eq!(ys_rows, ys_shared);
+        // widening row 1's list must leave rows 0 and 2 bit-identical
+        let wide: Vec<&[u32]> = vec![&shared, &lists[1], &shared];
+        let mut ys_wide = vec![0.0f32; 3 * 8];
+        sparse_ffn_batch_rows(&w, &xs, &wide, &mut ys_wide);
+        assert_eq!(&ys_wide[..8], &ys_rows[..8], "row 0 leaked");
+        assert_eq!(&ys_wide[2 * 8..], &ys_rows[2 * 8..], "row 2 leaked");
     }
 
     #[test]

@@ -2,20 +2,26 @@
 //! no PJRT client, no AOT artifacts, runs under
 //! `cargo test --no-default-features` (the CI host gate).
 //!
-//! Covers the ISSUE 2 acceptance surface:
+//! Covers the ISSUE 2 + ISSUE 3 acceptance surface:
 //! - shadow-mode equivalence: every `NeuronPolicy` at `recall_floor >= 1.0`
 //!   (all-ones mask for `Static`) is token-identical to dense decode, on
-//!   all three architectures;
+//!   all three architectures — per slot, under the per-slot `BatchMask`
+//!   contract;
+//! - per-slot isolation: an enforcing slot never perturbs a dense slot's
+//!   tokens in the same batch;
 //! - prefill ≡ decode-chain bit-exactness (causality + KV write/attend
 //!   ordering);
+//! - prefill seeding: step 0 after prefill can already enforce a sparse
+//!   mask (no W dense warmup steps);
 //! - the committed golden fixture: greedy token IDs pinned against the L2
 //!   JAX reference (`tools/make_host_fixture.py`), plus the predictor's
 //!   recall/density counter schedule under an enforcing Reuse policy;
-//! - the TCP server speaking the same protocol over a host engine.
+//! - the TCP server speaking the same protocol over a host engine,
+//!   including the per-request sparsity fields in the JSON reply.
 
 use std::sync::Arc;
 
-use rsb::engine::{Engine, EngineConfig, NeuronPolicy, SamplingParams};
+use rsb::engine::{BatchMask, Engine, EngineConfig, NeuronPolicy, SamplingParams};
 use rsb::hostexec::HostBackend;
 use rsb::runtime::artifact::ModelCfg;
 use rsb::runtime::{ExecBackend, Tensor};
@@ -178,7 +184,7 @@ fn decode_chain_is_bit_identical_to_prefill() {
         let be = HostBackend::random(cfg(arch), 7, 1, 8).unwrap();
         let doc: Vec<i32> = vec![2, 7, 1, 8, 4, 9, 6, 3];
         let full = be
-            .prefill(&Tensor::i32(vec![1, 8], doc.clone()).unwrap())
+            .prefill(&Tensor::i32(vec![1, 8], doc.clone()).unwrap(), false)
             .unwrap();
         let flog = full.logits.as_f32().unwrap();
         let v = be.config().vocab;
@@ -188,7 +194,9 @@ fn decode_chain_is_bit_identical_to_prefill() {
         for p in padded.iter_mut().skip(4) {
             *p = 0;
         }
-        let pre = be.prefill(&Tensor::i32(vec![1, 8], padded).unwrap()).unwrap();
+        let pre = be
+            .prefill(&Tensor::i32(vec![1, 8], padded).unwrap(), false)
+            .unwrap();
         let plog = pre.logits.as_f32().unwrap();
         for g in 0..4 {
             assert_eq!(
@@ -198,7 +206,7 @@ fn decode_chain_is_bit_identical_to_prefill() {
             );
         }
         let mut kv = pre.kv.clone();
-        let mask = Tensor::ones_f32(vec![be.config().n_layers, be.config().d_ff]);
+        let mask = BatchMask::dense(1, be.config().n_layers, be.config().d_ff);
         for g in 4..8 {
             let out = be
                 .decode(
@@ -244,11 +252,12 @@ fn golden_fixture_greedy_tokens_are_pinned() {
 }
 
 /// Golden fixture, part 2: the predictor counter schedule under an
-/// enforcing Reuse policy is fully deterministic — window 2 and
-/// probe_every 4 over 12 decode steps give probes at steps {0, 4, 8},
-/// warmup/dense at {1, 2}, and enforcement at the remaining 7 steps, with
-/// exactly one shadow recall measurement per probe-adjacent dense step
-/// ({2, 4, 8}).
+/// enforcing Reuse policy is fully deterministic. Prefill seeding (window
+/// 2 over the 5-token prompt) fills the ring and takes 3 in-prompt shadow
+/// measurements at admit, so enforcement starts at decode step 0 (the
+/// ISSUE 3 satellite: no W dense warmup steps); probes (probe_every 4,
+/// never at step 0) land at steps {4, 8}; the remaining 10 steps all run
+/// this slot's row sparse.
 #[test]
 fn golden_fixture_pins_recall_and_density_counters() {
     let backend = fixture_backend(2);
@@ -260,30 +269,110 @@ fn golden_fixture_pins_recall_and_density_counters() {
     };
     let mut e = Engine::new(Box::new(backend), ecfg).unwrap();
     e.submit(vec![3, 1, 4, 1, 5], 12);
-    let done = e.run_to_completion().unwrap();
-    assert_eq!(done[0].tokens.len(), 12);
-    assert_eq!(e.metrics.steps, 12);
-    assert_eq!(e.metrics.probe_steps, 3, "probes at steps 0, 4, 8");
-    assert_eq!(
-        e.metrics.enforced_steps, 7,
-        "enforced at steps 3, 5-7, 9-11"
-    );
+    // admit + step 0 in one call: the seeded slot must enforce immediately
+    let first = e.step().unwrap();
+    assert!(first.is_empty());
     assert_eq!(
         e.metrics.predictor_recall.len(),
         3,
-        "one shadow eval per measurable dense step (2, 4, 8)"
+        "seeding scores prompt positions 2..5 at admit"
+    );
+    assert_eq!(
+        e.metrics.enforced_steps, 1,
+        "prefill-seeded slot must enforce at decode step 0"
+    );
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done[0].tokens.len(), 12);
+    assert_eq!(e.metrics.steps, 12);
+    assert_eq!(e.metrics.probe_steps, 2, "probes at steps 4 and 8");
+    assert_eq!(
+        e.metrics.enforced_steps, 10,
+        "every non-probe step runs the slot's row sparse"
+    );
+    assert_eq!(e.metrics.enforced_rows, 10, "one slot, one row per step");
+    assert_eq!(
+        e.metrics.predictor_recall.len(),
+        5,
+        "3 seed evals + one shadow eval per probe (4, 8)"
     );
     assert_eq!(e.metrics.fallback_events, 0);
-    assert_eq!(e.metrics.mask_density.len(), 7);
+    assert_eq!(e.metrics.mask_density.len(), 10);
+    assert_eq!(
+        e.metrics.union_mask_density.len(),
+        10,
+        "union density sampled once per enforced step"
+    );
     let density = e.metrics.mask_density.mean();
     assert!(
         density > 0.0 && density < 1.0,
         "enforced masks must be sparse, got density {density}"
     );
+    // single occupied slot: its own mask IS the occupied union
+    assert!(
+        (density - e.metrics.union_mask_density.mean()).abs() < 1e-12,
+        "solo slot density must equal the union density"
+    );
+    // the per-slot split pins the same schedule to slot 0 and nothing else
+    assert_eq!(e.metrics.per_slot[0].enforced_rows, 10);
+    assert_eq!(e.metrics.per_slot[0].mask_density.len(), 10);
+    assert_eq!(e.metrics.per_slot[0].recall.len(), 5);
+    assert_eq!(e.metrics.per_slot[1].enforced_rows, 0, "empty slot stayed idle");
+    // ...and reaches the client through the completion record
+    let d = done[0].mask_density.expect("enforced request reports density");
+    assert!(d > 0.0 && d < 1.0);
+    assert_eq!(done[0].enforced_rows, 10);
+    assert_eq!(done[0].fallbacks, 0);
     for i in 0..=10 {
         let r = e.metrics.predictor_recall.percentile(10.0 * i as f64);
         assert!((0.0..=1.0).contains(&r), "recall {r} out of range");
     }
+}
+
+/// ISSUE 3 per-slot isolation: a batch mixing a dense-policy request with
+/// an enforcing Reuse request must leave the dense request's tokens
+/// bit-identical to a solo dense run — one slot's mask never leaks into
+/// another row.
+#[test]
+fn enforcing_slot_never_perturbs_a_dense_slot() {
+    let prompt_dense: Vec<u32> = vec![5, 9, 13, 21];
+    let prompt_reuse: Vec<u32> = vec![2, 4, 8];
+    let n = 10usize;
+    let mut solo = engine("opt", EngineConfig::default());
+    solo.submit(prompt_dense.clone(), n);
+    let want = solo.run_to_completion().unwrap().remove(0).tokens;
+
+    let ecfg = EngineConfig {
+        recall_floor: 0.05,
+        probe_every: 4,
+        ..EngineConfig::default()
+    };
+    let mut e = engine("opt", ecfg);
+    let dense_id = e.submit(prompt_dense, n);
+    e.submit_with_policy(
+        prompt_reuse,
+        n,
+        SamplingParams::default(),
+        Some(NeuronPolicy::Reuse { window: 2, union_k: 2 }),
+    );
+    let mut done = e.run_to_completion().unwrap();
+    done.sort_by_key(|d| d.id);
+    assert_eq!(done.len(), 2);
+    assert_eq!(done[0].id, dense_id);
+    assert_eq!(
+        done[0].tokens, want,
+        "enforcing slot 1 leaked into dense slot 0"
+    );
+    // the reuse slot really did enforce (prefill-seeded, floor 0.05)
+    assert!(e.metrics.enforced_steps > 0, "nothing was enforced");
+    assert_eq!(e.metrics.per_slot[0].enforced_rows, 0, "dense slot enforced?");
+    assert!(e.metrics.per_slot[1].enforced_rows > 0, "reuse slot never enforced");
+    // per-request observability: the dense request reports no density, the
+    // sparse one reports its own
+    assert_eq!(done[0].mask_density, None);
+    assert_eq!(done[0].enforced_rows, 0);
+    let d = done[1].mask_density.expect("reuse request reports density");
+    assert!(d > 0.0 && d <= 1.0);
+    assert!(done[1].enforced_rows > 0);
 }
 
 /// The JSON-lines TCP server end-to-end over the host backend — the whole
@@ -321,6 +410,11 @@ fn server_roundtrip_over_host_backend() {
         assert_eq!(resp.get("id").and_then(|v| v.as_i64()), Some(i as i64));
         assert_eq!(resp.get("tokens").and_then(|v| v.as_usize()), Some(4));
         assert!(resp.get("text").is_some());
+        // per-request sparsity fields: shadow mode (floor 1.0) never
+        // enforces, so density is null and the counters are zero
+        assert_eq!(resp.get("mask_density"), Some(&rsb::jsonx::Value::Null));
+        assert_eq!(resp.get("enforced_rows").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(resp.get("fallbacks").and_then(|v| v.as_usize()), Some(0));
     }
     assert_eq!(server.join().unwrap().unwrap(), 2);
 }

@@ -3,12 +3,14 @@
 //! reporting; cases are deterministic so failures reproduce exactly).
 
 use rsb::engine::kv::{KvBatch, SlotManager};
+use rsb::engine::ExecBackend;
 use rsb::engine::request::SamplingParams;
 use rsb::engine::sampler::{argmax, log_softmax, sample, softmax};
 use rsb::jsonx::{self, Value};
 use rsb::predictor::{HotSet, NeuronPolicy, SlotPredictor};
 use rsb::runtime::checkpoint;
 use rsb::runtime::tensor::Tensor;
+use rsb::runtime::BatchMask;
 use rsb::sparse::{dense_ffn_matvec, sparse_ffn_matvec, FfnWeights};
 use rsb::sparsity::{mask_accuracy, AggregatedTracker, ReusePolicy, ReuseStrategy};
 use rsb::tokenizer::Bpe;
@@ -526,6 +528,126 @@ fn prop_indexed_gemv_matches_masked_dense() {
         for (x, y) in y_idx.iter().zip(&y_dense) {
             assert!((x - y).abs() < 1e-4, "indexed vs dense: {x} vs {y}");
         }
+    });
+}
+
+/// ISSUE 3 satellite: per-row sparse batch FFN is bitwise-equal to dense
+/// on ANY superset of each row's own active set, and rows never leak masks
+/// across the batch — exercised end-to-end through the host backend's
+/// decode step under random per-row `BatchMask`s.
+#[test]
+fn prop_per_row_batch_mask_superset_exact_and_isolated() {
+    use rsb::hostexec::HostBackend;
+    use rsb::runtime::artifact::ModelCfg;
+    check("per_row_batch_mask", 10, |rng| {
+        let b = rng.range(2, 5);
+        let n_layers = rng.range(1, 3);
+        let cfg = ModelCfg {
+            size: "p".into(),
+            arch: "opt".into(),
+            act: "relu".into(),
+            stage: 0,
+            d_model: 8,
+            n_layers,
+            n_heads: 2,
+            d_ff: rng.range(8, 24),
+            vocab: 16,
+            max_seq: 8,
+            shift: 1.0,
+            ffn_act: "relu".into(),
+            gated: false,
+            parallel_block: false,
+            has_bias: true,
+        };
+        let (l, f, v) = (cfg.n_layers, cfg.d_ff, cfg.vocab);
+        let be = HostBackend::random(cfg, rng.next_u64(), b, 4).unwrap();
+        let kv = Tensor::zeros_f32(be.kv_shape());
+        let pos = Tensor::i32(vec![b], vec![0; b]).unwrap();
+        let toks = Tensor::i32(
+            vec![b, 1],
+            (0..b).map(|_| rng.below(v) as i32).collect(),
+        )
+        .unwrap();
+        let dense = be
+            .decode(&kv, &pos, &toks, &BatchMask::dense(b, l, f))
+            .unwrap();
+        let dl = dense.logits.as_f32().unwrap();
+        let fm = dense.ffn_mask.as_f32().unwrap();
+        // each row: its own observed active set + random false alarms
+        let mut mask = BatchMask::dense(b, l, f);
+        for row in 0..b {
+            let bits: Vec<bool> = (0..l * f)
+                .map(|i| {
+                    let (li, fi) = (i / f, i % f);
+                    fm[(li * b + row) * f + fi] != 0.0 || rng.chance(0.3)
+                })
+                .collect();
+            mask.set_sparse(row, bits).unwrap();
+        }
+        let sparse = be.decode(&kv, &pos, &toks, &mask).unwrap();
+        assert_eq!(
+            dl,
+            sparse.logits.as_f32().unwrap(),
+            "per-row supersets must reproduce dense bitwise"
+        );
+        assert_eq!(dense.kv.as_f32().unwrap(), sparse.kv.as_f32().unwrap());
+        // leak check: empty one random row's mask; every OTHER row must
+        // stay bitwise identical to dense, the emptied row must not
+        let victim = rng.below(b);
+        let victim_fired = (0..l * f).any(|i| {
+            let (li, fi) = (i / f, i % f);
+            fm[(li * b + victim) * f + fi] != 0.0
+        });
+        let mut leak = mask.clone();
+        leak.set_sparse(victim, vec![false; l * f]).unwrap();
+        let out = be.decode(&kv, &pos, &toks, &leak).unwrap();
+        let ol = out.logits.as_f32().unwrap();
+        for row in 0..b {
+            let (got, want) = (&ol[row * v..(row + 1) * v], &dl[row * v..(row + 1) * v]);
+            if row == victim {
+                if victim_fired {
+                    assert_ne!(got, want, "emptied row {row} must change");
+                }
+            } else {
+                assert_eq!(got, want, "row {victim}'s mask leaked into row {row}");
+            }
+        }
+    });
+}
+
+/// BatchMask algebra: every row is a subset of the union, so the per-slot
+/// average density can never exceed the union density (the bench_decode
+/// acceptance gate), and a dense row collapses the union to all-ones.
+#[test]
+fn prop_batch_mask_union_dominates_rows() {
+    check("batch_mask_union", 40, |rng| {
+        let b = rng.range(1, 6);
+        let l = rng.range(1, 3);
+        let f = rng.range(4, 40);
+        let mut m = BatchMask::dense(b, l, f);
+        let mut any_dense = false;
+        for row in 0..b {
+            if rng.chance(0.25) {
+                any_dense = true; // leave the row dense
+            } else {
+                let bits: Vec<bool> = (0..l * f).map(|_| rng.chance(0.3)).collect();
+                m.set_sparse(row, bits).unwrap();
+            }
+        }
+        let rows: Vec<usize> = (0..b).collect();
+        let union = m.union_density(&rows);
+        let avg: f64 =
+            rows.iter().map(|&r| m.row_density(r)).sum::<f64>() / b as f64;
+        assert!(avg <= union + 1e-12, "avg {avg} > union {union}");
+        for &r in &rows {
+            assert!(m.row_density(r) <= union + 1e-12);
+        }
+        if any_dense {
+            assert_eq!(union, 1.0, "a dense row must force the union dense");
+        }
+        // the union tensor agrees with the density helper
+        let t = m.union_tensor().unwrap();
+        assert!((t.density().unwrap() - union).abs() < 1e-12);
     });
 }
 
