@@ -72,7 +72,7 @@ fn main() -> rsb::Result<()> {
             ("aggregated", VerifyMask::Aggregated { window: 32 }),
             ("random", VerifyMask::Random { window: 32 }),
         ] {
-            let mut dec = SpecDecoder::new(
+            let mut dec = SpecDecoder::with_models(
                 target.clone(),
                 target.load_params(&t_ckpt)?,
                 draft.clone(),
@@ -135,7 +135,7 @@ fn main() -> rsb::Result<()> {
     )?;
     // measured s_agg(γ) curve: reuse the γ-sweep (aggregated rows above)
     // through the analytic decay between measured points.
-    let mut dec = SpecDecoder::new(
+    let mut dec = SpecDecoder::with_models(
         target.clone(),
         target.load_params(&t_ckpt)?,
         draft.clone(),

@@ -42,6 +42,58 @@ pub fn random_aggregated_sparsity(s: f64, gamma: usize) -> f64 {
     s.powi(gamma as i32)
 }
 
+/// Measured-vs-modeled comparison of one (dense, sparse) verification pair
+/// — the host backend's answer to "does `VerifyMask::Aggregated` buy the
+/// wall-clock Theorem 1 predicts?". All inputs are plain measurements so
+/// both backends (and the benches/tests) can fill it.
+#[derive(Debug, Clone, Copy)]
+pub struct VerifyComparison {
+    /// dense verify wall-clock / sparse verify wall-clock (per round)
+    pub measured_speedup: f64,
+    /// Thm 1 prediction at the measured (c, γ, s̄_agg)
+    pub thm1_speedup: f64,
+    /// Thm 2 prediction (vs plain autoregressive) at the measured α
+    pub thm2_speedup: f64,
+    /// measured / Thm-1 modeled (1.0 = the model nails the measurement;
+    /// > 1 the hardware beat the model)
+    pub agreement: f64,
+}
+
+/// Build a [`VerifyComparison`] from measured per-round verify times and
+/// the sparse run's measured (c, γ, s̄_agg, α). Degenerate measurements
+/// (zero/NaN times, zero rounds) collapse to 0 instead of NaN — the
+/// clamped analogue of `SpecStats`' division guards.
+pub fn verify_comparison(
+    dense_verify_s: f64,
+    sparse_verify_s: f64,
+    c: f64,
+    gamma: usize,
+    s_agg: f64,
+    alpha: f64,
+) -> VerifyComparison {
+    let safe = |x: f64| if x.is_finite() && x > 0.0 { x } else { 0.0 };
+    let (dv, sv) = (safe(dense_verify_s), safe(sparse_verify_s));
+    let measured = if sv > 0.0 { dv / sv } else { 0.0 };
+    let s = if s_agg.is_finite() { s_agg.clamp(0.0, 1.0) } else { 0.0 };
+    let a = if alpha.is_finite() { alpha.clamp(0.0, 1.0) } else { 0.0 };
+    let cc = safe(c);
+    // the theorems divide by cγ + (1 − s): at c = 0, s = 1 they blow up —
+    // sanitize the outputs, not just the inputs
+    let fin = |x: f64| if x.is_finite() { x } else { 0.0 };
+    let thm1 = fin(thm1_speedup_vs_standard(cc, gamma.max(1), s));
+    let thm2 = fin(thm2_speedup_vs_autoregressive(cc, gamma.max(1), s, a));
+    VerifyComparison {
+        measured_speedup: measured,
+        thm1_speedup: thm1,
+        thm2_speedup: thm2,
+        agreement: if measured > 0.0 && thm1 > 0.0 {
+            measured / thm1
+        } else {
+            0.0
+        },
+    }
+}
+
 /// Optimal γ maximizing Theorem 2 for a (possibly measured) aggregated-
 /// sparsity curve; `s_agg(γ)` is supplied as a closure so both analytic and
 /// measured curves plug in (Fig 10a).
@@ -122,6 +174,30 @@ mod tests {
                 random_aggregated_sparsity(s, g + 1) < random_aggregated_sparsity(s, g)
             );
         }
+    }
+
+    #[test]
+    fn verify_comparison_is_nan_proof_and_consistent() {
+        // a clean measurement: dense 2x slower than sparse
+        let v = verify_comparison(2.0e-3, 1.0e-3, 0.05, 4, 0.4, 0.8);
+        assert!((v.measured_speedup - 2.0).abs() < 1e-12);
+        assert!((v.thm1_speedup - thm1_speedup_vs_standard(0.05, 4, 0.4)).abs() < 1e-12);
+        assert!((v.thm2_speedup - thm2_speedup_vs_autoregressive(0.05, 4, 0.4, 0.8)).abs() < 1e-12);
+        assert!((v.agreement - 2.0 / v.thm1_speedup).abs() < 1e-12);
+        // degenerate measurements collapse to 0, never NaN/inf
+        for bad in [
+            verify_comparison(0.0, 0.0, 0.0, 0, f64::NAN, f64::NAN),
+            verify_comparison(f64::NAN, 1.0, 0.02, 4, 0.5, 0.8),
+            verify_comparison(1.0, 0.0, 0.02, 1, 2.0, -1.0),
+        ] {
+            assert!(bad.measured_speedup.is_finite());
+            assert!(bad.thm1_speedup.is_finite());
+            assert!(bad.thm2_speedup.is_finite());
+            assert!(bad.agreement.is_finite());
+        }
+        // out-of-range s_agg/alpha are clamped, not propagated
+        let clamped = verify_comparison(1.0, 1.0, 0.02, 4, 2.0, 1.5);
+        assert!((clamped.thm1_speedup - thm1_speedup_vs_standard(0.02, 4, 1.0)).abs() < 1e-12);
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! - `kv`: KV-cache slot management.
 //! - `sampler`: greedy / temperature / top-k sampling.
 //! - `specdec`: speculative decoding (standard + aggregated-sparsity
-//!   verification; compiled path only, feature `xla`).
+//!   verification) over any pair of `ExecBackend` sides — runs on the host
+//!   backend with no XLA, and on the compiled path via
+//!   `SpecDecoder::with_models`.
 //! - `request` / `metrics`: request lifecycle + observability.
 
 pub mod engine;
@@ -14,15 +16,15 @@ pub mod kv;
 pub mod metrics;
 pub mod request;
 pub mod sampler;
-#[cfg(feature = "xla")]
 pub mod specdec;
 
 pub use engine::{Engine, EngineConfig};
 pub use kv::{KvBatch, SlotManager};
 pub use metrics::{EngineMetrics, SlotSeries};
 pub use request::{Completion, FinishReason, Request, SamplingParams};
-#[cfg(feature = "xla")]
-pub use specdec::{AcceptMode, SpecDecoder, SpecStats, VerifyMask};
+pub use specdec::{AcceptMode, MaskWindow, SpecDecoder, SpecStats, VerifyMask};
 
 pub use crate::predictor::NeuronPolicy;
-pub use crate::runtime::backend::{BatchMask, DecodeOut, ExecBackend, MaskRow, PrefillOut};
+pub use crate::runtime::backend::{
+    BatchMask, DecodeOut, ExecBackend, MaskRow, PrefillOut, VerifyOut,
+};

@@ -1,34 +1,56 @@
 //! Speculative decoding orchestrator (paper §5.2, App. C).
 //!
 //! Draft model M_q proposes γ tokens via sequential B=1 decode; target M_p
-//! verifies them in ONE multi-token `verify` pass over its KV cache.
-//! Acceptance:
+//! verifies them in ONE multi-token [`ExecBackend::verify`] pass over its
+//! KV cache. Acceptance:
 //!   - `Greedy`: accept while the draft token equals the target argmax —
 //!     output provably identical to target-only greedy decoding.
 //!   - `Stochastic`: Leviathan et al. acceptance (min(1, p/q)), residual
 //!     resample on rejection.
 //!
 //! Sparse verification (the paper's contribution): the verify pass carries
-//! a neuron mask from the aggregated-sparsity tracker — only "already
+//! a neuron mask from the aggregated-sparsity window — only "already
 //! loaded" FFN rows participate, trimming verification IO by the window's
-//! aggregated sparsity. Wall-clock on this CPU testbed executes densely
-//! with the mask applied (interpret-mode HLO), so the reported *latency
-//! model* speedups come from measured mask densities + measured dense times
-//! via costmodel::specdec (Thm 1/2); quality effects (acceptance-rate drop)
-//! are measured for real.
+//! aggregated sparsity.
+//!
+//! The decoder is backend-generic: both sides are `Box<dyn ExecBackend>`.
+//! On the host backend (`--backend host`, the CI-tested path) the verify
+//! pass gathers only the mask's live neuron rows through
+//! `sparse::FfnWeights`, so `VerifyMask::Aggregated` buys *measured*
+//! wall-clock (`benches/bench_specdec.rs` gates sparse < dense verify), and
+//! the per-position liveness it reports feeds the window at token
+//! granularity. On the compiled path (`SpecDecoder::with_models`, feature
+//! `xla`) the AOT `verify` entry executes densely with the mask applied
+//! (interpret-mode HLO) and reports one union mask per pass, so the
+//! speedups there remain *modeled* from measured densities + measured dense
+//! times via `costmodel::specdec` (Thm 1/2) — exactly the old behavior;
+//! quality effects (acceptance-rate drop) are measured for real on both.
 
 use std::collections::VecDeque;
-use std::sync::Arc;
 
 use crate::engine::sampler::{argmax, softmax};
 use crate::error::{Error, Result};
-use crate::runtime::{Arg, Entry, Model, ParamStore, Tensor};
+use crate::runtime::backend::{BatchMask, DecodeOut, ExecBackend};
+use crate::runtime::Tensor;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AcceptMode {
     Greedy,
     Stochastic,
+}
+
+impl AcceptMode {
+    /// Parse a CLI spec: `greedy` | `stochastic`.
+    pub fn parse(spec: &str) -> Result<AcceptMode> {
+        match spec {
+            "greedy" => Ok(AcceptMode::Greedy),
+            "stochastic" => Ok(AcceptMode::Stochastic),
+            other => Err(Error::Config(format!(
+                "unknown accept mode `{other}` (expected `greedy` or `stochastic`)"
+            ))),
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,12 +63,221 @@ pub enum VerifyMask {
     Random { window: usize },
 }
 
-/// Per-token live-neuron bitset, per layer.
-#[derive(Clone)]
-struct TokenMask {
-    bits: Vec<u64>, // n_layers * words_per_layer
+impl VerifyMask {
+    /// Ring capacity the decoder sizes its [`MaskWindow`] with: at least
+    /// the mode's own window, so a wide `agg:W` never silently truncates
+    /// to a smaller ring.
+    fn window_cap(&self) -> usize {
+        match *self {
+            VerifyMask::Dense => 256,
+            VerifyMask::Aggregated { window } | VerifyMask::Random { window } => window.max(256),
+        }
+    }
+
+    /// Parse a CLI spec: `dense` | `agg[:W]` | `aggregated[:W]` |
+    /// `random[:W]` (W defaults to 32).
+    pub fn parse(spec: &str) -> Result<VerifyMask> {
+        let (kind, rest) = match spec.split_once(':') {
+            Some((k, r)) => (k, Some(r)),
+            None => (spec, None),
+        };
+        let window = match rest {
+            None => 32,
+            Some(w) => w.parse::<usize>().map_err(|_| {
+                Error::Config(format!("bad verify-mask window `{w}` in `{spec}`"))
+            })?,
+        };
+        if window == 0 {
+            return Err(Error::Config(format!("verify-mask window must be > 0: `{spec}`")));
+        }
+        match kind {
+            "dense" => Ok(VerifyMask::Dense),
+            "agg" | "aggregated" => Ok(VerifyMask::Aggregated { window }),
+            "random" => Ok(VerifyMask::Random { window }),
+            other => Err(Error::Config(format!(
+                "unknown verify mask `{other}` (expected dense|agg[:W]|random[:W])"
+            ))),
+        }
+    }
+
+    /// Whether this mode reads the trailing-mask window (and therefore
+    /// wants the window seeded/fed).
+    pub fn needs_window(&self) -> bool {
+        !matches!(self, VerifyMask::Dense)
+    }
 }
 
+/// Trailing per-token live-neuron window: the aggregated-sparsity state the
+/// sparse verification mask is built from (paper §5.1's "already loaded"
+/// set over the last W processed tokens). Rows are `[L * F]` bitsets packed
+/// into u64 words; the ring keeps at most `cap` rows.
+pub struct MaskWindow {
+    n_layers: usize,
+    d_ff: usize,
+    words_per_layer: usize,
+    cap: usize,
+    recent: VecDeque<Vec<u64>>,
+}
+
+impl MaskWindow {
+    pub fn new(n_layers: usize, d_ff: usize, cap: usize) -> MaskWindow {
+        MaskWindow {
+            n_layers,
+            d_ff,
+            words_per_layer: d_ff.div_ceil(64),
+            cap: cap.max(1),
+            recent: VecDeque::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.recent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.recent.is_empty()
+    }
+
+    fn push_words(&mut self, words: Vec<u64>) {
+        self.recent.push_back(words);
+        while self.recent.len() > self.cap {
+            self.recent.pop_front();
+        }
+    }
+
+    /// The single `[L, F] -> u64 words` packer every push route uses:
+    /// `live(l, f)` says whether layer `l`'s neuron `f` fired.
+    fn pack(&self, live: impl Fn(usize, usize) -> bool) -> Vec<u64> {
+        let mut words = vec![0u64; self.n_layers * self.words_per_layer];
+        for l in 0..self.n_layers {
+            for f in 0..self.d_ff {
+                if live(l, f) {
+                    words[l * self.words_per_layer + f / 64] |= 1 << (f % 64);
+                }
+            }
+        }
+        words
+    }
+
+    /// Record one token's flat `[L * F]` liveness bits.
+    pub fn push_bits(&mut self, bits: &[bool]) -> Result<()> {
+        if bits.len() != self.n_layers * self.d_ff {
+            return Err(Error::Shape {
+                what: "mask window bits".into(),
+                expected: vec![self.n_layers, self.d_ff],
+                got: vec![bits.len()],
+            });
+        }
+        let words = self.pack(|l, f| bits[l * self.d_ff + f]);
+        self.push_words(words);
+        Ok(())
+    }
+
+    /// Record one column of an `[L, B, F]` liveness tensor (a decode step's
+    /// row `col`).
+    pub fn push_col(&mut self, mask: &Tensor, col: usize) -> Result<()> {
+        let d = mask.as_f32()?;
+        if mask.shape.len() != 3 || mask.shape[0] != self.n_layers || mask.shape[2] != self.d_ff {
+            return Err(Error::Shape {
+                what: "mask window column source".into(),
+                expected: vec![self.n_layers, 0, self.d_ff],
+                got: mask.shape.clone(),
+            });
+        }
+        let b = mask.shape[1];
+        if col >= b {
+            return Err(Error::msg(format!("mask column {col} out of batch {b}")));
+        }
+        let words = self.pack(|l, f| d[(l * b + col) * self.d_ff + f] != 0.0);
+        self.push_words(words);
+        Ok(())
+    }
+
+    /// Record the first `upto` positions of an `[L, G, F]` per-position
+    /// liveness tensor as `upto` separate token rows (host prefill/verify
+    /// outputs).
+    pub fn push_positions(&mut self, mask: &Tensor, upto: usize) -> Result<()> {
+        if mask.shape.len() != 3 || mask.shape[0] != self.n_layers || mask.shape[2] != self.d_ff {
+            return Err(Error::Shape {
+                what: "mask window positions source".into(),
+                expected: vec![self.n_layers, 0, self.d_ff],
+                got: mask.shape.clone(),
+            });
+        }
+        let g = mask.shape[1];
+        for col in 0..upto.min(g) {
+            self.push_col(mask, col)?;
+        }
+        Ok(())
+    }
+
+    /// Record one `[L, F]` union mask as a single token row (the compiled
+    /// verify entry reports only the union over its pass).
+    pub fn push_union(&mut self, mask: &Tensor) -> Result<()> {
+        let d = mask.as_f32()?;
+        if mask.shape != vec![self.n_layers, self.d_ff] {
+            return Err(Error::Shape {
+                what: "mask window union source".into(),
+                expected: vec![self.n_layers, self.d_ff],
+                got: mask.shape.clone(),
+            });
+        }
+        let words = self.pack(|l, f| d[l * self.d_ff + f] != 0.0);
+        self.push_words(words);
+        Ok(())
+    }
+
+    /// Flat `[L * F]` OR of the trailing `window` rows (all-false when the
+    /// window is empty).
+    pub fn union_bits(&self, window: usize) -> Vec<bool> {
+        let mut union = vec![0u64; self.n_layers * self.words_per_layer];
+        for row in self.recent.iter().rev().take(window) {
+            for (u, b) in union.iter_mut().zip(row) {
+                *u |= b;
+            }
+        }
+        let mut bits = vec![false; self.n_layers * self.d_ff];
+        for l in 0..self.n_layers {
+            for f in 0..self.d_ff {
+                if union[l * self.words_per_layer + f / 64] >> (f % 64) & 1 == 1 {
+                    bits[l * self.d_ff + f] = true;
+                }
+            }
+        }
+        bits
+    }
+
+    /// Union of the trailing `window` rows as an `[L, F]` mask tensor, plus
+    /// its live density.
+    pub fn union(&self, window: usize) -> (Tensor, f64) {
+        let bits = self.union_bits(window);
+        let mut data = vec![0.0f32; bits.len()];
+        let mut live = 0usize;
+        for (d, &b) in data.iter_mut().zip(&bits) {
+            if b {
+                *d = 1.0;
+                live += 1;
+            }
+        }
+        let density = live as f64 / bits.len().max(1) as f64;
+        (
+            Tensor::f32(vec![self.n_layers, self.d_ff], data).expect("shape"),
+            density,
+        )
+    }
+
+    /// Nonzero fraction of any f32 mask tensor (liveness popcount /
+    /// element count).
+    pub fn density_of(mask: &Tensor) -> Result<f64> {
+        let d = mask.as_f32()?;
+        if d.is_empty() {
+            return Ok(0.0);
+        }
+        Ok(d.iter().filter(|&&x| x != 0.0).count() as f64 / d.len() as f64)
+    }
+}
+
+#[derive(Debug, Clone, Default)]
 pub struct SpecStats {
     pub rounds: usize,
     pub drafted: usize,
@@ -61,6 +292,16 @@ pub struct SpecStats {
     pub s_agg_gamma: f64,
     /// mean per-token sparsity (for the random baseline s^γ)
     pub s_token: f64,
+}
+
+/// NaN/∞-proof [0, 1] clamp for the measured sparsity means (empty windows,
+/// γ=1 degenerate rounds, prompts shorter than the window).
+fn finite01(x: f64) -> f64 {
+    if x.is_finite() {
+        x.clamp(0.0, 1.0)
+    } else {
+        0.0
+    }
 }
 
 impl SpecStats {
@@ -80,77 +321,119 @@ impl SpecStats {
             (self.accepted + self.bonus) as f64 / self.rounds as f64
         }
     }
-}
 
-struct Side {
-    params: ParamStore,
-    decode1: Arc<Entry>,
-    prefill: Arc<Entry>,
-    pos: usize,
-}
+    /// Mean wall-clock of one verification pass (0 at zero rounds) — the
+    /// quantity `bench_specdec` gates sparse-vs-dense on.
+    pub fn verify_secs_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.verify_secs / self.rounds as f64
+        }
+    }
 
-impl Side {
-    fn args<'a>(&'a self) -> Result<Vec<Arg<'a>>> {
-        Ok(self
-            .params
-            .buffers()
-            .ok_or_else(|| Error::Engine("params not uploaded".into()))?
-            .iter()
-            .map(Arg::Device)
-            .collect())
+    /// Mean wall-clock of one draft step (0 at zero drafts).
+    pub fn draft_secs_per_token(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.draft_secs / self.drafted as f64
+        }
     }
 }
 
 pub struct SpecDecoder {
-    pub target_model: Arc<Model>,
-    pub draft_model: Arc<Model>,
-    target: Side,
-    draft: Side,
-    verify: Arc<Entry>,
+    target: Box<dyn ExecBackend>,
+    draft: Box<dyn ExecBackend>,
     target_kv: Tensor,
     draft_kv: Tensor,
+    target_pos: usize,
+    draft_pos: usize,
     pub gamma: usize,
     pub mode: AcceptMode,
     pub mask_mode: VerifyMask,
-    n_layers: usize,
-    d_ff: usize,
-    words_per_layer: usize,
     /// trailing per-token masks for the sparse verification window
-    recent: VecDeque<TokenMask>,
+    window: MaskWindow,
     /// committed tokens the draft KV hasn't seen yet (at most one: the last
     /// draft of a fully-accepted round — the target verified it, the draft
     /// never fed it to itself). Fed at the start of the next round.
     draft_lag: Vec<u32>,
+    seed: u64,
     rng: Rng,
 }
 
+/// One B=1 decode step on a side under a dense mask (kv passed/returned by
+/// value; the caller owns position bookkeeping).
+fn decode_one(side: &dyn ExecBackend, kv: &Tensor, pos: usize, token: u32) -> Result<DecodeOut> {
+    let c = side.config();
+    let pos_t = Tensor::i32(vec![1], vec![pos as i32])?;
+    let tok_t = Tensor::i32(vec![1, 1], vec![token as i32])?;
+    let mask = BatchMask::dense(1, c.n_layers, c.d_ff);
+    side.decode(kv, &pos_t, &tok_t, &mask)
+}
+
+/// Prefill one side on the padded prompt (tail-clamped to its bucket);
+/// returns (greedy first token, kv row, optional [L, T, F] prompt liveness,
+/// real prompt length).
+fn prefill_side(
+    side: &dyn ExecBackend,
+    prompt: &[u32],
+    report_ffn_mask: bool,
+) -> Result<(u32, Tensor, Option<Tensor>, usize)> {
+    let tp = side.prefill_t();
+    let mut prompt = prompt.to_vec();
+    if prompt.is_empty() {
+        prompt.push(crate::tokenizer::BOS);
+    }
+    if prompt.len() > tp {
+        prompt.drain(0..prompt.len() - tp);
+    }
+    let len = prompt.len();
+    let mut padded = vec![0i32; tp];
+    for (i, t) in prompt.iter().enumerate() {
+        padded[i] = *t as i32;
+    }
+    let tok_t = Tensor::i32(vec![1, tp], padded)?;
+    let out = side.prefill(&tok_t, report_ffn_mask)?;
+    let vocab = out.logits.shape[2];
+    let ld = out.logits.as_f32()?;
+    let first = argmax(&ld[(len - 1) * vocab..len * vocab]) as u32;
+    Ok((first, out.kv, out.ffn_mask, len))
+}
+
 impl SpecDecoder {
+    /// Build a decoder over two execution sides. Both must be B=1 backends
+    /// (`decode_b() == 1`) sharing a vocabulary; the target needs a verify
+    /// path wide enough for γ+1 tokens (the pending token plus all γ
+    /// drafts, so the bonus logits exist on full accept).
     pub fn new(
-        target_model: Arc<Model>,
-        mut target_params: ParamStore,
-        draft_model: Arc<Model>,
-        mut draft_params: ParamStore,
+        target: Box<dyn ExecBackend>,
+        draft: Box<dyn ExecBackend>,
         gamma: usize,
         mode: AcceptMode,
         mask_mode: VerifyMask,
         seed: u64,
     ) -> Result<SpecDecoder> {
-        let tc = &target_model.manifest.config;
-        let dc = &draft_model.manifest.config;
+        let tc = target.config();
+        let dc = draft.config();
         if tc.vocab != dc.vocab {
             return Err(Error::Engine(format!(
                 "draft vocab {} != target vocab {}",
                 dc.vocab, tc.vocab
             )));
         }
-        let verify = target_model.entry("verify")?;
-        let g_bucket = verify
-            .spec
-            .inputs
-            .iter()
-            .find(|i| i.name == "tokens")
-            .map(|i| i.shape[1])
-            .ok_or_else(|| Error::Engine("verify entry lacks tokens".into()))?;
+        if target.decode_b() != 1 || draft.decode_b() != 1 {
+            return Err(Error::Engine(format!(
+                "speculative decoding drives B=1 sides (target decode_b {}, \
+                 draft decode_b {})",
+                target.decode_b(),
+                draft.decode_b()
+            )));
+        }
+        if gamma == 0 {
+            return Err(Error::Engine("gamma must be >= 1".into()));
+        }
+        let g_bucket = target.verify_g();
         if gamma + 1 > g_bucket {
             return Err(Error::Engine(format!(
                 "gamma {gamma} exceeds verify bucket {g_bucket} - 1 (the \
@@ -158,179 +441,156 @@ impl SpecDecoder {
                  all gamma drafts, so the bonus logits exist on full accept)"
             )));
         }
-        target_params.upload(target_model.client())?;
-        draft_params.upload(draft_model.client())?;
-        let target = Side {
-            params: target_params,
-            decode1: target_model.entry("decode1")?,
-            prefill: target_model.entry("prefill")?,
-            pos: 0,
-        };
-        let draft = Side {
-            params: draft_params,
-            decode1: draft_model.entry("decode1")?,
-            prefill: draft_model.entry("prefill")?,
-            pos: 0,
-        };
-        let target_kv = Tensor::zeros_f32(target_model.manifest.kv_shape(1));
-        let draft_kv = Tensor::zeros_f32(draft_model.manifest.kv_shape(1));
+        let (n_layers, d_ff) = (tc.n_layers, tc.d_ff);
+        let target_kv = Tensor::zeros_f32(target.kv_shape());
+        let draft_kv = Tensor::zeros_f32(draft.kv_shape());
         Ok(SpecDecoder {
-            n_layers: tc.n_layers,
-            d_ff: tc.d_ff,
-            words_per_layer: tc.d_ff.div_ceil(64),
             target,
             draft,
-            verify,
             target_kv,
             draft_kv,
+            target_pos: 0,
+            draft_pos: 0,
             gamma,
             mode,
             mask_mode,
-            recent: VecDeque::new(),
+            window: MaskWindow::new(n_layers, d_ff, mask_mode.window_cap()),
             draft_lag: Vec::new(),
+            seed,
             rng: Rng::new(seed),
-            target_model,
-            draft_model,
         })
     }
 
-    fn record_mask(&mut self, ffn_mask: &Tensor, col: usize) -> Result<()> {
-        let d = ffn_mask.as_f32()?;
-        let b = ffn_mask.shape[1];
-        let mut bits = vec![0u64; self.n_layers * self.words_per_layer];
-        for l in 0..self.n_layers {
-            let base = (l * b + col) * self.d_ff;
-            for f in 0..self.d_ff {
-                if d[base + f] != 0.0 {
-                    bits[l * self.words_per_layer + f / 64] |= 1 << (f % 64);
-                }
-            }
-        }
-        self.recent.push_back(TokenMask { bits });
-        while self.recent.len() > 256 {
-            self.recent.pop_front();
-        }
-        Ok(())
+    /// Compiled-path constructor (`Engine::with_model`-style): both sides
+    /// run the AOT `decode1`/`prefill` entries on the PJRT client and the
+    /// target verifies through its `verify` entry — the pre-refactor
+    /// behavior, bit-preserved.
+    #[cfg(feature = "xla")]
+    pub fn with_models(
+        target_model: std::sync::Arc<crate::runtime::Model>,
+        target_params: crate::runtime::ParamStore,
+        draft_model: std::sync::Arc<crate::runtime::Model>,
+        draft_params: crate::runtime::ParamStore,
+        gamma: usize,
+        mode: AcceptMode,
+        mask_mode: VerifyMask,
+        seed: u64,
+    ) -> Result<SpecDecoder> {
+        // fail at construction (not round 1) when the target can't verify
+        target_model.entry("verify")?;
+        let target = crate::runtime::XlaBackend::new_b1(target_model, target_params)?;
+        let draft = crate::runtime::XlaBackend::new_b1(draft_model, draft_params)?;
+        SpecDecoder::new(Box::new(target), Box::new(draft), gamma, mode, mask_mode, seed)
     }
 
-    /// Union of the trailing `window` token masks, as an [L, F] tensor; also
-    /// returns its live density.
-    fn window_union(&mut self, window: usize) -> (Tensor, f64) {
-        let mut union = vec![0u64; self.n_layers * self.words_per_layer];
-        for tm in self.recent.iter().rev().take(window) {
-            for (u, b) in union.iter_mut().zip(&tm.bits) {
-                *u |= b;
-            }
-        }
-        let mut data = vec![0.0f32; self.n_layers * self.d_ff];
-        let mut live = 0usize;
-        for l in 0..self.n_layers {
-            for f in 0..self.d_ff {
-                if union[l * self.words_per_layer + f / 64] >> (f % 64) & 1 == 1 {
-                    data[l * self.d_ff + f] = 1.0;
-                    live += 1;
-                }
-            }
-        }
-        let density = live as f64 / (self.n_layers * self.d_ff) as f64;
-        (
-            Tensor::f32(vec![self.n_layers, self.d_ff], data).expect("shape"),
-            density,
-        )
+    /// The target-side backend (metrics/config access).
+    pub fn target(&self) -> &dyn ExecBackend {
+        self.target.as_ref()
+    }
+
+    /// The draft-side backend.
+    pub fn draft(&self) -> &dyn ExecBackend {
+        self.draft.as_ref()
+    }
+
+    /// Reset all decode state so repeated `generate` calls are independent
+    /// and deterministic in `seed`.
+    fn reset(&mut self) {
+        self.target_kv = Tensor::zeros_f32(self.target.kv_shape());
+        self.draft_kv = Tensor::zeros_f32(self.draft.kv_shape());
+        self.target_pos = 0;
+        self.draft_pos = 0;
+        let c = self.target.config();
+        self.window = MaskWindow::new(c.n_layers, c.d_ff, self.mask_mode.window_cap());
+        self.draft_lag.clear();
+        self.rng = Rng::new(self.seed);
     }
 
     fn verify_mask(&mut self) -> (Tensor, f64) {
+        let c = self.target.config();
+        let (n_layers, d_ff) = (c.n_layers, c.d_ff);
         match self.mask_mode {
-            VerifyMask::Dense => (
-                Tensor::ones_f32(vec![self.n_layers, self.d_ff]),
-                1.0,
-            ),
+            VerifyMask::Dense => (Tensor::ones_f32(vec![n_layers, d_ff]), 1.0),
             VerifyMask::Aggregated { window } => {
-                let (t, d) = self.window_union(window);
-                if self.recent.is_empty() {
-                    (Tensor::ones_f32(vec![self.n_layers, self.d_ff]), 1.0)
+                if self.window.is_empty() {
+                    (Tensor::ones_f32(vec![n_layers, d_ff]), 1.0)
                 } else {
-                    (t, d)
+                    self.window.union(window)
                 }
             }
             VerifyMask::Random { window } => {
-                let (_, density) = self.window_union(window);
-                if self.recent.is_empty() {
-                    return (Tensor::ones_f32(vec![self.n_layers, self.d_ff]), 1.0);
+                let (_, density) = self.window.union(window);
+                if self.window.is_empty() {
+                    return (Tensor::ones_f32(vec![n_layers, d_ff]), 1.0);
                 }
-                let k = ((self.n_layers * self.d_ff) as f64 * density).round() as usize;
-                let mut data = vec![0.0f32; self.n_layers * self.d_ff];
-                for idx in self.rng.sample_indices(self.n_layers * self.d_ff, k) {
+                let k = ((n_layers * d_ff) as f64 * density).round() as usize;
+                let mut data = vec![0.0f32; n_layers * d_ff];
+                for idx in self.rng.sample_indices(n_layers * d_ff, k) {
                     data[idx] = 1.0;
                 }
                 (
-                    Tensor::f32(vec![self.n_layers, self.d_ff], data).expect("shape"),
+                    Tensor::f32(vec![n_layers, d_ff], data).expect("shape"),
                     density,
                 )
             }
         }
     }
 
-    /// Prefill both models on the prompt; returns the first committed token
-    /// (target greedy/sampled).
+    /// Prefill both sides on the prompt; returns the first committed token
+    /// (target greedy). The prompt is tail-clamped ONCE to the smaller of
+    /// the two prefill buckets, so both sides commit to the same absolute
+    /// positions even when the buckets differ. On backends that report
+    /// prompt liveness the window is seeded from the prompt's per-position
+    /// masks, so the first sparse verification already has trailing-token
+    /// state (the host path; the compiled prefill entry has no mask
+    /// output).
     fn prefill(&mut self, prompt: &[u32]) -> Result<u32> {
-        let first = {
-            let side = &mut self.target;
-            let (logits, kv) = prefill_side(side, prompt)?;
-            self.target_kv = kv;
-            logits
-        };
-        {
-            let side = &mut self.draft;
-            let (_, kv) = prefill_side(side, prompt)?;
-            self.draft_kv = kv;
+        let tp = self.target.prefill_t().min(self.draft.prefill_t());
+        let mut prompt = prompt.to_vec();
+        if prompt.len() > tp {
+            prompt.drain(0..prompt.len() - tp);
         }
+        let report = self.mask_mode.needs_window();
+        let (first, kv, ffn_mask, len) = prefill_side(self.target.as_ref(), &prompt, report)?;
+        self.target_kv = kv;
+        self.target_pos = len;
+        if let Some(fm) = ffn_mask {
+            self.window.push_positions(&fm, len)?;
+        }
+        let (_, kv, _, dlen) = prefill_side(self.draft.as_ref(), &prompt, false)?;
+        debug_assert_eq!(len, dlen);
+        self.draft_kv = kv;
+        self.draft_pos = dlen;
         Ok(first)
     }
 
     /// Generate `n_tokens` after `prompt`. Returns (tokens, stats).
     pub fn generate(&mut self, prompt: &[u32], n_tokens: usize) -> Result<(Vec<u32>, SpecStats)> {
-        let mut stats = SpecStats {
-            rounds: 0,
-            drafted: 0,
-            accepted: 0,
-            bonus: 0,
-            draft_secs: 0.0,
-            verify_secs: 0.0,
-            target_step_secs: 0.0,
-            c_measured: 0.0,
-            s_agg_gamma: 0.0,
-            s_token: 0.0,
-        };
+        self.reset();
+        let mut stats = SpecStats::default();
         let mut out = Vec::with_capacity(n_tokens + self.gamma + 1);
         let mut next = self.prefill(prompt)?;
         out.push(next);
 
-        // measure target single-step time (for c) with a couple of decode1 calls
+        // measure target single-step time (for c) with a couple of decode
+        // calls; kv/pos changes are discarded (the verify pass re-runs the
+        // token) but the observed masks seed the window
         let mut t_step = 0.0;
         for _ in 0..2 {
             let t0 = std::time::Instant::now();
-            let (_, kv, mask) = decode1_side(
-                &self.target,
-                &self.target_kv,
-                self.target.pos,
-                next,
-                self.n_layers,
-                self.d_ff,
-            )?;
+            let d = decode_one(self.target.as_ref(), &self.target_kv, self.target_pos, next)?;
             t_step += t0.elapsed().as_secs_f64() / 2.0;
-            // discard kv/pos changes (we re-run via verify); but record mask
-            let _ = kv;
-            self.record_mask(&mask, 0)?;
+            self.window.push_col(&d.ffn_mask, 0)?;
         }
         stats.target_step_secs = t_step;
 
         let mut window_sparsities: Vec<f64> = Vec::new();
         let mut token_live: Vec<f64> = Vec::new();
+        let vocab = self.target.config().vocab;
 
         while out.len() < n_tokens {
             stats.rounds += 1;
-            let pos0 = self.target.pos;
+            let pos0 = self.target_pos;
             // ---- draft γ tokens sequentially (greedy draft) ----
             // First replay any committed token the draft KV hasn't seen
             // (the fully-accepted last draft of the previous round), then
@@ -338,22 +598,20 @@ impl SpecDecoder {
             let t0 = std::time::Instant::now();
             let lag: Vec<u32> = self.draft_lag.drain(..).collect();
             for tok in lag {
-                let (_l, kv, _m) =
-                    decode1_side(&self.draft, &self.draft_kv, self.draft.pos, tok, 0, 0)?;
-                self.draft_kv = kv;
-                self.draft.pos += 1;
+                let d = decode_one(self.draft.as_ref(), &self.draft_kv, self.draft_pos, tok)?;
+                self.draft_kv = d.kv;
+                self.draft_pos += 1;
             }
-            debug_assert_eq!(self.draft.pos, pos0);
+            debug_assert_eq!(self.draft_pos, pos0);
             let mut drafts = Vec::with_capacity(self.gamma);
             let mut draft_probs: Vec<Vec<f64>> = Vec::with_capacity(self.gamma);
             let mut feed = next;
-            let mut dpos = self.draft.pos;
+            let mut dpos = self.draft_pos;
             for _ in 0..self.gamma {
-                let (logits, kv, _mask) =
-                    decode1_side(&self.draft, &self.draft_kv, dpos, feed, 0, 0)?;
-                self.draft_kv = kv;
+                let d = decode_one(self.draft.as_ref(), &self.draft_kv, dpos, feed)?;
+                self.draft_kv = d.kv;
                 dpos += 1;
-                let row = logits.as_f32()?;
+                let row = d.logits.as_f32()?;
                 let tok = argmax(row) as u32;
                 if self.mode == AcceptMode::Stochastic {
                     draft_probs.push(softmax(row));
@@ -367,40 +625,34 @@ impl SpecDecoder {
             // ---- verify in one pass: feed [pending, d_1..d_γ] (γ+1 real
             // tokens) so logits row i scores draft i and row γ supplies the
             // bonus token on full acceptance (Leviathan et al.) ----
-            let g_bucket = self
-                .verify
-                .spec
-                .inputs
-                .iter()
-                .find(|i| i.name == "tokens")
-                .unwrap()
-                .shape[1];
-            let mut vtoks = vec![0i32; g_bucket];
-            vtoks[0] = next as i32;
-            for i in 1..=self.gamma {
-                vtoks[i] = drafts[i - 1] as i32;
-            }
             let (mask_t, density) = self.verify_mask();
             window_sparsities.push(1.0 - density);
-            let tok_t = Tensor::i32(vec![1, g_bucket], vtoks)?;
-            let pos_t = Tensor::i32(vec![1], vec![self.target.pos as i32])?;
+            let mut vtoks = Vec::with_capacity(self.gamma + 1);
+            vtoks.push(next as i32);
+            for d in &drafts {
+                vtoks.push(*d as i32);
+            }
+            let tok_t = Tensor::i32(vec![1, self.gamma + 1], vtoks)?;
             let t1 = std::time::Instant::now();
-            let mut args = self.target.args()?;
-            args.push(Arg::Host(&self.target_kv));
-            args.push(Arg::Host(&pos_t));
-            args.push(Arg::Host(&tok_t));
-            args.push(Arg::Host(&mask_t));
-            let outs = self.verify.execute(&args)?;
+            let vout = self.target.verify(&self.target_kv, pos0, &tok_t, &mask_t)?;
             stats.verify_secs += t1.elapsed().as_secs_f64();
-            let (logits, kv_out, ffn_mask) = (&outs[0], &outs[1], &outs[2]);
-            self.target_kv = kv_out.clone();
-            self.record_mask(ffn_mask, 0)?;
-            // per-token live density bookkeeping
-            token_live.push(density_of(ffn_mask)?);
+            self.target_kv = vout.kv;
+            // per-token window feed + live-density bookkeeping: token
+            // granularity where the backend reports it, one union row per
+            // pass on the compiled entry (the pre-refactor xla behavior)
+            match &vout.ffn_mask {
+                Some(per_pos) => {
+                    self.window.push_positions(per_pos, self.gamma + 1)?;
+                    token_live.push(MaskWindow::density_of(per_pos)?);
+                }
+                None => {
+                    self.window.push_union(&vout.union_mask)?;
+                    token_live.push(MaskWindow::density_of(&vout.union_mask)?);
+                }
+            }
 
             // ---- acceptance ----
-            let vocab = self.target_model.manifest.config.vocab;
-            let ld = logits.as_f32()?;
+            let ld = vout.logits.as_f32()?;
             let mut n_accept = 0usize;
             let mut corrected: Option<u32> = None;
             for i in 0..self.gamma {
@@ -451,26 +703,35 @@ impl SpecDecoder {
             // Positions: the target KV now validly covers the committed
             // prefix through pos0 + n_accept (it fed γ+1 tokens; the stale
             // rejected suffix is overwritten before being attended — see
-            // incremental_forward's invariant). The draft KV fed only
+            // the verify contract's KV invariant). The draft KV fed only
             // t0..d_{γ-1}, so on full acceptance it is one committed token
             // (d_γ) behind — queued in draft_lag for the next round.
-            self.target.pos = pos0 + n_accept + 1;
+            self.target_pos = pos0 + n_accept + 1;
             if n_accept == self.gamma {
-                self.draft.pos = pos0 + self.gamma;
+                self.draft_pos = pos0 + self.gamma;
                 self.draft_lag.push(drafts[self.gamma - 1]);
             } else {
-                self.draft.pos = pos0 + n_accept + 1;
+                self.draft_pos = pos0 + n_accept + 1;
             }
             next = new_next;
         }
         out.truncate(n_tokens);
-        stats.c_measured = if stats.target_step_secs > 0.0 {
-            (stats.draft_secs / stats.drafted.max(1) as f64) / stats.target_step_secs
+        stats.c_measured = if stats.drafted > 0 && stats.target_step_secs > 0.0 {
+            let c = stats.draft_secs_per_token() / stats.target_step_secs;
+            if c.is_finite() {
+                c
+            } else {
+                0.0
+            }
         } else {
             0.0
         };
-        stats.s_agg_gamma = mean(&window_sparsities);
-        stats.s_token = 1.0 - mean(&token_live);
+        stats.s_agg_gamma = finite01(mean(&window_sparsities));
+        stats.s_token = if token_live.is_empty() {
+            0.0
+        } else {
+            finite01(1.0 - mean(&token_live))
+        };
         Ok((out, stats))
     }
 }
@@ -483,74 +744,116 @@ fn mean(xs: &[f64]) -> f64 {
     }
 }
 
-fn density_of(mask: &Tensor) -> Result<f64> {
-    let d = mask.as_f32()?;
-    Ok(d.iter().filter(|&&x| x != 0.0).count() as f64 / d.len() as f64)
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-/// Run a prefill on one side; returns (first sampled token, kv).
-fn prefill_side(side: &mut Side, prompt: &[u32]) -> Result<(u32, Tensor)> {
-    let tp = side
-        .prefill
-        .spec
-        .inputs
-        .last()
-        .map(|i| i.shape[1])
-        .ok_or_else(|| Error::Engine("prefill lacks tokens".into()))?;
-    let mut prompt = prompt.to_vec();
-    if prompt.is_empty() {
-        prompt.push(crate::tokenizer::BOS);
+    #[test]
+    fn verify_mask_parse_roundtrip() {
+        assert_eq!(VerifyMask::parse("dense").unwrap(), VerifyMask::Dense);
+        assert_eq!(VerifyMask::parse("agg").unwrap(), VerifyMask::Aggregated { window: 32 });
+        assert_eq!(
+            VerifyMask::parse("aggregated:7").unwrap(),
+            VerifyMask::Aggregated { window: 7 }
+        );
+        assert_eq!(VerifyMask::parse("random:16").unwrap(), VerifyMask::Random { window: 16 });
+        assert!(VerifyMask::parse("agg:0").is_err());
+        assert!(VerifyMask::parse("agg:x").is_err());
+        assert!(VerifyMask::parse("warp").is_err());
+        assert!(!VerifyMask::Dense.needs_window());
+        assert!(VerifyMask::Aggregated { window: 1 }.needs_window());
+        assert!(VerifyMask::Random { window: 1 }.needs_window());
+        assert_eq!(AcceptMode::parse("greedy").unwrap(), AcceptMode::Greedy);
+        assert_eq!(AcceptMode::parse("stochastic").unwrap(), AcceptMode::Stochastic);
+        assert!(AcceptMode::parse("eager").is_err());
     }
-    if prompt.len() > tp {
-        prompt.drain(0..prompt.len() - tp);
-    }
-    let len = prompt.len();
-    let mut padded = vec![0i32; tp];
-    for (i, t) in prompt.iter().enumerate() {
-        padded[i] = *t as i32;
-    }
-    let tok_t = Tensor::i32(vec![1, tp], padded)?;
-    let mut args = side.args()?;
-    args.push(Arg::Host(&tok_t));
-    let outs = side.prefill.execute(&args)?;
-    let vocab = outs[0].shape[2];
-    let ld = outs[0].as_f32()?;
-    let first = argmax(&ld[(len - 1) * vocab..len * vocab]) as u32;
-    side.pos = len;
-    Ok((first, outs[1].clone()))
-}
 
-/// One B=1 decode step on a side (kv passed/returned by value).
-fn decode1_side(
-    side: &Side,
-    kv: &Tensor,
-    pos: usize,
-    token: u32,
-    n_layers_hint: usize,
-    d_ff_hint: usize,
-) -> Result<(Tensor, Tensor, Tensor)> {
-    let _ = (n_layers_hint, d_ff_hint);
-    let (nl, df) = {
-        let m = side
-            .decode1
-            .spec
-            .inputs
-            .iter()
-            .find(|i| i.name == "neuron_mask")
-            .ok_or_else(|| Error::Engine("decode1 lacks neuron_mask".into()))?;
-        (m.shape[0], m.shape[1])
-    };
-    let pos_t = Tensor::i32(vec![1], vec![pos as i32])?;
-    let tok_t = Tensor::i32(vec![1, 1], vec![token as i32])?;
-    let mask_t = Tensor::ones_f32(vec![nl, df]);
-    let mut args = side.args()?;
-    args.push(Arg::Host(kv));
-    args.push(Arg::Host(&pos_t));
-    args.push(Arg::Host(&tok_t));
-    args.push(Arg::Host(&mask_t));
-    let outs = side.decode1.execute(&args)?;
-    // logits [1,1,V] -> flatten; kv; ffn_mask
-    let vocab = outs[0].shape[2];
-    let logits = Tensor::f32(vec![vocab], outs[0].as_f32()?.to_vec())?;
-    Ok((logits, outs[1].clone(), outs[2].clone()))
+    #[test]
+    fn mask_window_unions_trailing_rows() {
+        let mut w = MaskWindow::new(2, 3, 8);
+        assert!(w.is_empty());
+        let (t, d) = w.union(4);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(d, 0.0);
+        w.push_bits(&[true, false, false, false, false, false]).unwrap();
+        w.push_bits(&[false, true, false, false, false, true]).unwrap();
+        w.push_bits(&[false, false, false, false, true, false]).unwrap();
+        assert_eq!(w.len(), 3);
+        // window 1: only the newest row
+        assert_eq!(w.union_bits(1), vec![false, false, false, false, true, false]);
+        // window 2: OR of the last two
+        assert_eq!(w.union_bits(2), vec![false, true, false, false, true, true]);
+        let (t, d) = w.union(2);
+        assert_eq!(t.count_nonzero().unwrap(), 3);
+        assert!((d - 0.5).abs() < 1e-12);
+        // window larger than the ring: everything
+        assert_eq!(w.union_bits(10), vec![true, true, false, false, true, true]);
+        // shape validation
+        assert!(w.push_bits(&[true; 5]).is_err());
+    }
+
+    #[test]
+    fn mask_window_cap_evicts_oldest() {
+        let mut w = MaskWindow::new(1, 2, 2);
+        w.push_bits(&[true, false]).unwrap();
+        w.push_bits(&[false, true]).unwrap();
+        w.push_bits(&[false, true]).unwrap(); // evicts the [true, false] row
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.union_bits(10), vec![false, true]);
+    }
+
+    #[test]
+    fn mask_window_push_col_and_positions_agree() {
+        // an [L=1, G=3, F=2] per-position tensor pushed two ways
+        let t = Tensor::f32(vec![1, 3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+        let mut a = MaskWindow::new(1, 2, 8);
+        a.push_positions(&t, 3).unwrap();
+        let mut b = MaskWindow::new(1, 2, 8);
+        for col in 0..3 {
+            b.push_col(&t, col).unwrap();
+        }
+        assert_eq!(a.len(), 3);
+        for win in 1..=3 {
+            assert_eq!(a.union_bits(win), b.union_bits(win));
+        }
+        // upto clamps to the tensor's G
+        let mut c = MaskWindow::new(1, 2, 8);
+        c.push_positions(&t, 99).unwrap();
+        assert_eq!(c.len(), 3);
+        assert!(a.push_col(&t, 3).is_err());
+        // union push records one row
+        let mut d = MaskWindow::new(1, 2, 8);
+        d.push_union(&Tensor::f32(vec![1, 2], vec![0.0, 2.5]).unwrap()).unwrap();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.union_bits(1), vec![false, true]);
+        assert!(d.push_union(&Tensor::f32(vec![2, 2], vec![0.0; 4]).unwrap()).is_err());
+    }
+
+    #[test]
+    fn density_of_matches_popcount() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0, 1.0, 0.0, 0.5, 0.0, -2.0]).unwrap();
+        assert!((MaskWindow::density_of(&t).unwrap() - 0.5).abs() < 1e-12);
+        let z = Tensor::zeros_f32(vec![4]);
+        assert_eq!(MaskWindow::density_of(&z).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn spec_stats_zero_round_guards() {
+        let s = SpecStats::default();
+        assert_eq!(s.acceptance_rate(), 0.0);
+        assert_eq!(s.tokens_per_round(), 0.0);
+        assert_eq!(s.verify_secs_per_round(), 0.0);
+        assert_eq!(s.draft_secs_per_token(), 0.0);
+        assert_eq!(s.c_measured, 0.0);
+        assert!(s.s_agg_gamma.is_finite() && s.s_token.is_finite());
+    }
+
+    #[test]
+    fn finite01_clamps_nan_and_range() {
+        assert_eq!(finite01(f64::NAN), 0.0);
+        assert_eq!(finite01(f64::INFINITY), 0.0);
+        assert_eq!(finite01(-0.5), 0.0);
+        assert_eq!(finite01(1.5), 1.0);
+        assert_eq!(finite01(0.25), 0.25);
+    }
 }

@@ -25,7 +25,7 @@ use crate::error::{Error, Result};
 use crate::hostexec::math::{attend_one, layer_norm, relu_inplace, rms_norm, rope_inplace};
 use crate::hostexec::weights::HostParams;
 use crate::runtime::artifact::ModelCfg;
-use crate::runtime::backend::{BatchMask, DecodeOut, ExecBackend, PrefillOut};
+use crate::runtime::backend::{BatchMask, DecodeOut, ExecBackend, PrefillOut, VerifyOut};
 use crate::runtime::tensor::Tensor;
 use crate::sparse::rowskip_gemv;
 
@@ -34,6 +34,9 @@ pub struct HostBackend {
     params: HostParams,
     decode_b: usize,
     prefill_t: usize,
+    /// Multi-token verification bucket (speculative decoding); the host
+    /// path has no compiled shape, so this is just a sanity bound.
+    verify_g: usize,
     model_id: String,
     /// Worker threads for the decode step (resolved, >= 1).
     threads: usize,
@@ -100,11 +103,13 @@ impl HostBackend {
         }
         let model_id = format!("{}_{}_{}_s{}", cfg.size, cfg.arch, cfg.act, cfg.stage);
         let all_live: Vec<u32> = (0..cfg.d_ff as u32).collect();
+        let verify_g = 8.min(cfg.max_seq);
         Ok(HostBackend {
             cfg,
             params,
             decode_b,
             prefill_t,
+            verify_g,
             model_id,
             threads: resolve_threads(0),
             all_live,
@@ -141,6 +146,20 @@ impl HostBackend {
     pub fn with_threads(mut self, threads: usize) -> HostBackend {
         self.threads = resolve_threads(threads);
         self
+    }
+
+    /// Set the multi-token verification bucket (default `min(8, max_seq)`).
+    /// Unlike the compiled entry this is not a padded shape — verify runs
+    /// exactly the tokens fed — just the bound `SpecDecoder` sizes γ by.
+    pub fn with_verify_g(mut self, verify_g: usize) -> Result<HostBackend> {
+        if verify_g == 0 || verify_g > self.cfg.max_seq {
+            return Err(Error::Config(format!(
+                "bad verify bucket {verify_g} (max_seq {})",
+                self.cfg.max_seq
+            )));
+        }
+        self.verify_g = verify_g;
+        Ok(self)
     }
 
     /// Resolved decode worker-thread count.
@@ -414,6 +433,90 @@ impl ExecBackend for HostBackend {
             } else {
                 None
             },
+        })
+    }
+
+    fn verify_g(&self) -> usize {
+        self.verify_g
+    }
+
+    /// The sparse verification pass (paper §5.2 on the serving path): run
+    /// the `n` fed tokens sequentially against one sequence's KV with every
+    /// position's FFN gathered over the `[L, F]` mask's live neurons only —
+    /// the aggregated-window union buys measured wall-clock here, exactly
+    /// like the predictor mask does on the decode step. Per-token math is
+    /// identical to a chain of B=1 decode steps (bit-pinned by tests), so a
+    /// mask covering every position's true live set reproduces dense
+    /// verification bit-for-bit.
+    fn verify(&self, kv: &Tensor, pos: usize, tokens: &Tensor, mask: &Tensor) -> Result<VerifyOut> {
+        let c = &self.cfg;
+        let (f, v) = (c.d_ff, c.vocab);
+        let kv_shape = vec![c.n_layers, 2, 1, c.n_heads, c.max_seq, c.head_dim()];
+        if kv.shape != kv_shape {
+            return Err(Error::Shape {
+                what: "host verify kv".into(),
+                expected: kv_shape,
+                got: kv.shape.clone(),
+            });
+        }
+        if tokens.shape.len() != 2 || tokens.shape[0] != 1 {
+            return Err(Error::Shape {
+                what: "host verify tokens".into(),
+                expected: vec![1, self.verify_g],
+                got: tokens.shape.clone(),
+            });
+        }
+        let n = tokens.shape[1];
+        if n == 0 || n > self.verify_g {
+            return Err(Error::Engine(format!(
+                "verify fed {n} tokens, bucket holds 1..={}",
+                self.verify_g
+            )));
+        }
+        if mask.shape != vec![c.n_layers, f] {
+            return Err(Error::Shape {
+                what: "host verify mask".into(),
+                expected: vec![c.n_layers, f],
+                got: mask.shape.clone(),
+            });
+        }
+        let md = mask.as_f32()?;
+        let live_owned: Vec<Vec<u32>> = (0..c.n_layers)
+            .map(|l| crate::sparse::live_indices(&md[l * f..(l + 1) * f]))
+            .collect();
+        let live: Vec<&[u32]> = live_owned.iter().map(|l| l.as_slice()).collect();
+
+        let mut kv_out = kv.as_f32()?.to_vec();
+        let mut logits = vec![0.0f32; n * v];
+        let mut ffn = vec![0.0f32; c.n_layers * n * f];
+        let lane = c.n_heads * c.max_seq * c.head_dim();
+        let mut counts = vec![[0u64; 3]; c.n_layers];
+        {
+            let mut bufs = RowBufs {
+                kv: kv_out.chunks_mut(lane).collect(),
+                logits: &mut logits,
+                ffn: Some(ffn.chunks_mut(n * f).collect()),
+            };
+            self.run_seq(&mut bufs, tokens.as_i32()?, pos, &live, &mut counts)?;
+        }
+        // union over the n fed positions, per layer
+        let mut union = vec![0.0f32; c.n_layers * f];
+        for l in 0..c.n_layers {
+            for g in 0..n {
+                let row = &ffn[(l * n + g) * f..(l * n + g + 1) * f];
+                let u = &mut union[l * f..(l + 1) * f];
+                for (ui, &ri) in u.iter_mut().zip(row) {
+                    if ri != 0.0 {
+                        *ui = 1.0;
+                    }
+                }
+            }
+        }
+        Ok(VerifyOut {
+            logits: Tensor::f32(vec![1, n, v], logits)?,
+            kv: Tensor::f32(kv.shape.clone(), kv_out)?,
+            ffn_mask: Some(Tensor::f32(vec![c.n_layers, n, f], ffn)?),
+            union_mask: Tensor::f32(vec![c.n_layers, f], union)?,
         })
     }
 
@@ -780,6 +883,140 @@ mod tests {
         let pos = Tensor::i32(vec![3], vec![0, 0, 0]).unwrap();
         let dt = Tensor::i32(vec![3, 1], vec![4, 10_000, 2]).unwrap();
         assert!(be.decode(&kv, &pos, &dt, &dense_mask(&be)).is_err());
+    }
+
+    /// The verify pass is the same sequential per-token math as a chain of
+    /// B=1 decode steps: logits rows, per-position liveness and the final
+    /// KV must all be bit-identical.
+    #[test]
+    fn verify_is_bit_identical_to_decode_chain() {
+        for arch in ["opt", "llama", "falcon"] {
+            let be = HostBackend::random(tiny_cfg(arch), 11, 1, 6).unwrap();
+            let c = be.config().clone();
+            let (f, v) = (c.d_ff, c.vocab);
+            let pre = be
+                .prefill(&Tensor::i32(vec![1, 6], vec![1, 2, 3, 4, 5, 6]).unwrap(), false)
+                .unwrap();
+            let toks = [7i32, 8, 9];
+            let ver = be
+                .verify(
+                    &pre.kv,
+                    6,
+                    &Tensor::i32(vec![1, 3], toks.to_vec()).unwrap(),
+                    &Tensor::ones_f32(vec![c.n_layers, f]),
+                )
+                .unwrap();
+            assert_eq!(ver.logits.shape, vec![1, 3, v], "{arch}");
+            let vl = ver.logits.as_f32().unwrap();
+            let pm = ver.ffn_mask.as_ref().expect("host verify reports per-position masks");
+            assert_eq!(pm.shape, vec![c.n_layers, 3, f], "{arch}");
+            let pmd = pm.as_f32().unwrap();
+            let mask = BatchMask::dense(1, c.n_layers, f);
+            let mut kv = pre.kv.clone();
+            for (g, &t) in toks.iter().enumerate() {
+                let out = be
+                    .decode(
+                        &kv,
+                        &Tensor::i32(vec![1], vec![6 + g as i32]).unwrap(),
+                        &Tensor::i32(vec![1, 1], vec![t]).unwrap(),
+                        &mask,
+                    )
+                    .unwrap();
+                kv = out.kv;
+                assert_eq!(
+                    out.logits.as_f32().unwrap(),
+                    &vl[g * v..(g + 1) * v],
+                    "{arch}: verify row {g} diverged from the decode chain"
+                );
+                // decode's [L, 1, F] row vs verify's [L, G, F] column g
+                let dm = out.ffn_mask.as_f32().unwrap();
+                for l in 0..c.n_layers {
+                    assert_eq!(
+                        &dm[l * f..(l + 1) * f],
+                        &pmd[(l * 3 + g) * f..(l * 3 + g + 1) * f],
+                        "{arch}: liveness row {g} layer {l}"
+                    );
+                }
+            }
+            assert_eq!(
+                kv.as_f32().unwrap(),
+                ver.kv.as_f32().unwrap(),
+                "{arch}: verify KV differs from the decode chain"
+            );
+            // union output is the OR of the per-position rows
+            let um = ver.union_mask.as_f32().unwrap();
+            for l in 0..c.n_layers {
+                for j in 0..f {
+                    let any = (0..3).any(|g| pmd[(l * 3 + g) * f + j] != 0.0);
+                    assert_eq!(um[l * f + j] != 0.0, any, "{arch}: union bit {l}/{j}");
+                }
+            }
+        }
+    }
+
+    /// A verify mask covering every fed position's live set reproduces the
+    /// dense verification bit-for-bit — the guarantee sparse speculative
+    /// decoding's quality argument rests on.
+    #[test]
+    fn verify_live_superset_is_bit_identical_to_dense() {
+        for arch in ["opt", "llama", "falcon"] {
+            let be = HostBackend::random(tiny_cfg(arch), 13, 1, 6).unwrap();
+            let c = be.config().clone();
+            let f = c.d_ff;
+            let pre = be
+                .prefill(&Tensor::i32(vec![1, 6], vec![3, 1, 4, 1, 5, 9]).unwrap(), false)
+                .unwrap();
+            let toks = Tensor::i32(vec![1, 4], vec![2, 7, 1, 8]).unwrap();
+            let dense = be
+                .verify(&pre.kv, 6, &toks, &Tensor::ones_f32(vec![c.n_layers, f]))
+                .unwrap();
+            let sparse = be.verify(&pre.kv, 6, &toks, &dense.union_mask).unwrap();
+            assert_eq!(
+                dense.logits.as_f32().unwrap(),
+                sparse.logits.as_f32().unwrap(),
+                "{arch}: union-of-live mask must be bit-identical to dense"
+            );
+            assert_eq!(
+                dense.kv.as_f32().unwrap(),
+                sparse.kv.as_f32().unwrap(),
+                "{arch}: kv must agree too"
+            );
+            assert_eq!(dense.union_mask.as_f32().unwrap(), sparse.union_mask.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn verify_rejects_bad_inputs() {
+        let be = HostBackend::random(tiny_cfg("opt"), 11, 1, 6).unwrap();
+        let c = be.config().clone();
+        assert_eq!(be.verify_g(), 8.min(c.max_seq));
+        let kv = Tensor::zeros_f32(be.kv_shape());
+        let ones = Tensor::ones_f32(vec![c.n_layers, c.d_ff]);
+        let toks = |n: usize| Tensor::i32(vec![1, n], vec![1; n]).unwrap();
+        // more tokens than the bucket
+        assert!(be.verify(&kv, 0, &toks(9), &ones).is_err());
+        // bad kv / mask geometry
+        let kv2 = Tensor::zeros_f32(vec![c.n_layers, 2, 2, c.n_heads, c.max_seq, c.head_dim()]);
+        assert!(be.verify(&kv2, 0, &toks(2), &ones).is_err());
+        let bad_mask = Tensor::ones_f32(vec![c.n_layers + 1, c.d_ff]);
+        assert!(be.verify(&kv, 0, &toks(2), &bad_mask).is_err());
+        // past the cache
+        assert!(be.verify(&kv, c.max_seq - 1, &toks(2), &ones).is_err());
+        // bucket knob validation
+        assert!(HostBackend::random(tiny_cfg("opt"), 11, 1, 6)
+            .unwrap()
+            .with_verify_g(0)
+            .is_err());
+        assert!(HostBackend::random(tiny_cfg("opt"), 11, 1, 6)
+            .unwrap()
+            .with_verify_g(c.max_seq + 1)
+            .is_err());
+        let wide = HostBackend::random(tiny_cfg("opt"), 11, 1, 6)
+            .unwrap()
+            .with_verify_g(12)
+            .unwrap();
+        assert_eq!(wide.verify_g(), 12);
+        assert!(wide.verify(&kv, 0, &toks(12), &ones).is_ok());
     }
 
     #[test]

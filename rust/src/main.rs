@@ -7,15 +7,21 @@
 //!   eval      --model <id> [--ckpt <path>] zero-shot task suite + ppl [xla]
 //!   generate  --model <id> --prompt "..."  sample text
 //!   serve     --model <id> --addr 127.0.0.1:7077   JSON-lines TCP server
-//!   specdec   --target <id> --draft <id>   speculative decoding demo [xla]
+//!   specdec   --target <id> --draft <id>   speculative decoding demo
 //!
-//! `generate` and `serve` take `--backend host|xla`: `xla` (default when
-//! compiled with the `xla` feature) executes the AOT artifacts on PJRT;
-//! `host` runs the pure-Rust `hostexec` backend — same engine, no PJRT, and
-//! the predictor's neuron mask skips FFN weight rows for real. The host
-//! backend reads the model geometry from the artifact manifest and the
-//! weights from `--ckpt` (or the shared checkpoint; `--random-init` serves
-//! deterministic random weights for demos).
+//! `generate`, `serve` and `specdec` take `--backend host|xla`: `xla`
+//! (default when compiled with the `xla` feature) executes the AOT
+//! artifacts on PJRT; `host` runs the pure-Rust `hostexec` backend — same
+//! engine, no PJRT, and the predictor's neuron mask skips FFN weight rows
+//! for real. The host backend reads the model geometry from the artifact
+//! manifest and the weights from `--ckpt` (or the shared checkpoint;
+//! `--random-init` serves deterministic random weights for demos).
+//!
+//! `specdec` extras: `--gamma <n>`, `--verify-mask dense|agg[:W]|random[:W]`
+//! (`--sparse` is the legacy alias for `agg:32`), `--accept
+//! greedy|stochastic`; on the host backend the sparse verify pass gathers
+//! only the aggregated window's live FFN rows, so the reported sparse
+//! speedup is measured wall-clock next to the Thm 1/2 projections.
 //!
 //! Common options: --artifacts <dir> (default ./artifacts), --steps, --lr,
 //! --seed, --ckpt. `generate` and `serve` take the hot-neuron predictor
@@ -60,7 +66,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "eval" => compiled::eval(args),
         "generate" => generate(args),
         "serve" => serve(args),
-        "specdec" => compiled::specdec(args),
+        "specdec" => specdec(args),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -70,7 +76,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 
 const HELP: &str = "rsb — ReLU Strikes Back reproduction (see README.md)
 usage: rsb <info|train|finetune|eval|generate|serve|specdec> [--options]
-       generate/serve take --backend host|xla (host = no PJRT needed)";
+       generate/serve/specdec take --backend host|xla (host = no PJRT)
+       specdec: --gamma N --verify-mask dense|agg[:W]|random[:W] --accept greedy|stochastic";
 
 /// Engine config from the predictor CLI knobs (defaults = dense serving).
 fn engine_config(args: &Args) -> Result<EngineConfig> {
@@ -199,6 +206,143 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One side of a host speculative-decoding pair: geometry from the artifact
+/// manifest (B=1, verify bucket from `buckets.verify_g`), weights from the
+/// side's own `--target-ckpt`/`--draft-ckpt` (or the shared checkpoint, or
+/// `--random-init`).
+fn host_specdec_side(
+    args: &Args,
+    id_key: &str,
+    ckpt_key: &str,
+    default_id: &str,
+    seed_offset: u64,
+) -> Result<rsb::hostexec::HostBackend> {
+    let artifacts = artifacts_dir(args.get("artifacts"));
+    let id = args.str_or(id_key, default_id);
+    let manifest = Manifest::load(&artifacts.join(&id))?;
+    let cfg = manifest.config.clone();
+    let prefill_t = manifest.buckets.prefill_t;
+    let verify_g = manifest.buckets.verify_g;
+    let backend = if args.has("random-init") {
+        HostBackend::random(
+            cfg,
+            args.usize_or("seed", 0)? as u64 + seed_offset,
+            1,
+            prefill_t,
+        )?
+    } else {
+        let shared = rsb::figures::shared_checkpoint(&id, "latest");
+        let path = match args.get(ckpt_key) {
+            Some(p) => std::path::PathBuf::from(p),
+            None if shared.exists() => shared,
+            None => {
+                return Err(Error::Config(format!(
+                    "host specdec needs weights for `{id}`: pass \
+                     --{ckpt_key} <path> (or --random-init); no shared \
+                     checkpoint at {}",
+                    shared.display()
+                )))
+            }
+        };
+        HostBackend::from_checkpoint(cfg, &path, 1, prefill_t)?
+    };
+    backend.with_verify_g(verify_g)
+}
+
+/// Speculative decoding on either backend: draft proposes γ tokens, the
+/// target verifies them in one (optionally sparse) pass.
+fn specdec(args: &Args) -> Result<()> {
+    use rsb::costmodel::specdec::verify_comparison;
+    use rsb::engine::{AcceptMode, SpecDecoder, VerifyMask};
+
+    let gamma = args.usize_or("gamma", 4)?;
+    let mode = AcceptMode::parse(&args.str_or("accept", "greedy"))?;
+    let mask = if let Some(spec) = args.get("verify-mask") {
+        VerifyMask::parse(spec)?
+    } else if args.has("sparse") {
+        VerifyMask::Aggregated { window: 32 }
+    } else {
+        VerifyMask::Dense
+    };
+    let seed = args.usize_or("seed", 0)? as u64;
+    let mut dec = match args.str_or("backend", default_backend()).as_str() {
+        "host" => {
+            let target = host_specdec_side(args, "target", "target-ckpt", "base_opt_relu_s0", 0)?;
+            let draft = host_specdec_side(args, "draft", "draft-ckpt", "draft_opt_relu_s0", 1)?;
+            println!(
+                "[host] specdec target {} | draft {} | gamma {gamma} | {mask:?}",
+                target.model_id(),
+                draft.model_id()
+            );
+            SpecDecoder::new(Box::new(target), Box::new(draft), gamma, mode, mask, seed)?
+        }
+        "xla" => compiled::specdec_decoder(args, gamma, mode, mask, seed)?,
+        other => {
+            return Err(Error::Config(format!(
+                "unknown backend `{other}` (expected `host` or `xla`)"
+            )))
+        }
+    };
+    let vocab = dec.target().config().vocab;
+    let (_ds, bpe) = ensure_data(vocab, 2_000_000, 42)?;
+    let prompt = bpe.encode(&args.str_or("prompt", "ada lives in"));
+    let n = args.usize_or("max-tokens", 24)?;
+    let (tokens, stats) = dec.generate(&prompt, n)?;
+    println!("output: {}", bpe.decode(&tokens));
+    println!(
+        "rounds {} | drafted {} accepted {} (alpha≈{:.2}) | tokens/round {:.2} | \
+         c measured {:.3} | s_agg(gamma) {:.2} | verify {:.3}ms/round",
+        stats.rounds,
+        stats.drafted,
+        stats.accepted,
+        stats.acceptance_rate(),
+        stats.tokens_per_round(),
+        stats.c_measured,
+        stats.s_agg_gamma,
+        stats.verify_secs_per_round() * 1e3,
+    );
+    if mask != VerifyMask::Dense {
+        if dec.target().kind() == "host" {
+            // measured-vs-modeled: rerun densely so the sparse verify
+            // wall-clock has a baseline (host: both are real gathers)
+            let sparse_verify = stats.verify_secs_per_round();
+            let mut dense = dec;
+            dense.mask_mode = VerifyMask::Dense;
+            let (_t, dstats) = dense.generate(&prompt, n)?;
+            let cmp = verify_comparison(
+                dstats.verify_secs_per_round(),
+                sparse_verify,
+                stats.c_measured,
+                gamma,
+                stats.s_agg_gamma,
+                stats.acceptance_rate(),
+            );
+            println!(
+                "sparse verify vs dense: measured {:.2}x | Thm1 {:.2}x (agreement {:.2}) | \
+                 Thm2 vs autoregressive {:.2}x",
+                cmp.measured_speedup, cmp.thm1_speedup, cmp.agreement, cmp.thm2_speedup,
+            );
+        } else {
+            // the compiled verify entry executes densely under the mask
+            // (interpret-mode HLO): speedups there are modeled, not timed
+            let cmp = verify_comparison(
+                0.0,
+                0.0,
+                stats.c_measured,
+                gamma,
+                stats.s_agg_gamma,
+                stats.acceptance_rate(),
+            );
+            println!(
+                "sparse verify (modeled — compiled path runs the mask densely): \
+                 Thm1 {:.2}x | Thm2 vs autoregressive {:.2}x",
+                cmp.thm1_speedup, cmp.thm2_speedup,
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Compiled-path subcommands (PJRT). Stubs that explain themselves when the
 /// binary was built `--no-default-features`.
 #[cfg(feature = "xla")]
@@ -304,7 +448,13 @@ mod compiled {
         Ok(())
     }
 
-    pub fn specdec(args: &Args) -> Result<()> {
+    pub fn specdec_decoder(
+        args: &Args,
+        gamma: usize,
+        mode: AcceptMode,
+        mask: VerifyMask,
+        seed: u64,
+    ) -> Result<SpecDecoder> {
         let artifacts = artifacts_dir(args.get("artifacts"));
         let client = cpu_client()?;
         let target = Arc::new(Model::open(
@@ -317,33 +467,9 @@ mod compiled {
             &artifacts,
             &args.str_or("draft", "draft_opt_relu_s0"),
         )?);
-        let (_ds, bpe) = data_for(&target)?;
         let tp = load_params_named(&target, args, "target-ckpt")?;
         let dp = load_params_named(&draft, args, "draft-ckpt")?;
-        let gamma = args.usize_or("gamma", 4)?;
-        let mask = if args.has("sparse") {
-            VerifyMask::Aggregated { window: 32 }
-        } else {
-            VerifyMask::Dense
-        };
-        let mut dec =
-            SpecDecoder::new(target, tp, draft, dp, gamma, AcceptMode::Greedy, mask, 0)?;
-        let prompt = bpe.encode(&args.str_or("prompt", "ada lives in"));
-        let n = args.usize_or("max-tokens", 24)?;
-        let (tokens, stats) = dec.generate(&prompt, n)?;
-        println!("output: {}", bpe.decode(&tokens));
-        println!(
-            "rounds {} | drafted {} accepted {} (alpha≈{:.2}) | tokens/round {:.2} | \
-             c measured {:.3} | s_agg(gamma) {:.2}",
-            stats.rounds,
-            stats.drafted,
-            stats.accepted,
-            stats.acceptance_rate(),
-            stats.tokens_per_round(),
-            stats.c_measured,
-            stats.s_agg_gamma,
-        );
-        Ok(())
+        SpecDecoder::with_models(target, tp, draft, dp, gamma, mode, mask, seed)
     }
 
     fn load_params_named(
@@ -392,7 +518,13 @@ mod compiled {
         Err(unavailable("eval"))
     }
 
-    pub fn specdec(_args: &Args) -> Result<()> {
-        Err(unavailable("specdec"))
+    pub fn specdec_decoder(
+        _args: &Args,
+        _gamma: usize,
+        _mode: rsb::engine::AcceptMode,
+        _mask: rsb::engine::VerifyMask,
+        _seed: u64,
+    ) -> Result<rsb::engine::SpecDecoder> {
+        Err(unavailable("specdec --backend xla"))
     }
 }

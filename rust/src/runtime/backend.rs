@@ -231,6 +231,24 @@ pub struct DecodeOut {
     pub sparsity: Tensor,
 }
 
+/// One multi-token verification pass's outputs (speculative decoding: γ+1
+/// tokens scored against a single sequence's KV in one call).
+pub struct VerifyOut {
+    /// f32 [1, G, V] — one logits row per fed token (G = tokens fed, not
+    /// the backend's padding bucket)
+    pub logits: Tensor,
+    /// f32 [L, 2, 1, H, Tmax, hd]
+    pub kv: Tensor,
+    /// f32 [L, G, F] — per-position post-gate FFN liveness, on backends
+    /// that can report it (the host path; mirrors `PrefillOut::ffn_mask`).
+    /// `None` on the compiled path, whose verify entry reports only the
+    /// union over G.
+    pub ffn_mask: Option<Tensor>,
+    /// f32 [L, F] — union of live FFN activations over the G fed positions
+    /// (what the aggregated-sparsity window tracks on every backend).
+    pub union_mask: Tensor,
+}
+
 /// Per-step model execution behind the serving engine.
 pub trait ExecBackend {
     /// Short backend name for logs/metrics ("host" / "xla").
@@ -273,6 +291,35 @@ pub trait ExecBackend {
         mask: &BatchMask,
     ) -> Result<DecodeOut>;
 
+    /// Multi-token verification bucket: the most tokens one [`verify`] call
+    /// accepts (`SpecDecoder` feeds γ+1, so γ is bounded by `verify_g - 1`).
+    /// 0 means the backend has no verification path.
+    ///
+    /// [`verify`]: ExecBackend::verify
+    fn verify_g(&self) -> usize {
+        0
+    }
+
+    /// Score `tokens` (i32 `[1, n]`, `1 <= n <= verify_g()`) against one
+    /// sequence's KV (`[L, 2, 1, H, Tmax, hd]`) starting at absolute
+    /// position `pos`, under a single shared `[L, F]` neuron mask — the
+    /// speculative-decoding verification pass (paper §5.2): every fed
+    /// position's FFN runs only over the mask's live neurons, which is
+    /// where `VerifyMask::Aggregated` trims verification IO.
+    ///
+    /// KV invariant (same as the AOT verify entry): positions `pos..pos+n`
+    /// are written before being attended, so stale garbage beyond `pos` is
+    /// never read; the caller re-synchronizes `pos` after acceptance and
+    /// overwrites any rejected suffix on the next call.
+    fn verify(&self, kv: &Tensor, pos: usize, tokens: &Tensor, mask: &Tensor) -> Result<VerifyOut> {
+        let _ = (kv, pos, tokens, mask);
+        Err(Error::Engine(format!(
+            "the `{}` backend has no verify path (speculative decoding \
+             needs a backend with verify_g() > 0)",
+            self.kind()
+        )))
+    }
+
     /// KV cache shape for the decode batch: [L, 2, B, H, Tmax, hd].
     fn kv_shape(&self) -> Vec<usize> {
         let c = self.config();
@@ -303,12 +350,37 @@ pub struct XlaBackend {
 impl XlaBackend {
     pub fn new(
         model: std::sync::Arc<crate::runtime::Model>,
+        params: crate::runtime::ParamStore,
+    ) -> Result<XlaBackend> {
+        // prefer the batched decode entry; fall back to B=1
+        XlaBackend::with_entries(model, params, &["decode", "decode1"])
+    }
+
+    /// The B=1 variant `SpecDecoder` sides use: single-sequence `decode1`
+    /// stepping (drafting / step-time measurement), `verify` compiled on
+    /// demand. Engine behavior through [`XlaBackend::new`] is untouched.
+    pub fn new_b1(
+        model: std::sync::Arc<crate::runtime::Model>,
+        params: crate::runtime::ParamStore,
+    ) -> Result<XlaBackend> {
+        XlaBackend::with_entries(model, params, &["decode1"])
+    }
+
+    fn with_entries(
+        model: std::sync::Arc<crate::runtime::Model>,
         mut params: crate::runtime::ParamStore,
+        decode_names: &[&str],
     ) -> Result<XlaBackend> {
         params.upload(model.client())?;
         let prefill = model.entry("prefill")?;
-        // prefer the batched decode entry; fall back to B=1
-        let decode = model.entry("decode").or_else(|_| model.entry("decode1"))?;
+        let mut decode = Err(Error::Engine("no decode entry names given".into()));
+        for name in decode_names {
+            decode = model.entry(name);
+            if decode.is_ok() {
+                break;
+            }
+        }
+        let decode = decode?;
         let kv_spec = decode
             .spec
             .inputs
@@ -416,6 +488,72 @@ impl ExecBackend for XlaBackend {
             kv,
             ffn_mask,
             sparsity,
+        })
+    }
+
+    fn verify_g(&self) -> usize {
+        // bucket from the manifest spec; 0 when the model has no verify
+        // entry (e.g. a draft-only artifact)
+        self.model
+            .manifest
+            .entry("verify")
+            .ok()
+            .and_then(|e| e.inputs.iter().find(|i| i.name == "tokens"))
+            .map(|i| i.shape[1])
+            .unwrap_or(0)
+    }
+
+    fn verify(&self, kv: &Tensor, pos: usize, tokens: &Tensor, mask: &Tensor) -> Result<VerifyOut> {
+        use crate::runtime::Arg;
+        let verify = self.model.entry("verify")?;
+        let g_bucket = self.verify_g();
+        if tokens.shape.len() != 2 || tokens.shape[0] != 1 {
+            return Err(Error::Shape {
+                what: "verify tokens".into(),
+                expected: vec![1, g_bucket],
+                got: tokens.shape.clone(),
+            });
+        }
+        let n = tokens.shape[1];
+        if n == 0 || n > g_bucket {
+            return Err(Error::Engine(format!(
+                "verify fed {n} tokens, bucket holds 1..={g_bucket}"
+            )));
+        }
+        // pad to the compiled bucket; rows beyond n are never read and the
+        // padded positions' KV writes are overwritten before being attended
+        let mut padded = vec![0i32; g_bucket];
+        padded[..n].copy_from_slice(tokens.as_i32()?);
+        let tok_t = Tensor::i32(vec![1, g_bucket], padded)?;
+        let pos_t = Tensor::i32(vec![1], vec![pos as i32])?;
+        let mut args = self.param_args()?;
+        args.push(Arg::Host(kv));
+        args.push(Arg::Host(&pos_t));
+        args.push(Arg::Host(&tok_t));
+        args.push(Arg::Host(mask));
+        let mut outs = verify.execute(&args)?;
+        if outs.len() < 4 {
+            return Err(Error::Engine(format!(
+                "verify entry returned {} outputs, expected 4",
+                outs.len()
+            )));
+        }
+        let union = outs.remove(2); // [L, 1, F]
+        let kv_out = outs.remove(1);
+        let full_logits = outs.remove(0); // [1, g_bucket, V]
+        let vocab = full_logits.shape[2];
+        let logits = Tensor::f32(
+            vec![1, n, vocab],
+            full_logits.as_f32()?[..n * vocab].to_vec(),
+        )?;
+        let c = self.config();
+        let union_mask = Tensor::f32(vec![c.n_layers, c.d_ff], union.as_f32()?.to_vec())?;
+        Ok(VerifyOut {
+            logits,
+            kv: kv_out,
+            // the compiled entry reports only the union over G
+            ffn_mask: None,
+            union_mask,
         })
     }
 }

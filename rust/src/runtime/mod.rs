@@ -28,7 +28,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 pub use artifact::{Buckets, EntrySpec, IoSpec, Manifest, ModelCfg, ParamSpec};
-pub use backend::{BatchMask, DecodeOut, ExecBackend, MaskRow, PrefillOut};
+pub use backend::{BatchMask, DecodeOut, ExecBackend, MaskRow, PrefillOut, VerifyOut};
 #[cfg(feature = "xla")]
 pub use backend::XlaBackend;
 #[cfg(feature = "xla")]

@@ -207,7 +207,7 @@ fn specdec_self_draft_matches_greedy() {
     // speculative with the same model as its own draft
     let tp = model.init_params(5).unwrap();
     let dp = model.init_params(5).unwrap();
-    let mut dec = SpecDecoder::new(
+    let mut dec = SpecDecoder::with_models(
         model.clone(),
         tp,
         model.clone(),
@@ -235,7 +235,7 @@ fn specdec_sparse_mask_preserves_selfdraft_structure() {
     let model = tiny();
     let tp = model.init_params(5).unwrap();
     let dp = model.init_params(5).unwrap();
-    let mut dec = SpecDecoder::new(
+    let mut dec = SpecDecoder::with_models(
         model.clone(),
         tp,
         model,

@@ -651,6 +651,124 @@ fn prop_batch_mask_union_dominates_rows() {
     });
 }
 
+/// ISSUE 5 satellite: `MaskWindow::union_bits` equals the naive OR of the
+/// trailing `window` recorded token masks, for arbitrary window sizes, γ
+/// and ring occupancy — and its reported density is the popcount.
+#[test]
+fn prop_mask_window_union_is_or_of_trailing_masks() {
+    use rsb::engine::MaskWindow;
+    check("mask_window_union", 40, |rng| {
+        let l = rng.range(1, 4);
+        let f = rng.range(1, 80); // odd widths exercise the u64 packing tail
+        let cap = rng.range(1, 12);
+        let mut w = MaskWindow::new(l, f, cap);
+        let mut history: Vec<Vec<bool>> = Vec::new();
+        for _ in 0..30 {
+            let bits: Vec<bool> = (0..l * f).map(|_| rng.chance(0.3)).collect();
+            w.push_bits(&bits).unwrap();
+            history.push(bits);
+            assert_eq!(w.len(), history.len().min(cap));
+            let window = rng.range(1, 2 * cap + 2);
+            // naive OR over the trailing min(window, cap) in-ring masks
+            let mut want = vec![false; l * f];
+            for recent in history.iter().rev().take(cap).take(window) {
+                for (o, &b) in want.iter_mut().zip(recent) {
+                    *o |= b;
+                }
+            }
+            assert_eq!(w.union_bits(window), want, "window {window}");
+            let (t, density) = w.union(window);
+            let live = want.iter().filter(|&&b| b).count();
+            assert!((density - live as f64 / (l * f) as f64).abs() < 1e-12);
+            assert_eq!(t.count_nonzero().unwrap(), live);
+            // density_of is the popcount fraction of any mask tensor
+            assert!((MaskWindow::density_of(&t).unwrap() - density).abs() < 1e-12);
+        }
+    });
+}
+
+/// ISSUE 5 satellite: the host verify pass over ANY mask that is a
+/// superset of every fed position's true liveness is bitwise-equal to
+/// dense verification — logits, KV and the union mask — while dropping a
+/// live neuron from the mask changes the logits.
+#[test]
+fn prop_host_verify_superset_bitwise_equals_dense() {
+    use rsb::hostexec::HostBackend;
+    use rsb::runtime::artifact::ModelCfg;
+    check("host_verify_superset", 10, |rng| {
+        let n_layers = rng.range(1, 3);
+        let cfg = ModelCfg {
+            size: "p".into(),
+            arch: "opt".into(),
+            act: "relu".into(),
+            stage: 0,
+            d_model: 8,
+            n_layers,
+            n_heads: 2,
+            d_ff: rng.range(8, 24),
+            vocab: 16,
+            max_seq: 16,
+            shift: 1.0,
+            ffn_act: "relu".into(),
+            gated: false,
+            parallel_block: false,
+            has_bias: true,
+        };
+        let (l, f, v) = (cfg.n_layers, cfg.d_ff, cfg.vocab);
+        let be = HostBackend::random(cfg, rng.next_u64(), 1, 4).unwrap();
+        let prompt: Vec<i32> = (0..4).map(|_| rng.below(v) as i32).collect();
+        let pre = be
+            .prefill(&Tensor::i32(vec![1, 4], prompt).unwrap(), false)
+            .unwrap();
+        let g = rng.range(1, 5);
+        let toks = Tensor::i32(
+            vec![1, g],
+            (0..g).map(|_| rng.below(v) as i32).collect(),
+        )
+        .unwrap();
+        let ones = Tensor::ones_f32(vec![l, f]);
+        let dense = be.verify(&pre.kv, 4, &toks, &ones).unwrap();
+        // superset mask: the observed union + random false alarms
+        let union = dense.union_mask.as_f32().unwrap();
+        let sup: Vec<f32> = union
+            .iter()
+            .map(|&u| if u != 0.0 || rng.chance(0.3) { 1.0 } else { 0.0 })
+            .collect();
+        let sup_t = Tensor::f32(vec![l, f], sup.clone()).unwrap();
+        let sparse = be.verify(&pre.kv, 4, &toks, &sup_t).unwrap();
+        assert_eq!(
+            dense.logits.as_f32().unwrap(),
+            sparse.logits.as_f32().unwrap(),
+            "superset verify must be bitwise-equal to dense"
+        );
+        assert_eq!(dense.kv.as_f32().unwrap(), sparse.kv.as_f32().unwrap());
+        assert_eq!(
+            dense.union_mask.as_f32().unwrap(),
+            sparse.union_mask.as_f32().unwrap()
+        );
+        // dropping one live neuron must show up in the logits
+        if let Some(first_live) = sup.iter().position(|&x| x != 0.0) {
+            if union[first_live] != 0.0 {
+                let mut dropped = sup.clone();
+                dropped[first_live] = 0.0;
+                let out = be
+                    .verify(
+                        &pre.kv,
+                        4,
+                        &toks,
+                        &Tensor::f32(vec![l, f], dropped).unwrap(),
+                    )
+                    .unwrap();
+                assert_ne!(
+                    dense.logits.as_f32().unwrap(),
+                    out.logits.as_f32().unwrap(),
+                    "dropping a live neuron must change verification"
+                );
+            }
+        }
+    });
+}
+
 /// ISSUE 2 satellite: `FfnWeights::from_row_major` round-trip — the
 /// up-projection transpose is exact and self-inverse, and the constructed
 /// weights compute the same FFN as a direct row-major reference.

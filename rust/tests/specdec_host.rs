@@ -1,0 +1,474 @@
+//! End-to-end speculative decoding on the host execution backend — no
+//! PJRT, no artifacts, runs under `cargo test --no-default-features` (the
+//! CI host gate). The ISSUE 5 acceptance surface:
+//!
+//! - the committed golden specdec fixtures: a dense-verify run over the
+//!   decode fixture (`host_tiny.ckpt` target + `host_tiny_draft.ckpt`
+//!   draft) and a sparse-verify run over the engineered-persistence target
+//!   (`specdec_hot.ckpt`), both generated and cross-validated against the
+//!   L2 JAX reference by `tools/make_host_fixture.py` — token IDs, round /
+//!   accepted / bonus counts and the `s_agg_gamma` schedule are pinned;
+//! - greedy equivalence: speculative decoding is token-identical to
+//!   target-only greedy decoding under `VerifyMask::Dense` (structural:
+//!   every committed token is a target argmax) and under
+//!   `VerifyMask::Aggregated` at recall-safe windows, across
+//!   opt/llama/falcon;
+//! - stochastic acceptance sanity under a seeded `Rng`;
+//! - `SpecStats` edge cases: γ=1, zero-round generations and prompts
+//!   shorter than the window stay finite and clamped.
+
+use rsb::engine::{AcceptMode, Engine, EngineConfig, SpecDecoder, VerifyMask};
+use rsb::hostexec::{HostBackend, HostParams};
+use rsb::runtime::artifact::ModelCfg;
+use rsb::runtime::ExecBackend;
+
+/// Mirror of the fixture config in tools/make_host_fixture.py (CFG) — keep
+/// in sync with the generator and rust/tests/hostexec.rs.
+fn fixture_cfg() -> ModelCfg {
+    ModelCfg {
+        size: "fixture".into(),
+        arch: "opt".into(),
+        act: "relu".into(),
+        stage: 0,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        vocab: 48,
+        max_seq: 24,
+        shift: 1.0,
+        ffn_act: "relu".into(),
+        gated: false,
+        parallel_block: false,
+        has_bias: true,
+    }
+}
+
+/// Mirror of CFG_DRAFT in tools/make_host_fixture.py — keep in sync.
+fn draft_fixture_cfg() -> ModelCfg {
+    ModelCfg {
+        size: "draftfix".into(),
+        arch: "opt".into(),
+        act: "relu".into(),
+        stage: 0,
+        d_model: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 32,
+        vocab: 48,
+        max_seq: 24,
+        shift: 1.0,
+        ffn_act: "relu".into(),
+        gated: false,
+        parallel_block: false,
+        has_bias: true,
+    }
+}
+
+fn fixture_backend(file: &str, cfg: ModelCfg) -> HostBackend {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(file);
+    HostBackend::from_checkpoint(cfg, &path, 1, 8).unwrap()
+}
+
+const FIXTURE_PROMPT: [u32; 5] = [3, 1, 4, 1, 5];
+
+/// Golden fixture, dense verification: greedy specdec over the committed
+/// target/draft pair must commit exactly the target-only greedy golden
+/// tokens (the same IDs hostexec.rs pins for plain decode), with the round
+/// schedule the generator cross-validated against the L2 JAX reference.
+#[test]
+fn golden_dense_specdec_matches_target_greedy_and_pins_counters() {
+    let target = fixture_backend("host_tiny.ckpt", fixture_cfg());
+    let draft = fixture_backend("host_tiny_draft.ckpt", draft_fixture_cfg());
+    let mut dec = SpecDecoder::new(
+        Box::new(target),
+        Box::new(draft),
+        2,
+        AcceptMode::Greedy,
+        VerifyMask::Dense,
+        0,
+    )
+    .unwrap();
+    let (tokens, stats) = dec.generate(&FIXTURE_PROMPT, 10).unwrap();
+    assert_eq!(
+        tokens,
+        vec![27, 1, 32, 32, 32, 28, 28, 39, 39, 39],
+        "golden dense specdec drifted from the L2 reference"
+    );
+    assert_eq!(stats.rounds, 5, "round schedule drifted");
+    assert_eq!(stats.drafted, 10);
+    assert_eq!(stats.accepted, 5, "acceptance schedule drifted");
+    assert_eq!(stats.bonus, 5, "every round commits a bonus/corrected token");
+    assert!((stats.acceptance_rate() - 0.5).abs() < 1e-12);
+    assert!((stats.tokens_per_round() - 2.0).abs() < 1e-12);
+    // dense verification: the window is never consulted
+    assert_eq!(stats.s_agg_gamma, 0.0);
+    // measured per-token liveness of the verify passes (generator: 0.5484;
+    // a liveness bit sitting on the ReLU threshold could flip across f32
+    // implementations, so this one is pinned with slack)
+    assert!(
+        (stats.s_token - 0.5484).abs() < 0.05,
+        "s_token {} drifted from the generator's 0.5484",
+        stats.s_token
+    );
+    assert!(stats.c_measured.is_finite() && stats.c_measured >= 0.0);
+    assert!(stats.verify_secs > 0.0 && stats.draft_secs > 0.0);
+
+    // and the engine's target-only greedy decode agrees token for token
+    let solo = fixture_backend("host_tiny.ckpt", fixture_cfg());
+    let mut e = Engine::new(Box::new(solo), EngineConfig::default()).unwrap();
+    e.submit(FIXTURE_PROMPT.to_vec(), 10);
+    assert_eq!(e.run_to_completion().unwrap().remove(0).tokens, tokens);
+}
+
+/// Golden fixture, sparse verification: the engineered-persistence target
+/// (half of every layer's neurons always fire, half never — paper §5.1's
+/// reuse mechanism distilled) makes the aggregated window recall-safe by
+/// construction, so `VerifyMask::Aggregated` is token-identical to dense
+/// while every verify pass really runs at density 0.5. Tokens, counters
+/// and the exact s_agg/s_token values are pinned.
+#[test]
+fn golden_sparse_specdec_hot_fixture_is_pinned() {
+    let mk = || {
+        SpecDecoder::new(
+            Box::new(fixture_backend("specdec_hot.ckpt", fixture_cfg())),
+            Box::new(fixture_backend("host_tiny_draft.ckpt", draft_fixture_cfg())),
+            3,
+            AcceptMode::Greedy,
+            VerifyMask::Aggregated { window: 16 },
+            0,
+        )
+        .unwrap()
+    };
+    let (tokens, stats) = mk().generate(&FIXTURE_PROMPT, 12).unwrap();
+    assert_eq!(
+        tokens,
+        vec![4; 12],
+        "golden sparse specdec drifted from the L2 reference"
+    );
+    assert_eq!(stats.rounds, 5, "round schedule drifted");
+    assert_eq!(stats.drafted, 15);
+    assert_eq!(stats.accepted, 6, "acceptance schedule drifted");
+    assert_eq!(stats.bonus, 5);
+    // the engineered hot set is exactly half of every layer: the window
+    // union (and every per-token mask) has density 0.5 — EXACTLY, which is
+    // what makes this fixture pinnable across f32 implementations (min
+    // |preact| margin 0.957 per the generator)
+    assert!(
+        (stats.s_agg_gamma - 0.5).abs() < 1e-12,
+        "s_agg {} != engineered 0.5",
+        stats.s_agg_gamma
+    );
+    assert!(
+        (stats.s_token - 0.5).abs() < 1e-12,
+        "s_token {} != engineered 0.5",
+        stats.s_token
+    );
+
+    // recall-safe window: sparse verification must not change a single
+    // token vs dense verification on the same pair
+    let mut dense = mk();
+    dense.mask_mode = VerifyMask::Dense;
+    let (dense_tokens, dense_stats) = dense.generate(&FIXTURE_PROMPT, 12).unwrap();
+    assert_eq!(tokens, dense_tokens, "aggregated verify changed tokens");
+    assert_eq!(dense_stats.accepted, stats.accepted);
+    assert_eq!(dense_stats.rounds, stats.rounds);
+    assert_eq!(dense_stats.s_agg_gamma, 0.0);
+}
+
+fn tiny_cfg(arch: &str) -> ModelCfg {
+    let act = if arch == "llama" { "silu" } else { "relu" };
+    ModelCfg {
+        size: "t".into(),
+        arch: arch.into(),
+        act: act.into(),
+        stage: 0,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        vocab: 40,
+        max_seq: 24,
+        shift: 1.0,
+        ffn_act: act.into(),
+        gated: arch == "llama",
+        parallel_block: arch == "falcon",
+        has_bias: arch == "opt",
+    }
+}
+
+fn tiny_draft_cfg(arch: &str) -> ModelCfg {
+    let mut c = tiny_cfg(arch);
+    c.size = "td".into();
+    c.n_layers = 1;
+    c.d_ff = 16;
+    c
+}
+
+/// Target-only greedy reference through the serving engine (same backend
+/// seed ⇒ same weights).
+fn engine_greedy(cfg: ModelCfg, seed: u64, prompt: &[u32], n: usize) -> Vec<u32> {
+    let backend = HostBackend::random(cfg, seed, 1, 6).unwrap();
+    let mut e = Engine::new(Box::new(backend), EngineConfig::default()).unwrap();
+    e.submit(prompt.to_vec(), n);
+    e.run_to_completion().unwrap().remove(0).tokens
+}
+
+/// Structural equivalence: under dense verification, greedy speculative
+/// decoding commits exactly the target's greedy stream — whatever the
+/// draft proposes — on every architecture and γ.
+#[test]
+fn dense_specdec_is_token_identical_to_target_greedy() {
+    let prompt: Vec<u32> = vec![5, 9, 13, 21];
+    let n = 12usize;
+    for arch in ["opt", "llama", "falcon"] {
+        let want = engine_greedy(tiny_cfg(arch), 42, &prompt, n);
+        assert_eq!(want.len(), n);
+        for gamma in [1usize, 3] {
+            let target = HostBackend::random(tiny_cfg(arch), 42, 1, 6).unwrap();
+            let draft = HostBackend::random(tiny_draft_cfg(arch), 7, 1, 6).unwrap();
+            let mut dec = SpecDecoder::new(
+                Box::new(target),
+                Box::new(draft),
+                gamma,
+                AcceptMode::Greedy,
+                VerifyMask::Dense,
+                0,
+            )
+            .unwrap();
+            let (tokens, stats) = dec.generate(&prompt, n).unwrap();
+            assert_eq!(tokens, want, "{arch}/gamma={gamma}: specdec diverged");
+            assert_eq!(stats.drafted, stats.rounds * gamma, "{arch}");
+            assert!(stats.accepted <= stats.drafted);
+            assert_eq!(stats.bonus, stats.rounds, "one bonus/corrected per round");
+            assert!(stats.tokens_per_round() >= 1.0, "{arch}");
+            let a = stats.acceptance_rate();
+            assert!((0.0..=1.0).contains(&a), "{arch}: alpha {a}");
+        }
+    }
+}
+
+/// Aggregated verification at recall-safe windows is token-identical to
+/// target-only greedy, across architectures. Recall safety is engineered
+/// per arch (all three are deterministic constructions, not luck):
+/// - opt: `b_up = ±2.5` splits neurons into always-fire / never-fire
+///   halves (|w·h| ≪ 2.5), so every mask is exactly the hot half;
+/// - llama: SwiGLU liveness is gated by silu, which is nonzero for every
+///   nonzero preactivation — masks are all-ones and the union is dense;
+/// - falcon: ln1 bias +5 makes the shared norm output positive, and
+///   sign-coherent up-projection rows (hot ⇒ |w|, cold ⇒ -|w|) make the
+///   preactivation sign per-neuron constant.
+#[test]
+fn aggregated_specdec_recall_safe_windows_match_target_greedy() {
+    let prompt: Vec<u32> = vec![5, 9, 13, 21];
+    let n = 12usize;
+    let gamma = 3usize;
+    for arch in ["opt", "llama", "falcon"] {
+        let cfg = tiny_cfg(arch);
+        let (d, f) = (cfg.d_model, cfg.d_ff);
+        let engineer = |mut params: HostParams| -> HostParams {
+            match arch {
+                "opt" => {
+                    for lw in &mut params.layers {
+                        for j in 0..f {
+                            lw.ffn.w.b_up[j] = if j < f / 2 { 2.5 } else { -2.5 };
+                        }
+                    }
+                }
+                "falcon" => {
+                    for lw in &mut params.layers {
+                        if let Some(b) = lw.ln1_bias.as_mut() {
+                            b.iter_mut().for_each(|x| *x = 5.0);
+                        }
+                        for j in 0..f {
+                            let row = &mut lw.ffn.w.w_up_t[j * d..(j + 1) * d];
+                            for w in row.iter_mut() {
+                                *w = if j < f / 2 { w.abs() } else { -w.abs() };
+                            }
+                        }
+                    }
+                }
+                _ => {} // llama: silu liveness is structurally dense
+            }
+            params
+        };
+        let mk_target = || {
+            let params = engineer(HostParams::random(&cfg, 42).unwrap());
+            HostBackend::new(cfg.clone(), params, 1, 6).unwrap()
+        };
+        // target-only greedy reference over the engineered weights
+        let mut e = Engine::new(Box::new(mk_target()), EngineConfig::default()).unwrap();
+        e.submit(prompt.clone(), n);
+        let want = e.run_to_completion().unwrap().remove(0).tokens;
+
+        let mk_dec = |mask| {
+            SpecDecoder::new(
+                Box::new(mk_target()),
+                Box::new(HostBackend::random(tiny_draft_cfg(arch), 7, 1, 6).unwrap()),
+                gamma,
+                AcceptMode::Greedy,
+                mask,
+                0,
+            )
+            .unwrap()
+        };
+        let (sparse, stats) = mk_dec(VerifyMask::Aggregated { window: 64 })
+            .generate(&prompt, n)
+            .unwrap();
+        assert_eq!(
+            sparse, want,
+            "{arch}: recall-safe aggregated verify changed tokens"
+        );
+        let (dense, _) = mk_dec(VerifyMask::Dense).generate(&prompt, n).unwrap();
+        assert_eq!(sparse, dense, "{arch}: aggregated != dense");
+        match arch {
+            // engineered half-split: union density exactly 0.5
+            "opt" | "falcon" => assert!(
+                (stats.s_agg_gamma - 0.5).abs() < 1e-12,
+                "{arch}: s_agg {} != 0.5",
+                stats.s_agg_gamma
+            ),
+            // silu liveness is dense: no aggregated sparsity to exploit
+            _ => assert!(
+                stats.s_agg_gamma < 0.01,
+                "llama: s_agg {} should be ~0",
+                stats.s_agg_gamma
+            ),
+        }
+    }
+}
+
+/// Stochastic acceptance: with draft == target (identical weights) the
+/// ratio p/q is exactly 1, so every draft is accepted — and the whole run
+/// is deterministic in the seed.
+#[test]
+fn stochastic_accepts_everything_when_draft_equals_target() {
+    let prompt: Vec<u32> = vec![2, 4, 8];
+    let mk = |seed: u64| {
+        SpecDecoder::new(
+            Box::new(HostBackend::random(tiny_cfg("opt"), 42, 1, 6).unwrap()),
+            Box::new(HostBackend::random(tiny_cfg("opt"), 42, 1, 6).unwrap()),
+            3,
+            AcceptMode::Stochastic,
+            VerifyMask::Dense,
+            seed,
+        )
+        .unwrap()
+    };
+    let (tokens, stats) = mk(9).generate(&prompt, 12).unwrap();
+    assert_eq!(tokens.len(), 12);
+    assert_eq!(
+        stats.accepted, stats.drafted,
+        "identical models must accept every draft (p/q == 1)"
+    );
+    assert!((stats.acceptance_rate() - 1.0).abs() < 1e-12);
+    assert_eq!(stats.bonus, stats.rounds);
+    // seeded determinism: the same seed reproduces the run exactly
+    let (again, s2) = mk(9).generate(&prompt, 12).unwrap();
+    assert_eq!(tokens, again);
+    assert_eq!(s2.accepted, stats.accepted);
+}
+
+/// Stochastic with a *different* draft: acceptance is a real rate in
+/// [0, 1], the token stream is valid, and repeated runs with one decoder
+/// are reproducible (generate resets seeded state).
+#[test]
+fn stochastic_different_draft_is_sane_and_reproducible() {
+    let mut dec = SpecDecoder::new(
+        Box::new(HostBackend::random(tiny_cfg("opt"), 42, 1, 6).unwrap()),
+        Box::new(HostBackend::random(tiny_draft_cfg("opt"), 7, 1, 6).unwrap()),
+        2,
+        AcceptMode::Stochastic,
+        VerifyMask::Dense,
+        5,
+    )
+    .unwrap();
+    let prompt: Vec<u32> = vec![5, 9, 13];
+    let (tokens, stats) = dec.generate(&prompt, 10).unwrap();
+    assert_eq!(tokens.len(), 10);
+    let vocab = dec.target().config().vocab as u32;
+    assert!(tokens.iter().all(|&t| t < vocab));
+    let a = stats.acceptance_rate();
+    assert!((0.0..=1.0).contains(&a));
+    assert_eq!(stats.drafted, stats.rounds * 2);
+    // the decoder resets per generate: a second call is bit-identical
+    let (again, s2) = dec.generate(&prompt, 10).unwrap();
+    assert_eq!(tokens, again, "generate must reset seeded state");
+    assert_eq!(stats.accepted, s2.accepted);
+}
+
+/// SpecStats edge cases (the γ=1 / short-prompt / zero-round NaN traps):
+/// everything stays finite and in range.
+#[test]
+fn spec_stats_edge_cases_stay_finite_and_clamped() {
+    let mk = |gamma, mask| {
+        SpecDecoder::new(
+            Box::new(HostBackend::random(tiny_cfg("opt"), 42, 1, 6).unwrap()),
+            Box::new(HostBackend::random(tiny_draft_cfg("opt"), 7, 1, 6).unwrap()),
+            gamma,
+            AcceptMode::Greedy,
+            mask,
+            0,
+        )
+        .unwrap()
+    };
+    // γ=1 with a window far longer than the prompt (and the whole run)
+    let (tokens, stats) =
+        mk(1, VerifyMask::Aggregated { window: 1000 }).generate(&[2], 8).unwrap();
+    assert_eq!(tokens.len(), 8);
+    for v in [
+        stats.c_measured,
+        stats.s_agg_gamma,
+        stats.s_token,
+        stats.acceptance_rate(),
+        stats.tokens_per_round(),
+        stats.verify_secs_per_round(),
+    ] {
+        assert!(v.is_finite(), "non-finite stat {v}");
+    }
+    assert!((0.0..=1.0).contains(&stats.s_agg_gamma));
+    assert!((0.0..=1.0).contains(&stats.s_token));
+    assert!(stats.c_measured >= 0.0);
+
+    // zero rounds: n_tokens <= 1 never enters the loop
+    let (one, s1) = mk(1, VerifyMask::Aggregated { window: 4 }).generate(&[2, 3], 1).unwrap();
+    assert_eq!(one.len(), 1);
+    assert_eq!(s1.rounds, 0);
+    assert_eq!(s1.c_measured, 0.0);
+    assert_eq!(s1.s_agg_gamma, 0.0);
+    assert_eq!(s1.s_token, 0.0);
+    assert_eq!(s1.tokens_per_round(), 0.0);
+    assert_eq!(s1.verify_secs_per_round(), 0.0);
+    let (zero, s0) = mk(2, VerifyMask::Dense).generate(&[2, 3], 0).unwrap();
+    assert!(zero.is_empty());
+    assert_eq!(s0.rounds, 0);
+
+    // the Random control mode also runs clean end-to-end
+    let (r, sr) = mk(2, VerifyMask::Random { window: 8 }).generate(&[2, 3, 5], 8).unwrap();
+    assert_eq!(r.len(), 8);
+    assert!((0.0..=1.0).contains(&sr.s_agg_gamma));
+}
+
+/// Constructor validation: vocab mismatch, γ bounds, verify bucket and
+/// batch-width requirements all fail early with clear errors.
+#[test]
+fn spec_decoder_rejects_bad_pairs() {
+    let t = || Box::new(HostBackend::random(tiny_cfg("opt"), 42, 1, 6).unwrap());
+    let d = || Box::new(HostBackend::random(tiny_draft_cfg("opt"), 7, 1, 6).unwrap());
+    // gamma 0 and gamma beyond the verify bucket (default min(8, max_seq))
+    assert!(SpecDecoder::new(t(), d(), 0, AcceptMode::Greedy, VerifyMask::Dense, 0).is_err());
+    assert!(SpecDecoder::new(t(), d(), 8, AcceptMode::Greedy, VerifyMask::Dense, 0).is_err());
+    assert!(SpecDecoder::new(t(), d(), 7, AcceptMode::Greedy, VerifyMask::Dense, 0).is_ok());
+    // vocab mismatch
+    let mut other = tiny_draft_cfg("opt");
+    other.vocab = 44;
+    let mismatched = Box::new(HostBackend::random(other, 7, 1, 6).unwrap());
+    assert!(
+        SpecDecoder::new(t(), mismatched, 2, AcceptMode::Greedy, VerifyMask::Dense, 0).is_err()
+    );
+    // non-B=1 sides are refused
+    let wide = Box::new(HostBackend::random(tiny_cfg("opt"), 42, 2, 6).unwrap());
+    assert!(SpecDecoder::new(wide, d(), 2, AcceptMode::Greedy, VerifyMask::Dense, 0).is_err());
+}

@@ -1,18 +1,40 @@
 #!/usr/bin/env python3
-"""Generate the host-backend golden decode fixture.
+"""Generate the host-backend golden fixtures (decode + speculative decoding).
 
-Builds a tiny deterministic OPT-style checkpoint with the L2 model's own
-init, writes it as RSBCKPT1 to rust/tests/fixtures/host_tiny.ckpt, and
-replays the serving engine's greedy decode loop (prefill on the padded
-prompt, then single-token decode steps) through the L2 reference
-`incremental_forward` (use_pallas=False). The resulting token IDs are the
-golden sequence pinned by rust/tests/hostexec.rs.
+Part 1 (unchanged from the original fixture): builds a tiny deterministic
+OPT-style checkpoint with the L2 model's own init, writes it as RSBCKPT1 to
+rust/tests/fixtures/host_tiny.ckpt, and replays the serving engine's greedy
+decode loop through the L2 reference `incremental_forward`
+(use_pallas=False). The resulting token IDs are the golden sequence pinned
+by rust/tests/hostexec.rs.
 
-The rust host backend recomputes the same f32 math with a different
-accumulation order, so exact logits differ in the last ulps; the script
-therefore verifies that every greedy argmax is decided by a margin far above
-that noise (and fails loudly if not, so a regenerated fixture can pick a
-different seed).
+Part 2 (ISSUE 5): speculative-decoding fixtures.
+
+  - host_tiny_draft.ckpt — a 1-layer draft model sharing host_tiny's
+    vocabulary; greedy specdec (target=host_tiny, draft=this, dense verify)
+    is replayed and its tokens / rounds / accepted / bonus counts pinned by
+    rust/tests/specdec_host.rs.
+  - specdec_hot.ckpt — host_tiny's geometry with *engineered* persistent
+    FFN liveness: half of each layer's neurons get b_up = +HOT_BIAS (always
+    fire), half get -HOT_BIAS (never fire), with the bias sized several σ
+    above |w·h|. Every token's live set is then exactly the hot half, the
+    aggregated window's union equals it, and sparse verification
+    (VerifyMask::Aggregated) is *provably* bit-identical to dense — the
+    recall-safe golden run whose tokens AND s_agg schedule (exactly 0.5 per
+    round) the Rust test pins. This is the paper's §5.1 persistence
+    mechanism, distilled to a fixture.
+
+The specdec replay mirrors rust/src/engine/specdec.rs step for step
+(prefill both sides, two step-time warmup decodes that record masks, γ
+greedy draft steps with draft-lag replay, one multi-token verify per round,
+greedy acceptance, bonus/corrected commits) and runs on TWO independent
+engines — a sequential numpy f32 mirror of the host backend and the L2 JAX
+reference driven as a chained incremental_forward — which must agree on
+every token, counter and mask bit. Greedy argmax margins (all consulted
+target rows + every draft proposal) and, for the hot fixture, FFN preact
+margins and window-coverage are verified to sit far above f32
+accumulation-order noise, so the Rust host backend (a third f32
+implementation) lands on the same golden values.
 
 Run from the repository root:  python3 tools/make_host_fixture.py
 """
@@ -28,7 +50,7 @@ import numpy as np  # noqa: E402
 
 from compile import model as M  # noqa: E402
 
-# Mirrors ModelCfg in rust/tests/hostexec.rs::golden — keep in sync.
+# Mirrors ModelCfg in rust/tests/hostexec.rs::fixture_cfg — keep in sync.
 CFG = M.ModelConfig(
     size="fixture",
     arch="opt",
@@ -53,6 +75,33 @@ PROMPT = [3, 1, 4, 1, 5]
 MAX_NEW = 10
 MIN_MARGIN = 2e-3  # far above f32 accumulation-order noise (~1e-5)
 
+# Mirrors draft_fixture_cfg in rust/tests/specdec_host.rs — keep in sync.
+CFG_DRAFT = M.ModelConfig(
+    size="draftfix",
+    arch="opt",
+    act="relu",
+    stage=0,
+    d_model=16,
+    n_layers=1,
+    n_heads=2,
+    d_ff=32,
+    vocab=48,
+    max_seq=24,
+    shift=1.0,
+    use_pallas=False,
+)
+SEED_DRAFT = 1  # mixed acceptance on both runs, argmax margins >= 0.027
+SEED_HOT = 2
+HOT_BIAS = 2.5  # |w·h| ~ N(0, ~0.5): ±2.5 is ~5σ — liveness never flips
+SPEC_GAMMA_DENSE = 2
+SPEC_GAMMA_HOT = 3
+SPEC_WINDOW = 16  # > everything ever recorded: the full-union window
+SPEC_NEW_DENSE = 10
+SPEC_NEW_HOT = 12
+MIN_PREACT_MARGIN = 0.05  # min |FFN preact| on the hot fixture's replay
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures")
+
 
 def write_ckpt(path, named):
     with open(path, "wb") as fh:
@@ -76,10 +125,10 @@ def argmax_with_margin(logits_row):
     return int(top), float(logits_row[top] - logits_row[runner])
 
 
-def scaled_params():
-    names = [n for n, _ in M.param_specs(CFG)]
+def scaled_params(cfg, seed):
+    names = [n for n, _ in M.param_specs(cfg)]
     out = []
-    for name, p in zip(names, M.init_params(CFG, SEED)):
+    for name, p in zip(names, M.init_params(cfg, seed)):
         if name.endswith(".scale") or name.endswith(".bias") or ".b_" in name:
             out.append(p)
         else:
@@ -87,8 +136,32 @@ def scaled_params():
     return out
 
 
-def main():
-    params = scaled_params()
+def hot_params(cfg, seed):
+    """scaled_params with engineered persistent liveness: per layer, neuron
+    j fires always (j < F/2) or never (j >= F/2), by HOT_BIAS-sized b_up."""
+    names = [n for n, _ in M.param_specs(cfg)]
+    params = scaled_params(cfg, seed)
+    bias = np.concatenate(
+        [
+            np.full(cfg.d_ff // 2, HOT_BIAS, np.float32),
+            np.full(cfg.d_ff - cfg.d_ff // 2, -HOT_BIAS, np.float32),
+        ]
+    )
+    out = []
+    for name, p in zip(names, params):
+        if name.endswith("ffn.b_up"):
+            out.append(jnp.asarray(bias))
+        else:
+            out.append(p)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Part 1: the original greedy-decode fixture (byte-identical output)
+# --------------------------------------------------------------------------
+
+def make_decode_fixture():
+    params = scaled_params(CFG, SEED)
     ones = jnp.ones((CFG.n_layers, CFG.d_ff), jnp.float32)
 
     # engine admission: pad the prompt to the prefill bucket
@@ -120,8 +193,7 @@ def main():
             f"greedy margin {min_margin:.2e} too small to pin across "
             f"backends; choose a different SEED")
 
-    out = os.path.join(os.path.dirname(__file__), "..", "rust", "tests",
-                       "fixtures", "host_tiny.ckpt")
+    out = os.path.join(FIXTURES, "host_tiny.ckpt")
     os.makedirs(os.path.dirname(out), exist_ok=True)
     names = [n for n, _ in M.param_specs(CFG)]
     write_ckpt(out, list(zip(names, params)))
@@ -131,6 +203,383 @@ def main():
     print(f"prompt: {PROMPT}")
     print(f"golden tokens: {tokens}")
     print(f"min greedy margin: {min_margin:.4f}")
+    return tokens
+
+
+# --------------------------------------------------------------------------
+# Part 2: speculative-decoding fixtures
+# --------------------------------------------------------------------------
+
+class NumpyEngine:
+    """Sequential f32 mirror of rust/src/hostexec (opt arch, stage 0):
+    token-by-token forward with per-position FFN liveness, exactly the host
+    backend's computation order up to float associativity."""
+
+    def __init__(self, cfg, params):
+        self.cfg = cfg
+        names = [n for n, _ in M.param_specs(cfg)]
+        p = {n: np.asarray(a, np.float32) for n, a in zip(names, params)}
+        self.p = p
+        hd = cfg.d_model // cfg.n_heads
+        self.hd = hd
+        self.kv = np.zeros(
+            (cfg.n_layers, 2, cfg.n_heads, cfg.max_seq, hd), np.float32)
+        self.preact_margin = np.inf  # min |FFN preact| seen (all neurons)
+
+    def clone_kv(self):
+        return self.kv.copy()
+
+    @staticmethod
+    def _layernorm(x, scale, bias):
+        x = x.astype(np.float32)
+        mean = np.float32(np.mean(x, dtype=np.float32))
+        var = np.float32(np.mean((x - mean) ** 2, dtype=np.float32))
+        inv = np.float32(1.0) / np.sqrt(var + np.float32(1e-5))
+        return (x - mean) * inv * scale + bias
+
+    def _forward_one(self, tok, pos, live):
+        """One token at absolute `pos`; `live` is an [L, F] bool mask of
+        neurons allowed to fire (None = all). Returns (logits [V],
+        ffn_bits [L, F])."""
+        cfg, p, hd = self.cfg, self.p, self.hd
+        d, f = cfg.d_model, cfg.d_ff
+        x = (p["embed"][tok] + p["pos_embed"][pos]).astype(np.float32)
+        bits = np.zeros((cfg.n_layers, f), bool)
+        for l in range(cfg.n_layers):
+            pre = f"l{l}."
+            h = self._layernorm(x, p[pre + "ln1.scale"], p[pre + "ln1.bias"])
+            qkv = (h @ p[pre + "attn.wqkv"]).astype(np.float32)
+            q, k, v = qkv[:d], qkv[d:2 * d], qkv[2 * d:]
+            for head in range(cfg.n_heads):
+                self.kv[l, 0, head, pos] = k[head * hd:(head + 1) * hd]
+                self.kv[l, 1, head, pos] = v[head * hd:(head + 1) * hd]
+            merged = np.zeros(d, np.float32)
+            scale = np.float32(1.0 / np.sqrt(hd))
+            for head in range(cfg.n_heads):
+                qh = q[head * hd:(head + 1) * hd]
+                keys = self.kv[l, 0, head, :pos + 1]
+                vals = self.kv[l, 1, head, :pos + 1]
+                scores = (keys @ qh).astype(np.float32) * scale
+                scores = scores - np.max(scores)
+                e = np.exp(scores, dtype=np.float32)
+                probs = e / np.sum(e, dtype=np.float32)
+                merged[head * hd:(head + 1) * hd] = (
+                    probs @ vals).astype(np.float32)
+            attn = (merged @ p[pre + "attn.wo"]).astype(np.float32)
+            x = (x + attn).astype(np.float32)
+            h2 = self._layernorm(x, p[pre + "ln2.scale"], p[pre + "ln2.bias"])
+            preact = (h2 @ p[pre + "ffn.w_up"]).astype(np.float32) \
+                + p[pre + "ffn.b_up"]
+            self.preact_margin = min(
+                self.preact_margin, float(np.min(np.abs(preact))))
+            act = np.maximum(preact, np.float32(0.0))
+            if live is not None:
+                act = act * live[l].astype(np.float32)
+            bits[l] = act != 0.0
+            y = (act @ p[pre + "ffn.w_down"]).astype(np.float32) \
+                + p[pre + "ffn.b_down"]
+            x = (x + y).astype(np.float32)
+        h = self._layernorm(x, p["lnf.scale"], p["lnf.bias"])
+        logits = (h @ p["embed"].T).astype(np.float32)
+        return logits, bits
+
+    def prefill(self, padded_tokens):
+        """Sequential pass over the padded prompt from position 0. Returns
+        (logits [T, V], per-position bits [T, L, F])."""
+        self.kv[:] = 0.0
+        logits, bits = [], []
+        for pos, tok in enumerate(padded_tokens):
+            lg, b = self._forward_one(int(tok), pos, None)
+            logits.append(lg)
+            bits.append(b)
+        return np.stack(logits), np.stack(bits)
+
+    def step(self, tokens, pos0, live):
+        """Feed `tokens` sequentially at pos0..; returns (logits [n, V],
+        bits [n, L, F]). KV updates persist."""
+        logits, bits = [], []
+        for g, tok in enumerate(tokens):
+            lg, b = self._forward_one(int(tok), pos0 + g, live)
+            logits.append(lg)
+            bits.append(b)
+        return np.stack(logits), np.stack(bits)
+
+
+class JaxEngine:
+    """The L2 reference driven token-by-token (chained incremental_forward
+    == the host backend's sequential verify, up to float associativity)."""
+
+    def __init__(self, cfg, params):
+        self.cfg = cfg
+        self.params = params
+        self.kv = jnp.zeros(M.kv_shape(cfg, 1), jnp.float32)
+        self.ones = jnp.ones((cfg.n_layers, cfg.d_ff), jnp.float32)
+        self.preact_margin = np.inf  # not tracked on this engine
+
+    def clone_kv(self):
+        return self.kv
+
+    def prefill(self, padded_tokens):
+        self.kv = jnp.zeros(M.kv_shape(self.cfg, 1), jnp.float32)
+        logits, bits = [], []
+        for pos, tok in enumerate(padded_tokens):
+            lg, b = self._one(int(tok), pos, self.ones)
+            logits.append(lg)
+            bits.append(b)
+        return np.stack(logits), np.stack(bits)
+
+    def _one(self, tok, pos, mask):
+        logits, kv, am, _ = M.incremental_forward(
+            self.cfg, self.params, jnp.asarray([[tok]], jnp.int32), self.kv,
+            jnp.asarray([pos], jnp.int32), mask)
+        self.kv = kv
+        return np.asarray(logits)[0, 0], np.asarray(am)[:, 0] != 0.0
+
+    def step(self, tokens, pos0, live):
+        mask = self.ones if live is None else jnp.asarray(
+            live.astype(np.float32))
+        logits, bits = [], []
+        for g, tok in enumerate(tokens):
+            lg, b = self._one(int(tok), pos0 + g, mask)
+            logits.append(lg)
+            bits.append(b)
+        return np.stack(logits), np.stack(bits)
+
+
+def specdec_replay(target, draft, prompt, n_tokens, gamma, mode, window,
+                   prefill_t):
+    """Mirror of SpecDecoder::generate (greedy): returns the golden run.
+    `mode` is 'dense' or 'agg'. Masks are recorded at token granularity
+    (the host backend's per-position VerifyOut), prompt positions seed the
+    window on non-dense modes, and the two step-time warmup decodes record
+    their masks — all exactly as the Rust decoder does."""
+    margins = []        # target argmax margins (every consulted row)
+    draft_margins = []  # draft proposal argmax margins
+    recent = []         # trailing per-token [L, F] bool masks (cap 256)
+
+    def record(bits_lf):
+        recent.append(bits_lf.copy())
+        while len(recent) > 256:
+            recent.pop(0)
+
+    def union_mask():
+        u = np.zeros_like(recent[0])
+        for b in recent[-window:]:
+            u |= b
+        return u
+
+    # prefill both sides (engine admission: tail-clamp + pad)
+    padded = list(prompt[-prefill_t:]) + [0] * (prefill_t - len(prompt))
+    tlog, tbits = target.prefill(padded)
+    dlog, dbits = draft.prefill(padded)
+    del dlog, dbits
+    length = min(len(prompt), prefill_t)
+    next_tok, m = argmax_with_margin(tlog[length - 1])
+    margins.append(m)
+    if mode != "dense":
+        for g in range(length):
+            record(tbits[g])
+    target_pos = length
+    draft_pos = length
+
+    out = [next_tok]
+    # step-time warmup: two decode calls, kv discarded, masks recorded
+    for _ in range(2):
+        saved = target.clone_kv()
+        _, b = target.step([next_tok], target_pos, None)
+        record(b[0])
+        target.kv = saved
+
+    rounds = drafted = accepted = bonus = 0
+    s_agg_sched = []
+    token_live = []
+    draft_lag = []
+
+    while len(out) < n_tokens:
+        rounds += 1
+        pos0 = target_pos
+        for tok in draft_lag:
+            draft.step([tok], draft_pos, None)
+            draft_pos += 1
+        draft_lag = []
+        assert draft_pos == pos0, (draft_pos, pos0)
+        drafts = []
+        feed = next_tok
+        dpos = draft_pos
+        for _ in range(gamma):
+            lg, _ = draft.step([feed], dpos, None)
+            dpos += 1
+            tok, m = argmax_with_margin(lg[0])
+            draft_margins.append(m)
+            drafts.append(tok)
+            feed = tok
+        drafted += gamma
+
+        if mode == "dense":
+            live = None
+            density = 1.0
+        else:
+            live = union_mask()
+            density = float(np.mean(live))
+        s_agg_sched.append(1.0 - density)
+        vtoks = [next_tok] + drafts
+        vlog, vbits = target.step(vtoks, pos0, live)
+        for g in range(len(vtoks)):
+            record(vbits[g])
+        token_live.append(float(np.mean(vbits.astype(np.float64))))
+
+        n_accept = 0
+        corrected = None
+        for i in range(gamma):
+            top, m = argmax_with_margin(vlog[i])
+            margins.append(m)
+            if top == drafts[i]:
+                n_accept += 1
+            else:
+                corrected = top
+                break
+        accepted += n_accept
+        out.extend(drafts[:n_accept])
+        if n_accept == gamma:
+            bonus += 1
+            top, m = argmax_with_margin(vlog[gamma])
+            margins.append(m)
+            new_next = top
+        else:
+            bonus += 1
+            new_next = corrected
+        out.append(new_next)
+        target_pos = pos0 + n_accept + 1
+        if n_accept == gamma:
+            draft_pos = pos0 + gamma
+            draft_lag = [drafts[gamma - 1]]
+        else:
+            draft_pos = pos0 + n_accept + 1
+        next_tok = new_next
+
+    out = out[:n_tokens]
+    final_union = np.zeros_like(recent[0])
+    for b in recent:
+        final_union |= b
+    return {
+        "tokens": out,
+        "rounds": rounds,
+        "drafted": drafted,
+        "accepted": accepted,
+        "bonus": bonus,
+        "s_agg": s_agg_sched,
+        "s_token": 1.0 - float(np.mean(token_live)) if token_live else 0.0,
+        "min_margin": min(margins),
+        "min_draft_margin": min(draft_margins) if draft_margins else np.inf,
+        "final_union": final_union,
+    }
+
+
+def run_both(cfg_t, params_t, cfg_d, params_d, prompt, n, gamma, mode,
+             window, label):
+    """Replay on the numpy mirror and the JAX reference; the two must agree
+    on tokens and counters; margins must clear the pinning threshold."""
+    runs = {}
+    for name, mk in [
+        ("numpy", lambda c, p: NumpyEngine(c, p)),
+        ("jax", lambda c, p: JaxEngine(c, p)),
+    ]:
+        r = specdec_replay(mk(cfg_t, params_t), mk(cfg_d, params_d), prompt,
+                           n, gamma, mode, window, PREFILL_T)
+        runs[name] = r
+    a, b = runs["numpy"], runs["jax"]
+    for key in ["tokens", "rounds", "drafted", "accepted", "bonus"]:
+        if a[key] != b[key]:
+            raise SystemExit(
+                f"{label}: numpy/jax disagree on {key}: {a[key]} vs {b[key]}")
+    if not np.allclose(a["s_agg"], b["s_agg"], atol=1e-9):
+        raise SystemExit(f"{label}: s_agg schedules disagree")
+    min_margin = min(a["min_margin"], b["min_margin"])
+    min_draft = min(a["min_draft_margin"], b["min_draft_margin"])
+    if min_margin < MIN_MARGIN or min_draft < MIN_MARGIN:
+        raise SystemExit(
+            f"{label}: greedy margin target {min_margin:.2e} / draft "
+            f"{min_draft:.2e} too small to pin; choose different seeds")
+    print(f"[{label}] tokens: {a['tokens']}")
+    print(f"[{label}] rounds {a['rounds']} drafted {a['drafted']} "
+          f"accepted {a['accepted']} bonus {a['bonus']}")
+    print(f"[{label}] s_agg schedule: {[round(s, 4) for s in a['s_agg']]}")
+    print(f"[{label}] s_token {a['s_token']:.4f} | margins: target "
+          f"{min_margin:.4f} draft {min_draft:.4f}")
+    return a
+
+
+def make_specdec_fixtures(golden_decode_tokens):
+    draft_params = scaled_params(CFG_DRAFT, SEED_DRAFT)
+    draft_names = [n for n, _ in M.param_specs(CFG_DRAFT)]
+    out = os.path.join(FIXTURES, "host_tiny_draft.ckpt")
+    write_ckpt(out, list(zip(draft_names, draft_params)))
+    print(f"wrote {out} ({os.path.getsize(out)} bytes)")
+
+    target_params = scaled_params(CFG, SEED)
+
+    # -- run A: dense verification on the committed decode fixture --------
+    a = run_both(CFG, target_params, CFG_DRAFT, draft_params, PROMPT,
+                 SPEC_NEW_DENSE, SPEC_GAMMA_DENSE, "dense", SPEC_WINDOW,
+                 "specdec-dense")
+    # greedy specdec must equal target-only greedy decode exactly
+    if a["tokens"] != golden_decode_tokens:
+        raise SystemExit(
+            f"dense specdec diverged from target-only greedy: "
+            f"{a['tokens']} vs {golden_decode_tokens}")
+    if any(s != 0.0 for s in a["s_agg"]):
+        raise SystemExit("dense run must have an all-zero s_agg schedule")
+
+    # -- run B: aggregated verification on the engineered hot fixture -----
+    hot = hot_params(CFG, SEED_HOT)
+    hot_names = [n for n, _ in M.param_specs(CFG)]
+    out = os.path.join(FIXTURES, "specdec_hot.ckpt")
+    write_ckpt(out, list(zip(hot_names, hot)))
+    print(f"wrote {out} ({os.path.getsize(out)} bytes)")
+
+    b_agg = run_both(CFG, hot, CFG_DRAFT, draft_params, PROMPT,
+                     SPEC_NEW_HOT, SPEC_GAMMA_HOT, "agg", SPEC_WINDOW,
+                     "specdec-hot-agg")
+    b_dense = run_both(CFG, hot, CFG_DRAFT, draft_params, PROMPT,
+                       SPEC_NEW_HOT, SPEC_GAMMA_HOT, "dense", SPEC_WINDOW,
+                       "specdec-hot-dense")
+    if b_agg["tokens"] != b_dense["tokens"]:
+        raise SystemExit(
+            "hot fixture: aggregated verification changed tokens — the "
+            "engineered liveness is not recall-safe")
+    # every mask ever recorded must be exactly the engineered hot half: the
+    # window union then covers every position's live set by construction
+    expected = np.zeros((CFG.n_layers, CFG.d_ff), bool)
+    expected[:, : CFG.d_ff // 2] = True
+    for run in (b_agg, b_dense):
+        if not np.array_equal(run["final_union"], expected):
+            raise SystemExit(
+                "hot fixture: recorded liveness differs from the engineered "
+                "hot set — coverage is not guaranteed")
+    half = 0.5
+    if any(abs(s - half) > 1e-9 for s in b_agg["s_agg"]):
+        raise SystemExit(
+            f"hot fixture: s_agg schedule {b_agg['s_agg']} is not exactly "
+            f"{half} — liveness is not the engineered hot set")
+    # the numpy mirror tracked every preact: liveness bit-flip headroom
+    eng = NumpyEngine(CFG, hot)
+    dr = NumpyEngine(CFG_DRAFT, draft_params)
+    check = specdec_replay(eng, dr, PROMPT, SPEC_NEW_HOT, SPEC_GAMMA_HOT,
+                           "agg", SPEC_WINDOW, PREFILL_T)
+    del check
+    if eng.preact_margin < MIN_PREACT_MARGIN:
+        raise SystemExit(
+            f"hot fixture: min |preact| {eng.preact_margin:.2e} too close "
+            f"to the ReLU threshold; raise HOT_BIAS or change SEED_HOT")
+    print(f"[specdec-hot] min |preact| margin: {eng.preact_margin:.3f}")
+    return a, b_agg
+
+
+def main():
+    golden = make_decode_fixture()
+    make_specdec_fixtures(golden)
+    print("\nPaste the golden values above into rust/tests/specdec_host.rs"
+          " if they changed.")
 
 
 if __name__ == "__main__":
