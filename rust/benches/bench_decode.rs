@@ -16,6 +16,14 @@
 //!   the single-threaded step (acceptance: threads win at batch >= 4 when
 //!   >= 2 cores are available).
 //!
+//! Observability part (always runs): the trace-span overhead gate — an
+//! engine stepped with tracing on must stay within 3% of the same engine
+//! with tracing off (median over interleaved rounds) — and the per-layer
+//! series consistency gate — `per_layer.weighted_mean_density()` must equal
+//! the flat `mask_density` mean to 1e-6, since both are fed from the same
+//! enforced rows. `--trace <out.jsonl>` additionally dumps the recorded
+//! spans as Chrome-trace JSONL (tools/trace_summary.py reads it).
+//!
 //! `--smoke` shrinks iteration counts for CI while keeping every
 //! acceptance gate live (the host-only CI job runs it on each PR).
 //!
@@ -72,11 +80,28 @@ fn run() -> rsb::Result<()> {
     }
     let mut h = Harness::new("decode_path");
     host_part(&mut h)?;
+    obs_part()?;
     #[cfg(feature = "xla")]
     xla_part(&mut h)?;
     h.report();
     h.write_csv(&rsb::default_runs_dir().join("bench"))?;
     Ok(())
+}
+
+/// `--key value` / `--key=value` lookup in the raw bench argv (the bench
+/// binaries don't use the full CLI parser).
+fn arg_value(key: &str) -> Option<String> {
+    let eq = format!("{key}=");
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == key {
+            return args.next();
+        }
+        if let Some(rest) = a.strip_prefix(&eq) {
+            return Some(rest.to_string());
+        }
+    }
+    None
 }
 
 /// Random `[L * F]` bits at `density` (a warm slot's predicted live set).
@@ -299,6 +324,113 @@ fn host_part(h: &mut Harness) -> rsb::Result<()> {
             if thread_ok { "PASS" } else { "FAIL" }
         );
         pass &= thread_ok;
+    }
+
+    if !pass {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// Observability gates: trace spans must cost < 3% on the decode path and
+/// the per-layer density series must be an exact split of the flat
+/// `mask_density` series (ISSUE 6 acceptance).
+fn obs_part() -> rsb::Result<()> {
+    use rsb::obs::{Phase, TraceSink};
+    use rsb::util::stats::Samples;
+
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = host_cfg();
+    let n_mask = cfg.n_layers * cfg.d_ff;
+    let mut rng = Rng::new(31);
+    let bits = random_bits(&mut rng, n_mask, 0.15);
+    let backend = HostBackend::random(cfg.clone(), 17, 4, 8)?.with_threads(1);
+    let ecfg = EngineConfig {
+        policy: NeuronPolicy::Static(Tensor::mask_from_bits(
+            vec![cfg.n_layers, cfg.d_ff],
+            &bits,
+        )?),
+        ..EngineConfig::default()
+    };
+    let mut engine = Engine::new(Box::new(backend), ecfg)?;
+    for i in 0..engine.decode_b {
+        engine.submit(vec![5 + i as u32; 8], usize::MAX / 2);
+    }
+    engine.step()?; // admit + first step
+
+    // interleaved traces-off / traces-on rounds; medians absorb scheduler
+    // noise that a mean-of-means comparison at a 3% bar would not
+    let sink = std::sync::Arc::new(TraceSink::new(1 << 16));
+    let (rounds, steps_per_round) = if smoke { (30, 4) } else { (60, 8) };
+    let mut off = Samples::default();
+    let mut on = Samples::default();
+    for round in 0..rounds + 2 {
+        let traced = round % 2 == 1;
+        engine.set_trace(traced.then(|| sink.clone()));
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps_per_round {
+            for done in engine.step()? {
+                engine.submit(vec![5 + done.id as u32 % 16; 8], usize::MAX / 2);
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64() / steps_per_round as f64;
+        if round >= 2 {
+            // first off/on pair is warmup
+            if traced { &mut on } else { &mut off }.push(dt);
+        }
+    }
+    engine.set_trace(None);
+
+    let (off_med, on_med) = (off.percentile(50.0), on.percentile(50.0));
+    let overhead = on_med / off_med.max(1e-12) - 1.0;
+    let mut pass = true;
+    let overhead_ok = overhead < 0.03;
+    println!(
+        "acceptance: trace-span overhead {:.2}% (traced {:.3}ms vs untraced {:.3}ms \
+         per step, < 3%) -> {}",
+        overhead * 100.0,
+        on_med * 1e3,
+        off_med * 1e3,
+        if overhead_ok { "PASS" } else { "FAIL" }
+    );
+    pass &= overhead_ok;
+
+    // the traced rounds must actually have recorded the decode phases
+    let spans_ok = sink.count_of(Phase::DecodeStep) > 0
+        && sink.count_of(Phase::MaskPlan) > 0
+        && sink.count_of(Phase::FfnMatvec) > 0;
+    println!(
+        "acceptance: trace spans recorded (decode-step {}, mask-plan {}, ffn-matvec {}) -> {}",
+        sink.count_of(Phase::DecodeStep),
+        sink.count_of(Phase::MaskPlan),
+        sink.count_of(Phase::FfnMatvec),
+        if spans_ok { "PASS" } else { "FAIL" }
+    );
+    pass &= spans_ok;
+
+    // per-layer series: populated, and its weighted mean must reproduce the
+    // flat mask_density mean (both are fed once per enforced row)
+    let per_layer = &engine.metrics.per_layer;
+    let wmean = per_layer.weighted_mean_density();
+    let flat = engine.metrics.mask_density.mean();
+    let series_ok = !per_layer.is_empty() && (wmean - flat).abs() < 1e-6;
+    println!(
+        "acceptance: per-layer weighted mean density {wmean:.6} == mask_density \
+         mean {flat:.6} (+-1e-6, {} rows) -> {}",
+        engine.metrics.mask_density.len(),
+        if series_ok { "PASS" } else { "FAIL" }
+    );
+    pass &= series_ok;
+
+    if let Some(path) = arg_value("--trace") {
+        let path = std::path::PathBuf::from(path);
+        sink.dump_to_path(&path)?;
+        println!(
+            "trace: wrote {} spans to {} ({} dropped)",
+            sink.len(),
+            path.display(),
+            sink.dropped()
+        );
     }
 
     if !pass {

@@ -16,6 +16,10 @@
 //! gate live. The measured sparse-vs-dense ratio is printed next to the
 //! Thm 1/2 projections via `costmodel::specdec::verify_comparison`.
 //!
+//! A final traced run checks the observability wiring: the draft-step,
+//! verify and prefill phases must all appear in the recorded spans
+//! (`--trace <out.jsonl>` dumps them as Chrome-trace JSONL).
+//!
 //! XLA part (feature `xla`, artifacts required): the original compiled-path
 //! sweep over the real draft/target artifact pair; skipped when the
 //! artifacts are missing.
@@ -186,10 +190,49 @@ fn host_part(h: &mut Harness, smoke: bool) -> rsb::Result<()> {
         );
         pass &= tpr_ok;
     }
+
+    // -- observability: the specdec path must show up in trace spans ------
+    let sink = std::sync::Arc::new(rsb::obs::TraceSink::new(1 << 14));
+    let mut dec = host_decoder(4, VerifyMask::Aggregated { window: 8 }, 0)?;
+    dec.set_trace(Some(sink.clone()));
+    let (toks, _stats) = dec.generate(&prompt, if smoke { 16 } else { 32 })?;
+    std::hint::black_box(toks);
+    let (drafts, verifies, prefills) = (
+        sink.count_of(rsb::obs::Phase::DraftStep),
+        sink.count_of(rsb::obs::Phase::Verify),
+        sink.count_of(rsb::obs::Phase::Prefill),
+    );
+    let trace_ok = drafts > 0 && verifies > 0 && prefills > 0;
+    println!(
+        "acceptance: specdec trace spans recorded (draft-step {drafts}, \
+         verify {verifies}, prefill {prefills}) -> {}",
+        if trace_ok { "PASS" } else { "FAIL" }
+    );
+    pass &= trace_ok;
+    if let Some(path) = trace_arg() {
+        let path = std::path::PathBuf::from(path);
+        sink.dump_to_path(&path)?;
+        println!("trace: wrote {} spans to {}", sink.len(), path.display());
+    }
+
     if !pass {
         std::process::exit(1);
     }
     Ok(())
+}
+
+/// `--trace <path>` / `--trace=<path>` in the raw bench argv.
+fn trace_arg() -> Option<String> {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == "--trace" {
+            return args.next();
+        }
+        if let Some(rest) = a.strip_prefix("--trace=") {
+            return Some(rest.to_string());
+        }
+    }
+    None
 }
 
 #[cfg(feature = "xla")]

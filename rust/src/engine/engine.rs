@@ -34,6 +34,7 @@ use crate::engine::request::{
 };
 use crate::engine::sampler;
 use crate::error::Result;
+use crate::obs::{layer_live_counts, Phase, ReuseRing, TraceSink};
 use crate::predictor::{NeuronPolicy, SlotPredictor};
 use crate::runtime::backend::{BatchMask, ExecBackend};
 use crate::runtime::Tensor;
@@ -82,6 +83,10 @@ pub struct Engine {
     active: Vec<Option<ActiveRequest>>,
     trackers: Vec<Option<AggregatedTracker>>,
     predictors: Vec<Option<SlotPredictor>>,
+    /// per-slot observed-mask history feeding the §5.1 reuse/aggregated
+    /// series in `metrics.per_layer` (created on admit, dropped at retire)
+    rings: Vec<Option<ReuseRing>>,
+    trace: Option<std::sync::Arc<TraceSink>>,
     cfg: EngineConfig,
     pub metrics: EngineMetrics,
     pub stats: SparsityStats,
@@ -94,7 +99,8 @@ impl Engine {
         let decode_b = backend.decode_b();
         let prefill_t = backend.prefill_t();
         let kv = KvBatch::new(&backend.kv_shape())?;
-        let n_layers = backend.config().n_layers;
+        let c = backend.config();
+        let (n_layers, d_ff) = (c.n_layers, c.d_ff);
         Ok(Engine {
             backend,
             decode_b,
@@ -105,9 +111,11 @@ impl Engine {
             active: (0..decode_b).map(|_| None).collect(),
             trackers: (0..decode_b).map(|_| None).collect(),
             predictors: (0..decode_b).map(|_| None).collect(),
+            rings: (0..decode_b).map(|_| None).collect(),
+            trace: None,
             stats: SparsityStats::new(n_layers),
             cfg,
-            metrics: EngineMetrics::with_slots(decode_b),
+            metrics: EngineMetrics::with_geometry(decode_b, n_layers, d_ff),
             next_id: 1,
         })
     }
@@ -127,6 +135,20 @@ impl Engine {
     /// The execution backend this engine drives.
     pub fn backend(&self) -> &dyn ExecBackend {
         self.backend.as_ref()
+    }
+
+    /// Attach (or detach, with `None`) a trace sink: the engine emits
+    /// mask-plan spans and forwards the sink to the backend for the
+    /// prefill/decode/ffn/attention phases. Sharing one sink across engine,
+    /// backend and a `SpecDecoder` interleaves their spans on one timeline.
+    pub fn set_trace(&mut self, sink: Option<std::sync::Arc<TraceSink>>) {
+        self.backend.set_trace(sink.clone());
+        self.trace = sink;
+    }
+
+    /// The trace sink currently attached, if any.
+    pub fn trace(&self) -> Option<&std::sync::Arc<TraceSink>> {
+        self.trace.as_ref()
     }
 
     pub fn submit(&mut self, prompt: Vec<u32>, max_new_tokens: usize) -> u64 {
@@ -207,6 +229,8 @@ impl Engine {
     /// explicit experiment knob and are never probed away — and never at
     /// step 0, where prefill-seeded slots can already enforce.
     fn plan_mask(&mut self) -> Result<(BatchMask, Vec<bool>, bool)> {
+        let trace = self.trace.clone();
+        let _span = crate::obs::span(trace.as_deref(), Phase::MaskPlan);
         let c = self.backend.config();
         let (n_layers, d_ff) = (c.n_layers, c.d_ff);
         let per_row = self.backend.supports_row_masks();
@@ -284,12 +308,16 @@ impl Engine {
         }
         let step_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.metrics.decode_step_ms.push(step_ms);
+        self.metrics.decode_secs_total += step_ms / 1e3;
         self.metrics.steps += 1;
         self.metrics
             .batch_occupancy
             .push(self.active_count() as f64 / self.decode_b as f64);
         let per_row_backend = self.backend.supports_row_masks();
         let mut step_union_density = 1.0;
+        // on a union-only backend every enforced row executed the same
+        // collapsed mask, so its per-layer live counts are shared too
+        let mut union_layer_counts: Option<Vec<usize>> = None;
         if enforced_rows.iter().any(|&e| e) {
             self.metrics.enforced_steps += 1;
             // what a batch-shared union would have executed this step
@@ -298,6 +326,14 @@ impl Engine {
                 .collect();
             step_union_density = mask.union_density(&occupied);
             self.metrics.union_mask_density.push(step_union_density);
+            if !per_row_backend {
+                let c = self.backend.config();
+                union_layer_counts = Some(layer_live_counts(
+                    &mask.union_bits(&occupied),
+                    c.n_layers,
+                    c.d_ff,
+                ));
+            }
         }
         if probe {
             self.metrics.probe_steps += 1;
@@ -336,17 +372,44 @@ impl Engine {
                 series.enforced_rows += 1;
                 a.mask_density_sum += d;
                 a.enforced_rows += 1;
+                // per-layer split of the same executed mask: every enforced
+                // row pushes all L layer densities, which keeps
+                // `per_layer.weighted_mean_density()` equal to the
+                // `mask_density` mean (the bench_decode smoke gate)
+                match &union_layer_counts {
+                    Some(counts) => self.metrics.per_layer.push_live_counts(counts),
+                    None => self
+                        .metrics
+                        .per_layer
+                        .push_live_counts(&mask.row_live_counts(slot)),
+                }
             }
             if let Some(p) = &mut self.predictors[slot] {
                 // a row is full-fidelity only when IT ran dense, whatever
                 // the other slots did
-                if let Some(acc) = p.observe(ffn_mask, slot, !enforced_rows[slot])? {
+                if let Some((acc, per_layer)) =
+                    p.observe_scored(ffn_mask, slot, !enforced_rows[slot])?
+                {
                     self.metrics.predictor_recall.push(acc.recall());
                     self.metrics.predictor_precision.push(acc.precision());
                     let series = self.metrics.slot(slot);
                     series.recall.push(acc.recall());
                     series.precision.push(acc.precision());
+                    for (l, layer_acc) in per_layer.iter().enumerate() {
+                        self.metrics.per_layer.push_recall(l, layer_acc.recall());
+                    }
                 }
+            }
+            // feed the slot's reuse ring with the observed (post-gate) mask:
+            // the step-to-step Jaccard and trailing-window union densities
+            // are §5.1's reuse/aggregated curves measured from live traffic
+            if let Some(ring) = &mut self.rings[slot] {
+                if let Some(jac) = ring.push_tensor_row(ffn_mask, slot)? {
+                    for (l, &j) in jac.iter().enumerate() {
+                        self.metrics.per_layer.push_reuse(l, j);
+                    }
+                }
+                self.metrics.per_layer.push_agg(&ring.agg_union_densities());
             }
             // the token just fed is now committed into kv
             a.pos += 1;
@@ -371,6 +434,7 @@ impl Engine {
                 let a = self.active[slot].take().unwrap();
                 self.slots.release(slot)?;
                 self.kv.clear_row(slot);
+                self.rings[slot] = None;
                 let mut fallbacks = 0;
                 if let Some(p) = self.predictors[slot].take() {
                     fallbacks = p.stats.fallbacks;
@@ -453,6 +517,8 @@ impl Engine {
                 let mut tr = AggregatedTracker::new(n_layers, d_ff);
                 tr.reset();
                 self.trackers[slot] = Some(tr);
+                // enough history for the largest AGG_WINDOWS entry
+                self.rings[slot] = Some(ReuseRing::new(n_layers, d_ff, 32));
             }
             self.predictors[slot] = match policy {
                 NeuronPolicy::Dense => None,

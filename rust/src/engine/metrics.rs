@@ -2,8 +2,13 @@
 //! benches report (Table-1-style latency rows + the serve example output),
 //! with the predictor series split per KV slot — per-slot masks mean one
 //! cold slot no longer drags the whole batch, and the split is what makes
-//! that visible.
+//! that visible — and per transformer layer (`obs::LayerSeries`), which is
+//! what the paper's layer-wise profiles (§4) and reuse curves (§5.1) read
+//! from live traffic. The whole struct snapshots to JSON for the server's
+//! `{"cmd": "metrics"}` protocol.
 
+use crate::jsonx::{num, obj, Value};
+use crate::obs::LayerSeries;
 use crate::util::stats::Samples;
 
 /// Per-slot split of the predictor observability (indexed by KV slot).
@@ -21,6 +26,29 @@ pub struct SlotSeries {
     pub fallbacks: u64,
 }
 
+/// `{"n", "mean", "p50", "p95"}` summary of a sample series.
+fn samples_json(s: &Samples) -> Value {
+    obj(vec![
+        ("n", num(s.len() as f64)),
+        ("mean", num(s.mean())),
+        ("p50", num(s.percentile(50.0))),
+        ("p95", num(s.percentile(95.0))),
+    ])
+}
+
+impl SlotSeries {
+    pub fn to_json(&self, slot: usize) -> Value {
+        obj(vec![
+            ("slot", num(slot as f64)),
+            ("recall", samples_json(&self.recall)),
+            ("precision", samples_json(&self.precision)),
+            ("mask_density", samples_json(&self.mask_density)),
+            ("enforced_rows", num(self.enforced_rows as f64)),
+            ("fallbacks", num(self.fallbacks as f64)),
+        ])
+    }
+}
+
 #[derive(Default)]
 pub struct EngineMetrics {
     pub requests_enqueued: u64,
@@ -32,6 +60,10 @@ pub struct EngineMetrics {
     pub time_to_first_token_ms: Samples,
     pub batch_occupancy: Samples,
     pub steps: u64,
+    /// measured wall-clock spent inside decode steps, in seconds — the real
+    /// throughput window (`tokens_per_sec` divides by this, not by a mean
+    /// reconstruction that double-counts trimmed samples)
+    pub decode_secs_total: f64,
     // hot-neuron predictor observability (crate::predictor)
     /// shadow-measured recall of the predicted neuron sets (all slots)
     pub predictor_recall: Samples,
@@ -56,6 +88,9 @@ pub struct EngineMetrics {
     pub fallback_events: u64,
     /// per-slot split of the predictor series
     pub per_slot: Vec<SlotSeries>,
+    /// per-layer sparsity/recall/reuse series (`obs::LayerSeries`); empty
+    /// geometry (0 layers) until the engine wires its backend's shape in
+    pub per_layer: LayerSeries,
 }
 
 impl EngineMetrics {
@@ -67,6 +102,14 @@ impl EngineMetrics {
         m
     }
 
+    /// Metrics sized for a `decode_b`-slot engine over an `[n_layers, d_ff]`
+    /// FFN — the per-layer series get their geometry up front.
+    pub fn with_geometry(decode_b: usize, n_layers: usize, d_ff: usize) -> EngineMetrics {
+        let mut m = EngineMetrics::with_slots(decode_b);
+        m.per_layer = LayerSeries::new(n_layers, d_ff);
+        m
+    }
+
     /// The per-slot series of `slot`, growing the split if needed.
     pub fn slot(&mut self, slot: usize) -> &mut SlotSeries {
         if self.per_slot.len() <= slot {
@@ -75,12 +118,16 @@ impl EngineMetrics {
         &mut self.per_slot[slot]
     }
 
+    /// Decode throughput over the *measured* wall-clock window: tokens
+    /// generated divided by the summed decode-step durations. (The old
+    /// `mean * steps` reconstruction silently over-counted whenever `steps`
+    /// advanced without a matching sample — e.g. a caller resetting the
+    /// samples mid-run — and is pinned against in the unit tests.)
     pub fn tokens_per_sec(&self) -> f64 {
-        let total_s: f64 = self.decode_step_ms.mean() * self.steps as f64 / 1e3;
-        if total_s <= 0.0 {
+        if self.decode_secs_total <= 0.0 {
             0.0
         } else {
-            self.tokens_generated as f64 / total_s
+            self.tokens_generated as f64 / self.decode_secs_total
         }
     }
 
@@ -167,6 +214,62 @@ impl EngineMetrics {
         }
         out
     }
+
+    /// Full JSON snapshot — the payload of the server's `{"cmd":"metrics"}`
+    /// reply. Slots with no activity are omitted from `per_slot` (a 32-slot
+    /// idle engine should not snapshot 32 empty series).
+    pub fn to_json(&self) -> Value {
+        let per_slot: Vec<Value> = self
+            .per_slot
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.enforced_rows > 0 || !s.recall.is_empty() || s.fallbacks > 0
+            })
+            .map(|(i, s)| s.to_json(i))
+            .collect();
+        obj(vec![
+            ("requests_enqueued", num(self.requests_enqueued as f64)),
+            ("requests_completed", num(self.requests_completed as f64)),
+            ("tokens_generated", num(self.tokens_generated as f64)),
+            ("steps", num(self.steps as f64)),
+            ("decode_secs_total", num(self.decode_secs_total)),
+            ("tokens_per_sec", num(self.tokens_per_sec())),
+            ("prefill_ms", samples_json(&self.prefill_ms)),
+            ("decode_step_ms", samples_json(&self.decode_step_ms)),
+            ("queue_wait_ms", samples_json(&self.queue_wait_ms)),
+            (
+                "time_to_first_token_ms",
+                samples_json(&self.time_to_first_token_ms),
+            ),
+            ("batch_occupancy", samples_json(&self.batch_occupancy)),
+            ("predictor_recall", samples_json(&self.predictor_recall)),
+            (
+                "predictor_precision",
+                samples_json(&self.predictor_precision),
+            ),
+            ("mask_density", samples_json(&self.mask_density)),
+            (
+                "union_mask_density",
+                samples_json(&self.union_mask_density),
+            ),
+            ("enforced_steps", num(self.enforced_steps as f64)),
+            ("enforced_rows", num(self.enforced_rows as f64)),
+            ("probe_steps", num(self.probe_steps as f64)),
+            ("fallback_events", num(self.fallback_events as f64)),
+            ("ffn_flop_reduction", num(self.ffn_flop_reduction())),
+            ("per_slot", Value::Arr(per_slot)),
+            ("per_layer", self.per_layer.to_json()),
+        ])
+    }
+
+    /// Zero every counter and series, keeping the per-slot width and the
+    /// per-layer geometry (the server's `{"cmd":"reset"}`).
+    pub fn reset(&mut self) {
+        let slots = self.per_slot.len();
+        let (l, f) = (self.per_layer.n_layers(), self.per_layer.d_ff());
+        *self = EngineMetrics::with_geometry(slots, l, f);
+    }
 }
 
 #[cfg(test)]
@@ -190,6 +293,22 @@ mod tests {
     fn throughput_zero_without_steps() {
         let m = EngineMetrics::default();
         assert_eq!(m.tokens_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn throughput_uses_the_measured_wallclock_window() {
+        let mut m = EngineMetrics::default();
+        m.tokens_generated = 100;
+        m.decode_secs_total = 2.0;
+        // one unrepresentative sample + a big `steps` count: the old
+        // `mean * steps` formula would claim 100 / (0.001 * 1000 / 1) s
+        // here; the wall-clock window ignores both
+        m.decode_step_ms.push(1.0);
+        m.steps = 1000;
+        assert!((m.tokens_per_sec() - 50.0).abs() < 1e-9);
+        let buggy = m.decode_step_ms.mean() * m.steps as f64 / 1e3;
+        assert!((buggy - 1.0).abs() < 1e-9, "the pinned bug changed shape");
+        assert!((m.tokens_per_sec() - 100.0 / buggy).abs() > 1.0);
     }
 
     #[test]
@@ -225,5 +344,32 @@ mod tests {
         assert!(r.contains("slot 0"), "{r}");
         assert!(r.contains("slot 3"), "{r}");
         assert!(!r.contains("slot 1"), "idle slot leaked into report: {r}");
+    }
+
+    #[test]
+    fn json_snapshot_roundtrips_and_reset_keeps_geometry() {
+        let mut m = EngineMetrics::with_geometry(2, 3, 8);
+        m.tokens_generated = 7;
+        m.decode_secs_total = 0.5;
+        m.slot(1).enforced_rows = 4;
+        m.slot(1).mask_density.push(0.25);
+        m.per_layer.push_live_counts(&[2, 4, 6]);
+        let v = crate::jsonx::parse(&m.to_json().to_json()).unwrap();
+        assert_eq!(
+            v.get("tokens_generated").and_then(Value::as_usize),
+            Some(7)
+        );
+        assert!((v.f64_of("tokens_per_sec").unwrap() - 14.0).abs() < 1e-9);
+        // idle slot 0 is omitted, active slot 1 is present
+        let slots = v.get("per_slot").and_then(Value::as_arr).unwrap();
+        assert_eq!(slots.len(), 1);
+        assert_eq!(slots[0].usize_of("slot").unwrap(), 1);
+        let pl = v.req("per_layer").unwrap();
+        assert_eq!(pl.usize_of("n_layers").unwrap(), 3);
+        m.reset();
+        assert_eq!(m.tokens_generated, 0);
+        assert_eq!(m.per_slot.len(), 2, "reset keeps the slot width");
+        assert_eq!(m.per_layer.n_layers(), 3, "reset keeps layer geometry");
+        assert!(m.per_layer.is_empty());
     }
 }

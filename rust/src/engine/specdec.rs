@@ -30,6 +30,7 @@ use std::collections::VecDeque;
 
 use crate::engine::sampler::{argmax, softmax};
 use crate::error::{Error, Result};
+use crate::obs::{span, Phase, TraceSink};
 use crate::runtime::backend::{BatchMask, DecodeOut, ExecBackend};
 use crate::runtime::Tensor;
 use crate::util::rng::Rng;
@@ -360,6 +361,9 @@ pub struct SpecDecoder {
     draft_lag: Vec<u32>,
     seed: u64,
     rng: Rng,
+    /// shared trace sink (draft-step spans here; prefill/decode/verify
+    /// spans come from the instrumented backends themselves)
+    trace: Option<std::sync::Arc<TraceSink>>,
 }
 
 /// One B=1 decode step on a side under a dense mask (kv passed/returned by
@@ -458,7 +462,17 @@ impl SpecDecoder {
             draft_lag: Vec::new(),
             seed,
             rng: Rng::new(seed),
+            trace: None,
         })
+    }
+
+    /// Attach (or detach) a trace sink, shared with both sides: the
+    /// decoder's draft-step spans and the backends' prefill/decode/verify
+    /// spans land on one timeline.
+    pub fn set_trace(&mut self, sink: Option<std::sync::Arc<TraceSink>>) {
+        self.target.set_trace(sink.clone());
+        self.draft.set_trace(sink.clone());
+        self.trace = sink;
     }
 
     /// Compiled-path constructor (`Engine::with_model`-style): both sides
@@ -567,6 +581,7 @@ impl SpecDecoder {
     /// Generate `n_tokens` after `prompt`. Returns (tokens, stats).
     pub fn generate(&mut self, prompt: &[u32], n_tokens: usize) -> Result<(Vec<u32>, SpecStats)> {
         self.reset();
+        let trace = self.trace.clone();
         let mut stats = SpecStats::default();
         let mut out = Vec::with_capacity(n_tokens + self.gamma + 1);
         let mut next = self.prefill(prompt)?;
@@ -596,6 +611,7 @@ impl SpecDecoder {
             // (the fully-accepted last draft of the previous round), then
             // propose γ new tokens from the pending token.
             let t0 = std::time::Instant::now();
+            let draft_span = span(trace.as_deref(), Phase::DraftStep);
             let lag: Vec<u32> = self.draft_lag.drain(..).collect();
             for tok in lag {
                 let d = decode_one(self.draft.as_ref(), &self.draft_kv, self.draft_pos, tok)?;
@@ -620,6 +636,7 @@ impl SpecDecoder {
                 feed = tok;
             }
             stats.draft_secs += t0.elapsed().as_secs_f64();
+            drop(draft_span);
             stats.drafted += self.gamma;
 
             // ---- verify in one pass: feed [pending, d_1..d_γ] (γ+1 real

@@ -24,6 +24,7 @@
 use crate::error::{Error, Result};
 use crate::hostexec::math::{attend_one, layer_norm, relu_inplace, rms_norm, rope_inplace};
 use crate::hostexec::weights::HostParams;
+use crate::obs::{span_on, Phase, TraceSink};
 use crate::runtime::artifact::ModelCfg;
 use crate::runtime::backend::{BatchMask, DecodeOut, ExecBackend, PrefillOut, VerifyOut};
 use crate::runtime::tensor::Tensor;
@@ -42,6 +43,8 @@ pub struct HostBackend {
     threads: usize,
     /// All-neurons live list (dense rows / prefill).
     all_live: Vec<u32>,
+    /// Trace sink for phase spans (None = tracing off, zero clock reads).
+    trace: Option<std::sync::Arc<TraceSink>>,
 }
 
 /// Mutable view of one sequence's slice of the step's output buffers: its
@@ -113,6 +116,7 @@ impl HostBackend {
             model_id,
             threads: resolve_threads(0),
             all_live,
+            trace: None,
         })
     }
 
@@ -174,7 +178,8 @@ impl HostBackend {
     /// Run `tokens` (absolute positions `pos0..`) through every layer for
     /// one sequence over its buffer views, computing each token's FFN only
     /// over the per-layer `live` index lists, and accumulating per-layer
-    /// `[qkv_zeros, up_zeros, live_acts]` counts.
+    /// `[qkv_zeros, up_zeros, live_acts]` counts. `tid` labels this call's
+    /// trace spans (decode workers pass their worker index).
     fn run_seq(
         &self,
         bufs: &mut RowBufs<'_>,
@@ -182,7 +187,9 @@ impl HostBackend {
         pos0: usize,
         live: &[&[u32]],
         counts: &mut [[u64; 3]],
+        tid: u32,
     ) -> Result<()> {
+        let trace = self.trace.as_deref();
         let c = &self.cfg;
         let (d, f, v) = (c.d_model, c.d_ff, c.vocab);
         let (nh, hd, tmax) = (c.n_heads, c.head_dim(), c.max_seq);
@@ -257,6 +264,7 @@ impl HostBackend {
                 }
             }
             // causal attention over the (just-updated) cache + output proj
+            let attn_span = span_on(trace, Phase::Attention, tid);
             for g in 0..g_n {
                 let p = pos0 + g;
                 let qg = &q[g * d..(g + 1) * d];
@@ -274,7 +282,9 @@ impl HostBackend {
                 }
                 rowskip_gemv(&lw.wo, d, d, &merged, &mut attn[g * d..(g + 1) * d]);
             }
+            drop(attn_span);
             // residual + (masked) FFN
+            let ffn_span = span_on(trace, Phase::FfnMatvec, tid);
             for g in 0..g_n {
                 let xs = g * d..(g + 1) * d;
                 if !c.parallel_block {
@@ -321,6 +331,7 @@ impl HostBackend {
                     }
                 }
             }
+            drop(ffn_span);
         }
         // final norm + tied LM head
         for g in 0..g_n {
@@ -348,12 +359,12 @@ impl HostBackend {
     }
 
     /// Run one decode work item (a single token for one batch row).
-    fn run_row(&self, w: &mut RowWork<'_>, counts: &mut [[u64; 3]]) -> Result<()> {
+    fn run_row(&self, w: &mut RowWork<'_>, counts: &mut [[u64; 3]], tid: u32) -> Result<()> {
         if w.pos < 0 {
             return Err(Error::Engine(format!("negative position {}", w.pos)));
         }
         let tok = [w.token];
-        self.run_seq(&mut w.bufs, &tok, w.pos as usize, &w.live, counts)
+        self.run_seq(&mut w.bufs, &tok, w.pos as usize, &w.live, counts, tid)
     }
 }
 
@@ -393,7 +404,12 @@ impl ExecBackend for HostBackend {
         true
     }
 
+    fn set_trace(&mut self, sink: Option<std::sync::Arc<TraceSink>>) {
+        self.trace = sink;
+    }
+
     fn prefill(&self, tokens: &Tensor, report_ffn_mask: bool) -> Result<PrefillOut> {
+        let _span = span_on(self.trace.as_deref(), Phase::Prefill, 0);
         let c = &self.cfg;
         let t = self.prefill_t;
         if tokens.shape != vec![1, t] {
@@ -423,7 +439,7 @@ impl ExecBackend for HostBackend {
                 logits: &mut logits,
                 ffn: report_ffn_mask.then(|| ffn.chunks_mut(t * c.d_ff).collect()),
             };
-            self.run_seq(&mut bufs, toks, 0, &live, &mut counts)?;
+            self.run_seq(&mut bufs, toks, 0, &live, &mut counts, 0)?;
         }
         Ok(PrefillOut {
             logits: Tensor::f32(vec![1, t, c.vocab], logits)?,
@@ -449,6 +465,7 @@ impl ExecBackend for HostBackend {
     /// mask covering every position's true live set reproduces dense
     /// verification bit-for-bit.
     fn verify(&self, kv: &Tensor, pos: usize, tokens: &Tensor, mask: &Tensor) -> Result<VerifyOut> {
+        let _span = span_on(self.trace.as_deref(), Phase::Verify, 0);
         let c = &self.cfg;
         let (f, v) = (c.d_ff, c.vocab);
         let kv_shape = vec![c.n_layers, 2, 1, c.n_heads, c.max_seq, c.head_dim()];
@@ -497,7 +514,7 @@ impl ExecBackend for HostBackend {
                 logits: &mut logits,
                 ffn: Some(ffn.chunks_mut(n * f).collect()),
             };
-            self.run_seq(&mut bufs, tokens.as_i32()?, pos, &live, &mut counts)?;
+            self.run_seq(&mut bufs, tokens.as_i32()?, pos, &live, &mut counts, 0)?;
         }
         // union over the n fed positions, per layer
         let mut union = vec![0.0f32; c.n_layers * f];
@@ -553,8 +570,13 @@ impl ExecBackend for HostBackend {
             });
         }
         mask.check(b, c.n_layers, f)?;
+        let trace = self.trace.as_deref();
+        let _step_span = span_on(trace, Phase::DecodeStep, 0);
         // per-row live lists (None = dense row -> the all-neurons list)
-        let live_owned: Vec<_> = (0..b).map(|r| mask.row_live(r)).collect();
+        let live_owned: Vec<_> = {
+            let _sp = span_on(trace, Phase::FfnGather, 0);
+            (0..b).map(|r| mask.row_live(r)).collect::<Vec<_>>()
+        };
         let mut kv_out = kv.as_f32()?.to_vec();
         let toks = tokens.as_i32()?;
         let positions = pos.as_i32()?;
@@ -600,18 +622,19 @@ impl ExecBackend for HostBackend {
         let n_threads = self.threads.min(b).max(1);
         if n_threads <= 1 {
             for w in items.iter_mut() {
-                self.run_row(w, &mut counts)?;
+                self.run_row(w, &mut counts, 0)?;
             }
         } else {
             let per_worker = b.div_ceil(n_threads);
             let results: Vec<Result<Vec<[u64; 3]>>> = std::thread::scope(|s| {
                 let handles: Vec<_> = items
                     .chunks_mut(per_worker)
-                    .map(|group| {
+                    .enumerate()
+                    .map(|(wi, group)| {
                         s.spawn(move || -> Result<Vec<[u64; 3]>> {
                             let mut local = vec![[0u64; 3]; self.cfg.n_layers];
                             for w in group.iter_mut() {
-                                self.run_row(w, &mut local)?;
+                                self.run_row(w, &mut local, wi as u32)?;
                             }
                             Ok(local)
                         })

@@ -63,6 +63,7 @@ pub mod figures;
 pub mod hostexec;
 pub mod jsonx;
 pub mod model;
+pub mod obs;
 pub mod predictor;
 pub mod runtime;
 pub mod server;

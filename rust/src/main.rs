@@ -30,6 +30,16 @@
 //! --threads <n> (decode worker threads over batch rows, 0 = one per
 //! core). Examples under examples/ drive the full paper reproduction; this
 //! binary is the day-to-day launcher.
+//!
+//! Observability (generate/serve/specdec): `--trace <out.jsonl>` records
+//! phase spans (prefill, mask-plan, decode-step, attention, ffn-gather,
+//! ffn-matvec, verify, draft-step) and dumps Chrome-trace JSONL on exit
+//! (load in chrome://tracing or summarize with tools/trace_summary.py);
+//! `--report-layers` prints the per-layer sparsity table (density, recall,
+//! step-to-step reuse, aggregated-window density) after a `generate` run;
+//! `--log-level <error|warn|info|debug>[,json]` (or env PALLAS_LOG) tunes
+//! the stderr log stream. A running server also answers `{"cmd":"metrics"}`
+//! / `{"cmd":"reset"}` over its own TCP protocol.
 
 use std::sync::Arc;
 
@@ -40,15 +50,22 @@ use rsb::hostexec::HostBackend;
 use rsb::runtime::{artifacts_dir, ExecBackend, Manifest};
 use rsb::util::cli::Args;
 
-const FLAGS: &[&str] = &["quiet", "sparse", "help", "random-init"];
+const FLAGS: &[&str] = &["quiet", "sparse", "help", "random-init", "report-layers"];
 
 fn main() {
+    rsb::obs::log::init_from_env();
     let args = Args::from_env(FLAGS);
+    if let Some(spec) = args.get("log-level") {
+        if let Err(e) = rsb::obs::log::set_spec(spec) {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let code = match run(&cmd, &args) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e}");
+            rsb::log_error!("rsb", "{e}");
             1
         }
     };
@@ -90,6 +107,27 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     Ok(cfg)
 }
 
+/// `--trace <path>` plumbing: a shared sink when requested (64k-event ring;
+/// older events are overwritten and counted) plus the dump path.
+fn trace_sink(args: &Args) -> Option<(Arc<rsb::obs::TraceSink>, String)> {
+    args.get("trace")
+        .map(|p| (Arc::new(rsb::obs::TraceSink::new(1 << 16)), p.to_string()))
+}
+
+/// Write the recorded spans as Chrome-trace JSONL once the run finished.
+fn dump_trace(trace: &Option<(Arc<rsb::obs::TraceSink>, String)>) -> Result<()> {
+    if let Some((sink, path)) = trace {
+        sink.dump_to_path(std::path::Path::new(path))?;
+        rsb::log_info!(
+            "trace",
+            "wrote {} spans to {path} ({} dropped)",
+            sink.len(),
+            sink.dropped()
+        );
+    }
+    Ok(())
+}
+
 fn default_backend() -> &'static str {
     if cfg!(feature = "xla") {
         "xla"
@@ -118,7 +156,7 @@ fn host_engine(args: &Args) -> Result<Engine> {
     let (decode_b, prefill_t) = (manifest.buckets.decode_b, manifest.buckets.prefill_t);
     let cfg = manifest.config.clone();
     let backend = if args.has("random-init") {
-        println!("[host] serving deterministic random weights (--random-init)");
+        rsb::log_info!("host", "serving deterministic random weights (--random-init)");
         HostBackend::random(cfg, args.usize_or("seed", 0)? as u64, decode_b, prefill_t)?
     } else {
         let shared = rsb::figures::shared_checkpoint(&id, "latest");
@@ -137,8 +175,9 @@ fn host_engine(args: &Args) -> Result<Engine> {
     };
     // decode worker threads over batch rows (0 = one per available core)
     let backend = backend.with_threads(args.usize_or("threads", 0)?);
-    println!(
-        "[host] {} | L{} d{} f{} v{} | decode_b {} prefill_t {} | threads {}",
+    rsb::log_info!(
+        "host",
+        "{} | L{} d{} f{} v{} | decode_b {} prefill_t {} | threads {}",
         backend.model_id(),
         manifest.config.n_layers,
         manifest.config.d_model,
@@ -170,6 +209,8 @@ fn info(args: &Args) -> Result<()> {
 
 fn generate(args: &Args) -> Result<()> {
     let mut engine = build_engine(args)?;
+    let trace = trace_sink(args);
+    engine.set_trace(trace.as_ref().map(|(s, _)| s.clone()));
     let vocab = engine.backend().config().vocab;
     let (_ds, bpe) = ensure_data(vocab, 2_000_000, 42)?;
     let prompt = args.str_or("prompt", "ada lives in");
@@ -193,16 +234,23 @@ fn generate(args: &Args) -> Result<()> {
         );
     }
     println!("{}", engine.metrics.report());
+    if args.has("report-layers") {
+        println!("{}", engine.metrics.per_layer.report());
+    }
+    dump_trace(&trace)?;
     Ok(())
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let engine = build_engine(args)?;
+    let mut engine = build_engine(args)?;
+    let trace = trace_sink(args);
+    engine.set_trace(trace.as_ref().map(|(s, _)| s.clone()));
     let vocab = engine.backend().config().vocab;
     let (_ds, bpe) = ensure_data(vocab, 2_000_000, 42)?;
     let addr = args.str_or("addr", "127.0.0.1:7077");
     let max = args.get("max-requests").map(|v| v.parse().unwrap_or(0));
     rsb::server::serve(engine, Arc::new(bpe), &addr, max, None)?;
+    dump_trace(&trace)?;
     Ok(())
 }
 
@@ -269,8 +317,9 @@ fn specdec(args: &Args) -> Result<()> {
         "host" => {
             let target = host_specdec_side(args, "target", "target-ckpt", "base_opt_relu_s0", 0)?;
             let draft = host_specdec_side(args, "draft", "draft-ckpt", "draft_opt_relu_s0", 1)?;
-            println!(
-                "[host] specdec target {} | draft {} | gamma {gamma} | {mask:?}",
+            rsb::log_info!(
+                "host",
+                "specdec target {} | draft {} | gamma {gamma} | {mask:?}",
                 target.model_id(),
                 draft.model_id()
             );
@@ -283,6 +332,8 @@ fn specdec(args: &Args) -> Result<()> {
             )))
         }
     };
+    let trace = trace_sink(args);
+    dec.set_trace(trace.as_ref().map(|(s, _)| s.clone()));
     let vocab = dec.target().config().vocab;
     let (_ds, bpe) = ensure_data(vocab, 2_000_000, 42)?;
     let prompt = bpe.encode(&args.str_or("prompt", "ada lives in"));
@@ -340,6 +391,7 @@ fn specdec(args: &Args) -> Result<()> {
             );
         }
     }
+    dump_trace(&trace)?;
     Ok(())
 }
 
@@ -380,7 +432,7 @@ mod compiled {
                 if shared.exists() {
                     model.load_params(&shared)
                 } else {
-                    println!("[warn] no checkpoint found; using random init");
+                    rsb::log_warn!("xla", "no checkpoint found; using random init");
                     model.init_params(args.usize_or("seed", 0)? as u32)
                 }
             }

@@ -1,0 +1,563 @@
+//! Per-layer sparsity series: the measurement layer behind the paper's
+//! layer-wise sparsity profiles (§4) and neuron-reuse curves (§5.1),
+//! collected from live traffic instead of offline sweeps.
+//!
+//! `LayerSeries` keeps, per transformer layer, log-bucketed histograms of
+//! enforced-row FFN density, shadow-measured recall and live-neuron counts,
+//! plus a step-to-step Jaccard-overlap series and the aggregated-union
+//! density at doubling trailing windows (`AGG_WINDOWS`) — §5.1's
+//! aggregated-sparsity curve reproduced from whatever the engine actually
+//! served. `ReuseRing` is the per-slot u64-packed mask history feeding the
+//! reuse series.
+
+use std::collections::VecDeque;
+
+use crate::error::{Error, Result};
+use crate::jsonx::{arr_f64, arr_usize, num, obj, Value};
+use crate::runtime::tensor::Tensor;
+
+/// Trailing-window sizes of the aggregated-union density curve (§5.1).
+pub const AGG_WINDOWS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Smallest resolvable log bucket: values at or below `2^LOG_LO_EXP`
+/// (including 0) land in bucket 0.
+const LOG_LO_EXP: i32 = -20;
+/// Bucket count: covers `2^-20 ..= 2^23` — densities down to ~1e-6 and
+/// live counts up to ~8M neurons.
+const LOG_BUCKETS: usize = 44;
+
+/// Log2-bucketed histogram over non-negative values, with an exact running
+/// sum so weighted means lose nothing to bucketing.
+#[derive(Debug, Clone)]
+pub struct LogHist {
+    /// `counts[i]` covers `[2^(i-1+LOG_LO_EXP), 2^(i+LOG_LO_EXP))`;
+    /// bucket 0 additionally catches everything at or below `2^LOG_LO_EXP`.
+    pub counts: Vec<u64>,
+    pub total: u64,
+    pub sum: f64,
+}
+
+impl Default for LogHist {
+    fn default() -> Self {
+        LogHist {
+            counts: vec![0; LOG_BUCKETS],
+            total: 0,
+            sum: 0.0,
+        }
+    }
+}
+
+impl LogHist {
+    fn bucket(x: f64) -> usize {
+        if x <= 0.0 {
+            return 0;
+        }
+        let idx = x.log2().floor() as i64 - LOG_LO_EXP as i64 + 1;
+        idx.clamp(0, LOG_BUCKETS as i64 - 1) as usize
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.counts[Self::bucket(x)] += 1;
+        self.total += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// `{"total": n, "mean": m, "buckets": [[idx, count], ...]}` with only
+    /// the non-empty buckets listed (snapshots stay small).
+    pub fn to_json(&self) -> Value {
+        let buckets: Vec<Value> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Value::Arr(vec![num(i as f64), num(c as f64)]))
+            .collect();
+        obj(vec![
+            ("total", num(self.total as f64)),
+            ("mean", num(self.mean())),
+            ("buckets", Value::Arr(buckets)),
+        ])
+    }
+}
+
+/// Per-layer live counts of a flat `[L * F]` mask-bits row.
+pub fn layer_live_counts(bits: &[bool], n_layers: usize, d_ff: usize) -> Vec<usize> {
+    assert_eq!(bits.len(), n_layers * d_ff, "mask bits / geometry mismatch");
+    bits.chunks(d_ff)
+        .map(|layer| layer.iter().filter(|&&b| b).count())
+        .collect()
+}
+
+/// The engine-wide per-layer sparsity series (`EngineMetrics::per_layer`).
+#[derive(Debug, Clone, Default)]
+pub struct LayerSeries {
+    n_layers: usize,
+    d_ff: usize,
+    /// enforced-row FFN density per layer (one sample per enforced row)
+    pub density: Vec<LogHist>,
+    /// shadow-measured recall per layer (one sample per dense shadow eval)
+    pub recall: Vec<LogHist>,
+    /// live-neuron count per layer (same pushes as `density`)
+    pub live: Vec<LogHist>,
+    reuse_sum: Vec<f64>,
+    reuse_n: Vec<u64>,
+    agg_sum: [f64; AGG_WINDOWS.len()],
+    agg_n: [u64; AGG_WINDOWS.len()],
+}
+
+impl LayerSeries {
+    pub fn new(n_layers: usize, d_ff: usize) -> LayerSeries {
+        LayerSeries {
+            n_layers,
+            d_ff,
+            density: vec![LogHist::default(); n_layers],
+            recall: vec![LogHist::default(); n_layers],
+            live: vec![LogHist::default(); n_layers],
+            reuse_sum: vec![0.0; n_layers],
+            reuse_n: vec![0; n_layers],
+            agg_sum: [0.0; AGG_WINDOWS.len()],
+            agg_n: [0; AGG_WINDOWS.len()],
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn d_ff(&self) -> usize {
+        self.d_ff
+    }
+
+    /// True when no density sample has been recorded on any layer.
+    pub fn is_empty(&self) -> bool {
+        self.density.iter().all(|h| h.is_empty())
+    }
+
+    /// Record one enforced row's per-layer live-neuron counts (length
+    /// `n_layers`): feeds both the `live` and `density` series.
+    pub fn push_live_counts(&mut self, counts: &[usize]) {
+        assert_eq!(counts.len(), self.n_layers, "live counts / layer mismatch");
+        if self.d_ff == 0 {
+            return;
+        }
+        for (l, &c) in counts.iter().enumerate() {
+            self.live[l].push(c as f64);
+            self.density[l].push(c as f64 / self.d_ff as f64);
+        }
+    }
+
+    /// Record one per-layer shadow recall measurement.
+    pub fn push_recall(&mut self, layer: usize, recall: f64) {
+        if layer < self.n_layers {
+            self.recall[layer].push(recall);
+        }
+    }
+
+    /// Record one step-to-step Jaccard overlap for `layer` (§5.1 reuse).
+    pub fn push_reuse(&mut self, layer: usize, jaccard: f64) {
+        if layer < self.n_layers {
+            self.reuse_sum[layer] += jaccard;
+            self.reuse_n[layer] += 1;
+        }
+    }
+
+    /// Record aggregated-union densities as `(window, density)` pairs —
+    /// windows must come from `AGG_WINDOWS` (others are ignored).
+    pub fn push_agg(&mut self, densities: &[(usize, f64)]) {
+        for &(w, d) in densities {
+            if let Some(i) = AGG_WINDOWS.iter().position(|&a| a == w) {
+                self.agg_sum[i] += d;
+                self.agg_n[i] += 1;
+            }
+        }
+    }
+
+    pub fn mean_density(&self, layer: usize) -> f64 {
+        self.density[layer].mean()
+    }
+
+    pub fn mean_recall(&self, layer: usize) -> f64 {
+        self.recall[layer].mean()
+    }
+
+    pub fn mean_reuse(&self, layer: usize) -> f64 {
+        if self.reuse_n[layer] == 0 {
+            0.0
+        } else {
+            self.reuse_sum[layer] / self.reuse_n[layer] as f64
+        }
+    }
+
+    /// Mean aggregated-union density at `AGG_WINDOWS[i]` (None when that
+    /// window never accumulated a sample).
+    pub fn mean_agg(&self, i: usize) -> Option<f64> {
+        (self.agg_n[i] > 0).then(|| self.agg_sum[i] / self.agg_n[i] as f64)
+    }
+
+    /// Sample-weighted mean density over all layers. Because every enforced
+    /// row pushes all `n_layers` per-layer densities, this equals the mean
+    /// of the row densities — i.e. `EngineMetrics::mask_density.mean()` —
+    /// up to float associativity (the bench_decode smoke gate).
+    pub fn weighted_mean_density(&self) -> f64 {
+        let total: u64 = self.density.iter().map(|h| h.total).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self.density.iter().map(|h| h.sum).sum();
+        sum / total as f64
+    }
+
+    /// Multi-line per-layer table for `--report-layers`.
+    pub fn report(&self) -> String {
+        if self.is_empty() && self.recall.iter().all(|h| h.is_empty()) {
+            return String::new();
+        }
+        let mut out = String::from("per-layer: density | live/F | recall | jaccard | n");
+        for l in 0..self.n_layers {
+            out.push_str(&format!(
+                "\n  L{l:02}: {:.4} | {:.1}/{} | {:.3} | {:.3} | {}",
+                self.mean_density(l),
+                self.live[l].mean(),
+                self.d_ff,
+                self.mean_recall(l),
+                self.mean_reuse(l),
+                self.density[l].total,
+            ));
+        }
+        let agg: Vec<String> = AGG_WINDOWS
+            .iter()
+            .enumerate()
+            .filter_map(|(i, w)| self.mean_agg(i).map(|d| format!("w{w} {d:.3}")))
+            .collect();
+        if !agg.is_empty() {
+            out.push_str(&format!("\n  aggregated union density: {}", agg.join(" ")));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        let layers: Vec<Value> = (0..self.n_layers)
+            .map(|l| {
+                obj(vec![
+                    ("layer", num(l as f64)),
+                    ("density", self.density[l].to_json()),
+                    ("live", self.live[l].to_json()),
+                    ("recall", self.recall[l].to_json()),
+                    ("jaccard_mean", num(self.mean_reuse(l))),
+                    ("jaccard_n", num(self.reuse_n[l] as f64)),
+                ])
+            })
+            .collect();
+        let agg: Vec<f64> = (0..AGG_WINDOWS.len())
+            .map(|i| self.mean_agg(i).unwrap_or(-1.0))
+            .collect();
+        obj(vec![
+            ("n_layers", num(self.n_layers as f64)),
+            ("d_ff", num(self.d_ff as f64)),
+            ("weighted_mean_density", num(self.weighted_mean_density())),
+            ("layers", Value::Arr(layers)),
+            ("agg_windows", arr_usize(&AGG_WINDOWS)),
+            // -1 marks a window that never accumulated a sample
+            ("agg_density", arr_f64(&agg)),
+        ])
+    }
+
+    /// Zero every series, keeping the geometry.
+    pub fn reset(&mut self) {
+        *self = LayerSeries::new(self.n_layers, self.d_ff);
+    }
+}
+
+/// Per-slot u64-packed history of observed FFN masks: reports the per-layer
+/// step-to-step Jaccard overlap on push and the trailing-window union
+/// densities for the aggregated curve. Self-contained so the obs layer does
+/// not reach into `specdec::MaskWindow`'s internals.
+#[derive(Debug, Clone)]
+pub struct ReuseRing {
+    n_layers: usize,
+    d_ff: usize,
+    words_per_layer: usize,
+    cap: usize,
+    recent: VecDeque<Vec<u64>>,
+}
+
+impl ReuseRing {
+    pub fn new(n_layers: usize, d_ff: usize, cap: usize) -> ReuseRing {
+        ReuseRing {
+            n_layers,
+            d_ff,
+            words_per_layer: d_ff.div_ceil(64),
+            cap: cap.max(1),
+            recent: VecDeque::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.recent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.recent.is_empty()
+    }
+
+    fn push_words(&mut self, words: Vec<u64>) -> Option<Vec<f64>> {
+        let jac = self.recent.back().map(|prev| self.jaccard_layers(prev, &words));
+        if self.recent.len() == self.cap {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(words);
+        jac
+    }
+
+    /// Per-layer Jaccard overlap `|a ∩ b| / |a ∪ b|` (1.0 when both empty:
+    /// a layer firing nothing twice reused everything it fired).
+    fn jaccard_layers(&self, a: &[u64], b: &[u64]) -> Vec<f64> {
+        let wpl = self.words_per_layer;
+        (0..self.n_layers)
+            .map(|l| {
+                let (mut inter, mut uni) = (0u64, 0u64);
+                for w in 0..wpl {
+                    let (x, y) = (a[l * wpl + w], b[l * wpl + w]);
+                    inter += (x & y).count_ones() as u64;
+                    uni += (x | y).count_ones() as u64;
+                }
+                if uni == 0 {
+                    1.0
+                } else {
+                    inter as f64 / uni as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Push one flat `[L * F]` bits mask; returns the per-layer Jaccard
+    /// overlap with the previously pushed mask (None on the first push).
+    pub fn push_bits(&mut self, bits: &[bool]) -> Result<Option<Vec<f64>>> {
+        if bits.len() != self.n_layers * self.d_ff {
+            return Err(Error::Shape {
+                what: "reuse ring bits".into(),
+                expected: vec![self.n_layers * self.d_ff],
+                got: vec![bits.len()],
+            });
+        }
+        let wpl = self.words_per_layer;
+        let mut words = vec![0u64; self.n_layers * wpl];
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                let (l, f) = (i / self.d_ff, i % self.d_ff);
+                words[l * wpl + f / 64] |= 1u64 << (f % 64);
+            }
+        }
+        Ok(self.push_words(words))
+    }
+
+    /// Push batch row `row` of an observed `[L, B, F]` mask tensor.
+    pub fn push_tensor_row(&mut self, mask: &Tensor, row: usize) -> Result<Option<Vec<f64>>> {
+        let (l, f) = (self.n_layers, self.d_ff);
+        if mask.shape.len() != 3 || mask.shape[0] != l || mask.shape[2] != f {
+            return Err(Error::Shape {
+                what: "reuse ring ffn mask".into(),
+                expected: vec![l, 0, f],
+                got: mask.shape.clone(),
+            });
+        }
+        let b = mask.shape[1];
+        if row >= b {
+            return Err(Error::msg(format!("reuse ring row {row} out of batch {b}")));
+        }
+        let data = mask.as_f32()?;
+        let wpl = self.words_per_layer;
+        let mut words = vec![0u64; l * wpl];
+        for li in 0..l {
+            let base = (li * b + row) * f;
+            for fi in 0..f {
+                if data[base + fi] != 0.0 {
+                    words[li * wpl + fi / 64] |= 1u64 << (fi % 64);
+                }
+            }
+        }
+        Ok(self.push_words(words))
+    }
+
+    /// Live fraction of the union of the trailing `min(window, len)` masks.
+    pub fn union_density(&self, window: usize) -> f64 {
+        let denom = (self.n_layers * self.d_ff) as f64;
+        if denom == 0.0 || self.recent.is_empty() {
+            return 0.0;
+        }
+        let take = window.min(self.recent.len()).max(1);
+        let n_words = self.n_layers * self.words_per_layer;
+        let mut live = 0u64;
+        for w in 0..n_words {
+            let mut acc = 0u64;
+            for m in self.recent.iter().rev().take(take) {
+                acc |= m[w];
+            }
+            live += acc.count_ones() as u64;
+        }
+        live as f64 / denom
+    }
+
+    /// `(window, union density)` for every `AGG_WINDOWS` entry the ring has
+    /// enough history for — ready for `LayerSeries::push_agg`.
+    pub fn agg_union_densities(&self) -> Vec<(usize, f64)> {
+        AGG_WINDOWS
+            .iter()
+            .filter(|&&w| w <= self.recent.len())
+            .map(|&w| (w, self.union_density(w)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_hist_buckets_and_mean() {
+        let mut h = LogHist::default();
+        h.push(0.0);
+        h.push(0.25);
+        h.push(0.25);
+        h.push(1024.0);
+        assert_eq!(h.total, 4);
+        assert!((h.mean() - (0.5 + 1024.0) / 4.0).abs() < 1e-12);
+        // 0.0 in bucket 0; the two 0.25s share a bucket; 1024 far above
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts.iter().filter(|&&c| c > 0).count(), 3);
+        assert_eq!(h.counts[LogHist::bucket(0.25)], 2);
+        let j = h.to_json();
+        assert_eq!(j.get("total").and_then(|v| v.as_usize()), Some(4));
+    }
+
+    #[test]
+    fn layer_live_counts_sum_is_popcount() {
+        let bits = vec![true, false, true, true, false, false];
+        let counts = layer_live_counts(&bits, 2, 3);
+        assert_eq!(counts, vec![2, 1]);
+        assert_eq!(
+            counts.iter().sum::<usize>(),
+            bits.iter().filter(|&&b| b).count()
+        );
+    }
+
+    #[test]
+    fn weighted_mean_density_matches_row_density_mean() {
+        let (l, f) = (3, 8);
+        let mut s = LayerSeries::new(l, f);
+        let rows = [[1usize, 4, 2], [8, 0, 3], [5, 5, 5]];
+        let mut row_density_mean = 0.0;
+        for counts in &rows {
+            s.push_live_counts(counts);
+            row_density_mean += counts.iter().sum::<usize>() as f64 / (l * f) as f64;
+        }
+        row_density_mean /= rows.len() as f64;
+        assert!((s.weighted_mean_density() - row_density_mean).abs() < 1e-12);
+        assert!(!s.is_empty());
+        assert_eq!(s.density[0].total, rows.len() as u64);
+    }
+
+    #[test]
+    fn report_and_json_render_all_series() {
+        let mut s = LayerSeries::new(2, 4);
+        s.push_live_counts(&[2, 1]);
+        s.push_recall(0, 0.9);
+        s.push_reuse(1, 0.5);
+        s.push_agg(&[(1, 0.4), (2, 0.6)]);
+        let r = s.report();
+        assert!(r.contains("L00"), "{r}");
+        assert!(r.contains("L01"), "{r}");
+        assert!(r.contains("aggregated union density: w1 0.400 w2 0.600"), "{r}");
+        let j = s.to_json();
+        assert_eq!(j.get("n_layers").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(
+            j.get("layers").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
+        let wm = j.get("weighted_mean_density").and_then(|v| v.as_f64()).unwrap();
+        assert!((wm - 3.0 / 8.0).abs() < 1e-12);
+        s.reset();
+        assert!(s.is_empty());
+        assert_eq!(s.n_layers(), 2);
+    }
+
+    #[test]
+    fn reuse_ring_jaccard_and_union() {
+        let (l, f) = (2, 70); // odd width exercises the packing tail
+        let mut ring = ReuseRing::new(l, f, 4);
+        let a: Vec<bool> = (0..l * f).map(|i| i % 3 == 0).collect();
+        assert!(ring.push_bits(&a).unwrap().is_none(), "first push has no prev");
+        // identical mask: Jaccard 1.0 everywhere, union density unchanged
+        let jac = ring.push_bits(&a).unwrap().unwrap();
+        assert_eq!(jac.len(), l);
+        assert!(jac.iter().all(|&j| (j - 1.0).abs() < 1e-12));
+        let live = a.iter().filter(|&&b| b).count() as f64;
+        assert!((ring.union_density(2) - live / (l * f) as f64).abs() < 1e-12);
+        // disjoint mask: Jaccard 0.0, union density doubles
+        let b: Vec<bool> = (0..l * f).map(|i| i % 3 == 1).collect();
+        let jac = ring.push_bits(&b).unwrap().unwrap();
+        assert!(jac.iter().all(|&j| j == 0.0));
+        let live_b = b.iter().filter(|&&x| x).count() as f64;
+        assert!(
+            (ring.union_density(2) - (live + live_b) / (l * f) as f64).abs() < 1e-12
+        );
+        // window 1 sees only the last mask
+        assert!((ring.union_density(1) - live_b / (l * f) as f64).abs() < 1e-12);
+        // only windows the ring can honor are reported
+        let agg = ring.agg_union_densities();
+        assert_eq!(agg.iter().map(|&(w, _)| w).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn reuse_ring_tensor_row_matches_bits() {
+        let (l, b, f) = (2, 3, 9);
+        let row = 1;
+        let bits: Vec<bool> = (0..l * f).map(|i| i % 4 == 0).collect();
+        let mut data = vec![0.0f32; l * b * f];
+        for (i, &bit) in bits.iter().enumerate() {
+            if bit {
+                let (li, fi) = (i / f, i % f);
+                data[(li * b + row) * f + fi] = 1.0;
+            }
+        }
+        let t = Tensor::f32(vec![l, b, f], data).unwrap();
+        let mut from_tensor = ReuseRing::new(l, f, 3);
+        let mut from_bits = ReuseRing::new(l, f, 3);
+        from_tensor.push_tensor_row(&t, row).unwrap();
+        from_bits.push_bits(&bits).unwrap();
+        let j1 = from_tensor.push_tensor_row(&t, row).unwrap().unwrap();
+        let j2 = from_bits.push_bits(&bits).unwrap().unwrap();
+        assert_eq!(j1, j2);
+        assert!(
+            (from_tensor.union_density(2) - from_bits.union_density(2)).abs() < 1e-12
+        );
+        // wrong-shape tensor and out-of-batch row are rejected
+        assert!(from_tensor.push_tensor_row(&t, b).is_err());
+        let bad = Tensor::zeros_f32(vec![l, b, f + 1]);
+        assert!(from_tensor.push_tensor_row(&bad, 0).is_err());
+    }
+
+    #[test]
+    fn reuse_ring_caps_history() {
+        let mut ring = ReuseRing::new(1, 8, 2);
+        for i in 0..5 {
+            let bits: Vec<bool> = (0..8).map(|j| j == i).collect();
+            ring.push_bits(&bits).unwrap();
+        }
+        assert_eq!(ring.len(), 2);
+        // union over any window covers at most the 2 retained masks
+        assert!((ring.union_density(10) - 2.0 / 8.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,194 @@
+//! Leveled logging for the serving stack: the `log_error!` / `log_warn!` /
+//! `log_info!` / `log_debug!` macros replace the ad-hoc `println!` /
+//! `eprintln!` calls so benches and tests can silence the stack
+//! (`PALLAS_LOG=error`) and structured consumers can switch every event to
+//! one-line JSON on stderr (`PALLAS_LOG=info,json` or `--log-level`).
+//!
+//! Everything goes to **stderr** — stdout stays reserved for command
+//! output (bench tables, generated text, reports).
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+use crate::error::{Error, Result};
+use crate::jsonx::{obj, s, Value};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    pub fn parse(name: &str) -> Result<Level> {
+        match name {
+            "error" => Ok(Level::Error),
+            "warn" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            other => Err(Error::Config(format!(
+                "unknown log level `{other}` (error|warn|info|debug)"
+            ))),
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static JSON: AtomicBool = AtomicBool::new(false);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        3 => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
+/// Switch the stderr format to one-line JSON events.
+pub fn set_json(json: bool) {
+    JSON.store(json, Ordering::Relaxed);
+}
+
+/// Parse a `<level>[,json]` spec (the `--log-level` / `PALLAS_LOG` value).
+pub fn parse_spec(spec: &str) -> Result<(Level, bool)> {
+    let mut level = Level::Info;
+    let mut json = false;
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        if part == "json" {
+            json = true;
+        } else {
+            level = Level::parse(part)?;
+        }
+    }
+    Ok((level, json))
+}
+
+/// Apply a `<level>[,json]` spec globally.
+pub fn set_spec(spec: &str) -> Result<()> {
+    let (level, json) = parse_spec(spec)?;
+    set_level(level);
+    set_json(json);
+    Ok(())
+}
+
+/// Apply `PALLAS_LOG` from the environment (silently ignored when unset or
+/// malformed — logging must never take a process down).
+pub fn init_from_env() {
+    if let Ok(spec) = std::env::var("PALLAS_LOG") {
+        let _ = set_spec(&spec);
+    }
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Render one event line (pure; the unit tests pin both formats).
+pub fn render(level: Level, target: &str, msg: &str, json: bool) -> String {
+    if json {
+        obj(vec![
+            ("level", s(level.name())),
+            ("target", s(target)),
+            ("msg", s(msg)),
+        ])
+        .to_json()
+    } else if level == Level::Info {
+        format!("[{target}] {msg}")
+    } else {
+        format!("[{target}] {}: {msg}", level.name())
+    }
+}
+
+/// Backing function of the `log_*!` macros; emits to stderr when `level`
+/// clears the global threshold.
+pub fn log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let line = render(level, target, &args.to_string(), JSON.load(Ordering::Relaxed));
+    eprintln!("{line}");
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(parse_spec("debug").unwrap(), (Level::Debug, false));
+        assert_eq!(parse_spec("warn,json").unwrap(), (Level::Warn, true));
+        assert_eq!(parse_spec("json").unwrap(), (Level::Info, true));
+        assert_eq!(parse_spec("").unwrap(), (Level::Info, false));
+        assert!(parse_spec("verbose").is_err());
+    }
+
+    #[test]
+    fn render_formats() {
+        assert_eq!(render(Level::Info, "server", "up", false), "[server] up");
+        assert_eq!(
+            render(Level::Warn, "server", "bad req", false),
+            "[server] warn: bad req"
+        );
+        // JSON lines parse back and escape correctly
+        let line = render(Level::Error, "engine", "oops \"x\"\n", true);
+        let v = crate::jsonx::parse(&line).unwrap();
+        assert_eq!(v.get("level").and_then(Value::as_str), Some("error"));
+        assert_eq!(v.get("msg").and_then(Value::as_str), Some("oops \"x\"\n"));
+    }
+
+    #[test]
+    fn level_ordering_gates() {
+        // note: LEVEL is process-global; restore the default when done
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        assert_eq!(level(), Level::Warn);
+        set_level(Level::Info);
+    }
+}

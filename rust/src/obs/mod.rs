@@ -1,0 +1,13 @@
+//! Observability for the sparse serving stack: per-layer sparsity series
+//! (`layers`), phase-level trace spans (`trace`) and leveled logging
+//! (`log`). Everything here is designed to cost ~nothing on the decode hot
+//! path when disabled and to stay allocation-free when enabled — the
+//! subsystem measures the paper's claims (layer-wise sparsity §4, neuron
+//! reuse §5.1, where the decode wall-clock goes) without perturbing them.
+
+pub mod layers;
+pub mod log;
+pub mod trace;
+
+pub use layers::{layer_live_counts, LayerSeries, LogHist, ReuseRing, AGG_WINDOWS};
+pub use trace::{span, span_on, Phase, Span, TraceEvent, TraceSink};

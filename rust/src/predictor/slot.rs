@@ -20,7 +20,7 @@ use crate::error::Result;
 use crate::predictor::hotset::{bits_from_mask_row, HotSet};
 use crate::predictor::policy::NeuronPolicy;
 use crate::runtime::tensor::Tensor;
-use crate::sparsity::{mask_accuracy, MaskAccuracy};
+use crate::sparsity::{mask_accuracy, mask_accuracy_per_layer, MaskAccuracy};
 
 /// EWMA weight of the newest shadow recall measurement.
 const RECALL_EWMA_ALPHA: f64 = 0.3;
@@ -189,18 +189,35 @@ impl SlotPredictor {
         row: usize,
         step_was_dense: bool,
     ) -> Result<Option<MaskAccuracy>> {
+        Ok(self.observe_scored(ffn_mask, row, step_was_dense)?.map(|(a, _)| a))
+    }
+
+    /// `observe()` that additionally returns the shadow score split per
+    /// layer (same measurement, chunked at `d_ff` boundaries) — the engine
+    /// feeds the split into `EngineMetrics::per_layer.recall`.
+    pub fn observe_scored(
+        &mut self,
+        ffn_mask: &Tensor,
+        row: usize,
+        step_was_dense: bool,
+    ) -> Result<Option<(MaskAccuracy, Vec<MaskAccuracy>)>> {
         if matches!(self.policy, NeuronPolicy::Dense) {
             self.last_prediction = None;
             return Ok(None);
         }
         let bits = bits_from_mask_row(ffn_mask, row, self.hotset.n_layers, self.hotset.d_ff)?;
         let acc = if step_was_dense {
-            self.last_prediction.take().map(|p| mask_accuracy(&p, &bits))
+            self.last_prediction.take().map(|p| {
+                (
+                    mask_accuracy(&p, &bits),
+                    mask_accuracy_per_layer(&p, &bits, self.hotset.n_layers),
+                )
+            })
         } else {
             self.last_prediction = None;
             None
         };
-        if let Some(a) = acc {
+        if let Some((a, _)) = &acc {
             self.push_recall(a.recall());
         }
         self.hotset.push_bits(bits)?;
@@ -282,6 +299,34 @@ mod tests {
         assert!(p.recall_estimate().unwrap() < 0.5);
         assert!(p.propose().is_none());
         assert!(p.stats.fallbacks >= 1);
+    }
+
+    #[test]
+    fn observe_scored_splits_the_flat_score_per_layer() {
+        let mut p = SlotPredictor::new(
+            NeuronPolicy::Reuse { window: 1, union_k: 1 },
+            0.5,
+            2,
+            8,
+        )
+        .unwrap();
+        // seed both layers with {1}, then observe layer-dependent drift
+        let mut data = vec![0.0f32; 2 * 8];
+        data[1] = 1.0; // layer 0 fires {1}
+        data[8 + 1] = 1.0; // layer 1 fires {1}
+        let seed = Tensor::f32(vec![2, 1, 8], data).unwrap();
+        p.observe(&seed, 0, true).unwrap();
+        let _ = p.propose(); // prediction = {1} on both layers
+        let mut data = vec![0.0f32; 2 * 8];
+        data[1] = 1.0; // layer 0 repeats {1}: recall 1
+        data[8 + 2] = 1.0; // layer 1 drifts to {2}: recall 0
+        let obs = Tensor::f32(vec![2, 1, 8], data).unwrap();
+        let (flat, per) = p.observe_scored(&obs, 0, true).unwrap().unwrap();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].recall(), 1.0);
+        assert_eq!(per[1].recall(), 0.0);
+        assert_eq!(flat.hits, per[0].hits + per[1].hits);
+        assert_eq!(flat.misses, per[0].misses + per[1].misses);
     }
 
     #[test]

@@ -135,6 +135,20 @@ impl BatchMask {
         }
     }
 
+    /// Per-layer live-neuron counts of one row (`n_layers` entries; a dense
+    /// row counts every neuron). Cheaper than [`BatchMask::row_live`] — no
+    /// index lists are built — and feeds the per-layer density series
+    /// (`obs::LayerSeries`): the counts sum to the row's mask popcount.
+    pub fn row_live_counts(&self, row: usize) -> Vec<usize> {
+        match &self.rows[row] {
+            MaskRow::Dense => vec![self.d_ff; self.n_layers],
+            MaskRow::Sparse(bits) => bits
+                .chunks(self.d_ff)
+                .map(|layer| layer.iter().filter(|&&b| b).count())
+                .collect(),
+        }
+    }
+
     /// Per-layer live-index lists of one row (`None` for a dense row — the
     /// caller substitutes its all-neurons list without allocating).
     pub fn row_live(&self, row: usize) -> Option<Vec<Vec<u32>>> {
@@ -318,6 +332,14 @@ pub trait ExecBackend {
              needs a backend with verify_g() > 0)",
             self.kind()
         )))
+    }
+
+    /// Attach (or detach, with `None`) a trace sink: backends that are
+    /// instrumented record phase spans (prefill / decode-step / attention /
+    /// ffn-gather / ffn-matvec / verify) into it. The default is a no-op so
+    /// un-instrumented backends stay trace-free without lying about it.
+    fn set_trace(&mut self, sink: Option<std::sync::Arc<crate::obs::TraceSink>>) {
+        let _ = sink;
     }
 
     /// KV cache shape for the decode batch: [L, 2, B, H, Tmax, hd].

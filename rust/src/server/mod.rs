@@ -16,19 +16,37 @@
 //!             requests get a JSON error line back, echoing the request id
 //!             when one could be parsed)
 //!
+//! Admin commands (any line carrying a `cmd` key):
+//!   {"cmd": "metrics"} -> one JSON snapshot line:
+//!              {"engine": <EngineMetrics::to_json(): counters, latency
+//!               summaries, per-slot and per-layer series>,
+//!               "server": {"served", "queue_depth", "active", "evictions",
+//!               "connections": [{"conn", "requests"}, ...]}}
+//!   {"cmd": "reset"}   -> {"ok": true, "cmd": "reset"}; zeroes the engine
+//!              metrics (keeping slot/layer geometry) and the
+//!              per-connection request counters
+//!   anything else      -> {"error": "unknown cmd `...`"}
+//!
 //! `policy` selects the per-request FFN neuron-mask policy
 //! (`NeuronPolicy::parse` forms: "dense", "reuse[:W[:K]]", "topp:B[:W]");
 //! omitted = the engine's default.
+//!
+//! Connection lifecycle: the writer thread holds one registered stream per
+//! accepted connection and *evicts* it on the first failed write/flush (the
+//! peer hung up), so long-lived servers do not accumulate dead sockets;
+//! evictions are counted in the `metrics` snapshot.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::engine::{Engine, NeuronPolicy, SamplingParams};
 use crate::error::{Error, Result};
-use crate::jsonx::{self, obj, Value};
+use crate::jsonx::{self, num, obj, Value};
 use crate::tokenizer::Bpe;
+use crate::{log_info, log_warn};
 
 struct Job {
     conn_id: u64,
@@ -42,8 +60,11 @@ struct Job {
 /// Reader-thread -> scheduler messages. Malformed requests travel here too
 /// (not straight to the writer): the scheduler owns the only reply sender,
 /// so dropping it on `serve()` return still shuts the writer thread down.
+/// Admin commands ride the same channel so snapshots see consistent engine
+/// state (the scheduler owns the engine).
 enum Inbound {
     Job(Job),
+    Admin { conn_id: u64, cmd: String },
     /// pre-rendered JSON error line for a request that failed to parse
     Malformed { conn_id: u64, line: String },
 }
@@ -55,7 +76,7 @@ struct Reply {
 
 /// Serve until `max_requests` completions (None = forever). Returns the
 /// number served. Bind to port 0 to let the OS pick (the bound address is
-/// printed and also sent to `ready_tx`).
+/// logged and also sent to `ready_tx`).
 pub fn serve(
     mut engine: Engine,
     bpe: Arc<Bpe>,
@@ -65,7 +86,7 @@ pub fn serve(
 ) -> Result<usize> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
-    println!("[server] listening on {local}");
+    log_info!("server", "listening on {local}");
     if let Some(tx) = ready_tx {
         let _ = tx.send(local);
     }
@@ -73,6 +94,9 @@ pub fn serve(
     let (job_tx, job_rx) = mpsc::channel::<Inbound>();
     let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
     let (writer_tx, writer_rx) = mpsc::channel::<(u64, TcpStream)>();
+    // dead connections evicted by the writer thread (shared with the
+    // scheduler so `{"cmd":"metrics"}` can report it)
+    let evictions = Arc::new(AtomicU64::new(0));
 
     // connection acceptor -> per-connection reader threads
     std::thread::spawn(move || {
@@ -90,12 +114,12 @@ pub fn serve(
                     if line.trim().is_empty() {
                         continue;
                     }
-                    let msg = match parse_request(id, &line) {
-                        Ok(job) => Inbound::Job(job),
+                    let msg = match parse_line(id, &line) {
+                        Ok(inbound) => inbound,
                         Err(e) => {
                             // malformed request: reply with a JSON error
                             // line, echoing the id when one parses
-                            eprintln!("[server] bad request: {e}");
+                            log_warn!("server", "bad request: {e}");
                             let req_id = jsonx::parse(line.trim())
                                 .ok()
                                 .and_then(|v| v.get("id").cloned())
@@ -118,7 +142,10 @@ pub fn serve(
         }
     });
 
-    // writer thread: fan replies back to their connections
+    // writer thread: fan replies back to their connections, evicting a
+    // connection on its first failed write (the peer hung up) so the map
+    // cannot grow monotonically over a long-lived server's lifetime
+    let writer_evictions = evictions.clone();
     std::thread::spawn(move || {
         let mut conns: std::collections::HashMap<u64, TcpStream> =
             std::collections::HashMap::new();
@@ -132,8 +159,11 @@ pub fn serve(
                         conns.insert(id, s);
                     }
                     if let Some(s) = conns.get_mut(&reply.conn_id) {
-                        let _ = writeln!(s, "{}", reply.line);
-                        let _ = s.flush();
+                        let wrote = writeln!(s, "{}", reply.line).and_then(|_| s.flush());
+                        if wrote.is_err() {
+                            conns.remove(&reply.conn_id);
+                            writer_evictions.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => continue,
@@ -145,12 +175,16 @@ pub fn serve(
     // engine scheduler loop (this thread)
     let mut pending: std::collections::HashMap<u64, (u64, f64)> =
         std::collections::HashMap::new();
+    // protocol lines handled per connection (jobs + admin commands)
+    let mut req_counts: std::collections::HashMap<u64, u64> =
+        std::collections::HashMap::new();
     let mut served = 0usize;
     loop {
-        // drain new jobs + malformed-request error replies
+        // drain new jobs, admin commands + malformed-request error replies
         loop {
             match job_rx.try_recv() {
                 Ok(Inbound::Job(job)) => {
+                    *req_counts.entry(job.conn_id).or_insert(0) += 1;
                     let tokens = bpe.encode(&job.prompt_text);
                     let eid = engine.submit_with_policy(
                         tokens,
@@ -159,6 +193,32 @@ pub fn serve(
                         job.policy,
                     );
                     pending.insert(eid, (job.conn_id, job.client_req_id));
+                }
+                Ok(Inbound::Admin { conn_id, cmd }) => {
+                    *req_counts.entry(conn_id).or_insert(0) += 1;
+                    let line = match cmd.as_str() {
+                        "metrics" => metrics_snapshot(
+                            &engine,
+                            served,
+                            &req_counts,
+                            evictions.load(Ordering::Relaxed),
+                        ),
+                        "reset" => {
+                            engine.metrics.reset();
+                            req_counts.clear();
+                            obj(vec![
+                                ("ok", Value::Bool(true)),
+                                ("cmd", Value::Str("reset".into())),
+                            ])
+                            .to_json()
+                        }
+                        other => obj(vec![(
+                            "error",
+                            Value::Str(format!("unknown cmd `{other}`")),
+                        )])
+                        .to_json(),
+                    };
+                    let _ = reply_tx.send(Reply { conn_id, line });
                 }
                 Ok(Inbound::Malformed { conn_id, line }) => {
                     let _ = reply_tx.send(Reply { conn_id, line });
@@ -200,7 +260,11 @@ pub fn serve(
                 served += 1;
                 if let Some(max) = max_requests {
                     if served >= max {
-                        println!("[server] served {served} requests; {}", engine.metrics.report());
+                        log_info!(
+                            "server",
+                            "served {served} requests; {}",
+                            engine.metrics.report()
+                        );
                         return Ok(served);
                     }
                 }
@@ -209,8 +273,54 @@ pub fn serve(
     }
 }
 
-fn parse_request(conn_id: u64, line: &str) -> Result<Job> {
-    let v = jsonx::parse(line)?;
+/// One `{"cmd":"metrics"}` reply line: the engine's full metrics snapshot
+/// (counters, latency summaries, per-slot + per-layer series) plus the
+/// server-level view (queue depth, active slots, per-connection counters,
+/// writer evictions).
+fn metrics_snapshot(
+    engine: &Engine,
+    served: usize,
+    req_counts: &std::collections::HashMap<u64, u64>,
+    evictions: u64,
+) -> String {
+    let mut ids: Vec<u64> = req_counts.keys().copied().collect();
+    ids.sort_unstable();
+    let connections: Vec<Value> = ids
+        .iter()
+        .map(|id| {
+            obj(vec![
+                ("conn", num(*id as f64)),
+                ("requests", num(req_counts[id] as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("engine", engine.metrics.to_json()),
+        (
+            "server",
+            obj(vec![
+                ("served", num(served as f64)),
+                ("queue_depth", num(engine.queue_len() as f64)),
+                ("active", num(engine.active_count() as f64)),
+                ("evictions", num(evictions as f64)),
+                ("connections", Value::Arr(connections)),
+            ]),
+        ),
+    ])
+    .to_json()
+}
+
+/// Parse one protocol line: a `cmd` key makes it an admin command, anything
+/// else must be a generation request.
+fn parse_line(conn_id: u64, line: &str) -> Result<Inbound> {
+    let v = jsonx::parse(line.trim())?;
+    if let Some(c) = v.get("cmd") {
+        let cmd = c
+            .as_str()
+            .ok_or_else(|| Error::Config("`cmd` is not a string".into()))?
+            .to_string();
+        return Ok(Inbound::Admin { conn_id, cmd });
+    }
     let policy = match v.get("policy") {
         None | Some(Value::Null) => None,
         Some(p) => {
@@ -220,7 +330,7 @@ fn parse_request(conn_id: u64, line: &str) -> Result<Job> {
             Some(NeuronPolicy::parse(spec)?)
         }
     };
-    Ok(Job {
+    Ok(Inbound::Job(Job {
         conn_id,
         client_req_id: v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0),
         prompt_text: v.str_of("prompt")?,
@@ -231,7 +341,7 @@ fn parse_request(conn_id: u64, line: &str) -> Result<Job> {
             seed: v.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
         },
         policy,
-    })
+    }))
 }
 
 /// Simple blocking client for examples/tests.
@@ -261,6 +371,13 @@ impl Client {
             ("temperature", Value::Num(temperature)),
         ])
         .to_json();
+        self.send_line(&line)?;
+        self.recv()
+    }
+
+    /// Send one admin command (`metrics`, `reset`, ...) and read the reply.
+    pub fn cmd(&mut self, cmd: &str) -> Result<Value> {
+        let line = obj(vec![("cmd", Value::Str(cmd.to_string()))]).to_json();
         self.send_line(&line)?;
         self.recv()
     }

@@ -66,6 +66,25 @@ pub fn mask_accuracy(predicted: &[bool], observed: &[bool]) -> MaskAccuracy {
     acc
 }
 
+/// Score `predicted` against `observed` per layer: both are flat
+/// `[n_layers * d_ff]` masks, chunked at layer boundaries. The obs layer
+/// feeds these into `LayerSeries::recall` — the measurement ROADMAP item 5's
+/// per-layer recall floors will gate on.
+pub fn mask_accuracy_per_layer(
+    predicted: &[bool],
+    observed: &[bool],
+    n_layers: usize,
+) -> Vec<MaskAccuracy> {
+    debug_assert_eq!(predicted.len(), observed.len());
+    debug_assert!(n_layers > 0 && predicted.len() % n_layers == 0);
+    let d_ff = predicted.len() / n_layers;
+    predicted
+        .chunks(d_ff)
+        .zip(observed.chunks(d_ff))
+        .map(|(p, o)| mask_accuracy(p, o))
+        .collect()
+}
+
 use crate::model::LayerSparsity;
 use crate::runtime::tensor::Tensor;
 
@@ -235,6 +254,30 @@ mod tests {
         assert_eq!(none.precision(), 1.0);
         assert!((mask_density(&pred) - 0.5).abs() < 1e-12);
         assert_eq!(mask_density(&[]), 0.0);
+    }
+
+    #[test]
+    fn per_layer_accuracy_sums_to_flat_accuracy() {
+        let pred = [true, false, true, true, false, false];
+        let obs = [true, true, false, true, false, true];
+        let per = mask_accuracy_per_layer(&pred, &obs, 2);
+        assert_eq!(per.len(), 2);
+        let flat = mask_accuracy(&pred, &obs);
+        let sum = per.iter().fold(MaskAccuracy::default(), |a, b| MaskAccuracy {
+            hits: a.hits + b.hits,
+            misses: a.misses + b.misses,
+            false_alarms: a.false_alarms + b.false_alarms,
+        });
+        assert_eq!(sum, flat, "layer chunks must partition the flat score");
+        // layer 0: pred {0,2} obs {0,1} -> 1 hit, 1 miss, 1 false alarm
+        assert_eq!(
+            per[0],
+            MaskAccuracy {
+                hits: 1,
+                misses: 1,
+                false_alarms: 1
+            }
+        );
     }
 
     #[test]

@@ -7,6 +7,7 @@ use rsb::engine::ExecBackend;
 use rsb::engine::request::SamplingParams;
 use rsb::engine::sampler::{argmax, log_softmax, sample, softmax};
 use rsb::jsonx::{self, Value};
+use rsb::obs::layer_live_counts;
 use rsb::predictor::{HotSet, NeuronPolicy, SlotPredictor};
 use rsb::runtime::checkpoint;
 use rsb::runtime::tensor::Tensor;
@@ -808,6 +809,53 @@ fn prop_ffn_from_row_major_round_trip() {
             assert!(
                 (*g as f64 - w_).abs() < 1e-3 * (1.0 + w_.abs()),
                 "ffn mismatch: {g} vs {w_}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_per_layer_live_counts_sum_to_mask_popcount() {
+    // ISSUE 6: the per-layer split of a mask row must account for every
+    // live neuron exactly once — sum over layers of `row_live_counts` is
+    // the row's popcount, and sparse rows agree with `layer_live_counts`
+    // on the raw bits.
+    check("per_layer_live_counts", 40, |rng| {
+        let n_layers = rng.range(1, 6);
+        let d_ff = rng.range(1, 64);
+        let b = rng.range(1, 5);
+        let mut mask = BatchMask::dense(b, n_layers, d_ff);
+        let mut row_bits: Vec<Option<Vec<bool>>> = vec![None; b];
+        for row in 0..b {
+            if rng.chance(0.7) {
+                let density = if rng.chance(0.5) { 0.3 } else { 0.05 };
+                let bits: Vec<bool> =
+                    (0..n_layers * d_ff).map(|_| rng.chance(density)).collect();
+                mask.set_sparse(row, bits.clone()).unwrap();
+                row_bits[row] = Some(bits);
+            }
+        }
+        for row in 0..b {
+            let counts = mask.row_live_counts(row);
+            assert_eq!(counts.len(), n_layers);
+            let total: usize = counts.iter().sum();
+            match &row_bits[row] {
+                Some(bits) => {
+                    let popcount = bits.iter().filter(|&&x| x).count();
+                    assert_eq!(total, popcount, "live counts must sum to popcount");
+                    assert_eq!(
+                        counts,
+                        layer_live_counts(bits, n_layers, d_ff),
+                        "per-layer split must match the raw bits"
+                    );
+                }
+                None => assert_eq!(total, n_layers * d_ff, "dense row = all live"),
+            }
+            // density agreement with the flat per-row view the engine logs
+            let density = total as f64 / (n_layers * d_ff) as f64;
+            assert!(
+                (density - mask.row_density(row)).abs() < 1e-12,
+                "row_live_counts and row_density disagree"
             );
         }
     });

@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Summarize (or validate) a Chrome-trace JSONL dump from the Rust stack.
+
+The serving stack's `--trace out.jsonl` writes one complete JSON event per
+line in the Chrome trace-event format the `obs::trace` module pins:
+
+    {"name": "decode-step", "ph": "X", "ts": <start us>, "dur": <us>,
+     "pid": 0, "tid": <worker>}
+
+Usage:
+    python tools/trace_summary.py runs/trace.jsonl           # phase report
+    python tools/trace_summary.py runs/trace.jsonl --check   # CI validation
+
+`--check` exits non-zero unless every line parses, carries the complete
+key set, uses ph == "X", a known phase name and non-negative timings —
+the schema contract the Rust golden test also pins. The default report
+prints per-phase counts and total/mean/max durations so a bench trace
+answers "where does the decode wall-clock go" without chrome://tracing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+# keep in sync with obs::trace::Phase::name()
+KNOWN_PHASES = {
+    "prefill",
+    "mask-plan",
+    "decode-step",
+    "attention",
+    "ffn-gather",
+    "ffn-matvec",
+    "verify",
+    "draft-step",
+}
+REQUIRED_KEYS = {"name", "ph", "ts", "dur", "pid", "tid"}
+
+
+def load(path: str, check: bool) -> list[dict]:
+    events = []
+    errors = 0
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                print(f"{path}:{lineno}: bad JSON: {e}", file=sys.stderr)
+                errors += 1
+                continue
+            missing = REQUIRED_KEYS - ev.keys()
+            if missing:
+                print(f"{path}:{lineno}: missing keys {sorted(missing)}", file=sys.stderr)
+                errors += 1
+                continue
+            if ev["ph"] != "X":
+                print(f"{path}:{lineno}: ph must be \"X\", got {ev['ph']!r}", file=sys.stderr)
+                errors += 1
+                continue
+            if ev["name"] not in KNOWN_PHASES:
+                print(f"{path}:{lineno}: unknown phase {ev['name']!r}", file=sys.stderr)
+                errors += 1
+                continue
+            if ev["ts"] < 0 or ev["dur"] < 0:
+                print(f"{path}:{lineno}: negative ts/dur", file=sys.stderr)
+                errors += 1
+                continue
+            events.append(ev)
+    if check and errors:
+        print(f"--check: {errors} invalid line(s) in {path}", file=sys.stderr)
+        sys.exit(1)
+    return events
+
+
+def report(events: list[dict]) -> None:
+    if not events:
+        print("no events")
+        return
+    by_phase: dict[str, list[float]] = defaultdict(list)
+    for ev in events:
+        by_phase[ev["name"]].append(float(ev["dur"]))
+    span = max(e["ts"] + e["dur"] for e in events) - min(e["ts"] for e in events)
+    print(f"{len(events)} events over {span / 1e3:.2f} ms wall-clock")
+    print(f"{'phase':<12} {'count':>7} {'total ms':>10} {'mean us':>9} {'max us':>9}")
+    for name, durs in sorted(by_phase.items(), key=lambda kv: -sum(kv[1])):
+        total = sum(durs)
+        print(
+            f"{name:<12} {len(durs):>7} {total / 1e3:>10.3f} "
+            f"{total / len(durs):>9.1f} {max(durs):>9.1f}"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace JSONL file (from --trace)")
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="validate the schema and exit non-zero on any invalid line",
+    )
+    args = ap.parse_args()
+    events = load(args.trace, args.check)
+    if args.check:
+        if not events:
+            print(f"--check: {args.trace} has no events", file=sys.stderr)
+            sys.exit(1)
+        print(f"--check: {args.trace}: {len(events)} events, schema OK")
+        return
+    report(events)
+
+
+if __name__ == "__main__":
+    main()
