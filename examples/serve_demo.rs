@@ -42,7 +42,7 @@ fn main() -> rsb::Result<()> {
             model.init_params(0)?
         };
         let engine = Engine::with_model(model, params, EngineConfig::default())?;
-        serve(engine, bpe_srv, "127.0.0.1:0", Some(n_requests), Some(ready_tx))
+        serve(engine, bpe_srv, "127.0.0.1:0", Some(n_requests), Some(ready_tx), 0)
     });
     let addr = ready_rx
         .recv_timeout(std::time::Duration::from_secs(60))

@@ -45,6 +45,39 @@ pub fn ffn_sparse_cost(cfg: &ModelCfg, live_frac: f64) -> StepCost {
     }
 }
 
+/// Dense per-token FFN cost with per-neuron int8 weights (one f32 scale
+/// per weight row): the FLOPs are unchanged — dequant-on-accumulate runs
+/// the same multiply-adds — but every weight streams 1 byte instead of 4,
+/// plus 4 bytes of scale per row. Mirrors `sparse::sparse_ffn_bytes_q8`:
+/// a live neuron costs `rows·d + 4·rows` bytes instead of `4·rows·d`.
+pub fn ffn_dense_cost_q8(cfg: &ModelCfg) -> StepCost {
+    let d = cfg.d_model as f64;
+    let f = cfg.d_ff as f64;
+    let l = cfg.n_layers as f64;
+    let n_rows = if cfg.gated { 3.0 } else { 2.0 }; // up [+ gate] + down
+    let weights = l * n_rows * f * d;
+    StepCost {
+        flops: 2.0 * weights,
+        bytes: weights + l * n_rows * f * 4.0,
+    }
+}
+
+/// Predicted-sparse per-token FFN cost at `live_frac` with int8 weights.
+pub fn ffn_sparse_cost_q8(cfg: &ModelCfg, live_frac: f64) -> StepCost {
+    let dense = ffn_dense_cost_q8(cfg);
+    let live = live_frac.clamp(0.0, 1.0);
+    StepCost {
+        flops: dense.flops * live,
+        bytes: dense.bytes * live,
+    }
+}
+
+/// FFN weight-IO reduction of int8 over f32 (→ 4 as `d_model` grows; the
+/// per-row scale keeps it strictly below 4).
+pub fn q8_byte_ratio(cfg: &ModelCfg) -> f64 {
+    ffn_dense_cost(cfg).bytes / ffn_dense_cost_q8(cfg).bytes
+}
+
 /// FFN FLOP reduction factor (the `bench_predictor` acceptance number):
 /// dense FFN FLOPs / predicted FFN FLOPs.
 pub fn ffn_flop_reduction(live_frac: f64) -> f64 {
@@ -77,10 +110,36 @@ pub fn step_cost(cfg: &ModelCfg, ctx: usize, live_frac: f64) -> StepCost {
     }
 }
 
+/// Whole decode-step cost with int8 FFN weights at `live_frac` (the
+/// non-FFN projections stay f32, matching `HostBackend`'s q8 mode).
+pub fn step_cost_q8(cfg: &ModelCfg, ctx: usize, live_frac: f64) -> StepCost {
+    let fl: Flops = flops_per_token(cfg, ctx);
+    let dense_ffn = ffn_dense_cost(cfg);
+    let sparse_ffn = ffn_sparse_cost_q8(cfg, live_frac);
+    StepCost {
+        flops: fl.total() - dense_ffn.flops + sparse_ffn.flops,
+        bytes: non_ffn_weight_bytes(cfg) + sparse_ffn.bytes,
+    }
+}
+
 /// Roofline latency of a decode step with a `live_frac` mask.
 pub fn step_latency(cfg: &ModelCfg, ctx: usize, live_frac: f64, dev: &DeviceProfile) -> f64 {
     let c = step_cost(cfg, ctx, live_frac);
     dev.latency(c.bytes, c.flops)
+}
+
+/// Projected speedup of a q8 *sparse* step over the f32 *dense* step —
+/// the roofline side of `bench_decode`'s q8 acceptance gate (sparse int8
+/// decode must beat dense f32 by at least the density ratio).
+pub fn projected_speedup_q8(
+    cfg: &ModelCfg,
+    ctx: usize,
+    live_frac: f64,
+    dev: &DeviceProfile,
+) -> f64 {
+    let d = step_cost(cfg, ctx, 1.0);
+    let q = step_cost_q8(cfg, ctx, live_frac);
+    dev.latency(d.bytes, d.flops) / dev.latency(q.bytes, q.flops)
 }
 
 /// Projected whole-step speedup of a `live_frac` mask over dense.
@@ -192,6 +251,52 @@ mod tests {
         assert!((ffn_flop_reduction(0.25) - 4.0).abs() < 1e-12);
         assert!((ffn_flop_reduction(1.0) - 1.0).abs() < 1e-12);
         assert!(ffn_flop_reduction(0.0).is_infinite());
+    }
+
+    #[test]
+    fn q8_costs_quarter_bytes_at_equal_flops() {
+        let c = cfg();
+        let f32_cost = ffn_dense_cost(&c);
+        let q8_cost = ffn_dense_cost_q8(&c);
+        assert_eq!(f32_cost.flops, q8_cost.flops, "dequant keeps the FLOPs");
+        let ratio = q8_byte_ratio(&c);
+        assert!(ratio > 3.9 && ratio < 4.0, "byte ratio {ratio}");
+        // mirrors the kernel-side byte accounting exactly
+        let per_layer_live = c.d_ff; // dense = all neurons live
+        let kernel_bytes = c.n_layers as f64
+            * crate::sparse::sparse_ffn_bytes_q8(per_layer_live, c.d_model) as f64;
+        assert_eq!(q8_cost.bytes, kernel_bytes);
+        // gated models stream three rows per neuron
+        let mut g = cfg();
+        g.gated = true;
+        let lf = (g.n_layers * g.d_ff) as f64;
+        assert_eq!(ffn_dense_cost_q8(&g).bytes, lf * (3.0 * g.d_model as f64 + 12.0));
+        // sparse scales both axes
+        let half = ffn_sparse_cost_q8(&c, 0.5);
+        assert_eq!(half.flops, q8_cost.flops * 0.5);
+        assert_eq!(half.bytes, q8_cost.bytes * 0.5);
+    }
+
+    #[test]
+    fn q8_projected_speedup_beats_density_ratio_when_ffn_dominates() {
+        // a SIMD core: ~12 GB/s of streamed weights but tens of GFLOP/s,
+        // so the step stays memory-bound even after int8 shrinks the bytes
+        // (CPU1's scalar 8 GFLOP/s would go compute-bound at q8)
+        let dev = DeviceProfile {
+            mem_bw: 12e9,
+            flops: 100e9,
+            overhead: 1e-7,
+        };
+        let mut c = cfg();
+        c.d_ff = 2048; // FFN-heavy, like bench_decode's q8 gate config
+        // q8 at full density already wins: fewer bytes, same FLOPs
+        assert!(projected_speedup_q8(&c, 32, 1.0, &dev) > 1.0);
+        // sparse q8 compounds the two savings: at live 0.5 the projection
+        // clears the 1/live gate the decode bench enforces
+        let s = projected_speedup_q8(&c, 32, 0.5, &dev);
+        assert!(s > 2.0, "q8 sparse projection too small: {s}");
+        // and more sparsity keeps helping
+        assert!(projected_speedup_q8(&c, 32, 0.25, &dev) > s);
     }
 
     #[test]

@@ -347,9 +347,6 @@ impl Engine {
             let Some(a) = &mut self.active[slot] else {
                 continue;
             };
-            if a.first_token_at.is_none() {
-                a.first_token_at = Some(std::time::Instant::now());
-            }
             if self.cfg.track_sparsity {
                 if let Some(tr) = &mut self.trackers[slot] {
                     tr.push_mask(ffn_mask, slot)?;
@@ -443,11 +440,9 @@ impl Engine {
                 }
                 let total_ms = a.enq_elapsed_ms();
                 self.metrics.requests_completed += 1;
-                if let Some(t) = a.first_token_at {
-                    self.metrics.time_to_first_token_ms.push(
-                        (t - a.request.enqueued_at).as_secs_f64() * 1e3,
-                    );
-                }
+                self.metrics.time_to_first_token_ms.push(
+                    (a.first_token_at - a.request.enqueued_at).as_secs_f64() * 1e3,
+                );
                 done.push(Completion {
                     id: a.request.id,
                     prompt_len: a.request.prompt.len(),
@@ -509,6 +504,10 @@ impl Engine {
             let row = &ld[(len - 1) * vocab..len * vocab];
             let mut rng = Rng::new(req.sampling.seed).fold_in(req.id);
             let first = sampler::sample(row, &req.sampling, &mut rng);
+            // the first token exists *now* (sampled from prefill logits) —
+            // stamping it at the first decode step would fold a whole decode
+            // batch's latency into TTFT
+            let first_token_at = std::time::Instant::now();
             let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
             let queue_ms = (t0 - req.enqueued_at).as_secs_f64() * 1e3;
             self.metrics.prefill_ms.push(prefill_ms);
@@ -550,7 +549,7 @@ impl Engine {
                 rng,
                 prefill_ms,
                 queue_ms,
-                first_token_at: None,
+                first_token_at,
                 mask_density_sum: 0.0,
                 enforced_rows: 0,
                 request: req,

@@ -78,7 +78,9 @@ pub struct ActiveRequest {
     pub prefill_ms: f64,
     /// measured wait between enqueue and admission (carried to Completion)
     pub queue_ms: f64,
-    pub first_token_at: Option<std::time::Instant>,
+    /// when the first token was *sampled* — during prefill in `admit()`,
+    /// not at the first decode step (TTFT must not include decode latency)
+    pub first_token_at: std::time::Instant,
     /// running sum of this slot's enforced-row mask densities (per-slot
     /// masking: this request's own masks, not the batch union)
     pub mask_density_sum: f64,

@@ -28,7 +28,37 @@ use crate::obs::{span_on, Phase, TraceSink};
 use crate::runtime::artifact::ModelCfg;
 use crate::runtime::backend::{BatchMask, DecodeOut, ExecBackend, PrefillOut, VerifyOut};
 use crate::runtime::tensor::Tensor;
-use crate::sparse::rowskip_gemv;
+use crate::sparse::{rowskip_gemv, simd};
+
+/// Which FFN weight representation the backend computes with.
+///
+/// `Q8` stores both FFN projections (and llama's gate) per-neuron int8
+/// with one f32 scale per neuron row, quartering the bytes a live neuron
+/// streams; attention, norms and the LM head stay f32. The f32 decode
+/// path is byte-identical whether or not the quantized copy exists.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum QuantMode {
+    F32,
+    Q8,
+}
+
+impl QuantMode {
+    /// Parse a `--quant` flag value (`f32` | `q8`, with `int8` as alias).
+    pub fn parse(s: &str) -> Option<QuantMode> {
+        match s {
+            "f32" => Some(QuantMode::F32),
+            "q8" | "int8" => Some(QuantMode::Q8),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::F32 => "f32",
+            QuantMode::Q8 => "q8",
+        }
+    }
+}
 
 pub struct HostBackend {
     cfg: ModelCfg,
@@ -45,6 +75,8 @@ pub struct HostBackend {
     all_live: Vec<u32>,
     /// Trace sink for phase spans (None = tracing off, zero clock reads).
     trace: Option<std::sync::Arc<TraceSink>>,
+    /// FFN weight representation ([`QuantMode::F32`] unless `with_quant`).
+    quant: QuantMode,
 }
 
 /// Mutable view of one sequence's slice of the step's output buffers: its
@@ -117,6 +149,7 @@ impl HostBackend {
             threads: resolve_threads(0),
             all_live,
             trace: None,
+            quant: QuantMode::F32,
         })
     }
 
@@ -164,6 +197,27 @@ impl HostBackend {
         }
         self.verify_g = verify_g;
         Ok(self)
+    }
+
+    /// Select the FFN weight representation (default f32). `Q8` builds the
+    /// int8 copy of every layer's FFN from the resident f32 weights; `F32`
+    /// drops any quantized copy, restoring the exact original path.
+    pub fn with_quant(mut self, mode: QuantMode) -> HostBackend {
+        match mode {
+            QuantMode::Q8 => self.params.quantize_ffns(),
+            QuantMode::F32 => {
+                for layer in &mut self.params.layers {
+                    layer.ffn.quant = None;
+                }
+            }
+        }
+        self.quant = mode;
+        self
+    }
+
+    /// Active FFN weight representation.
+    pub fn quant(&self) -> QuantMode {
+        self.quant
     }
 
     /// Resolved decode worker-thread count.
@@ -348,11 +402,7 @@ impl HostBackend {
             }
             for t in 0..v {
                 let e = &self.params.embed[t * d..(t + 1) * d];
-                let mut dot = 0.0f32;
-                for (hi, ei) in hg.iter().zip(e) {
-                    dot += hi * ei;
-                }
-                bufs.logits[g * v + t] = dot;
+                bufs.logits[g * v + t] = simd::dot(hg, e);
             }
         }
         Ok(())
@@ -853,6 +903,71 @@ mod tests {
                 &out.logits.as_f32().unwrap()[v..],
                 &dense.logits.as_f32().unwrap()[v..],
                 "{arch}: row 1's empty mask must change row 1"
+            );
+        }
+    }
+
+    #[test]
+    fn quant_mode_parses() {
+        assert_eq!(QuantMode::parse("f32"), Some(QuantMode::F32));
+        assert_eq!(QuantMode::parse("q8"), Some(QuantMode::Q8));
+        assert_eq!(QuantMode::parse("int8"), Some(QuantMode::Q8));
+        assert_eq!(QuantMode::parse("fp16"), None);
+        assert_eq!(QuantMode::Q8.name(), "q8");
+        assert_eq!(QuantMode::F32.name(), "f32");
+    }
+
+    /// The q8 path: per-row live supersets stay bit-identical to q8-dense
+    /// (quantization swaps the weights, not the superset guarantee), the
+    /// logits track f32 closely, and dropping back to f32 restores the
+    /// never-quantized bytes exactly.
+    #[test]
+    fn q8_decode_is_superset_safe_and_tracks_f32() {
+        for arch in ["opt", "llama", "falcon"] {
+            let f32_be = backend(arch);
+            let c = f32_be.config().clone();
+            let kv = Tensor::zeros_f32(f32_be.kv_shape());
+            let pos = Tensor::i32(vec![2], vec![0, 0]).unwrap();
+            let dt = Tensor::i32(vec![2, 1], vec![4, 11]).unwrap();
+            let mask = dense_mask(&f32_be);
+            let f32_out = f32_be.decode(&kv, &pos, &dt, &mask).unwrap();
+            let q8_be = backend(arch).with_quant(QuantMode::Q8);
+            assert_eq!(q8_be.quant(), QuantMode::Q8);
+            let q8_dense = q8_be.decode(&kv, &pos, &dt, &mask).unwrap();
+            let a = f32_out.logits.as_f32().unwrap();
+            let b = q8_dense.logits.as_f32().unwrap();
+            assert_ne!(a, b, "{arch}: q8 must actually change the math");
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 0.05, "{arch}: q8 logits drifted: {x} vs {y}");
+            }
+            // superset safety transfers to the q8 weights
+            let fm = q8_dense.ffn_mask.as_f32().unwrap();
+            let mut live = BatchMask::dense(2, c.n_layers, c.d_ff);
+            for row in 0..2 {
+                let mut bits = vec![false; c.n_layers * c.d_ff];
+                for l in 0..c.n_layers {
+                    for j in 0..c.d_ff {
+                        if fm[(l * 2 + row) * c.d_ff + j] != 0.0 {
+                            bits[l * c.d_ff + j] = true;
+                        }
+                    }
+                }
+                live.set_sparse(row, bits).unwrap();
+            }
+            let q8_sparse = q8_be.decode(&kv, &pos, &dt, &live).unwrap();
+            assert_eq!(
+                q8_dense.logits.as_f32().unwrap(),
+                q8_sparse.logits.as_f32().unwrap(),
+                "{arch}: q8 live supersets must be bit-identical to q8 dense"
+            );
+            // back to f32: byte-identical to a never-quantized backend
+            let round = q8_be.with_quant(QuantMode::F32);
+            assert_eq!(round.quant(), QuantMode::F32);
+            let back = round.decode(&kv, &pos, &dt, &mask).unwrap();
+            assert_eq!(
+                a,
+                back.logits.as_f32().unwrap(),
+                "{arch}: f32 after q8 must restore the original path"
             );
         }
     }

@@ -1,10 +1,11 @@
-//! Scalar f32 forward-pass primitives for the host backend — faithful
-//! mirrors of the L2 model's blocks (`python/compile/model.py`): LayerNorm /
-//! RMSNorm with eps 1e-5, the 10000-base rotary embedding, and causal
-//! single-query attention over a KV row. Numerics are plain sequential f32
-//! so a prefill and the equivalent decode chain are *bit-identical* (each
-//! token's computation graph is the same either way; pinned by the
-//! integration tests).
+//! f32 forward-pass primitives for the host backend — faithful mirrors of
+//! the L2 model's blocks (`python/compile/model.py`): LayerNorm / RMSNorm
+//! with eps 1e-5, the 10000-base rotary embedding, and causal single-query
+//! attention over a KV row. The attention dot products and the value
+//! accumulation run on [`crate::sparse::simd`], whose canonical lane order
+//! is identical at every dispatch level — so a prefill and the equivalent
+//! decode chain stay *bit-identical* (each token's computation graph is the
+//! same either way; pinned by the integration tests) on any host.
 
 /// LayerNorm: `(x - mean) / sqrt(var + 1e-5) * scale + bias`.
 pub fn layer_norm(x: &[f32], scale: &[f32], bias: &[f32], out: &mut [f32]) {
@@ -84,11 +85,7 @@ pub fn attend_one(
     let mut max = f32::NEG_INFINITY;
     for s in 0..n {
         let k = &keys[s * head_dim..(s + 1) * head_dim];
-        let mut dot = 0.0f32;
-        for (qi, ki) in q.iter().zip(k) {
-            dot += qi * ki;
-        }
-        let sc = dot * scale;
+        let sc = crate::sparse::simd::dot(q, k) * scale;
         scores[s] = sc;
         if sc > max {
             max = sc;
@@ -102,11 +99,8 @@ pub fn attend_one(
     let inv = 1.0 / sum;
     out.fill(0.0);
     for s in 0..n {
-        let p = scores[s] * inv;
         let v = &values[s * head_dim..(s + 1) * head_dim];
-        for (o, vi) in out.iter_mut().zip(v) {
-            *o += p * vi;
-        }
+        crate::sparse::simd::axpy(out, scores[s] * inv, v);
     }
 }
 

@@ -30,5 +30,5 @@ pub mod backend;
 pub mod math;
 pub mod weights;
 
-pub use backend::HostBackend;
-pub use weights::{param_specs, Act, HostFfn, HostParams, LayerWeights};
+pub use backend::{HostBackend, QuantMode};
+pub use weights::{param_specs, Act, FfnQ8, HostFfn, HostParams, LayerWeights};

@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 use crate::error::{Error, Result};
 use crate::runtime::artifact::ModelCfg;
 use crate::runtime::tensor::Tensor;
-use crate::sparse::FfnWeights;
+use crate::sparse::{simd, FfnWeights, FfnWeightsQ8, QuantMat};
 
 /// FFN activation on the host path (mirror of python `apply_act`; the
 /// relufication stages decide which one a checkpoint effectively uses).
@@ -55,6 +55,14 @@ impl Act {
     }
 }
 
+/// Quantized companion of a [`HostFfn`]: both projections (plus llama's
+/// gate) per-neuron int8, built once from the f32 weights.
+pub struct FfnQ8 {
+    pub w: FfnWeightsQ8,
+    /// Quantized gate projection, neuron-major `[F × d]` (llama only).
+    pub gate: Option<QuantMat>,
+}
+
 /// One layer's FFN on the host path. The non-gated projections live in a
 /// neuron-major [`FfnWeights`] (the `sparse_ffn_matvec` substrate); llama's
 /// gate projection rides along in the same neuron-major layout so a skipped
@@ -66,40 +74,70 @@ pub struct HostFfn {
     /// Down-projection bias, added outside the mask (opt only).
     pub b_down: Option<Vec<f32>>,
     pub act: Act,
+    /// Int8 weights, when the backend runs `--quant q8`. The f32 copy stays
+    /// resident (unread memory costs no decode bandwidth) so probes/tests
+    /// can compare paths on the same layer.
+    pub quant: Option<FfnQ8>,
 }
 
 impl HostFfn {
+    /// Build the int8 companion from the resident f32 weights.
+    pub fn quantized(&self) -> FfnQ8 {
+        FfnQ8 {
+            w: FfnWeightsQ8::quantize(&self.w),
+            gate: self
+                .gate_t
+                .as_ref()
+                .map(|g| QuantMat::quantize(g, self.w.f, self.w.d)),
+        }
+    }
+
+    /// Quantize in place: subsequent [`HostFfn::forward_token`] calls run
+    /// the int8 path.
+    pub fn enable_quant(&mut self) {
+        self.quant = Some(self.quantized());
+    }
+
     /// Masked FFN for one token: compute only the neurons in `live`
     /// (strictly increasing indices), writing the output into `y` ([d]) and
     /// recording post-gate activation liveness into `act_row` ([F], caller
     /// zeroed). Iteration order over `live` matches
     /// [`crate::sparse::sparse_ffn_matvec`] exactly, so on the ReLU
     /// non-gated path the two are bit-identical (pinned by a unit test) and
-    /// a live superset reproduces the dense output bit-for-bit.
+    /// a live superset reproduces the dense output bit-for-bit. With
+    /// `quant` populated the same structure runs over the int8 rows
+    /// (mirroring [`crate::sparse::sparse_ffn_matvec_q8`]).
     pub fn forward_token(&self, x: &[f32], live: &[u32], y: &mut [f32], act_row: &mut [bool]) {
         let d = self.w.d;
         debug_assert_eq!(x.len(), d);
         debug_assert_eq!(y.len(), d);
         debug_assert_eq!(act_row.len(), self.w.f);
         y.fill(0.0);
+        match &self.quant {
+            Some(q) => self.accumulate_q8(q, x, live, y, act_row),
+            None => self.accumulate_f32(x, live, y, act_row),
+        }
+        if let Some(b) = &self.b_down {
+            for (yk, bk) in y.iter_mut().zip(b) {
+                *yk += bk;
+            }
+        }
+    }
+
+    fn accumulate_f32(&self, x: &[f32], live: &[u32], y: &mut [f32], act_row: &mut [bool]) {
+        let d = self.w.d;
         match &self.gate_t {
             None => {
                 for &j in live {
                     let j = j as usize;
                     let row = &self.w.w_up_t[j * d..(j + 1) * d];
-                    let mut pre = self.w.b_up[j];
-                    for (wi, xi) in row.iter().zip(x) {
-                        pre += wi * xi;
-                    }
+                    let pre = self.w.b_up[j] + simd::dot(row, x);
                     let a = self.act.apply(pre);
                     if a == 0.0 {
                         continue; // dead neuron: nothing to scatter
                     }
                     act_row[j] = true;
-                    let down = &self.w.w_down[j * d..(j + 1) * d];
-                    for (yk, wk) in y.iter_mut().zip(down) {
-                        *yk += a * wk;
-                    }
+                    simd::axpy(y, a, &self.w.w_down[j * d..(j + 1) * d]);
                 }
             }
             Some(gate_t) => {
@@ -108,32 +146,50 @@ impl HostFfn {
                 // value is (mirror of python gated_ffn_ref).
                 for &j in live {
                     let j = j as usize;
-                    let grow = &gate_t[j * d..(j + 1) * d];
-                    let mut pre = 0.0f32;
-                    for (wi, xi) in grow.iter().zip(x) {
-                        pre += wi * xi;
-                    }
-                    let g = self.act.apply(pre);
+                    let g = self.act.apply(simd::dot(&gate_t[j * d..(j + 1) * d], x));
                     if g == 0.0 {
                         continue;
                     }
                     act_row[j] = true;
-                    let urow = &self.w.w_up_t[j * d..(j + 1) * d];
-                    let mut up = 0.0f32;
-                    for (wi, xi) in urow.iter().zip(x) {
-                        up += wi * xi;
-                    }
-                    let a = g * up;
-                    let down = &self.w.w_down[j * d..(j + 1) * d];
-                    for (yk, wk) in y.iter_mut().zip(down) {
-                        *yk += a * wk;
-                    }
+                    let up = simd::dot(&self.w.w_up_t[j * d..(j + 1) * d], x);
+                    simd::axpy(y, g * up, &self.w.w_down[j * d..(j + 1) * d]);
                 }
             }
         }
-        if let Some(b) = &self.b_down {
-            for (yk, bk) in y.iter_mut().zip(b) {
-                *yk += bk;
+    }
+
+    fn accumulate_q8(
+        &self,
+        q: &FfnQ8,
+        x: &[f32],
+        live: &[u32],
+        y: &mut [f32],
+        act_row: &mut [bool],
+    ) {
+        match &q.gate {
+            None => {
+                for &j in live {
+                    let j = j as usize;
+                    let pre = q.w.b_up[j] + q.w.up.scale[j] * simd::dot_q8(x, q.w.up.row(j));
+                    let a = self.act.apply(pre);
+                    if a == 0.0 {
+                        continue;
+                    }
+                    act_row[j] = true;
+                    simd::axpy_q8(y, a * q.w.down.scale[j], q.w.down.row(j));
+                }
+            }
+            Some(gate) => {
+                for &j in live {
+                    let j = j as usize;
+                    let g = self.act.apply(gate.scale[j] * simd::dot_q8(x, gate.row(j)));
+                    if g == 0.0 {
+                        continue;
+                    }
+                    act_row[j] = true;
+                    let up = q.w.up.scale[j] * simd::dot_q8(x, q.w.up.row(j));
+                    simd::axpy_q8(y, g * up * q.w.down.scale[j], q.w.down.row(j));
+                }
             }
         }
     }
@@ -284,6 +340,7 @@ impl HostParams {
                         None
                     },
                     act,
+                    quant: None,
                 },
             });
         }
@@ -325,6 +382,16 @@ impl HostParams {
             })
             .collect::<Result<_>>()?;
         HostParams::from_named(cfg, &named)
+    }
+
+    /// Quantize every layer's FFN weights to per-neuron int8 in place
+    /// (the backend's `--quant q8` path). Attention/norm/embedding weights
+    /// stay f32: the FFN dominates decode bandwidth and is where the
+    /// sparsity skip lands.
+    pub fn quantize_ffns(&mut self) {
+        for layer in &mut self.layers {
+            layer.ffn.enable_quant();
+        }
     }
 }
 
@@ -420,6 +487,7 @@ mod tests {
             gate_t: None,
             b_down: None,
             act: Act::Relu,
+            quant: None,
         };
         let mut r = Rng::new(6);
         for _ in 0..8 {
@@ -440,6 +508,55 @@ mod tests {
                     assert!(live.contains(&(j as u32)));
                 }
             }
+        }
+    }
+
+    #[test]
+    fn q8_relu_token_matches_sparse_ffn_matvec_q8_bitwise() {
+        let w = FfnWeights::random(32, 8, 5);
+        let mut ffn = HostFfn {
+            w,
+            gate_t: None,
+            b_down: None,
+            act: Act::Relu,
+            quant: None,
+        };
+        ffn.enable_quant();
+        let q = ffn.quant.as_ref().unwrap();
+        let mut r = Rng::new(6);
+        for _ in 0..8 {
+            let x: Vec<f32> = (0..8).map(|_| r.normal() as f32).collect();
+            let mask: Vec<f32> = (0..32)
+                .map(|_| if r.chance(0.5) { 1.0 } else { 0.0 })
+                .collect();
+            let live = live_indices(&mask);
+            let mut y_host = vec![0.0f32; 8];
+            let mut y_ref = vec![0.0f32; 8];
+            let mut bits = vec![false; 32];
+            ffn.forward_token(&x, &live, &mut y_host, &mut bits);
+            crate::sparse::sparse_ffn_matvec_q8(&q.w, &x, &live, &mut y_ref);
+            assert_eq!(y_host, y_ref, "host q8 relu path must match the kernel");
+        }
+    }
+
+    #[test]
+    fn q8_gated_token_tracks_f32_path() {
+        let c = cfg("llama");
+        let mut params = HostParams::random(&c, 11).unwrap();
+        let live: Vec<u32> = (0..c.d_ff as u32).collect();
+        let mut r = Rng::new(12);
+        let x: Vec<f32> = (0..c.d_model).map(|_| r.normal() as f32).collect();
+        let mut y_f32 = vec![0.0f32; c.d_model];
+        let mut y_q8 = vec![0.0f32; c.d_model];
+        let mut bits = vec![false; c.d_ff];
+        let ffn = &mut params.layers[0].ffn;
+        assert!(ffn.gate_t.is_some(), "llama cfg must be gated");
+        ffn.forward_token(&x, &live, &mut y_f32, &mut bits);
+        ffn.enable_quant();
+        bits.fill(false);
+        ffn.forward_token(&x, &live, &mut y_q8, &mut bits);
+        for (a, b) in y_f32.iter().zip(&y_q8) {
+            assert!((a - b).abs() < 0.05, "q8 gated path drifted: {a} vs {b}");
         }
     }
 

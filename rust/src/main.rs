@@ -28,8 +28,11 @@
 //! knobs --policy <dense|reuse[:W[:K]]|topp:B[:W]>, --recall-floor <f>
 //! (1.0 = shadow mode) and --probe-every <n>; the host backend also takes
 //! --threads <n> (decode worker threads over batch rows, 0 = one per
-//! core). Examples under examples/ drive the full paper reproduction; this
-//! binary is the day-to-day launcher.
+//! core) and --quant <f32|q8> (q8 = per-neuron int8 FFN weights, ~4x fewer
+//! bytes per live neuron; host only). `serve` takes --max-tokens-cap <n>
+//! (bound on any request's max_tokens, 0 = the model's max_seq). Examples
+//! under examples/ drive the full paper reproduction; this binary is the
+//! day-to-day launcher.
 //!
 //! Observability (generate/serve/specdec): `--trace <out.jsonl>` records
 //! phase spans (prefill, mask-plan, decode-step, attention, ffn-gather,
@@ -94,6 +97,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 const HELP: &str = "rsb — ReLU Strikes Back reproduction (see README.md)
 usage: rsb <info|train|finetune|eval|generate|serve|specdec> [--options]
        generate/serve/specdec take --backend host|xla (host = no PJRT)
+       host backend: --quant f32|q8 (int8 FFN weights), --threads N
+       serve: --max-tokens-cap N (0 = model max_seq)
        specdec: --gamma N --verify-mask dense|agg[:W]|random[:W] --accept greedy|stochastic";
 
 /// Engine config from the predictor CLI knobs (defaults = dense serving).
@@ -136,11 +141,28 @@ fn default_backend() -> &'static str {
     }
 }
 
+/// `--quant f32|q8`: FFN weight representation (host backends only).
+fn parse_quant(args: &Args) -> Result<rsb::hostexec::QuantMode> {
+    let spec = args.str_or("quant", "f32");
+    rsb::hostexec::QuantMode::parse(&spec).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown --quant `{spec}` (expected `f32` or `q8`)"
+        ))
+    })
+}
+
 /// Build the serving engine for the selected `--backend`.
 fn build_engine(args: &Args) -> Result<Engine> {
     match args.str_or("backend", default_backend()).as_str() {
         "host" => host_engine(args),
-        "xla" => compiled::engine(args),
+        "xla" => {
+            if parse_quant(args)? != rsb::hostexec::QuantMode::F32 {
+                return Err(Error::Config(
+                    "--quant q8 needs --backend host (the compiled entries are f32)".into(),
+                ));
+            }
+            compiled::engine(args)
+        }
         other => Err(Error::Config(format!(
             "unknown backend `{other}` (expected `host` or `xla`)"
         ))),
@@ -174,10 +196,12 @@ fn host_engine(args: &Args) -> Result<Engine> {
         HostBackend::from_checkpoint(cfg, &path, decode_b, prefill_t)?
     };
     // decode worker threads over batch rows (0 = one per available core)
-    let backend = backend.with_threads(args.usize_or("threads", 0)?);
+    let backend = backend
+        .with_threads(args.usize_or("threads", 0)?)
+        .with_quant(parse_quant(args)?);
     rsb::log_info!(
         "host",
-        "{} | L{} d{} f{} v{} | decode_b {} prefill_t {} | threads {}",
+        "{} | L{} d{} f{} v{} | decode_b {} prefill_t {} | threads {} | quant {}",
         backend.model_id(),
         manifest.config.n_layers,
         manifest.config.d_model,
@@ -185,7 +209,8 @@ fn host_engine(args: &Args) -> Result<Engine> {
         manifest.config.vocab,
         decode_b,
         prefill_t,
-        backend.threads()
+        backend.threads(),
+        backend.quant().name()
     );
     Engine::new(Box::new(backend), engine_config(args)?)
 }
@@ -249,7 +274,9 @@ fn serve(args: &Args) -> Result<()> {
     let (_ds, bpe) = ensure_data(vocab, 2_000_000, 42)?;
     let addr = args.str_or("addr", "127.0.0.1:7077");
     let max = args.get("max-requests").map(|v| v.parse().unwrap_or(0));
-    rsb::server::serve(engine, Arc::new(bpe), &addr, max, None)?;
+    // per-request max_tokens cap (0 = the model's max_seq)
+    let cap = args.usize_or("max-tokens-cap", 0)?;
+    rsb::server::serve(engine, Arc::new(bpe), &addr, max, None, cap)?;
     dump_trace(&trace)?;
     Ok(())
 }
@@ -294,6 +321,7 @@ fn host_specdec_side(
         };
         HostBackend::from_checkpoint(cfg, &path, 1, prefill_t)?
     };
+    let backend = backend.with_quant(parse_quant(args)?);
     backend.with_verify_g(verify_g)
 }
 

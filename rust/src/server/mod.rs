@@ -34,7 +34,18 @@
 //! Connection lifecycle: the writer thread holds one registered stream per
 //! accepted connection and *evicts* it on the first failed write/flush (the
 //! peer hung up), so long-lived servers do not accumulate dead sockets;
-//! evictions are counted in the `metrics` snapshot.
+//! evictions are counted in the `metrics` snapshot. Disconnects propagate
+//! to the scheduler (reader EOF and writer evictions both report the dead
+//! `conn_id`), which reclaims the connection's scheduler state — queued
+//! completions that can no longer be delivered (`pending`) and its
+//! request counter (`req_counts`) — so those maps cannot grow
+//! monotonically either; `reclaimed_jobs`/`reclaimed_conns` in the
+//! `metrics` snapshot count what was swept.
+//!
+//! `max_tokens` is validated at parse time: 0 is rejected with a JSON error
+//! line, and values above the server's cap (`max_tokens_cap`, default the
+//! model's `max_seq`) are clamped — the completion reply then carries a
+//! `"max_tokens_clamped"` field naming the cap applied.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -53,6 +64,8 @@ struct Job {
     client_req_id: f64,
     prompt_text: String,
     max_tokens: usize,
+    /// the request asked for more than the server cap; the reply says so
+    clamped: bool,
     sampling: SamplingParams,
     policy: Option<NeuronPolicy>,
 }
@@ -67,6 +80,16 @@ enum Inbound {
     Admin { conn_id: u64, cmd: String },
     /// pre-rendered JSON error line for a request that failed to parse
     Malformed { conn_id: u64, line: String },
+    /// a connection died (reader EOF, or the writer evicted it): the
+    /// scheduler reclaims its pending completions and request counter
+    Disconnected { conn_id: u64 },
+}
+
+/// Writer-thread control: register a new connection's stream, or drop one
+/// the scheduler learned is dead before a write to it ever failed.
+enum WriterCtl {
+    Register(u64, TcpStream),
+    Drop(u64),
 }
 
 struct Reply {
@@ -76,13 +99,16 @@ struct Reply {
 
 /// Serve until `max_requests` completions (None = forever). Returns the
 /// number served. Bind to port 0 to let the OS pick (the bound address is
-/// logged and also sent to `ready_tx`).
+/// logged and also sent to `ready_tx`). `max_tokens_cap` bounds any
+/// request's `max_tokens` (0 = the model's `max_seq`); requests above it
+/// are clamped, `max_tokens: 0` is rejected.
 pub fn serve(
     mut engine: Engine,
     bpe: Arc<Bpe>,
     addr: &str,
     max_requests: Option<usize>,
     ready_tx: Option<mpsc::Sender<std::net::SocketAddr>>,
+    max_tokens_cap: usize,
 ) -> Result<usize> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
@@ -90,23 +116,38 @@ pub fn serve(
     if let Some(tx) = ready_tx {
         let _ = tx.send(local);
     }
+    let cap = if max_tokens_cap == 0 {
+        engine.backend().config().max_seq
+    } else {
+        max_tokens_cap
+    };
 
     let (job_tx, job_rx) = mpsc::channel::<Inbound>();
     let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
-    let (writer_tx, writer_rx) = mpsc::channel::<(u64, TcpStream)>();
+    let (writer_tx, writer_rx) = mpsc::channel::<WriterCtl>();
     // dead connections evicted by the writer thread (shared with the
     // scheduler so `{"cmd":"metrics"}` can report it)
     let evictions = Arc::new(AtomicU64::new(0));
 
     // connection acceptor -> per-connection reader threads
+    let acceptor_job_tx = job_tx.clone();
+    let sched_writer_tx = writer_tx.clone();
     std::thread::spawn(move || {
         let mut conn_id = 0u64;
         for stream in listener.incoming() {
             let Ok(stream) = stream else { continue };
             conn_id += 1;
             let id = conn_id;
-            let _ = writer_tx.send((id, stream.try_clone().expect("clone stream")));
-            let tx = job_tx.clone();
+            // a failed clone loses one connection, not the acceptor
+            let for_writer = match stream.try_clone() {
+                Ok(s) => s,
+                Err(e) => {
+                    log_warn!("server", "conn {id}: stream clone failed ({e}); dropping");
+                    continue;
+                }
+            };
+            let _ = writer_tx.send(WriterCtl::Register(id, for_writer));
+            let tx = acceptor_job_tx.clone();
             std::thread::spawn(move || {
                 let reader = BufReader::new(stream);
                 for line in reader.lines() {
@@ -114,7 +155,7 @@ pub fn serve(
                     if line.trim().is_empty() {
                         continue;
                     }
-                    let msg = match parse_line(id, &line) {
+                    let msg = match parse_line(id, &line, cap) {
                         Ok(inbound) => inbound,
                         Err(e) => {
                             // malformed request: reply with a JSON error
@@ -138,6 +179,9 @@ pub fn serve(
                         break;
                     }
                 }
+                // reader EOF: the peer is gone — let the scheduler sweep
+                // this connection's pending completions and counters
+                let _ = tx.send(Inbound::Disconnected { conn_id: id });
             });
         }
     });
@@ -146,23 +190,38 @@ pub fn serve(
     // connection on its first failed write (the peer hung up) so the map
     // cannot grow monotonically over a long-lived server's lifetime
     let writer_evictions = evictions.clone();
+    let writer_job_tx = job_tx.clone();
+    drop(job_tx);
     std::thread::spawn(move || {
         let mut conns: std::collections::HashMap<u64, TcpStream> =
             std::collections::HashMap::new();
-        loop {
-            while let Ok((id, s)) = writer_rx.try_recv() {
+        let mut apply = |conns: &mut std::collections::HashMap<u64, TcpStream>,
+                         ctl: WriterCtl| match ctl {
+            WriterCtl::Register(id, s) => {
                 conns.insert(id, s);
+            }
+            WriterCtl::Drop(id) => {
+                conns.remove(&id);
+            }
+        };
+        loop {
+            while let Ok(ctl) = writer_rx.try_recv() {
+                apply(&mut conns, ctl);
             }
             match reply_rx.recv_timeout(std::time::Duration::from_millis(50)) {
                 Ok(reply) => {
-                    while let Ok((id, s)) = writer_rx.try_recv() {
-                        conns.insert(id, s);
+                    while let Ok(ctl) = writer_rx.try_recv() {
+                        apply(&mut conns, ctl);
                     }
                     if let Some(s) = conns.get_mut(&reply.conn_id) {
                         let wrote = writeln!(s, "{}", reply.line).and_then(|_| s.flush());
                         if wrote.is_err() {
                             conns.remove(&reply.conn_id);
                             writer_evictions.fetch_add(1, Ordering::Relaxed);
+                            // propagate: the scheduler holds state for this
+                            // connection too
+                            let _ = writer_job_tx
+                                .send(Inbound::Disconnected { conn_id: reply.conn_id });
                         }
                     }
                 }
@@ -173,12 +232,15 @@ pub fn serve(
     });
 
     // engine scheduler loop (this thread)
-    let mut pending: std::collections::HashMap<u64, (u64, f64)> =
+    let mut pending: std::collections::HashMap<u64, (u64, f64, bool)> =
         std::collections::HashMap::new();
     // protocol lines handled per connection (jobs + admin commands)
     let mut req_counts: std::collections::HashMap<u64, u64> =
         std::collections::HashMap::new();
     let mut served = 0usize;
+    // scheduler-side reclamation counters (disconnect sweeps)
+    let mut reclaimed_jobs = 0u64;
+    let mut reclaimed_conns = 0u64;
     loop {
         // drain new jobs, admin commands + malformed-request error replies
         loop {
@@ -192,7 +254,19 @@ pub fn serve(
                         job.sampling,
                         job.policy,
                     );
-                    pending.insert(eid, (job.conn_id, job.client_req_id));
+                    pending.insert(eid, (job.conn_id, job.client_req_id, job.clamped));
+                }
+                Ok(Inbound::Disconnected { conn_id }) => {
+                    // sweep everything this connection still owns: its
+                    // completions can never be delivered and its counter
+                    // would otherwise live forever
+                    let before = pending.len();
+                    pending.retain(|_, &mut (cid, _, _)| cid != conn_id);
+                    reclaimed_jobs += (before - pending.len()) as u64;
+                    if req_counts.remove(&conn_id).is_some() {
+                        reclaimed_conns += 1;
+                    }
+                    let _ = sched_writer_tx.send(WriterCtl::Drop(conn_id));
                 }
                 Ok(Inbound::Admin { conn_id, cmd }) => {
                     *req_counts.entry(conn_id).or_insert(0) += 1;
@@ -202,6 +276,8 @@ pub fn serve(
                             served,
                             &req_counts,
                             evictions.load(Ordering::Relaxed),
+                            reclaimed_jobs,
+                            reclaimed_conns,
                         ),
                         "reset" => {
                             engine.metrics.reset();
@@ -232,9 +308,9 @@ pub fn serve(
             continue;
         }
         for done in engine.step()? {
-            if let Some((conn_id, req_id)) = pending.remove(&done.id) {
+            if let Some((conn_id, req_id, clamped)) = pending.remove(&done.id) {
                 let text = bpe.decode(&done.tokens);
-                let line = obj(vec![
+                let mut fields = vec![
                     ("id", Value::Num(req_id)),
                     ("text", Value::Str(text)),
                     ("tokens", Value::Num(done.tokens.len() as f64)),
@@ -254,8 +330,12 @@ pub fn serve(
                         "finish",
                         Value::Str(format!("{:?}", done.finish).to_lowercase()),
                     ),
-                ])
-                .to_json();
+                ];
+                if clamped {
+                    // the request asked past the cap; say what was applied
+                    fields.push(("max_tokens_clamped", num(cap as f64)));
+                }
+                let line = obj(fields).to_json();
                 let _ = reply_tx.send(Reply { conn_id, line });
                 served += 1;
                 if let Some(max) = max_requests {
@@ -276,12 +356,14 @@ pub fn serve(
 /// One `{"cmd":"metrics"}` reply line: the engine's full metrics snapshot
 /// (counters, latency summaries, per-slot + per-layer series) plus the
 /// server-level view (queue depth, active slots, per-connection counters,
-/// writer evictions).
+/// writer evictions, scheduler reclamations).
 fn metrics_snapshot(
     engine: &Engine,
     served: usize,
     req_counts: &std::collections::HashMap<u64, u64>,
     evictions: u64,
+    reclaimed_jobs: u64,
+    reclaimed_conns: u64,
 ) -> String {
     let mut ids: Vec<u64> = req_counts.keys().copied().collect();
     ids.sort_unstable();
@@ -303,6 +385,8 @@ fn metrics_snapshot(
                 ("queue_depth", num(engine.queue_len() as f64)),
                 ("active", num(engine.active_count() as f64)),
                 ("evictions", num(evictions as f64)),
+                ("reclaimed_jobs", num(reclaimed_jobs as f64)),
+                ("reclaimed_conns", num(reclaimed_conns as f64)),
                 ("connections", Value::Arr(connections)),
             ]),
         ),
@@ -311,8 +395,10 @@ fn metrics_snapshot(
 }
 
 /// Parse one protocol line: a `cmd` key makes it an admin command, anything
-/// else must be a generation request.
-fn parse_line(conn_id: u64, line: &str) -> Result<Inbound> {
+/// else must be a generation request. `max_tokens` is validated here:
+/// 0 is an error (the request could never produce a token), values above
+/// `max_tokens_cap` are clamped and flagged.
+fn parse_line(conn_id: u64, line: &str, max_tokens_cap: usize) -> Result<Inbound> {
     let v = jsonx::parse(line.trim())?;
     if let Some(c) = v.get("cmd") {
         let cmd = c
@@ -330,11 +416,20 @@ fn parse_line(conn_id: u64, line: &str) -> Result<Inbound> {
             Some(NeuronPolicy::parse(spec)?)
         }
     };
+    let mut max_tokens = v.get("max_tokens").and_then(|x| x.as_usize()).unwrap_or(16);
+    if max_tokens == 0 {
+        return Err(Error::Config("`max_tokens` must be >= 1".into()));
+    }
+    let clamped = max_tokens > max_tokens_cap;
+    if clamped {
+        max_tokens = max_tokens_cap;
+    }
     Ok(Inbound::Job(Job {
         conn_id,
         client_req_id: v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0),
         prompt_text: v.str_of("prompt")?,
-        max_tokens: v.get("max_tokens").and_then(|x| x.as_usize()).unwrap_or(16),
+        max_tokens,
+        clamped,
         sampling: SamplingParams {
             temperature: v.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0),
             top_k: v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(0),

@@ -12,6 +12,21 @@
 //! both projections stored neuron-major so one skipped neuron saves two
 //! weight rows. `benches/bench_predictor.rs` measures it against the dense
 //! reference.
+//!
+//! Every kernel here runs on the [`simd`] dot/axpy substrate (AVX2 / NEON
+//! / scalar, runtime-dispatched, bitwise identical across levels — see the
+//! module docs for the canonical accumulation order), and [`quant`] adds
+//! the per-neuron int8 weight path that makes the sparse matvec
+//! bandwidth-bound like a real deployment.
+
+pub mod quant;
+pub mod simd;
+
+pub use quant::{
+    dense_ffn_matvec_q8, sparse_ffn_batch_rows_q8, sparse_ffn_bytes_q8, sparse_ffn_matvec_q8,
+    FfnWeightsQ8, QuantMat,
+};
+pub use simd::SimdLevel;
 
 /// Dense GEMV: y[j] = Σ_i a[i] · w[i, j], w row-major [f × d].
 pub fn dense_gemv(w: &[f32], f: usize, d: usize, a: &[f32], y: &mut [f32]) {
@@ -20,11 +35,7 @@ pub fn dense_gemv(w: &[f32], f: usize, d: usize, a: &[f32], y: &mut [f32]) {
     assert_eq!(y.len(), d);
     y.fill(0.0);
     for i in 0..f {
-        let ai = a[i];
-        let row = &w[i * d..(i + 1) * d];
-        for j in 0..d {
-            y[j] += ai * row[j];
-        }
+        simd::axpy(y, a[i], &w[i * d..(i + 1) * d]);
     }
 }
 
@@ -40,10 +51,7 @@ pub fn rowskip_gemv(w: &[f32], f: usize, d: usize, a: &[f32], y: &mut [f32]) {
         if ai == 0.0 {
             continue; // skip the whole row: no load, no MACs
         }
-        let row = &w[i * d..(i + 1) * d];
-        for j in 0..d {
-            y[j] += ai * row[j];
-        }
+        simd::axpy(y, ai, &w[i * d..(i + 1) * d]);
     }
 }
 
@@ -53,11 +61,7 @@ pub fn indexed_gemv(w: &[f32], d: usize, live: &[u32], a: &[f32], y: &mut [f32])
     y.fill(0.0);
     for &i in live {
         let i = i as usize;
-        let ai = a[i];
-        let row = &w[i * d..(i + 1) * d];
-        for j in 0..d {
-            y[j] += ai * row[j];
-        }
+        simd::axpy(y, a[i], &w[i * d..(i + 1) * d]);
     }
 }
 
@@ -142,30 +146,22 @@ impl FfnWeights {
     #[inline]
     fn accumulate_neuron(&self, j: usize, x: &[f32], y: &mut [f32]) {
         let row = &self.w_up_t[j * self.d..(j + 1) * self.d];
-        let mut pre = self.b_up[j];
-        for (wi, xi) in row.iter().zip(x) {
-            pre += wi * xi;
-        }
+        let pre = self.b_up[j] + simd::dot(row, x);
         if pre <= 0.0 {
             return; // ReLU kills the neuron: nothing to scatter
         }
-        let down = &self.w_down[j * self.d..(j + 1) * self.d];
-        for (yk, wk) in y.iter_mut().zip(down) {
-            *yk += pre * wk;
-        }
+        simd::axpy(y, pre, &self.w_down[j * self.d..(j + 1) * self.d]);
     }
 
     /// Live set under the exact ReLU: neurons whose activation is nonzero
-    /// for input `x` (the oracle the predictor is scored against).
+    /// for input `x` (the oracle the predictor is scored against). Uses
+    /// the same [`simd::dot`] as [`FfnWeights::accumulate_neuron`], so the
+    /// boundary decisions agree bit-for-bit.
     pub fn live_set(&self, x: &[f32]) -> Vec<u32> {
         (0..self.f)
             .filter(|&j| {
                 let row = &self.w_up_t[j * self.d..(j + 1) * self.d];
-                let mut pre = self.b_up[j];
-                for (wi, xi) in row.iter().zip(x) {
-                    pre += wi * xi;
-                }
-                pre > 0.0
+                self.b_up[j] + simd::dot(row, x) > 0.0
             })
             .map(|j| j as u32)
             .collect()

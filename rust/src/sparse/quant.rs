@@ -1,0 +1,317 @@
+//! Per-neuron-scaled int8 FFN weights: the bandwidth side of the paper's
+//! App. B argument. A skipped neuron saves weight *bytes*; at int8 the
+//! bytes per computed neuron drop from `8·d` (two f32 rows) to `2·d + 8`
+//! (two i8 rows + two f32 scales), so the sparse decode path moves ~4×
+//! closer to the memory-bandwidth roofline — `costmodel::predictor`
+//! carries the matching terms and `bench_matvec` measures the ratio.
+//!
+//! Quantization is symmetric per *neuron row* (the unit the sparse path
+//! skips): `scale[j] = max|w[j,·]| / 127`, `q = round(w / scale)`. Both
+//! projections stay neuron-major (`[F × d]`, like [`FfnWeights`]), so one
+//! skipped neuron still skips both of its rows. The matvec dequantizes on
+//! accumulate — `pre = b[j] + scale[j] · Σ x[i]·q[j,i]` — through the
+//! [`super::simd`] q8 kernels, which are bitwise identical across dispatch
+//! levels (the i8→f32 widening is exact).
+
+use super::simd;
+use super::FfnWeights;
+
+/// A row-major i8 matrix with one f32 scale per row.
+#[derive(Debug, Clone)]
+pub struct QuantMat {
+    pub rows: usize,
+    pub d: usize,
+    /// `[rows × d]` row-major quantized entries.
+    pub q: Vec<i8>,
+    /// `[rows]` per-row dequantization scales (`w ≈ q · scale`).
+    pub scale: Vec<f32>,
+}
+
+impl QuantMat {
+    /// Symmetric per-row quantization of a `[rows × d]` f32 matrix.
+    pub fn quantize(w: &[f32], rows: usize, d: usize) -> QuantMat {
+        assert_eq!(w.len(), rows * d);
+        let mut q = vec![0i8; rows * d];
+        let mut scale = vec![0.0f32; rows];
+        for r in 0..rows {
+            let row = &w[r * d..(r + 1) * d];
+            let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            // an all-zero row quantizes to zeros under any scale; 1.0 keeps
+            // the dequantized row exactly zero without a divide-by-zero
+            let s = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+            scale[r] = s;
+            for (qq, &v) in q[r * d..(r + 1) * d].iter_mut().zip(row) {
+                *qq = (v / s).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantMat { rows, d, q, scale }
+    }
+
+    /// One quantized row (contiguous, the unit the sparse path gathers).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.q[r * self.d..(r + 1) * self.d]
+    }
+
+    /// Dequantize one row back to f32 (tests / error analysis).
+    pub fn dequant_row(&self, r: usize) -> Vec<f32> {
+        let s = self.scale[r];
+        self.row(r).iter().map(|&q| q as f32 * s).collect()
+    }
+
+    /// Worst-case absolute quantization error against the f32 original.
+    pub fn max_abs_err(&self, w: &[f32]) -> f32 {
+        assert_eq!(w.len(), self.rows * self.d);
+        let mut worst = 0.0f32;
+        for r in 0..self.rows {
+            for (&orig, deq) in w[r * self.d..(r + 1) * self.d]
+                .iter()
+                .zip(self.dequant_row(r))
+            {
+                worst = worst.max((orig - deq).abs());
+            }
+        }
+        worst
+    }
+}
+
+/// Int8 counterpart of [`FfnWeights`]: both projections neuron-major, one
+/// scale per neuron per projection, biases kept in f32.
+#[derive(Debug, Clone)]
+pub struct FfnWeightsQ8 {
+    pub f: usize,
+    pub d: usize,
+    /// up projection, neuron-major `[F × d]` (same layout as `w_up_t`).
+    pub up: QuantMat,
+    pub b_up: Vec<f32>,
+    /// down projection, neuron-major `[F × d]`.
+    pub down: QuantMat,
+}
+
+impl FfnWeightsQ8 {
+    /// Quantize an f32 [`FfnWeights`] (layouts carried over unchanged).
+    pub fn quantize(w: &FfnWeights) -> FfnWeightsQ8 {
+        FfnWeightsQ8 {
+            f: w.f,
+            d: w.d,
+            up: QuantMat::quantize(&w.w_up_t, w.f, w.d),
+            b_up: w.b_up.clone(),
+            down: QuantMat::quantize(&w.w_down, w.f, w.d),
+        }
+    }
+
+    /// One neuron's contribution, dequantizing on accumulate: the q8
+    /// mirror of `FfnWeights::accumulate_neuron` (shared by the dense and
+    /// sparse q8 paths so superset live lists stay bit-identical).
+    #[inline]
+    fn accumulate_neuron(&self, j: usize, x: &[f32], y: &mut [f32]) {
+        let pre = self.b_up[j] + self.up.scale[j] * simd::dot_q8(x, self.up.row(j));
+        if pre <= 0.0 {
+            return; // ReLU kills the neuron: nothing to scatter
+        }
+        simd::axpy_q8(y, pre * self.down.scale[j], self.down.row(j));
+    }
+}
+
+/// Dense q8 FFN matvec: y = W_down^T · relu(W_up^T x + b) with both
+/// projections dequantized on accumulate.
+pub fn dense_ffn_matvec_q8(w: &FfnWeightsQ8, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), w.d);
+    assert_eq!(y.len(), w.d);
+    y.fill(0.0);
+    for j in 0..w.f {
+        w.accumulate_neuron(j, x, y);
+    }
+}
+
+/// Predictor fast path at int8: compute only the neurons in `live`. A
+/// superset of the q8-live set is bit-identical to [`dense_ffn_matvec_q8`].
+pub fn sparse_ffn_matvec_q8(w: &FfnWeightsQ8, x: &[f32], live: &[u32], y: &mut [f32]) {
+    assert_eq!(x.len(), w.d);
+    assert_eq!(y.len(), w.d);
+    y.fill(0.0);
+    for &j in live {
+        w.accumulate_neuron(j as usize, x, y);
+    }
+}
+
+/// Batched per-row q8 fast path (the host backend's per-slot decode step).
+pub fn sparse_ffn_batch_rows_q8(w: &FfnWeightsQ8, xs: &[f32], live: &[&[u32]], ys: &mut [f32]) {
+    assert_eq!(xs.len(), ys.len());
+    assert_eq!(xs.len(), live.len() * w.d);
+    for ((x, y), l) in xs
+        .chunks_exact(w.d)
+        .zip(ys.chunks_exact_mut(w.d))
+        .zip(live)
+    {
+        sparse_ffn_matvec_q8(w, x, l, y);
+    }
+}
+
+/// Weight bytes touched per computed neuron at int8: one up row + one down
+/// row of i8 plus the two f32 scales. The f32 counterpart is
+/// [`super::sparse_ffn_bytes`] (`8·d` per neuron).
+pub fn sparse_ffn_bytes_q8(n_live: usize, d: usize) -> usize {
+    n_live * (2 * d + 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{dense_ffn_matvec, sparse_ffn_matvec};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quantize_roundtrip_error_is_bounded_by_half_step() {
+        let mut r = Rng::new(5);
+        let (rows, d) = (24, 40);
+        let w: Vec<f32> = (0..rows * d).map(|_| r.normal() as f32 * 0.2).collect();
+        let qm = QuantMat::quantize(&w, rows, d);
+        for row in 0..rows {
+            let amax = w[row * d..(row + 1) * d]
+                .iter()
+                .fold(0.0f32, |m, &v| m.max(v.abs()));
+            // symmetric round-to-nearest: error ≤ scale/2 = amax/254
+            let step = qm.scale[row];
+            for (&orig, deq) in w[row * d..(row + 1) * d].iter().zip(qm.dequant_row(row)) {
+                assert!(
+                    (orig - deq).abs() <= step * 0.5 + 1e-7,
+                    "row {row}: {orig} vs {deq} (amax {amax})"
+                );
+            }
+        }
+        assert!(qm.max_abs_err(&w) <= qm.scale.iter().fold(0.0f32, |m, &s| m.max(s)) * 0.5 + 1e-7);
+    }
+
+    #[test]
+    fn zero_row_quantizes_to_exact_zeros() {
+        let mut w = vec![0.0f32; 2 * 8];
+        w[8] = 1.0; // row 1 non-zero, row 0 all zero
+        let qm = QuantMat::quantize(&w, 2, 8);
+        assert!(qm.dequant_row(0).iter().all(|&v| v == 0.0));
+        assert_eq!(qm.scale[0], 1.0);
+        assert_eq!(qm.dequant_row(1)[0], 1.0);
+    }
+
+    #[test]
+    fn extreme_values_saturate_at_127() {
+        let w = vec![-3.0f32, 3.0, 1.5, 0.0];
+        let qm = QuantMat::quantize(&w, 1, 4);
+        assert_eq!(qm.row(0), &[-127, 127, 64, 0]);
+    }
+
+    /// The q8 sparse path over a superset of the live set is bit-identical
+    /// to the q8 dense path — the same invariant the f32 kernels pin.
+    #[test]
+    fn q8_sparse_on_superset_is_bit_identical_to_q8_dense() {
+        let w = FfnWeights::random(64, 16, 77);
+        let q = FfnWeightsQ8::quantize(&w);
+        let mut r = Rng::new(78);
+        for _ in 0..6 {
+            let x: Vec<f32> = (0..16).map(|_| r.normal() as f32).collect();
+            let mut dense = vec![0.0f32; 16];
+            let mut sparse = vec![0.0f32; 16];
+            dense_ffn_matvec_q8(&q, &x, &mut dense);
+            let all: Vec<u32> = (0..64).collect();
+            sparse_ffn_matvec_q8(&q, &x, &all, &mut sparse);
+            assert_eq!(dense, sparse);
+            // the f32-live superset also covers the q8-live set in practice
+            // for these weights; spot-check the exact-live path agrees
+            let live = w.live_set(&x);
+            sparse_ffn_matvec_q8(&q, &x, &live, &mut sparse);
+            for (a, b) in dense.iter().zip(&sparse) {
+                // a neuron live at q8 but dead at f32 can differ; bound it
+                assert!((a - b).abs() < 0.2, "{a} vs {b}");
+            }
+        }
+    }
+
+    /// q8 vs f32 end-to-end matvec error stays within the pinned tolerance
+    /// (per-neuron symmetric int8: relative row error ≤ 1/254).
+    #[test]
+    fn q8_matvec_tracks_f32_within_pinned_tolerance() {
+        let w = FfnWeights::random(128, 32, 91);
+        let q = FfnWeightsQ8::quantize(&w);
+        let mut r = Rng::new(92);
+        for _ in 0..4 {
+            let x: Vec<f32> = (0..32).map(|_| r.normal() as f32).collect();
+            let mut yf = vec![0.0f32; 32];
+            let mut yq = vec![0.0f32; 32];
+            dense_ffn_matvec(&w, &x, &mut yf);
+            dense_ffn_matvec_q8(&q, &x, &mut yq);
+            let scale = yf.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1.0);
+            for (a, b) in yf.iter().zip(&yq) {
+                assert!(
+                    (a - b).abs() <= 0.05 * scale,
+                    "q8 drifted: {a} vs {b} (scale {scale})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_rows_match_per_token_q8() {
+        let w = FfnWeights::random(32, 8, 101);
+        let q = FfnWeightsQ8::quantize(&w);
+        let mut r = Rng::new(102);
+        let xs: Vec<f32> = (0..3 * 8).map(|_| r.normal() as f32).collect();
+        let lists: Vec<Vec<u32>> = vec![vec![0, 3, 9], (0..32).collect(), vec![]];
+        let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        let mut ys = vec![0.0f32; 3 * 8];
+        sparse_ffn_batch_rows_q8(&q, &xs, &refs, &mut ys);
+        for b in 0..3 {
+            let mut single = vec![0.0f32; 8];
+            sparse_ffn_matvec_q8(&q, &xs[b * 8..(b + 1) * 8], refs[b], &mut single);
+            assert_eq!(&ys[b * 8..(b + 1) * 8], &single[..], "row {b}");
+        }
+        assert!(ys[2 * 8..].iter().all(|&y| y == 0.0), "empty list row");
+    }
+
+    /// The q8 matvec, like everything built on `sparse::simd`, is bitwise
+    /// identical across the host's dispatch levels.
+    #[test]
+    fn q8_matvec_bitwise_identical_across_dispatch_levels() {
+        use crate::sparse::simd::SimdLevel;
+        let w = FfnWeights::random(48, 24, 111);
+        let q = FfnWeightsQ8::quantize(&w);
+        let mut r = Rng::new(112);
+        let x: Vec<f32> = (0..24).map(|_| r.normal() as f32).collect();
+        let live: Vec<u32> = (0..48).step_by(3).collect();
+        let mut reference: Option<Vec<f32>> = None;
+        for level in SimdLevel::supported() {
+            // per-neuron mirror of sparse_ffn_matvec_q8 at an explicit level
+            let mut y = vec![0.0f32; 24];
+            for &j in &live {
+                let j = j as usize;
+                let pre = q.b_up[j]
+                    + q.up.scale[j] * crate::sparse::simd::dot_q8_at(level, &x, q.up.row(j));
+                if pre > 0.0 {
+                    crate::sparse::simd::axpy_q8_at(
+                        level,
+                        &mut y,
+                        pre * q.down.scale[j],
+                        q.down.row(j),
+                    );
+                }
+            }
+            match &reference {
+                None => reference = Some(y),
+                Some(want) => {
+                    for (a, b) in y.iter().zip(want) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "level {}", level.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        assert_eq!(sparse_ffn_bytes_q8(10, 32), 10 * (64 + 8));
+        assert_eq!(sparse_ffn_bytes_q8(0, 32), 0);
+        // the f32/q8 ratio approaches 4× as d grows
+        let f32_b = crate::sparse::sparse_ffn_bytes(100, 1024) as f64;
+        let q8_b = sparse_ffn_bytes_q8(100, 1024) as f64;
+        assert!(f32_b / q8_b > 3.9 && f32_b / q8_b < 4.0);
+    }
+}

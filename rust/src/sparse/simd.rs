@@ -1,0 +1,657 @@
+//! Explicit-SIMD dot / axpy kernels with runtime dispatch (AVX2 on x86_64,
+//! NEON on aarch64, a portable scalar fallback everywhere).
+//!
+//! ## The canonical accumulation order
+//!
+//! Every implementation — scalar included — accumulates a dot product into
+//! **8 virtual lanes** (lane `j` sums elements at indices `≡ j mod 8`),
+//! reduces them through the fixed tree
+//!
+//! ```text
+//! s1[i] = acc[i] + acc[i+4]   (i = 0..4)
+//! s2[i] = s1[i]  + s1[i+2]    (i = 0..2)
+//! total = s2[0]  + s2[1]
+//! ```
+//!
+//! and then adds the `len % 8` tail elements sequentially. AVX2 realises
+//! the lanes as one 8-wide vector, NEON as two 4-wide vectors (lanes 0..4
+//! and 4..8), and both use separate multiply + add (never fused
+//! multiply-add, which Rust's scalar semantics do not contract), so the
+//! three dispatch levels are **bitwise identical** — pinned by the
+//! dispatch-equivalence tests below. `axpy` is element-wise
+//! (`y[k] += a·x[k]`, one multiply and one add per element in every
+//! implementation), so it is trivially bitwise across levels.
+//!
+//! The int8 variants (`dot_q8` / `axpy_q8`) use the same structure with an
+//! exact `i8 -> f32` conversion in place of the second f32 load, so they
+//! inherit the same cross-level bit-identity.
+//!
+//! ## Dispatch
+//!
+//! [`active_level`] detects the best supported level once (cached) and can
+//! be overridden with `PALLAS_SIMD=scalar|avx2|neon|auto` — CI forces
+//! `scalar` in one job so the portable path stays tested. The `*_at`
+//! variants take an explicit [`SimdLevel`] for equivalence tests and
+//! benches; they panic if the requested level is not available on the
+//! running host.
+
+use std::sync::OnceLock;
+
+/// One runtime-dispatchable kernel implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable Rust, same lane structure, no intrinsics.
+    Scalar,
+    /// x86_64 AVX2 (8-wide f32).
+    Avx2,
+    /// aarch64 NEON (2 × 4-wide f32).
+    Neon,
+}
+
+impl SimdLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Is this level executable on the running host?
+    pub fn available(self) -> bool {
+        match self {
+            SimdLevel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            SimdLevel::Avx2 => false,
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[cfg(not(target_arch = "aarch64"))]
+            SimdLevel::Neon => false,
+        }
+    }
+
+    /// Parse a `PALLAS_SIMD` value; `auto` (or empty) means "detect".
+    pub fn parse(s: &str) -> Option<Option<SimdLevel>> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => Some(None),
+            "scalar" => Some(Some(SimdLevel::Scalar)),
+            "avx2" => Some(Some(SimdLevel::Avx2)),
+            "neon" => Some(Some(SimdLevel::Neon)),
+            _ => None,
+        }
+    }
+
+    /// Every level this host can execute (used by the equivalence tests:
+    /// scalar everywhere, plus the native vector level when present).
+    pub fn supported() -> Vec<SimdLevel> {
+        [SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Neon]
+            .into_iter()
+            .filter(|l| l.available())
+            .collect()
+    }
+}
+
+fn detect_level() -> SimdLevel {
+    if let Ok(spec) = std::env::var("PALLAS_SIMD") {
+        match SimdLevel::parse(&spec) {
+            Some(Some(level)) => {
+                if level.available() {
+                    return level;
+                }
+                crate::log_warn!(
+                    "simd",
+                    "PALLAS_SIMD={} not available on this host; using scalar",
+                    level.name()
+                );
+                return SimdLevel::Scalar;
+            }
+            Some(None) => {} // auto
+            None => {
+                crate::log_warn!(
+                    "simd",
+                    "unknown PALLAS_SIMD value `{spec}` (scalar|avx2|neon|auto); detecting"
+                );
+            }
+        }
+    }
+    if SimdLevel::Avx2.available() {
+        SimdLevel::Avx2
+    } else if SimdLevel::Neon.available() {
+        SimdLevel::Neon
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+/// The dispatch level every non-`_at` kernel call in this process uses
+/// (detected once; `PALLAS_SIMD` must be set before the first kernel call).
+pub fn active_level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(detect_level)
+}
+
+// ---------------------------------------------------------------------------
+// scalar reference (the canonical order itself)
+// ---------------------------------------------------------------------------
+
+/// The fixed 8-lane reduction tree every implementation ends with.
+#[inline(always)]
+fn reduce8(acc: &[f32; 8]) -> f32 {
+    let s1 = [
+        acc[0] + acc[4],
+        acc[1] + acc[5],
+        acc[2] + acc[6],
+        acc[3] + acc[7],
+    ];
+    let s2 = [s1[0] + s1[2], s1[1] + s1[3]];
+    s2[0] + s2[1]
+}
+
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let n8 = n - n % 8;
+    let mut acc = [0.0f32; 8];
+    let mut k = 0;
+    while k < n8 {
+        for (j, slot) in acc.iter_mut().enumerate() {
+            *slot += a[k + j] * b[k + j];
+        }
+        k += 8;
+    }
+    let mut total = reduce8(&acc);
+    for i in n8..n {
+        total += a[i] * b[i];
+    }
+    total
+}
+
+fn dot_q8_scalar(x: &[f32], q: &[i8]) -> f32 {
+    let n = x.len();
+    let n8 = n - n % 8;
+    let mut acc = [0.0f32; 8];
+    let mut k = 0;
+    while k < n8 {
+        for (j, slot) in acc.iter_mut().enumerate() {
+            *slot += x[k + j] * (q[k + j] as f32);
+        }
+        k += 8;
+    }
+    let mut total = reduce8(&acc);
+    for i in n8..n {
+        total += x[i] * (q[i] as f32);
+    }
+    total
+}
+
+fn axpy_scalar(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yk, xk) in y.iter_mut().zip(x) {
+        *yk += a * xk;
+    }
+}
+
+fn axpy_q8_scalar(y: &mut [f32], a: f32, q: &[i8]) {
+    for (yk, qk) in y.iter_mut().zip(q) {
+        *yk += a * (*qk as f32);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// The same tree as `reduce8`: lanes i/i+4, then i/i+2, then 0/1.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce8_vec(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s1 = _mm_add_ps(lo, hi);
+        let s2 = _mm_add_ps(s1, _mm_movehl_ps(s1, s1));
+        let s3 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 0b01));
+        _mm_cvtss_f32(s3)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let n8 = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut k = 0;
+        while k < n8 {
+            let va = _mm256_loadu_ps(a.as_ptr().add(k));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(k));
+            // mul + add, not fma: keeps bit-identity with the scalar path
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            k += 8;
+        }
+        let mut total = reduce8_vec(acc);
+        for i in n8..n {
+            total += a[i] * b[i];
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_q8(x: &[f32], q: &[i8]) -> f32 {
+        let n = x.len();
+        let n8 = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut k = 0;
+        while k < n8 {
+            let vq8 = _mm_loadl_epi64(q.as_ptr().add(k) as *const __m128i);
+            let vqf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(vq8));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(k));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(vx, vqf));
+            k += 8;
+        }
+        let mut total = reduce8_vec(acc);
+        for i in n8..n {
+            total += x[i] * (q[i] as f32);
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len();
+        let n8 = n - n % 8;
+        let va = _mm256_set1_ps(a);
+        let mut k = 0;
+        while k < n8 {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(k));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(k));
+            _mm256_storeu_ps(
+                y.as_mut_ptr().add(k),
+                _mm256_add_ps(vy, _mm256_mul_ps(va, vx)),
+            );
+            k += 8;
+        }
+        for i in n8..n {
+            y[i] += a * x[i];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_q8(y: &mut [f32], a: f32, q: &[i8]) {
+        let n = y.len();
+        let n8 = n - n % 8;
+        let va = _mm256_set1_ps(a);
+        let mut k = 0;
+        while k < n8 {
+            let vq8 = _mm_loadl_epi64(q.as_ptr().add(k) as *const __m128i);
+            let vqf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(vq8));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(k));
+            _mm256_storeu_ps(
+                y.as_mut_ptr().add(k),
+                _mm256_add_ps(vy, _mm256_mul_ps(va, vqf)),
+            );
+            k += 8;
+        }
+        for i in n8..n {
+            y[i] += a * (q[i] as f32);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON (aarch64): lanes 0..4 and 4..8 of each 8-chunk in two q registers
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let n8 = n - n % 8;
+        let mut acc_lo = vdupq_n_f32(0.0); // lanes 0..4
+        let mut acc_hi = vdupq_n_f32(0.0); // lanes 4..8
+        let mut k = 0;
+        while k < n8 {
+            let a_lo = vld1q_f32(a.as_ptr().add(k));
+            let a_hi = vld1q_f32(a.as_ptr().add(k + 4));
+            let b_lo = vld1q_f32(b.as_ptr().add(k));
+            let b_hi = vld1q_f32(b.as_ptr().add(k + 4));
+            // vmul + vadd, not vfma: keeps bit-identity with scalar
+            acc_lo = vaddq_f32(acc_lo, vmulq_f32(a_lo, b_lo));
+            acc_hi = vaddq_f32(acc_hi, vmulq_f32(a_hi, b_hi));
+            k += 8;
+        }
+        let s1 = vaddq_f32(acc_lo, acc_hi); // s1[i] = acc[i] + acc[i+4]
+        let s2 = vadd_f32(vget_low_f32(s1), vget_high_f32(s1)); // s1[i] + s1[i+2]
+        let mut total = vget_lane_f32::<0>(s2) + vget_lane_f32::<1>(s2);
+        for i in n8..n {
+            total += a[i] * b[i];
+        }
+        total
+    }
+
+    /// Widen 8 lanes of i8 at `q[k..k+8]` into two exact f32x4.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn widen_q8(q: *const i8) -> (float32x4_t, float32x4_t) {
+        let v8 = vld1_s8(q);
+        let v16 = vmovl_s8(v8);
+        let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(v16)));
+        let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(v16)));
+        (lo, hi)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_q8(x: &[f32], q: &[i8]) -> f32 {
+        let n = x.len();
+        let n8 = n - n % 8;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        let mut k = 0;
+        while k < n8 {
+            let (q_lo, q_hi) = widen_q8(q.as_ptr().add(k));
+            let x_lo = vld1q_f32(x.as_ptr().add(k));
+            let x_hi = vld1q_f32(x.as_ptr().add(k + 4));
+            acc_lo = vaddq_f32(acc_lo, vmulq_f32(x_lo, q_lo));
+            acc_hi = vaddq_f32(acc_hi, vmulq_f32(x_hi, q_hi));
+            k += 8;
+        }
+        let s1 = vaddq_f32(acc_lo, acc_hi);
+        let s2 = vadd_f32(vget_low_f32(s1), vget_high_f32(s1));
+        let mut total = vget_lane_f32::<0>(s2) + vget_lane_f32::<1>(s2);
+        for i in n8..n {
+            total += x[i] * (q[i] as f32);
+        }
+        total
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len();
+        let n8 = n - n % 8;
+        let va = vdupq_n_f32(a);
+        let mut k = 0;
+        while k < n8 {
+            let y_lo = vld1q_f32(y.as_ptr().add(k));
+            let y_hi = vld1q_f32(y.as_ptr().add(k + 4));
+            let x_lo = vld1q_f32(x.as_ptr().add(k));
+            let x_hi = vld1q_f32(x.as_ptr().add(k + 4));
+            vst1q_f32(y.as_mut_ptr().add(k), vaddq_f32(y_lo, vmulq_f32(va, x_lo)));
+            vst1q_f32(
+                y.as_mut_ptr().add(k + 4),
+                vaddq_f32(y_hi, vmulq_f32(va, x_hi)),
+            );
+            k += 8;
+        }
+        for i in n8..n {
+            y[i] += a * x[i];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_q8(y: &mut [f32], a: f32, q: &[i8]) {
+        let n = y.len();
+        let n8 = n - n % 8;
+        let va = vdupq_n_f32(a);
+        let mut k = 0;
+        while k < n8 {
+            let (q_lo, q_hi) = widen_q8(q.as_ptr().add(k));
+            let y_lo = vld1q_f32(y.as_ptr().add(k));
+            let y_hi = vld1q_f32(y.as_ptr().add(k + 4));
+            vst1q_f32(y.as_mut_ptr().add(k), vaddq_f32(y_lo, vmulq_f32(va, q_lo)));
+            vst1q_f32(
+                y.as_mut_ptr().add(k + 4),
+                vaddq_f32(y_hi, vmulq_f32(va, q_hi)),
+            );
+            k += 8;
+        }
+        for i in n8..n {
+            y[i] += a * (q[i] as f32);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatched entry points
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn check_level(level: SimdLevel) {
+    assert!(
+        level.available(),
+        "SIMD level `{}` is not available on this host",
+        level.name()
+    );
+}
+
+/// Dot product at an explicit dispatch level (equivalence tests / benches).
+/// Panics if `level` is not executable on the running host.
+pub fn dot_at(level: SimdLevel, a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    check_level(level);
+    match level {
+        SimdLevel::Scalar => dot_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::dot(a, b) },
+        _ => unreachable!("check_level rejected an unavailable level"),
+    }
+}
+
+/// `y[k] += a · x[k]` at an explicit dispatch level.
+pub fn axpy_at(level: SimdLevel, y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    check_level(level);
+    match level {
+        SimdLevel::Scalar => axpy_scalar(y, a, x),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::axpy(y, a, x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::axpy(y, a, x) },
+        _ => unreachable!("check_level rejected an unavailable level"),
+    }
+}
+
+/// Mixed-precision dot: `Σ x[i] · (q[i] as f32)` (the int8 up-projection
+/// row against the f32 input; the caller applies the per-neuron scale).
+pub fn dot_q8_at(level: SimdLevel, x: &[f32], q: &[i8]) -> f32 {
+    assert_eq!(x.len(), q.len());
+    check_level(level);
+    match level {
+        SimdLevel::Scalar => dot_q8_scalar(x, q),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::dot_q8(x, q) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::dot_q8(x, q) },
+        _ => unreachable!("check_level rejected an unavailable level"),
+    }
+}
+
+/// `y[k] += a · (q[k] as f32)` (int8 down-projection scatter; `a` already
+/// carries the neuron's activation × per-neuron scale).
+pub fn axpy_q8_at(level: SimdLevel, y: &mut [f32], a: f32, q: &[i8]) {
+    assert_eq!(y.len(), q.len());
+    check_level(level);
+    match level {
+        SimdLevel::Scalar => axpy_q8_scalar(y, a, q),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::axpy_q8(y, a, q) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::axpy_q8(y, a, q) },
+        _ => unreachable!("check_level rejected an unavailable level"),
+    }
+}
+
+/// Dot product at the process-wide [`active_level`].
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_at(active_level(), a, b)
+}
+
+/// `y[k] += a · x[k]` at the process-wide [`active_level`].
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    axpy_at(active_level(), y, a, x)
+}
+
+/// Int8-row dot at the process-wide [`active_level`].
+#[inline]
+pub fn dot_q8(x: &[f32], q: &[i8]) -> f32 {
+    dot_q8_at(active_level(), x, q)
+}
+
+/// Int8-row scatter at the process-wide [`active_level`].
+#[inline]
+pub fn axpy_q8(y: &mut [f32], a: f32, q: &[i8]) {
+    axpy_q8_at(active_level(), y, a, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut r = Rng::new(seed);
+        (
+            (0..n).map(|_| r.normal() as f32).collect(),
+            (0..n).map(|_| r.normal() as f32).collect(),
+        )
+    }
+
+    fn qrow(n: usize, seed: u64) -> Vec<i8> {
+        let mut r = Rng::new(seed);
+        (0..n)
+            .map(|_| (r.normal() * 40.0).clamp(-127.0, 127.0) as i8)
+            .collect()
+    }
+
+    #[test]
+    fn parse_and_names() {
+        assert_eq!(SimdLevel::parse("auto"), Some(None));
+        assert_eq!(SimdLevel::parse(""), Some(None));
+        assert_eq!(SimdLevel::parse("scalar"), Some(Some(SimdLevel::Scalar)));
+        assert_eq!(SimdLevel::parse("AVX2"), Some(Some(SimdLevel::Avx2)));
+        assert_eq!(SimdLevel::parse("neon"), Some(Some(SimdLevel::Neon)));
+        assert_eq!(SimdLevel::parse("sse9"), None);
+        assert!(SimdLevel::Scalar.available());
+        assert_eq!(SimdLevel::Scalar.name(), "scalar");
+        assert!(SimdLevel::supported().contains(&SimdLevel::Scalar));
+        assert!(active_level().available());
+    }
+
+    /// The tentpole pin: every dispatch level this host supports returns
+    /// **bitwise identical** f32 dots and axpys, across lengths covering
+    /// every remainder class (0..=16 and larger odd sizes).
+    #[test]
+    fn f32_kernels_bitwise_identical_across_levels() {
+        let levels = SimdLevel::supported();
+        for n in (0..=16).chain([31, 32, 63, 100, 256, 1000]) {
+            let (a, b) = vecs(n, 7 + n as u64);
+            let want_dot = dot_at(SimdLevel::Scalar, &a, &b);
+            let mut want_y = b.clone();
+            axpy_at(SimdLevel::Scalar, &mut want_y, 0.37, &a);
+            for &level in &levels {
+                let got = dot_at(level, &a, &b);
+                assert_eq!(
+                    got.to_bits(),
+                    want_dot.to_bits(),
+                    "dot n={n} {} != scalar ({got} vs {want_dot})",
+                    level.name()
+                );
+                let mut y = b.clone();
+                axpy_at(level, &mut y, 0.37, &a);
+                for (k, (g, w)) in y.iter().zip(&want_y).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "axpy n={n} lane {k} {} != scalar",
+                        level.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Same pin for the int8 kernels: the i8→f32 conversion is exact, so
+    /// q8 dots/scatters are also bitwise across dispatch levels.
+    #[test]
+    fn q8_kernels_bitwise_identical_across_levels() {
+        let levels = SimdLevel::supported();
+        for n in (0..=16).chain([31, 64, 100, 256]) {
+            let (x, y0) = vecs(n, 90 + n as u64);
+            let q = qrow(n, 91 + n as u64);
+            let want_dot = dot_q8_at(SimdLevel::Scalar, &x, &q);
+            let mut want_y = y0.clone();
+            axpy_q8_at(SimdLevel::Scalar, &mut want_y, -1.25, &q);
+            for &level in &levels {
+                let got = dot_q8_at(level, &x, &q);
+                assert_eq!(
+                    got.to_bits(),
+                    want_dot.to_bits(),
+                    "dot_q8 n={n} {} != scalar",
+                    level.name()
+                );
+                let mut y = y0.clone();
+                axpy_q8_at(level, &mut y, -1.25, &q);
+                for (g, w) in y.iter().zip(&want_y) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "axpy_q8 n={n} {}", level.name());
+                }
+            }
+        }
+    }
+
+    /// The canonical order is a plain reassociation of the sequential sum:
+    /// it must agree with a sequential reference to f32 rounding noise.
+    #[test]
+    fn canonical_order_matches_sequential_within_tolerance() {
+        for n in [3, 8, 17, 256, 1023] {
+            let (a, b) = vecs(n, 40 + n as u64);
+            let seq: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot(&a, &b);
+            let scale: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            assert!(
+                (seq - got).abs() <= 1e-5 * scale.max(1.0),
+                "n={n}: {seq} vs {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn q8_dot_matches_exact_integer_reference() {
+        // with x a vector of exact small integers the q8 dot is exact
+        let q: Vec<i8> = (0..24).map(|i| (i as i8) - 12).collect();
+        let x: Vec<f32> = (0..24).map(|i| (i % 5) as f32).collect();
+        let want: f32 = x.iter().zip(&q).map(|(a, &b)| a * b as f32).sum();
+        for level in SimdLevel::supported() {
+            assert_eq!(dot_q8_at(level, &x, &q), want);
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+        let mut y: Vec<f32> = vec![];
+        axpy(&mut y, 2.0, &[]);
+        let mut y = vec![1.0f32];
+        axpy(&mut y, 2.0, &[0.5]);
+        assert_eq!(y, vec![2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not available")]
+    fn unavailable_level_panics() {
+        // no host supports both vector ISAs at once
+        let bogus = if SimdLevel::Avx2.available() {
+            SimdLevel::Neon
+        } else {
+            SimdLevel::Avx2
+        };
+        dot_at(bogus, &[1.0], &[1.0]);
+    }
+}

@@ -17,7 +17,11 @@
 //!   JAX reference (`tools/make_host_fixture.py`), plus the predictor's
 //!   recall/density counter schedule under an enforcing Reuse policy;
 //! - the TCP server speaking the same protocol over a host engine,
-//!   including the per-request sparsity fields in the JSON reply.
+//!   including the per-request sparsity fields in the JSON reply;
+//! - ISSUE 7: the golden fixture decoded at int8 (`--quant q8`'s backend
+//!   path) keeps every pinned token whose argmax margin exceeds the
+//!   observed quantization drift, and `time_to_first_token_ms` is stamped
+//!   at prefill sampling, not at the first decode step.
 
 use std::sync::Arc;
 
@@ -391,7 +395,7 @@ fn server_roundtrip_over_host_backend() {
             ..EngineConfig::default()
         };
         let engine = Engine::new(Box::new(backend), ecfg).unwrap();
-        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(2), Some(ready_tx))
+        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(2), Some(ready_tx), 0)
     });
     let addr = ready_rx
         .recv_timeout(std::time::Duration::from_secs(60))
@@ -417,6 +421,168 @@ fn server_roundtrip_over_host_backend() {
         assert_eq!(resp.get("fallbacks").and_then(|v| v.as_usize()), Some(0));
     }
     assert_eq!(server.join().unwrap().unwrap(), 2);
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// ISSUE 7: the golden fixture at int8. Teacher-force the pinned f32
+/// continuation through the f32 and q8 backend paths side by side. At
+/// each step, when the f32 argmax margin exceeds twice the observed q8
+/// logit drift the token provably cannot move — assert it doesn't (this
+/// exercises the whole q8 decode path; a wrong scale or layout would blow
+/// the drift up instead). The drift itself is bounded at 15% of the logit
+/// scale — an order of magnitude above what per-neuron symmetric int8
+/// costs, an order of magnitude below what a broken path produces. If
+/// every step is margin-decidable, the greedy q8 engine run must
+/// reproduce the pinned sequence end to end.
+#[test]
+fn golden_fixture_tokens_survive_q8_quantization() {
+    use rsb::hostexec::QuantMode;
+    let pinned: Vec<u32> = vec![27, 1, 32, 32, 32, 28, 28, 39, 39, 39];
+    let prompt = vec![3i32, 1, 4, 1, 5];
+    let f32_be = fixture_backend(1);
+    let q8_be = fixture_backend(1).with_quant(QuantMode::Q8);
+    let c = fixture_cfg();
+    let v = c.vocab;
+    let mask = BatchMask::dense(1, c.n_layers, c.d_ff);
+
+    // padded prefill (bucket 8), step-0 logits at the last prompt position
+    let mut padded = prompt.clone();
+    padded.resize(8, 0);
+    let toks = Tensor::i32(vec![1, 8], padded).unwrap();
+    let pf = f32_be.prefill(&toks, false).unwrap();
+    let pq = q8_be.prefill(&toks, false).unwrap();
+    let mut lf = pf.logits.as_f32().unwrap()[4 * v..5 * v].to_vec();
+    let mut lq = pq.logits.as_f32().unwrap()[4 * v..5 * v].to_vec();
+    let (mut kv_f, mut kv_q) = (pf.kv, pq.kv);
+
+    let mut decided = 0usize;
+    for (k, &want) in pinned.iter().enumerate() {
+        assert_eq!(argmax(&lf), want as usize, "f32 fixture drifted at step {k}");
+        let scale = lf.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1.0);
+        let drift = lf
+            .iter()
+            .zip(&lq)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        assert!(
+            drift <= 0.15 * scale,
+            "step {k}: q8 logits drifted {drift} (scale {scale}) — quant path broken"
+        );
+        let mut top = lf.clone();
+        top.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        if top[0] - top[1] > 2.0 * drift {
+            assert_eq!(
+                argmax(&lq),
+                want as usize,
+                "step {k}: q8 flipped a margin-decided token"
+            );
+            decided += 1;
+        }
+        if k + 1 == pinned.len() {
+            break;
+        }
+        let pos = Tensor::i32(vec![1], vec![(prompt.len() + k) as i32]).unwrap();
+        let tok = Tensor::i32(vec![1, 1], vec![want as i32]).unwrap();
+        let of = f32_be.decode(&kv_f, &pos, &tok, &mask).unwrap();
+        let oq = q8_be.decode(&kv_q, &pos, &tok, &mask).unwrap();
+        lf = of.logits.as_f32().unwrap().to_vec();
+        lq = oq.logits.as_f32().unwrap().to_vec();
+        (kv_f, kv_q) = (of.kv, oq.kv);
+    }
+    assert!(decided > 0, "q8 drift swamped every argmax margin");
+
+    // greedy q8 engine run: deterministic, and pinned outright when every
+    // step above was margin-decidable
+    let run = || {
+        let be = fixture_backend(2).with_quant(QuantMode::Q8);
+        let mut e = Engine::new(Box::new(be), EngineConfig::default()).unwrap();
+        e.submit(vec![3, 1, 4, 1, 5], 10);
+        e.run_to_completion().unwrap().remove(0).tokens
+    };
+    let (t1, t2) = (run(), run());
+    assert_eq!(t1.len(), 10);
+    assert_eq!(t1, t2, "q8 greedy decode is not deterministic");
+    if decided == pinned.len() {
+        assert_eq!(t1, pinned, "q8 greedy run diverged from the pinned tokens");
+    }
+}
+
+/// Wraps the host backend and stalls every decode step, so a TTFT stamped
+/// at the first decode step would be off by at least one stall.
+struct SlowDecode {
+    inner: HostBackend,
+    delay: std::time::Duration,
+}
+
+impl ExecBackend for SlowDecode {
+    fn kind(&self) -> &'static str {
+        "host-slow"
+    }
+    fn model_id(&self) -> &str {
+        self.inner.model_id()
+    }
+    fn config(&self) -> &ModelCfg {
+        self.inner.config()
+    }
+    fn decode_b(&self) -> usize {
+        self.inner.decode_b()
+    }
+    fn prefill_t(&self) -> usize {
+        self.inner.prefill_t()
+    }
+    fn supports_row_masks(&self) -> bool {
+        self.inner.supports_row_masks()
+    }
+    fn prefill(
+        &self,
+        tokens: &Tensor,
+        report_ffn_mask: bool,
+    ) -> rsb::Result<rsb::runtime::PrefillOut> {
+        self.inner.prefill(tokens, report_ffn_mask)
+    }
+    fn decode(
+        &self,
+        kv: &Tensor,
+        pos: &Tensor,
+        tokens: &Tensor,
+        mask: &BatchMask,
+    ) -> rsb::Result<rsb::runtime::DecodeOut> {
+        std::thread::sleep(self.delay);
+        self.inner.decode(kv, pos, tokens, mask)
+    }
+}
+
+/// ISSUE 7: `time_to_first_token_ms` is stamped when the first token is
+/// sampled from prefill logits in `admit()`. With every decode step
+/// stalled 30ms, a TTFT stamped at the first decode step would measure at
+/// least one stall; the prefill-stamped one stays well under it.
+#[test]
+fn ttft_is_stamped_at_prefill_not_first_decode_step() {
+    let delay = std::time::Duration::from_millis(30);
+    let backend = SlowDecode {
+        inner: HostBackend::random(cfg("opt"), 42, 2, 6).unwrap(),
+        delay,
+    };
+    let mut e = Engine::new(Box::new(backend), EngineConfig::default()).unwrap();
+    let t0 = std::time::Instant::now();
+    e.submit(vec![5, 9, 13], 6);
+    let done = e.run_to_completion().unwrap();
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(done[0].tokens.len(), 6);
+    assert!(total_ms >= 60.0, "decode stall did not engage ({total_ms}ms)");
+    let ttft = e.metrics.time_to_first_token_ms.mean();
+    assert!(
+        ttft < 15.0,
+        "TTFT {ttft}ms includes decode latency (stall is 30ms/step)"
+    );
 }
 
 /// Sampling still behaves on the host backend (temperature diverges seeds).

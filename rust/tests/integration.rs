@@ -366,7 +366,7 @@ fn server_roundtrip_over_tcp() {
         let model = tiny();
         let params = model.init_params(0).unwrap();
         let engine = Engine::with_model(model, params, EngineConfig::default()).unwrap();
-        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(2), Some(ready_tx))
+        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(2), Some(ready_tx), 0)
     });
     let addr = ready_rx
         .recv_timeout(std::time::Duration::from_secs(60))
@@ -396,7 +396,7 @@ fn server_replies_json_error_to_malformed_requests() {
         let model = tiny();
         let params = model.init_params(0).unwrap();
         let engine = Engine::with_model(model, params, EngineConfig::default()).unwrap();
-        rsb::server::serve(engine, bpe, "127.0.0.1:0", Some(1), Some(ready_tx))
+        rsb::server::serve(engine, bpe, "127.0.0.1:0", Some(1), Some(ready_tx), 0)
     });
     let addr = ready_rx
         .recv_timeout(std::time::Duration::from_secs(60))

@@ -51,7 +51,7 @@ fn metrics_and_reset_over_live_tcp_server() {
             ..EngineConfig::default()
         };
         let engine = Engine::new(Box::new(backend), ecfg).unwrap();
-        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(3), Some(ready_tx))
+        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(3), Some(ready_tx), 0)
     });
     let addr = ready_rx
         .recv_timeout(std::time::Duration::from_secs(60))
@@ -120,4 +120,103 @@ fn metrics_and_reset_over_live_tcp_server() {
         assert_eq!(resp.get("id").and_then(Value::as_i64), Some(i as i64));
     }
     assert_eq!(server.join().unwrap().unwrap(), 3);
+}
+
+/// A client that disconnects mid-request must not leave state behind: the
+/// scheduler sweeps its pending completion and request counter (ISSUE 7 —
+/// `pending`/`req_counts` grew monotonically before), and the metrics
+/// snapshot reports what was reclaimed.
+#[test]
+fn disconnect_mid_request_reclaims_scheduler_state() {
+    use std::sync::mpsc;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let bpe = Arc::new(rsb::tokenizer::Bpe::train("ab ab ab ba baab abba", 24).unwrap());
+    let bpe_srv = bpe.clone();
+    let server = std::thread::spawn(move || {
+        // a heavier geometry than the other tests: A's orphaned request
+        // must still be decoding when its disconnect reaches the scheduler
+        let mut c = cfg();
+        c.d_model = 64;
+        c.n_heads = 4;
+        c.d_ff = 256;
+        c.max_seq = 64;
+        let backend = HostBackend::random(c, 0, 2, 6).unwrap();
+        let engine = Engine::new(Box::new(backend), EngineConfig::default()).unwrap();
+        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(1), Some(ready_tx), 0)
+    });
+    let addr = ready_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("server start");
+
+    // connection A: submit a long request, then hang up before the reply
+    {
+        let mut a = rsb::server::Client::connect(addr).unwrap();
+        a.send_line(
+            "{\"id\": 1, \"prompt\": \"ab ba\", \"max_tokens\": 48, \"temperature\": 0.0}",
+        )
+        .unwrap();
+    } // A dropped: reader EOF -> Disconnected -> scheduler sweep
+
+    // connection B: watch the sweep land, then serve one real request
+    let mut b = rsb::server::Client::connect(addr).unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let (mut jobs, mut conns) = (0, 0);
+    while std::time::Instant::now() < deadline {
+        let snap = b.cmd("metrics").unwrap();
+        let srv = snap.req("server").unwrap();
+        jobs = srv.usize_of("reclaimed_jobs").unwrap();
+        conns = srv.usize_of("reclaimed_conns").unwrap();
+        if jobs >= 1 && conns >= 1 {
+            // A's counter is gone from the per-connection list too
+            let listed = srv.req("connections").unwrap().as_arr().unwrap().len();
+            assert_eq!(listed, 1, "only B should remain in connections");
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(jobs >= 1, "pending completion was not reclaimed");
+    assert!(conns >= 1, "req_counts entry was not reclaimed");
+    let resp = b.request(2, "ab", 2, 0.0).unwrap();
+    assert_eq!(resp.get("tokens").and_then(Value::as_usize), Some(2));
+    // A's orphaned job never counts as served
+    assert_eq!(server.join().unwrap().unwrap(), 1);
+}
+
+/// `max_tokens` validation (ISSUE 7): 0 is rejected with a JSON error
+/// line, values above the server's cap are clamped and the reply says so.
+#[test]
+fn max_tokens_zero_rejected_and_oversize_clamped() {
+    use std::sync::mpsc;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let bpe = Arc::new(rsb::tokenizer::Bpe::train("ab ab ab ba baab abba", 24).unwrap());
+    let bpe_srv = bpe.clone();
+    let server = std::thread::spawn(move || {
+        let backend = HostBackend::random(cfg(), 0, 2, 6).unwrap();
+        let engine = Engine::new(Box::new(backend), EngineConfig::default()).unwrap();
+        // cap requests at 5 generated tokens
+        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(1), Some(ready_tx), 5)
+    });
+    let addr = ready_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("server start");
+    let mut client = rsb::server::Client::connect(addr).unwrap();
+
+    // max_tokens 0: a JSON error line echoing the request id, nothing runs
+    client
+        .send_line("{\"id\": 7, \"prompt\": \"ab\", \"max_tokens\": 0}")
+        .unwrap();
+    let resp = client.recv().unwrap();
+    assert_eq!(resp.get("id").and_then(Value::as_i64), Some(7));
+    assert!(resp.str_of("error").unwrap().contains("max_tokens"));
+
+    // max_tokens far past the cap: clamped to 5, and the reply names the cap
+    let resp = client.request(8, "ab ba", 10_000, 0.0).unwrap();
+    assert_eq!(resp.get("tokens").and_then(Value::as_usize), Some(5));
+    assert_eq!(resp.get("max_tokens_clamped").and_then(Value::as_usize), Some(5));
+    assert_eq!(
+        resp.str_of("finish").unwrap(),
+        "maxtokens",
+        "the clamp is what ended the request"
+    );
+    assert_eq!(server.join().unwrap().unwrap(), 1);
 }
