@@ -1,0 +1,304 @@
+//! Serving load benchmark: Poisson arrivals over a short/long request mix,
+//! replayed against three engine configurations on the host backend —
+//!
+//! - `waves` — the fixed-batch baseline: admission only refills when every
+//!   slot has drained (`Admission::Waves`), one-shot prefill, dense KV;
+//! - `continuous` — continuous batching: freed slots are refilled at every
+//!   decode-step boundary, prompts prefill in chunks so a long prompt
+//!   stalls in-flight decodes by at most one chunk;
+//! - `paged` — continuous batching over the page-pooled KV cache, sized to
+//!   HALF the dense cache's positions, so the same workload must complete
+//!   by recycling pages as requests retire.
+//!
+//! Arrivals are scheduled in virtual time (decode-step units) so all three
+//! runs replay the identical workload; latency/TTFT are wall-clock.
+//!
+//! Acceptance gates (always on, `--smoke` only shrinks the workload):
+//! - continuous batching strictly beats the waves baseline wall-clock;
+//! - the paged run's KV footprint is at most half the dense footprint,
+//!   every request completes (no ContextFull, nothing stuck), and the
+//!   served tokens are bitwise identical across all three runs;
+//! - the paged pool's high-water mark stays within its page budget.
+//!
+//! `--trace <out.jsonl>` records the paged run's phase spans and dumps
+//! Chrome-trace JSONL (tools/trace_summary.py reads it). The host CI job
+//! runs `cargo bench --no-default-features --bench bench_serve -- --smoke
+//! --trace ...` on every PR and schema-checks the emitted trace.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use rsb::engine::{Admission, Engine, EngineConfig, FinishReason, PagedKvCfg};
+use rsb::hostexec::HostBackend;
+use rsb::runtime::artifact::ModelCfg;
+use rsb::util::render_table;
+use rsb::util::rng::Rng;
+use rsb::util::stats::Samples;
+
+const DECODE_B: usize = 8;
+const PREFILL_T: usize = 32;
+const PAGE_SIZE: usize = 16;
+// half the dense cache's positions: 24 * 16 = 384 vs DECODE_B * max_seq = 768
+const N_PAGES: usize = 24;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("bench_serve: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn serve_cfg() -> ModelCfg {
+    ModelCfg {
+        size: "serve".into(),
+        arch: "opt".into(),
+        act: "relu".into(),
+        stage: 0,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 512,
+        vocab: 512,
+        max_seq: 96,
+        shift: 1.0,
+        ffn_act: "relu".into(),
+        gated: false,
+        parallel_block: false,
+        has_bias: true,
+    }
+}
+
+struct Arrival {
+    at_step: usize,
+    prompt: Vec<u32>,
+    max_new: usize,
+}
+
+/// Poisson arrival process (exponential inter-arrival gaps, mean
+/// `mean_gap` decode steps) over a 75% short / 25% long request mix.
+fn schedule(n: usize, mean_gap: f64, vocab: usize) -> Vec<Arrival> {
+    let mut rng = Rng::new(0xA11CE);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += -(1.0 - rng.f64()).ln() * mean_gap;
+            let long = rng.chance(0.25);
+            let plen = if long { rng.range(24, 33) } else { rng.range(4, 13) };
+            let max_new = if long { rng.range(24, 41) } else { rng.range(4, 13) };
+            Arrival {
+                at_step: t as usize,
+                prompt: (0..plen).map(|_| rng.range(1, vocab) as u32).collect(),
+                max_new,
+            }
+        })
+        .collect()
+}
+
+struct RunReport {
+    name: &'static str,
+    wall_s: f64,
+    steps: usize,
+    latency_ms: Samples,
+    ttft_ms: Samples,
+    tokens: usize,
+    tokens_by_id: Vec<(u64, Vec<u32>)>,
+    context_full: usize,
+    kv_bytes: usize,
+    pages_high_water: u64,
+}
+
+/// Replay the arrival schedule: arrivals are released by decode-step index
+/// (virtual time), latencies measured wall-clock from actual submission.
+fn drive(name: &'static str, mut eng: Engine, sched: &[Arrival]) -> rsb::Result<RunReport> {
+    let kv_bytes = eng.kv_size_bytes();
+    let mut submit_at: HashMap<u64, Instant> = HashMap::new();
+    let mut latency_ms = Samples::default();
+    let mut ttft_ms = Samples::default();
+    let mut tokens_by_id: Vec<(u64, Vec<u32>)> = Vec::new();
+    let (mut next, mut step, mut tokens, mut context_full) = (0usize, 0usize, 0usize, 0usize);
+    let t0 = Instant::now();
+    loop {
+        while next < sched.len() && sched[next].at_step <= step {
+            let a = &sched[next];
+            let id = eng.submit(a.prompt.clone(), a.max_new);
+            submit_at.insert(id, Instant::now());
+            next += 1;
+        }
+        if next >= sched.len() && !eng.has_work() {
+            break;
+        }
+        let out = eng.step_ext()?;
+        let now = Instant::now();
+        for ev in &out.emitted {
+            if ev.index == 0 {
+                ttft_ms.push((now - submit_at[&ev.id]).as_secs_f64() * 1e3);
+            }
+        }
+        for c in out.done {
+            latency_ms.push((now - submit_at[&c.id]).as_secs_f64() * 1e3);
+            tokens += c.tokens.len();
+            if c.finish == FinishReason::ContextFull {
+                context_full += 1;
+            }
+            tokens_by_id.push((c.id, c.tokens));
+        }
+        step += 1;
+        if step > 2_000_000 {
+            return Err(rsb::error::Error::Engine(format!("{name}: workload did not drain")));
+        }
+    }
+    tokens_by_id.sort_by_key(|(id, _)| *id);
+    Ok(RunReport {
+        name,
+        wall_s: t0.elapsed().as_secs_f64(),
+        steps: step,
+        latency_ms,
+        ttft_ms,
+        tokens,
+        tokens_by_id,
+        context_full,
+        kv_bytes,
+        pages_high_water: eng.metrics.kv_pages_high_water,
+    })
+}
+
+fn engine(ecfg: EngineConfig) -> rsb::Result<Engine> {
+    let be = HostBackend::random(serve_cfg(), 7, DECODE_B, PREFILL_T)?;
+    Engine::new(Box::new(be), ecfg)
+}
+
+fn arg_value(name: &str) -> Option<String> {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == name {
+            return args.next();
+        }
+    }
+    None
+}
+
+fn run() -> rsb::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n = if smoke { 24 } else { 96 };
+    let sched = schedule(n, 2.0, serve_cfg().vocab);
+    println!(
+        "bench_serve: {n} requests, Poisson mean gap 2 steps, 75/25 short/long mix{}",
+        if smoke { " (--smoke)" } else { "" }
+    );
+
+    let waves = drive(
+        "waves",
+        engine(EngineConfig {
+            admission: Admission::Waves,
+            ..EngineConfig::default()
+        })?,
+        &sched,
+    )?;
+    let cont = drive(
+        "continuous",
+        engine(EngineConfig {
+            prefill_chunk: 16,
+            ..EngineConfig::default()
+        })?,
+        &sched,
+    )?;
+    // the paged run doubles as the traced serve smoke for CI's schema check
+    let trace = arg_value("--trace")
+        .map(|p| (std::sync::Arc::new(rsb::obs::TraceSink::new(1 << 16)), p));
+    let mut paged_eng = engine(EngineConfig {
+        prefill_chunk: 16,
+        paged_kv: Some(PagedKvCfg {
+            page_size: PAGE_SIZE,
+            n_pages: N_PAGES,
+        }),
+        ..EngineConfig::default()
+    })?;
+    if let Some((sink, _)) = &trace {
+        paged_eng.set_trace(Some(sink.clone()));
+    }
+    let paged = drive("paged", paged_eng, &sched)?;
+
+    let rows: Vec<Vec<String>> = [&waves, &cont, &paged]
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.to_string(),
+                format!("{:.1}ms", r.wall_s * 1e3),
+                format!("{}", r.steps),
+                format!("{:.2}ms", r.latency_ms.percentile(50.0)),
+                format!("{:.2}ms", r.latency_ms.percentile(99.0)),
+                format!("{:.2}ms", r.ttft_ms.percentile(50.0)),
+                format!("{:.0}/s", r.tokens as f64 / r.wall_s),
+                format!("{:.0}KiB", r.kv_bytes as f64 / 1024.0),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render_table(
+            &["config", "wall", "steps", "lat p50", "lat p99", "ttft p50", "tokens", "kv bytes"],
+            &rows
+        )
+    );
+
+    // gate 1: continuous batching strictly beats the fixed-batch baseline
+    assert!(
+        cont.wall_s < waves.wall_s,
+        "continuous batching must beat waves wall-clock ({:.1}ms vs {:.1}ms)",
+        cont.wall_s * 1e3,
+        waves.wall_s * 1e3
+    );
+    assert!(
+        cont.steps < waves.steps,
+        "continuous batching must need fewer decode steps ({} vs {})",
+        cont.steps,
+        waves.steps
+    );
+
+    // gate 2: the paged pool is at most half the dense KV footprint and the
+    // full workload still completes with bitwise-identical tokens
+    assert!(
+        paged.kv_bytes * 2 <= cont.kv_bytes,
+        "paged pool must be <= half the dense cache ({} vs {} bytes)",
+        paged.kv_bytes,
+        cont.kv_bytes
+    );
+    for r in [&waves, &cont, &paged] {
+        assert_eq!(r.tokens_by_id.len(), n, "{}: every request must complete", r.name);
+        assert_eq!(r.context_full, 0, "{}: no request may be rejected", r.name);
+    }
+    assert_eq!(
+        cont.tokens_by_id, waves.tokens_by_id,
+        "admission policy changed served tokens"
+    );
+    assert_eq!(
+        paged.tokens_by_id, cont.tokens_by_id,
+        "paged KV changed served tokens"
+    );
+    assert!(
+        paged.pages_high_water as usize <= N_PAGES,
+        "page pool overran its budget"
+    );
+
+    println!(
+        "gates passed: continuous {:.1}ms < waves {:.1}ms; paged completed {n} requests \
+         in {} pages (high water {}) at {:.0}% of the dense KV footprint",
+        cont.wall_s * 1e3,
+        waves.wall_s * 1e3,
+        N_PAGES,
+        paged.pages_high_water,
+        100.0 * paged.kv_bytes as f64 / cont.kv_bytes as f64
+    );
+
+    if let Some((sink, path)) = &trace {
+        let path = std::path::PathBuf::from(path);
+        sink.dump_to_path(&path)?;
+        println!(
+            "trace: wrote {} spans to {} ({} dropped)",
+            sink.len(),
+            path.display(),
+            sink.dropped()
+        );
+    }
+    Ok(())
+}

@@ -2,11 +2,27 @@
 //!
 //! vLLM-style loop scaled to this testbed: requests enter a FIFO queue;
 //! each `step()` admits queued requests into free KV slots (prefill at B=1,
-//! pack the returned KV row into the batch cache) and then runs ONE batched
-//! decode step for every active slot. The actual math is behind
+//! pack the returned KV row into the cache) and then runs ONE batched
+//! decode step for every active slot. Admission happens at *every* step
+//! boundary by default ([`Admission::Continuous`]); the drain-then-refill
+//! [`Admission::Waves`] baseline is kept selectable so `bench_serve` can
+//! gate continuous batching against it. The actual math is behind
 //! [`ExecBackend`]: the compiled XLA path keeps weights device-resident;
 //! the host path (`crate::hostexec`) runs the same contracts in pure Rust,
 //! realising the predicted mask as skipped weight rows.
+//!
+//! KV storage is either the dense `[L, 2, B, H, Tmax, hd]` batch tensor or
+//! a [`KvPool`] of fixed-size pages (`EngineConfig::paged_kv`): admission
+//! reserves each request's worst-case page need up front, pages are
+//! allocated lazily as the sequence grows and returned the moment the
+//! request finishes or is evicted. A paged-capable backend reads K/V
+//! through the page table directly (`decode_paged`); a union-mask backend
+//! runs through the materialize-on-union shim (dense tensor in, stepped
+//! positions written back to the pool). With `prefill_chunk > 0` prompts
+//! are fed incrementally — one chunk per step — so a long prompt stalls
+//! in-flight decodes by at most one chunk. Per-request deadlines
+//! (`Request::with_deadline_ms`) are swept at each step boundary and evict
+//! the request wherever it is: queued, mid-prefill or decoding.
 //!
 //! Sparsity integration (the paper's contribution as a first-class serving
 //! feature): every decode step returns the per-slot FFN activation mask;
@@ -37,10 +53,24 @@ use crate::error::Result;
 use crate::obs::{layer_live_counts, Phase, ReuseRing, TraceSink};
 use crate::predictor::{NeuronPolicy, SlotPredictor};
 use crate::runtime::backend::{BatchMask, ExecBackend};
+use crate::runtime::paged::{KvPool, PagedKvCfg};
 use crate::runtime::Tensor;
 use crate::sparsity::AggregatedTracker;
 use crate::sparsity::SparsityStats;
 use crate::util::rng::Rng;
+
+/// When queued requests may enter free KV slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Admit at every decode-step boundary (continuous batching — the
+    /// default).
+    Continuous,
+    /// Admit only when *every* slot is free: the whole batch drains before
+    /// the next wave starts. This is the static-batching baseline
+    /// `bench_serve` gates continuous batching against; it is kept
+    /// selectable for A/B runs, not for production use.
+    Waves,
+}
 
 pub struct EngineConfig {
     pub default_max_new_tokens: usize,
@@ -58,6 +88,24 @@ pub struct EngineConfig {
     /// Run a dense probe step every N steps while enforcing, to refresh the
     /// recall estimate (0 disables probing).
     pub probe_every: usize,
+    /// Page-pool the KV cache instead of the dense batch tensor (`None` =
+    /// dense). Sizing: a page holds `page_size` positions of every
+    /// layer/lane/head, so the pool spends
+    /// `n_pages * L * 2 * H * page_size * hd * 4` bytes — typically well
+    /// under the dense `B * Tmax` worst case, which is the point.
+    pub paged_kv: Option<PagedKvCfg>,
+    /// Feed prompts in chunks of at most this many tokens, one chunk per
+    /// step (0 = one-shot prefill during admission, the padded-bucket
+    /// path). Requires a backend with `supports_chunked_prefill`; others
+    /// fall back to one-shot. Chunked prompts are tail-clamped to
+    /// `max_seq - 1` instead of the prefill bucket.
+    pub prefill_chunk: usize,
+    /// Queue capacity for [`Engine::try_submit`] (0 = unbounded): a
+    /// submission that would exceed it is rejected and counted as
+    /// backpressure. Only *waiting* requests count against the cap.
+    pub queue_cap: usize,
+    /// Admission mode (continuous vs drain-then-refill waves).
+    pub admission: Admission,
 }
 
 impl Default for EngineConfig {
@@ -69,18 +117,77 @@ impl Default for EngineConfig {
             policy: NeuronPolicy::Dense,
             recall_floor: 0.95,
             probe_every: 16,
+            paged_kv: None,
+            prefill_chunk: 0,
+            queue_cap: 0,
+            admission: Admission::Continuous,
         }
     }
+}
+
+/// One token emitted by a decode step, for streaming delivery: `index` is
+/// the token's position in its request's generated sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenEvent {
+    pub id: u64,
+    pub token: u32,
+    pub index: usize,
+}
+
+/// Everything one [`Engine::step_ext`] produced: per-token events (in
+/// emission order) plus the requests that finished. A finished request's
+/// final token appears both in `emitted` and in its completion's `tokens`.
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    pub emitted: Vec<TokenEvent>,
+    pub done: Vec<Completion>,
+}
+
+/// The engine's KV storage: one dense batch tensor, or a page pool with a
+/// per-slot page table (see `crate::runtime::paged`).
+enum KvStore {
+    Dense(KvBatch),
+    Paged(KvPool),
+}
+
+impl KvStore {
+    fn release_slot(&mut self, slot: usize) {
+        match self {
+            KvStore::Dense(kb) => kb.clear_row(slot),
+            KvStore::Paged(p) => p.release(slot),
+        }
+    }
+}
+
+/// A request whose prompt is being fed chunk-by-chunk: it owns a KV slot
+/// (and, under paged KV, its reservation) but does not decode until the
+/// whole prompt has been scored.
+struct PrefillJob {
+    req: Request,
+    /// tail-clamped prompt actually fed
+    prompt: Vec<u32>,
+    /// tokens scored so far
+    fed: usize,
+    /// the sequence's KV row `[L, 2, 1, H, Tmax, hd]`, carried across chunks
+    kv: Tensor,
+    /// per-chunk `[L, n, F]` FFN liveness (predictive policies only)
+    ffn_chunks: Vec<Tensor>,
+    policy: NeuronPolicy,
+    prefill_ms: f64,
+    queue_ms: f64,
 }
 
 pub struct Engine {
     backend: Box<dyn ExecBackend>,
     pub decode_b: usize,
     pub prefill_t: usize,
-    kv: KvBatch,
+    kv: KvStore,
     slots: SlotManager,
     queue: VecDeque<Request>,
     active: Vec<Option<ActiveRequest>>,
+    /// chunked prefills in flight; a slot here is allocated in `slots` but
+    /// not yet in `active`
+    prefills: Vec<Option<PrefillJob>>,
     trackers: Vec<Option<AggregatedTracker>>,
     predictors: Vec<Option<SlotPredictor>>,
     /// per-slot observed-mask history feeding the §5.1 reuse/aggregated
@@ -98,9 +205,18 @@ impl Engine {
     pub fn new(backend: Box<dyn ExecBackend>, cfg: EngineConfig) -> Result<Engine> {
         let decode_b = backend.decode_b();
         let prefill_t = backend.prefill_t();
-        let kv = KvBatch::new(&backend.kv_shape())?;
+        let kv = match &cfg.paged_kv {
+            None => KvStore::Dense(KvBatch::new(&backend.kv_shape())?),
+            Some(p) => {
+                KvStore::Paged(KvPool::new(&backend.kv_shape(), p.page_size, p.n_pages)?)
+            }
+        };
         let c = backend.config();
         let (n_layers, d_ff) = (c.n_layers, c.d_ff);
+        let mut metrics = EngineMetrics::with_geometry(decode_b, n_layers, d_ff);
+        if let KvStore::Paged(pool) = &kv {
+            metrics.kv_pages_total = pool.n_pages() as u64;
+        }
         Ok(Engine {
             backend,
             decode_b,
@@ -109,13 +225,14 @@ impl Engine {
             slots: SlotManager::new(decode_b),
             queue: VecDeque::new(),
             active: (0..decode_b).map(|_| None).collect(),
+            prefills: (0..decode_b).map(|_| None).collect(),
             trackers: (0..decode_b).map(|_| None).collect(),
             predictors: (0..decode_b).map(|_| None).collect(),
             rings: (0..decode_b).map(|_| None).collect(),
             trace: None,
             stats: SparsityStats::new(n_layers),
             cfg,
-            metrics: EngineMetrics::with_geometry(decode_b, n_layers, d_ff),
+            metrics,
             next_id: 1,
         })
     }
@@ -135,6 +252,20 @@ impl Engine {
     /// The execution backend this engine drives.
     pub fn backend(&self) -> &dyn ExecBackend {
         self.backend.as_ref()
+    }
+
+    /// The engine's configuration (read-only).
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Bytes held by the KV store (dense batch tensor or page pool) —
+    /// what `bench_serve`'s memory gate compares.
+    pub fn kv_size_bytes(&self) -> usize {
+        match &self.kv {
+            KvStore::Dense(kb) => kb.size_bytes(),
+            KvStore::Paged(p) => p.size_bytes(),
+        }
     }
 
     /// Attach (or detach, with `None`) a trace sink: the engine emits
@@ -165,7 +296,8 @@ impl Engine {
     }
 
     /// Submit with a per-request neuron-mask policy override (None = engine
-    /// default policy).
+    /// default policy). This legacy path ignores `queue_cap` — callers that
+    /// want backpressure go through [`Engine::try_submit`].
     pub fn submit_with_policy(
         &mut self,
         prompt: Vec<u32>,
@@ -173,13 +305,31 @@ impl Engine {
         sampling: SamplingParams,
         policy: Option<NeuronPolicy>,
     ) -> u64 {
-        let id = self.next_id;
-        self.next_id += 1;
-        self.queue.push_back(
-            Request::new(id, prompt, max_new_tokens)
+        self.enqueue(
+            Request::new(0, prompt, max_new_tokens)
                 .with_sampling(sampling)
                 .with_policy(policy),
-        );
+        )
+    }
+
+    /// Queue-cap-aware submission: enqueue `req` (its `id` is overwritten
+    /// with an engine-assigned one, returned on success) unless the queue
+    /// already holds `queue_cap` waiting requests — then the request is
+    /// dropped, the rejection counted, and `None` returned so the caller
+    /// can signal backpressure.
+    pub fn try_submit(&mut self, req: Request) -> Option<u64> {
+        if self.cfg.queue_cap > 0 && self.queue.len() >= self.cfg.queue_cap {
+            self.metrics.backpressure_rejections += 1;
+            return None;
+        }
+        Some(self.enqueue(req))
+    }
+
+    fn enqueue(&mut self, mut req: Request) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        req.id = id;
+        self.queue.push_back(req);
         self.metrics.requests_enqueued += 1;
         id
     }
@@ -277,34 +427,88 @@ impl Engine {
     }
 
     /// Admit + one batched decode step. Returns completions finished this
-    /// step.
+    /// step (the legacy API — [`Engine::step_ext`] also reports the tokens
+    /// emitted, which streaming callers need).
     pub fn step(&mut self) -> Result<Vec<Completion>> {
-        self.admit()?;
-        let mut done = Vec::new();
-        if self.active_count() == 0 {
-            return Ok(done);
+        Ok(self.step_ext()?.done)
+    }
+
+    /// One full scheduling tick: sweep expired deadlines, admit queued
+    /// requests (continuously or in waves), advance one chunk of every
+    /// in-flight prefill, then run ONE batched decode step over the active
+    /// slots. Returns both the tokens emitted and the requests finished.
+    pub fn step_ext(&mut self) -> Result<StepOutcome> {
+        let mut out = StepOutcome::default();
+        self.sweep_deadlines(&mut out.done)?;
+        let admitted = self.admit(&mut out.done)?;
+        self.metrics.record_admissions(admitted);
+        self.advance_prefills()?;
+        let live = self.active.iter().filter(|a| a.is_some()).count();
+        if live == 0 {
+            self.update_kv_gauges();
+            return Ok(out);
         }
         let t0 = std::time::Instant::now();
 
-        // assemble decode inputs
-        let mut pos = vec![0i32; self.decode_b];
+        // assemble decode inputs; on the native paged path idle rows are
+        // marked pos = -1 so the backend skips them outright (no KV write,
+        // zero logits) instead of scoring a dummy position 0
+        let paged_native =
+            matches!(self.kv, KvStore::Paged(_)) && self.backend.supports_paged_kv();
+        let idle_pos = if paged_native { -1 } else { 0 };
+        let mut pos = vec![idle_pos; self.decode_b];
         let mut toks = vec![0i32; self.decode_b];
+        // the (slot, position) pairs this step writes — what positional
+        // write-back and the paged shim copy back into the store
+        let mut stepped: Vec<(usize, usize)> = Vec::with_capacity(live);
         for (slot, a) in self.active.iter().enumerate() {
             if let Some(a) = a {
                 pos[slot] = a.pos as i32;
                 toks[slot] = a.next_token as i32;
+                stepped.push((slot, a.pos));
             }
         }
-        let kv_t = self.kv.to_tensor();
         let pos_t = Tensor::i32(vec![self.decode_b], pos)?;
         let tok_t = Tensor::i32(vec![self.decode_b, 1], toks)?;
         let (mask, enforced_rows, probe) = self.plan_mask()?;
-        let out = self.backend.decode(&kv_t, &pos_t, &tok_t, &mask)?;
-        let (logits, ffn_mask, sparsity) = (&out.logits, &out.ffn_mask, &out.sparsity);
-        self.kv.update_from(&out.kv)?;
+        let (logits, ffn_mask, sparsity) = match &mut self.kv {
+            KvStore::Dense(kb) => {
+                let kv_t = kb.to_tensor();
+                let o = self.backend.decode(&kv_t, &pos_t, &tok_t, &mask)?;
+                if self.backend.decode_writes_positions_only() {
+                    // the backend promises its output KV differs from the
+                    // input only at the stepped positions: copy those
+                    // vectors instead of the whole [L,2,B,H,Tmax,hd] blob
+                    kb.write_decode_positions(&o.kv, &stepped)?;
+                } else {
+                    kb.update_from(&o.kv)?;
+                }
+                (o.logits, o.ffn_mask, o.sparsity)
+            }
+            KvStore::Paged(pool) => {
+                // admission reserved the worst case, so growing each live
+                // row's page table to cover its stepped position can't fail
+                for &(slot, p) in &stepped {
+                    pool.ensure_to(slot, p)?;
+                }
+                if self.backend.supports_paged_kv() {
+                    let o = self.backend.decode_paged(pool, &pos_t, &tok_t, &mask)?;
+                    (o.logits, o.ffn_mask, o.sparsity)
+                } else {
+                    // materialize-on-union shim for union-mask backends:
+                    // dense tensor in, stepped positions written back
+                    let kv_t = pool.materialize_batch()?;
+                    let o = self.backend.decode(&kv_t, &pos_t, &tok_t, &mask)?;
+                    for &(slot, p) in &stepped {
+                        pool.write_back_position(slot, &o.kv, p)?;
+                    }
+                    (o.logits, o.ffn_mask, o.sparsity)
+                }
+            }
+        };
         // batch-level sparsity stats are only meaningful at full occupancy
-        if self.active_count() == self.decode_b {
-            self.stats.push(sparsity)?;
+        if live == self.decode_b {
+            self.stats.push(&sparsity)?;
         }
         let step_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.metrics.decode_step_ms.push(step_ms);
@@ -312,7 +516,7 @@ impl Engine {
         self.metrics.steps += 1;
         self.metrics
             .batch_occupancy
-            .push(self.active_count() as f64 / self.decode_b as f64);
+            .push(live as f64 / self.decode_b as f64);
         let per_row_backend = self.backend.supports_row_masks();
         let mut step_union_density = 1.0;
         // on a union-only backend every enforced row executed the same
@@ -349,7 +553,7 @@ impl Engine {
             };
             if self.cfg.track_sparsity {
                 if let Some(tr) = &mut self.trackers[slot] {
-                    tr.push_mask(ffn_mask, slot)?;
+                    tr.push_mask(&ffn_mask, slot)?;
                 }
             }
             if enforced_rows[slot] {
@@ -385,7 +589,7 @@ impl Engine {
                 // a row is full-fidelity only when IT ran dense, whatever
                 // the other slots did
                 if let Some((acc, per_layer)) =
-                    p.observe_scored(ffn_mask, slot, !enforced_rows[slot])?
+                    p.observe_scored(&ffn_mask, slot, !enforced_rows[slot])?
                 {
                     self.metrics.predictor_recall.push(acc.recall());
                     self.metrics.predictor_precision.push(acc.precision());
@@ -401,7 +605,7 @@ impl Engine {
             // the step-to-step Jaccard and trailing-window union densities
             // are §5.1's reuse/aggregated curves measured from live traffic
             if let Some(ring) = &mut self.rings[slot] {
-                if let Some(jac) = ring.push_tensor_row(ffn_mask, slot)? {
+                if let Some(jac) = ring.push_tensor_row(&ffn_mask, slot)? {
                     for (l, &j) in jac.iter().enumerate() {
                         self.metrics.per_layer.push_reuse(l, j);
                     }
@@ -417,6 +621,13 @@ impl Engine {
             // first generated token was produced by prefill.
             a.next_token = next;
             self.metrics.tokens_generated += 1;
+            // stream the token out; a finishing request's final token shows
+            // up both here and in its completion
+            out.emitted.push(TokenEvent {
+                id: a.request.id,
+                token: *a.generated.last().unwrap(),
+                index: a.generated.len() - 1,
+            });
 
             let finish = if a.generated.len() >= a.request.max_new_tokens {
                 Some(FinishReason::MaxTokens)
@@ -428,37 +639,19 @@ impl Engine {
                 None
             };
             if let Some(reason) = finish {
-                let a = self.active[slot].take().unwrap();
-                self.slots.release(slot)?;
-                self.kv.clear_row(slot);
-                self.rings[slot] = None;
-                let mut fallbacks = 0;
-                if let Some(p) = self.predictors[slot].take() {
-                    fallbacks = p.stats.fallbacks;
-                    self.metrics.fallback_events += fallbacks;
-                    self.metrics.slot(slot).fallbacks += fallbacks;
-                }
-                let total_ms = a.enq_elapsed_ms();
-                self.metrics.requests_completed += 1;
-                self.metrics.time_to_first_token_ms.push(
-                    (a.first_token_at - a.request.enqueued_at).as_secs_f64() * 1e3,
-                );
-                done.push(Completion {
-                    id: a.request.id,
-                    prompt_len: a.request.prompt.len(),
-                    tokens: a.generated,
-                    finish: reason,
-                    prefill_ms: a.prefill_ms,
-                    total_ms,
-                    queue_ms: a.queue_ms,
-                    mask_density: (a.enforced_rows > 0)
-                        .then(|| a.mask_density_sum / a.enforced_rows as f64),
-                    enforced_rows: a.enforced_rows,
-                    fallbacks,
-                });
+                out.done.push(self.retire_active(slot, reason)?);
             }
         }
-        Ok(done)
+        self.update_kv_gauges();
+        Ok(out)
+    }
+
+    fn update_kv_gauges(&mut self) {
+        if let KvStore::Paged(pool) = &self.kv {
+            self.metrics.kv_pages_in_use = pool.pages_in_use() as u64;
+            self.metrics.kv_pages_high_water = pool.high_water() as u64;
+            self.metrics.kv_pages_total = pool.n_pages() as u64;
+        }
     }
 
     /// Drive until every queued/active request completes.
@@ -470,33 +663,148 @@ impl Engine {
         Ok(all)
     }
 
-    fn admit(&mut self) -> Result<()> {
+    /// Evict every request whose deadline has passed, wherever it is:
+    /// still queued (it never ran), mid-prefill (slot and pages returned)
+    /// or actively decoding (whatever was generated so far is returned).
+    /// Runs at each step boundary, so eviction lag is bounded by one step.
+    fn sweep_deadlines(&mut self, done: &mut Vec<Completion>) -> Result<()> {
+        let now = std::time::Instant::now();
+        let expired = |d: Option<std::time::Instant>| d.is_some_and(|d| d <= now);
+        if self.queue.iter().any(|r| expired(r.deadline)) {
+            let mut keep = VecDeque::with_capacity(self.queue.len());
+            for req in std::mem::take(&mut self.queue) {
+                if expired(req.deadline) {
+                    self.metrics.deadline_evictions += 1;
+                    self.metrics.requests_completed += 1;
+                    let wait = (now - req.enqueued_at).as_secs_f64() * 1e3;
+                    done.push(unstarted_completion(&req, FinishReason::Deadline, 0.0, wait));
+                } else {
+                    keep.push_back(req);
+                }
+            }
+            self.queue = keep;
+        }
+        for slot in 0..self.decode_b {
+            if self.prefills[slot].as_ref().is_some_and(|j| expired(j.req.deadline)) {
+                let j = self.prefills[slot].take().unwrap();
+                self.slots.release(slot)?;
+                self.kv.release_slot(slot);
+                self.metrics.deadline_evictions += 1;
+                self.metrics.requests_completed += 1;
+                done.push(unstarted_completion(
+                    &j.req,
+                    FinishReason::Deadline,
+                    j.prefill_ms,
+                    j.queue_ms,
+                ));
+            }
+        }
+        for slot in 0..self.decode_b {
+            let hit = self.active[slot]
+                .as_ref()
+                .is_some_and(|a| expired(a.request.deadline));
+            if hit {
+                self.metrics.deadline_evictions += 1;
+                done.push(self.retire_active(slot, FinishReason::Deadline)?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit queued requests into free slots. One-shot prefill runs here
+    /// synchronously (the padded-bucket path); with `prefill_chunk > 0` on
+    /// a chunk-capable backend admission only claims the slot (and, under
+    /// paged KV, the reservation) and `advance_prefills` feeds the prompt.
+    /// Paged admission reserves the request's worst-case page need up
+    /// front, so a growing sequence can never deadlock the pool
+    /// mid-decode; FIFO order is preserved — when the head of the queue
+    /// doesn't fit, admission stops instead of searching behind it.
+    /// Returns the number of requests admitted.
+    fn admit(&mut self, done: &mut Vec<Completion>) -> Result<usize> {
+        if self.cfg.admission == Admission::Waves
+            && self.slots.free_count() < self.slots.capacity()
+        {
+            return Ok(0);
+        }
+        let chunked = self.cfg.prefill_chunk > 0 && self.backend.supports_chunked_prefill();
+        let max_seq = self.backend.config().max_seq;
+        let max_prompt = if chunked { max_seq - 1 } else { self.prefill_t };
+        let mut admitted = 0;
         while self.slots.free_count() > 0 && !self.queue.is_empty() {
+            // worst-case positions the head request can ever occupy
+            let need = {
+                let req = self.queue.front().unwrap();
+                let len = req.prompt.len().clamp(1, max_prompt);
+                len.saturating_add(req.max_new_tokens).min(max_seq)
+            };
+            if let KvStore::Paged(pool) = &self.kv {
+                if pool.pages_for(need) > pool.n_pages() {
+                    // can never fit, even with the whole pool free
+                    let req = self.queue.pop_front().unwrap();
+                    self.metrics.requests_completed += 1;
+                    let wait = req.enqueued_at.elapsed().as_secs_f64() * 1e3;
+                    done.push(unstarted_completion(
+                        &req,
+                        FinishReason::ContextFull,
+                        0.0,
+                        wait,
+                    ));
+                    continue;
+                }
+                if !pool.can_reserve(need) {
+                    break;
+                }
+            }
             let req = self.queue.pop_front().unwrap();
             let slot = self.slots.alloc(req.id).expect("free slot");
+            if let KvStore::Paged(pool) = &mut self.kv {
+                pool.reserve(slot, need)?;
+            }
             let t0 = std::time::Instant::now();
-            // clamp the prompt to the prefill bucket, keeping its tail
+            // clamp the prompt to the feeding bucket, keeping its tail
             let mut prompt: Vec<u32> = req.prompt.clone();
             if prompt.is_empty() {
                 prompt.push(crate::tokenizer::BOS);
             }
-            if prompt.len() > self.prefill_t {
-                prompt.drain(0..prompt.len() - self.prefill_t);
+            if prompt.len() > max_prompt {
+                prompt.drain(0..prompt.len() - max_prompt);
             }
+            let policy = req
+                .policy
+                .clone()
+                .unwrap_or_else(|| self.cfg.policy.clone());
+            let queue_ms = (t0 - req.enqueued_at).as_secs_f64() * 1e3;
+            admitted += 1;
+            if chunked {
+                let mut row_shape = self.backend.kv_shape();
+                row_shape[2] = 1;
+                let numel: usize = row_shape.iter().product();
+                self.prefills[slot] = Some(PrefillJob {
+                    req,
+                    prompt,
+                    fed: 0,
+                    kv: Tensor::f32(row_shape, vec![0.0; numel])?,
+                    ffn_chunks: Vec::new(),
+                    policy,
+                    prefill_ms: 0.0,
+                    queue_ms,
+                });
+                continue;
+            }
+            // one-shot: pad to the prefill bucket and score it now
             let len = prompt.len();
             let mut padded = vec![0i32; self.prefill_t];
             for (i, t) in prompt.iter().enumerate() {
                 padded[i] = *t as i32;
             }
             let tok_t = Tensor::i32(vec![1, self.prefill_t], padded)?;
-            let policy = req
-                .policy
-                .clone()
-                .unwrap_or_else(|| self.cfg.policy.clone());
             // only predictive policies seed from the prompt's masks — spare
             // dense admissions the [L, T, F] liveness record
             let pre = self.backend.prefill(&tok_t, policy.is_predictive())?;
-            self.kv.pack_row(slot, &pre.kv)?;
+            match &mut self.kv {
+                KvStore::Dense(kb) => kb.pack_row(slot, &pre.kv)?,
+                KvStore::Paged(pool) => pool.write_row_positions(slot, &pre.kv, 0..len)?,
+            }
             let c = self.backend.config();
             let vocab = c.vocab;
             let (n_layers, d_ff) = (c.n_layers, c.d_ff);
@@ -509,7 +817,6 @@ impl Engine {
             // batch's latency into TTFT
             let first_token_at = std::time::Instant::now();
             let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-            let queue_ms = (t0 - req.enqueued_at).as_secs_f64() * 1e3;
             self.metrics.prefill_ms.push(prefill_ms);
             self.metrics.queue_wait_ms.push(queue_ms);
             if self.cfg.track_sparsity {
@@ -555,7 +862,146 @@ impl Engine {
                 request: req,
             });
         }
+        Ok(admitted)
+    }
+
+    /// Feed exactly one chunk of every in-flight prefill, so at most one
+    /// chunk of prompt work lands between any two decode steps per slot. A
+    /// finished prompt's slot becomes active immediately (first token
+    /// sampled from the final chunk's logits) and decodes this same step.
+    fn advance_prefills(&mut self) -> Result<()> {
+        for slot in 0..self.decode_b {
+            let Some(mut job) = self.prefills[slot].take() else {
+                continue;
+            };
+            let t0 = std::time::Instant::now();
+            let n = (job.prompt.len() - job.fed)
+                .min(self.cfg.prefill_chunk)
+                .min(self.prefill_t);
+            let toks: Vec<i32> = job.prompt[job.fed..job.fed + n]
+                .iter()
+                .map(|&t| t as i32)
+                .collect();
+            let tok_t = Tensor::i32(vec![1, n], toks)?;
+            let report = job.policy.is_predictive();
+            let pre = self.backend.prefill_chunk(&job.kv, job.fed, &tok_t, report)?;
+            job.kv = pre.kv;
+            if let Some(fm) = pre.ffn_mask {
+                job.ffn_chunks.push(fm);
+            }
+            job.fed += n;
+            job.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+            if job.fed == job.prompt.len() {
+                self.finish_prefill(slot, job, pre.logits)?;
+            } else {
+                self.prefills[slot] = Some(job);
+            }
+        }
         Ok(())
+    }
+
+    /// Promote a fully-fed prefill into an active decode slot: pack the KV
+    /// row into the store, sample the first token from the last chunk's
+    /// logits, and seed trackers/predictors exactly as one-shot admission
+    /// does (chunk chaining is bit-identical to one-shot prefill, so the
+    /// seeded state matches too).
+    fn finish_prefill(&mut self, slot: usize, job: PrefillJob, last_logits: Tensor) -> Result<()> {
+        let PrefillJob {
+            req,
+            prompt,
+            kv,
+            ffn_chunks,
+            policy,
+            prefill_ms,
+            queue_ms,
+            ..
+        } = job;
+        let len = prompt.len();
+        match &mut self.kv {
+            KvStore::Dense(kb) => kb.pack_row(slot, &kv)?,
+            KvStore::Paged(pool) => pool.write_row_positions(slot, &kv, 0..len)?,
+        }
+        let c = self.backend.config();
+        let vocab = c.vocab;
+        let (n_layers, d_ff) = (c.n_layers, c.d_ff);
+        let ld = last_logits.as_f32()?;
+        let n_last = last_logits.shape[1];
+        let row = &ld[(n_last - 1) * vocab..n_last * vocab];
+        let mut rng = Rng::new(req.sampling.seed).fold_in(req.id);
+        let first = sampler::sample(row, &req.sampling, &mut rng);
+        let first_token_at = std::time::Instant::now();
+        self.metrics.prefill_ms.push(prefill_ms);
+        self.metrics.queue_wait_ms.push(queue_ms);
+        if self.cfg.track_sparsity {
+            let mut tr = AggregatedTracker::new(n_layers, d_ff);
+            tr.reset();
+            self.trackers[slot] = Some(tr);
+            self.rings[slot] = Some(ReuseRing::new(n_layers, d_ff, 32));
+        }
+        self.predictors[slot] = match policy {
+            NeuronPolicy::Dense => None,
+            p => Some(SlotPredictor::new(p, self.cfg.recall_floor, n_layers, d_ff)?),
+        };
+        if let Some(p) = &mut self.predictors[slot] {
+            if !ffn_chunks.is_empty() {
+                let fm = concat_ffn_chunks(&ffn_chunks, n_layers, d_ff, len)?;
+                for acc in p.seed_from_prefill(&fm, len)? {
+                    self.metrics.predictor_recall.push(acc.recall());
+                    self.metrics.predictor_precision.push(acc.precision());
+                    let series = self.metrics.slot(slot);
+                    series.recall.push(acc.recall());
+                    series.precision.push(acc.precision());
+                }
+            }
+        }
+        self.active[slot] = Some(ActiveRequest {
+            slot,
+            pos: len,
+            next_token: first,
+            generated: Vec::new(),
+            rng,
+            prefill_ms,
+            queue_ms,
+            first_token_at,
+            mask_density_sum: 0.0,
+            enforced_rows: 0,
+            request: req,
+        });
+        Ok(())
+    }
+
+    /// Retire an active slot: release its storage (dense row cleared,
+    /// pages returned), fold its predictor stats into the metrics and
+    /// build the completion.
+    fn retire_active(&mut self, slot: usize, reason: FinishReason) -> Result<Completion> {
+        let a = self.active[slot].take().expect("retire of empty slot");
+        self.slots.release(slot)?;
+        self.kv.release_slot(slot);
+        self.rings[slot] = None;
+        let mut fallbacks = 0;
+        if let Some(p) = self.predictors[slot].take() {
+            fallbacks = p.stats.fallbacks;
+            self.metrics.fallback_events += fallbacks;
+            self.metrics.slot(slot).fallbacks += fallbacks;
+        }
+        let total_ms = a.enq_elapsed_ms();
+        self.metrics.requests_completed += 1;
+        self.metrics
+            .time_to_first_token_ms
+            .push((a.first_token_at - a.request.enqueued_at).as_secs_f64() * 1e3);
+        Ok(Completion {
+            id: a.request.id,
+            prompt_len: a.request.prompt.len(),
+            tokens: a.generated,
+            finish: reason,
+            prefill_ms: a.prefill_ms,
+            total_ms,
+            queue_ms: a.queue_ms,
+            mask_density: (a.enforced_rows > 0)
+                .then(|| a.mask_density_sum / a.enforced_rows as f64),
+            enforced_rows: a.enforced_rows,
+            fallbacks,
+        })
     }
 }
 
@@ -563,4 +1009,49 @@ impl ActiveRequest {
     fn enq_elapsed_ms(&self) -> f64 {
         self.request.enqueued_at.elapsed().as_secs_f64() * 1e3
     }
+}
+
+/// A completion for a request that never reached decode: deadline-evicted
+/// while queued or prefilling, or impossible to ever fit in the page pool.
+fn unstarted_completion(
+    req: &Request,
+    finish: FinishReason,
+    prefill_ms: f64,
+    queue_ms: f64,
+) -> Completion {
+    Completion {
+        id: req.id,
+        prompt_len: req.prompt.len(),
+        tokens: Vec::new(),
+        finish,
+        prefill_ms,
+        total_ms: req.enqueued_at.elapsed().as_secs_f64() * 1e3,
+        queue_ms,
+        mask_density: None,
+        enforced_rows: 0,
+        fallbacks: 0,
+    }
+}
+
+/// Stack per-chunk `[L, n_i, F]` FFN liveness records back into the
+/// `[L, len, F]` layout `seed_from_prefill` reads (`sum n_i == len`).
+fn concat_ffn_chunks(
+    chunks: &[Tensor],
+    n_layers: usize,
+    d_ff: usize,
+    len: usize,
+) -> Result<Tensor> {
+    let mut out = vec![0.0f32; n_layers * len * d_ff];
+    let mut at = 0usize;
+    for ch in chunks {
+        let n = ch.shape[1];
+        let src = ch.as_f32()?;
+        for l in 0..n_layers {
+            let s0 = l * n * d_ff;
+            let d0 = (l * len + at) * d_ff;
+            out[d0..d0 + n * d_ff].copy_from_slice(&src[s0..s0 + n * d_ff]);
+        }
+        at += n;
+    }
+    Tensor::f32(vec![n_layers, len, d_ff], out)
 }

@@ -3,8 +3,13 @@
 //! The decode entry's KV cache is a dense tensor [L, 2, B, H, Tmax, hd];
 //! each batch row is a *slot* owned by at most one active request.
 //! `KvBatch` keeps the authoritative host copy (rows are packed in from
-//! B=1 prefill outputs, cleared on free, replaced wholesale after every
-//! decode step), and `SlotManager` tracks ownership with a free list.
+//! B=1 prefill outputs, cleared on free), and `SlotManager` tracks
+//! ownership with a free list. After a decode step the host copy is
+//! refreshed either positionally — `write_decode_positions` copies just
+//! the vectors each row appended, for backends that advertise
+//! `decode_writes_positions_only` — or wholesale (`update_from`) for the
+//! compiled path. The paged replacement for this dense layout lives in
+//! [`crate::runtime::paged`].
 
 use crate::error::{Error, Result};
 use crate::runtime::tensor::Tensor;
@@ -126,6 +131,41 @@ impl KvBatch {
         Ok(())
     }
 
+    /// Copy only the stepped positions out of a decode output: for every
+    /// `(slot, pos)` in `rows`, replace that position's K and V vectors in
+    /// every layer/head with `t`'s. Given a backend whose decode mutates
+    /// nothing else (`decode_writes_positions_only`), this leaves the host
+    /// copy bit-identical to a wholesale [`KvBatch::update_from`] while
+    /// moving `rows.len() * L * 2 * H * hd` floats instead of the whole
+    /// `[L, 2, B, H, Tmax, hd]` tensor.
+    pub fn write_decode_positions(&mut self, t: &Tensor, rows: &[(usize, usize)]) -> Result<()> {
+        if t.shape != self.shape() {
+            return Err(Error::Shape {
+                what: "kv positional write-back".into(),
+                expected: self.shape(),
+                got: t.shape.clone(),
+            });
+        }
+        for &(slot, pos) in rows {
+            if slot >= self.batch || pos >= self.max_seq {
+                return Err(Error::Engine(format!(
+                    "kv positional write-back: slot {slot} pos {pos} out of range"
+                )));
+            }
+        }
+        let src = t.as_f32()?;
+        let (hd, t_n, h_n, b) = (self.head_dim, self.max_seq, self.n_heads, self.batch);
+        for plane in 0..self.n_layers * 2 {
+            for &(slot, pos) in rows {
+                for head in 0..h_n {
+                    let at = ((plane * b + slot) * h_n + head) * t_n * hd + pos * hd;
+                    self.data[at..at + hd].copy_from_slice(&src[at..at + hd]);
+                }
+            }
+        }
+        Ok(())
+    }
+
     pub fn size_bytes(&self) -> usize {
         self.data.len() * 4
     }
@@ -235,6 +275,58 @@ mod tests {
         let d = s.alloc(14).unwrap();
         assert_eq!(d, b);
         assert_eq!(s.occupied().count(), 3);
+    }
+
+    /// Positional write-back ≡ wholesale replacement when the new tensor
+    /// differs from the host copy only at the stepped positions — the
+    /// exact situation `decode_writes_positions_only` advertises.
+    #[test]
+    fn positional_write_back_is_bit_identical_to_wholesale() {
+        let sh = [2usize, 2, 3, 2, 5, 2];
+        let mut r = crate::util::rng::Rng::new(9);
+        let mut base = Tensor::zeros_f32(sh.to_vec());
+        for x in base.as_f32_mut().unwrap() {
+            *x = r.normal() as f32;
+        }
+        // the decode output: same tensor, mutated only at (slot 0, pos 3)
+        // and (slot 2, pos 1) across every layer/head plane
+        let rows = [(0usize, 3usize), (2usize, 1usize)];
+        let mut stepped = base.clone();
+        {
+            let d = stepped.as_f32_mut().unwrap();
+            let (l_n, b, h_n, t_n, hd) = (sh[0], sh[2], sh[3], sh[4], sh[5]);
+            for plane in 0..l_n * 2 {
+                for &(slot, pos) in &rows {
+                    for head in 0..h_n {
+                        let at = ((plane * b + slot) * h_n + head) * t_n * hd + pos * hd;
+                        for x in &mut d[at..at + hd] {
+                            *x = r.normal() as f32;
+                        }
+                    }
+                }
+            }
+        }
+        let mut wholesale = KvBatch::new(&sh).unwrap();
+        wholesale.update_from(&base).unwrap();
+        wholesale.update_from(&stepped).unwrap();
+        let mut positional = KvBatch::new(&sh).unwrap();
+        positional.update_from(&base).unwrap();
+        positional.write_decode_positions(&stepped, &rows).unwrap();
+        let (a, b) = (wholesale.to_tensor(), positional.to_tensor());
+        assert!(
+            a.as_f32()
+                .unwrap()
+                .iter()
+                .zip(b.as_f32().unwrap())
+                .all(|(x, y)| x.to_bits() == y.to_bits()),
+            "positional write-back diverged from wholesale replacement"
+        );
+        // bounds checks
+        assert!(positional.write_decode_positions(&stepped, &[(3, 0)]).is_err());
+        assert!(positional.write_decode_positions(&stepped, &[(0, 5)]).is_err());
+        assert!(positional
+            .write_decode_positions(&Tensor::zeros_f32(vec![2, 2, 1, 2, 5, 2]), &[])
+            .is_err());
     }
 
     #[test]

@@ -86,6 +86,20 @@ pub struct EngineMetrics {
     pub probe_steps: u64,
     /// enforcement denials caused by the recall floor (summed at retire)
     pub fallback_events: u64,
+    // serving counters (continuous batching + paged KV)
+    /// KV pages currently allocated (gauge; 0 on a dense-KV engine)
+    pub kv_pages_in_use: u64,
+    /// highest simultaneous page occupancy seen (gauge)
+    pub kv_pages_high_water: u64,
+    /// total pages in the pool (0 = dense KV layout)
+    pub kv_pages_total: u64,
+    /// requests evicted because their `deadline_ms` expired
+    pub deadline_evictions: u64,
+    /// submissions rejected by the admission queue cap
+    pub backpressure_rejections: u64,
+    /// `admissions_per_step[n]` = decode-step boundaries that admitted `n`
+    /// requests (grows on demand via [`EngineMetrics::record_admissions`])
+    pub admissions_per_step: Vec<u64>,
     /// per-slot split of the predictor series
     pub per_slot: Vec<SlotSeries>,
     /// per-layer sparsity/recall/reuse series (`obs::LayerSeries`); empty
@@ -129,6 +143,14 @@ impl EngineMetrics {
         } else {
             self.tokens_generated as f64 / self.decode_secs_total
         }
+    }
+
+    /// Count one decode-step boundary that admitted `n` requests.
+    pub fn record_admissions(&mut self, n: usize) {
+        if self.admissions_per_step.len() <= n {
+            self.admissions_per_step.resize(n + 1, 0);
+        }
+        self.admissions_per_step[n] += 1;
     }
 
     /// Mean FFN FLOP reduction implied by the enforced per-row masks (1.0
@@ -191,6 +213,26 @@ impl EngineMetrics {
         }
     }
 
+    /// One-line serving summary; empty while nothing serving-specific has
+    /// happened (dense KV, no evictions, no rejections).
+    pub fn serving_report(&self) -> String {
+        if self.kv_pages_total == 0
+            && self.deadline_evictions == 0
+            && self.backpressure_rejections == 0
+        {
+            return String::new();
+        }
+        format!(
+            "serving: kv pages {}/{} (hwm {}) | deadline evictions {} | \
+             backpressure rejections {}",
+            self.kv_pages_in_use,
+            self.kv_pages_total,
+            self.kv_pages_high_water,
+            self.deadline_evictions,
+            self.backpressure_rejections,
+        )
+    }
+
     pub fn report(&self) -> String {
         let mut out = format!(
             "requests: {} done / {} enqueued | tokens: {} | prefill p50 {:.1}ms | \
@@ -206,7 +248,12 @@ impl EngineMetrics {
             self.batch_occupancy.mean(),
             self.tokens_per_sec(),
         );
-        for extra in [self.predictor_report(), self.per_slot_report()] {
+        let extras = [
+            self.serving_report(),
+            self.predictor_report(),
+            self.per_slot_report(),
+        ];
+        for extra in extras {
             if !extra.is_empty() {
                 out.push('\n');
                 out.push_str(&extra);
@@ -258,6 +305,26 @@ impl EngineMetrics {
             ("probe_steps", num(self.probe_steps as f64)),
             ("fallback_events", num(self.fallback_events as f64)),
             ("ffn_flop_reduction", num(self.ffn_flop_reduction())),
+            ("kv_pages_in_use", num(self.kv_pages_in_use as f64)),
+            (
+                "kv_pages_high_water",
+                num(self.kv_pages_high_water as f64),
+            ),
+            ("kv_pages_total", num(self.kv_pages_total as f64)),
+            ("deadline_evictions", num(self.deadline_evictions as f64)),
+            (
+                "backpressure_rejections",
+                num(self.backpressure_rejections as f64),
+            ),
+            (
+                "admissions_per_step",
+                Value::Arr(
+                    self.admissions_per_step
+                        .iter()
+                        .map(|&c| num(c as f64))
+                        .collect(),
+                ),
+            ),
             ("per_slot", Value::Arr(per_slot)),
             ("per_layer", self.per_layer.to_json()),
         ])
@@ -344,6 +411,37 @@ mod tests {
         assert!(r.contains("slot 0"), "{r}");
         assert!(r.contains("slot 3"), "{r}");
         assert!(!r.contains("slot 1"), "idle slot leaked into report: {r}");
+    }
+
+    #[test]
+    fn serving_counters_render_and_snapshot() {
+        let mut m = EngineMetrics::default();
+        assert!(m.serving_report().is_empty(), "dense idle engine stays silent");
+        m.kv_pages_total = 24;
+        m.kv_pages_in_use = 9;
+        m.kv_pages_high_water = 15;
+        m.deadline_evictions = 2;
+        m.backpressure_rejections = 7;
+        m.record_admissions(0);
+        m.record_admissions(3);
+        m.record_admissions(3);
+        assert_eq!(m.admissions_per_step, vec![1, 0, 0, 2]);
+        let r = m.report();
+        assert!(r.contains("kv pages 9/24 (hwm 15)"), "{r}");
+        assert!(r.contains("backpressure rejections 7"), "{r}");
+        let v = crate::jsonx::parse(&m.to_json().to_json()).unwrap();
+        assert_eq!(v.get("kv_pages_in_use").and_then(Value::as_usize), Some(9));
+        assert_eq!(
+            v.get("deadline_evictions").and_then(Value::as_usize),
+            Some(2)
+        );
+        assert_eq!(
+            v.get("backpressure_rejections").and_then(Value::as_usize),
+            Some(7)
+        );
+        let hist = v.get("admissions_per_step").and_then(Value::as_arr).unwrap();
+        assert_eq!(hist.len(), 4);
+        assert_eq!(hist[3].as_usize(), Some(2));
     }
 
     #[test]

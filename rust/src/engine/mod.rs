@@ -18,7 +18,7 @@ pub mod request;
 pub mod sampler;
 pub mod specdec;
 
-pub use engine::{Engine, EngineConfig};
+pub use engine::{Admission, Engine, EngineConfig, StepOutcome, TokenEvent};
 pub use kv::{KvBatch, SlotManager};
 pub use metrics::{EngineMetrics, SlotSeries};
 pub use request::{Completion, FinishReason, Request, SamplingParams};
@@ -26,5 +26,6 @@ pub use specdec::{AcceptMode, MaskWindow, SpecDecoder, SpecStats, VerifyMask};
 
 pub use crate::predictor::NeuronPolicy;
 pub use crate::runtime::backend::{
-    BatchMask, DecodeOut, ExecBackend, MaskRow, PrefillOut, VerifyOut,
+    BatchMask, DecodeOut, ExecBackend, MaskRow, PagedDecodeOut, PrefillOut, VerifyOut,
 };
+pub use crate::runtime::paged::{KvPool, PagedKvCfg};

@@ -26,7 +26,10 @@ use crate::hostexec::math::{attend_one, layer_norm, relu_inplace, rms_norm, rope
 use crate::hostexec::weights::HostParams;
 use crate::obs::{span_on, Phase, TraceSink};
 use crate::runtime::artifact::ModelCfg;
-use crate::runtime::backend::{BatchMask, DecodeOut, ExecBackend, PrefillOut, VerifyOut};
+use crate::runtime::backend::{
+    BatchMask, DecodeOut, ExecBackend, PagedDecodeOut, PrefillOut, VerifyOut,
+};
+use crate::runtime::paged::KvPool;
 use crate::runtime::tensor::Tensor;
 use crate::sparse::{rowskip_gemv, simd};
 
@@ -79,13 +82,125 @@ pub struct HostBackend {
     quant: QuantMode,
 }
 
+/// One sequence's KV lanes in either layout the host kernels speak.
+enum KvLanes<'a> {
+    /// `[L * 2]` contiguous lanes (index `l * 2 + which`), each
+    /// `[H * Tmax * hd]` — a slice of the dense batch tensor.
+    Contig { lanes: Vec<&'a mut [f32]>, tmax: usize },
+    /// `[L * 2]` lanes of ordered page slices (each `[H, page, hd]`),
+    /// resolved through a [`crate::runtime::paged::KvPool`] slot's page
+    /// table: position `t` lives in `lanes[lane][t / page]` at offset
+    /// `(head * page + t % page) * hd`.
+    Paged {
+        lanes: Vec<Vec<&'a mut [f32]>>,
+        page: usize,
+    },
+}
+
+/// Layout-dispatching view of one sequence's KV cache. Both layouts run
+/// the *same* kernel calls in the same order (`simd::dot` score loop →
+/// in-place softmax → `simd::axpy` accumulation), so a paged read is
+/// bit-identical to a contiguous one — only the addressing differs.
+struct KvView<'a> {
+    hd: usize,
+    lanes: KvLanes<'a>,
+}
+
+impl<'a> KvView<'a> {
+    fn contig(lanes: Vec<&'a mut [f32]>, tmax: usize, hd: usize) -> KvView<'a> {
+        KvView {
+            hd,
+            lanes: KvLanes::Contig { lanes, tmax },
+        }
+    }
+
+    fn paged(lanes: Vec<Vec<&'a mut [f32]>>, page: usize, hd: usize) -> KvView<'a> {
+        KvView {
+            hd,
+            lanes: KvLanes::Paged { lanes, page },
+        }
+    }
+
+    /// Write one head's `hd`-vector at position `pos` of lane
+    /// `lane = l * 2 + which`.
+    fn write(&mut self, lane: usize, head: usize, pos: usize, src: &[f32]) {
+        let hd = self.hd;
+        match &mut self.lanes {
+            KvLanes::Contig { lanes, tmax } => {
+                let at = head * *tmax * hd + pos * hd;
+                lanes[lane][at..at + hd].copy_from_slice(src);
+            }
+            KvLanes::Paged { lanes, page } => {
+                let at = (head * *page + pos % *page) * hd;
+                lanes[lane][pos / *page][at..at + hd].copy_from_slice(src);
+            }
+        }
+    }
+
+    /// Causal attention for one query head over layer `l`'s K/V lanes —
+    /// [`attend_one`]'s exact op sequence in both layouts.
+    fn attend(
+        &self,
+        l: usize,
+        head: usize,
+        q: &[f32],
+        pos: usize,
+        scores: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let hd = self.hd;
+        match &self.lanes {
+            KvLanes::Contig { lanes, tmax } => {
+                let r = head * *tmax * hd..(head + 1) * *tmax * hd;
+                attend_one(
+                    q,
+                    &lanes[l * 2][r.clone()],
+                    &lanes[l * 2 + 1][r],
+                    hd,
+                    pos,
+                    scores,
+                    out,
+                );
+            }
+            KvLanes::Paged { lanes, page } => {
+                let p = *page;
+                let (kl, vl) = (&lanes[l * 2], &lanes[l * 2 + 1]);
+                let scale = 1.0 / (hd as f32).sqrt();
+                let n = pos + 1;
+                let mut max = f32::NEG_INFINITY;
+                for s in 0..n {
+                    let at = (head * p + s % p) * hd;
+                    let k: &[f32] = &kl[s / p][at..at + hd];
+                    let sc = simd::dot(q, k) * scale;
+                    scores[s] = sc;
+                    if sc > max {
+                        max = sc;
+                    }
+                }
+                let mut sum = 0.0f32;
+                for sc in scores[..n].iter_mut() {
+                    *sc = (*sc - max).exp();
+                    sum += *sc;
+                }
+                let inv = 1.0 / sum;
+                out.fill(0.0);
+                for s in 0..n {
+                    let at = (head * p + s % p) * hd;
+                    let v: &[f32] = &vl[s / p][at..at + hd];
+                    simd::axpy(out, scores[s] * inv, v);
+                }
+            }
+        }
+    }
+}
+
 /// Mutable view of one sequence's slice of the step's output buffers: its
 /// KV lanes, its logits row(s) and (optionally) its FFN-liveness rows.
 /// Rows of a batch own disjoint views, which is what makes the decode step
 /// safely parallel over rows.
 struct RowBufs<'a> {
-    /// `[L * 2]` cache lanes (index `l * 2 + which`), each `[H * Tmax * hd]`.
-    kv: Vec<&'a mut [f32]>,
+    /// The sequence's KV lanes (contiguous or paged).
+    kv: KvView<'a>,
     /// `[g_n * V]` logits of this sequence's tokens.
     logits: &'a mut [f32],
     /// Per-layer `[g_n * F]` post-gate liveness rows (token `g` writes row
@@ -310,11 +425,8 @@ impl HostBackend {
                     rope_inplace(&mut kvec, nh, hd, p);
                 }
                 for head in 0..nh {
-                    let at = head * tmax * hd + p * hd;
-                    bufs.kv[l * 2][at..at + hd]
-                        .copy_from_slice(&kvec[head * hd..(head + 1) * hd]);
-                    bufs.kv[l * 2 + 1][at..at + hd]
-                        .copy_from_slice(&vvec[head * hd..(head + 1) * hd]);
+                    bufs.kv.write(l * 2, head, p, &kvec[head * hd..(head + 1) * hd]);
+                    bufs.kv.write(l * 2 + 1, head, p, &vvec[head * hd..(head + 1) * hd]);
                 }
             }
             // causal attention over the (just-updated) cache + output proj
@@ -323,12 +435,10 @@ impl HostBackend {
                 let p = pos0 + g;
                 let qg = &q[g * d..(g + 1) * d];
                 for head in 0..nh {
-                    let lane = head * tmax * hd..(head + 1) * tmax * hd;
-                    attend_one(
+                    bufs.kv.attend(
+                        l,
+                        head,
                         &qg[head * hd..(head + 1) * hd],
-                        &bufs.kv[l * 2][lane.clone()],
-                        &bufs.kv[l * 2 + 1][lane],
-                        hd,
                         p,
                         &mut scores,
                         &mut merged[head * hd..(head + 1) * hd],
@@ -454,6 +564,21 @@ impl ExecBackend for HostBackend {
         true
     }
 
+    /// The host decode mutates its KV copy only at each live row's stepped
+    /// position (`run_seq` writes exactly `pos`), so the engine's
+    /// positional write-back is exact.
+    fn decode_writes_positions_only(&self) -> bool {
+        true
+    }
+
+    fn supports_paged_kv(&self) -> bool {
+        true
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
     fn set_trace(&mut self, sink: Option<std::sync::Arc<TraceSink>>) {
         self.trace = sink;
     }
@@ -485,7 +610,7 @@ impl ExecBackend for HostBackend {
         let mut counts = vec![[0u64; 3]; c.n_layers];
         {
             let mut bufs = RowBufs {
-                kv: kv.chunks_mut(lane).collect(),
+                kv: KvView::contig(kv.chunks_mut(lane).collect(), c.max_seq, c.head_dim()),
                 logits: &mut logits,
                 ffn: report_ffn_mask.then(|| ffn.chunks_mut(t * c.d_ff).collect()),
             };
@@ -499,6 +624,218 @@ impl ExecBackend for HostBackend {
             } else {
                 None
             },
+        })
+    }
+
+    /// Incremental prefill: run an unpadded chunk of the prompt against the
+    /// sequence's KV row at absolute position `pos`. Per-token math is the
+    /// sequential graph `run_seq` always computes, so chaining chunks is
+    /// bit-identical to the one-shot padded [`HostBackend::prefill`]
+    /// (pinned by `chunked_prefill_is_bit_identical_to_one_shot`).
+    fn prefill_chunk(
+        &self,
+        kv: &Tensor,
+        pos: usize,
+        tokens: &Tensor,
+        report_ffn_mask: bool,
+    ) -> Result<PrefillOut> {
+        let _span = span_on(self.trace.as_deref(), Phase::Prefill, 0);
+        let c = &self.cfg;
+        let kv_shape = vec![c.n_layers, 2, 1, c.n_heads, c.max_seq, c.head_dim()];
+        if kv.shape != kv_shape {
+            return Err(Error::Shape {
+                what: "host prefill-chunk kv".into(),
+                expected: kv_shape.clone(),
+                got: kv.shape.clone(),
+            });
+        }
+        if tokens.shape.len() != 2 || tokens.shape[0] != 1 {
+            return Err(Error::Shape {
+                what: "host prefill-chunk tokens".into(),
+                expected: vec![1, self.prefill_t],
+                got: tokens.shape.clone(),
+            });
+        }
+        let n = tokens.shape[1];
+        if n == 0 || n > self.prefill_t {
+            return Err(Error::Engine(format!(
+                "prefill chunk fed {n} tokens, bucket holds 1..={}",
+                self.prefill_t
+            )));
+        }
+        let (f, v) = (c.d_ff, c.vocab);
+        let mut kv_out = kv.as_f32()?.to_vec();
+        let mut logits = vec![0.0f32; n * v];
+        let mut ffn = if report_ffn_mask {
+            vec![0.0f32; c.n_layers * n * f]
+        } else {
+            Vec::new()
+        };
+        let live: Vec<&[u32]> = vec![&self.all_live; c.n_layers];
+        let lane = c.n_heads * c.max_seq * c.head_dim();
+        let mut counts = vec![[0u64; 3]; c.n_layers];
+        {
+            let mut bufs = RowBufs {
+                kv: KvView::contig(kv_out.chunks_mut(lane).collect(), c.max_seq, c.head_dim()),
+                logits: &mut logits,
+                ffn: report_ffn_mask.then(|| ffn.chunks_mut(n * f).collect()),
+            };
+            self.run_seq(&mut bufs, tokens.as_i32()?, pos, &live, &mut counts, 0)?;
+        }
+        Ok(PrefillOut {
+            logits: Tensor::f32(vec![1, n, v], logits)?,
+            kv: Tensor::f32(kv_shape, kv_out)?,
+            ffn_mask: if report_ffn_mask {
+                Some(Tensor::f32(vec![c.n_layers, n, f], ffn)?)
+            } else {
+                None
+            },
+        })
+    }
+
+    /// One batched decode step reading and writing K/V through the pool's
+    /// page tables. Rows with a negative `pos` are skipped entirely (their
+    /// logits/mask rows stay zero); every live row's kernel sequence is
+    /// identical to [`HostBackend::decode`]'s, so paged logits are
+    /// bit-identical to the dense layout (pinned by `tests/paged_kv.rs`).
+    fn decode_paged(
+        &self,
+        pool: &mut KvPool,
+        pos: &Tensor,
+        tokens: &Tensor,
+        mask: &BatchMask,
+    ) -> Result<PagedDecodeOut> {
+        let c = &self.cfg;
+        let b = self.decode_b;
+        let (f, v) = (c.d_ff, c.vocab);
+        if pool.slots() != b || pool.max_seq() != c.max_seq {
+            return Err(Error::Engine(format!(
+                "paged pool geometry ({} slots, max_seq {}) does not match backend ({b}, {})",
+                pool.slots(),
+                pool.max_seq(),
+                c.max_seq
+            )));
+        }
+        if tokens.shape != vec![b, 1] {
+            return Err(Error::Shape {
+                what: "host decode_paged tokens".into(),
+                expected: vec![b, 1],
+                got: tokens.shape.clone(),
+            });
+        }
+        if pos.shape != vec![b] {
+            return Err(Error::Shape {
+                what: "host decode_paged pos".into(),
+                expected: vec![b],
+                got: pos.shape.clone(),
+            });
+        }
+        mask.check(b, c.n_layers, f)?;
+        let trace = self.trace.as_deref();
+        let _step_span = span_on(trace, Phase::DecodeStep, 0);
+        let live_owned: Vec<_> = {
+            let _sp = span_on(trace, Phase::FfnGather, 0);
+            (0..b).map(|r| mask.row_live(r)).collect::<Vec<_>>()
+        };
+        let toks = tokens.as_i32()?;
+        let positions = pos.as_i32()?;
+        // every live row's write position must already be page-backed
+        for (r, &p) in positions.iter().enumerate() {
+            if p >= 0 && pool.covered(r) <= p as usize {
+                return Err(Error::Engine(format!(
+                    "decode_paged: slot {r} pos {p} not page-backed (covered {})",
+                    pool.covered(r)
+                )));
+            }
+        }
+        let page = pool.page_size();
+        let mut logits = vec![0.0f32; b * v];
+        let mut ffn_mask = vec![0.0f32; c.n_layers * b * f];
+        let mut ffn_views: Vec<Vec<&mut [f32]>> =
+            (0..b).map(|_| Vec::with_capacity(c.n_layers)).collect();
+        for (i, chunk) in ffn_mask.chunks_mut(f).enumerate() {
+            ffn_views[i % b].push(chunk);
+        }
+        let mut seq_views = pool.seq_views();
+        let mut items: Vec<RowWork<'_>> = Vec::with_capacity(b);
+        for (row, ((lanes, ffn_row), logits_row)) in seq_views
+            .iter_mut()
+            .zip(ffn_views)
+            .zip(logits.chunks_mut(v))
+            .enumerate()
+        {
+            if positions[row] < 0 {
+                continue; // idle / still-prefilling slot: no work at all
+            }
+            let lanes = lanes.take().ok_or_else(|| {
+                Error::Engine(format!("decode_paged: live slot {row} has no pages"))
+            })?;
+            items.push(RowWork {
+                bufs: RowBufs {
+                    kv: KvView::paged(lanes, page, c.head_dim()),
+                    logits: logits_row,
+                    ffn: Some(ffn_row),
+                },
+                token: toks[row],
+                pos: positions[row],
+                live: match &live_owned[row] {
+                    Some(lists) => lists.iter().map(|l| l.as_slice()).collect(),
+                    None => vec![self.all_live.as_slice(); c.n_layers],
+                },
+            });
+        }
+        let rows_run = items.len();
+        let mut counts = vec![[0u64; 3]; c.n_layers];
+        let n_threads = self.threads.min(rows_run).max(1);
+        if n_threads <= 1 {
+            for w in items.iter_mut() {
+                self.run_row(w, &mut counts, 0)?;
+            }
+        } else {
+            let per_worker = rows_run.div_ceil(n_threads);
+            let results: Vec<Result<Vec<[u64; 3]>>> = std::thread::scope(|s| {
+                let handles: Vec<_> = items
+                    .chunks_mut(per_worker)
+                    .enumerate()
+                    .map(|(wi, group)| {
+                        s.spawn(move || -> Result<Vec<[u64; 3]>> {
+                            let mut local = vec![[0u64; 3]; self.cfg.n_layers];
+                            for w in group.iter_mut() {
+                                self.run_row(w, &mut local, wi as u32)?;
+                            }
+                            Ok(local)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("host decode worker panicked"))
+                    .collect()
+            });
+            for r in results {
+                for (dst, src) in counts.iter_mut().zip(r?) {
+                    dst[0] += src[0];
+                    dst[1] += src[1];
+                    dst[2] += src[2];
+                }
+            }
+        }
+        drop(items);
+
+        // [L, 3] fractions over the rows that actually ran (matches the
+        // dense path exactly at full occupancy)
+        let denom_d = (rows_run.max(1) * c.d_model) as f32;
+        let denom_f = (rows_run.max(1) * f) as f32;
+        let mut sparsity = vec![0.0f32; c.n_layers * 3];
+        for l in 0..c.n_layers {
+            sparsity[l * 3] = counts[l][0] as f32 / denom_d;
+            sparsity[l * 3 + 1] = counts[l][1] as f32 / denom_d;
+            sparsity[l * 3 + 2] = 1.0 - counts[l][2] as f32 / denom_f;
+        }
+        Ok(PagedDecodeOut {
+            logits: Tensor::f32(vec![b, 1, v], logits)?,
+            ffn_mask: Tensor::f32(vec![c.n_layers, b, f], ffn_mask)?,
+            sparsity: Tensor::f32(vec![c.n_layers, 3], sparsity)?,
         })
     }
 
@@ -560,7 +897,7 @@ impl ExecBackend for HostBackend {
         let mut counts = vec![[0u64; 3]; c.n_layers];
         {
             let mut bufs = RowBufs {
-                kv: kv_out.chunks_mut(lane).collect(),
+                kv: KvView::contig(kv_out.chunks_mut(lane).collect(), c.max_seq, c.head_dim()),
                 logits: &mut logits,
                 ffn: Some(ffn.chunks_mut(n * f).collect()),
             };
@@ -655,7 +992,7 @@ impl ExecBackend for HostBackend {
             .enumerate()
             .map(|(row, ((kv_row, ffn_row), logits_row))| RowWork {
                 bufs: RowBufs {
-                    kv: kv_row,
+                    kv: KvView::contig(kv_row, c.max_seq, c.head_dim()),
                     logits: logits_row,
                     ffn: Some(ffn_row),
                 },
@@ -1210,5 +1547,201 @@ mod tests {
         // buckets must fit the cache
         assert!(HostBackend::random(tiny_cfg("opt"), 0, 0, 6).is_err());
         assert!(HostBackend::random(tiny_cfg("opt"), 0, 2, 64).is_err());
+    }
+
+    /// Feeding a prompt through `prefill_chunk` in arbitrary splits is the
+    /// same sequential per-token graph as the one-shot prefill: logits,
+    /// per-position liveness and the final KV are all bit-identical.
+    #[test]
+    fn chunked_prefill_is_bit_identical_to_one_shot() {
+        for arch in ["opt", "llama", "falcon"] {
+            let be = backend(arch);
+            assert!(be.supports_chunked_prefill());
+            let c = be.config().clone();
+            let (f, v) = (c.d_ff, c.vocab);
+            let toks = [1i32, 2, 3, 4, 5, 6];
+            let one = be
+                .prefill(&Tensor::i32(vec![1, 6], toks.to_vec()).unwrap(), true)
+                .unwrap();
+            let ol = one.logits.as_f32().unwrap();
+            let of = one.ffn_mask.as_ref().unwrap().as_f32().unwrap();
+            let mut kv =
+                Tensor::zeros_f32(vec![c.n_layers, 2, 1, c.n_heads, c.max_seq, c.head_dim()]);
+            let mut pos = 0usize;
+            for chunk in [2usize, 3, 1] {
+                let t = Tensor::i32(vec![1, chunk], toks[pos..pos + chunk].to_vec()).unwrap();
+                let out = be.prefill_chunk(&kv, pos, &t, true).unwrap();
+                assert_eq!(out.logits.shape, vec![1, chunk, v], "{arch}");
+                assert_eq!(
+                    out.logits.as_f32().unwrap(),
+                    &ol[pos * v..(pos + chunk) * v],
+                    "{arch}: chunk at {pos} diverged from one-shot logits"
+                );
+                let cf = out.ffn_mask.as_ref().unwrap().as_f32().unwrap();
+                for l in 0..c.n_layers {
+                    for g in 0..chunk {
+                        assert_eq!(
+                            &cf[(l * chunk + g) * f..(l * chunk + g + 1) * f],
+                            &of[(l * 6 + pos + g) * f..(l * 6 + pos + g + 1) * f],
+                            "{arch}: liveness at {pos}+{g} layer {l}"
+                        );
+                    }
+                }
+                kv = out.kv;
+                pos += chunk;
+            }
+            assert_eq!(
+                kv.as_f32().unwrap(),
+                one.kv.as_f32().unwrap(),
+                "{arch}: chunked KV differs from one-shot prefill"
+            );
+        }
+    }
+
+    /// The paged decode runs the dense step's exact kernel sequence through
+    /// the page tables: logits, liveness, sparsity and the cache contents
+    /// are bit-identical to the dense layout at full occupancy.
+    #[test]
+    fn decode_paged_is_bit_identical_to_dense_decode() {
+        for arch in ["opt", "llama", "falcon"] {
+            let be = backend(arch);
+            assert!(be.supports_paged_kv());
+            let c = be.config().clone();
+            let pre = be
+                .prefill(&Tensor::i32(vec![1, 6], vec![1, 2, 3, 4, 5, 6]).unwrap(), false)
+                .unwrap();
+            // page size 3 splits row 0's history across pages
+            let mut pool = KvPool::new(&be.kv_shape(), 3, 8).unwrap();
+            pool.reserve(0, 7).unwrap();
+            pool.write_row_positions(0, &pre.kv, 0..6).unwrap();
+            pool.ensure_to(0, 6).unwrap();
+            pool.reserve(1, 1).unwrap();
+            pool.ensure_to(1, 0).unwrap();
+            let dense_kv = pool.materialize_batch().unwrap();
+            let pos = Tensor::i32(vec![2], vec![6, 0]).unwrap();
+            let dt = Tensor::i32(vec![2, 1], vec![7, 3]).unwrap();
+            let mask = dense_mask(&be);
+            let dense = be.decode(&dense_kv, &pos, &dt, &mask).unwrap();
+            let paged = be.decode_paged(&mut pool, &pos, &dt, &mask).unwrap();
+            assert_eq!(
+                dense.logits.as_f32().unwrap(),
+                paged.logits.as_f32().unwrap(),
+                "{arch}: paged logits differ from dense"
+            );
+            assert_eq!(
+                dense.ffn_mask.as_f32().unwrap(),
+                paged.ffn_mask.as_f32().unwrap(),
+                "{arch}: paged liveness differs from dense"
+            );
+            assert_eq!(
+                dense.sparsity.as_f32().unwrap(),
+                paged.sparsity.as_f32().unwrap(),
+                "{arch}: paged sparsity differs at full occupancy"
+            );
+            assert_eq!(
+                pool.materialize_batch().unwrap().as_f32().unwrap(),
+                dense.kv.as_f32().unwrap(),
+                "{arch}: paged cache contents differ from dense"
+            );
+            // a negative position skips the row outright: zero outputs for
+            // it, bit-identical outputs for the rows that do run
+            let skip = be
+                .decode_paged(&mut pool, &Tensor::i32(vec![2], vec![-1, 0]).unwrap(), &dt, &mask)
+                .unwrap();
+            let v = c.vocab;
+            let sl = skip.logits.as_f32().unwrap();
+            assert!(sl[..v].iter().all(|&x| x == 0.0), "{arch}: skipped row logits");
+            assert_eq!(
+                &sl[v..],
+                &dense.logits.as_f32().unwrap()[v..],
+                "{arch}: running row perturbed by the skip"
+            );
+            let sf = skip.ffn_mask.as_f32().unwrap();
+            for l in 0..c.n_layers {
+                let f = c.d_ff;
+                assert!(
+                    sf[(l * 2) * f..(l * 2 + 1) * f].iter().all(|&x| x == 0.0),
+                    "{arch}: skipped row liveness layer {l}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paged_decode_and_chunked_prefill_reject_bad_inputs() {
+        let be = backend("opt");
+        let c = be.config().clone();
+        let mask = dense_mask(&be);
+        let dt = Tensor::i32(vec![2, 1], vec![1, 1]).unwrap();
+        // pool geometry must match the backend's decode batch
+        let mut narrow =
+            KvPool::new(&[c.n_layers, 2, 1, c.n_heads, c.max_seq, c.head_dim()], 4, 4).unwrap();
+        let pos = Tensor::i32(vec![2], vec![0, 0]).unwrap();
+        assert!(be.decode_paged(&mut narrow, &pos, &dt, &mask).is_err());
+        // a live row whose position has no backing page is an error, not a
+        // silent out-of-bounds read
+        let mut pool = KvPool::new(&be.kv_shape(), 4, 4).unwrap();
+        pool.reserve(0, 1).unwrap();
+        pool.ensure_to(0, 0).unwrap();
+        assert!(
+            be.decode_paged(&mut pool, &Tensor::i32(vec![2], vec![0, 0]).unwrap(), &dt, &mask)
+                .is_err(),
+            "slot 1 has no pages"
+        );
+        // chunk bounds: more tokens than the prefill bucket, bad kv shape
+        let kv1 = Tensor::zeros_f32(vec![c.n_layers, 2, 1, c.n_heads, c.max_seq, c.head_dim()]);
+        let seven = Tensor::i32(vec![1, 7], vec![1; 7]).unwrap();
+        assert!(be.prefill_chunk(&kv1, 0, &seven, false).is_err());
+        let two = Tensor::i32(vec![1, 2], vec![1, 2]).unwrap();
+        assert!(be.prefill_chunk(&pre_bad_kv(&c), 0, &two, false).is_err());
+        // past the cache
+        assert!(be.prefill_chunk(&kv1, c.max_seq - 1, &two, false).is_err());
+    }
+
+    fn pre_bad_kv(c: &ModelCfg) -> Tensor {
+        Tensor::zeros_f32(vec![c.n_layers, 2, 2, c.n_heads, c.max_seq, c.head_dim()])
+    }
+
+    /// The dense decode's advertised write discipline
+    /// ([`ExecBackend::decode_writes_positions_only`]): the output KV
+    /// differs from the input only at each row's stepped position, which is
+    /// what lets the engine write back positions instead of the whole
+    /// tensor.
+    #[test]
+    fn decode_mutates_only_the_stepped_positions() {
+        let be = backend("opt");
+        assert!(be.decode_writes_positions_only());
+        let c = be.config().clone();
+        let mut kv = Tensor::zeros_f32(be.kv_shape());
+        {
+            let mut r = crate::util::rng::Rng::new(5);
+            for x in kv.as_f32_mut().unwrap() {
+                *x = r.normal() as f32;
+            }
+        }
+        let stepped = [3usize, 1];
+        let pos = Tensor::i32(vec![2], vec![3, 1]).unwrap();
+        let dt = Tensor::i32(vec![2, 1], vec![7, 9]).unwrap();
+        let out = be.decode(&kv, &pos, &dt, &dense_mask(&be)).unwrap();
+        let (before, after) = (kv.as_f32().unwrap(), out.kv.as_f32().unwrap());
+        assert_ne!(before, after, "the step must write something");
+        let (h_n, t_n, hd, b) = (c.n_heads, c.max_seq, c.head_dim(), 2usize);
+        for lane in 0..c.n_layers * 2 {
+            for row in 0..b {
+                for head in 0..h_n {
+                    for t in 0..t_n {
+                        if t == stepped[row] {
+                            continue;
+                        }
+                        let at = ((lane * b + row) * h_n + head) * t_n * hd + t * hd;
+                        assert_eq!(
+                            &before[at..at + hd],
+                            &after[at..at + hd],
+                            "untouched position {t} of row {row} changed"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -30,7 +30,12 @@
 //! --threads <n> (decode worker threads over batch rows, 0 = one per
 //! core) and --quant <f32|q8> (q8 = per-neuron int8 FFN weights, ~4x fewer
 //! bytes per live neuron; host only). `serve` takes --max-tokens-cap <n>
-//! (bound on any request's max_tokens, 0 = the model's max_seq). Examples
+//! (bound on any request's max_tokens, 0 = the model's max_seq) plus the
+//! serving-path knobs (generate accepts them too): --kv-pages <n> with
+//! --page-size <p> swaps the dense KV batch for a paged pool,
+//! --prefill-chunk <n> feeds prompts in chunks so long prefills don't
+//! stall in-flight decodes, and --queue-cap <n> sheds load with a JSON
+//! backpressure error once that many requests are waiting. Examples
 //! under examples/ drive the full paper reproduction; this binary is the
 //! day-to-day launcher.
 //!
@@ -98,7 +103,8 @@ const HELP: &str = "rsb — ReLU Strikes Back reproduction (see README.md)
 usage: rsb <info|train|finetune|eval|generate|serve|specdec> [--options]
        generate/serve/specdec take --backend host|xla (host = no PJRT)
        host backend: --quant f32|q8 (int8 FFN weights), --threads N
-       serve: --max-tokens-cap N (0 = model max_seq)
+       serve: --max-tokens-cap N (0 = model max_seq), --queue-cap N (backpressure),
+              --kv-pages N --page-size P (paged KV pool), --prefill-chunk N
        specdec: --gamma N --verify-mask dense|agg[:W]|random[:W] --accept greedy|stochastic";
 
 /// Engine config from the predictor CLI knobs (defaults = dense serving).
@@ -109,6 +115,17 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     }
     cfg.recall_floor = args.f64_or("recall-floor", cfg.recall_floor)?;
     cfg.probe_every = args.usize_or("probe-every", cfg.probe_every)?;
+    // serving-path knobs: paged KV pool, chunked prefill, admission queue cap
+    let n_pages = args.usize_or("kv-pages", 0)?;
+    let page_size = args.usize_or("page-size", 16)?;
+    if n_pages > 0 {
+        if page_size == 0 {
+            return Err(Error::Config("--page-size must be > 0".into()));
+        }
+        cfg.paged_kv = Some(rsb::engine::PagedKvCfg { page_size, n_pages });
+    }
+    cfg.prefill_chunk = args.usize_or("prefill-chunk", cfg.prefill_chunk)?;
+    cfg.queue_cap = args.usize_or("queue-cap", cfg.queue_cap)?;
     Ok(cfg)
 }
 

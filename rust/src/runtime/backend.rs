@@ -245,6 +245,20 @@ pub struct DecodeOut {
     pub sparsity: Tensor,
 }
 
+/// One batched decode step's outputs on the paged-KV path. Unlike
+/// [`DecodeOut`] there is no `kv` tensor: the backend writes each stepped
+/// position straight into the [`crate::runtime::paged::KvPool`]'s pages.
+pub struct PagedDecodeOut {
+    /// f32 [B, 1, V] — rows whose `pos` was negative are zero
+    pub logits: Tensor,
+    /// f32 [L, B, F] — observed FFN activation liveness (post-gating);
+    /// skipped rows are zero
+    pub ffn_mask: Tensor,
+    /// f32 [L, 3] — [qkv_in, up_in, ffn_act] zero fractions over the rows
+    /// that actually ran
+    pub sparsity: Tensor,
+}
+
 /// One multi-token verification pass's outputs (speculative decoding: γ+1
 /// tokens scored against a single sequence's KV in one call).
 pub struct VerifyOut {
@@ -304,6 +318,83 @@ pub trait ExecBackend {
         tokens: &Tensor,
         mask: &BatchMask,
     ) -> Result<DecodeOut>;
+
+    /// True when [`decode`] mutates only the positions it appends — its
+    /// output KV differs from the input KV exactly at each active row's
+    /// stepped position — so the engine may write back just those vectors
+    /// instead of replacing its host copy wholesale. The host backend
+    /// honors this (pinned by a bit-identity test); the compiled path
+    /// stays on the wholesale copy.
+    ///
+    /// [`decode`]: ExecBackend::decode
+    fn decode_writes_positions_only(&self) -> bool {
+        false
+    }
+
+    /// True when the backend implements [`decode_paged`]: attention reads
+    /// K/V through a [`KvPool`] page table instead of a dense batch
+    /// tensor. Union-mask backends leave this false and the engine runs
+    /// them through the materialize-on-union shim (dense tensor in,
+    /// stepped positions written back to the pool).
+    ///
+    /// [`decode_paged`]: ExecBackend::decode_paged
+    fn supports_paged_kv(&self) -> bool {
+        false
+    }
+
+    /// Run one batched decode step against paged KV. Same mask/logits
+    /// contract as [`decode`], except rows whose `pos` entry is negative
+    /// are *skipped entirely* (idle or still-prefilling slots: no KV
+    /// write, zero logits/mask rows) and each live row's stepped position
+    /// is written directly into its pages. Every live row's position must
+    /// already be page-backed (`KvPool::ensure_to`).
+    ///
+    /// [`decode`]: ExecBackend::decode
+    fn decode_paged(
+        &self,
+        kv: &mut crate::runtime::paged::KvPool,
+        pos: &Tensor,
+        tokens: &Tensor,
+        mask: &BatchMask,
+    ) -> Result<PagedDecodeOut> {
+        let _ = (kv, pos, tokens, mask);
+        Err(Error::Engine(format!(
+            "the `{}` backend has no paged-KV decode path",
+            self.kind()
+        )))
+    }
+
+    /// True when the backend implements [`prefill_chunk`] — incremental
+    /// prefill the engine can interleave with decode steps.
+    ///
+    /// [`prefill_chunk`]: ExecBackend::prefill_chunk
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Feed one unpadded prompt chunk: score `tokens` (i32 `[1, n]`,
+    /// `1 <= n <= prefill_t()`) against a single sequence's KV row
+    /// (`[L, 2, 1, H, Tmax, hd]`) starting at absolute position `pos`,
+    /// returning logits `[1, n, V]`, the updated KV row, and (when asked
+    /// and supported) the chunk's `[L, n, F]` FFN liveness. Chaining
+    /// chunks over a prompt is bit-identical to one [`prefill`] call —
+    /// each token's computation graph is the same either way (the same
+    /// invariant that makes prefill ≡ decode-chain).
+    ///
+    /// [`prefill`]: ExecBackend::prefill
+    fn prefill_chunk(
+        &self,
+        kv: &Tensor,
+        pos: usize,
+        tokens: &Tensor,
+        report_ffn_mask: bool,
+    ) -> Result<PrefillOut> {
+        let _ = (kv, pos, tokens, report_ffn_mask);
+        Err(Error::Engine(format!(
+            "the `{}` backend has no chunked-prefill path",
+            self.kind()
+        )))
+    }
 
     /// Multi-token verification bucket: the most tokens one [`verify`] call
     /// accepts (`SpecDecoder` feeds γ+1, so γ is bounded by `verify_g - 1`).

@@ -18,6 +18,7 @@ pub mod backend;
 pub mod checkpoint;
 #[cfg(feature = "xla")]
 pub mod entry;
+pub mod paged;
 pub mod params;
 pub mod tensor;
 
@@ -28,7 +29,10 @@ use std::path::Path;
 use std::sync::Arc;
 
 pub use artifact::{Buckets, EntrySpec, IoSpec, Manifest, ModelCfg, ParamSpec};
-pub use backend::{BatchMask, DecodeOut, ExecBackend, MaskRow, PrefillOut, VerifyOut};
+pub use backend::{
+    BatchMask, DecodeOut, ExecBackend, MaskRow, PagedDecodeOut, PrefillOut, VerifyOut,
+};
+pub use paged::{KvPool, PagedKvCfg};
 #[cfg(feature = "xla")]
 pub use backend::XlaBackend;
 #[cfg(feature = "xla")]

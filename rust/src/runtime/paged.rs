@@ -1,0 +1,599 @@
+//! Block-pooled ("paged") host KV cache.
+//!
+//! The dense [`crate::engine::KvBatch`] sizes every slot for the worst case
+//! — `B × max_seq` token rows resident at all times — so batch capacity is
+//! bound by the *longest possible* sequence. The pool here allocates
+//! fixed-size **pages** of `page_size` token positions on demand and maps
+//! them to slots through a per-slot page table, so the bound becomes the
+//! number of tokens actually in flight. Admission reserves a slot's
+//! worst-case page count up front (`reserve`), pages materialize lazily as
+//! decode advances (`ensure_to`), and the whole table returns to the free
+//! list on completion or eviction (`release`).
+//!
+//! Page layout is `[L, 2, H, page_size, hd]` — layer-major lanes, each lane
+//! head-major — so one page holds `page_size` K and V vectors for *every*
+//! layer/head of one slot's position range. Position `t` of slot `s` lives
+//! in page `tables[s][t / page_size]` at in-page offset
+//! `((l·2+w)·H + h)·page_size·hd + (t mod page_size)·hd`. The host backend
+//! reads attention K/V through exactly this mapping
+//! (`hostexec::backend`'s paged lanes), with the same kernel call sequence
+//! as the contiguous layout — so paged attention is bit-identical to dense
+//! (pinned by the schedule prop test in `tests/paged_kv.rs`). The XLA path
+//! never sees pages: the engine materializes the dense `[L,2,B,H,Tmax,hd]`
+//! tensor on demand (`materialize_batch`) and writes the stepped positions
+//! back (`write_back_position`).
+
+use crate::error::{Error, Result};
+use crate::runtime::tensor::Tensor;
+use std::ops::Range;
+
+/// Engine-facing paged-KV configuration: enables the pool when present.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PagedKvCfg {
+    /// Token positions per page (per layer/head lane).
+    pub page_size: usize,
+    /// Total pages in the pool — the serving memory budget.
+    pub n_pages: usize,
+}
+
+/// A fixed pool of KV pages plus per-slot page tables.
+pub struct KvPool {
+    n_layers: usize,
+    slots: usize,
+    n_heads: usize,
+    max_seq: usize,
+    head_dim: usize,
+    page_size: usize,
+    /// `n_layers * 2 * n_heads * page_size * head_dim`
+    page_elems: usize,
+    /// `n_heads * page_size * head_dim` — one (layer, k|v) lane of a page
+    lane_elems: usize,
+    /// `n_pages × page_elems`, page-major
+    data: Vec<f32>,
+    /// LIFO free list of page ids (so free → realloc reuses hot pages)
+    free: Vec<u32>,
+    /// per-slot ordered page tables: `tables[s][i]` backs positions
+    /// `i*page_size .. (i+1)*page_size`
+    tables: Vec<Vec<u32>>,
+    /// per-slot admission reservation, in pages (>= tables[s].len())
+    reserved: Vec<usize>,
+    /// `Σ_s reserved[s] - tables[s].len()` — pages promised but not yet
+    /// allocated; `free.len() - outstanding` is what admission may promise
+    outstanding: usize,
+    hwm: usize,
+}
+
+impl KvPool {
+    /// Build a pool for the same 6-d geometry `[L, 2, B, H, Tmax, hd]`
+    /// that sizes the dense [`crate::engine::KvBatch`], holding `n_pages`
+    /// pages of `page_size` positions.
+    pub fn new(shape: &[usize], page_size: usize, n_pages: usize) -> Result<KvPool> {
+        if shape.len() != 6 || shape[1] != 2 {
+            return Err(Error::Shape {
+                what: "paged kv pool geometry".into(),
+                expected: vec![0, 2, 0, 0, 0, 0],
+                got: shape.to_vec(),
+            });
+        }
+        if page_size == 0 || n_pages == 0 {
+            return Err(Error::Config(format!(
+                "paged kv needs page_size > 0 and n_pages > 0, got {page_size}/{n_pages}"
+            )));
+        }
+        let (n_layers, slots, n_heads, max_seq, head_dim) =
+            (shape[0], shape[2], shape[3], shape[4], shape[5]);
+        let lane_elems = n_heads * page_size * head_dim;
+        let page_elems = n_layers * 2 * lane_elems;
+        Ok(KvPool {
+            n_layers,
+            slots,
+            n_heads,
+            max_seq,
+            head_dim,
+            page_size,
+            page_elems,
+            lane_elems,
+            data: vec![0.0; n_pages * page_elems],
+            free: (0..n_pages as u32).rev().collect(),
+            tables: vec![Vec::new(); slots],
+            reserved: vec![0; slots],
+            outstanding: 0,
+            hwm: 0,
+        })
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.data.len() / self.page_elems
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.n_pages() - self.free.len()
+    }
+
+    /// Highest simultaneous page occupancy seen so far.
+    pub fn high_water(&self) -> usize {
+        self.hwm
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Pages needed to back `tokens` positions.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_size)
+    }
+
+    /// Token positions currently backed by pages for `slot`.
+    pub fn covered(&self, slot: usize) -> usize {
+        self.tables[slot].len() * self.page_size
+    }
+
+    /// Can admission promise `tokens` positions without overcommitting the
+    /// pool? Counts pages already promised to other slots but not yet
+    /// materialized, so a reservation is a hard guarantee.
+    pub fn can_reserve(&self, tokens: usize) -> bool {
+        self.pages_for(tokens) <= self.free.len() - self.outstanding
+    }
+
+    /// Reserve the worst-case page count for a freshly admitted `slot`.
+    pub fn reserve(&mut self, slot: usize, tokens: usize) -> Result<()> {
+        if self.reserved[slot] != 0 || !self.tables[slot].is_empty() {
+            return Err(Error::Engine(format!(
+                "kv pool: slot {slot} already holds a reservation"
+            )));
+        }
+        if !self.can_reserve(tokens) {
+            return Err(Error::Engine(format!(
+                "kv pool: cannot reserve {} pages for slot {slot} ({} free, {} outstanding)",
+                self.pages_for(tokens),
+                self.free.len(),
+                self.outstanding
+            )));
+        }
+        self.reserved[slot] = self.pages_for(tokens);
+        self.outstanding += self.reserved[slot];
+        Ok(())
+    }
+
+    /// Materialize pages until position `pos` of `slot` is backed.
+    /// Within the slot's reservation this cannot fail; beyond it, the pool
+    /// hands out a page only if one is free over and above all outstanding
+    /// reservations.
+    pub fn ensure_to(&mut self, slot: usize, pos: usize) -> Result<()> {
+        while self.covered(slot) <= pos {
+            let within = self.tables[slot].len() < self.reserved[slot];
+            if !within && self.free.len() <= self.outstanding {
+                return Err(Error::Engine(format!(
+                    "kv pool: page budget exhausted growing slot {slot} to pos {pos}"
+                )));
+            }
+            let page = self.free.pop().ok_or_else(|| {
+                Error::Engine(format!("kv pool: no free page for slot {slot} pos {pos}"))
+            })?;
+            self.tables[slot].push(page);
+            if within {
+                self.outstanding -= 1;
+            } else {
+                self.reserved[slot] += 1;
+            }
+        }
+        self.hwm = self.hwm.max(self.pages_in_use());
+        Ok(())
+    }
+
+    /// Return all of `slot`'s pages (and any unmaterialized reservation) to
+    /// the pool, zeroing them so a later owner starts from a clean cache.
+    pub fn release(&mut self, slot: usize) {
+        self.outstanding -= self.reserved[slot] - self.tables[slot].len();
+        self.reserved[slot] = 0;
+        let pe = self.page_elems;
+        for page in self.tables[slot].drain(..) {
+            let at = page as usize * pe;
+            self.data[at..at + pe].fill(0.0);
+            self.free.push(page);
+        }
+    }
+
+    /// In-page element offset of `(lane, head, pos, 0)` where
+    /// `lane = l*2 + w`.
+    fn in_page(&self, lane: usize, head: usize, pos: usize) -> usize {
+        lane * self.lane_elems + (head * self.page_size + pos % self.page_size) * self.head_dim
+    }
+
+    /// Copy positions `range` of a single-row KV tensor
+    /// `[L, 2, 1, H, Tmax, hd]` (a prefill/chunk output) into `slot`'s
+    /// pages, materializing them as needed.
+    pub fn write_row_positions(
+        &mut self,
+        slot: usize,
+        kv1: &Tensor,
+        range: Range<usize>,
+    ) -> Result<()> {
+        let (l_n, h_n, t_n, hd) = (self.n_layers, self.n_heads, self.max_seq, self.head_dim);
+        if kv1.shape != [l_n, 2, 1, h_n, t_n, hd] {
+            return Err(Error::Shape {
+                what: "paged kv row write".into(),
+                expected: vec![l_n, 2, 1, h_n, t_n, hd],
+                got: kv1.shape.clone(),
+            });
+        }
+        if range.is_empty() {
+            return Ok(());
+        }
+        if range.end > t_n {
+            return Err(Error::Engine(format!(
+                "paged kv row write: positions {range:?} exceed max_seq {t_n}"
+            )));
+        }
+        self.ensure_to(slot, range.end - 1)?;
+        let src = kv1.as_f32()?;
+        for lane in 0..l_n * 2 {
+            for head in 0..h_n {
+                let sbase = (lane * h_n + head) * t_n * hd;
+                for t in range.clone() {
+                    let page = self.tables[slot][t / self.page_size] as usize;
+                    let at = page * self.page_elems + self.in_page(lane, head, t);
+                    let s0 = sbase + t * hd;
+                    self.data[at..at + hd].copy_from_slice(&src[s0..s0 + hd]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy position `pos` of `slot`'s row out of a dense batch KV tensor
+    /// `[L, 2, B, H, Tmax, hd]` (a compiled-path decode output) into the
+    /// slot's pages — the append-only half of the materialize-on-union
+    /// shim. The position's page must already be materialized
+    /// (`ensure_to` before the decode call).
+    pub fn write_back_position(
+        &mut self,
+        slot: usize,
+        batch_kv: &Tensor,
+        pos: usize,
+    ) -> Result<()> {
+        let (l_n, b, h_n) = (self.n_layers, self.slots, self.n_heads);
+        let (t_n, hd) = (self.max_seq, self.head_dim);
+        if batch_kv.shape != [l_n, 2, b, h_n, t_n, hd] {
+            return Err(Error::Shape {
+                what: "paged kv write-back".into(),
+                expected: vec![l_n, 2, b, h_n, t_n, hd],
+                got: batch_kv.shape.clone(),
+            });
+        }
+        if self.covered(slot) <= pos {
+            return Err(Error::Engine(format!(
+                "paged kv write-back: slot {slot} pos {pos} not page-backed"
+            )));
+        }
+        let src = batch_kv.as_f32()?;
+        let page = self.tables[slot][pos / self.page_size] as usize;
+        for lane in 0..l_n * 2 {
+            for head in 0..h_n {
+                let sat = ((lane * b + slot) * h_n + head) * t_n * hd + pos * hd;
+                let at = page * self.page_elems + self.in_page(lane, head, pos);
+                self.data[at..at + hd].copy_from_slice(&src[sat..sat + hd]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense `[L, 2, 1, H, Tmax, hd]` view of one slot's cache; positions
+    /// beyond the slot's pages read as zero.
+    pub fn materialize_row(&self, slot: usize) -> Result<Tensor> {
+        let (l_n, h_n, t_n, hd) = (self.n_layers, self.n_heads, self.max_seq, self.head_dim);
+        let mut out = vec![0.0f32; l_n * 2 * h_n * t_n * hd];
+        self.fill_dense_row(slot, &mut out, 1, 0);
+        Tensor::f32(vec![l_n, 2, 1, h_n, t_n, hd], out)
+    }
+
+    /// Dense `[L, 2, B, H, Tmax, hd]` tensor of the whole pool — the
+    /// materialize-on-union shim input for backends without paged support.
+    pub fn materialize_batch(&self) -> Result<Tensor> {
+        let (l_n, b, h_n) = (self.n_layers, self.slots, self.n_heads);
+        let (t_n, hd) = (self.max_seq, self.head_dim);
+        let mut out = vec![0.0f32; l_n * 2 * b * h_n * t_n * hd];
+        for slot in 0..b {
+            self.fill_dense_row(slot, &mut out, b, slot);
+        }
+        Tensor::f32(vec![l_n, 2, b, h_n, t_n, hd], out)
+    }
+
+    /// Copy `slot`'s paged positions into `dst` laid out as
+    /// `[L, 2, b, H, Tmax, hd]`, at batch row `row`.
+    fn fill_dense_row(&self, slot: usize, dst: &mut [f32], b: usize, row: usize) {
+        let (h_n, t_n, hd, p) = (self.n_heads, self.max_seq, self.head_dim, self.page_size);
+        for (ord, &page) in self.tables[slot].iter().enumerate() {
+            let t0 = ord * p;
+            if t0 >= t_n {
+                break;
+            }
+            let n = p.min(t_n - t0); // last page may spill past max_seq
+            let pbase = page as usize * self.page_elems;
+            for lane in 0..self.n_layers * 2 {
+                for head in 0..h_n {
+                    let src = pbase + lane * self.lane_elems + head * p * hd;
+                    let dat = ((lane * b + row) * h_n + head) * t_n * hd + t0 * hd;
+                    dst[dat..dat + n * hd].copy_from_slice(&self.data[src..src + n * hd]);
+                }
+            }
+        }
+    }
+
+    /// Disjoint mutable page-lane views for every slot with pages:
+    /// `views[slot][l*2 + w][ord]` is page `ord`'s `[H, page_size, hd]`
+    /// lane for layer `l`'s K (`w = 0`) or V (`w = 1`). Slots without
+    /// pages yield `None`. Safe without `unsafe` because no page belongs
+    /// to two slots (an allocator invariant the tests pin).
+    #[allow(clippy::type_complexity)]
+    pub fn seq_views(&mut self) -> Vec<Option<Vec<Vec<&mut [f32]>>>> {
+        let (pe, le, lanes_n) = (self.page_elems, self.lane_elems, self.n_layers * 2);
+        // page id -> (slot, ordinal), built before data is mutably split
+        let mut owner: Vec<Option<(usize, usize)>> = vec![None; self.n_pages()];
+        for (slot, table) in self.tables.iter().enumerate() {
+            for (ord, &page) in table.iter().enumerate() {
+                owner[page as usize] = Some((slot, ord));
+            }
+        }
+        let mut tmp: Vec<Vec<Vec<Option<&mut [f32]>>>> = self
+            .tables
+            .iter()
+            .map(|t| vec![(0..t.len()).map(|_| None).collect(); lanes_n])
+            .collect();
+        for (pid, page) in self.data.chunks_mut(pe).enumerate() {
+            if let Some((slot, ord)) = owner[pid] {
+                for (lane_i, lane) in page.chunks_mut(le).enumerate() {
+                    tmp[slot][lane_i][ord] = Some(lane);
+                }
+            }
+        }
+        tmp.into_iter()
+            .map(|lanes| {
+                if lanes.first().is_some_and(|l| l.is_empty()) {
+                    None
+                } else {
+                    Some(
+                        lanes
+                            .into_iter()
+                            .map(|l| l.into_iter().map(|s| s.expect("owned page view")).collect())
+                            .collect(),
+                    )
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::HashSet;
+
+    fn shape() -> Vec<usize> {
+        // L2, B3, H2, Tmax 20, hd 4
+        vec![2, 2, 3, 2, 20, 4]
+    }
+
+    fn row_tensor(seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let n = 2 * 2 * 2 * 20 * 4;
+        Tensor::f32(
+            vec![2, 2, 1, 2, 20, 4],
+            (0..n).map(|_| r.normal() as f32).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn geometry_and_reservation_accounting() {
+        let mut p = KvPool::new(&shape(), 4, 10).unwrap();
+        assert_eq!(p.n_pages(), 10);
+        assert_eq!(p.pages_for(1), 1);
+        assert_eq!(p.pages_for(4), 1);
+        assert_eq!(p.pages_for(5), 2);
+        assert!(p.can_reserve(40));
+        assert!(!p.can_reserve(41));
+        p.reserve(0, 17).unwrap(); // 5 pages promised
+        assert_eq!(p.pages_in_use(), 0, "reserve allocates nothing yet");
+        assert!(p.can_reserve(20));
+        assert!(!p.can_reserve(21), "outstanding reservation counted");
+        assert!(p.reserve(0, 4).is_err(), "slot already reserved");
+        p.ensure_to(0, 6).unwrap();
+        assert_eq!(p.pages_in_use(), 2);
+        assert_eq!(p.covered(0), 8);
+        assert!(!p.can_reserve(21), "materializing does not change budget");
+        p.release(0);
+        assert_eq!(p.pages_in_use(), 0);
+        assert!(p.can_reserve(40));
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        assert!(KvPool::new(&[2, 3, 1], 4, 4).is_err());
+        assert!(KvPool::new(&shape(), 0, 4).is_err());
+        assert!(KvPool::new(&shape(), 4, 0).is_err());
+    }
+
+    #[test]
+    fn grow_beyond_reservation_uses_only_unpromised_pages() {
+        let mut p = KvPool::new(&shape(), 4, 4).unwrap();
+        p.reserve(0, 4).unwrap(); // 1 page
+        p.reserve(1, 12).unwrap(); // 3 pages -> all 4 promised
+        p.ensure_to(0, 3).unwrap();
+        assert!(
+            p.ensure_to(0, 4).is_err(),
+            "growth beyond reservation must not eat slot 1's promise"
+        );
+        p.release(1);
+        p.ensure_to(0, 4).unwrap(); // now a page is genuinely free
+        assert_eq!(p.covered(0), 8);
+    }
+
+    #[test]
+    fn free_then_realloc_reuses_pages() {
+        let mut p = KvPool::new(&shape(), 4, 6).unwrap();
+        p.reserve(0, 12).unwrap();
+        p.ensure_to(0, 11).unwrap();
+        let held: Vec<u32> = p.tables[0].clone();
+        p.release(0);
+        p.reserve(1, 12).unwrap();
+        p.ensure_to(1, 11).unwrap();
+        let reused: HashSet<u32> = p.tables[1].iter().copied().collect();
+        assert_eq!(
+            reused,
+            held.iter().copied().collect::<HashSet<u32>>(),
+            "LIFO free list must hand the released pages straight back"
+        );
+    }
+
+    #[test]
+    fn row_write_materialize_roundtrip_and_release_zeroes() {
+        let mut p = KvPool::new(&shape(), 4, 10).unwrap();
+        let kv1 = row_tensor(7);
+        p.reserve(1, 11).unwrap();
+        p.write_row_positions(1, &kv1, 0..11).unwrap();
+        let back = p.materialize_row(1).unwrap();
+        let (a, b) = (kv1.as_f32().unwrap(), back.as_f32().unwrap());
+        let (t_n, hd) = (20usize, 4usize);
+        for lane in 0..4usize {
+            for head in 0..2usize {
+                let base = (lane * 2 + head) * t_n * hd;
+                // written positions identical bytes, the rest zero
+                assert_eq!(
+                    a[base..base + 11 * hd].iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                    b[base..base + 11 * hd].iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+                );
+                assert!(b[base + 11 * hd..base + t_n * hd].iter().all(|&v| v == 0.0));
+            }
+        }
+        // release must scrub: a new owner of the same pages reads zeros
+        p.release(1);
+        p.reserve(0, 4).unwrap();
+        p.ensure_to(0, 3).unwrap();
+        let clean = p.materialize_row(0).unwrap();
+        assert!(clean.as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn batch_materialize_places_rows_by_slot() {
+        let mut p = KvPool::new(&shape(), 4, 10).unwrap();
+        let (kv_a, kv_b) = (row_tensor(1), row_tensor(2));
+        p.reserve(0, 5).unwrap();
+        p.reserve(2, 7).unwrap();
+        p.write_row_positions(0, &kv_a, 0..5).unwrap();
+        p.write_row_positions(2, &kv_b, 0..7).unwrap();
+        let dense = p.materialize_batch().unwrap();
+        assert_eq!(dense.shape, vec![2, 2, 3, 2, 20, 4]);
+        let d = dense.as_f32().unwrap();
+        let (a, bsrc) = (kv_a.as_f32().unwrap(), kv_b.as_f32().unwrap());
+        let (t_n, hd, h_n, b) = (20usize, 4usize, 2usize, 3usize);
+        for lane in 0..4usize {
+            for head in 0..h_n {
+                let src = (lane * h_n + head) * t_n * hd;
+                let at0 = ((lane * b) * h_n + head) * t_n * hd;
+                let at1 = ((lane * b + 1) * h_n + head) * t_n * hd;
+                let at2 = ((lane * b + 2) * h_n + head) * t_n * hd;
+                assert_eq!(d[at0..at0 + 5 * hd], a[src..src + 5 * hd]);
+                assert!(d[at1..at1 + t_n * hd].iter().all(|&v| v == 0.0), "empty slot");
+                assert_eq!(d[at2..at2 + 7 * hd], bsrc[src..src + 7 * hd]);
+            }
+        }
+    }
+
+    #[test]
+    fn seq_views_are_per_slot_and_ordered() {
+        let mut p = KvPool::new(&shape(), 4, 10).unwrap();
+        p.reserve(0, 8).unwrap();
+        p.reserve(2, 4).unwrap();
+        p.ensure_to(0, 7).unwrap();
+        p.ensure_to(2, 0).unwrap();
+        let le = p.lane_elems;
+        let mut views = p.seq_views();
+        assert!(views[1].is_none());
+        let v0 = views[0].take().unwrap();
+        assert_eq!(v0.len(), 4, "L*2 lanes");
+        assert_eq!(v0[0].len(), 2, "two pages for 8 positions");
+        assert!(v0.iter().all(|lane| lane.iter().all(|pg| pg.len() == le)));
+        let v2 = views[2].take().unwrap();
+        assert_eq!(v2[0].len(), 1);
+    }
+
+    /// Allocator prop test: under a random admit / grow / evict schedule,
+    /// no page is ever owned twice, the free list stays disjoint from all
+    /// tables, and every slot's materialized row matches a dense shadow
+    /// copy byte for byte.
+    #[test]
+    fn random_schedule_keeps_pages_disjoint_and_reads_dense_identical() {
+        let sh = shape();
+        let (l_n, b, h_n, t_n, hd) = (sh[0], sh[2], sh[3], sh[4], sh[5]);
+        let row = l_n * 2 * h_n * t_n * hd;
+        let mut pool = KvPool::new(&sh, 3, 14).unwrap();
+        let mut shadow: Vec<Option<Vec<f32>>> = vec![None; b];
+        let mut r = Rng::new(42);
+        for step in 0..400 {
+            let slot = r.below(b);
+            match shadow[slot] {
+                None => {
+                    let tokens = r.range(1, t_n);
+                    if pool.can_reserve(tokens) {
+                        pool.reserve(slot, tokens).unwrap();
+                        let kv1 = row_tensor(step as u64);
+                        let fill = r.range(1, tokens + 1);
+                        pool.write_row_positions(slot, &kv1, 0..fill).unwrap();
+                        let mut dense = vec![0.0f32; row];
+                        let src = kv1.as_f32().unwrap();
+                        for lane in 0..l_n * 2 {
+                            for head in 0..h_n {
+                                let at = (lane * h_n + head) * t_n * hd;
+                                dense[at..at + fill * hd].copy_from_slice(&src[at..at + fill * hd]);
+                            }
+                        }
+                        shadow[slot] = Some(dense);
+                    }
+                }
+                Some(_) if r.chance(0.3) => {
+                    pool.release(slot);
+                    shadow[slot] = None;
+                }
+                Some(_) => {}
+            }
+            // invariant: tables pairwise disjoint and disjoint from free
+            let mut seen = HashSet::new();
+            for t in &pool.tables {
+                for &pg in t {
+                    assert!(seen.insert(pg), "page {pg} owned twice at step {step}");
+                }
+            }
+            for &pg in &pool.free {
+                assert!(seen.insert(pg), "free page {pg} also owned at step {step}");
+            }
+            assert_eq!(seen.len(), pool.n_pages(), "page leaked at step {step}");
+            // reads byte-identical to the dense shadow
+            for (slot, sh_row) in shadow.iter().enumerate() {
+                if let Some(dense) = sh_row {
+                    let got = pool.materialize_row(slot).unwrap();
+                    let g = got.as_f32().unwrap();
+                    assert!(
+                        g.iter().zip(dense.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "slot {slot} diverged from dense shadow at step {step}"
+                    );
+                }
+            }
+        }
+        assert!(pool.high_water() > 0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Paged-KV equivalence under serving churn: drive the host backend
+//! through a long random admit/decode/evict schedule twice — once against
+//! the dense `KvBatch` (positional write-back) and once against a `KvPool`
+//! (native `decode_paged`) — and require byte-identical behaviour
+//! throughout: logits rows, observed FFN masks, and the stored K/V itself.
+//! This is the integration-level counterpart of the allocator prop tests
+//! inside `runtime::paged` and the single-step bit-identity test inside
+//! `hostexec::backend`.
+
+use rsb::engine::{BatchMask, ExecBackend, KvBatch, KvPool};
+use rsb::hostexec::HostBackend;
+use rsb::runtime::artifact::ModelCfg;
+use rsb::runtime::Tensor;
+use rsb::util::rng::Rng;
+
+fn cfg(arch: &str) -> ModelCfg {
+    ModelCfg {
+        size: "t".into(),
+        arch: arch.into(),
+        act: "relu".into(),
+        stage: 0,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        vocab: 40,
+        max_seq: 20,
+        shift: 1.0,
+        ffn_act: "relu".into(),
+        gated: false,
+        parallel_block: false,
+        has_bias: true,
+    }
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at {i}");
+    }
+}
+
+/// 150 random scheduling events over 3 slots: every decode step must read
+/// and write the page pool byte-identically to the dense batch cache.
+#[test]
+fn random_admit_evict_schedule_is_bit_identical_dense_vs_paged() {
+    for arch in ["opt", "llama"] {
+        let c = cfg(arch);
+        let (b, prefill_t, max_seq) = (3usize, 6usize, c.max_seq);
+        let vocab = c.vocab;
+        let (n_layers, d_ff) = (c.n_layers, c.d_ff);
+        let be = HostBackend::random(c, 23, b, prefill_t).unwrap();
+        assert!(be.supports_paged_kv() && be.decode_writes_positions_only());
+
+        let mut dense = KvBatch::new(&be.kv_shape()).unwrap();
+        // page_size 3 does not divide max_seq 20: exercises the ragged
+        // last page; 24 pages cover the worst case (3 slots * 7 pages)
+        let mut pool = KvPool::new(&be.kv_shape(), 3, 24).unwrap();
+        let mut pos: Vec<Option<usize>> = vec![None; b];
+        let mut tok: Vec<u32> = vec![0; b];
+        let mut rng = Rng::new(77);
+
+        for step in 0..150 {
+            // random admissions into free slots
+            for slot in 0..b {
+                if pos[slot].is_none() && rng.chance(0.35) {
+                    let len = rng.range(1, prefill_t + 1);
+                    let mut padded = vec![0i32; prefill_t];
+                    for p in padded.iter_mut().take(len) {
+                        *p = rng.range(1, vocab) as i32;
+                    }
+                    let tok_t = Tensor::i32(vec![1, prefill_t], padded).unwrap();
+                    let pre = be.prefill(&tok_t, false).unwrap();
+                    dense.pack_row(slot, &pre.kv).unwrap();
+                    pool.reserve(slot, max_seq).unwrap();
+                    // copy the full padded bucket (garbage past `len`
+                    // included) so the two stores hold the same bytes;
+                    // decode overwrites those positions before reading them
+                    pool.write_row_positions(slot, &pre.kv, 0..prefill_t).unwrap();
+                    pos[slot] = Some(len);
+                    tok[slot] = rng.range(1, vocab) as u32;
+                }
+            }
+            // random evictions + forced eviction at the context edge
+            for slot in 0..b {
+                let full = pos[slot].is_some_and(|p| p + 1 >= max_seq);
+                if pos[slot].is_some() && (full || rng.chance(0.05)) {
+                    dense.clear_row(slot);
+                    pool.release(slot);
+                    pos[slot] = None;
+                }
+            }
+            let stepped: Vec<(usize, usize)> = pos
+                .iter()
+                .enumerate()
+                .filter_map(|(s, p)| p.map(|p| (s, p)))
+                .collect();
+            if stepped.is_empty() {
+                continue;
+            }
+
+            // one decode step against each store
+            let mut pd = vec![0i32; b];
+            let mut pp = vec![-1i32; b];
+            let mut toks = vec![0i32; b];
+            for &(slot, p) in &stepped {
+                pd[slot] = p as i32;
+                pp[slot] = p as i32;
+                toks[slot] = tok[slot] as i32;
+            }
+            let mask = BatchMask::dense(b, n_layers, d_ff);
+            let tok_t = Tensor::i32(vec![b, 1], toks).unwrap();
+            let out_d = be
+                .decode(
+                    &dense.to_tensor(),
+                    &Tensor::i32(vec![b], pd).unwrap(),
+                    &tok_t,
+                    &mask,
+                )
+                .unwrap();
+            dense.write_decode_positions(&out_d.kv, &stepped).unwrap();
+            for &(slot, p) in &stepped {
+                pool.ensure_to(slot, p).unwrap();
+            }
+            let out_p = be
+                .decode_paged(&mut pool, &Tensor::i32(vec![b], pp).unwrap(), &tok_t, &mask)
+                .unwrap();
+
+            // logits + observed FFN mask: byte-identical on every live row
+            let (ld, lp) = (out_d.logits.as_f32().unwrap(), out_p.logits.as_f32().unwrap());
+            let (fd, fp) = (
+                out_d.ffn_mask.as_f32().unwrap(),
+                out_p.ffn_mask.as_f32().unwrap(),
+            );
+            for &(slot, _) in &stepped {
+                assert_bits_eq(
+                    &ld[slot * vocab..(slot + 1) * vocab],
+                    &lp[slot * vocab..(slot + 1) * vocab],
+                    &format!("{arch} step {step} slot {slot} logits"),
+                );
+                for l in 0..n_layers {
+                    let at = (l * b + slot) * d_ff;
+                    assert_bits_eq(
+                        &fd[at..at + d_ff],
+                        &fp[at..at + d_ff],
+                        &format!("{arch} step {step} slot {slot} layer {l} ffn mask"),
+                    );
+                }
+            }
+            // the stored K/V itself: pool pages materialize to exactly the
+            // dense cache (released rows read back as zeros in both)
+            if step % 10 == 0 {
+                assert_bits_eq(
+                    dense.to_tensor().as_f32().unwrap(),
+                    pool.materialize_batch().unwrap().as_f32().unwrap(),
+                    &format!("{arch} step {step} full kv"),
+                );
+            }
+            // advance: feed each live row its own next token
+            for &(slot, p) in &stepped {
+                pos[slot] = Some(p + 1);
+                tok[slot] = rng.range(1, vocab) as u32;
+            }
+        }
+        // drain everything: pool must return to empty
+        for slot in 0..b {
+            if pos[slot].is_some() {
+                pool.release(slot);
+            }
+        }
+        assert_eq!(pool.pages_in_use(), 0);
+        assert!(pool.high_water() > 0);
+    }
+}

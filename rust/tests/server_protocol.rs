@@ -220,3 +220,185 @@ fn max_tokens_zero_rejected_and_oversize_clamped() {
     );
     assert_eq!(server.join().unwrap().unwrap(), 1);
 }
+
+/// `"stream": true` delivers one JSON line per generated token — id echoed,
+/// indices in order, each with its decoded text piece — before the final
+/// completion line repeats the full text.
+#[test]
+fn streaming_delivers_per_token_lines_then_completion() {
+    use std::sync::mpsc;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let bpe = Arc::new(rsb::tokenizer::Bpe::train("ab ab ab ba baab abba", 24).unwrap());
+    let bpe_srv = bpe.clone();
+    let server = std::thread::spawn(move || {
+        let backend = HostBackend::random(cfg(), 0, 2, 6).unwrap();
+        let engine = Engine::new(Box::new(backend), EngineConfig::default()).unwrap();
+        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(1), Some(ready_tx), 0)
+    });
+    let addr = ready_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("server start");
+    let mut client = rsb::server::Client::connect(addr).unwrap();
+    client
+        .send_line("{\"id\": 3, \"prompt\": \"ab ba\", \"max_tokens\": 4, \"stream\": true}")
+        .unwrap();
+    let mut streamed = Vec::new();
+    for i in 0..4 {
+        let line = client.recv().unwrap();
+        assert_eq!(line.get("id").and_then(Value::as_i64), Some(3));
+        assert_eq!(line.usize_of("index").unwrap(), i);
+        line.str_of("text").expect("token lines carry decoded text");
+        streamed.push(line.usize_of("token").unwrap() as u32);
+    }
+    let fin = client.recv().unwrap();
+    assert_eq!(fin.get("id").and_then(Value::as_i64), Some(3));
+    assert_eq!(fin.usize_of("tokens").unwrap(), 4);
+    assert_eq!(fin.str_of("finish").unwrap(), "maxtokens");
+    // the streamed tokens are exactly the completion's token sequence
+    assert_eq!(bpe.decode(&streamed), fin.str_of("text").unwrap());
+    assert_eq!(server.join().unwrap().unwrap(), 1);
+}
+
+/// An idle scheduler parks on its inbound channel and admits the next
+/// request at channel-wakeup latency — no sleep-tick poll loop between a
+/// request's arrival and its admission. Pinned by the measured queue wait
+/// over a sequence of requests that each find the server idle: a poll-tick
+/// scheduler (the old 5 ms sleep) would put ~half a tick in every sample.
+#[test]
+fn idle_server_admits_at_wakeup_latency_not_poll_tick() {
+    use std::sync::mpsc;
+    let n = 16usize;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let bpe = Arc::new(rsb::tokenizer::Bpe::train("ab ab ab ba baab abba", 24).unwrap());
+    let bpe_srv = bpe.clone();
+    let server = std::thread::spawn(move || {
+        let backend = HostBackend::random(cfg(), 0, 2, 6).unwrap();
+        let engine = Engine::new(Box::new(backend), EngineConfig::default()).unwrap();
+        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(n), Some(ready_tx), 0)
+    });
+    let addr = ready_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("server start");
+    let mut client = rsb::server::Client::connect(addr).unwrap();
+    let mut waits = Vec::with_capacity(n);
+    for i in 0..n {
+        // sequential single-token requests: the engine fully drains (and
+        // the scheduler re-parks) between every pair
+        let resp = client.request(i as u64, "ab", 1, 0.0).unwrap();
+        waits.push(resp.f64_of("queue_ms").unwrap());
+    }
+    let mean = waits.iter().sum::<f64>() / n as f64;
+    assert!(
+        mean < 1.5,
+        "idle admission waited {mean:.3}ms on average ({waits:?}) — \
+         the scheduler is polling, not blocking"
+    );
+    assert_eq!(server.join().unwrap().unwrap(), n);
+}
+
+/// A request whose `deadline_ms` expires mid-flight is evicted wherever it
+/// is (queued, prefilling or decoding), its reply says
+/// `"finish": "deadline"` with whatever was generated by then, and the
+/// engine counts the eviction in its metrics.
+#[test]
+fn deadline_expiry_evicts_and_reports_deadline_finish() {
+    use std::sync::mpsc;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let bpe = Arc::new(rsb::tokenizer::Bpe::train("ab ab ab ba baab abba", 24).unwrap());
+    let bpe_srv = bpe.clone();
+    let server = std::thread::spawn(move || {
+        // heavy enough that 48 tokens cannot finish inside the deadline
+        let mut c = cfg();
+        c.d_model = 64;
+        c.n_heads = 4;
+        c.d_ff = 256;
+        c.max_seq = 64;
+        let backend = HostBackend::random(c, 0, 2, 6).unwrap();
+        let engine = Engine::new(Box::new(backend), EngineConfig::default()).unwrap();
+        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(2), Some(ready_tx), 0)
+    });
+    let addr = ready_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("server start");
+    let mut client = rsb::server::Client::connect(addr).unwrap();
+    client
+        .send_line(
+            "{\"id\": 9, \"prompt\": \"ab ba\", \"max_tokens\": 48, \"deadline_ms\": 1}",
+        )
+        .unwrap();
+    let resp = client.recv().unwrap();
+    assert_eq!(resp.get("id").and_then(Value::as_i64), Some(9));
+    assert_eq!(resp.str_of("finish").unwrap(), "deadline");
+    assert!(
+        resp.usize_of("tokens").unwrap() < 48,
+        "a deadline eviction cannot have produced the full generation"
+    );
+    let snap = client.cmd("metrics").unwrap();
+    let engine = snap.req("engine").unwrap();
+    assert_eq!(engine.usize_of("deadline_evictions").unwrap(), 1);
+    // the slot (and its KV row) is free again: a normal request completes
+    let resp = client.request(10, "ab", 2, 0.0).unwrap();
+    assert_eq!(resp.str_of("finish").unwrap(), "maxtokens");
+    assert_eq!(server.join().unwrap().unwrap(), 2);
+}
+
+/// With the engine's `queue_cap` set, a burst past slots + cap gets
+/// immediate `{"error": ..., "backpressure": true}` rejections instead of
+/// unbounded queueing, and the rejections land in the engine metrics.
+#[test]
+fn queue_cap_rejects_burst_with_backpressure_error() {
+    use std::sync::mpsc;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let bpe = Arc::new(rsb::tokenizer::Bpe::train("ab ab ab ba baab abba", 24).unwrap());
+    let bpe_srv = bpe.clone();
+    let _server = std::thread::spawn(move || {
+        // 2 decode slots + a queue capped at 1: a burst of 8 long requests
+        // must overflow (the slowest legal drain frees one queue place per
+        // ~40-step generation, far slower than the burst lands)
+        let mut c = cfg();
+        c.d_model = 64;
+        c.n_heads = 4;
+        c.d_ff = 256;
+        c.max_seq = 64;
+        let backend = HostBackend::random(c, 0, 2, 6).unwrap();
+        let ecfg = EngineConfig {
+            queue_cap: 1,
+            ..EngineConfig::default()
+        };
+        let engine = Engine::new(Box::new(backend), ecfg).unwrap();
+        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", None, Some(ready_tx), 0)
+    });
+    let addr = ready_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("server start");
+    let mut client = rsb::server::Client::connect(addr).unwrap();
+    for i in 0..8 {
+        client
+            .send_line(&format!(
+                "{{\"id\": {i}, \"prompt\": \"ab ba\", \"max_tokens\": 40}}"
+            ))
+            .unwrap();
+    }
+    // every request gets exactly one reply line: a completion or an
+    // immediate backpressure rejection
+    let (mut rejected, mut completed) = (0usize, 0usize);
+    for _ in 0..8 {
+        let resp = client.recv().unwrap();
+        if matches!(resp.get("backpressure"), Some(Value::Bool(true))) {
+            assert!(resp.str_of("error").unwrap().contains("queue full"));
+            rejected += 1;
+        } else {
+            assert_eq!(resp.str_of("finish").unwrap(), "maxtokens");
+            completed += 1;
+        }
+    }
+    assert!(rejected >= 1, "an 8-deep burst must overflow cap 1");
+    assert!(completed >= 1, "accepted requests must still complete");
+    assert_eq!(rejected + completed, 8);
+    let snap = client.cmd("metrics").unwrap();
+    let engine = snap.req("engine").unwrap();
+    assert_eq!(
+        engine.usize_of("backpressure_rejections").unwrap(),
+        rejected
+    );
+}

@@ -1,0 +1,273 @@
+//! Engine-level serving semantics: continuous vs wave admission, chunked
+//! prefill, paged-KV scheduling, deadlines, backpressure, and per-token
+//! streaming events. Everything runs on the host backend with greedy
+//! sampling so token sequences are exact and comparable across engine
+//! configurations.
+
+use rsb::engine::{
+    Admission, Completion, Engine, EngineConfig, FinishReason, PagedKvCfg, Request,
+};
+use rsb::hostexec::HostBackend;
+use rsb::runtime::artifact::ModelCfg;
+
+fn cfg() -> ModelCfg {
+    ModelCfg {
+        size: "t".into(),
+        arch: "opt".into(),
+        act: "relu".into(),
+        stage: 0,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        vocab: 40,
+        max_seq: 20,
+        shift: 1.0,
+        ffn_act: "relu".into(),
+        gated: false,
+        parallel_block: false,
+        has_bias: true,
+    }
+}
+
+fn engine(decode_b: usize, ecfg: EngineConfig) -> Engine {
+    let be = HostBackend::random(cfg(), 5, decode_b, 6).unwrap();
+    Engine::new(Box::new(be), ecfg).unwrap()
+}
+
+fn run_to_completion(eng: &mut Engine) -> Vec<Completion> {
+    let mut done = Vec::new();
+    for _ in 0..10_000 {
+        if !eng.has_work() {
+            return done;
+        }
+        done.extend(eng.step().unwrap());
+    }
+    panic!("engine did not drain in 10k steps");
+}
+
+fn tokens_by_id(done: &[Completion]) -> Vec<(u64, Vec<u32>)> {
+    let mut v: Vec<(u64, Vec<u32>)> = done.iter().map(|c| (c.id, c.tokens.clone())).collect();
+    v.sort_by_key(|(id, _)| *id);
+    v
+}
+
+const WORKLOAD: [(&[u32], usize); 4] =
+    [(&[3, 4], 6), (&[7, 8, 9, 2, 5], 4), (&[1], 8), (&[6, 2, 3], 5)];
+
+fn submit_workload(eng: &mut Engine) {
+    for (prompt, max_new) in WORKLOAD {
+        eng.submit(prompt.to_vec(), max_new);
+    }
+}
+
+/// Chunked prefill must be a pure scheduling change: same tokens out as
+/// one-shot padded-bucket prefill, request by request.
+#[test]
+fn chunked_prefill_matches_one_shot_tokens() {
+    let mut one_shot = engine(2, EngineConfig::default());
+    submit_workload(&mut one_shot);
+    let base = tokens_by_id(&run_to_completion(&mut one_shot));
+
+    for chunk in [1, 2, 5] {
+        let mut chunked = engine(
+            2,
+            EngineConfig {
+                prefill_chunk: chunk,
+                ..EngineConfig::default()
+            },
+        );
+        submit_workload(&mut chunked);
+        let got = tokens_by_id(&run_to_completion(&mut chunked));
+        assert_eq!(base, got, "chunk={chunk} diverged from one-shot prefill");
+    }
+}
+
+/// One-shot prefill tail-clamps prompts to the padded bucket; chunked
+/// prefill accepts anything up to `max_seq - 1` and feeds it in pieces.
+#[test]
+fn chunked_prefill_accepts_prompts_longer_than_bucket() {
+    let mut eng = engine(
+        2,
+        EngineConfig {
+            prefill_chunk: 4,
+            ..EngineConfig::default()
+        },
+    );
+    let prompt: Vec<u32> = (1..=14).collect();
+    eng.submit(prompt, 3);
+    let done = run_to_completion(&mut eng);
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].prompt_len, 14, "full prompt retained, not clamped to bucket");
+    assert_eq!(done[0].tokens.len(), 3);
+    assert_eq!(done[0].finish, FinishReason::MaxTokens);
+}
+
+/// Paged KV is a storage change, not a model change: the served tokens are
+/// exactly the dense engine's, and the page gauges reconcile.
+#[test]
+fn paged_engine_matches_dense_engine_tokens() {
+    let mut dense = engine(2, EngineConfig::default());
+    submit_workload(&mut dense);
+    let base = tokens_by_id(&run_to_completion(&mut dense));
+
+    let mut paged = engine(
+        2,
+        EngineConfig {
+            paged_kv: Some(PagedKvCfg {
+                page_size: 4,
+                n_pages: 24,
+            }),
+            ..EngineConfig::default()
+        },
+    );
+    submit_workload(&mut paged);
+    let got = tokens_by_id(&run_to_completion(&mut paged));
+    assert_eq!(base, got, "paged KV changed served tokens");
+    assert_eq!(paged.metrics.kv_pages_total, 24);
+    assert_eq!(paged.metrics.kv_pages_in_use, 0, "all pages returned after drain");
+    assert!(paged.metrics.kv_pages_high_water > 0);
+}
+
+/// Page exhaustion stalls admission (FIFO, no deadlock thanks to
+/// worst-case reservation); a request that cannot fit the whole pool even
+/// alone is rejected up front as `ContextFull`.
+#[test]
+fn paged_admission_blocks_until_pages_free_and_rejects_oversize() {
+    let mut eng = engine(
+        2,
+        EngineConfig {
+            paged_kv: Some(PagedKvCfg {
+                page_size: 4,
+                n_pages: 2,
+            }),
+            ..EngineConfig::default()
+        },
+    );
+    let a = eng.submit(vec![3, 4], 2); // needs 1 page
+    let big = eng.submit(vec![5, 6, 7], 8); // needs 3 pages > pool: impossible
+    let b = eng.submit(vec![8, 9], 2); // needs 1 page
+    let c = eng.submit(vec![2, 3], 5); // needs 2 pages: waits for a drain
+    let done = run_to_completion(&mut eng);
+    assert_eq!(done.len(), 4);
+    for comp in &done {
+        if comp.id == big {
+            assert_eq!(comp.finish, FinishReason::ContextFull);
+            assert!(comp.tokens.is_empty());
+        } else {
+            assert_eq!(comp.finish, FinishReason::MaxTokens, "request {} stalled", comp.id);
+        }
+    }
+    let n = |id| done.iter().find(|c| c.id == id).unwrap().tokens.len();
+    assert_eq!((n(a), n(b), n(c)), (2, 2, 5));
+    assert_eq!(eng.metrics.kv_pages_in_use, 0);
+    assert_eq!(eng.metrics.kv_pages_high_water, 2, "pool saturated at some point");
+}
+
+/// Wave admission (the fixed-batch baseline) only refills when every slot
+/// has drained: the admissions-per-step histogram shows full waves and no
+/// single-slot backfill, unlike continuous batching.
+#[test]
+fn waves_admission_drains_before_refilling() {
+    let mut eng = engine(
+        2,
+        EngineConfig {
+            admission: Admission::Waves,
+            ..EngineConfig::default()
+        },
+    );
+    for max_new in [2, 6, 2, 2] {
+        eng.submit(vec![3], max_new);
+    }
+    let done = run_to_completion(&mut eng);
+    assert_eq!(done.len(), 4);
+    let hist = &eng.metrics.admissions_per_step;
+    assert_eq!(hist.get(2).copied().unwrap_or(0), 2, "two full waves of 2");
+    assert_eq!(hist.get(1).copied().unwrap_or(0), 0, "no continuous backfill under waves");
+
+    let mut cont = engine(2, EngineConfig::default());
+    for max_new in [2, 6, 2, 2] {
+        cont.submit(vec![3], max_new);
+    }
+    run_to_completion(&mut cont);
+    assert!(
+        cont.metrics.admissions_per_step.get(1).copied().unwrap_or(0) >= 1,
+        "continuous admission backfills freed slots mid-wave"
+    );
+}
+
+/// `step_ext` token events reconstruct every completion exactly: one event
+/// per generated token, in order, with contiguous indices.
+#[test]
+fn token_events_stream_matches_completions() {
+    let mut eng = engine(2, EngineConfig::default());
+    submit_workload(&mut eng);
+    let mut events: Vec<(u64, Vec<u32>)> = Vec::new();
+    let mut done = Vec::new();
+    for _ in 0..10_000 {
+        if !eng.has_work() {
+            break;
+        }
+        let out = eng.step_ext().unwrap();
+        for ev in &out.emitted {
+            let row = match events.iter_mut().find(|(id, _)| *id == ev.id) {
+                Some(r) => r,
+                None => {
+                    events.push((ev.id, Vec::new()));
+                    events.last_mut().unwrap()
+                }
+            };
+            assert_eq!(ev.index, row.1.len(), "event indices must be contiguous");
+            row.1.push(ev.token);
+        }
+        done.extend(out.done);
+    }
+    assert_eq!(done.len(), WORKLOAD.len());
+    events.sort_by_key(|(id, _)| *id);
+    assert_eq!(events, tokens_by_id(&done), "streamed events != completion tokens");
+}
+
+/// Deadlines evict both queued requests (never started) and running ones
+/// (partial output), each finishing as `Deadline`.
+#[test]
+fn deadlines_evict_queued_and_running_requests() {
+    let mut eng = engine(1, EngineConfig::default());
+    let slow = eng
+        .try_submit(Request::new(0, vec![3, 4], 15).with_deadline_ms(5))
+        .unwrap();
+    let queued = eng
+        .try_submit(Request::new(0, vec![5], 5).with_deadline_ms(0))
+        .unwrap();
+    let first = eng.step().unwrap();
+    assert_eq!(first.len(), 1, "expired queued request swept before admission");
+    assert_eq!(first[0].id, queued);
+    assert_eq!(first[0].finish, FinishReason::Deadline);
+    assert!(first[0].tokens.is_empty());
+
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    let done = run_to_completion(&mut eng);
+    let slow_c = done.iter().find(|c| c.id == slow).unwrap();
+    assert_eq!(slow_c.finish, FinishReason::Deadline);
+    assert!(!slow_c.tokens.is_empty(), "ran before the deadline hit");
+    assert!(slow_c.tokens.len() < 15);
+    assert_eq!(eng.metrics.deadline_evictions, 2);
+}
+
+/// `try_submit` sheds load once the waiting queue hits `queue_cap`;
+/// accepted requests are unaffected.
+#[test]
+fn try_submit_enforces_queue_cap() {
+    let mut eng = engine(
+        2,
+        EngineConfig {
+            queue_cap: 2,
+            ..EngineConfig::default()
+        },
+    );
+    assert!(eng.try_submit(Request::new(0, vec![3], 2)).is_some());
+    assert!(eng.try_submit(Request::new(0, vec![4], 2)).is_some());
+    assert!(eng.try_submit(Request::new(0, vec![5], 2)).is_none(), "third must be shed");
+    assert_eq!(eng.metrics.backpressure_rejections, 1);
+    let done = run_to_completion(&mut eng);
+    assert_eq!(done.len(), 2, "accepted requests still complete");
+}
