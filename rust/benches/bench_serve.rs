@@ -20,20 +20,29 @@
 //!   served tokens are bitwise identical across all three runs;
 //! - the paged pool's high-water mark stays within its page budget.
 //!
+//! Latency/TTFT are recorded twice per run: through the bounded-memory
+//! streaming quantile sketch (what production metrics expose) AND as raw
+//! samples, so a fourth gate pins every sketch-derived p50/p90/p99 within
+//! one log-bucket's relative error of the exact sorted percentile on the
+//! same replay.
+//!
 //! `--trace <out.jsonl>` records the paged run's phase spans and dumps
-//! Chrome-trace JSONL (tools/trace_summary.py reads it). The host CI job
-//! runs `cargo bench --no-default-features --bench bench_serve -- --smoke
-//! --trace ...` on every PR and schema-checks the emitted trace.
+//! Chrome-trace JSONL (tools/trace_summary.py reads it; `--by-request`
+//! groups spans by the request-id correlation the engine tags them with).
+//! `--prom <out.txt>` dumps the paged engine's Prometheus text exposition
+//! (tools/prom_check.py validates it). The host CI job runs `cargo bench
+//! --no-default-features --bench bench_serve -- --smoke --trace ...
+//! --prom ...` on every PR and schema-checks both artifacts.
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use rsb::engine::{Admission, Engine, EngineConfig, FinishReason, PagedKvCfg};
 use rsb::hostexec::HostBackend;
+use rsb::obs::QuantileSketch;
 use rsb::runtime::artifact::ModelCfg;
 use rsb::util::render_table;
 use rsb::util::rng::Rng;
-use rsb::util::stats::Samples;
 
 const DECODE_B: usize = 8;
 const PREFILL_T: usize = 32;
@@ -98,8 +107,13 @@ struct RunReport {
     name: &'static str,
     wall_s: f64,
     steps: usize,
-    latency_ms: Samples,
-    ttft_ms: Samples,
+    /// bounded-memory streaming sketch — what production metrics expose
+    latency_ms: QuantileSketch,
+    ttft_ms: QuantileSketch,
+    /// every sample, kept so the accuracy gate can compare the sketch
+    /// against exact sorted percentiles on the same replay
+    latency_exact: Vec<f64>,
+    ttft_exact: Vec<f64>,
     tokens: usize,
     tokens_by_id: Vec<(u64, Vec<u32>)>,
     context_full: usize,
@@ -109,11 +123,15 @@ struct RunReport {
 
 /// Replay the arrival schedule: arrivals are released by decode-step index
 /// (virtual time), latencies measured wall-clock from actual submission.
-fn drive(name: &'static str, mut eng: Engine, sched: &[Arrival]) -> rsb::Result<RunReport> {
+/// Takes the engine by `&mut` so a caller can inspect it (Prometheus dump)
+/// after the run drains.
+fn drive(name: &'static str, eng: &mut Engine, sched: &[Arrival]) -> rsb::Result<RunReport> {
     let kv_bytes = eng.kv_size_bytes();
     let mut submit_at: HashMap<u64, Instant> = HashMap::new();
-    let mut latency_ms = Samples::default();
-    let mut ttft_ms = Samples::default();
+    let mut latency_ms = QuantileSketch::new();
+    let mut ttft_ms = QuantileSketch::new();
+    let mut latency_exact: Vec<f64> = Vec::new();
+    let mut ttft_exact: Vec<f64> = Vec::new();
     let mut tokens_by_id: Vec<(u64, Vec<u32>)> = Vec::new();
     let (mut next, mut step, mut tokens, mut context_full) = (0usize, 0usize, 0usize, 0usize);
     let t0 = Instant::now();
@@ -131,11 +149,15 @@ fn drive(name: &'static str, mut eng: Engine, sched: &[Arrival]) -> rsb::Result<
         let now = Instant::now();
         for ev in &out.emitted {
             if ev.index == 0 {
-                ttft_ms.push((now - submit_at[&ev.id]).as_secs_f64() * 1e3);
+                let ms = (now - submit_at[&ev.id]).as_secs_f64() * 1e3;
+                ttft_ms.record(ms);
+                ttft_exact.push(ms);
             }
         }
         for c in out.done {
-            latency_ms.push((now - submit_at[&c.id]).as_secs_f64() * 1e3);
+            let ms = (now - submit_at[&c.id]).as_secs_f64() * 1e3;
+            latency_ms.record(ms);
+            latency_exact.push(ms);
             tokens += c.tokens.len();
             if c.finish == FinishReason::ContextFull {
                 context_full += 1;
@@ -154,12 +176,40 @@ fn drive(name: &'static str, mut eng: Engine, sched: &[Arrival]) -> rsb::Result<
         steps: step,
         latency_ms,
         ttft_ms,
+        latency_exact,
+        ttft_exact,
         tokens,
         tokens_by_id,
         context_full,
         kv_bytes,
         pages_high_water: eng.metrics.kv_pages_high_water,
     })
+}
+
+/// Exact nearest-rank percentile (the convention the sketch estimates):
+/// the smallest sample with cumulative rank >= ceil(q/100 * n).
+fn nearest_rank(samples: &[f64], q: f64) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Gate: every sketch-derived percentile is within one log-bucket's
+/// relative error of the exact nearest-rank percentile on the same replay.
+fn assert_sketch_accuracy(name: &str, what: &str, sketch: &QuantileSketch, exact: &[f64]) {
+    for q in [50.0, 90.0, 99.0] {
+        let want = nearest_rank(exact, q);
+        let got = sketch.percentile(q);
+        let tol = want * QuantileSketch::max_relative_error() + QuantileSketch::min_resolvable();
+        assert!(
+            (got - want).abs() <= tol,
+            "{name}: {what} p{q}: sketch {got:.4}ms vs exact {want:.4}ms (tol {tol:.4}ms)"
+        );
+    }
 }
 
 fn engine(ecfg: EngineConfig) -> rsb::Result<Engine> {
@@ -186,22 +236,16 @@ fn run() -> rsb::Result<()> {
         if smoke { " (--smoke)" } else { "" }
     );
 
-    let waves = drive(
-        "waves",
-        engine(EngineConfig {
-            admission: Admission::Waves,
-            ..EngineConfig::default()
-        })?,
-        &sched,
-    )?;
-    let cont = drive(
-        "continuous",
-        engine(EngineConfig {
-            prefill_chunk: 16,
-            ..EngineConfig::default()
-        })?,
-        &sched,
-    )?;
+    let mut waves_eng = engine(EngineConfig {
+        admission: Admission::Waves,
+        ..EngineConfig::default()
+    })?;
+    let waves = drive("waves", &mut waves_eng, &sched)?;
+    let mut cont_eng = engine(EngineConfig {
+        prefill_chunk: 16,
+        ..EngineConfig::default()
+    })?;
+    let cont = drive("continuous", &mut cont_eng, &sched)?;
     // the paged run doubles as the traced serve smoke for CI's schema check
     let trace = arg_value("--trace")
         .map(|p| (std::sync::Arc::new(rsb::obs::TraceSink::new(1 << 16)), p));
@@ -216,7 +260,7 @@ fn run() -> rsb::Result<()> {
     if let Some((sink, _)) = &trace {
         paged_eng.set_trace(Some(sink.clone()));
     }
-    let paged = drive("paged", paged_eng, &sched)?;
+    let paged = drive("paged", &mut paged_eng, &sched)?;
 
     let rows: Vec<Vec<String>> = [&waves, &cont, &paged]
         .iter()
@@ -280,6 +324,18 @@ fn run() -> rsb::Result<()> {
         "page pool overran its budget"
     );
 
+    // gate 3: the streaming quantile sketches agree with exact sorted
+    // percentiles on the same replay, within one log-bucket's relative
+    // error — this is the accuracy contract production metrics rely on
+    for r in [&waves, &cont, &paged] {
+        assert_sketch_accuracy(r.name, "latency", &r.latency_ms, &r.latency_exact);
+        assert_sketch_accuracy(r.name, "ttft", &r.ttft_ms, &r.ttft_exact);
+    }
+    println!(
+        "sketch gate passed: p50/p90/p99 within {:.2}% of exact on all runs",
+        100.0 * QuantileSketch::max_relative_error()
+    );
+
     println!(
         "gates passed: continuous {:.1}ms < waves {:.1}ms; paged completed {n} requests \
          in {} pages (high water {}) at {:.0}% of the dense KV footprint",
@@ -299,6 +355,19 @@ fn run() -> rsb::Result<()> {
             path.display(),
             sink.dropped()
         );
+    }
+
+    // --prom <path>: dump the paged engine's Prometheus exposition for
+    // CI's format check (tools/prom_check.py)
+    if let Some(path) = arg_value("--prom") {
+        let text = paged_eng.prometheus_text();
+        if let Some(parent) = std::path::Path::new(&path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(&path, &text)?;
+        println!("prom: wrote {} bytes to {path}", text.len());
     }
     Ok(())
 }

@@ -50,7 +50,10 @@ use crate::engine::request::{
 };
 use crate::engine::sampler;
 use crate::error::Result;
-use crate::obs::{layer_live_counts, Phase, ReuseRing, TraceSink};
+use crate::jsonx::{num, obj, s, Value};
+use crate::obs::{
+    layer_live_counts, Phase, PromWriter, ReuseRing, SloKind, SloMonitor, TraceSink,
+};
 use crate::predictor::{NeuronPolicy, SlotPredictor};
 use crate::runtime::backend::{BatchMask, ExecBackend};
 use crate::runtime::paged::{KvPool, PagedKvCfg};
@@ -106,6 +109,13 @@ pub struct EngineConfig {
     pub queue_cap: usize,
     /// Admission mode (continuous vs drain-then-refill waves).
     pub admission: Admission,
+    /// SLO floor on the rolling-window live predictor recall (None =
+    /// unwatched). Breaching logs a warning and bumps `slo_breaches`.
+    pub slo_recall_floor: Option<f64>,
+    /// SLO ceiling on the rolling-window enforced-mask density.
+    pub slo_density_ceil: Option<f64>,
+    /// SLO ceiling on the rolling p99 end-to-end request latency (ms).
+    pub slo_p99_ms: Option<f64>,
 }
 
 impl Default for EngineConfig {
@@ -121,6 +131,9 @@ impl Default for EngineConfig {
             prefill_chunk: 0,
             queue_cap: 0,
             admission: Admission::Continuous,
+            slo_recall_floor: None,
+            slo_density_ceil: None,
+            slo_p99_ms: None,
         }
     }
 }
@@ -194,10 +207,22 @@ pub struct Engine {
     /// series in `metrics.per_layer` (created on admit, dropped at retire)
     rings: Vec<Option<ReuseRing>>,
     trace: Option<std::sync::Arc<TraceSink>>,
+    /// rolling-window SLO watchers built from the config's bounds (empty
+    /// when no bound is set); fed at the end of every decode step
+    slo: Vec<SloMonitor>,
+    /// engine construction time (`build_info.uptime_seconds`)
+    started_at: std::time::Instant,
     cfg: EngineConfig,
     pub metrics: EngineMetrics,
     pub stats: SparsityStats,
     next_id: u64,
+}
+
+/// Chrome-trace track id for a request's lifecycle spans: keeps them off
+/// the worker-thread tracks (small tids) so each request renders as its own
+/// row in the trace viewer.
+fn req_track(id: u64) -> u32 {
+    10_000 + (id % 50_000) as u32
 }
 
 impl Engine {
@@ -217,6 +242,18 @@ impl Engine {
         if let KvStore::Paged(pool) = &kv {
             metrics.kv_pages_total = pool.n_pages() as u64;
         }
+        let mut slo = Vec::new();
+        if let Some(b) = cfg.slo_recall_floor {
+            slo.push(SloMonitor::new(SloKind::RecallFloor, b));
+        }
+        if let Some(b) = cfg.slo_density_ceil {
+            slo.push(SloMonitor::new(SloKind::DensityCeil, b));
+        }
+        if let Some(b) = cfg.slo_p99_ms {
+            slo.push(SloMonitor::new(SloKind::P99LatencyMs, b));
+        }
+        // configured monitors show up in snapshots before any traffic
+        metrics.slo = slo.iter().map(SloMonitor::snapshot).collect();
         Ok(Engine {
             backend,
             decode_b,
@@ -230,6 +267,8 @@ impl Engine {
             predictors: (0..decode_b).map(|_| None).collect(),
             rings: (0..decode_b).map(|_| None).collect(),
             trace: None,
+            slo,
+            started_at: std::time::Instant::now(),
             stats: SparsityStats::new(n_layers),
             cfg,
             metrics,
@@ -280,6 +319,114 @@ impl Engine {
     /// The trace sink currently attached, if any.
     pub fn trace(&self) -> Option<&std::sync::Arc<TraceSink>> {
         self.trace.as_ref()
+    }
+
+    /// Seconds since the engine was constructed.
+    pub fn uptime_seconds(&self) -> f64 {
+        self.started_at.elapsed().as_secs_f64()
+    }
+
+    /// What is actually running: crate version, backend kind, resolved
+    /// SIMD dispatch level, weight quantization mode, and uptime. Attached
+    /// to `{"cmd":"metrics"}` and `metrics_prom` so a scrape identifies the
+    /// build behind the numbers.
+    pub fn build_info(&self) -> Value {
+        obj(vec![
+            ("version", s(env!("CARGO_PKG_VERSION"))),
+            ("backend", s(self.backend.kind())),
+            ("simd", s(crate::sparse::simd::active_level().name())),
+            ("quant", s(self.backend.quant_name())),
+            ("uptime_seconds", num(self.uptime_seconds())),
+        ])
+    }
+
+    /// Render the engine's metrics snapshot plus build-info/uptime into a
+    /// Prometheus text writer (the server appends its own gauges before
+    /// finishing).
+    pub fn render_prom(&self, w: &mut PromWriter) {
+        self.metrics.render_prom(w);
+        w.header(
+            "pallas_build_info",
+            "Build identity (constant 1; identity in the labels).",
+            "gauge",
+        );
+        w.sample(
+            "pallas_build_info",
+            &[
+                ("version", env!("CARGO_PKG_VERSION")),
+                ("backend", self.backend.kind()),
+                ("simd", crate::sparse::simd::active_level().name()),
+                ("quant", self.backend.quant_name()),
+            ],
+            1.0,
+        );
+        w.gauge(
+            "pallas_uptime_seconds",
+            "Seconds since the engine was constructed.",
+            self.uptime_seconds(),
+        );
+    }
+
+    /// The full Prometheus exposition for this engine (`metrics_prom`
+    /// without server-level gauges).
+    pub fn prometheus_text(&self) -> String {
+        let mut w = PromWriter::new();
+        self.render_prom(&mut w);
+        w.finish()
+    }
+
+    /// Zero every metric, including state the plain `EngineMetrics::reset`
+    /// cannot reach: the page pool's high-water mark (re-anchored to the
+    /// current occupancy so the next `update_kv_gauges` doesn't resurrect
+    /// the old peak), the pool-geometry gauges, and the SLO monitors'
+    /// windows and breach counters.
+    pub fn reset_metrics(&mut self) {
+        self.metrics.reset();
+        if let KvStore::Paged(pool) = &mut self.kv {
+            pool.reset_high_water();
+            self.metrics.kv_pages_total = pool.n_pages() as u64;
+            self.metrics.kv_pages_in_use = pool.pages_in_use() as u64;
+            self.metrics.kv_pages_high_water = pool.high_water() as u64;
+        }
+        for m in &mut self.slo {
+            m.reset();
+        }
+        self.metrics.slo = self.slo.iter().map(SloMonitor::snapshot).collect();
+    }
+
+    /// Feed this step's recall/density observations (plus the live p99
+    /// latency) into the configured SLO monitors, log every state
+    /// transition, and refresh the snapshot embedded in the metrics.
+    fn update_slo(&mut self, recalls: &[f64], densities: &[f64]) {
+        if self.slo.is_empty() {
+            return;
+        }
+        // The p99 monitor watches the latency sketch once it has enough
+        // samples for the tail to mean anything.
+        let p99 = (self.metrics.request_latency_ms.len() >= 8)
+            .then(|| self.metrics.request_latency_ms.percentile(99.0));
+        for m in &mut self.slo {
+            let vals: Vec<f64> = match m.kind() {
+                SloKind::RecallFloor => recalls.to_vec(),
+                SloKind::DensityCeil => densities.to_vec(),
+                SloKind::P99LatencyMs => p99.into_iter().collect(),
+            };
+            for v in vals {
+                if let Some((old, new)) = m.observe(v) {
+                    crate::log_warn!(
+                        "slo",
+                        "slo {} {} -> {}: windowed {:.4} vs bound {:.4} (breaches {})",
+                        m.kind().name(),
+                        old.name(),
+                        new.name(),
+                        m.windowed(),
+                        m.bound(),
+                        m.breaches(),
+                    );
+                }
+            }
+        }
+        self.metrics.slo = self.slo.iter().map(SloMonitor::snapshot).collect();
     }
 
     pub fn submit(&mut self, prompt: Vec<u32>, max_new_tokens: usize) -> u64 {
@@ -439,6 +586,10 @@ impl Engine {
     /// slots. Returns both the tokens emitted and the requests finished.
     pub fn step_ext(&mut self) -> Result<StepOutcome> {
         let mut out = StepOutcome::default();
+        // this step's SLO observations, gathered while the decode loop
+        // holds mutable borrows and fed to the monitors at the end
+        let mut slo_recalls: Vec<f64> = Vec::new();
+        let mut slo_densities: Vec<f64> = Vec::new();
         self.sweep_deadlines(&mut out.done)?;
         let admitted = self.admit(&mut out.done)?;
         self.metrics.record_admissions(admitted);
@@ -567,6 +718,7 @@ impl Engine {
                     step_union_density
                 };
                 self.metrics.mask_density.push(d);
+                slo_densities.push(d);
                 self.metrics.enforced_rows += 1;
                 let series = self.metrics.slot(slot);
                 series.mask_density.push(d);
@@ -592,6 +744,7 @@ impl Engine {
                     p.observe_scored(&ffn_mask, slot, !enforced_rows[slot])?
                 {
                     self.metrics.predictor_recall.push(acc.recall());
+                    slo_recalls.push(acc.recall());
                     self.metrics.predictor_precision.push(acc.precision());
                     let series = self.metrics.slot(slot);
                     series.recall.push(acc.recall());
@@ -642,6 +795,7 @@ impl Engine {
                 out.done.push(self.retire_active(slot, reason)?);
             }
         }
+        self.update_slo(&slo_recalls, &slo_densities);
         self.update_kv_gauges();
         Ok(out)
     }
@@ -729,6 +883,7 @@ impl Engine {
         let chunked = self.cfg.prefill_chunk > 0 && self.backend.supports_chunked_prefill();
         let max_seq = self.backend.config().max_seq;
         let max_prompt = if chunked { max_seq - 1 } else { self.prefill_t };
+        let trace = self.trace.clone();
         let mut admitted = 0;
         while self.slots.free_count() > 0 && !self.queue.is_empty() {
             // worst-case positions the head request can ever occupy
@@ -752,15 +907,38 @@ impl Engine {
                     continue;
                 }
                 if !pool.can_reserve(need) {
+                    // the head is blocked on pages, not CPU: attribute the
+                    // wait so its eventual timings separate "queued behind
+                    // traffic" from "stalled on KV memory"
+                    self.queue
+                        .front_mut()
+                        .unwrap()
+                        .timeline
+                        .mark_kv_blocked(std::time::Instant::now());
                     break;
                 }
             }
-            let req = self.queue.pop_front().unwrap();
+            let mut req = self.queue.pop_front().unwrap();
             let slot = self.slots.alloc(req.id).expect("free slot");
             if let KvStore::Paged(pool) = &mut self.kv {
                 pool.reserve(slot, need)?;
             }
             let t0 = std::time::Instant::now();
+            req.timeline.mark_admitted(t0);
+            if let Some(tr) = trace.as_deref() {
+                let track = req_track(req.id);
+                tr.record_at(
+                    Phase::QueueWait,
+                    req.timeline.submitted,
+                    t0.saturating_duration_since(req.timeline.submitted),
+                    track,
+                    req.id,
+                );
+                if req.timeline.kv_wait_ms > 0.0 {
+                    let d = std::time::Duration::from_secs_f64(req.timeline.kv_wait_ms / 1e3);
+                    tr.record_at(Phase::KvWait, t0 - d, d, track, req.id);
+                }
+            }
             // clamp the prompt to the feeding bucket, keeping its tail
             let mut prompt: Vec<u32> = req.prompt.clone();
             if prompt.is_empty() {
@@ -800,7 +978,10 @@ impl Engine {
             let tok_t = Tensor::i32(vec![1, self.prefill_t], padded)?;
             // only predictive policies seed from the prompt's masks — spare
             // dense admissions the [L, T, F] liveness record
-            let pre = self.backend.prefill(&tok_t, policy.is_predictive())?;
+            let pre = {
+                let _req = trace.as_deref().map(|s| s.req_scope(req.id));
+                self.backend.prefill(&tok_t, policy.is_predictive())?
+            };
             match &mut self.kv {
                 KvStore::Dense(kb) => kb.pack_row(slot, &pre.kv)?,
                 KvStore::Paged(pool) => pool.write_row_positions(slot, &pre.kv, 0..len)?,
@@ -819,6 +1000,9 @@ impl Engine {
             let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
             self.metrics.prefill_ms.push(prefill_ms);
             self.metrics.queue_wait_ms.push(queue_ms);
+            req.timeline.add_prefill_chunk(prefill_ms);
+            req.timeline.mark_prefill_done(first_token_at);
+            req.timeline.mark_first_token(first_token_at);
             if self.cfg.track_sparsity {
                 let mut tr = AggregatedTracker::new(n_layers, d_ff);
                 tr.reset();
@@ -870,6 +1054,7 @@ impl Engine {
     /// finished prompt's slot becomes active immediately (first token
     /// sampled from the final chunk's logits) and decodes this same step.
     fn advance_prefills(&mut self) -> Result<()> {
+        let trace = self.trace.clone();
         for slot in 0..self.decode_b {
             let Some(mut job) = self.prefills[slot].take() else {
                 continue;
@@ -884,13 +1069,18 @@ impl Engine {
                 .collect();
             let tok_t = Tensor::i32(vec![1, n], toks)?;
             let report = job.policy.is_predictive();
-            let pre = self.backend.prefill_chunk(&job.kv, job.fed, &tok_t, report)?;
+            let pre = {
+                let _req = trace.as_deref().map(|s| s.req_scope(job.req.id));
+                self.backend.prefill_chunk(&job.kv, job.fed, &tok_t, report)?
+            };
             job.kv = pre.kv;
             if let Some(fm) = pre.ffn_mask {
                 job.ffn_chunks.push(fm);
             }
             job.fed += n;
-            job.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+            let chunk_ms = t0.elapsed().as_secs_f64() * 1e3;
+            job.prefill_ms += chunk_ms;
+            job.req.timeline.add_prefill_chunk(chunk_ms);
             if job.fed == job.prompt.len() {
                 self.finish_prefill(slot, job, pre.logits)?;
             } else {
@@ -907,7 +1097,7 @@ impl Engine {
     /// seeded state matches too).
     fn finish_prefill(&mut self, slot: usize, job: PrefillJob, last_logits: Tensor) -> Result<()> {
         let PrefillJob {
-            req,
+            mut req,
             prompt,
             kv,
             ffn_chunks,
@@ -930,6 +1120,8 @@ impl Engine {
         let mut rng = Rng::new(req.sampling.seed).fold_in(req.id);
         let first = sampler::sample(row, &req.sampling, &mut rng);
         let first_token_at = std::time::Instant::now();
+        req.timeline.mark_prefill_done(first_token_at);
+        req.timeline.mark_first_token(first_token_at);
         self.metrics.prefill_ms.push(prefill_ms);
         self.metrics.queue_wait_ms.push(queue_ms);
         if self.cfg.track_sparsity {
@@ -989,6 +1181,25 @@ impl Engine {
         self.metrics
             .time_to_first_token_ms
             .push((a.first_token_at - a.request.enqueued_at).as_secs_f64() * 1e3);
+        let now = std::time::Instant::now();
+        let timings = a.request.timeline.finalize(now);
+        self.metrics.request_latency_ms.record(timings.total_ms);
+        // one lifecycle span per request on its own Chrome-trace track:
+        // admission -> retirement (queue/kv waits are separate spans)
+        if let Some(tr) = self.trace.as_deref() {
+            let start = a
+                .request
+                .timeline
+                .admitted
+                .unwrap_or(a.request.timeline.submitted);
+            tr.record_at(
+                Phase::Request,
+                start,
+                now.saturating_duration_since(start),
+                req_track(a.request.id),
+                a.request.id,
+            );
+        }
         Ok(Completion {
             id: a.request.id,
             prompt_len: a.request.prompt.len(),
@@ -1001,6 +1212,7 @@ impl Engine {
                 .then(|| a.mask_density_sum / a.enforced_rows as f64),
             enforced_rows: a.enforced_rows,
             fallbacks,
+            timings,
         })
     }
 }
@@ -1030,6 +1242,7 @@ fn unstarted_completion(
         mask_density: None,
         enforced_rows: 0,
         fallbacks: 0,
+        timings: req.timeline.finalize(std::time::Instant::now()),
     }
 }
 

@@ -8,7 +8,7 @@
 //! `{"cmd": "metrics"}` protocol.
 
 use crate::jsonx::{num, obj, Value};
-use crate::obs::LayerSeries;
+use crate::obs::{LayerSeries, PromWriter, QuantileSketch, SloStatus};
 use crate::util::stats::Samples;
 
 /// Per-slot split of the predictor observability (indexed by KV slot).
@@ -54,10 +54,15 @@ pub struct EngineMetrics {
     pub requests_enqueued: u64,
     pub requests_completed: u64,
     pub tokens_generated: u64,
-    pub prefill_ms: Samples,
-    pub decode_step_ms: Samples,
-    pub queue_wait_ms: Samples,
-    pub time_to_first_token_ms: Samples,
+    // Streaming latency series: bounded-memory quantile sketches
+    // (`obs::QuantileSketch`) so a long-lived server reports live
+    // p50/p90/p99 without storing every sample.
+    pub prefill_ms: QuantileSketch,
+    pub decode_step_ms: QuantileSketch,
+    pub queue_wait_ms: QuantileSketch,
+    pub time_to_first_token_ms: QuantileSketch,
+    /// end-to-end (submit -> retire) request latency
+    pub request_latency_ms: QuantileSketch,
     pub batch_occupancy: Samples,
     pub steps: u64,
     /// measured wall-clock spent inside decode steps, in seconds — the real
@@ -100,6 +105,9 @@ pub struct EngineMetrics {
     /// `admissions_per_step[n]` = decode-step boundaries that admitted `n`
     /// requests (grows on demand via [`EngineMetrics::record_admissions`])
     pub admissions_per_step: Vec<u64>,
+    /// point-in-time SLO monitor states (`obs::slo`), refreshed by the
+    /// engine each step; empty when no SLO bound is configured
+    pub slo: Vec<SloStatus>,
     /// per-slot split of the predictor series
     pub per_slot: Vec<SlotSeries>,
     /// per-layer sparsity/recall/reuse series (`obs::LayerSeries`); empty
@@ -282,13 +290,14 @@ impl EngineMetrics {
             ("steps", num(self.steps as f64)),
             ("decode_secs_total", num(self.decode_secs_total)),
             ("tokens_per_sec", num(self.tokens_per_sec())),
-            ("prefill_ms", samples_json(&self.prefill_ms)),
-            ("decode_step_ms", samples_json(&self.decode_step_ms)),
-            ("queue_wait_ms", samples_json(&self.queue_wait_ms)),
+            ("prefill_ms", self.prefill_ms.to_json()),
+            ("decode_step_ms", self.decode_step_ms.to_json()),
+            ("queue_wait_ms", self.queue_wait_ms.to_json()),
             (
                 "time_to_first_token_ms",
-                samples_json(&self.time_to_first_token_ms),
+                self.time_to_first_token_ms.to_json(),
             ),
+            ("request_latency_ms", self.request_latency_ms.to_json()),
             ("batch_occupancy", samples_json(&self.batch_occupancy)),
             ("predictor_recall", samples_json(&self.predictor_recall)),
             (
@@ -325,9 +334,235 @@ impl EngineMetrics {
                         .collect(),
                 ),
             ),
+            (
+                "slo",
+                Value::Arr(self.slo.iter().map(SloStatus::to_json).collect()),
+            ),
             ("per_slot", Value::Arr(per_slot)),
             ("per_layer", self.per_layer.to_json()),
         ])
+    }
+
+    /// Render the full snapshot in Prometheus text exposition format
+    /// (`pallas_`-prefixed; the payload behind `{"cmd":"metrics_prom"}`).
+    /// The caller appends process-level families (build info, uptime,
+    /// server gauges) before finishing the writer.
+    pub fn render_prom(&self, w: &mut PromWriter) {
+        w.counter(
+            "pallas_requests_enqueued_total",
+            "Requests accepted into the admission queue.",
+            self.requests_enqueued as f64,
+        );
+        w.counter(
+            "pallas_requests_completed_total",
+            "Requests retired with a completion.",
+            self.requests_completed as f64,
+        );
+        w.counter(
+            "pallas_tokens_generated_total",
+            "Decode tokens emitted.",
+            self.tokens_generated as f64,
+        );
+        w.counter(
+            "pallas_steps_total",
+            "Batched decode steps executed.",
+            self.steps as f64,
+        );
+        w.counter(
+            "pallas_decode_seconds_total",
+            "Wall-clock seconds spent inside decode steps.",
+            self.decode_secs_total,
+        );
+        w.counter(
+            "pallas_enforced_steps_total",
+            "Decode steps with at least one row under a sparse mask.",
+            self.enforced_steps as f64,
+        );
+        w.counter(
+            "pallas_enforced_rows_total",
+            "Decode rows executed under their own sparse mask.",
+            self.enforced_rows as f64,
+        );
+        w.counter(
+            "pallas_probe_steps_total",
+            "Dense probe steps taken by predictive policies.",
+            self.probe_steps as f64,
+        );
+        w.counter(
+            "pallas_fallback_events_total",
+            "Sparse-enforcement denials caused by the recall floor.",
+            self.fallback_events as f64,
+        );
+        w.counter(
+            "pallas_deadline_evictions_total",
+            "Requests evicted because their deadline expired.",
+            self.deadline_evictions as f64,
+        );
+        w.counter(
+            "pallas_backpressure_rejections_total",
+            "Submissions rejected by the admission queue cap.",
+            self.backpressure_rejections as f64,
+        );
+        w.gauge(
+            "pallas_tokens_per_sec",
+            "Decode throughput over the measured wall-clock window.",
+            self.tokens_per_sec(),
+        );
+        w.gauge(
+            "pallas_ffn_flop_reduction",
+            "Mean FFN FLOP reduction implied by enforced masks.",
+            self.ffn_flop_reduction(),
+        );
+        w.gauge(
+            "pallas_batch_occupancy_mean",
+            "Mean occupied decode slots per step.",
+            self.batch_occupancy.mean(),
+        );
+        w.gauge(
+            "pallas_kv_pages_in_use",
+            "KV pages currently allocated (0 on dense KV).",
+            self.kv_pages_in_use as f64,
+        );
+        w.gauge(
+            "pallas_kv_pages_high_water",
+            "Highest simultaneous KV page occupancy seen.",
+            self.kv_pages_high_water as f64,
+        );
+        w.gauge(
+            "pallas_kv_pages_total",
+            "Total pages in the KV pool (0 = dense layout).",
+            self.kv_pages_total as f64,
+        );
+        w.header(
+            "pallas_admissions_per_step",
+            "Decode-step boundaries that admitted exactly N requests.",
+            "gauge",
+        );
+        for (n, &c) in self.admissions_per_step.iter().enumerate() {
+            let n = n.to_string();
+            w.sample("pallas_admissions_per_step", &[("admitted", &n)], c as f64);
+        }
+        w.gauge(
+            "pallas_predictor_recall_mean",
+            "Mean shadow-measured recall of the predicted neuron sets.",
+            self.predictor_recall.mean(),
+        );
+        w.gauge(
+            "pallas_predictor_precision_mean",
+            "Mean shadow-measured precision of the predicted neuron sets.",
+            self.predictor_precision.mean(),
+        );
+        w.gauge(
+            "pallas_mask_density_mean",
+            "Mean live fraction of enforced per-row masks.",
+            self.mask_density.mean(),
+        );
+        w.gauge(
+            "pallas_union_mask_density_mean",
+            "Mean live fraction of the step-union masks.",
+            self.union_mask_density.mean(),
+        );
+        w.histogram(
+            "pallas_prefill_ms",
+            "Prompt prefill latency in milliseconds.",
+            &self.prefill_ms,
+        );
+        w.histogram(
+            "pallas_decode_step_ms",
+            "Batched decode step latency in milliseconds.",
+            &self.decode_step_ms,
+        );
+        w.histogram(
+            "pallas_queue_wait_ms",
+            "Admission queue wait in milliseconds.",
+            &self.queue_wait_ms,
+        );
+        w.histogram(
+            "pallas_ttft_ms",
+            "Time to first token in milliseconds.",
+            &self.time_to_first_token_ms,
+        );
+        w.histogram(
+            "pallas_request_latency_ms",
+            "End-to-end request latency in milliseconds.",
+            &self.request_latency_ms,
+        );
+        if !self.slo.is_empty() {
+            w.header(
+                "pallas_slo_state",
+                "SLO monitor state (0=ok, 1=warn, 2=breach).",
+                "gauge",
+            );
+            for s in &self.slo {
+                w.sample(
+                    "pallas_slo_state",
+                    &[("kind", s.kind)],
+                    s.state.code() as f64,
+                );
+            }
+            w.header(
+                "pallas_slo_bound",
+                "Configured SLO bound per monitor.",
+                "gauge",
+            );
+            for s in &self.slo {
+                w.sample("pallas_slo_bound", &[("kind", s.kind)], s.bound);
+            }
+            w.header(
+                "pallas_slo_windowed",
+                "Rolling-window mean of the watched signal.",
+                "gauge",
+            );
+            for s in &self.slo {
+                w.sample("pallas_slo_windowed", &[("kind", s.kind)], s.windowed);
+            }
+            w.header(
+                "pallas_slo_breaches_total",
+                "Times each SLO monitor entered the breach state.",
+                "counter",
+            );
+            for s in &self.slo {
+                w.sample(
+                    "pallas_slo_breaches_total",
+                    &[("kind", s.kind)],
+                    s.breaches as f64,
+                );
+            }
+        }
+        let nl = self.per_layer.n_layers();
+        if nl > 0 && !self.per_layer.is_empty() {
+            w.gauge(
+                "pallas_weighted_mean_density",
+                "Sample-weighted mean FFN density over all layers.",
+                self.per_layer.weighted_mean_density(),
+            );
+            w.header(
+                "pallas_layer_density_mean",
+                "Mean enforced-row FFN density per layer.",
+                "gauge",
+            );
+            for l in 0..nl {
+                let ls = l.to_string();
+                w.sample(
+                    "pallas_layer_density_mean",
+                    &[("layer", &ls)],
+                    self.per_layer.mean_density(l),
+                );
+            }
+            w.header(
+                "pallas_layer_recall_mean",
+                "Mean shadow-measured recall per layer.",
+                "gauge",
+            );
+            for l in 0..nl {
+                let ls = l.to_string();
+                w.sample(
+                    "pallas_layer_recall_mean",
+                    &[("layer", &ls)],
+                    self.per_layer.mean_recall(l),
+                );
+            }
+        }
     }
 
     /// Zero every counter and series, keeping the per-slot width and the
@@ -442,6 +677,65 @@ mod tests {
         let hist = v.get("admissions_per_step").and_then(Value::as_arr).unwrap();
         assert_eq!(hist.len(), 4);
         assert_eq!(hist[3].as_usize(), Some(2));
+    }
+
+    #[test]
+    fn prometheus_rendering_covers_counters_gauges_and_histograms() {
+        let mut m = EngineMetrics::with_geometry(2, 2, 8);
+        m.requests_enqueued = 4;
+        m.requests_completed = 3;
+        m.tokens_generated = 60;
+        m.steps = 20;
+        m.decode_secs_total = 0.5;
+        m.kv_pages_total = 24;
+        m.kv_pages_in_use = 5;
+        m.record_admissions(2);
+        m.request_latency_ms.record(12.0);
+        m.request_latency_ms.record(30.0);
+        m.time_to_first_token_ms.record(4.0);
+        m.per_layer.push_live_counts(&[2, 4]);
+        let mut w = PromWriter::new();
+        m.render_prom(&mut w);
+        let text = w.finish();
+        assert!(text.contains("# TYPE pallas_tokens_generated_total counter\n"));
+        assert!(text.contains("pallas_tokens_generated_total 60\n"));
+        assert!(text.contains("pallas_kv_pages_in_use 5\n"));
+        assert!(text.contains("pallas_admissions_per_step{admitted=\"2\"} 1\n"));
+        assert!(text.contains("# TYPE pallas_request_latency_ms histogram\n"));
+        assert!(text.contains("pallas_request_latency_ms_count 2\n"));
+        assert!(text.contains("pallas_ttft_ms_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("pallas_layer_density_mean{layer=\"1\"} 0.5\n"));
+        // No SLO configured: the slo families are absent entirely.
+        assert!(!text.contains("pallas_slo_state"));
+        // Every line is a comment or a pallas_-prefixed sample.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.starts_with("pallas_"),
+                "bad line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn slo_snapshots_render_in_json_and_prom() {
+        let mut m = EngineMetrics::default();
+        let mut mon = crate::obs::SloMonitor::new(crate::obs::SloKind::DensityCeil, 0.2);
+        for _ in 0..20 {
+            mon.observe(0.9);
+        }
+        m.slo = vec![mon.snapshot()];
+        let v = crate::jsonx::parse(&m.to_json().to_json()).unwrap();
+        let slo = v.get("slo").and_then(Value::as_arr).unwrap();
+        assert_eq!(slo.len(), 1);
+        assert_eq!(slo[0].str_of("kind").unwrap(), "density");
+        assert_eq!(slo[0].str_of("state").unwrap(), "breach");
+        assert_eq!(slo[0].usize_of("breaches").unwrap(), 1);
+        let mut w = PromWriter::new();
+        m.render_prom(&mut w);
+        let text = w.finish();
+        assert!(text.contains("pallas_slo_state{kind=\"density\"} 2\n"));
+        assert!(text.contains("pallas_slo_breaches_total{kind=\"density\"} 1\n"));
+        assert!(text.contains("pallas_slo_bound{kind=\"density\"} 0.2\n"));
     }
 
     #[test]

@@ -544,6 +544,10 @@ impl ExecBackend for HostBackend {
         "host"
     }
 
+    fn quant_name(&self) -> &'static str {
+        self.quant().name()
+    }
+
     fn model_id(&self) -> &str {
         &self.model_id
     }

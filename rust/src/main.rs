@@ -47,7 +47,11 @@
 //! step-to-step reuse, aggregated-window density) after a `generate` run;
 //! `--log-level <error|warn|info|debug>[,json]` (or env PALLAS_LOG) tunes
 //! the stderr log stream. A running server also answers `{"cmd":"metrics"}`
-//! / `{"cmd":"reset"}` over its own TCP protocol.
+//! / `{"cmd":"metrics_prom"}` (Prometheus text exposition) /
+//! `{"cmd":"reset"}` over its own TCP protocol. SLO monitors
+//! (`--slo-recall-floor <f>`, `--slo-density-ceil <f>`, `--slo-p99-ms <ms>`)
+//! watch rolling windows of live recall, enforced density and sketch p99
+//! latency, logging ok -> warn -> breach transitions and counting breaches.
 
 use std::sync::Arc;
 
@@ -105,6 +109,9 @@ usage: rsb <info|train|finetune|eval|generate|serve|specdec> [--options]
        host backend: --quant f32|q8 (int8 FFN weights), --threads N
        serve: --max-tokens-cap N (0 = model max_seq), --queue-cap N (backpressure),
               --kv-pages N --page-size P (paged KV pool), --prefill-chunk N
+       SLO monitors (generate/serve): --slo-recall-floor F --slo-density-ceil F
+              --slo-p99-ms MS (rolling-window watchers; breaches are logged and
+              counted, see {\"cmd\":\"metrics_prom\"})
        specdec: --gamma N --verify-mask dense|agg[:W]|random[:W] --accept greedy|stochastic";
 
 /// Engine config from the predictor CLI knobs (defaults = dense serving).
@@ -126,7 +133,23 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     }
     cfg.prefill_chunk = args.usize_or("prefill-chunk", cfg.prefill_chunk)?;
     cfg.queue_cap = args.usize_or("queue-cap", cfg.queue_cap)?;
+    // SLO monitors: rolling-window watchers over predictor recall, enforced
+    // mask density and p99 request latency (unset = unwatched)
+    cfg.slo_recall_floor = slo_bound(args, "slo-recall-floor")?;
+    cfg.slo_density_ceil = slo_bound(args, "slo-density-ceil")?;
+    cfg.slo_p99_ms = slo_bound(args, "slo-p99-ms")?;
     Ok(cfg)
+}
+
+/// Parse an optional `--<key> <f64>` SLO bound.
+fn slo_bound(args: &Args, key: &str) -> Result<Option<f64>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<f64>()
+            .map(Some)
+            .map_err(|_| Error::Config(format!("--{key}: expected a number, got `{v}`"))),
+    }
 }
 
 /// `--trace <path>` plumbing: a shared sink when requested (64k-event ring;

@@ -443,6 +443,52 @@ mod tests {
     }
 
     #[test]
+    fn log_hist_empty_is_zeroed() {
+        let h = LogHist::default();
+        assert!(h.is_empty());
+        assert_eq!(h.total, 0);
+        assert_eq!(h.mean(), 0.0);
+        let j = h.to_json();
+        assert_eq!(j.get("total").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(
+            j.get("buckets").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(0),
+            "empty hist serializes no buckets"
+        );
+    }
+
+    #[test]
+    fn log_hist_single_sample() {
+        let mut h = LogHist::default();
+        h.push(0.5);
+        assert!(!h.is_empty());
+        assert_eq!(h.total, 1);
+        assert_eq!(h.mean(), 0.5);
+        assert_eq!(h.counts.iter().sum::<u64>(), 1);
+        assert_eq!(h.counts[LogHist::bucket(0.5)], 1);
+    }
+
+    #[test]
+    fn log_hist_extreme_magnitudes_clamp_to_edge_buckets() {
+        let mut h = LogHist::default();
+        // Below the resolvable floor (and negative): all collapse to bucket 0.
+        h.push(-3.0);
+        h.push(1e-300);
+        h.push(0.0);
+        assert_eq!(h.counts[0], 3);
+        // Far beyond the top bucket: clamps to the last without panicking.
+        h.push(1e300);
+        assert_eq!(h.counts[LOG_BUCKETS - 1], 1);
+        assert_eq!(h.total, 4);
+        // The exact running sum is unaffected by bucket clamping.
+        assert!((h.sum - (-3.0 + 1e-300 + 0.0 + 1e300)).abs() < 1e285);
+        // Exact bucket boundary: 2^LOG_LO_EXP itself lands in bucket 1.
+        let edge = (LOG_LO_EXP as f64).exp2();
+        assert_eq!(LogHist::bucket(edge), 1);
+        assert_eq!(LogHist::bucket(edge * 0.99), 0);
+    }
+
+    #[test]
     fn layer_live_counts_sum_is_popcount() {
         let bits = vec![true, false, true, true, false, false];
         let counts = layer_live_counts(&bits, 2, 3);

@@ -1,13 +1,26 @@
 //! Observability for the sparse serving stack: per-layer sparsity series
-//! (`layers`), phase-level trace spans (`trace`) and leveled logging
-//! (`log`). Everything here is designed to cost ~nothing on the decode hot
-//! path when disabled and to stay allocation-free when enabled — the
-//! subsystem measures the paper's claims (layer-wise sparsity §4, neuron
-//! reuse §5.1, where the decode wall-clock goes) without perturbing them.
+//! (`layers`), phase-level trace spans (`trace`), leveled logging (`log`),
+//! bounded-memory latency quantile sketches (`quantile`), per-request
+//! lifecycle timelines (`reqtrace`), sparsity/latency SLO drift monitors
+//! (`slo`), and Prometheus text exposition (`prom`). Everything here is
+//! designed to cost ~nothing on the decode hot path when disabled and to
+//! stay allocation-free when enabled — the subsystem measures the paper's
+//! claims (layer-wise sparsity §4, neuron reuse §5.1, where the decode
+//! wall-clock goes) without perturbing them, and watches the signals
+//! (recall, density, tail latency) whose drift would silently erode the
+//! sparse-decode win.
 
 pub mod layers;
 pub mod log;
+pub mod prom;
+pub mod quantile;
+pub mod reqtrace;
+pub mod slo;
 pub mod trace;
 
 pub use layers::{layer_live_counts, LayerSeries, LogHist, ReuseRing, AGG_WINDOWS};
+pub use prom::PromWriter;
+pub use quantile::QuantileSketch;
+pub use reqtrace::{RequestTimeline, Timings};
+pub use slo::{SloKind, SloMonitor, SloState, SloStatus};
 pub use trace::{span, span_on, Phase, Span, TraceEvent, TraceSink};

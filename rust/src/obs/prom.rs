@@ -1,0 +1,190 @@
+//! Prometheus text exposition (format version 0.0.4).
+//!
+//! A small append-only writer for rendering metric snapshots as Prometheus
+//! text. All metric names in this repo carry the `pallas_` prefix (a
+//! contract checked by `tools/prom_check.py` in CI). The writer handles the
+//! three shapes the metrics layer needs:
+//!
+//! - counters / gauges (`# HELP` + `# TYPE` + one or more samples),
+//! - labelled sample families (per-layer gauges, per-kind SLO counters),
+//! - cumulative histograms rendered from a [`QuantileSketch`]
+//!   (`_bucket{le=...}` series + `_sum` + `_count`).
+//!
+//! Values are formatted so the Prometheus text parser accepts them:
+//! integral values print without a decimal point, non-finite values print
+//! as `+Inf`/`-Inf`/`NaN`.
+
+use super::quantile::QuantileSketch;
+
+/// Render a sample value in Prometheus text syntax.
+pub fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        return "NaN".into();
+    }
+    if v.is_infinite() {
+        return if v > 0.0 { "+Inf".into() } else { "-Inf".into() };
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Escape a label value: backslash, double-quote, and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter { out: String::new() }
+    }
+
+    /// Emit the `# HELP` / `# TYPE` header pair for a metric family.
+    pub fn header(&mut self, name: &str, help: &str, typ: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(help);
+        self.out.push('\n');
+        self.out.push_str("# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(typ);
+        self.out.push('\n');
+    }
+
+    /// Emit one sample line, with optional labels.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, val)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&escape_label(val));
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(v));
+        self.out.push('\n');
+    }
+
+    /// Header + single unlabelled sample, as a counter.
+    pub fn counter(&mut self, name: &str, help: &str, v: f64) {
+        self.header(name, help, "counter");
+        self.sample(name, &[], v);
+    }
+
+    /// Header + single unlabelled sample, as a gauge.
+    pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.header(name, help, "gauge");
+        self.sample(name, &[], v);
+    }
+
+    /// Render a sketch as a cumulative Prometheus histogram:
+    /// `name_bucket{le="..."}` per non-empty sketch bucket, the mandatory
+    /// `le="+Inf"` bucket, then `name_sum` and `name_count`.
+    pub fn histogram(&mut self, name: &str, help: &str, sk: &QuantileSketch) {
+        self.header(name, help, "histogram");
+        let bucket = format!("{name}_bucket");
+        for (le, cum) in sk.cumulative_buckets() {
+            self.sample(&bucket, &[("le", &fmt_value(le))], cum as f64);
+        }
+        self.sample(&bucket, &[("le", "+Inf")], sk.len() as f64);
+        self.sample(&format!("{name}_sum"), &[], sk.sum());
+        self.sample(&format!("{name}_count"), &[], sk.len() as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_formatting_matches_prometheus_syntax() {
+        assert_eq!(fmt_value(3.0), "3");
+        assert_eq!(fmt_value(0.25), "0.25");
+        assert_eq!(fmt_value(-7.0), "-7");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+    }
+
+    #[test]
+    fn counters_gauges_and_labels_render() {
+        let mut w = PromWriter::new();
+        w.counter("pallas_steps_total", "Decode steps executed.", 42.0);
+        w.header("pallas_layer_density_mean", "Mean mask density.", "gauge");
+        w.sample("pallas_layer_density_mean", &[("layer", "0")], 0.25);
+        w.sample("pallas_layer_density_mean", &[("layer", "1")], 0.5);
+        let text = w.finish();
+        assert!(text.contains("# HELP pallas_steps_total Decode steps executed.\n"));
+        assert!(text.contains("# TYPE pallas_steps_total counter\n"));
+        assert!(text.contains("pallas_steps_total 42\n"));
+        assert!(text.contains("pallas_layer_density_mean{layer=\"0\"} 0.25\n"));
+        assert!(text.contains("pallas_layer_density_mean{layer=\"1\"} 0.5\n"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut w = PromWriter::new();
+        w.sample("pallas_build_info", &[("version", "a\"b\\c\nd")], 1.0);
+        let text = w.finish();
+        assert!(text.contains("version=\"a\\\"b\\\\c\\nd\""));
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets_sum_count() {
+        let mut sk = QuantileSketch::new();
+        for x in [1.0, 2.0, 4.0, 100.0] {
+            sk.record(x);
+        }
+        let mut w = PromWriter::new();
+        w.histogram("pallas_request_latency_ms", "Request latency.", &sk);
+        let text = w.finish();
+        assert!(text.contains("# TYPE pallas_request_latency_ms histogram\n"));
+        assert!(text.contains("pallas_request_latency_ms_bucket{le=\"+Inf\"} 4\n"));
+        assert!(text.contains("pallas_request_latency_ms_sum 107\n"));
+        assert!(text.contains("pallas_request_latency_ms_count 4\n"));
+        // Bucket lines appear before +Inf and are cumulative.
+        let inf_at = text.find("le=\"+Inf\"").unwrap();
+        let first_bucket = text.find("_bucket{le=").unwrap();
+        assert!(first_bucket < inf_at);
+    }
+
+    #[test]
+    fn empty_histogram_still_has_mandatory_series() {
+        let sk = QuantileSketch::new();
+        let mut w = PromWriter::new();
+        w.histogram("pallas_ttft_ms", "TTFT.", &sk);
+        let text = w.finish();
+        assert!(text.contains("pallas_ttft_ms_bucket{le=\"+Inf\"} 0\n"));
+        assert!(text.contains("pallas_ttft_ms_sum 0\n"));
+        assert!(text.contains("pallas_ttft_ms_count 0\n"));
+    }
+}

@@ -1,0 +1,402 @@
+//! Bounded-memory, mergeable quantile sketch for streaming latency series.
+//!
+//! HDR-style log-bucketed histogram: the positive axis is split into octaves
+//! (powers of two) and each octave into `SUB` equal-width linear sub-buckets,
+//! so every bucket spans at most a `1/SUB` relative slice of its value. A
+//! percentile estimate is the midpoint of the bucket holding the requested
+//! rank, clamped into the exactly-tracked `[min, max]` envelope — so the
+//! estimate is always within one bucket's relative error of the true
+//! order statistic, regardless of how many samples were recorded.
+//!
+//! Memory is fixed (`N_BUCKETS` u64 counters, ~5 KiB) no matter how many
+//! samples stream through, unlike [`crate::util::stats::Samples`] which
+//! stores every value. Two sketches built with the same (compile-time)
+//! geometry merge by elementwise addition, so per-shard sketches can be
+//! combined into a fleet-wide view without losing accuracy.
+//!
+//! The API is a drop-in superset of the `Samples` surface used by the
+//! engine metrics (`push` / `len` / `is_empty` / `mean` / `percentile`),
+//! plus `record` / `merge` / `to_json` / `cumulative_buckets` for the
+//! observability layer (Prometheus histogram exposition).
+
+use crate::jsonx::{num, obj, Value};
+
+/// Lowest resolved octave: values below `2^E_LO` (~1e-3) collapse into the
+/// underflow bucket. Latencies are recorded in milliseconds, so this floor
+/// is one microsecond — below timer resolution anyway.
+const E_LO: i32 = -10;
+/// Highest resolved octave: values at or above `2^E_HI` (~1.07e9 ms, ~12
+/// days) clamp into the top bucket.
+const E_HI: i32 = 30;
+/// Linear sub-buckets per octave. Relative bucket width is at most `1/SUB`.
+const SUB: usize = 16;
+/// Bucket 0 is the underflow bucket (x <= 0 or x < 2^E_LO); the rest cover
+/// `(E_HI - E_LO)` octaves at `SUB` sub-buckets each.
+const N_BUCKETS: usize = (E_HI - E_LO) as usize * SUB + 1;
+
+/// Map a sample to its bucket index. Non-positive (and NaN) samples land in
+/// the underflow bucket; samples beyond the top octave clamp to the last.
+fn bucket_of(x: f64) -> usize {
+    if !(x > 0.0) {
+        return 0;
+    }
+    let e = x.log2().floor() as i32;
+    if e < E_LO {
+        return 0;
+    }
+    if e >= E_HI {
+        return N_BUCKETS - 1;
+    }
+    let scale = (e as f64).exp2();
+    // Saturating float->usize cast guards the x/scale < 1.0 rounding edge.
+    let sub = ((x / scale - 1.0) * SUB as f64) as usize;
+    1 + (e - E_LO) as usize * SUB + sub.min(SUB - 1)
+}
+
+/// Inclusive-lower / exclusive-upper value range covered by bucket `i`.
+fn bucket_bounds(i: usize) -> (f64, f64) {
+    if i == 0 {
+        return (0.0, (E_LO as f64).exp2());
+    }
+    let k = i - 1;
+    let e = E_LO + (k / SUB) as i32;
+    let scale = (e as f64).exp2();
+    let w = scale / SUB as f64;
+    let lo = scale + (k % SUB) as f64 * w;
+    (lo, lo + w)
+}
+
+/// Fixed-geometry log-bucketed quantile sketch. See module docs.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min_v: f64,
+    max_v: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        QuantileSketch::new()
+    }
+}
+
+impl QuantileSketch {
+    pub fn new() -> QuantileSketch {
+        QuantileSketch {
+            counts: vec![0; N_BUCKETS],
+            total: 0,
+            sum: 0.0,
+            min_v: f64::INFINITY,
+            max_v: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Worst-case relative half-width of a resolved bucket: a percentile
+    /// estimate differs from the true order statistic by at most
+    /// `value * max_relative_error() + min_resolvable()`.
+    pub fn max_relative_error() -> f64 {
+        1.0 / SUB as f64
+    }
+
+    /// Underflow threshold: values below this are indistinguishable from 0.
+    pub fn min_resolvable() -> f64 {
+        (E_LO as f64).exp2()
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let x = if x.is_finite() && x > 0.0 { x } else { 0.0 };
+        self.counts[bucket_of(x)] += 1;
+        self.total += 1;
+        self.sum += x;
+        if x < self.min_v {
+            self.min_v = x;
+        }
+        if x > self.max_v {
+            self.max_v = x;
+        }
+    }
+
+    /// Alias for [`record`](Self::record); keeps the sketch a drop-in for
+    /// `Samples` at existing call sites.
+    pub fn push(&mut self, x: f64) {
+        self.record(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.total as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Exact mean (running sum / count), 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Exact sum of all recorded samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact minimum, 0.0 when empty.
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min_v
+        }
+    }
+
+    /// Exact maximum, 0.0 when empty.
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max_v
+        }
+    }
+
+    /// Estimate the q-th percentile (q in [0, 100]) by nearest rank:
+    /// the midpoint of the bucket holding sample `ceil(q/100 * n)`, clamped
+    /// into the exact `[min, max]` envelope. Empty sketch returns 0.0.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        if q <= 0.0 {
+            return self.min_v;
+        }
+        if q >= 100.0 {
+            return self.max_v;
+        }
+        let rank = ((q / 100.0 * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let (lo, hi) = bucket_bounds(i);
+                return (0.5 * (lo + hi)).clamp(self.min_v, self.max_v);
+            }
+        }
+        self.max_v
+    }
+
+    /// Merge another sketch into this one. Geometry is fixed at compile
+    /// time, so any two sketches are mergeable; counts add elementwise and
+    /// the exact aggregates (sum/min/max) combine losslessly.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        if other.total > 0 {
+            self.min_v = self.min_v.min(other.min_v);
+            self.max_v = self.max_v.max(other.max_v);
+        }
+    }
+
+    /// Cumulative `(upper_bound, cumulative_count)` pairs for Prometheus
+    /// histogram exposition: one entry per non-empty bucket, in increasing
+    /// bound order. The `+Inf` bucket (== total count) is implied by the
+    /// caller.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            out.push((bucket_bounds(i).1, cum));
+        }
+        out
+    }
+
+    /// Summary snapshot: `{"n","mean","min","max","p50","p90","p95","p99"}`.
+    /// Keys `n`/`mean`/`p50`/`p95` match the historical `Samples` summary so
+    /// existing metrics consumers keep working.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("n", num(self.total as f64)),
+            ("mean", num(self.mean())),
+            ("min", num(self.min())),
+            ("max", num(self.max())),
+            ("p50", num(self.percentile(50.0))),
+            ("p90", num(self.percentile(90.0))),
+            ("p95", num(self.percentile(95.0))),
+            ("p99", num(self.percentile(99.0))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Exact nearest-rank percentile over a sorted copy — the reference the
+    /// sketch is gated against (same rank convention as `percentile`).
+    fn exact_nearest_rank(xs: &[f64], q: f64) -> f64 {
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if q <= 0.0 {
+            return v[0];
+        }
+        if q >= 100.0 {
+            return v[v.len() - 1];
+        }
+        let rank = ((q / 100.0 * v.len() as f64).ceil() as usize).clamp(1, v.len());
+        v[rank - 1]
+    }
+
+    fn within_one_bucket(est: f64, exact: f64) -> bool {
+        let tol = exact.abs() * QuantileSketch::max_relative_error()
+            + QuantileSketch::min_resolvable();
+        (est - exact).abs() <= tol
+    }
+
+    #[test]
+    fn empty_sketch_is_all_zeroes() {
+        let s = QuantileSketch::new();
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert_eq!(s.percentile(99.0), 0.0);
+        assert!(s.cumulative_buckets().is_empty());
+        let j = s.to_json();
+        assert_eq!(j.usize_of("n").unwrap(), 0);
+    }
+
+    #[test]
+    fn single_sample_reports_itself_at_every_percentile() {
+        let mut s = QuantileSketch::new();
+        s.record(7.25);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.mean(), 7.25);
+        // min == max == 7.25, so the clamp pins every estimate exactly.
+        for q in [0.0, 1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(q), 7.25, "q={q}");
+        }
+    }
+
+    #[test]
+    fn extreme_magnitudes_clamp_without_panicking() {
+        let mut s = QuantileSketch::new();
+        s.record(0.0);
+        s.record(-4.0); // non-positive -> underflow bucket
+        s.record(1e-300); // far below the resolved range
+        s.record(1e300); // far above the resolved range
+        s.record(f64::NAN); // treated as 0
+        s.record(f64::INFINITY); // treated as 0
+        assert_eq!(s.len(), 6);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 1e300);
+        // Estimates stay inside the exact [min, max] envelope.
+        for q in [1.0, 50.0, 99.0] {
+            let p = s.percentile(q);
+            assert!((0.0..=1e300).contains(&p), "q={q} p={p}");
+        }
+        assert_eq!(s.percentile(100.0), 1e300);
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_bulk_recording() {
+        let mut rng = Rng::new(42);
+        let mk = |rng: &mut Rng, n: usize| {
+            let mut s = QuantileSketch::new();
+            for _ in 0..n {
+                s.record(10.0_f64.powf(rng.f64() * 6.0 - 3.0));
+            }
+            s
+        };
+        let a = mk(&mut rng, 100);
+        let b = mk(&mut rng, 37);
+        let c = mk(&mut rng, 211);
+
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+
+        assert_eq!(ab_c.counts, a_bc.counts);
+        assert_eq!(ab_c.total, a_bc.total);
+        assert_eq!(ab_c.min_v, a_bc.min_v);
+        assert_eq!(ab_c.max_v, a_bc.max_v);
+        assert!((ab_c.sum - a_bc.sum).abs() <= 1e-9 * ab_c.sum.abs());
+        for q in [50.0, 90.0, 99.0] {
+            assert_eq!(ab_c.percentile(q), a_bc.percentile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn property_percentiles_land_within_one_bucket_of_exact() {
+        let mut rng = Rng::new(7);
+        for case in 0..20 {
+            let n = 1 + (rng.next_u64() % 500) as usize;
+            let mut s = QuantileSketch::new();
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Log-uniform over ~9 decades: microseconds to minutes (ms).
+                let x = 10.0_f64.powf(rng.f64() * 9.0 - 4.0);
+                xs.push(x);
+                s.record(x);
+            }
+            for q in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+                let est = s.percentile(q);
+                let exact = exact_nearest_rank(&xs, q);
+                assert!(
+                    within_one_bucket(est, exact),
+                    "case={case} n={n} q={q} est={est} exact={exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_end_at_total() {
+        let mut rng = Rng::new(3);
+        let mut s = QuantileSketch::new();
+        for _ in 0..200 {
+            s.record(rng.f64() * 50.0);
+        }
+        let b = s.cumulative_buckets();
+        assert!(!b.is_empty());
+        for w in b.windows(2) {
+            assert!(w[0].0 < w[1].0, "bounds increase");
+            assert!(w[0].1 <= w[1].1, "counts cumulative");
+        }
+        assert_eq!(b.last().unwrap().1, s.total);
+    }
+
+    #[test]
+    fn json_summary_has_stable_keys() {
+        let mut s = QuantileSketch::new();
+        for i in 1..=100 {
+            s.record(i as f64);
+        }
+        let j = s.to_json();
+        assert_eq!(j.usize_of("n").unwrap(), 100);
+        assert!((j.f64_of("mean").unwrap() - 50.5).abs() < 1e-9);
+        for k in ["min", "max", "p50", "p90", "p95", "p99"] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+        let p50 = j.f64_of("p50").unwrap();
+        assert!(within_one_bucket(p50, 50.0), "p50={p50}");
+    }
+}

@@ -1,0 +1,251 @@
+//! Per-request lifecycle timeline and stall attribution.
+//!
+//! A [`RequestTimeline`] rides inside a request from submission to
+//! retirement and stamps each lifecycle edge:
+//!
+//! ```text
+//! submitted --queue--> admitted --prefill chunks--> first token --decode--> retired
+//!              \-- kv-page wait (blocked at queue head) --/
+//! ```
+//!
+//! At retirement the timeline is folded into a [`Timings`] summary that
+//! attributes wall time to queue wait, KV-page wait, prefill compute,
+//! chunked-prefill stall (wall time between admission and prefill
+//! completion not spent computing), and decode. The summary is attached to
+//! every [`crate::engine::Completion`] and surfaced as a `"timings"` object
+//! on the server's completion JSON.
+
+use std::time::Instant;
+
+use crate::jsonx::{num, obj, Value};
+
+fn ms(a: Instant, b: Instant) -> f64 {
+    b.saturating_duration_since(a).as_secs_f64() * 1e3
+}
+
+/// Lifecycle stamps for one request. Created at submission; mutated by the
+/// engine as the request moves queue -> prefill -> decode -> retire.
+#[derive(Debug, Clone)]
+pub struct RequestTimeline {
+    pub submitted: Instant,
+    pub admitted: Option<Instant>,
+    pub prefill_done: Option<Instant>,
+    pub first_token: Option<Instant>,
+    /// Number of prefill chunks executed (1 for a one-shot prefill).
+    pub prefill_chunks: u32,
+    /// Backend compute time spent inside prefill calls, in ms.
+    pub prefill_compute_ms: f64,
+    /// Time spent blocked at the queue head waiting for KV pages, in ms.
+    pub kv_wait_ms: f64,
+    kv_blocked_since: Option<Instant>,
+}
+
+impl RequestTimeline {
+    pub fn new(submitted: Instant) -> RequestTimeline {
+        RequestTimeline {
+            submitted,
+            admitted: None,
+            prefill_done: None,
+            first_token: None,
+            prefill_chunks: 0,
+            prefill_compute_ms: 0.0,
+            kv_wait_ms: 0.0,
+            kv_blocked_since: None,
+        }
+    }
+
+    /// Called each scheduler step while this request sits at the queue head
+    /// unable to reserve KV pages; accrues blocked time incrementally so the
+    /// attribution survives even if the request is later evicted unstarted.
+    pub fn mark_kv_blocked(&mut self, now: Instant) {
+        if let Some(t0) = self.kv_blocked_since {
+            self.kv_wait_ms += ms(t0, now);
+        }
+        self.kv_blocked_since = Some(now);
+    }
+
+    /// Stamp admission (leaving the queue) and close any open KV-wait span.
+    pub fn mark_admitted(&mut self, now: Instant) {
+        if let Some(t0) = self.kv_blocked_since.take() {
+            self.kv_wait_ms += ms(t0, now);
+        }
+        self.admitted = Some(now);
+    }
+
+    /// Record one executed prefill chunk and its backend compute time.
+    pub fn add_prefill_chunk(&mut self, compute_ms: f64) {
+        self.prefill_chunks += 1;
+        self.prefill_compute_ms += compute_ms;
+    }
+
+    pub fn mark_prefill_done(&mut self, now: Instant) {
+        self.prefill_done = Some(now);
+    }
+
+    pub fn mark_first_token(&mut self, now: Instant) {
+        if self.first_token.is_none() {
+            self.first_token = Some(now);
+        }
+    }
+
+    pub fn queue_ms(&self) -> f64 {
+        match self.admitted {
+            Some(t) => ms(self.submitted, t),
+            None => 0.0,
+        }
+    }
+
+    /// Fold the timeline into a retirement summary. Works for partially
+    /// stamped timelines (e.g. a request evicted before admission): missing
+    /// phases report 0.
+    pub fn finalize(&self, retired: Instant) -> Timings {
+        let admitted = self.admitted;
+        let queue_ms = match admitted {
+            Some(t) => ms(self.submitted, t),
+            // Never admitted: the whole life was queue wait.
+            None => ms(self.submitted, retired) - self.kv_wait_ms,
+        };
+        let prefill_wall_ms = match (admitted, self.prefill_done) {
+            (Some(a), Some(d)) => ms(a, d),
+            _ => self.prefill_compute_ms,
+        };
+        let ttft_ms = self.first_token.map(|t| ms(self.submitted, t)).unwrap_or(0.0);
+        let decode_ms = match self.first_token {
+            Some(t) => ms(t, retired),
+            None => 0.0,
+        };
+        Timings {
+            queue_ms: queue_ms.max(0.0),
+            kv_wait_ms: self.kv_wait_ms,
+            prefill_ms: self.prefill_compute_ms,
+            prefill_stall_ms: (prefill_wall_ms - self.prefill_compute_ms).max(0.0),
+            prefill_chunks: self.prefill_chunks,
+            ttft_ms,
+            decode_ms,
+            total_ms: ms(self.submitted, retired),
+        }
+    }
+}
+
+/// Where one request's wall time went, in milliseconds. All phases are
+/// disjoint except `ttft_ms`/`total_ms`, which are end-to-end spans.
+#[derive(Debug, Clone, Default)]
+pub struct Timings {
+    /// Submission to admission (includes `kv_wait_ms`).
+    pub queue_ms: f64,
+    /// Portion of queue wait spent blocked on KV page reservation.
+    pub kv_wait_ms: f64,
+    /// Backend compute inside prefill calls.
+    pub prefill_ms: f64,
+    /// Admission-to-prefill-done wall time not spent in prefill compute
+    /// (chunked prefill interleaving with decode steps).
+    pub prefill_stall_ms: f64,
+    pub prefill_chunks: u32,
+    /// Submission to first emitted token.
+    pub ttft_ms: f64,
+    /// First token to retirement.
+    pub decode_ms: f64,
+    /// Submission to retirement.
+    pub total_ms: f64,
+}
+
+impl Timings {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("queue_ms", num(self.queue_ms)),
+            ("kv_wait_ms", num(self.kv_wait_ms)),
+            ("prefill_ms", num(self.prefill_ms)),
+            ("prefill_stall_ms", num(self.prefill_stall_ms)),
+            ("prefill_chunks", num(self.prefill_chunks as f64)),
+            ("ttft_ms", num(self.ttft_ms)),
+            ("decode_ms", num(self.decode_ms)),
+            ("total_ms", num(self.total_ms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn full_lifecycle_attributes_every_phase() {
+        let t0 = Instant::now();
+        let mut tl = RequestTimeline::new(t0);
+        // Blocked on KV pages for two scheduler passes ~1ms apart.
+        let t1 = t0 + Duration::from_millis(1);
+        let t2 = t0 + Duration::from_millis(2);
+        tl.mark_kv_blocked(t1); // opens the span; no time accrued yet
+        tl.mark_kv_blocked(t2); // accrues 1ms
+        let t3 = t0 + Duration::from_millis(4);
+        tl.mark_admitted(t3); // accrues 2ms more
+        tl.add_prefill_chunk(1.5);
+        tl.add_prefill_chunk(1.5);
+        let t4 = t0 + Duration::from_millis(10);
+        tl.mark_prefill_done(t4);
+        tl.mark_first_token(t4);
+        let t5 = t0 + Duration::from_millis(20);
+        let tm = tl.finalize(t5);
+
+        assert!((tm.queue_ms - 4.0).abs() < 0.5, "queue={}", tm.queue_ms);
+        assert!((tm.kv_wait_ms - 3.0).abs() < 0.5, "kv={}", tm.kv_wait_ms);
+        assert_eq!(tm.prefill_chunks, 2);
+        assert!((tm.prefill_ms - 3.0).abs() < 1e-9);
+        // 6ms wall from admit to prefill-done minus 3ms compute.
+        assert!((tm.prefill_stall_ms - 3.0).abs() < 0.5, "stall={}", tm.prefill_stall_ms);
+        assert!((tm.ttft_ms - 10.0).abs() < 0.5);
+        assert!((tm.decode_ms - 10.0).abs() < 0.5);
+        assert!((tm.total_ms - 20.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn unstarted_eviction_reports_pure_queue_wait() {
+        let t0 = Instant::now();
+        let tl = RequestTimeline::new(t0);
+        let tm = tl.finalize(t0 + Duration::from_millis(5));
+        assert!((tm.queue_ms - 5.0).abs() < 0.5);
+        assert_eq!(tm.prefill_chunks, 0);
+        assert_eq!(tm.ttft_ms, 0.0);
+        assert_eq!(tm.decode_ms, 0.0);
+        assert!((tm.total_ms - 5.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn first_token_stamp_is_idempotent() {
+        let t0 = Instant::now();
+        let mut tl = RequestTimeline::new(t0);
+        let t1 = t0 + Duration::from_millis(1);
+        tl.mark_first_token(t1);
+        tl.mark_first_token(t0 + Duration::from_millis(9));
+        assert_eq!(tl.first_token, Some(t1));
+    }
+
+    #[test]
+    fn timings_json_carries_all_fields() {
+        let tm = Timings {
+            queue_ms: 1.0,
+            kv_wait_ms: 0.5,
+            prefill_ms: 2.0,
+            prefill_stall_ms: 0.25,
+            prefill_chunks: 3,
+            ttft_ms: 3.5,
+            decode_ms: 10.0,
+            total_ms: 13.5,
+        };
+        let j = tm.to_json();
+        for k in [
+            "queue_ms",
+            "kv_wait_ms",
+            "prefill_ms",
+            "prefill_stall_ms",
+            "prefill_chunks",
+            "ttft_ms",
+            "decode_ms",
+            "total_ms",
+        ] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+        assert_eq!(j.usize_of("prefill_chunks").unwrap(), 3);
+    }
+}

@@ -1,0 +1,318 @@
+//! Sparsity and latency SLO drift monitors.
+//!
+//! The paper's serving win rests on activation sparsity staying high and
+//! the predictor's recall staying above its calibration floor (§5.1);
+//! related deployments (Turbo Sparse) treat sparsity as a live serving-cost
+//! contract. These monitors *watch* the signals the metrics layer already
+//! records: each [`SloMonitor`] keeps a rolling window of observations and
+//! runs an ok -> warn -> breach state machine on the windowed mean.
+//!
+//! - `warn` after [`WARN_AFTER`] consecutive out-of-bound evaluations;
+//! - `breach` after [`BREACH_AFTER`] (each *entry* into breach increments
+//!   the monitor's `breaches` counter, exported as `slo_breaches{kind}`);
+//! - a single in-bound evaluation returns the monitor to `ok`.
+//!
+//! Evaluation starts once the window holds [`MIN_WINDOW`] samples so a
+//! single cold-start outlier cannot page anyone.
+
+use std::collections::VecDeque;
+
+use crate::jsonx::{num, obj, s, Value};
+
+/// Rolling window capacity (observations).
+const WINDOW_CAP: usize = 32;
+/// Minimum observations before the state machine evaluates at all.
+const MIN_WINDOW: usize = 4;
+/// Consecutive out-of-bound evaluations before `ok -> warn`.
+const WARN_AFTER: usize = 2;
+/// Consecutive out-of-bound evaluations before `warn -> breach`.
+const BREACH_AFTER: usize = 8;
+
+/// What a monitor watches. The kind fixes the breach direction: recall
+/// breaches *below* its floor; density and p99 latency breach *above*
+/// their ceilings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloKind {
+    /// Live predictor recall must stay at or above the floor.
+    RecallFloor,
+    /// Live enforced-mask density must stay at or below the ceiling.
+    DensityCeil,
+    /// Rolling p99 request latency (ms) must stay at or below the ceiling.
+    P99LatencyMs,
+}
+
+impl SloKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloKind::RecallFloor => "recall",
+            SloKind::DensityCeil => "density",
+            SloKind::P99LatencyMs => "p99_latency_ms",
+        }
+    }
+
+    /// True when values *above* the bound are out of spec.
+    fn upper_bound(self) -> bool {
+        !matches!(self, SloKind::RecallFloor)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SloState {
+    #[default]
+    Ok,
+    Warn,
+    Breach,
+}
+
+impl SloState {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloState::Ok => "ok",
+            SloState::Warn => "warn",
+            SloState::Breach => "breach",
+        }
+    }
+
+    /// Numeric severity for gauge exposition: ok=0, warn=1, breach=2.
+    pub fn code(self) -> u8 {
+        match self {
+            SloState::Ok => 0,
+            SloState::Warn => 1,
+            SloState::Breach => 2,
+        }
+    }
+}
+
+/// One rolling-window watcher. Feed observations with [`observe`]; it
+/// returns `Some((old, new))` on every state transition so the caller can
+/// log it.
+///
+/// [`observe`]: SloMonitor::observe
+#[derive(Debug, Clone)]
+pub struct SloMonitor {
+    kind: SloKind,
+    bound: f64,
+    window: VecDeque<f64>,
+    /// Consecutive out-of-bound evaluations.
+    consec: usize,
+    state: SloState,
+    /// Number of times the monitor *entered* the breach state.
+    breaches: u64,
+}
+
+impl SloMonitor {
+    pub fn new(kind: SloKind, bound: f64) -> SloMonitor {
+        SloMonitor {
+            kind,
+            bound,
+            window: VecDeque::with_capacity(WINDOW_CAP),
+            consec: 0,
+            state: SloState::Ok,
+            breaches: 0,
+        }
+    }
+
+    pub fn kind(&self) -> SloKind {
+        self.kind
+    }
+
+    pub fn bound(&self) -> f64 {
+        self.bound
+    }
+
+    pub fn state(&self) -> SloState {
+        self.state
+    }
+
+    pub fn breaches(&self) -> u64 {
+        self.breaches
+    }
+
+    /// Rolling-window mean of the observations seen so far (0.0 if none).
+    pub fn windowed(&self) -> f64 {
+        if self.window.is_empty() {
+            return 0.0;
+        }
+        self.window.iter().sum::<f64>() / self.window.len() as f64
+    }
+
+    /// Push one observation and re-evaluate. Returns the `(old, new)` state
+    /// pair when the observation caused a transition.
+    pub fn observe(&mut self, v: f64) -> Option<(SloState, SloState)> {
+        if self.window.len() == WINDOW_CAP {
+            self.window.pop_front();
+        }
+        self.window.push_back(v);
+        if self.window.len() < MIN_WINDOW {
+            return None;
+        }
+        let m = self.windowed();
+        let out = if self.kind.upper_bound() {
+            m > self.bound
+        } else {
+            m < self.bound
+        };
+        self.consec = if out { self.consec + 1 } else { 0 };
+        let next = if self.consec >= BREACH_AFTER {
+            SloState::Breach
+        } else if self.consec >= WARN_AFTER {
+            SloState::Warn
+        } else if self.consec == 0 {
+            SloState::Ok
+        } else {
+            // 1..WARN_AFTER consecutive misses: hold the current state.
+            self.state
+        };
+        if next == self.state {
+            return None;
+        }
+        let old = self.state;
+        self.state = next;
+        if next == SloState::Breach {
+            self.breaches += 1;
+        }
+        Some((old, next))
+    }
+
+    /// Clear window, state, and counters (metrics reset).
+    pub fn reset(&mut self) {
+        self.window.clear();
+        self.consec = 0;
+        self.state = SloState::Ok;
+        self.breaches = 0;
+    }
+
+    pub fn snapshot(&self) -> SloStatus {
+        SloStatus {
+            kind: self.kind.name(),
+            state: self.state,
+            bound: self.bound,
+            windowed: self.windowed(),
+            n: self.window.len(),
+            breaches: self.breaches,
+        }
+    }
+}
+
+/// Point-in-time copy of a monitor, embedded in the metrics snapshot.
+#[derive(Debug, Clone)]
+pub struct SloStatus {
+    pub kind: &'static str,
+    pub state: SloState,
+    pub bound: f64,
+    /// Rolling-window mean at snapshot time.
+    pub windowed: f64,
+    /// Observations currently in the window.
+    pub n: usize,
+    pub breaches: u64,
+}
+
+impl SloStatus {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("kind", s(self.kind)),
+            ("state", s(self.state.name())),
+            ("bound", num(self.bound)),
+            ("windowed", num(self.windowed)),
+            ("n", num(self.n as f64)),
+            ("breaches", num(self.breaches as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stays_ok_while_in_bounds() {
+        let mut m = SloMonitor::new(SloKind::RecallFloor, 0.9);
+        for _ in 0..50 {
+            assert!(m.observe(0.97).is_none());
+        }
+        assert_eq!(m.state(), SloState::Ok);
+        assert_eq!(m.breaches(), 0);
+    }
+
+    #[test]
+    fn walks_ok_warn_breach_and_counts_entries() {
+        let mut m = SloMonitor::new(SloKind::DensityCeil, 0.2);
+        let mut transitions = Vec::new();
+        // 0.5 > 0.2 every evaluation once the window fills.
+        for _ in 0..20 {
+            if let Some(t) = m.observe(0.5) {
+                transitions.push(t);
+            }
+        }
+        assert_eq!(
+            transitions,
+            vec![
+                (SloState::Ok, SloState::Warn),
+                (SloState::Warn, SloState::Breach)
+            ]
+        );
+        assert_eq!(m.state(), SloState::Breach);
+        assert_eq!(m.breaches(), 1);
+    }
+
+    #[test]
+    fn no_evaluation_before_min_window() {
+        let mut m = SloMonitor::new(SloKind::P99LatencyMs, 1.0);
+        for _ in 0..MIN_WINDOW - 1 {
+            assert!(m.observe(100.0).is_none());
+            assert_eq!(m.state(), SloState::Ok);
+        }
+    }
+
+    #[test]
+    fn recovery_returns_to_ok_and_rebreaching_increments_again() {
+        let mut m = SloMonitor::new(SloKind::RecallFloor, 0.9);
+        for _ in 0..20 {
+            m.observe(0.1);
+        }
+        assert_eq!(m.state(), SloState::Breach);
+        assert_eq!(m.breaches(), 1);
+        // Flood the window with healthy values until the mean recovers.
+        let mut recovered = None;
+        for _ in 0..WINDOW_CAP {
+            if let Some(t) = m.observe(1.0) {
+                recovered = Some(t);
+                break;
+            }
+        }
+        assert_eq!(recovered, Some((SloState::Breach, SloState::Ok)));
+        // Drive it back out of bounds: a second breach entry is counted.
+        for _ in 0..WINDOW_CAP + BREACH_AFTER + MIN_WINDOW {
+            m.observe(0.0);
+        }
+        assert_eq!(m.state(), SloState::Breach);
+        assert_eq!(m.breaches(), 2);
+    }
+
+    #[test]
+    fn reset_clears_state_and_counters() {
+        let mut m = SloMonitor::new(SloKind::DensityCeil, 0.1);
+        for _ in 0..20 {
+            m.observe(0.9);
+        }
+        assert_eq!(m.state(), SloState::Breach);
+        m.reset();
+        assert_eq!(m.state(), SloState::Ok);
+        assert_eq!(m.breaches(), 0);
+        assert_eq!(m.snapshot().n, 0);
+    }
+
+    #[test]
+    fn snapshot_json_is_stable() {
+        let mut m = SloMonitor::new(SloKind::P99LatencyMs, 50.0);
+        for _ in 0..8 {
+            m.observe(10.0);
+        }
+        let j = m.snapshot().to_json();
+        assert_eq!(j.str_of("kind").unwrap(), "p99_latency_ms");
+        assert_eq!(j.str_of("state").unwrap(), "ok");
+        assert!((j.f64_of("bound").unwrap() - 50.0).abs() < 1e-9);
+        assert!((j.f64_of("windowed").unwrap() - 10.0).abs() < 1e-9);
+        assert_eq!(j.usize_of("breaches").unwrap(), 0);
+    }
+}

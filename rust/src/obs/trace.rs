@@ -15,10 +15,14 @@
 //!   so the sink is `Sync` and every event carries a `tid`.
 
 use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::jsonx::{num, obj, s, Value};
+
+/// Sentinel for "span not attributed to any request".
+pub const NO_REQ: u64 = u64::MAX;
 
 /// The instrumented phases of the serving stack. `name()` strings are part
 /// of the trace schema (`tools/trace_summary.py --check` rejects unknown
@@ -41,10 +45,16 @@ pub enum Phase {
     Verify,
     /// one speculative round's draft loop (γ draft decodes + sampling)
     DraftStep,
+    /// a request's time in the admission queue (submitted → admitted)
+    QueueWait,
+    /// the slice of queue wait spent blocked on KV page reservation
+    KvWait,
+    /// a request's full admitted lifetime (admitted → retired)
+    Request,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 8] = [
+    pub const ALL: [Phase; 11] = [
         Phase::Prefill,
         Phase::MaskPlan,
         Phase::DecodeStep,
@@ -53,6 +63,9 @@ impl Phase {
         Phase::FfnMatvec,
         Phase::Verify,
         Phase::DraftStep,
+        Phase::QueueWait,
+        Phase::KvWait,
+        Phase::Request,
     ];
 
     pub fn name(self) -> &'static str {
@@ -65,6 +78,9 @@ impl Phase {
             Phase::FfnMatvec => "ffn-matvec",
             Phase::Verify => "verify",
             Phase::DraftStep => "draft-step",
+            Phase::QueueWait => "queue-wait",
+            Phase::KvWait => "kv-wait",
+            Phase::Request => "request",
         }
     }
 }
@@ -77,6 +93,8 @@ pub struct TraceEvent {
     pub start_ns: u64,
     pub dur_ns: u64,
     pub tid: u32,
+    /// Request id the span belongs to, or [`NO_REQ`] for batch-wide spans.
+    pub req: u64,
 }
 
 struct Ring {
@@ -91,6 +109,11 @@ pub struct TraceSink {
     epoch: Instant,
     cap: usize,
     ring: Mutex<Ring>,
+    /// Ambient request id: spans recorded while this is set (e.g. backend
+    /// prefill spans inside a [`req_scope`](TraceSink::req_scope)) are
+    /// tagged with it, giving `--trace` dumps per-request correlation
+    /// without threading an id through every backend signature.
+    current_req: AtomicU64,
 }
 
 impl TraceSink {
@@ -106,17 +129,35 @@ impl TraceSink {
                 next: 0,
                 dropped: 0,
             }),
+            current_req: AtomicU64::new(NO_REQ),
         }
     }
 
+    /// Tag spans recorded until the guard drops with request id `req`.
+    /// Nested scopes restore the previous id on drop. Intended for the
+    /// scheduler thread around per-request backend calls (prefill /
+    /// prefill_chunk); batch-wide spans stay untagged.
+    pub fn req_scope(&self, req: u64) -> ReqScope<'_> {
+        let prev = self.current_req.swap(req, Ordering::Relaxed);
+        ReqScope { sink: self, prev }
+    }
+
     fn record(&self, phase: Phase, start: Instant, tid: u32) {
-        let dur_ns = start.elapsed().as_nanos() as u64;
-        let start_ns = start.saturating_duration_since(self.epoch).as_nanos() as u64;
+        let dur = start.elapsed();
+        let req = self.current_req.load(Ordering::Relaxed);
+        self.record_at(phase, start, dur, tid, req);
+    }
+
+    /// Record a span retroactively with explicit start/duration and request
+    /// attribution — used for lifecycle spans (queue-wait, kv-wait,
+    /// request) whose start predates the recording call.
+    pub fn record_at(&self, phase: Phase, start: Instant, dur: Duration, tid: u32, req: u64) {
         let ev = TraceEvent {
             phase,
-            start_ns,
-            dur_ns,
+            start_ns: start.saturating_duration_since(self.epoch).as_nanos() as u64,
+            dur_ns: dur.as_nanos() as u64,
             tid,
+            req,
         };
         let mut ring = self.ring.lock().unwrap();
         if ring.buf.len() < self.cap {
@@ -185,15 +226,18 @@ impl TraceSink {
     /// `[...]` wrap; `tools/trace_summary.py` reads it directly.
     pub fn dump_jsonl<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
         for e in self.events() {
-            let line = obj(vec![
+            let mut fields = vec![
                 ("name", s(e.phase.name())),
                 ("ph", s("X")),
                 ("ts", num(e.start_ns as f64 / 1e3)),
                 ("dur", num(e.dur_ns as f64 / 1e3)),
                 ("pid", num(0.0)),
                 ("tid", num(e.tid as f64)),
-            ])
-            .to_json();
+            ];
+            if e.req != NO_REQ {
+                fields.push(("args", obj(vec![("req", num(e.req as f64))])));
+            }
+            let line = obj(fields).to_json();
             writeln!(w, "{line}")?;
         }
         Ok(())
@@ -220,6 +264,18 @@ impl TraceSink {
             .lines()
             .map(|l| crate::jsonx::parse(l).expect("own output parses"))
             .collect()
+    }
+}
+
+/// RAII guard restoring the sink's ambient request id on drop.
+pub struct ReqScope<'a> {
+    sink: &'a TraceSink,
+    prev: u64,
+}
+
+impl Drop for ReqScope<'_> {
+    fn drop(&mut self) {
+        self.sink.current_req.store(self.prev, Ordering::Relaxed);
     }
 }
 
@@ -331,7 +387,10 @@ mod tests {
                 "ffn-gather",
                 "ffn-matvec",
                 "verify",
-                "draft-step"
+                "draft-step",
+                "queue-wait",
+                "kv-wait",
+                "request"
             ],
             "phase names are part of the trace schema"
         );
@@ -340,7 +399,63 @@ mod tests {
             assert!(v.get("ts").and_then(|x| x.as_f64()).unwrap() >= 0.0);
             assert!(v.get("dur").and_then(|x| x.as_f64()).unwrap() >= 0.0);
             assert!(v.get("pid").is_some() && v.get("tid").is_some());
+            // Untagged spans carry no args object at all.
+            assert!(v.get("args").is_none());
         }
+    }
+
+    #[test]
+    fn req_scope_tags_spans_and_restores_on_drop() {
+        let sink = TraceSink::new(16);
+        {
+            let _g = sink.req_scope(7);
+            let _sp = span(Some(&sink), Phase::Prefill);
+        }
+        let _sp = span(Some(&sink), Phase::DecodeStep);
+        drop(_sp);
+        let ev = sink.events();
+        assert_eq!(ev.len(), 2);
+        let prefill = ev.iter().find(|e| e.phase == Phase::Prefill).unwrap();
+        let decode = ev.iter().find(|e| e.phase == Phase::DecodeStep).unwrap();
+        assert_eq!(prefill.req, 7);
+        assert_eq!(decode.req, NO_REQ, "scope must not leak past its drop");
+
+        let values = sink.dump_values();
+        let tagged = values
+            .iter()
+            .find(|v| v.get("name").and_then(|n| n.as_str()) == Some("prefill"))
+            .unwrap();
+        let req = tagged.get("args").and_then(|a| a.get("req")).unwrap();
+        assert_eq!(req.as_f64(), Some(7.0));
+    }
+
+    #[test]
+    fn nested_req_scopes_restore_the_outer_id() {
+        let sink = TraceSink::new(16);
+        let _outer = sink.req_scope(1);
+        {
+            let _inner = sink.req_scope(2);
+            let _sp = span(Some(&sink), Phase::KvWait);
+        }
+        let _sp = span(Some(&sink), Phase::QueueWait);
+        drop(_sp);
+        let ev = sink.events();
+        assert_eq!(ev.iter().find(|e| e.phase == Phase::KvWait).unwrap().req, 2);
+        assert_eq!(ev.iter().find(|e| e.phase == Phase::QueueWait).unwrap().req, 1);
+    }
+
+    #[test]
+    fn record_at_backdates_lifecycle_spans() {
+        let sink = TraceSink::new(16);
+        std::thread::sleep(Duration::from_millis(1));
+        let start = Instant::now();
+        sink.record_at(Phase::Request, start, Duration::from_millis(5), 42, 9);
+        let e = sink.events()[0];
+        assert_eq!(e.phase, Phase::Request);
+        assert_eq!(e.req, 9);
+        assert_eq!(e.tid, 42);
+        assert!(e.start_ns >= 1_000_000, "start is relative to sink epoch");
+        assert_eq!(e.dur_ns, 5_000_000);
     }
 
     #[test]

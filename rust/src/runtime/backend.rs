@@ -282,6 +282,12 @@ pub trait ExecBackend {
     /// Short backend name for logs/metrics ("host" / "xla").
     fn kind(&self) -> &'static str;
 
+    /// Weight-storage mode for build-info ("f32" unless the backend
+    /// quantizes).
+    fn quant_name(&self) -> &'static str {
+        "f32"
+    }
+
     /// Model identifier (artifact id or checkpoint-derived name).
     fn model_id(&self) -> &str;
 

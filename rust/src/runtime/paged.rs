@@ -127,6 +127,13 @@ impl KvPool {
         self.hwm
     }
 
+    /// Re-anchor the high-water mark to the *current* occupancy, so a
+    /// metrics reset doesn't resurrect a pre-reset peak on the next step's
+    /// gauge refresh.
+    pub fn reset_high_water(&mut self) {
+        self.hwm = self.pages_in_use();
+    }
+
     pub fn size_bytes(&self) -> usize {
         self.data.len() * std::mem::size_of::<f32>()
     }

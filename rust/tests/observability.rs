@@ -1,0 +1,304 @@
+//! Engine-level request-lifecycle observability (ISSUE 9): completion
+//! timings attribution, request-id-tagged trace spans, SLO drift monitors
+//! and the engine-side metrics reset. Host backend only — no PJRT.
+
+use std::sync::Arc;
+
+use rsb::engine::{Completion, Engine, EngineConfig, NeuronPolicy, PagedKvCfg};
+use rsb::hostexec::HostBackend;
+use rsb::obs::{Phase, TraceSink};
+use rsb::runtime::artifact::ModelCfg;
+use rsb::runtime::Tensor;
+use rsb::util::rng::Rng;
+
+fn cfg() -> ModelCfg {
+    ModelCfg {
+        size: "t".into(),
+        arch: "opt".into(),
+        act: "relu".into(),
+        stage: 0,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        vocab: 40,
+        max_seq: 20,
+        shift: 1.0,
+        ffn_act: "relu".into(),
+        gated: false,
+        parallel_block: false,
+        has_bias: true,
+    }
+}
+
+fn engine(decode_b: usize, ecfg: EngineConfig) -> Engine {
+    let be = HostBackend::random(cfg(), 5, decode_b, 6).unwrap();
+    Engine::new(Box::new(be), ecfg).unwrap()
+}
+
+fn run_to_completion(eng: &mut Engine) -> Vec<Completion> {
+    let mut done = Vec::new();
+    for _ in 0..10_000 {
+        if !eng.has_work() {
+            return done;
+        }
+        done.extend(eng.step().unwrap());
+    }
+    panic!("engine did not drain in 10k steps");
+}
+
+/// Every completion carries a lifecycle attribution whose pieces are
+/// internally consistent: non-negative, prefill compute below the wall
+/// window it ran in, and queue + ttft-to-retire roughly covering total.
+#[test]
+fn completion_timings_attribute_the_request_lifecycle() {
+    let mut eng = engine(2, EngineConfig::default());
+    for (prompt, max_new) in [(vec![3u32, 4], 6usize), (vec![7, 8, 9, 2, 5], 4), (vec![1], 8)] {
+        eng.submit(prompt, max_new);
+    }
+    let done = run_to_completion(&mut eng);
+    assert_eq!(done.len(), 3);
+    for c in &done {
+        let t = &c.timings;
+        assert!(t.total_ms > 0.0, "req {}: empty total", c.id);
+        assert!(t.ttft_ms > 0.0, "req {}: empty ttft", c.id);
+        assert!(t.prefill_ms > 0.0, "req {}: prefill compute missing", c.id);
+        assert!(t.queue_ms >= 0.0 && t.kv_wait_ms >= 0.0);
+        assert!(t.prefill_stall_ms >= 0.0 && t.decode_ms >= 0.0);
+        assert_eq!(t.kv_wait_ms, 0.0, "dense KV cannot block admission");
+        assert_eq!(t.prefill_chunks, 1, "one-shot prefill is one chunk");
+        // ttft splits total: what came before the first token, plus decode
+        assert!(
+            t.ttft_ms <= t.total_ms + 0.1,
+            "req {}: ttft {} > total {}",
+            c.id,
+            t.ttft_ms,
+            t.total_ms
+        );
+        assert!(
+            (t.ttft_ms + t.decode_ms - t.total_ms).abs() < 0.5,
+            "req {}: ttft {} + decode {} should cover total {}",
+            c.id,
+            t.ttft_ms,
+            t.decode_ms,
+            t.total_ms
+        );
+        // the sketch saw every completion
+    }
+    assert_eq!(eng.metrics.request_latency_ms.len(), 3);
+    assert!(eng.metrics.request_latency_ms.percentile(50.0) > 0.0);
+}
+
+/// Chunked prefill reports its chunk count in the timings and stall time
+/// stays non-negative (wall >= compute inside the admit->prefill window).
+#[test]
+fn chunked_prefill_timings_count_chunks() {
+    let mut eng = engine(
+        1,
+        EngineConfig {
+            prefill_chunk: 2,
+            ..EngineConfig::default()
+        },
+    );
+    eng.submit(vec![7, 8, 9, 2, 5], 3);
+    let done = run_to_completion(&mut eng);
+    assert_eq!(done.len(), 1);
+    let t = &done[0].timings;
+    assert_eq!(t.prefill_chunks, 3, "5 prompt tokens in chunks of 2");
+    assert!(t.prefill_ms > 0.0);
+    assert!(t.prefill_stall_ms >= 0.0);
+}
+
+/// With a trace sink attached, every request contributes a tagged
+/// `request` lifecycle span plus a `queue-wait` span, and the tags
+/// round-trip into the Chrome-trace dump as `args.req`.
+#[test]
+fn trace_carries_request_id_correlation() {
+    let sink = Arc::new(TraceSink::new(1 << 12));
+    let mut eng = engine(2, EngineConfig::default());
+    eng.set_trace(Some(sink.clone()));
+    let ids: Vec<u64> = (0..3)
+        .map(|i| eng.submit(vec![3 + i as u32, 4], 4))
+        .collect();
+    let done = run_to_completion(&mut eng);
+    assert_eq!(done.len(), 3);
+
+    let events = sink.events();
+    let req_spans: Vec<_> = events.iter().filter(|e| e.phase == Phase::Request).collect();
+    assert_eq!(req_spans.len(), 3, "one lifecycle span per request");
+    let mut tagged: Vec<u64> = req_spans.iter().map(|e| e.req).collect();
+    tagged.sort_unstable();
+    let mut want = ids.clone();
+    want.sort_unstable();
+    assert_eq!(tagged, want, "lifecycle spans carry the engine request ids");
+    assert_eq!(
+        events.iter().filter(|e| e.phase == Phase::QueueWait).count(),
+        3,
+        "one queue-wait span per admission"
+    );
+    // per-request backend work (prefill) inherits the ambient tag
+    assert!(
+        events
+            .iter()
+            .any(|e| e.phase == Phase::Prefill && e.req != rsb::obs::trace::NO_REQ),
+        "prefill spans must be request-tagged"
+    );
+    // batched decode steps stay untagged (they serve every slot at once)
+    assert!(
+        events
+            .iter()
+            .filter(|e| e.phase == Phase::DecodeStep)
+            .all(|e| e.req == rsb::obs::trace::NO_REQ),
+        "batched decode work cannot be attributed to one request"
+    );
+}
+
+/// A density SLO with an impossible ceiling must walk ok -> warn -> breach
+/// under sustained enforced traffic, count the breach, and recover state
+/// via the engine-level reset.
+#[test]
+fn density_slo_breaches_under_sustained_violation_and_resets() {
+    // static half-dense mask enforced from step 0: every enforced row's
+    // density lands far above the 1e-3 ceiling
+    let mut rng = Rng::new(11);
+    let bits: Vec<bool> = (0..2 * 32).map(|_| rng.chance(0.5)).collect();
+    let mut eng = engine(
+        1,
+        EngineConfig {
+            policy: NeuronPolicy::Static(Tensor::mask_from_bits(vec![2, 32], &bits).unwrap()),
+            slo_density_ceil: Some(1e-3),
+            ..EngineConfig::default()
+        },
+    );
+    eng.submit(vec![3, 4], 16);
+    let done = run_to_completion(&mut eng);
+    assert_eq!(done.len(), 1);
+
+    let slo = &eng.metrics.slo;
+    assert_eq!(slo.len(), 1);
+    assert_eq!(slo[0].kind, "density");
+    assert_eq!(slo[0].state.name(), "breach", "16 enforced steps over a 1e-3 ceiling");
+    assert!(slo[0].breaches >= 1);
+    assert!(slo[0].windowed > 1e-3);
+
+    // engine-level reset clears the monitor but keeps it configured
+    eng.reset_metrics();
+    assert_eq!(eng.metrics.slo.len(), 1);
+    assert_eq!(eng.metrics.slo[0].state.name(), "ok");
+    assert_eq!(eng.metrics.slo[0].breaches, 0);
+    assert_eq!(eng.metrics.slo[0].n, 0);
+}
+
+/// A generous ceiling never leaves Ok — the monitor only reacts to
+/// sustained violation, not to being configured.
+#[test]
+fn generous_slo_stays_ok() {
+    let mut rng = Rng::new(11);
+    let bits: Vec<bool> = (0..2 * 32).map(|_| rng.chance(0.4)).collect();
+    let mut eng = engine(
+        1,
+        EngineConfig {
+            policy: NeuronPolicy::Static(Tensor::mask_from_bits(vec![2, 32], &bits).unwrap()),
+            slo_density_ceil: Some(0.99),
+            slo_p99_ms: Some(60_000.0),
+            ..EngineConfig::default()
+        },
+    );
+    eng.submit(vec![3, 4], 16);
+    run_to_completion(&mut eng);
+    for s in &eng.metrics.slo {
+        assert_eq!(s.state.name(), "ok", "{} flapped without violation", s.kind);
+        assert_eq!(s.breaches, 0);
+    }
+}
+
+/// `reset_metrics` on a paged engine re-anchors the pool high-water mark:
+/// the next step's gauge refresh must not resurrect the pre-reset peak.
+#[test]
+fn reset_reanchors_paged_high_water() {
+    let mut eng = engine(
+        2,
+        EngineConfig {
+            paged_kv: Some(PagedKvCfg {
+                page_size: 4,
+                n_pages: 10,
+            }),
+            ..EngineConfig::default()
+        },
+    );
+    eng.submit(vec![3, 4, 5, 6], 8);
+    eng.submit(vec![7, 8, 9], 8);
+    run_to_completion(&mut eng);
+    assert!(eng.metrics.kv_pages_high_water > 0);
+    eng.reset_metrics();
+    assert_eq!(eng.metrics.kv_pages_high_water, 0);
+    assert_eq!(eng.metrics.kv_pages_total, 10, "geometry survives the reset");
+    // drive more work: the gauge re-grows from the new epoch only
+    eng.submit(vec![1], 2);
+    run_to_completion(&mut eng);
+    assert!(eng.metrics.kv_pages_high_water > 0);
+    assert!(eng.metrics.kv_pages_in_use == 0);
+}
+
+/// The build-info block identifies the running configuration.
+#[test]
+fn build_info_names_backend_and_quant() {
+    let eng = engine(1, EngineConfig::default());
+    let bi = eng.build_info();
+    assert_eq!(bi.str_of("backend").unwrap(), "host");
+    assert_eq!(bi.str_of("quant").unwrap(), "f32");
+    assert_eq!(bi.str_of("version").unwrap(), env!("CARGO_PKG_VERSION"));
+    assert!(!bi.str_of("simd").unwrap().is_empty());
+    assert!(bi.f64_of("uptime_seconds").unwrap() >= 0.0);
+}
+
+/// The standalone Prometheus rendering of a live engine passes the same
+/// structural expectations the server-side test pins.
+#[test]
+fn prometheus_text_covers_a_live_engine() {
+    let mut eng = engine(1, EngineConfig::default());
+    eng.submit(vec![3, 4], 4);
+    run_to_completion(&mut eng);
+    let text = eng.prometheus_text();
+    assert!(text.contains("# TYPE pallas_tokens_generated_total counter"));
+    assert!(text.contains("pallas_tokens_generated_total 4\n"));
+    assert!(text.contains("# TYPE pallas_request_latency_ms histogram"));
+    assert!(text.contains("_bucket{le=\"+Inf\"}"));
+    assert!(text.contains("pallas_build_info{"));
+    assert!(text.contains("pallas_uptime_seconds"));
+    for line in text.lines() {
+        assert!(
+            line.is_empty() || line.starts_with('#') || line.starts_with("pallas_"),
+            "non-pallas line: {line:?}"
+        );
+    }
+}
+
+/// Submitting requests faster than a tiny page pool can host them forces
+/// the queue head to wait on pages — the wait shows up in `kv_wait_ms`,
+/// not in generic queue time.
+#[test]
+fn kv_page_wait_is_attributed_when_the_pool_saturates() {
+    let mut eng = engine(
+        2,
+        EngineConfig {
+            // pages for ~one request at a time: the second must wait for
+            // the first to retire and free its reservation
+            paged_kv: Some(PagedKvCfg {
+                page_size: 4,
+                n_pages: 4,
+            }),
+            ..EngineConfig::default()
+        },
+    );
+    eng.submit(vec![3, 4], 8);
+    let second = eng.submit(vec![7, 8], 8);
+    let done = run_to_completion(&mut eng);
+    assert_eq!(done.len(), 2);
+    let waited = done.iter().find(|c| c.id == second).unwrap();
+    assert!(
+        waited.timings.kv_wait_ms > 0.0,
+        "the blocked request must attribute its page wait"
+    );
+    assert!(waited.timings.queue_ms >= waited.timings.kv_wait_ms);
+}

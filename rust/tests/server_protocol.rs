@@ -14,7 +14,16 @@ use rsb::runtime::artifact::ModelCfg;
 use rsb::runtime::Tensor;
 use rsb::util::rng::Rng;
 
+/// Honor `PALLAS_LOG` in the test process (main.rs does this for the
+/// binary): CI runs this suite with `PALLAS_LOG=debug,json` and validates
+/// the captured stderr with tools/log_check.py.
+fn init_logs() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(rsb::obs::log::init_from_env);
+}
+
 fn cfg() -> ModelCfg {
+    init_logs();
     ModelCfg {
         size: "t".into(),
         arch: "opt".into(),
@@ -401,4 +410,155 @@ fn queue_cap_rejects_burst_with_backpressure_error() {
         engine.usize_of("backpressure_rejections").unwrap(),
         rejected
     );
+}
+
+/// ISSUE 9: `{"cmd":"reset"}` must zero the serving gauges introduced with
+/// continuous batching — `deadline_evictions`, the KV-page high-water mark
+/// (re-anchored, not resurrected from the pool on the next step), the
+/// `admissions_per_step` histogram — and the latency sketches, while the
+/// pool geometry gauge (`kv_pages_total`) survives.
+#[test]
+fn reset_zeroes_serving_gauges_and_sketches() {
+    use std::sync::mpsc;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let bpe = Arc::new(rsb::tokenizer::Bpe::train("ab ab ab ba baab abba", 24).unwrap());
+    let bpe_srv = bpe.clone();
+    let server = std::thread::spawn(move || {
+        // heavy enough that 48 tokens cannot finish inside a 1 ms deadline,
+        // paged so the high-water gauge has something to resurrect
+        let mut c = cfg();
+        c.d_model = 64;
+        c.n_heads = 4;
+        c.d_ff = 256;
+        c.max_seq = 64;
+        let backend = HostBackend::random(c, 0, 2, 6).unwrap();
+        let ecfg = EngineConfig {
+            paged_kv: Some(rsb::engine::PagedKvCfg {
+                page_size: 16,
+                n_pages: 8,
+            }),
+            ..EngineConfig::default()
+        };
+        let engine = Engine::new(Box::new(backend), ecfg).unwrap();
+        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(2), Some(ready_tx), 0)
+    });
+    let addr = ready_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("server start");
+    let mut client = rsb::server::Client::connect(addr).unwrap();
+
+    // a deadline eviction populates every gauge the reset must clear
+    client
+        .send_line(
+            "{\"id\": 1, \"prompt\": \"ab ba\", \"max_tokens\": 48, \"deadline_ms\": 1}",
+        )
+        .unwrap();
+    let resp = client.recv().unwrap();
+    assert_eq!(resp.str_of("finish").unwrap(), "deadline");
+    let snap = client.cmd("metrics").unwrap();
+    let engine = snap.req("engine").unwrap();
+    assert_eq!(engine.usize_of("deadline_evictions").unwrap(), 1);
+    assert!(engine.usize_of("kv_pages_high_water").unwrap() > 0);
+    assert!(!engine
+        .req("admissions_per_step")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .is_empty());
+
+    // reset, then verify the pre-PR-7 gauges did NOT survive it
+    assert!(client.cmd("reset").unwrap().bool_of("ok").unwrap());
+    let snap = client.cmd("metrics").unwrap();
+    let engine = snap.req("engine").unwrap();
+    assert_eq!(engine.usize_of("deadline_evictions").unwrap(), 0);
+    assert_eq!(
+        engine.usize_of("kv_pages_high_water").unwrap(),
+        0,
+        "the pool's pre-reset peak leaked back into the gauge"
+    );
+    assert!(engine
+        .req("admissions_per_step")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .is_empty());
+    // the latency sketches restarted too
+    assert_eq!(
+        engine
+            .req("time_to_first_token_ms")
+            .unwrap()
+            .usize_of("n")
+            .unwrap(),
+        0
+    );
+    // geometry survives: the pool is still 8 pages
+    assert_eq!(engine.usize_of("kv_pages_total").unwrap(), 8);
+
+    // the engine still serves after the reset
+    let resp = client.request(2, "ab", 2, 0.0).unwrap();
+    assert_eq!(resp.str_of("finish").unwrap(), "maxtokens");
+    assert_eq!(server.join().unwrap().unwrap(), 2);
+}
+
+/// ISSUE 9: `{"cmd":"metrics_prom"}` returns the Prometheus text
+/// exposition (with build-info) and completions carry the per-request
+/// `timings` attribution object.
+#[test]
+fn metrics_prom_build_info_and_completion_timings() {
+    use std::sync::mpsc;
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let bpe = Arc::new(rsb::tokenizer::Bpe::train("ab ab ab ba baab abba", 24).unwrap());
+    let bpe_srv = bpe.clone();
+    let server = std::thread::spawn(move || {
+        let backend = HostBackend::random(cfg(), 0, 2, 6).unwrap();
+        let engine = Engine::new(Box::new(backend), EngineConfig::default()).unwrap();
+        rsb::server::serve(engine, bpe_srv, "127.0.0.1:0", Some(1), Some(ready_tx), 0)
+    });
+    let addr = ready_rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("server start");
+    let mut client = rsb::server::Client::connect(addr).unwrap();
+
+    // the completion carries the lifecycle attribution
+    let resp = client.request(1, "ab ba", 4, 0.0).unwrap();
+    let timings = resp.req("timings").expect("completion timings");
+    assert!(timings.f64_of("total_ms").unwrap() > 0.0);
+    assert!(timings.f64_of("ttft_ms").unwrap() > 0.0);
+    assert!(timings.f64_of("prefill_ms").unwrap() > 0.0);
+    assert!(timings.f64_of("queue_ms").unwrap() >= 0.0);
+    assert!(timings.f64_of("decode_ms").unwrap() >= 0.0);
+    assert_eq!(timings.f64_of("kv_wait_ms").unwrap(), 0.0, "dense KV never blocks");
+
+    // build_info rides the JSON snapshot
+    let snap = client.cmd("metrics").unwrap();
+    let bi = snap.req("build_info").unwrap();
+    assert_eq!(bi.str_of("backend").unwrap(), "host");
+    assert_eq!(bi.str_of("quant").unwrap(), "f32");
+    assert!(!bi.str_of("version").unwrap().is_empty());
+    assert!(!bi.str_of("simd").unwrap().is_empty());
+    assert!(bi.f64_of("uptime_seconds").unwrap() >= 0.0);
+
+    // metrics_prom: exposition body with counters, histograms, build info
+    let prom = client.cmd("metrics_prom").unwrap();
+    assert!(prom.bool_of("ok").unwrap());
+    assert_eq!(
+        prom.str_of("content_type").unwrap(),
+        "text/plain; version=0.0.4"
+    );
+    let body = prom.str_of("body").unwrap();
+    assert!(body.contains("# TYPE pallas_tokens_generated_total counter"));
+    assert!(body.contains("pallas_tokens_generated_total 4\n"));
+    assert!(body.contains("pallas_build_info{"));
+    assert!(body.contains("# TYPE pallas_request_latency_ms histogram"));
+    assert!(body.contains("_bucket{le="));
+    assert!(body.contains("pallas_server_served_total 1\n"));
+    // every non-comment line is pallas_-prefixed (the scrape contract
+    // tools/prom_check.py enforces in CI)
+    for line in body.lines() {
+        assert!(
+            line.is_empty() || line.starts_with('#') || line.starts_with("pallas_"),
+            "non-pallas line in exposition: {line:?}"
+        );
+    }
+    assert_eq!(server.join().unwrap().unwrap(), 1);
 }

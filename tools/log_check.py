@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Check a captured stderr stream for JSON-log discipline.
+
+Usage: log_check.py <file>   # or '-' for stdin
+
+With `PALLAS_LOG=<level>,json` every log line the crate emits must be a
+single JSON object `{"level", "target", "msg"}`. This tool scans a captured
+stderr stream (which may interleave non-log output, e.g. cargo/test
+harness chatter):
+
+  - every line starting with `{` must parse as JSON and carry a string
+    `level` (error|warn|info|debug), `target` and `msg`;
+  - a line starting with `[` is an error: that is the crate's plain-text
+    log format leaking through while JSON mode is on;
+  - anything else is ignored (test-harness output);
+  - at least one valid JSON log line must be present, otherwise the
+    capture missed the stream entirely.
+
+Exit 0 when clean, 1 otherwise.
+"""
+
+import json
+import sys
+
+LEVELS = {"error", "warn", "info", "debug"}
+
+
+def check(lines):
+    errors = []
+    ok_lines = 0
+    for lineno, line in enumerate(lines, 1):
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if stripped.startswith("["):
+            errors.append(
+                f"line {lineno}: plain-text log leaked through JSON mode: {stripped!r}"
+            )
+            continue
+        if not stripped.startswith("{"):
+            continue
+        try:
+            v = json.loads(stripped)
+        except json.JSONDecodeError as e:
+            errors.append(f"line {lineno}: unparseable JSON log line ({e})")
+            continue
+        if not isinstance(v, dict):
+            errors.append(f"line {lineno}: JSON log line is not an object")
+            continue
+        for key in ("level", "target", "msg"):
+            if not isinstance(v.get(key), str):
+                errors.append(f"line {lineno}: log line missing string `{key}`")
+                break
+        else:
+            if v["level"] not in LEVELS:
+                errors.append(f"line {lineno}: unknown log level `{v['level']}`")
+            else:
+                ok_lines += 1
+    if ok_lines == 0:
+        errors.append("no JSON log lines found — was PALLAS_LOG=...,json set?")
+    return errors, ok_lines
+
+
+def main():
+    if len(sys.argv) != 2:
+        print("usage: log_check.py <stderr-capture|->", file=sys.stderr)
+        return 2
+    if sys.argv[1] == "-":
+        lines = sys.stdin.read().splitlines()
+    else:
+        with open(sys.argv[1]) as f:
+            lines = f.read().splitlines()
+    errors, ok_lines = check(lines)
+    if errors:
+        for e in errors:
+            print(f"log_check: {e}", file=sys.stderr)
+        return 1
+    print(f"log_check: OK ({ok_lines} JSON log lines)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,221 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text exposition (version 0.0.4) from this repo.
+
+Usage: prom_check.py <file>        # raw exposition text
+       prom_check.py -             # read stdin
+
+The input may also be the server's `{"cmd":"metrics_prom"}` JSON reply (or
+any JSON object with a "body" string) — the body is extracted first.
+
+Checks, beyond basic line syntax:
+  - every sample's metric family has a # TYPE comment, declared before the
+    first sample (histogram series _bucket/_sum/_count resolve to their
+    base family);
+  - at most one TYPE declaration per family;
+  - histograms are well-formed: le= labels parse, cumulative bucket counts
+    are monotone, an explicit +Inf bucket exists and equals _count, and
+    _sum/_count samples are present;
+  - repo contract: every family is `pallas_`-prefixed, counter families
+    end in `_total`, and the exposition carries `pallas_build_info`,
+    `pallas_tokens_generated_total` and at least one histogram.
+
+Exit 0 when valid; exit 1 with one message per problem otherwise.
+"""
+
+import json
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+# metric_name{labels} value  — labels optional, value is the last field
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>\S+)\s*$"
+)
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def base_family(name):
+    """Map a histogram series name onto its declared family."""
+    for suffix in ("_bucket", "_sum", "_count"):
+        if name.endswith(suffix):
+            return name[: -len(suffix)]
+    return name
+
+
+def parse_value(raw):
+    if raw == "+Inf":
+        return float("inf")
+    if raw == "-Inf":
+        return float("-inf")
+    return float(raw)  # raises ValueError on garbage (incl. bare 'Inf')
+
+
+def extract_body(text):
+    """Accept either raw exposition text or a JSON wrapper with `body`."""
+    stripped = text.lstrip()
+    if not stripped.startswith("{"):
+        return text
+    try:
+        v = json.loads(stripped.splitlines()[0])
+    except json.JSONDecodeError:
+        return text
+    if isinstance(v, dict) and isinstance(v.get("body"), str):
+        return v["body"]
+    return text
+
+
+def check(text):
+    errors = []
+    types = {}  # family -> declared type
+    type_order = {}  # family -> line number of the TYPE comment
+    samples = []  # (lineno, name, labels: dict, value)
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            parts = line.split(None, 3)
+            if len(parts) < 3 or parts[1] not in ("HELP", "TYPE"):
+                # free-form comments are legal; only HELP/TYPE are structured
+                if len(parts) >= 2 and parts[1] in ("HELP", "TYPE"):
+                    errors.append(f"line {lineno}: malformed {parts[1]} comment")
+                continue
+            kind, family = parts[1], parts[2]
+            if not NAME_RE.match(family):
+                errors.append(f"line {lineno}: bad metric name `{family}`")
+                continue
+            if kind == "TYPE":
+                typ = parts[3].strip() if len(parts) > 3 else ""
+                if typ not in ("counter", "gauge", "histogram", "summary", "untyped"):
+                    errors.append(f"line {lineno}: unknown TYPE `{typ}` for {family}")
+                if family in types:
+                    errors.append(f"line {lineno}: duplicate TYPE for {family}")
+                else:
+                    types[family] = typ
+                    type_order[family] = lineno
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"line {lineno}: unparseable sample line: {line!r}")
+            continue
+        labels = {}
+        raw_labels = m.group("labels")
+        if raw_labels is not None:
+            consumed = LABEL_RE.findall(raw_labels)
+            rebuilt = ",".join(f'{k}="{v}"' for k, v in consumed)
+            # catch label soup the findall silently skipped
+            if re.sub(r",\s*$", "", raw_labels.strip()) != rebuilt:
+                errors.append(f"line {lineno}: malformed labels `{{{raw_labels}}}`")
+            labels = dict(consumed)
+        try:
+            value = parse_value(m.group("value"))
+        except ValueError:
+            errors.append(f"line {lineno}: bad sample value `{m.group('value')}`")
+            continue
+        samples.append((lineno, m.group("name"), labels, value))
+
+    families_seen = {}
+    for lineno, name, labels, value in samples:
+        family = base_family(name)
+        if family not in types and name in types:
+            family = name  # a family legitimately named *_count etc.
+        families_seen.setdefault(family, []).append((lineno, name, labels, value))
+        if family not in types:
+            errors.append(f"line {lineno}: sample `{name}` has no TYPE declaration")
+        elif lineno < type_order[family]:
+            errors.append(
+                f"line {lineno}: sample `{name}` appears before its TYPE comment"
+            )
+        if not family.startswith("pallas_"):
+            errors.append(f"line {lineno}: family `{family}` is not pallas_-prefixed")
+
+    for family, fam_samples in families_seen.items():
+        typ = types.get(family)
+        if typ == "counter":
+            if not family.endswith("_total"):
+                errors.append(f"counter family `{family}` does not end in _total")
+            for lineno, _, _, value in fam_samples:
+                if value < 0:
+                    errors.append(f"line {lineno}: counter `{family}` is negative")
+        if typ == "histogram":
+            errors.extend(check_histogram(family, fam_samples))
+
+    if "pallas_build_info" not in families_seen:
+        errors.append("missing required family pallas_build_info")
+    if "pallas_tokens_generated_total" not in families_seen:
+        errors.append("missing required family pallas_tokens_generated_total")
+    if not any(t == "histogram" for t in types.values()):
+        errors.append("exposition declares no histogram family")
+    return errors
+
+
+def check_histogram(family, fam_samples):
+    errors = []
+    buckets = []  # (le, count, lineno)
+    count = None
+    has_sum = False
+    for lineno, name, labels, value in fam_samples:
+        if name == family + "_bucket":
+            if "le" not in labels:
+                errors.append(f"line {lineno}: {name} without an le= label")
+                continue
+            try:
+                le = parse_value(labels["le"])
+            except ValueError:
+                errors.append(f"line {lineno}: bad le= value `{labels['le']}`")
+                continue
+            buckets.append((le, value, lineno))
+        elif name == family + "_count":
+            count = value
+        elif name == family + "_sum":
+            has_sum = True
+        else:
+            errors.append(f"histogram family `{family}` has stray series `{name}`")
+    if not buckets:
+        errors.append(f"histogram `{family}` has no _bucket series")
+        return errors
+    if not has_sum:
+        errors.append(f"histogram `{family}` has no _sum")
+    if count is None:
+        errors.append(f"histogram `{family}` has no _count")
+    prev_le, prev_n = float("-inf"), -1.0
+    for le, n, lineno in buckets:
+        if le <= prev_le:
+            errors.append(f"line {lineno}: `{family}` le= not strictly increasing")
+        if n < prev_n:
+            errors.append(f"line {lineno}: `{family}` cumulative count decreases")
+        prev_le, prev_n = le, n
+    last_le, last_n, _ = buckets[-1]
+    if last_le != float("inf"):
+        errors.append(f"histogram `{family}` has no +Inf bucket")
+    elif count is not None and last_n != count:
+        errors.append(
+            f"histogram `{family}`: +Inf bucket {last_n} != _count {count}"
+        )
+    return errors
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__.strip().splitlines()[2].strip(), file=sys.stderr)
+        return 2
+    if sys.argv[1] == "-":
+        text = sys.stdin.read()
+    else:
+        with open(sys.argv[1]) as f:
+            text = f.read()
+    body = extract_body(text)
+    errors = check(body)
+    if errors:
+        for e in errors:
+            print(f"prom_check: {e}", file=sys.stderr)
+        return 1
+    n_lines = sum(1 for l in body.splitlines() if l.strip() and not l.startswith("#"))
+    print(f"prom_check: OK ({n_lines} samples)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,15 +7,25 @@ line in the Chrome trace-event format the `obs::trace` module pins:
     {"name": "decode-step", "ph": "X", "ts": <start us>, "dur": <us>,
      "pid": 0, "tid": <worker>}
 
+Events the engine can attribute to a single request additionally carry
+`"args": {"req": <id>}` (request-id correlation): lifecycle spans
+(queue-wait, kv-wait, request) land on a per-request track and per-request
+backend work (prefill chunks) is tagged via the sink's ambient request
+scope.
+
 Usage:
-    python tools/trace_summary.py runs/trace.jsonl           # phase report
-    python tools/trace_summary.py runs/trace.jsonl --check   # CI validation
+    python tools/trace_summary.py runs/trace.jsonl               # phase report
+    python tools/trace_summary.py runs/trace.jsonl --check       # CI validation
+    python tools/trace_summary.py runs/trace.jsonl --by-request  # per-request
 
 `--check` exits non-zero unless every line parses, carries the complete
-key set, uses ph == "X", a known phase name and non-negative timings —
-the schema contract the Rust golden test also pins. The default report
-prints per-phase counts and total/mean/max durations so a bench trace
-answers "where does the decode wall-clock go" without chrome://tracing.
+key set, uses ph == "X", a known phase name, non-negative timings and — when
+present — a well-formed `args.req` (non-negative integer): the schema
+contract the Rust golden test also pins. The default report prints
+per-phase counts and total/mean/max durations so a bench trace answers
+"where does the decode wall-clock go" without chrome://tracing;
+`--by-request` groups the tagged spans into a queue/kv-wait/prefill/decode
+breakdown per request id.
 """
 
 from __future__ import annotations
@@ -35,8 +45,19 @@ KNOWN_PHASES = {
     "ffn-matvec",
     "verify",
     "draft-step",
+    "queue-wait",
+    "kv-wait",
+    "request",
 }
 REQUIRED_KEYS = {"name", "ph", "ts", "dur", "pid", "tid"}
+
+
+def req_of(ev: dict) -> int | None:
+    """The event's request-id tag, or None when untagged."""
+    args = ev.get("args")
+    if isinstance(args, dict) and isinstance(args.get("req"), int):
+        return args["req"]
+    return None
 
 
 def load(path: str, check: bool) -> list[dict]:
@@ -70,6 +91,22 @@ def load(path: str, check: bool) -> list[dict]:
                 print(f"{path}:{lineno}: negative ts/dur", file=sys.stderr)
                 errors += 1
                 continue
+            if "args" in ev:
+                args_obj = ev["args"]
+                bad = (
+                    not isinstance(args_obj, dict)
+                    or not isinstance(args_obj.get("req"), int)
+                    or isinstance(args_obj.get("req"), bool)
+                    or args_obj["req"] < 0
+                )
+                if bad:
+                    print(
+                        f"{path}:{lineno}: args must be "
+                        f'{{"req": <non-negative int>}}, got {args_obj!r}',
+                        file=sys.stderr,
+                    )
+                    errors += 1
+                    continue
             events.append(ev)
     if check and errors:
         print(f"--check: {errors} invalid line(s) in {path}", file=sys.stderr)
@@ -95,6 +132,41 @@ def report(events: list[dict]) -> None:
         )
 
 
+def by_request(events: list[dict]) -> None:
+    """Per-request wall-clock breakdown from the tagged lifecycle spans."""
+    reqs: dict[int, dict[str, float]] = defaultdict(lambda: defaultdict(float))
+    chunks: dict[int, int] = defaultdict(int)
+    for ev in events:
+        rid = req_of(ev)
+        if rid is None:
+            continue
+        reqs[rid][ev["name"]] += float(ev["dur"])
+        if ev["name"] == "prefill":
+            chunks[rid] += 1
+    if not reqs:
+        print("no request-tagged events (run with an engine that traces "
+              "request lifecycles)")
+        return
+    print(
+        f"{'req':>6} {'queue ms':>9} {'kv ms':>8} {'prefill ms':>11} "
+        f"{'chunks':>6} {'decode ms':>10} {'total ms':>9}"
+    )
+    for rid in sorted(reqs):
+        r = reqs[rid]
+        queue = r.get("queue-wait", 0.0) / 1e3
+        kv = r.get("kv-wait", 0.0) / 1e3
+        prefill = r.get("prefill", 0.0) / 1e3
+        # the request span covers admission -> retirement; decode is what
+        # remains after the prefill chunks inside it
+        decode = max(r.get("request", 0.0) / 1e3 - prefill, 0.0)
+        total = queue + r.get("request", 0.0) / 1e3
+        print(
+            f"{rid:>6} {queue:>9.3f} {kv:>8.3f} {prefill:>11.3f} "
+            f"{chunks[rid]:>6} {decode:>10.3f} {total:>9.3f}"
+        )
+    print(f"{len(reqs)} request(s)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("trace", help="trace JSONL file (from --trace)")
@@ -103,13 +175,25 @@ def main() -> None:
         action="store_true",
         help="validate the schema and exit non-zero on any invalid line",
     )
+    ap.add_argument(
+        "--by-request",
+        action="store_true",
+        help="group request-tagged spans into a per-request breakdown",
+    )
     args = ap.parse_args()
     events = load(args.trace, args.check)
     if args.check:
         if not events:
             print(f"--check: {args.trace} has no events", file=sys.stderr)
             sys.exit(1)
-        print(f"--check: {args.trace}: {len(events)} events, schema OK")
+        tagged = sum(1 for e in events if req_of(e) is not None)
+        print(
+            f"--check: {args.trace}: {len(events)} events "
+            f"({tagged} request-tagged), schema OK"
+        )
+        return
+    if args.by_request:
+        by_request(events)
         return
     report(events)
 
