@@ -597,6 +597,7 @@ impl Engine {
         let live = self.active.iter().filter(|a| a.is_some()).count();
         if live == 0 {
             self.update_kv_gauges();
+            self.sync_tier();
             return Ok(out);
         }
         let t0 = std::time::Instant::now();
@@ -797,7 +798,50 @@ impl Engine {
         }
         self.update_slo(&slo_recalls, &slo_densities);
         self.update_kv_gauges();
+        self.sync_tier();
         Ok(out)
+    }
+
+    /// Tiered-backend bookkeeping at the end of a step: OR the predictors'
+    /// trailing-window unions ([`SlotPredictor::promotion_hint`]) across
+    /// active slots into one heat map and hand it to the backend as a
+    /// non-blocking promotion hint, then mirror the tier store's counters
+    /// into the metrics. The store's counters are cumulative over the
+    /// backend's lifetime, so these are assignments (Prometheus counters
+    /// stay monotone across `reset_metrics`). No-op on untiered backends.
+    fn sync_tier(&mut self) {
+        if self.backend.tier_stats().is_none() {
+            return;
+        }
+        let mut heat: Vec<bool> = Vec::new();
+        for slot in 0..self.decode_b {
+            if self.active[slot].is_none() {
+                continue;
+            }
+            let Some(bits) = self.predictors[slot]
+                .as_ref()
+                .and_then(SlotPredictor::promotion_hint)
+            else {
+                continue;
+            };
+            if heat.is_empty() {
+                heat = bits;
+            } else {
+                for (h, b) in heat.iter_mut().zip(bits) {
+                    *h |= b;
+                }
+            }
+        }
+        if heat.iter().any(|&b| b) {
+            self.backend.tier_hint(&heat);
+        }
+        if let Some(stats) = self.backend.tier_stats() {
+            self.metrics.tier_cold_misses = stats.cold_misses;
+            self.metrics.tier_promotions = stats.promotions;
+            self.metrics.tier_demotions = stats.demotions;
+            self.metrics.tier_resident_bytes = stats.resident_bytes;
+            self.metrics.tier_cold_bytes = stats.cold_bytes;
+        }
     }
 
     fn update_kv_gauges(&mut self) {

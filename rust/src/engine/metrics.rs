@@ -105,6 +105,18 @@ pub struct EngineMetrics {
     /// `admissions_per_step[n]` = decode-step boundaries that admitted `n`
     /// requests (grows on demand via [`EngineMetrics::record_admissions`])
     pub admissions_per_step: Vec<u64>,
+    // hot/cold weight tiering (`crate::runtime::tiered`; all zero when the
+    // backend serves its weights fully resident)
+    /// FFN neuron accesses served by a synchronous cold-tier read
+    pub tier_cold_misses: u64,
+    /// neurons copied into the hot tier by the prefetcher
+    pub tier_promotions: u64,
+    /// hot neurons LRU-evicted to make room for promotions
+    pub tier_demotions: u64,
+    /// resident hot-tier bytes (gauge)
+    pub tier_resident_bytes: u64,
+    /// total cold-file record bytes (gauge; 0 = no tier attached)
+    pub tier_cold_bytes: u64,
     /// point-in-time SLO monitor states (`obs::slo`), refreshed by the
     /// engine each step; empty when no SLO bound is configured
     pub slo: Vec<SloStatus>,
@@ -221,6 +233,23 @@ impl EngineMetrics {
         }
     }
 
+    /// One-line weight-tier summary; empty when no tier is attached.
+    pub fn tier_report(&self) -> String {
+        if self.tier_cold_bytes == 0 {
+            return String::new();
+        }
+        let mib = f64::from(1 << 20);
+        format!(
+            "weight tier: resident {:.1} MiB of {:.1} MiB cold | cold misses {} | \
+             promotions {} (demotions {})",
+            self.tier_resident_bytes as f64 / mib,
+            self.tier_cold_bytes as f64 / mib,
+            self.tier_cold_misses,
+            self.tier_promotions,
+            self.tier_demotions,
+        )
+    }
+
     /// One-line serving summary; empty while nothing serving-specific has
     /// happened (dense KV, no evictions, no rejections).
     pub fn serving_report(&self) -> String {
@@ -258,6 +287,7 @@ impl EngineMetrics {
         );
         let extras = [
             self.serving_report(),
+            self.tier_report(),
             self.predictor_report(),
             self.per_slot_report(),
         ];
@@ -334,6 +364,11 @@ impl EngineMetrics {
                         .collect(),
                 ),
             ),
+            ("cold_misses", num(self.tier_cold_misses as f64)),
+            ("promotions", num(self.tier_promotions as f64)),
+            ("demotions", num(self.tier_demotions as f64)),
+            ("resident_bytes", num(self.tier_resident_bytes as f64)),
+            ("cold_bytes", num(self.tier_cold_bytes as f64)),
             (
                 "slo",
                 Value::Arr(self.slo.iter().map(SloStatus::to_json).collect()),
@@ -432,6 +467,31 @@ impl EngineMetrics {
             "pallas_kv_pages_total",
             "Total pages in the KV pool (0 = dense layout).",
             self.kv_pages_total as f64,
+        );
+        w.counter(
+            "pallas_tier_cold_misses_total",
+            "FFN neuron accesses served by a synchronous cold-tier read.",
+            self.tier_cold_misses as f64,
+        );
+        w.counter(
+            "pallas_tier_promotions_total",
+            "Neurons promoted into the resident hot weight tier.",
+            self.tier_promotions as f64,
+        );
+        w.counter(
+            "pallas_tier_demotions_total",
+            "Hot neurons LRU-evicted from the resident weight tier.",
+            self.tier_demotions as f64,
+        );
+        w.gauge(
+            "pallas_tier_resident_bytes",
+            "Resident hot-tier weight bytes (0 = no tier attached).",
+            self.tier_resident_bytes as f64,
+        );
+        w.gauge(
+            "pallas_tier_cold_bytes",
+            "Total cold-tier record bytes in the tiered checkpoint.",
+            self.tier_cold_bytes as f64,
         );
         w.header(
             "pallas_admissions_per_step",
@@ -677,6 +737,42 @@ mod tests {
         let hist = v.get("admissions_per_step").and_then(Value::as_arr).unwrap();
         assert_eq!(hist.len(), 4);
         assert_eq!(hist[3].as_usize(), Some(2));
+    }
+
+    #[test]
+    fn tier_counters_render_in_report_json_and_prom() {
+        let mut m = EngineMetrics::default();
+        assert!(m.tier_report().is_empty(), "no tier attached -> silent");
+        assert!(!m.report().contains("weight tier:"));
+        m.tier_cold_misses = 11;
+        m.tier_promotions = 5;
+        m.tier_demotions = 3;
+        m.tier_resident_bytes = 2 << 20;
+        m.tier_cold_bytes = 8 << 20;
+        let r = m.report();
+        assert!(r.contains("weight tier:"), "{r}");
+        assert!(r.contains("cold misses 11"), "{r}");
+        assert!(r.contains("resident 2.0 MiB of 8.0 MiB"), "{r}");
+        let v = crate::jsonx::parse(&m.to_json().to_json()).unwrap();
+        assert_eq!(v.get("cold_misses").and_then(Value::as_usize), Some(11));
+        assert_eq!(v.get("promotions").and_then(Value::as_usize), Some(5));
+        assert_eq!(v.get("demotions").and_then(Value::as_usize), Some(3));
+        assert_eq!(
+            v.get("resident_bytes").and_then(Value::as_usize),
+            Some(2 << 20)
+        );
+        assert_eq!(v.get("cold_bytes").and_then(Value::as_usize), Some(8 << 20));
+        let mut w = PromWriter::new();
+        m.render_prom(&mut w);
+        let text = w.finish();
+        assert!(text.contains("pallas_tier_cold_misses_total 11\n"));
+        assert!(text.contains("pallas_tier_promotions_total 5\n"));
+        assert!(text.contains("pallas_tier_demotions_total 3\n"));
+        assert!(text.contains("pallas_tier_resident_bytes 2097152\n"));
+        assert!(text.contains("pallas_tier_cold_bytes 8388608\n"));
+        m.reset();
+        assert_eq!(m.tier_cold_misses, 0);
+        assert_eq!(m.tier_cold_bytes, 0);
     }
 
     #[test]

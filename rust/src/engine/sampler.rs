@@ -37,6 +37,12 @@ pub fn log_softmax(logits: &[f32]) -> Vec<f64> {
 }
 
 /// Sample a token id according to the sampling params.
+///
+/// Robust against non-finite logits (a corrupt checkpoint or q8 edge case
+/// can surface NaN/±Inf): NaN and -Inf logits are treated as masked-out
+/// (-Inf weight), +Inf as the certain winner, and the top-k sort uses
+/// [`f64::total_cmp`] — this function always returns a valid token id and
+/// never panics the decode thread.
 pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
     if params.temperature <= 0.0 {
         return argmax(logits) as u32;
@@ -45,13 +51,21 @@ pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
     let mut scaled: Vec<(usize, f64)> = logits
         .iter()
         .enumerate()
-        .map(|(i, &x)| (i, x as f64 * inv_t))
+        .map(|(i, &x)| {
+            let v = x as f64 * inv_t;
+            (i, if v.is_nan() { f64::NEG_INFINITY } else { v })
+        })
         .collect();
     if params.top_k > 0 && params.top_k < scaled.len() {
-        scaled.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scaled.sort_by(|a, b| b.1.total_cmp(&a.1));
         scaled.truncate(params.top_k);
     }
     let max = scaled.iter().map(|(_, v)| *v).fold(f64::NEG_INFINITY, f64::max);
+    if !max.is_finite() {
+        // all candidates masked (-Inf) or one is +Inf: softmax arithmetic
+        // would produce NaN weights — degenerate cases, pick deterministically
+        return argmax(logits) as u32;
+    }
     let weights: Vec<f64> = scaled.iter().map(|(_, v)| (v - max).exp()).collect();
     let pick = rng.categorical(&weights);
     scaled[pick].0 as u32
@@ -107,6 +121,38 @@ mod tests {
         }
         assert!(counts[1] > counts[0] * 5);
         assert!(counts[1] > counts[2] * 5);
+    }
+
+    #[test]
+    fn nan_logits_still_yield_a_valid_token() {
+        // regression: `partial_cmp(..).unwrap()` used to panic the decode
+        // thread on NaN logits; sampling must always finish with a valid id
+        let mut rng = Rng::new(3);
+        let params = SamplingParams {
+            temperature: 1.0,
+            top_k: 2,
+            seed: 0,
+        };
+        let logits = [f32::NAN, 1.0, f32::NAN, 2.0];
+        for _ in 0..200 {
+            let t = sample(&logits, &params, &mut rng) as usize;
+            assert!(t < logits.len(), "{t}");
+            // NaN entries are masked out, so only the finite ids appear
+            assert!(t == 1 || t == 3, "{t}");
+        }
+        // all-NaN and ±Inf rows must not panic either and stay in range
+        for logits in [
+            vec![f32::NAN; 4],
+            vec![f32::INFINITY, 0.0, f32::NAN],
+            vec![f32::NEG_INFINITY; 3],
+        ] {
+            for _ in 0..50 {
+                assert!((sample(&logits, &params, &mut rng) as usize) < logits.len());
+            }
+        }
+        // greedy path: argmax over NaNs is already total, pin it
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[f32::NAN, 1.0]), 1);
     }
 
     #[test]

@@ -23,7 +23,7 @@
 
 use crate::error::{Error, Result};
 use crate::hostexec::math::{attend_one, layer_norm, relu_inplace, rms_norm, rope_inplace};
-use crate::hostexec::weights::HostParams;
+use crate::hostexec::weights::{HostParams, TierView};
 use crate::obs::{span_on, Phase, TraceSink};
 use crate::runtime::artifact::ModelCfg;
 use crate::runtime::backend::{
@@ -31,6 +31,7 @@ use crate::runtime::backend::{
 };
 use crate::runtime::paged::KvPool;
 use crate::runtime::tensor::Tensor;
+use crate::runtime::tiered::{TierStats, TieredMeta, TieredStore};
 use crate::sparse::{rowskip_gemv, simd};
 
 /// Which FFN weight representation the backend computes with.
@@ -80,6 +81,10 @@ pub struct HostBackend {
     trace: Option<std::sync::Arc<TraceSink>>,
     /// FFN weight representation ([`QuantMode::F32`] unless `with_quant`).
     quant: QuantMode,
+    /// Hot/cold weight tier every layer's FFN reads through, when the
+    /// backend was built `with_tiering` (models bigger than the resident
+    /// budget). `None` = all weights resident.
+    tier: Option<std::sync::Arc<TieredStore>>,
 }
 
 /// One sequence's KV lanes in either layout the host kernels speak.
@@ -265,6 +270,7 @@ impl HostBackend {
             all_live,
             trace: None,
             quant: QuantMode::F32,
+            tier: None,
         })
     }
 
@@ -319,15 +325,67 @@ impl HostBackend {
     /// drops any quantized copy, restoring the exact original path.
     pub fn with_quant(mut self, mode: QuantMode) -> HostBackend {
         match mode {
-            QuantMode::Q8 => self.params.quantize_ffns(),
+            QuantMode::Q8 => {
+                for layer in &mut self.params.layers {
+                    // tiered layers have no resident rows to quantize: the
+                    // tier quantizes rows on access (bit-identical, see
+                    // `quantize_row`) — just flip its mode
+                    match &mut layer.ffn.tier {
+                        Some(t) => t.q8 = true,
+                        None => layer.ffn.enable_quant(),
+                    }
+                }
+            }
             QuantMode::F32 => {
                 for layer in &mut self.params.layers {
                     layer.ffn.quant = None;
+                    if let Some(t) = &mut layer.ffn.tier {
+                        t.q8 = false;
+                    }
                 }
             }
         }
         self.quant = mode;
         self
+    }
+
+    /// Serve every layer's FFN weights through the RSBTIER1 hot/cold tier
+    /// at `path` under a `resident_mb` MiB budget (`--resident-mb`): the
+    /// dense FFN arrays are freed and weight rows come from the tier's hot
+    /// slots or cold `pread`s. `prefetch > 0` (`--tier-prefetch`) spawns
+    /// the background promotion thread, capped at that many promotions per
+    /// layer per hint. Decode output is bit-identical to the all-resident
+    /// backend at any budget — only wall-clock and memory change.
+    pub fn with_tiering(
+        mut self,
+        path: &std::path::Path,
+        resident_mb: u64,
+        prefetch: usize,
+    ) -> Result<HostBackend> {
+        let store = TieredStore::open(path, resident_mb << 20, prefetch)?;
+        let want = TieredMeta {
+            n_layers: self.cfg.n_layers,
+            d: self.cfg.d_model,
+            f: self.cfg.d_ff,
+            gated: self.cfg.gated,
+        };
+        if *store.meta() != want {
+            return Err(Error::Checkpoint(format!(
+                "{}: tiered geometry {:?} does not match model {want:?}",
+                path.display(),
+                store.meta()
+            )));
+        }
+        let q8 = self.quant == QuantMode::Q8;
+        for (l, lw) in self.params.layers.iter_mut().enumerate() {
+            lw.ffn.attach_tier(TierView {
+                store: store.clone(),
+                layer: l,
+                q8,
+            });
+        }
+        self.tier = Some(store);
+        Ok(self)
     }
 
     /// Active FFN weight representation.
@@ -475,7 +533,7 @@ impl HostBackend {
                 let ffn_in = &h[xs.clone()];
                 counts[l][1] += ffn_in.iter().filter(|&&z| z == 0.0).count() as u64;
                 act_row.fill(false);
-                lw.ffn.forward_token(ffn_in, live[l], &mut ffn_out, &mut act_row);
+                lw.ffn.forward_token(ffn_in, live[l], &mut ffn_out, &mut act_row)?;
                 counts[l][2] += act_row.iter().filter(|&&b| b).count() as u64;
                 if let Some(rows) = bufs.ffn.as_mut() {
                     let lrow = &mut rows[l][g * f..(g + 1) * f];
@@ -585,6 +643,16 @@ impl ExecBackend for HostBackend {
 
     fn set_trace(&mut self, sink: Option<std::sync::Arc<TraceSink>>) {
         self.trace = sink;
+    }
+
+    fn tier_stats(&self) -> Option<TierStats> {
+        self.tier.as_ref().map(|t| t.stats())
+    }
+
+    fn tier_hint(&self, heat: &[bool]) {
+        if let Some(t) = &self.tier {
+            t.hint(heat);
+        }
     }
 
     fn prefill(&self, tokens: &Tensor, report_ffn_mask: bool) -> Result<PrefillOut> {
@@ -1132,6 +1200,52 @@ mod tests {
             for &s in out.sparsity.as_f32().unwrap() {
                 assert!((0.0..=1.0).contains(&s), "{arch}: sparsity {s}");
             }
+        }
+    }
+
+    #[test]
+    fn tiered_decode_is_bit_identical_and_counts_misses() {
+        for (arch, q8) in [("opt", false), ("llama", false), ("opt", true)] {
+            let mut resident = backend(arch).with_threads(1);
+            if q8 {
+                resident = resident.with_quant(QuantMode::Q8);
+            }
+            let c = resident.config().clone();
+            let dir = std::env::temp_dir().join(format!(
+                "rsb_tierbe_{arch}_q{}_{}",
+                u8::from(q8),
+                std::process::id()
+            ));
+            let path = dir.join("m.tier");
+            resident.params().write_tiered(&path, None).unwrap();
+            // zero budget = every neuron served by a cold fault: the
+            // harshest placement must still reproduce resident bits
+            let mut tiered = backend(arch).with_threads(1);
+            if q8 {
+                tiered = tiered.with_quant(QuantMode::Q8);
+            }
+            let tiered = tiered.with_tiering(&path, 0, 0).unwrap();
+            assert!(resident.tier_stats().is_none());
+            let kv = Tensor::zeros_f32(resident.kv_shape());
+            let pos = Tensor::i32(vec![2], vec![0, 0]).unwrap();
+            let dt = Tensor::i32(vec![2, 1], vec![7, 8]).unwrap();
+            let mask = dense_mask(&resident);
+            let a = resident.decode(&kv, &pos, &dt, &mask).unwrap();
+            let b = tiered.decode(&kv, &pos, &dt, &mask).unwrap();
+            assert_eq!(
+                a.logits.as_f32().unwrap(),
+                b.logits.as_f32().unwrap(),
+                "{arch} q8={q8}: tiered decode must be bit-identical"
+            );
+            assert_eq!(a.kv.as_f32().unwrap(), b.kv.as_f32().unwrap());
+            assert_eq!(a.ffn_mask.as_f32().unwrap(), b.ffn_mask.as_f32().unwrap());
+            let s = tiered.tier_stats().expect("tiered backend reports stats");
+            assert!(s.cold_misses > 0, "{arch}: zero-budget decode must fault");
+            assert_eq!(s.hot_neurons, 0);
+            assert!(s.cold_bytes > 0);
+            // a hint with no prefetch thread is a silent no-op
+            tiered.tier_hint(&vec![true; c.n_layers * c.d_ff]);
+            std::fs::remove_dir_all(&dir).ok();
         }
     }
 

@@ -9,12 +9,16 @@
 //! [`HostParams::from_named`] consume the same RSBCKPT1 checkpoints the XLA
 //! path trains and saves.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::runtime::artifact::ModelCfg;
 use crate::runtime::tensor::Tensor;
-use crate::sparse::{simd, FfnWeights, FfnWeightsQ8, QuantMat};
+use crate::runtime::tiered::{TierScratch, TieredMeta, TieredStore};
+use crate::sparse::{quantize_row, simd, FfnWeights, FfnWeightsQ8, QuantMat};
 
 /// FFN activation on the host path (mirror of python `apply_act`; the
 /// relufication stages decide which one a checkpoint effectively uses).
@@ -63,6 +67,32 @@ pub struct FfnQ8 {
     pub gate: Option<QuantMat>,
 }
 
+/// One layer's view into a [`TieredStore`]: weight rows are served through
+/// the hot/cold tier instead of the resident `FfnWeights` arrays.
+pub struct TierView {
+    pub store: Arc<TieredStore>,
+    pub layer: usize,
+    /// Serve rows through on-the-fly int8 quantization (`--quant q8`).
+    /// Per-neuron row quantization is row-independent, so quantizing a
+    /// fetched f32 row reproduces the resident [`QuantMat`] bytes and
+    /// scales exactly — tiered q8 stays bit-identical to resident q8.
+    pub q8: bool,
+}
+
+/// Per-thread tiered-path buffers: cold-read scratch plus the q8 row
+/// quantization staging (one set per worker thread, reused across tokens).
+#[derive(Default)]
+struct TierLocal {
+    scratch: TierScratch,
+    q_up: Vec<i8>,
+    q_down: Vec<i8>,
+    q_gate: Vec<i8>,
+}
+
+thread_local! {
+    static TIER_LOCAL: RefCell<TierLocal> = RefCell::new(TierLocal::default());
+}
+
 /// One layer's FFN on the host path. The non-gated projections live in a
 /// neuron-major [`FfnWeights`] (the `sparse_ffn_matvec` substrate); llama's
 /// gate projection rides along in the same neuron-major layout so a skipped
@@ -78,6 +108,10 @@ pub struct HostFfn {
     /// resident (unread memory costs no decode bandwidth) so probes/tests
     /// can compare paths on the same layer.
     pub quant: Option<FfnQ8>,
+    /// Hot/cold weight tier (`--resident-mb`). When attached, the dense
+    /// projections above are freed and every weight row is served through
+    /// the tier; only `w.b_up` stays in this struct.
+    pub tier: Option<TierView>,
 }
 
 impl HostFfn {
@@ -98,6 +132,19 @@ impl HostFfn {
         self.quant = Some(self.quantized());
     }
 
+    /// Detach the resident projections and serve every weight row through
+    /// `view`'s [`TieredStore`] from now on. `w.b_up` stays resident (tiny,
+    /// touched by every live neuron); the dense `w_up_t`/`w_down`/`gate_t`
+    /// arrays and any int8 companion are freed — the whole point of tiering
+    /// is not holding them.
+    pub fn attach_tier(&mut self, view: TierView) {
+        self.w.w_up_t = Vec::new();
+        self.w.w_down = Vec::new();
+        self.gate_t = None;
+        self.quant = None;
+        self.tier = Some(view);
+    }
+
     /// Masked FFN for one token: compute only the neurons in `live`
     /// (strictly increasing indices), writing the output into `y` ([d]) and
     /// recording post-gate activation liveness into `act_row` ([F], caller
@@ -106,22 +153,34 @@ impl HostFfn {
     /// non-gated path the two are bit-identical (pinned by a unit test) and
     /// a live superset reproduces the dense output bit-for-bit. With
     /// `quant` populated the same structure runs over the int8 rows
-    /// (mirroring [`crate::sparse::sparse_ffn_matvec_q8`]).
-    pub fn forward_token(&self, x: &[f32], live: &[u32], y: &mut [f32], act_row: &mut [bool]) {
+    /// (mirroring [`crate::sparse::sparse_ffn_matvec_q8`]). With a tier
+    /// attached, rows come from the hot/cold store — same values, same
+    /// kernel call order, so tier placement never changes the output bits;
+    /// the only fallible path is a cold read, hence the `Result`.
+    pub fn forward_token(
+        &self,
+        x: &[f32],
+        live: &[u32],
+        y: &mut [f32],
+        act_row: &mut [bool],
+    ) -> Result<()> {
         let d = self.w.d;
         debug_assert_eq!(x.len(), d);
         debug_assert_eq!(y.len(), d);
         debug_assert_eq!(act_row.len(), self.w.f);
         y.fill(0.0);
-        match &self.quant {
-            Some(q) => self.accumulate_q8(q, x, live, y, act_row),
-            None => self.accumulate_f32(x, live, y, act_row),
+        match (&self.tier, &self.quant) {
+            (Some(t), _) if t.q8 => self.accumulate_q8_tiered(t, x, live, y, act_row)?,
+            (Some(t), _) => self.accumulate_f32_tiered(t, x, live, y, act_row)?,
+            (None, Some(q)) => self.accumulate_q8(q, x, live, y, act_row),
+            (None, None) => self.accumulate_f32(x, live, y, act_row),
         }
         if let Some(b) = &self.b_down {
             for (yk, bk) in y.iter_mut().zip(b) {
                 *yk += bk;
             }
         }
+        Ok(())
     }
 
     fn accumulate_f32(&self, x: &[f32], live: &[u32], y: &mut [f32], act_row: &mut [bool]) {
@@ -192,6 +251,112 @@ impl HostFfn {
                 }
             }
         }
+    }
+
+    /// Tiered f32 path: the same arithmetic and kernel call order as
+    /// [`HostFfn::accumulate_f32`], with each neuron's rows fetched through
+    /// the hot/cold store — bit-identical to the all-resident path.
+    fn accumulate_f32_tiered(
+        &self,
+        t: &TierView,
+        x: &[f32],
+        live: &[u32],
+        y: &mut [f32],
+        act_row: &mut [bool],
+    ) -> Result<()> {
+        TIER_LOCAL.with(|cell| {
+            let loc = &mut *cell.borrow_mut();
+            for &j in live {
+                let j = j as usize;
+                let fired =
+                    t.store
+                        .with_neuron(t.layer, j, &mut loc.scratch, |up, down, gate| {
+                            match gate {
+                                None => {
+                                    let pre = self.w.b_up[j] + simd::dot(up, x);
+                                    let a = self.act.apply(pre);
+                                    if a == 0.0 {
+                                        return false; // dead neuron
+                                    }
+                                    simd::axpy(y, a, down);
+                                    true
+                                }
+                                Some(g_row) => {
+                                    let g = self.act.apply(simd::dot(g_row, x));
+                                    if g == 0.0 {
+                                        return false;
+                                    }
+                                    let up_v = simd::dot(up, x);
+                                    simd::axpy(y, g * up_v, down);
+                                    true
+                                }
+                            }
+                        })?;
+                if fired {
+                    act_row[j] = true;
+                }
+            }
+            Ok(())
+        })
+    }
+
+    /// Tiered q8 path: fetched f32 rows are quantized on the fly with
+    /// [`quantize_row`] — per-neuron quantization is row-independent, so
+    /// the staged bytes and scales equal the resident [`QuantMat`]'s and
+    /// the output is bit-identical to [`HostFfn::accumulate_q8`].
+    fn accumulate_q8_tiered(
+        &self,
+        t: &TierView,
+        x: &[f32],
+        live: &[u32],
+        y: &mut [f32],
+        act_row: &mut [bool],
+    ) -> Result<()> {
+        TIER_LOCAL.with(|cell| {
+            let TierLocal {
+                scratch,
+                q_up,
+                q_down,
+                q_gate,
+            } = &mut *cell.borrow_mut();
+            let d = self.w.d;
+            q_up.resize(d, 0);
+            q_down.resize(d, 0);
+            q_gate.resize(d, 0);
+            for &j in live {
+                let j = j as usize;
+                let fired = t.store.with_neuron(t.layer, j, scratch, |up, down, gate| {
+                    match gate {
+                        None => {
+                            let s_up = quantize_row(up, q_up);
+                            let pre = self.w.b_up[j] + s_up * simd::dot_q8(x, q_up);
+                            let a = self.act.apply(pre);
+                            if a == 0.0 {
+                                return false;
+                            }
+                            let s_down = quantize_row(down, q_down);
+                            simd::axpy_q8(y, a * s_down, q_down);
+                            true
+                        }
+                        Some(g_row) => {
+                            let s_g = quantize_row(g_row, q_gate);
+                            let g = self.act.apply(s_g * simd::dot_q8(x, q_gate));
+                            if g == 0.0 {
+                                return false;
+                            }
+                            let up_v = quantize_row(up, q_up) * simd::dot_q8(x, q_up);
+                            let s_down = quantize_row(down, q_down);
+                            simd::axpy_q8(y, g * up_v * s_down, q_down);
+                            true
+                        }
+                    }
+                })?;
+                if fired {
+                    act_row[j] = true;
+                }
+            }
+            Ok(())
+        })
     }
 }
 
@@ -341,6 +506,7 @@ impl HostParams {
                     },
                     act,
                     quant: None,
+                    tier: None,
                 },
             });
         }
@@ -392,6 +558,46 @@ impl HostParams {
         for layer in &mut self.layers {
             layer.ffn.enable_quant();
         }
+    }
+
+    /// Pack the resident FFN weights into an RSBTIER1 tiered checkpoint at
+    /// `path`: the exact neuron-major `w_up_t`/`w_down`/`gate_t` row bytes,
+    /// so a [`TieredStore`] serving it is bit-identical to these params.
+    /// `freq` is the optional flat `[L × F]` firing histogram that ranks
+    /// the initial hot set (e.g. a `HotSet` export or offline profile).
+    pub fn write_tiered(&self, path: &Path, freq: Option<&[u32]>) -> Result<()> {
+        let first = &self
+            .layers
+            .first()
+            .ok_or_else(|| Error::Checkpoint("write_tiered: no layers".into()))?
+            .ffn;
+        let meta = TieredMeta {
+            n_layers: self.layers.len(),
+            d: first.w.d,
+            f: first.w.f,
+            gated: first.gate_t.is_some(),
+        };
+        let (d, f) = (meta.d, meta.f);
+        for (l, lw) in self.layers.iter().enumerate() {
+            let ffn = &lw.ffn;
+            if ffn.w.w_up_t.len() != f * d
+                || ffn.w.w_down.len() != f * d
+                || ffn.gate_t.is_some() != meta.gated
+            {
+                return Err(Error::Checkpoint(format!(
+                    "write_tiered: layer {l} FFN weights are not resident"
+                )));
+            }
+        }
+        let biases: Vec<&[f32]> = self.layers.iter().map(|l| l.ffn.w.b_up.as_slice()).collect();
+        crate::runtime::tiered::write_tiered(path, &meta, &biases, freq, &mut |l, j, rec| {
+            let ffn = &self.layers[l].ffn;
+            rec[..d].copy_from_slice(&ffn.w.w_up_t[j * d..(j + 1) * d]);
+            rec[d..2 * d].copy_from_slice(&ffn.w.w_down[j * d..(j + 1) * d]);
+            if let Some(g) = &ffn.gate_t {
+                rec[2 * d..3 * d].copy_from_slice(&g[j * d..(j + 1) * d]);
+            }
+        })
     }
 }
 
@@ -488,6 +694,7 @@ mod tests {
             b_down: None,
             act: Act::Relu,
             quant: None,
+            tier: None,
         };
         let mut r = Rng::new(6);
         for _ in 0..8 {
@@ -499,7 +706,7 @@ mod tests {
             let mut y_host = vec![0.0f32; 8];
             let mut y_ref = vec![0.0f32; 8];
             let mut bits = vec![false; 32];
-            ffn.forward_token(&x, &live, &mut y_host, &mut bits);
+            ffn.forward_token(&x, &live, &mut y_host, &mut bits).unwrap();
             sparse_ffn_matvec(&ffn.w, &x, &live, &mut y_ref);
             assert_eq!(y_host, y_ref, "host relu path must match the kernel");
             // act bits are exactly the computed-and-surviving neurons
@@ -520,6 +727,7 @@ mod tests {
             b_down: None,
             act: Act::Relu,
             quant: None,
+            tier: None,
         };
         ffn.enable_quant();
         let q = ffn.quant.as_ref().unwrap();
@@ -533,7 +741,7 @@ mod tests {
             let mut y_host = vec![0.0f32; 8];
             let mut y_ref = vec![0.0f32; 8];
             let mut bits = vec![false; 32];
-            ffn.forward_token(&x, &live, &mut y_host, &mut bits);
+            ffn.forward_token(&x, &live, &mut y_host, &mut bits).unwrap();
             crate::sparse::sparse_ffn_matvec_q8(&q.w, &x, &live, &mut y_ref);
             assert_eq!(y_host, y_ref, "host q8 relu path must match the kernel");
         }
@@ -551,12 +759,70 @@ mod tests {
         let mut bits = vec![false; c.d_ff];
         let ffn = &mut params.layers[0].ffn;
         assert!(ffn.gate_t.is_some(), "llama cfg must be gated");
-        ffn.forward_token(&x, &live, &mut y_f32, &mut bits);
+        ffn.forward_token(&x, &live, &mut y_f32, &mut bits).unwrap();
         ffn.enable_quant();
         bits.fill(false);
-        ffn.forward_token(&x, &live, &mut y_q8, &mut bits);
+        ffn.forward_token(&x, &live, &mut y_q8, &mut bits).unwrap();
         for (a, b) in y_f32.iter().zip(&y_q8) {
             assert!((a - b).abs() < 0.05, "q8 gated path drifted: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn tiered_token_is_bit_identical_to_resident_f32_and_q8() {
+        for arch in ["opt", "llama"] {
+            let c = cfg(arch);
+            let packed = HostParams::random(&c, 21).unwrap();
+            let dir = std::env::temp_dir()
+                .join(format!("rsb_tierffn_{arch}_{}", std::process::id()));
+            let path = dir.join("m.tier");
+            packed.write_tiered(&path, None).unwrap();
+            // tiny budget (4 hot slots/layer): the dense sweep below hits
+            // both the hot and the cold tier on every layer
+            let rec = c.d_model * (2 + usize::from(c.gated)) * 4;
+            let store = crate::runtime::tiered::TieredStore::open(
+                &path,
+                (c.n_layers * 4 * rec) as u64,
+                0,
+            )
+            .unwrap();
+            for q8 in [false, true] {
+                let mut resident = HostParams::random(&c, 21).unwrap();
+                let mut tiered = HostParams::random(&c, 21).unwrap();
+                if q8 {
+                    resident.quantize_ffns();
+                }
+                for (l, lw) in tiered.layers.iter_mut().enumerate() {
+                    lw.ffn.attach_tier(TierView {
+                        store: store.clone(),
+                        layer: l,
+                        q8,
+                    });
+                    assert!(lw.ffn.w.w_up_t.is_empty(), "tiering must free rows");
+                }
+                let mut r = Rng::new(9);
+                let live: Vec<u32> = (0..c.d_ff as u32).collect();
+                for l in 0..c.n_layers {
+                    let x: Vec<f32> =
+                        (0..c.d_model).map(|_| r.normal() as f32).collect();
+                    let mut y_a = vec![0.0f32; c.d_model];
+                    let mut y_b = vec![0.0f32; c.d_model];
+                    let mut bits_a = vec![false; c.d_ff];
+                    let mut bits_b = vec![false; c.d_ff];
+                    resident.layers[l]
+                        .ffn
+                        .forward_token(&x, &live, &mut y_a, &mut bits_a)
+                        .unwrap();
+                    tiered.layers[l]
+                        .ffn
+                        .forward_token(&x, &live, &mut y_b, &mut bits_b)
+                        .unwrap();
+                    assert_eq!(y_a, y_b, "{arch} q8={q8} layer {l}: tier drift");
+                    assert_eq!(bits_a, bits_b, "{arch} q8={q8} layer {l}");
+                }
+            }
+            assert!(store.stats().cold_misses > 0, "sweep must touch cold tier");
+            std::fs::remove_dir_all(&dir).ok();
         }
     }
 

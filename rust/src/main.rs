@@ -52,6 +52,16 @@
 //! (`--slo-recall-floor <f>`, `--slo-density-ceil <f>`, `--slo-p99-ms <ms>`)
 //! watch rolling windows of live recall, enforced density and sketch p99
 //! latency, logging ok -> warn -> breach transitions and counting breaches.
+//!
+//! Weight tiering (host backend): `--resident-mb <mb>` serves the FFN
+//! weights through a hot/cold tier under that byte budget — hot neurons
+//! stay resident, cold ones are read on demand from a page-aligned tiered
+//! checkpoint (packed on first use at `<artifacts>/<id>/model.tier`, or
+//! `--tier-file <path>`). `--tier-prefetch <n>` caps the background
+//! prefetcher's promotions per layer per hint (default 64; 0 disables the
+//! prefetch thread so every cold neuron is a synchronous counted miss).
+//! Cold misses, promotions and resident bytes surface on
+//! `{"cmd":"metrics"}` / `{"cmd":"metrics_prom"}`.
 
 use std::sync::Arc;
 
@@ -106,7 +116,11 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 const HELP: &str = "rsb — ReLU Strikes Back reproduction (see README.md)
 usage: rsb <info|train|finetune|eval|generate|serve|specdec> [--options]
        generate/serve/specdec take --backend host|xla (host = no PJRT)
-       host backend: --quant f32|q8 (int8 FFN weights), --threads N
+       host backend: --quant f32|q8 (int8 FFN weights), --threads N,
+              --resident-mb N (hot/cold FFN weight tier under an N MiB budget;
+              packs <artifacts>/<id>/model.tier on first use, --tier-file PATH
+              overrides), --tier-prefetch N (promotions per layer per hint,
+              0 = no prefetch thread)
        serve: --max-tokens-cap N (0 = model max_seq), --queue-cap N (backpressure),
               --kv-pages N --page-size P (paged KV pool), --prefill-chunk N
        SLO monitors (generate/serve): --slo-recall-floor F --slo-density-ceil F
@@ -201,6 +215,13 @@ fn build_engine(args: &Args) -> Result<Engine> {
                     "--quant q8 needs --backend host (the compiled entries are f32)".into(),
                 ));
             }
+            if args.get("resident-mb").is_some() {
+                return Err(Error::Config(
+                    "--resident-mb needs --backend host (weight tiering lives in the \
+                     host gather path)"
+                        .into(),
+                ));
+            }
             compiled::engine(args)
         }
         other => Err(Error::Config(format!(
@@ -239,6 +260,7 @@ fn host_engine(args: &Args) -> Result<Engine> {
     let backend = backend
         .with_threads(args.usize_or("threads", 0)?)
         .with_quant(parse_quant(args)?);
+    let backend = apply_tiering(args, backend, &artifacts, &id)?;
     rsb::log_info!(
         "host",
         "{} | L{} d{} f{} v{} | decode_b {} prefill_t {} | threads {} | quant {}",
@@ -253,6 +275,47 @@ fn host_engine(args: &Args) -> Result<Engine> {
         backend.quant().name()
     );
     Engine::new(Box::new(backend), engine_config(args)?)
+}
+
+/// `--resident-mb <mb>` (host only): re-serve the FFN weights through a
+/// hot/cold tier under a byte budget. The tiered checkpoint defaults to
+/// `<artifacts>/<id>/model.tier` and is packed from the already-loaded
+/// weights when missing; `--tier-file <path>` points at an existing one.
+/// `--tier-prefetch <n>` caps promotions per layer per hint (0 disables
+/// the prefetch thread: every cold neuron is a synchronous counted miss).
+fn apply_tiering(
+    args: &Args,
+    backend: HostBackend,
+    artifacts: &std::path::Path,
+    id: &str,
+) -> Result<HostBackend> {
+    let Some(mb) = args.get("resident-mb") else {
+        return Ok(backend);
+    };
+    let mb: u64 = mb
+        .parse()
+        .map_err(|_| Error::Config(format!("--resident-mb: expected MiB, got `{mb}`")))?;
+    let path = match args.get("tier-file") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => artifacts.join(id).join("model.tier"),
+    };
+    if !path.exists() {
+        rsb::log_info!("tier", "packing tiered checkpoint: {}", path.display());
+        backend.params().write_tiered(&path, None)?;
+    }
+    let prefetch = args.usize_or("tier-prefetch", 64)?;
+    let backend = backend.with_tiering(&path, mb, prefetch)?;
+    if let Some(st) = backend.tier_stats() {
+        rsb::log_info!(
+            "tier",
+            "budget {mb} MiB -> {} hot neurons ({:.1} MiB resident) over {:.1} MiB cold | \
+             prefetch {prefetch}/layer/hint",
+            st.hot_neurons,
+            st.resident_bytes as f64 / (1024.0 * 1024.0),
+            st.cold_bytes as f64 / (1024.0 * 1024.0),
+        );
+    }
+    Ok(backend)
 }
 
 fn info(args: &Args) -> Result<()> {

@@ -111,6 +111,22 @@ impl SlotPredictor {
         }
     }
 
+    /// The weight-tier promotion signal: the flat `[L × F]` union of every
+    /// mask in the trailing observation window — deliberately broader than
+    /// the enforced `union_k` candidate, because prefetch wants everything
+    /// that has been warm *recently*, not just the next step's bet. `None`
+    /// when the policy carries no signal (dense) or nothing was observed.
+    pub fn promotion_hint(&self) -> Option<Vec<bool>> {
+        match &self.policy {
+            NeuronPolicy::Dense => None,
+            NeuronPolicy::Static(_) => self.static_bits.clone(),
+            NeuronPolicy::Reuse { .. } | NeuronPolicy::TopP { .. } => {
+                let bits = self.hotset.union_of_last(self.hotset.window);
+                bits.iter().any(|&b| b).then_some(bits)
+            }
+        }
+    }
+
     fn push_recall(&mut self, r: f64) {
         self.recall_ewma = Some(match self.recall_ewma {
             None => r,
@@ -403,6 +419,18 @@ mod tests {
     fn static_policy_rejects_wrong_size_mask() {
         let t = Tensor::ones_f32(vec![1, 4]); // engine is 1 x 8
         assert!(SlotPredictor::new(NeuronPolicy::Static(t), 0.95, 1, 8).is_err());
+    }
+
+    #[test]
+    fn promotion_hint_is_the_trailing_window_union() {
+        let mut p = reuse(3, 1, 0.5);
+        assert!(p.promotion_hint().is_none(), "nothing observed yet");
+        p.observe(&mask(1, 8, &[1]), 0, true).unwrap();
+        let _ = p.propose();
+        p.observe(&mask(1, 8, &[4]), 0, true).unwrap();
+        let hint = p.promotion_hint().expect("observations produce a hint");
+        assert!(hint[1] && hint[4], "hint unions the whole window, not union_k");
+        assert_eq!(hint.iter().filter(|&&b| b).count(), 2);
     }
 
     #[test]

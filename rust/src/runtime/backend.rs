@@ -439,6 +439,24 @@ pub trait ExecBackend {
         let _ = sink;
     }
 
+    /// Hot/cold weight-tier counters, when the backend serves its FFN
+    /// weights through a [`TieredStore`] (cold misses, promotions,
+    /// resident/cold bytes). `None` — the default — means all weights are
+    /// resident and the engine skips tier bookkeeping entirely.
+    ///
+    /// [`TieredStore`]: crate::runtime::tiered::TieredStore
+    fn tier_stats(&self) -> Option<crate::runtime::tiered::TierStats> {
+        None
+    }
+
+    /// Forward a flat `[L, F]` heat hint (the predictors' trailing-window
+    /// union) to the backend's weight tier so its prefetcher can promote
+    /// heating neurons. Advisory and non-blocking; a no-op for
+    /// all-resident backends.
+    fn tier_hint(&self, heat: &[bool]) {
+        let _ = heat;
+    }
+
     /// KV cache shape for the decode batch: [L, 2, B, H, Tmax, hd].
     fn kv_shape(&self) -> Vec<usize> {
         let c = self.config();

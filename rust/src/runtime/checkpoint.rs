@@ -7,8 +7,21 @@
 //!   u32 n_tensors
 //!   repeated: u32 name_len, name bytes, u8 dtype(0=f32,1=i32,2=u32),
 //!             u32 ndim, u64 dims[ndim], payload (numel * 4 bytes)
+//!
+//! Validation rules (the header is untrusted input — a corrupt or hostile
+//! file must fail with a clean [`Error::Checkpoint`], never a panic, an
+//! overflow, or an unbounded allocation):
+//!   - magic must match, dtype codes must be known;
+//!   - `n_tensors`, `name_len`, `ndim` and every declared payload length
+//!     are bounded against the file's remaining byte length *before* any
+//!     allocation (a 12-byte file cannot declare a 4 GiB tensor);
+//!   - `numel = Π dims` and `numel * 4` use checked arithmetic (release
+//!     builds must not wrap, debug builds must not abort);
+//!   - rank is capped at 16 and zero-length dimensions are rejected
+//!     (nothing in this repo writes empty tensors; a zero dim in the wild
+//!     means corruption).
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, Write};
 use std::path::Path;
 
 use crate::error::{Error, Result};
@@ -48,44 +61,83 @@ pub fn save(path: &Path, named: &[(String, &Tensor)]) -> Result<()> {
 }
 
 pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
-    let mut r = BufReader::new(
-        std::fs::File::open(path)
-            .map_err(|e| Error::Checkpoint(format!("{}: {e}", path.display())))?,
-    );
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::Checkpoint(format!("{}: {e}", path.display())))?;
+    let file_len = file
+        .metadata()
+        .map_err(|e| Error::Checkpoint(format!("{}: {e}", path.display())))?
+        .len();
+    let mut r = BufReader::new(file);
+    let truncated =
+        |what: &str| Error::Checkpoint(format!("{}: truncated ({what})", path.display()));
+    // remaining bytes past the reader's current position — every declared
+    // length is bounded against this before it is trusted or allocated
+    let remaining = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
+        Ok(file_len.saturating_sub(r.stream_position()?))
+    };
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic)
+        .map_err(|_| truncated("magic"))?;
     if &magic != MAGIC {
         return Err(Error::Checkpoint(format!(
             "{}: bad magic (not an RSBCKPT1 file)",
             path.display()
         )));
     }
-    let n = read_u32(&mut r)? as usize;
-    let mut out = Vec::with_capacity(n);
+    let n = read_u32(&mut r).map_err(|_| truncated("tensor count"))? as u64;
+    // each tensor costs at least 13 header bytes (name_len + dtype + ndim)
+    let rem = remaining(&mut r)?;
+    if n.checked_mul(13).map_or(true, |need| need > rem) {
+        return Err(Error::Checkpoint(format!(
+            "{}: header declares {n} tensors but only {rem} bytes remain",
+            path.display()
+        )));
+    }
+    let mut out = Vec::with_capacity(n as usize);
     for _ in 0..n {
-        let name_len = read_u32(&mut r)? as usize;
-        if name_len > 1 << 20 {
+        let name_len = read_u32(&mut r).map_err(|_| truncated("name length"))? as u64;
+        if name_len > 1 << 20 || name_len > remaining(&mut r)? {
             return Err(Error::Checkpoint("absurd name length".into()));
         }
-        let mut name = vec![0u8; name_len];
-        r.read_exact(&mut name)?;
+        let mut name = vec![0u8; name_len as usize];
+        r.read_exact(&mut name).map_err(|_| truncated("name"))?;
         let name = String::from_utf8(name)
             .map_err(|_| Error::Checkpoint("non-utf8 tensor name".into()))?;
         let mut code = [0u8; 1];
-        r.read_exact(&mut code)?;
-        let ndim = read_u32(&mut r)? as usize;
+        r.read_exact(&mut code).map_err(|_| truncated("dtype"))?;
+        let ndim = read_u32(&mut r).map_err(|_| truncated("rank"))? as usize;
         if ndim > 16 {
             return Err(Error::Checkpoint("absurd rank".into()));
         }
         let mut shape = Vec::with_capacity(ndim);
+        let mut numel: u64 = 1;
         for _ in 0..ndim {
             let mut b = [0u8; 8];
-            r.read_exact(&mut b)?;
-            shape.push(u64::from_le_bytes(b) as usize);
+            r.read_exact(&mut b).map_err(|_| truncated("dims"))?;
+            let dim = u64::from_le_bytes(b);
+            if dim == 0 {
+                return Err(Error::Checkpoint(format!(
+                    "tensor `{name}`: zero-length dimension"
+                )));
+            }
+            numel = numel.checked_mul(dim).ok_or_else(|| {
+                Error::Checkpoint(format!("tensor `{name}`: element count overflows"))
+            })?;
+            shape.push(usize::try_from(dim).map_err(|_| {
+                Error::Checkpoint(format!("tensor `{name}`: dimension too large"))
+            })?);
         }
-        let numel: usize = shape.iter().product();
-        let mut payload = vec![0u8; numel * 4];
-        r.read_exact(&mut payload)?;
+        let payload_len = numel.checked_mul(4).ok_or_else(|| {
+            Error::Checkpoint(format!("tensor `{name}`: payload length overflows"))
+        })?;
+        let rem = remaining(&mut r)?;
+        if payload_len > rem {
+            return Err(Error::Checkpoint(format!(
+                "tensor `{name}`: declares {payload_len} payload bytes but only {rem} remain"
+            )));
+        }
+        let mut payload = vec![0u8; payload_len as usize];
+        r.read_exact(&mut payload).map_err(|_| truncated("payload"))?;
         let tensor = match code[0] {
             0 => Tensor::f32(
                 shape,

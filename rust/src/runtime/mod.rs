@@ -1,9 +1,9 @@
 //! L3 runtime: model execution backends and their shared substrates.
 //!
 //! Host-safe pieces (always compiled): `artifact` (manifest parsing),
-//! `tensor` (host tensors), `checkpoint` (RSBCKPT1 container), `params`
-//! (named weight store) and `backend` (the [`ExecBackend`] trait the engine
-//! drives). The PJRT pieces — `entry`, [`Model`], [`cpu_client`] and the
+//! `tensor` (host tensors), `checkpoint` (RSBCKPT1 container), `tiered`
+//! (RSBTIER1 hot/cold FFN weight tiering), `params` (named weight store)
+//! and `backend` (the [`ExecBackend`] trait the engine drives). The PJRT pieces — `entry`, [`Model`], [`cpu_client`] and the
 //! [`backend::XlaBackend`] — are the only code that touches the `xla` crate
 //! and are gated behind the `xla` feature; `--no-default-features` builds
 //! run entirely on `crate::hostexec`.
@@ -21,6 +21,7 @@ pub mod entry;
 pub mod paged;
 pub mod params;
 pub mod tensor;
+pub mod tiered;
 
 use std::path::PathBuf;
 #[cfg(feature = "xla")]
@@ -33,6 +34,7 @@ pub use backend::{
     BatchMask, DecodeOut, ExecBackend, MaskRow, PagedDecodeOut, PrefillOut, VerifyOut,
 };
 pub use paged::{KvPool, PagedKvCfg};
+pub use tiered::{TierScratch, TierStats, TieredMeta, TieredStore};
 #[cfg(feature = "xla")]
 pub use backend::XlaBackend;
 #[cfg(feature = "xla")]

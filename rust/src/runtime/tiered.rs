@@ -1,0 +1,823 @@
+//! Hot/cold FFN weight tiering: serve checkpoints bigger than the resident
+//! budget (ROADMAP open item 2, the Turbo Sparse / PowerInfer deployment
+//! trick). The paper's §5.1 reuse skew means a small hot set of neurons
+//! serves most tokens; this module keeps only that hot tier resident and
+//! leaves the cold tier in a page-aligned neuron-major file, read on demand
+//! through the OS page cache.
+//!
+//! ## RSBTIER1 layout (little endian)
+//!
+//! ```text
+//! magic[8] = "RSBTIER1"
+//! u32 version (1)
+//! u32 n_layers, u32 d, u32 f, u32 gated (0|1)
+//! u32 page       (cold-block alignment; the writer uses 4096)
+//! u64 bias_off   (n_layers * f f32: up-projection biases, always resident)
+//! u64 freq_off   (n_layers * f u32: offline firing-frequency histogram,
+//!                 the initial hot ranking; all-zero = rank by index)
+//! u64 cold_off[n_layers]   (page-aligned per-layer cold blocks)
+//! ```
+//!
+//! Each layer's cold block holds `f` fixed-stride neuron records of
+//! `d * (2 + gated)` f32s: the up row, the down row, and (gated archs) the
+//! gate row — one skipped neuron skips all of its rows, one fetched record
+//! brings every row the neuron needs. Payload values are the exact f32
+//! bits of the neuron-major resident weights, so serving any mix of hot
+//! and cold tiers is bit-identical to serving the all-resident model.
+//!
+//! ## Validation rules
+//!
+//! The header is untrusted input (same contract as `checkpoint.rs`): bad
+//! magic/version/dtype, zero or absurd geometry, and any offset or length
+//! that overflows `u64` or runs past the end of the file fail with a clean
+//! [`Error::Checkpoint`] before anything is allocated or read.
+//!
+//! ## Runtime
+//!
+//! [`TieredStore::open`] splits a `resident` byte budget evenly across
+//! layers into fixed hot-slot arrays, pre-filled by the frequency ranking.
+//! The compute path calls [`TieredStore::with_neuron`]: hot neurons are
+//! served from the resident arrays under a read lock (zero copies), cold
+//! neurons are a synchronous positioned read (`pread`) straight from the
+//! file — counted as a cold miss. A background `tier-prefetch` thread
+//! receives trailing-window heat hints ([`TieredStore::hint`]) and swaps
+//! heating neurons in over the least-recently-used resident slots; the
+//! store is dependency-free (no mmap crate): `pread` through the OS page
+//! cache is the portable equivalent.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"RSBTIER1";
+const VERSION: u32 = 1;
+/// Cold-block alignment the writer emits (one x86/arm base page).
+pub const PAGE: u64 = 4096;
+/// Geometry bound: no dimension of a tiered file may exceed this.
+const DIM_CAP: u64 = 1 << 20;
+
+/// Model geometry of a tiered file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TieredMeta {
+    pub n_layers: usize,
+    /// `d_model` (row length of every projection row).
+    pub d: usize,
+    /// `d_ff` (neurons per layer).
+    pub f: usize,
+    /// Gated FFN (llama SwiGLU): records carry a third (gate) row.
+    pub gated: bool,
+}
+
+impl TieredMeta {
+    /// f32s per neuron record: up row + down row (+ gate row).
+    pub fn rec_floats(&self) -> usize {
+        self.d * (2 + usize::from(self.gated))
+    }
+
+    /// Bytes per neuron record.
+    pub fn rec_bytes(&self) -> usize {
+        self.rec_floats() * 4
+    }
+
+    /// Total cold-tier record bytes across all layers.
+    pub fn cold_bytes(&self) -> u64 {
+        (self.n_layers as u64) * (self.f as u64) * (self.rec_bytes() as u64)
+    }
+}
+
+/// Point-in-time counters of a [`TieredStore`] (surfaced through
+/// `ExecBackend::tier_stats` into `EngineMetrics` and Prometheus).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Decode-path accesses served by a synchronous cold-tier read.
+    pub cold_misses: u64,
+    /// Neurons copied into the hot tier by the prefetcher (or `promote`).
+    pub promotions: u64,
+    /// Hot neurons evicted (LRU) to make room for a promotion.
+    pub demotions: u64,
+    /// Resident hot-tier bytes (filled records + always-resident biases).
+    pub resident_bytes: u64,
+    /// Total cold-file record bytes (the checkpoint size tiering avoids).
+    pub cold_bytes: u64,
+    /// Neurons currently resident in the hot tier.
+    pub hot_neurons: u64,
+}
+
+/// Reusable cold-read buffers (keep one per worker thread: a cold miss
+/// costs one `pread` and one byte→f32 decode, no allocations).
+#[derive(Debug, Default)]
+pub struct TierScratch {
+    bytes: Vec<u8>,
+    floats: Vec<f32>,
+}
+
+/// Write a tiered checkpoint. `biases[l]` is layer `l`'s `[f]` up-bias
+/// vector; `freq` is the optional flat `[n_layers * f]` offline firing
+/// histogram (the initial hot ranking); `fill(l, j, rec)` must write neuron
+/// `(l, j)`'s record — up row, down row, then the gate row when gated —
+/// into `rec` (`rec_floats` long).
+pub fn write_tiered(
+    path: &Path,
+    meta: &TieredMeta,
+    biases: &[&[f32]],
+    freq: Option<&[u32]>,
+    fill: &mut dyn FnMut(usize, usize, &mut [f32]),
+) -> Result<()> {
+    let (l, d, f) = (meta.n_layers, meta.d, meta.f);
+    if l == 0 || d == 0 || f == 0 {
+        return Err(Error::Checkpoint("tiered writer: zero geometry".into()));
+    }
+    if biases.len() != l || biases.iter().any(|b| b.len() != f) {
+        return Err(Error::Checkpoint(
+            "tiered writer: biases must be [n_layers][f]".into(),
+        ));
+    }
+    if freq.is_some_and(|fr| fr.len() != l * f) {
+        return Err(Error::Checkpoint(
+            "tiered writer: freq must be [n_layers * f]".into(),
+        ));
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let header_len = (8 + 6 * 4 + 2 * 8 + 8 * l) as u64;
+    let bias_off = header_len;
+    let freq_off = bias_off + (l * f * 4) as u64;
+    let layer_bytes = (f * meta.rec_bytes()) as u64;
+    let mut cold_off = Vec::with_capacity(l);
+    let mut at = freq_off + (l * f * 4) as u64;
+    for _ in 0..l {
+        at = at.div_ceil(PAGE) * PAGE;
+        cold_off.push(at);
+        at += layer_bytes;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut w = BufWriter::new(File::create(&tmp)?);
+        w.write_all(MAGIC)?;
+        for v in [
+            VERSION,
+            l as u32,
+            d as u32,
+            f as u32,
+            u32::from(meta.gated),
+            PAGE as u32,
+        ] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&bias_off.to_le_bytes())?;
+        w.write_all(&freq_off.to_le_bytes())?;
+        for off in &cold_off {
+            w.write_all(&off.to_le_bytes())?;
+        }
+        for b in biases {
+            for v in *b {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        for i in 0..l * f {
+            let c = freq.map_or(0, |fr| fr[i]);
+            w.write_all(&c.to_le_bytes())?;
+        }
+        let mut rec = vec![0.0f32; meta.rec_floats()];
+        let mut pos = freq_off + (l * f * 4) as u64;
+        for (li, off) in cold_off.iter().enumerate() {
+            // zero-pad up to the page-aligned cold block
+            for _ in pos..*off {
+                w.write_all(&[0u8])?;
+            }
+            pos = *off;
+            for j in 0..f {
+                fill(li, j, &mut rec);
+                for v in &rec {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            pos += layer_bytes;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Mutable hot-tier maps of one layer (behind the layer's RwLock).
+struct LayerState {
+    /// `[f]`: hot-slot index of each neuron, -1 = cold.
+    slot_of: Vec<i32>,
+    /// `[slots]`: neuron id resident in each slot, `u32::MAX` = empty.
+    neuron_of: Vec<u32>,
+    /// `[slots * rec_floats]` resident records.
+    data: Vec<f32>,
+}
+
+struct TierLayer {
+    state: RwLock<LayerState>,
+    /// `[slots]` last-touch clocks (outside the lock: hot reads only need
+    /// the shared read guard plus one relaxed store).
+    lru: Vec<AtomicU64>,
+}
+
+/// An open tiered checkpoint: resident hot tier + pread cold tier.
+pub struct TieredStore {
+    file: File,
+    meta: TieredMeta,
+    cold_off: Vec<u64>,
+    /// `[n_layers][f]` up-projection biases (always resident).
+    biases: Vec<Vec<f32>>,
+    /// Hot slots per layer (0 = everything cold, `f` = fully resident).
+    slots_per_layer: usize,
+    layers: Vec<TierLayer>,
+    clock: AtomicU64,
+    cold_misses: AtomicU64,
+    promotions: AtomicU64,
+    demotions: AtomicU64,
+    hot_count: AtomicU64,
+    /// Max neurons promoted per layer per hint (prefetcher batch cap).
+    prefetch_cap: usize,
+    tx: Mutex<Option<SyncSender<Vec<bool>>>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// Positioned read that never moves a shared cursor.
+fn pread(file: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.read_exact_at(buf, off)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        // no positioned-read API: serialize seek+read on the shared cursor
+        static CURSOR: Mutex<()> = Mutex::new(());
+        let _g = CURSOR.lock().unwrap();
+        let mut f = file;
+        f.seek(SeekFrom::Start(off))?;
+        f.read_exact(buf)
+    }
+}
+
+fn read_u32_at(file: &File, off: u64) -> Result<u32> {
+    let mut b = [0u8; 4];
+    pread(file, &mut b, off)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64_at(file: &File, off: u64) -> Result<u64> {
+    let mut b = [0u8; 8];
+    pread(file, &mut b, off)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+impl TieredStore {
+    /// Open and validate a tiered checkpoint, build the hot tier under a
+    /// `resident` byte budget (split evenly across layers), pre-fill it by
+    /// the file's frequency ranking, and — when `prefetch > 0` — spawn the
+    /// background promotion thread (`prefetch` caps neurons promoted per
+    /// layer per hint).
+    pub fn open(path: &Path, resident: u64, prefetch: usize) -> Result<Arc<TieredStore>> {
+        let bad = |what: String| Error::Checkpoint(format!("{}: {what}", path.display()));
+        let file = File::open(path).map_err(|e| bad(e.to_string()))?;
+        let file_len = file.metadata().map_err(|e| bad(e.to_string()))?.len();
+        let mut magic = [0u8; 8];
+        pread(&file, &mut magic, 0).map_err(|_| bad("truncated header".into()))?;
+        if &magic != MAGIC {
+            return Err(bad("bad magic (not an RSBTIER1 file)".into()));
+        }
+        let version = read_u32_at(&file, 8).map_err(|_| bad("truncated header".into()))?;
+        if version != VERSION {
+            return Err(bad(format!("unsupported version {version}")));
+        }
+        let mut hdr = [0u32; 5];
+        for (i, v) in hdr.iter_mut().enumerate() {
+            *v = read_u32_at(&file, 12 + 4 * i as u64)
+                .map_err(|_| bad("truncated header".into()))?;
+        }
+        let [l, d, f, gated, page] = hdr;
+        if l == 0 || d == 0 || f == 0 {
+            return Err(bad("zero geometry".into()));
+        }
+        if u64::from(l) > DIM_CAP || u64::from(d) > DIM_CAP || u64::from(f) > DIM_CAP {
+            return Err(bad("absurd geometry".into()));
+        }
+        if gated > 1 {
+            return Err(bad(format!("bad gated flag {gated}")));
+        }
+        if page == 0 || u64::from(page) > (1 << 24) {
+            return Err(bad(format!("bad page alignment {page}")));
+        }
+        let meta = TieredMeta {
+            n_layers: l as usize,
+            d: d as usize,
+            f: f as usize,
+            gated: gated == 1,
+        };
+        // all section bounds in checked u64 against the real file length
+        let section = (u64::from(l))
+            .checked_mul(u64::from(f))
+            .and_then(|n| n.checked_mul(4))
+            .ok_or_else(|| bad("bias/freq section length overflows".into()))?;
+        let layer_bytes = (u64::from(f))
+            .checked_mul(meta.rec_bytes() as u64)
+            .ok_or_else(|| bad("cold block length overflows".into()))?;
+        let bias_off = read_u64_at(&file, 32).map_err(|_| bad("truncated header".into()))?;
+        let freq_off = read_u64_at(&file, 40).map_err(|_| bad("truncated header".into()))?;
+        for (name, off) in [("bias", bias_off), ("freq", freq_off)] {
+            if off.checked_add(section).is_none_or(|end| end > file_len) {
+                return Err(bad(format!("{name} section runs past end of file")));
+            }
+        }
+        let mut cold_off = Vec::with_capacity(meta.n_layers);
+        for li in 0..meta.n_layers {
+            let off = read_u64_at(&file, 48 + 8 * li as u64)
+                .map_err(|_| bad("truncated header".into()))?;
+            if off.checked_add(layer_bytes).is_none_or(|end| end > file_len) {
+                return Err(bad(format!("layer {li} cold block runs past end of file")));
+            }
+            cold_off.push(off);
+        }
+
+        // resident biases + frequency histogram
+        let mut section_buf = vec![0u8; section as usize];
+        pread(&file, &mut section_buf, bias_off).map_err(|e| bad(e.to_string()))?;
+        let biases: Vec<Vec<f32>> = (0..meta.n_layers)
+            .map(|li| {
+                section_buf[li * meta.f * 4..(li + 1) * meta.f * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            })
+            .collect();
+        pread(&file, &mut section_buf, freq_off).map_err(|e| bad(e.to_string()))?;
+        let freq: Vec<u32> = section_buf
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+
+        let slots_per_layer =
+            ((resident / meta.n_layers as u64) / meta.rec_bytes() as u64).min(meta.f as u64)
+                as usize;
+        let layers = (0..meta.n_layers)
+            .map(|_| TierLayer {
+                state: RwLock::new(LayerState {
+                    slot_of: vec![-1; meta.f],
+                    neuron_of: vec![u32::MAX; slots_per_layer],
+                    data: vec![0.0; slots_per_layer * meta.rec_floats()],
+                }),
+                lru: (0..slots_per_layer).map(|_| AtomicU64::new(0)).collect(),
+            })
+            .collect();
+        let store = Arc::new(TieredStore {
+            file,
+            meta,
+            cold_off,
+            biases,
+            slots_per_layer,
+            layers,
+            clock: AtomicU64::new(0),
+            cold_misses: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
+            demotions: AtomicU64::new(0),
+            hot_count: AtomicU64::new(0),
+            prefetch_cap: if prefetch > 0 { prefetch } else { usize::MAX },
+            tx: Mutex::new(None),
+            handle: Mutex::new(None),
+        });
+        store.initial_fill(&freq)?;
+        if prefetch > 0 {
+            store.spawn_prefetch()?;
+        }
+        Ok(store)
+    }
+
+    /// Pre-fill each layer's hot slots with its most-frequent neurons
+    /// (ties broken by index; an all-zero histogram ranks by index).
+    fn initial_fill(&self, freq: &[u32]) -> Result<()> {
+        let mut scratch = TierScratch::default();
+        for (li, lay) in self.layers.iter().enumerate() {
+            let lf = &freq[li * self.meta.f..(li + 1) * self.meta.f];
+            let mut order: Vec<usize> = (0..self.meta.f).collect();
+            order.sort_by_key(|&j| (std::cmp::Reverse(lf[j]), j));
+            order.truncate(self.slots_per_layer);
+            // read in file order for locality; slot assignment stays ranked
+            let mut st = lay.state.write().unwrap();
+            for (slot, &j) in order.iter().enumerate() {
+                self.read_record(li, j, &mut scratch)?;
+                st.slot_of[j] = slot as i32;
+                st.neuron_of[slot] = j as u32;
+                st.data[slot * self.meta.rec_floats()..(slot + 1) * self.meta.rec_floats()]
+                    .copy_from_slice(&scratch.floats);
+                self.hot_count.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    fn spawn_prefetch(self: &Arc<Self>) -> Result<()> {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Vec<bool>>(2);
+        // the thread holds only a Weak: dropping the last user Arc ends it
+        let weak = Arc::downgrade(self);
+        let handle = std::thread::Builder::new()
+            .name("tier-prefetch".into())
+            .spawn(move || {
+                while let Ok(mut heat) = rx.recv() {
+                    // coalesce to the freshest hint under backpressure
+                    while let Ok(next) = rx.try_recv() {
+                        heat = next;
+                    }
+                    let Some(store) = weak.upgrade() else { break };
+                    let _ = store.promote(&heat);
+                }
+            })?;
+        *self.tx.lock().unwrap() = Some(tx);
+        *self.handle.lock().unwrap() = Some(handle);
+        Ok(())
+    }
+
+    pub fn meta(&self) -> &TieredMeta {
+        &self.meta
+    }
+
+    /// Layer `l`'s always-resident up-bias vector (`[f]`).
+    pub fn biases(&self, layer: usize) -> &[f32] {
+        &self.biases[layer]
+    }
+
+    /// Hot slots per layer under the opened budget.
+    pub fn slots_per_layer(&self) -> usize {
+        self.slots_per_layer
+    }
+
+    pub fn stats(&self) -> TierStats {
+        let hot = self.hot_count.load(Ordering::Relaxed);
+        let bias_bytes = (self.meta.n_layers * self.meta.f * 4) as u64;
+        TierStats {
+            cold_misses: self.cold_misses.load(Ordering::Relaxed),
+            promotions: self.promotions.load(Ordering::Relaxed),
+            demotions: self.demotions.load(Ordering::Relaxed),
+            resident_bytes: hot * self.meta.rec_bytes() as u64 + bias_bytes,
+            cold_bytes: self.meta.cold_bytes(),
+            hot_neurons: hot,
+        }
+    }
+
+    /// One positioned read of neuron `(layer, j)`'s record into `scratch`.
+    fn read_record(&self, layer: usize, j: usize, scratch: &mut TierScratch) -> Result<()> {
+        let rec_bytes = self.meta.rec_bytes();
+        scratch.bytes.resize(rec_bytes, 0);
+        scratch.floats.resize(self.meta.rec_floats(), 0.0);
+        let off = self.cold_off[layer] + (j as u64) * rec_bytes as u64;
+        pread(&self.file, &mut scratch.bytes, off)
+            .map_err(|e| Error::Checkpoint(format!("tiered cold read failed: {e}")))?;
+        for (dst, src) in scratch
+            .floats
+            .iter_mut()
+            .zip(scratch.bytes.chunks_exact(4))
+        {
+            *dst = f32::from_le_bytes(src.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    /// Run `use_rows(up, down, gate)` over neuron `(layer, j)`'s weight
+    /// rows. Hot neurons are served zero-copy from the resident tier (and
+    /// LRU-touched); cold neurons cost one synchronous `pread` into
+    /// `scratch` and bump `cold_misses`. Either way the rows carry the
+    /// exact f32 bits of the all-resident model, so callers are
+    /// bit-identical regardless of tier placement.
+    pub fn with_neuron<R>(
+        &self,
+        layer: usize,
+        j: usize,
+        scratch: &mut TierScratch,
+        use_rows: impl FnOnce(&[f32], &[f32], Option<&[f32]>) -> R,
+    ) -> Result<R> {
+        let d = self.meta.d;
+        let rf = self.meta.rec_floats();
+        let lay = &self.layers[layer];
+        {
+            let st = lay.state.read().unwrap();
+            let slot = st.slot_of[j];
+            if slot >= 0 {
+                let slot = slot as usize;
+                lay.lru[slot]
+                    .store(self.clock.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
+                let rec = &st.data[slot * rf..(slot + 1) * rf];
+                let gate = self.meta.gated.then(|| &rec[2 * d..3 * d]);
+                return Ok(use_rows(&rec[..d], &rec[d..2 * d], gate));
+            }
+        }
+        // cold miss: synchronous fault straight from the file (counted)
+        self.cold_misses.fetch_add(1, Ordering::Relaxed);
+        self.read_record(layer, j, scratch)?;
+        let rec = &scratch.floats[..rf];
+        let gate = self.meta.gated.then(|| &rec[2 * d..3 * d]);
+        Ok(use_rows(&rec[..d], &rec[d..2 * d], gate))
+    }
+
+    /// Non-blocking promotion hint: flat `[n_layers * f]` heat bits (the
+    /// predictor's trailing-window union). Dropped when the prefetcher is
+    /// disabled or busy — hints are advisory, correctness never depends on
+    /// them.
+    pub fn hint(&self, heat: &[bool]) {
+        if let Some(tx) = self.tx.lock().unwrap().as_ref() {
+            let _ = tx.try_send(heat.to_vec());
+        }
+    }
+
+    /// Synchronously promote heating neurons into the hot tier, evicting
+    /// least-recently-used slots whose neuron is not in `heat` (capped at
+    /// the prefetch batch size per layer). Returns `(promoted, demoted)`.
+    /// This is the prefetch thread's work function; tests and benches call
+    /// it directly for deterministic tier movement.
+    pub fn promote(&self, heat: &[bool]) -> Result<(u64, u64)> {
+        if heat.len() != self.meta.n_layers * self.meta.f {
+            return Err(Error::msg(format!(
+                "tier hint: expected {} bits, got {}",
+                self.meta.n_layers * self.meta.f,
+                heat.len()
+            )));
+        }
+        let rf = self.meta.rec_floats();
+        let mut scratch = TierScratch::default();
+        let (mut promoted, mut demoted) = (0u64, 0u64);
+        for (li, lay) in self.layers.iter().enumerate() {
+            let want = &heat[li * self.meta.f..(li + 1) * self.meta.f];
+            // plan under the read lock: wanted-but-cold neurons, and victim
+            // slots (empty or not wanted) ordered most→least recent so
+            // `pop()` yields the LRU victim first
+            let (cold, mut victims) = {
+                let st = lay.state.read().unwrap();
+                let cold: Vec<usize> = (0..self.meta.f)
+                    .filter(|&j| want[j] && st.slot_of[j] < 0)
+                    .take(self.prefetch_cap)
+                    .collect();
+                let mut victims: Vec<usize> = (0..self.slots_per_layer)
+                    .filter(|&s| {
+                        let n = st.neuron_of[s];
+                        n == u32::MAX || !want[n as usize]
+                    })
+                    .collect();
+                victims.sort_by_key(|&s| std::cmp::Reverse(lay.lru[s].load(Ordering::Relaxed)));
+                (cold, victims)
+            };
+            for j in cold {
+                let Some(slot) = victims.pop() else { break };
+                // read outside the write lock: decode rows keep flowing
+                self.read_record(li, j, &mut scratch)?;
+                let mut st = lay.state.write().unwrap();
+                if st.slot_of[j] >= 0 {
+                    continue; // another promotion won the race
+                }
+                let old = st.neuron_of[slot];
+                if old != u32::MAX {
+                    if want[old as usize] {
+                        continue; // victim became wanted meanwhile: keep it
+                    }
+                    st.slot_of[old as usize] = -1;
+                    demoted += 1;
+                } else {
+                    self.hot_count.fetch_add(1, Ordering::Relaxed);
+                }
+                st.neuron_of[slot] = j as u32;
+                st.slot_of[j] = slot as i32;
+                st.data[slot * rf..(slot + 1) * rf].copy_from_slice(&scratch.floats[..rf]);
+                lay.lru[slot]
+                    .store(self.clock.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
+                promoted += 1;
+            }
+        }
+        self.promotions.fetch_add(promoted, Ordering::Relaxed);
+        self.demotions.fetch_add(demoted, Ordering::Relaxed);
+        Ok((promoted, demoted))
+    }
+}
+
+impl Drop for TieredStore {
+    fn drop(&mut self) {
+        // close the channel first so a blocked recv() wakes and exits
+        if let Ok(tx) = self.tx.get_mut() {
+            tx.take();
+        }
+        if let Ok(handle) = self.handle.get_mut() {
+            if let Some(h) = handle.take() {
+                // the prefetch thread can hold the last transient Arc: never
+                // join from the thread being joined
+                if h.thread().id() != std::thread::current().id() {
+                    let _ = h.join();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("rsb_tier_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Deterministic record value: identifies (layer, neuron, float index).
+    fn rec_value(l: usize, j: usize, k: usize) -> f32 {
+        (l * 10_000 + j * 100 + k) as f32 * 0.5 - 3.0
+    }
+
+    fn write_fixture(path: &Path, meta: &TieredMeta, freq: Option<&[u32]>) {
+        let biases: Vec<Vec<f32>> = (0..meta.n_layers)
+            .map(|l| (0..meta.f).map(|j| (l * meta.f + j) as f32 * 0.25).collect())
+            .collect();
+        let bias_refs: Vec<&[f32]> = biases.iter().map(|b| b.as_slice()).collect();
+        write_tiered(path, meta, &bias_refs, freq, &mut |l, j, rec| {
+            for (k, v) in rec.iter_mut().enumerate() {
+                *v = rec_value(l, j, k);
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn roundtrip_hot_and_cold_rows_match_written_values() {
+        let d = dir("rt");
+        let path = d.join("m.tier");
+        let meta = TieredMeta { n_layers: 2, d: 4, f: 8, gated: true };
+        write_fixture(&path, &meta, None);
+        // budget for exactly 3 slots/layer
+        let budget = (2 * 3 * meta.rec_bytes()) as u64;
+        let store = TieredStore::open(&path, budget, 0).unwrap();
+        assert_eq!(store.meta(), &meta);
+        assert_eq!(store.slots_per_layer(), 3);
+        assert_eq!(store.biases(1)[2], (meta.f + 2) as f32 * 0.25);
+        let mut scratch = TierScratch::default();
+        for l in 0..2 {
+            for j in 0..meta.f {
+                store
+                    .with_neuron(l, j, &mut scratch, |up, down, gate| {
+                        assert_eq!(up.len(), 4);
+                        assert_eq!(down.len(), 4);
+                        let gate = gate.expect("gated record");
+                        for k in 0..4 {
+                            assert_eq!(up[k], rec_value(l, j, k));
+                            assert_eq!(down[k], rec_value(l, j, 4 + k));
+                            assert_eq!(gate[k], rec_value(l, j, 8 + k));
+                        }
+                    })
+                    .unwrap();
+            }
+        }
+        // zero freq histogram: neurons 0..3 resident, the rest were misses
+        let s = store.stats();
+        assert_eq!(s.hot_neurons, 6);
+        assert_eq!(s.cold_misses, 2 * (meta.f as u64 - 3));
+        assert_eq!(s.cold_bytes, meta.cold_bytes());
+        assert_eq!(
+            s.resident_bytes,
+            6 * meta.rec_bytes() as u64 + (2 * meta.f * 4) as u64
+        );
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn freq_histogram_ranks_the_initial_hot_set() {
+        let d = dir("freq");
+        let path = d.join("m.tier");
+        let meta = TieredMeta { n_layers: 1, d: 2, f: 6, gated: false };
+        let mut freq = vec![0u32; 6];
+        freq[4] = 9;
+        freq[1] = 5;
+        write_fixture(&path, &meta, Some(&freq));
+        let budget = (2 * meta.rec_bytes()) as u64;
+        let store = TieredStore::open(&path, budget, 0).unwrap();
+        let mut scratch = TierScratch::default();
+        for j in [4usize, 1] {
+            store.with_neuron(0, j, &mut scratch, |_, _, _| ()).unwrap();
+        }
+        assert_eq!(store.stats().cold_misses, 0, "ranked neurons must be hot");
+        store.with_neuron(0, 0, &mut scratch, |_, _, _| ()).unwrap();
+        assert_eq!(store.stats().cold_misses, 1);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn promote_swaps_lru_slots_and_counts() {
+        let d = dir("promo");
+        let path = d.join("m.tier");
+        let meta = TieredMeta { n_layers: 1, d: 2, f: 6, gated: false };
+        write_fixture(&path, &meta, None);
+        let store =
+            TieredStore::open(&path, (2 * meta.rec_bytes()) as u64, 0).unwrap();
+        let mut scratch = TierScratch::default();
+        // initial hot = {0, 1}; touch 1 so 0 is the LRU victim
+        store.with_neuron(0, 1, &mut scratch, |_, _, _| ()).unwrap();
+        let mut heat = vec![false; 6];
+        heat[5] = true;
+        heat[1] = true; // already hot: no movement for it
+        let (p, e) = store.promote(&heat).unwrap();
+        assert_eq!((p, e), (1, 1));
+        store.with_neuron(0, 5, &mut scratch, |up, _, _| {
+            assert_eq!(up[0], rec_value(0, 5, 0));
+        })
+        .unwrap();
+        store.with_neuron(0, 1, &mut scratch, |_, _, _| ()).unwrap();
+        assert_eq!(store.stats().cold_misses, 0, "promoted + kept stay hot");
+        store.with_neuron(0, 0, &mut scratch, |_, _, _| ()).unwrap();
+        let s = store.stats();
+        assert_eq!(s.cold_misses, 1, "demoted neuron is cold again");
+        assert_eq!(s.promotions, 1);
+        assert_eq!(s.demotions, 1);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn prefetch_thread_promotes_on_hint() {
+        let d = dir("thread");
+        let path = d.join("m.tier");
+        let meta = TieredMeta { n_layers: 1, d: 2, f: 6, gated: false };
+        write_fixture(&path, &meta, None);
+        let store =
+            TieredStore::open(&path, (2 * meta.rec_bytes()) as u64, 4).unwrap();
+        let mut heat = vec![false; 6];
+        heat[3] = true;
+        store.hint(&heat);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while store.stats().promotions == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(store.stats().promotions >= 1, "prefetch thread must promote");
+        drop(store); // must join cleanly (no deadlock)
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn zero_budget_serves_everything_cold_and_stays_correct() {
+        let d = dir("cold");
+        let path = d.join("m.tier");
+        let meta = TieredMeta { n_layers: 1, d: 3, f: 4, gated: false };
+        write_fixture(&path, &meta, None);
+        let store = TieredStore::open(&path, 0, 0).unwrap();
+        assert_eq!(store.slots_per_layer(), 0);
+        let mut scratch = TierScratch::default();
+        for j in 0..4 {
+            store
+                .with_neuron(0, j, &mut scratch, |up, down, gate| {
+                    assert!(gate.is_none());
+                    assert_eq!(up[0], rec_value(0, j, 0));
+                    assert_eq!(down[0], rec_value(0, j, 3));
+                })
+                .unwrap();
+        }
+        assert_eq!(store.stats().cold_misses, 4);
+        // promotion with no slots is a no-op, not a panic
+        assert_eq!(store.promote(&[true; 4]).unwrap(), (0, 0));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_headers() {
+        let d = dir("bad");
+        let check = |name: &str, bytes: &[u8]| {
+            let p = d.join(name);
+            std::fs::write(&p, bytes).unwrap();
+            let err = TieredStore::open(&p, 1 << 20, 0).unwrap_err();
+            assert!(
+                matches!(err, Error::Checkpoint(_)),
+                "{name}: wrong error {err:?}"
+            );
+        };
+        check("magic", b"NOTTIER1aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa");
+        check("short", b"RSBTIER1");
+        let mut zero_geom = Vec::new();
+        zero_geom.extend_from_slice(MAGIC);
+        zero_geom.extend_from_slice(&1u32.to_le_bytes()); // version
+        zero_geom.extend_from_slice(&[0u8; 4 * 5 + 8 * 2]); // zero geometry
+        check("zerog", &zero_geom);
+        // valid-looking geometry whose sections run past EOF
+        let mut past_eof = Vec::new();
+        past_eof.extend_from_slice(MAGIC);
+        for v in [1u32, 2, 4, 8, 0, 4096] {
+            past_eof.extend_from_slice(&v.to_le_bytes());
+        }
+        past_eof.extend_from_slice(&48u64.to_le_bytes()); // bias_off
+        past_eof.extend_from_slice(&48u64.to_le_bytes()); // freq_off
+        check("eof", &past_eof);
+        // geometry that overflows u64 arithmetic
+        let mut overflow = Vec::new();
+        overflow.extend_from_slice(MAGIC);
+        for v in [1u32, 1 << 19, 1 << 19, 1 << 19, 0, 4096] {
+            overflow.extend_from_slice(&v.to_le_bytes());
+        }
+        overflow.extend_from_slice(&[0u8; 16]);
+        check("overflow", &overflow);
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

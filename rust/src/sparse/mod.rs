@@ -23,8 +23,8 @@ pub mod quant;
 pub mod simd;
 
 pub use quant::{
-    dense_ffn_matvec_q8, sparse_ffn_batch_rows_q8, sparse_ffn_bytes_q8, sparse_ffn_matvec_q8,
-    FfnWeightsQ8, QuantMat,
+    dense_ffn_matvec_q8, quantize_row, sparse_ffn_batch_rows_q8, sparse_ffn_bytes_q8,
+    sparse_ffn_matvec_q8, FfnWeightsQ8, QuantMat,
 };
 pub use simd::SimdLevel;
 

@@ -27,6 +27,23 @@ pub struct QuantMat {
     pub scale: Vec<f32>,
 }
 
+/// Symmetric quantization of one f32 row into `out`, returning the scale.
+/// Rows are quantized independently, so quantizing a single row on demand
+/// (the weight-tiering cold path) produces bit-identical bytes and scale to
+/// quantizing the whole matrix up front via [`QuantMat::quantize`].
+#[inline]
+pub fn quantize_row(row: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert_eq!(row.len(), out.len());
+    let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    // an all-zero row quantizes to zeros under any scale; 1.0 keeps
+    // the dequantized row exactly zero without a divide-by-zero
+    let s = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    for (qq, &v) in out.iter_mut().zip(row) {
+        *qq = (v / s).round().clamp(-127.0, 127.0) as i8;
+    }
+    s
+}
+
 impl QuantMat {
     /// Symmetric per-row quantization of a `[rows × d]` f32 matrix.
     pub fn quantize(w: &[f32], rows: usize, d: usize) -> QuantMat {
@@ -34,15 +51,7 @@ impl QuantMat {
         let mut q = vec![0i8; rows * d];
         let mut scale = vec![0.0f32; rows];
         for r in 0..rows {
-            let row = &w[r * d..(r + 1) * d];
-            let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            // an all-zero row quantizes to zeros under any scale; 1.0 keeps
-            // the dequantized row exactly zero without a divide-by-zero
-            let s = if amax > 0.0 { amax / 127.0 } else { 1.0 };
-            scale[r] = s;
-            for (qq, &v) in q[r * d..(r + 1) * d].iter_mut().zip(row) {
-                *qq = (v / s).round().clamp(-127.0, 127.0) as i8;
-            }
+            scale[r] = quantize_row(&w[r * d..(r + 1) * d], &mut q[r * d..(r + 1) * d]);
         }
         QuantMat { rows, d, q, scale }
     }

@@ -1,0 +1,294 @@
+//! Untrusted-input hardening: corrupt and truncated checkpoint files must
+//! fail with a clean `Error::Checkpoint` — never a panic, an arithmetic
+//! overflow, or an unbounded allocation — for BOTH container formats:
+//!
+//! - classic `RSBCKPT1` tensor checkpoints (`runtime::checkpoint::load`):
+//!   truncated payloads, dims larger than the remaining file, `u64`
+//!   overflow shapes, zero-length dims, absurd tensor counts, unknown
+//!   dtype codes, non-utf8 names;
+//! - `RSBTIER1` tiered FFN weight files (`runtime::tiered::TieredStore`):
+//!   bad magic/version, zero or absurd geometry, bad gated/page fields,
+//!   section offsets past end-of-file, truncation at every section.
+//!
+//! CI additionally runs this suite in release with
+//! `-C debug-assertions=on`, so any checked-arithmetic regression that
+//! would silently wrap in a normal release build aborts loudly here.
+
+use std::path::{Path, PathBuf};
+
+use rsb::error::Error;
+use rsb::runtime::checkpoint;
+use rsb::runtime::tiered::{self, TieredMeta, TieredStore};
+use rsb::runtime::Tensor;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("rsb_corrupt_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Every hostile input must surface as `Error::Checkpoint` specifically:
+/// an `Io` leak means a read raced past a bounds check, a panic means the
+/// header was trusted somewhere.
+fn assert_checkpoint_err<T>(what: &str, r: rsb::Result<T>) {
+    match r {
+        Err(Error::Checkpoint(msg)) => {
+            assert!(!msg.is_empty(), "{what}: empty Checkpoint message")
+        }
+        Err(e) => panic!("{what}: expected Error::Checkpoint, got {e:?}"),
+        Ok(_) => panic!("{what}: expected Error::Checkpoint, got Ok"),
+    }
+}
+
+fn push_u32(v: &mut Vec<u8>, x: u32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_u64(v: &mut Vec<u8>, x: u64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+/// `RSBCKPT1` magic + caller-built body.
+fn classic_file(dir: &Path, name: &str, build: impl FnOnce(&mut Vec<u8>)) -> PathBuf {
+    let mut bytes = b"RSBCKPT1".to_vec();
+    build(&mut bytes);
+    let path = dir.join(name);
+    std::fs::write(&path, &bytes).unwrap();
+    path
+}
+
+/// One well-formed header entry for tensor `a` (dtype f32), dims chosen by
+/// the caller, NO payload bytes appended.
+fn classic_entry(v: &mut Vec<u8>, dims: &[u64]) {
+    push_u32(v, 1); // n_tensors
+    push_u32(v, 1); // name_len
+    v.push(b'a');
+    v.push(0); // dtype f32
+    push_u32(v, dims.len() as u32);
+    for &d in dims {
+        push_u64(v, d);
+    }
+}
+
+#[test]
+fn classic_rejects_truncated_payload() {
+    let dir = tmpdir("classic_trunc");
+    let path = dir.join("ok.ckpt");
+    let t = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+    checkpoint::save(&path, &[("a".into(), &t)]).unwrap();
+    checkpoint::load(&path).unwrap(); // sanity: intact file loads
+
+    let full = std::fs::read(&path).unwrap();
+    // cut mid-payload and at every header boundary down to the bare magic
+    for keep in [full.len() - 4, full.len() - 20, 30, 13, 12, 9, 8, 3] {
+        let cut = dir.join(format!("cut_{keep}.ckpt"));
+        std::fs::write(&cut, &full[..keep]).unwrap();
+        assert_checkpoint_err(
+            &format!("classic truncated to {keep} bytes"),
+            checkpoint::load(&cut),
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn classic_rejects_dims_past_remaining_bytes() {
+    let dir = tmpdir("classic_dims");
+    // a ~40-byte file declaring a 4 GiB tensor: must be rejected by the
+    // remaining-length bound, not by attempting the allocation
+    let path = classic_file(&dir, "big.ckpt", |v| classic_entry(v, &[1 << 30]));
+    assert_checkpoint_err("declared 4 GiB payload", checkpoint::load(&path));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn classic_rejects_overflowing_shapes() {
+    let dir = tmpdir("classic_overflow");
+    // numel = u64::MAX * 2 overflows the element-count accumulator
+    let p1 = classic_file(&dir, "numel.ckpt", |v| classic_entry(v, &[u64::MAX, 2]));
+    assert_checkpoint_err("numel overflow", checkpoint::load(&p1));
+    // numel fits but numel * 4 (payload bytes) overflows
+    let p2 = classic_file(&dir, "payload.ckpt", |v| classic_entry(v, &[1 << 62]));
+    assert_checkpoint_err("payload-length overflow", checkpoint::load(&p2));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn classic_rejects_zero_dims_and_absurd_headers() {
+    let dir = tmpdir("classic_hdr");
+    let zero = classic_file(&dir, "zero.ckpt", |v| classic_entry(v, &[4, 0]));
+    assert_checkpoint_err("zero-length dimension", checkpoint::load(&zero));
+
+    let count = classic_file(&dir, "count.ckpt", |v| push_u32(v, u32::MAX));
+    assert_checkpoint_err("absurd tensor count", checkpoint::load(&count));
+
+    let rank = classic_file(&dir, "rank.ckpt", |v| {
+        push_u32(v, 1);
+        push_u32(v, 1);
+        v.push(b'a');
+        v.push(0);
+        push_u32(v, 17); // rank cap is 16
+    });
+    assert_checkpoint_err("absurd rank", checkpoint::load(&rank));
+
+    let name = classic_file(&dir, "name.ckpt", |v| {
+        push_u32(v, 1);
+        push_u32(v, u32::MAX); // name longer than the file
+    });
+    assert_checkpoint_err("absurd name length", checkpoint::load(&name));
+
+    let utf8 = classic_file(&dir, "utf8.ckpt", |v| {
+        push_u32(v, 1);
+        push_u32(v, 1);
+        v.push(0xff); // not utf-8
+        v.push(0);
+        push_u32(v, 0);
+    });
+    assert_checkpoint_err("non-utf8 name", checkpoint::load(&utf8));
+
+    let dtype = classic_file(&dir, "dtype.ckpt", |v| {
+        push_u32(v, 1);
+        push_u32(v, 1);
+        v.push(b'a');
+        v.push(9); // unknown dtype code
+        push_u32(v, 1);
+        push_u64(v, 1);
+        push_u32(v, 0); // 4 payload bytes
+    });
+    assert_checkpoint_err("unknown dtype", checkpoint::load(&dtype));
+
+    let magic = dir.join("magic.ckpt");
+    std::fs::write(&magic, b"NOTRIGHT____").unwrap();
+    assert_checkpoint_err("bad magic", checkpoint::load(&magic));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A small valid `RSBTIER1` file (2 layers, d 4, f 8, non-gated).
+fn valid_tier(path: &Path) {
+    let meta = TieredMeta {
+        n_layers: 2,
+        d: 4,
+        f: 8,
+        gated: false,
+    };
+    let biases = vec![vec![0.25f32; 8]; 2];
+    let brefs: Vec<&[f32]> = biases.iter().map(|b| b.as_slice()).collect();
+    tiered::write_tiered(path, &meta, &brefs, None, &mut |l, j, rec| {
+        for (k, v) in rec.iter_mut().enumerate() {
+            *v = (l * 1000 + j * 100 + k) as f32;
+        }
+    })
+    .unwrap();
+}
+
+/// Copy the valid tier file, let the caller damage the bytes, return the
+/// damaged path.
+fn corrupt_tier(dir: &Path, name: &str, damage: impl FnOnce(&mut Vec<u8>)) -> PathBuf {
+    let src = dir.join("valid.tier");
+    if !src.exists() {
+        valid_tier(&src);
+    }
+    let mut bytes = std::fs::read(&src).unwrap();
+    damage(&mut bytes);
+    let path = dir.join(name);
+    std::fs::write(&path, &bytes).unwrap();
+    path
+}
+
+#[test]
+fn tiered_rejects_corrupt_headers() {
+    let dir = tmpdir("tier_hdr");
+    // sanity: the pristine file opens and reports sane stats
+    let src = dir.join("valid.tier");
+    valid_tier(&src);
+    let store = TieredStore::open(&src, 1 << 20, 0).unwrap();
+    assert_eq!(store.stats().cold_misses, 0);
+    drop(store);
+
+    let cases: Vec<(&str, PathBuf)> = vec![
+        (
+            "bad magic",
+            corrupt_tier(&dir, "magic.tier", |b| b[0] = b'X'),
+        ),
+        (
+            "unsupported version",
+            corrupt_tier(&dir, "version.tier", |b| b[8..12].copy_from_slice(&9u32.to_le_bytes())),
+        ),
+        (
+            "zero layers",
+            corrupt_tier(&dir, "layers.tier", |b| b[12..16].fill(0)),
+        ),
+        (
+            "absurd width",
+            corrupt_tier(&dir, "width.tier", |b| {
+                b[20..24].copy_from_slice(&u32::MAX.to_le_bytes())
+            }),
+        ),
+        (
+            "bad gated flag",
+            corrupt_tier(&dir, "gated.tier", |b| {
+                b[24..28].copy_from_slice(&7u32.to_le_bytes())
+            }),
+        ),
+        (
+            "bad page alignment",
+            corrupt_tier(&dir, "page.tier", |b| b[28..32].fill(0)),
+        ),
+        (
+            "bias section past eof",
+            corrupt_tier(&dir, "bias.tier", |b| {
+                b[32..40].copy_from_slice(&u64::MAX.to_le_bytes())
+            }),
+        ),
+        (
+            "freq section past eof",
+            corrupt_tier(&dir, "freq.tier", |b| {
+                b[40..48].copy_from_slice(&(1u64 << 60).to_le_bytes())
+            }),
+        ),
+        (
+            "cold block past eof",
+            corrupt_tier(&dir, "cold.tier", |b| {
+                b[48..56].copy_from_slice(&u64::MAX.to_le_bytes())
+            }),
+        ),
+    ];
+    for (what, path) in cases {
+        assert_checkpoint_err(what, TieredStore::open(&path, 1 << 20, 0));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tiered_rejects_truncated_files() {
+    let dir = tmpdir("tier_trunc");
+    let src = dir.join("valid.tier");
+    valid_tier(&src);
+    let full = std::fs::read(&src).unwrap();
+    // cut inside the cold blocks, the sections, the offsets and the magic
+    for keep in [full.len() / 2, 100, 63, 48, 40, 32, 12, 8, 3, 0] {
+        let cut = dir.join(format!("cut_{keep}.tier"));
+        std::fs::write(&cut, &full[..keep]).unwrap();
+        assert_checkpoint_err(
+            &format!("tiered truncated to {keep} bytes"),
+            TieredStore::open(&cut, 1 << 20, 0),
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tiered_overflow_geometry_cannot_wrap() {
+    let dir = tmpdir("tier_overflow");
+    // geometry at the caps: l * f * 4 and f * rec_bytes stay in checked
+    // u64 arithmetic; with DIM_CAP = 1 << 20 on every axis the section
+    // lengths exceed any real file long before they could overflow, so
+    // the failure must be the bounds check — not a wrap or an OOM
+    let path = corrupt_tier(&dir, "caps.tier", |b| {
+        for off in [12, 16, 20] {
+            b[off..off + 4].copy_from_slice(&(1u32 << 20).to_le_bytes());
+        }
+    });
+    assert_checkpoint_err("cap-sized geometry", TieredStore::open(&path, 1 << 20, 0));
+    std::fs::remove_dir_all(&dir).ok();
+}
